@@ -1,0 +1,161 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  1. line-search depth (Sec. 4.1's 500 steps vs cheaper settings)
+//!  2. accept policy: THREAD-GREEDY vs the §7 TopK extension
+//!  3. coloring strategy: greedy vs balanced (§7's open question)
+//!  4. gradient path: cached dloss vs on-the-fly (engine heuristic)
+//!  5. SHOTGUN selection size: P*/2, P*, 2 P* (the divergence cliff)
+//!
+//!     cargo bench --bench ablations
+
+use gencd::bench_harness::{bench_budget, bench_config, bench_scale, Table};
+use gencd::coloring::{color_features, Strategy};
+use gencd::coordinator::driver::run_on;
+use gencd::coordinator::Algorithm;
+use gencd::data;
+
+fn main() {
+    let scale = bench_scale();
+    let ds_name = format!("dorothea@{scale}");
+    let lam = data::dorothea::PAPER_LAMBDA;
+    let ds = data::by_name(&ds_name).expect("dataset");
+    println!(
+        "# Ablations on {ds_name} (lambda {lam:.0e}, {}s/run)\n",
+        bench_budget()
+    );
+
+    // ---- 1. line-search depth --------------------------------------------
+    println!("## line-search steps (Sec. 4.1; paper uses 500)\n");
+    let mut t = Table::new(&["steps", "objective", "nnz", "updates", "upd/s"]);
+    for steps in [0usize, 5, 20, 100, 500] {
+        let mut cfg = bench_config(&ds_name, lam, Algorithm::ThreadGreedy);
+        cfg.solver.line_search_steps = steps;
+        let r = run_on(&cfg, ds.clone(), None).expect("run");
+        t.row(vec![
+            steps.to_string(),
+            format!("{:.6}", r.objective),
+            r.nnz.to_string(),
+            r.metrics.updates.to_string(),
+            format!("{:.2e}", r.metrics.updates_per_sec(r.elapsed_secs)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- 2. accept policy ---------------------------------------------------
+    println!("## accept policy: thread-greedy vs global TopK (§7 extension)\n");
+    let mut t = Table::new(&["policy", "objective", "nnz", "updates"]);
+    for (name, alg) in [
+        ("thread-greedy", Algorithm::ThreadGreedy),
+        ("topk (global)", Algorithm::TopK),
+    ] {
+        let mut cfg = bench_config(&ds_name, lam, alg);
+        cfg.solver.line_search_steps = 20;
+        let r = run_on(&cfg, ds.clone(), None).expect("run");
+        t.row(vec![
+            name.into(),
+            format!("{:.6}", r.objective),
+            r.nnz.to_string(),
+            r.metrics.updates.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- 3. coloring strategy -------------------------------------------------
+    println!("## coloring strategy (paper §7: balance vs fewer colors)\n");
+    let mut t = Table::new(&["strategy", "colors", "feat/color", "imbalance", "secs"]);
+    let mut normalized = ds.clone();
+    normalized.x.normalize_columns();
+    for strategy in [
+        Strategy::Greedy,
+        Strategy::GreedyRandomOrder,
+        Strategy::LargestFirst,
+        Strategy::Balanced,
+    ] {
+        let c = color_features(&normalized.x, strategy, 42);
+        t.row(vec![
+            strategy.name().into(),
+            c.n_colors().to_string(),
+            format!("{:.1}", c.mean_class_size()),
+            format!("{:.2}", c.imbalance()),
+            format!("{:.3}", c.elapsed_secs),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- 4. gradient path --------------------------------------------------------
+    println!("## gradient path: cached dloss vs on-the-fly ell'\n");
+    let mut t = Table::new(&["path", "objective", "updates", "upd/s"]);
+    for (name, force) in [
+        ("heuristic", None),
+        ("always dloss", Some(true)),
+        ("always on-the-fly", Some(false)),
+    ] {
+        // go through the engine directly to force the path
+        let mut cfg = bench_config(&ds_name, lam, Algorithm::Shotgun);
+        cfg.solver.max_seconds = bench_budget();
+        let alg = Algorithm::Shotgun;
+        let mut d = ds.clone();
+        if cfg.dataset.normalize {
+            d.x.normalize_columns();
+        }
+        let pre = gencd::coordinator::algorithms::Preprocessed::for_algorithm(
+            alg,
+            &d.x,
+            Strategy::Greedy,
+            7,
+        );
+        let problem = gencd::coordinator::Problem::new(
+            d,
+            gencd::loss::by_name("logistic").unwrap(),
+            lam,
+        );
+        let inst = gencd::coordinator::algorithms::instantiate(
+            alg,
+            problem.n_features(),
+            cfg.solver.threads,
+            0,
+            0,
+            &pre,
+            7,
+        )
+        .unwrap();
+        let ecfg = gencd::coordinator::engine::EngineConfig {
+            threads: cfg.solver.threads,
+            acceptor: inst.acceptor,
+            max_seconds: cfg.solver.max_seconds,
+            force_dloss: force,
+            ..Default::default()
+        };
+        let out = gencd::coordinator::engine::solve(&problem, inst.selector, &ecfg);
+        t.row(vec![
+            name.into(),
+            format!("{:.6}", out.objective),
+            out.metrics.updates.to_string(),
+            format!("{:.2e}", out.metrics.updates_per_sec(out.elapsed_secs)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- 5. shotgun selection size (divergence cliff) ------------------------------
+    println!("## shotgun |J| around P* (Bradley et al. bound)\n");
+    let mut cfg = bench_config(&ds_name, lam, Algorithm::Shotgun);
+    cfg.solver.threads = 1;
+    cfg.solver.max_iters = 200;
+    let base = run_on(&cfg, ds.clone(), None).expect("run");
+    let pstar = base.pstar.unwrap_or(16);
+    let mut t = Table::new(&["|J|", "objective", "stop", "updates"]);
+    for mult in [0.5f64, 1.0, 2.0, 8.0] {
+        let size = ((pstar as f64 * mult) as usize).max(1);
+        let mut cfg = bench_config(&ds_name, lam, Algorithm::Shotgun);
+        cfg.solver.select_size = size;
+        let r = run_on(&cfg, ds.clone(), None).expect("run");
+        t.row(vec![
+            format!("{size} ({mult}x P*)"),
+            format!("{:.6}", r.objective),
+            r.stop.to_string(),
+            r.metrics.updates.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(P* = {pstar} on this twin at scale {scale})");
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Figure 1: convergence (objective + NNZ vs time)
+//! for SHOTGUN / THREAD-GREEDY / GREEDY / COLORING on the DOROTHEA and
+//! REUTERS twins with the paper's lambdas and the Sec. 4.1 line search.
+//!
+//!     cargo bench --bench fig1_convergence
+//!
+//! Env: GENCD_BENCH_SCALE (default 0.1), GENCD_BENCH_SECONDS (per run).
+//! Expected shape (paper Sec. 5.1): SHOTGUN/COLORING overshoot NNZ early
+//! on DOROTHEA then recover; GREEDY adds NNZ slowly; THREAD-GREEDY
+//! stabilizes fastest; COLORING ~ SHOTGUN throughout.
+
+fn main() {
+    gencd::bench_harness::experiments::print_fig1(Some("target/fig1_csv"));
+    println!("(per-run history CSVs in target/fig1_csv/)");
+}

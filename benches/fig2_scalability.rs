@@ -1,0 +1,13 @@
+//! Regenerates paper Figure 2: updates/second vs thread count for the
+//! four algorithms on both dataset twins. T=1 is measured with the real
+//! engine; T>1 uses the calibrated cost model (this container has one
+//! core — DESIGN.md §4 substitution). Expected shape (paper Sec. 5.2):
+//! GREEDY flattest (serial accept); THREAD-GREEDY scales best; SHOTGUN
+//! scales further on REUTERS (P*≈800) than DOROTHEA (P*≈23); COLORING
+//! is bounded by its mean color size.
+//!
+//!     cargo bench --bench fig2_scalability
+
+fn main() {
+    gencd::bench_harness::experiments::print_fig2(&[1, 2, 4, 8, 16, 32]);
+}

@@ -1,0 +1,147 @@
+//! Hot-path microbenchmarks (§Perf): the operations the solve loop is
+//! made of, measured in isolation so regressions are attributable.
+//!
+//!     cargo bench --bench hotpath
+//!
+//! Covers: sparse propose (dloss vs on-the-fly), dloss refresh, atomic
+//! vs plain z update, line-search refinement, panel gather, and — when
+//! artifacts are built — the HLO dense-block propose for comparison.
+
+use std::sync::atomic::Ordering::Relaxed;
+
+use gencd::coordinator::problem::{Problem, SharedState};
+use gencd::coordinator::{linesearch, propose};
+use gencd::data::{reuters_like, GenOptions};
+use gencd::loss::Logistic;
+use gencd::util::timer::bench_loop;
+use gencd::util::Pcg64;
+
+fn main() {
+    let mut ds = reuters_like(&GenOptions::with_scale(0.05));
+    ds.x.normalize_columns();
+    let n = ds.n_samples();
+    let k = ds.n_features();
+    let nnz = ds.x.nnz();
+    println!("workload: reuters@0.05 ({n} x {k}, {nnz} nnz)\n");
+    let problem = Problem::new(ds, Box::new(Logistic), 1e-5);
+
+    let mut rng = Pcg64::seeded(3);
+    let w0: Vec<f64> = (0..k)
+        .map(|j| if j % 61 == 0 { rng.range_f64(-0.3, 0.3) } else { 0.0 })
+        .collect();
+    let state = SharedState::from_warm_start(&problem, &w0);
+    propose::refresh_dloss(&problem, &state, 0, n);
+
+    let cols: Vec<usize> = (0..256).map(|_| rng.below(k)).collect();
+    let col_nnz: usize = cols.iter().map(|&j| problem.x.col_nnz(j)).sum();
+
+    // ---- propose: cached dloss ------------------------------------------
+    let s = bench_loop(0.5, 20, || {
+        let mut acc = 0.0;
+        for &j in &cols {
+            acc += propose::propose(&problem, &state, j, true).delta;
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "propose/dloss      {:>9.1} ns/col ({:.2} ns/nnz)   {s}",
+        s.best * 1e9 / cols.len() as f64,
+        s.best * 1e9 / col_nnz as f64
+    );
+
+    // ---- propose: on-the-fly ell' -----------------------------------------
+    let s = bench_loop(0.5, 20, || {
+        let mut acc = 0.0;
+        for &j in &cols {
+            acc += propose::propose(&problem, &state, j, false).delta;
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "propose/on-the-fly {:>9.1} ns/col ({:.2} ns/nnz)   {s}",
+        s.best * 1e9 / cols.len() as f64,
+        s.best * 1e9 / col_nnz as f64
+    );
+
+    // ---- dloss refresh -----------------------------------------------------
+    let s = bench_loop(0.5, 20, || {
+        propose::refresh_dloss(&problem, &state, 0, n);
+    });
+    println!("dloss refresh      {:>9.2} ns/sample          {s}", s.best * 1e9 / n as f64);
+
+    // ---- update: atomic z scatter ------------------------------------------
+    let s = bench_loop(0.5, 20, || {
+        for &j in &cols {
+            let (rows, vals) = problem.x.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                state.z[i as usize].fetch_add(1e-12 * v, Relaxed);
+            }
+        }
+    });
+    println!("update/atomic      {:>9.2} ns/nnz             {s}", s.best * 1e9 / col_nnz as f64);
+
+    // ---- update: unsync load+store (T=1 / coloring fast path, §Perf) -------
+    let s = bench_loop(0.5, 20, || {
+        for &j in &cols {
+            let (rows, vals) = problem.x.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                let zi = &state.z[i as usize];
+                zi.store(zi.load(Relaxed) + 1e-12 * v, Relaxed);
+            }
+        }
+    });
+    println!("update/unsync      {:>9.2} ns/nnz             {s}", s.best * 1e9 / col_nnz as f64);
+
+    // ---- update: single-thread plain scatter (the atomics overhead) --------
+    let mut z_plain = state.z_snapshot();
+    let s = bench_loop(0.5, 20, || {
+        for &j in &cols {
+            problem.x.axpy_col(j, 1e-12, &mut z_plain);
+        }
+        std::hint::black_box(&z_plain);
+    });
+    println!("update/plain       {:>9.2} ns/nnz             {s}", s.best * 1e9 / col_nnz as f64);
+
+    // ---- line search ---------------------------------------------------------
+    for steps in [20usize, 500] {
+        let s = bench_loop(0.5, 10, || {
+            let mut acc = 0.0;
+            for &j in &cols[..32] {
+                acc += linesearch::refine(&problem, &state, j, 0.01, steps);
+            }
+            std::hint::black_box(acc);
+        });
+        println!(
+            "line search s={steps:<4} {:>9.2} us/coord          {s}",
+            s.best * 1e6 / 32.0
+        );
+    }
+
+    // ---- objective evaluation (the logging cost) ------------------------------
+    let s = bench_loop(0.5, 10, || {
+        let w = state.w_snapshot();
+        let z = state.z_snapshot();
+        std::hint::black_box(problem.objective(&w, &z));
+    });
+    println!("objective eval     {:>9.2} us                {s}", s.best * 1e6);
+
+    // ---- HLO dense-block propose (needs artifacts) ------------------------------
+    match gencd::runtime::Runtime::from_default_dir() {
+        Ok(rt) => match gencd::runtime::HloProposer::new(&rt, &problem) {
+            Ok(mut hlo) => {
+                let js: Vec<u32> =
+                    cols.iter().take(hlo.block_width()).map(|&j| j as u32).collect();
+                let s = bench_loop(1.0, 5, || {
+                    hlo.run_block(&problem, &state, &js).expect("hlo");
+                });
+                println!(
+                    "propose/hlo-block  {:>9.1} us/col ({} cols/call) {s}",
+                    s.best * 1e6 / js.len() as f64,
+                    js.len()
+                );
+            }
+            Err(e) => println!("propose/hlo-block  skipped: {e}"),
+        },
+        Err(e) => println!("propose/hlo-block  skipped: {e}"),
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Table 3: dataset summary statistics — dimensions,
+//! sparsity, Shotgun's P*, coloring size/time, the chosen lambda, and
+//! the best objective/NNZ found.
+//!
+//!     cargo bench --bench table3_datasets
+
+fn main() {
+    gencd::bench_harness::experiments::print_table3();
+}

@@ -1,0 +1,77 @@
+//! Coloring preprocessing in depth (paper Appendix A + §7): strategy
+//! comparison on both dataset twins — colors, balance, time — and the
+//! safety property that makes COLORING synchronization-free.
+//!
+//!     cargo run --release --example coloring_demo
+
+use gencd::bench_harness::Table;
+use gencd::coloring::{color_features, verify::verify_coloring, Strategy};
+use gencd::data;
+use gencd::sparse::RowPattern;
+
+fn main() -> anyhow::Result<()> {
+    for name in ["dorothea@0.1", "reuters@0.05"] {
+        let mut ds = data::by_name(name)?;
+        ds.x.normalize_columns();
+        let rows = RowPattern::from_csc(&ds.x);
+        println!(
+            "\n## {name}: {} x {}, max row degree {} (lower bound on colors)\n",
+            ds.n_samples(),
+            ds.n_features(),
+            rows.max_row_nnz()
+        );
+        let mut table = Table::new(&[
+            "strategy",
+            "colors",
+            "feat/color",
+            "min",
+            "max",
+            "imbalance",
+            "secs",
+            "valid",
+        ]);
+        for strategy in [
+            Strategy::Greedy,
+            Strategy::GreedyRandomOrder,
+            Strategy::LargestFirst,
+            Strategy::Balanced,
+        ] {
+            let c = color_features(&ds.x, strategy, 42);
+            let valid = verify_coloring(&ds.x, &c).is_ok();
+            table.row(vec![
+                strategy.name().into(),
+                c.n_colors().to_string(),
+                format!("{:.1}", c.mean_class_size()),
+                c.min_class_size().to_string(),
+                c.max_class_size().to_string(),
+                format!("{:.2}", c.imbalance()),
+                format!("{:.3}", c.elapsed_secs),
+                valid.to_string(),
+            ]);
+            anyhow::ensure!(valid, "{name}/{}: invalid coloring", strategy.name());
+        }
+        println!("{}", table.render());
+        println!(
+            "The paper (§7) notes balanced classes matter more than few colors \
+             for parallelism:\nBalanced trades a few extra colors for a \
+             max/mean ratio near 1.\n"
+        );
+
+        // speculative (Catalyurek-style) parallel coloring: the
+        // multi-core algorithm the paper's Appendix A builds on
+        println!("speculative parallel coloring (tentative -> detect -> repair):");
+        for threads in [1usize, 4, 8] {
+            let (c, stats) =
+                gencd::coloring::speculative::color_speculative(&ds.x, threads, 0);
+            verify_coloring(&ds.x, &c).map_err(|e| anyhow::anyhow!(e))?;
+            println!(
+                "  T={threads}: {} colors in {} rounds ({} conflicts repaired, {:.3}s)",
+                c.n_colors(),
+                stats.rounds,
+                stats.conflicts,
+                c.elapsed_secs
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! End-to-end driver: the full pipeline on a real (synthetic-twin)
+//! workload, proving every layer composes — dataset generation,
+//! preprocessing (spectral P*, coloring), all four paper algorithms on
+//! both datasets, the AOT/PJRT compute path cross-checked against the
+//! sparse path, and a final report with the loss curves.
+//!
+//!     cargo run --release --example end_to_end
+//!
+//! Environment: GENCD_E2E_SCALE (default 0.1), GENCD_E2E_SECONDS
+//! (default 5.0 per run). Results recorded in EXPERIMENTS.md.
+
+use gencd::bench_harness::Table;
+use gencd::config::RunConfig;
+use gencd::coordinator::driver::{run_on, SolveResult};
+use gencd::coordinator::{Algorithm, Problem};
+use gencd::data;
+use gencd::linalg::{shotgun_pstar, spectral_radius_xtx};
+use gencd::loss;
+use gencd::runtime::{HloProposer, Runtime};
+use gencd::util::Timer;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = env_f64("GENCD_E2E_SCALE", 0.1);
+    let seconds = env_f64("GENCD_E2E_SECONDS", 5.0);
+    let total = Timer::start();
+    println!("=== GenCD end-to-end (scale {scale}, {seconds}s/run) ===\n");
+
+    for (name, lam) in [
+        ("dorothea", data::dorothea::PAPER_LAMBDA),
+        ("reuters", data::reuters::PAPER_LAMBDA),
+    ] {
+        let dsname = format!("{name}@{scale}");
+
+        // --- stage 1: dataset generation ---------------------------------
+        let t = Timer::start();
+        let mut ds = data::by_name(&dsname)?;
+        ds.x.normalize_columns();
+        println!(
+            "[{dsname}] generated: {} x {}, {} nnz ({:.1}/feature) in {:.2}s",
+            ds.n_samples(),
+            ds.n_features(),
+            ds.x.nnz(),
+            ds.x.mean_col_nnz(),
+            t.elapsed_secs()
+        );
+
+        // --- stage 2: preprocessing --------------------------------------
+        let t = Timer::start();
+        let est = spectral_radius_xtx(&ds.x, 100, 1e-7, 1);
+        let pstar = shotgun_pstar(ds.n_features(), est.rho);
+        println!(
+            "[{dsname}] rho = {:.2}, P* = {pstar} ({:.2}s)",
+            est.rho,
+            t.elapsed_secs()
+        );
+        let coloring =
+            gencd::coloring::color_features(&ds.x, gencd::coloring::Strategy::Greedy, 1);
+        gencd::coloring::verify::verify_coloring(&ds.x, &coloring)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "[{dsname}] coloring: {} colors, {:.1} features/color, {:.2}s (verified)",
+            coloring.n_colors(),
+            coloring.mean_class_size(),
+            coloring.elapsed_secs
+        );
+
+        // --- stage 3: train all four paper algorithms --------------------
+        let mut table = Table::new(&[
+            "algorithm", "objective", "nnz", "updates", "updates/s", "secs", "stop",
+        ]);
+        let mut results: Vec<SolveResult> = Vec::new();
+        for alg in Algorithm::paper_set() {
+            let mut cfg = RunConfig::default();
+            cfg.dataset.name = dsname.clone();
+            cfg.problem.loss = "logistic".into();
+            cfg.problem.lam = lam;
+            cfg.solver.algorithm = alg.name().into();
+            cfg.solver.threads = 4;
+            cfg.solver.max_seconds = seconds;
+            cfg.solver.line_search_steps = 20;
+            cfg.solver.seed = 7;
+            let res = run_on(&cfg, ds.clone(), None)?;
+            table.row(gencd::bench_harness::convergence_row(&res));
+            results.push(res);
+        }
+        println!("\n[{dsname}] convergence (lambda = {lam:.0e}):\n{}", table.render());
+
+        // loss curves (head) for the report
+        for res in &results {
+            let pts: Vec<String> = res
+                .history
+                .records
+                .iter()
+                .step_by((res.history.records.len() / 6).max(1))
+                .map(|r| format!("({:.1}s, {:.4})", r.elapsed_secs, r.objective))
+                .collect();
+            println!("  {:<13} loss curve: {}", res.algorithm.name(), pts.join(" "));
+        }
+
+        // all algorithms must have made real progress
+        for res in &results {
+            let first = res.history.records.first().unwrap().objective;
+            anyhow::ensure!(
+                res.objective < first,
+                "{} failed to descend on {dsname}",
+                res.algorithm.name()
+            );
+        }
+
+        // --- stage 3b: held-out evaluation of the best model --------------
+        let (train, test) = gencd::eval::train_test_split(&ds, 0.25, 11);
+        let mut cfg = RunConfig::default();
+        cfg.dataset.normalize = false; // ds already normalized
+        cfg.problem.lam = lam;
+        cfg.solver.algorithm = "thread-greedy".into();
+        cfg.solver.threads = 4;
+        cfg.solver.max_seconds = seconds;
+        cfg.solver.line_search_steps = 20;
+        let fit = run_on(&cfg, train, None)?;
+        let m = gencd::eval::classification_metrics(
+            &test.y,
+            &gencd::eval::scores(&test.x, &fit.w),
+        );
+        println!(
+            "[{dsname}] held-out ({} samples): acc {:.3} | P {:.3} R {:.3} F1 {:.3} | AUC {:.3}",
+            m.n, m.accuracy, m.precision, m.recall, m.f1, m.auc
+        );
+        anyhow::ensure!(m.auc > 0.6, "held-out AUC {} too weak", m.auc);
+        println!();
+    }
+
+    // --- stage 4: the AOT/PJRT path composes with the coordinator -------
+    println!("[hlo] cross-checking DenseBlockHlo backend vs sparse path…");
+    let mut ds = data::by_name(&format!("dorothea@{}", scale.min(0.05)))?;
+    ds.x.normalize_columns();
+    let lam = data::dorothea::PAPER_LAMBDA;
+    match Runtime::from_default_dir() {
+        Ok(rt) => {
+            let problem = Problem::new(ds.clone(), loss::by_name("logistic")?, lam);
+            let mut proposer = HloProposer::new(&rt, &problem)?;
+            let mut cfg = RunConfig::default();
+            cfg.dataset.name = ds.name.clone();
+            cfg.problem.lam = lam;
+            cfg.solver.algorithm = "shotgun".into();
+            cfg.solver.threads = 1;
+            // equal *work*, not equal wallclock: the two backends run the
+            // same deterministic 300 iterations and must land together
+            cfg.solver.max_iters = 300;
+            cfg.solver.max_seconds = 120.0;
+            cfg.solver.select_size = 32;
+            let hlo_res = run_on(&cfg, ds.clone(), Some(&mut proposer))?;
+            let sparse_res = run_on(&cfg, ds.clone(), None)?;
+            println!(
+                "  hlo  backend: obj {:.6} ({} artifact calls)",
+                hlo_res.objective, proposer.calls
+            );
+            println!("  rust backend: obj {:.6}", sparse_res.objective);
+            let rel = (hlo_res.objective - sparse_res.objective).abs()
+                / sparse_res.objective.abs().max(1e-12);
+            anyhow::ensure!(rel < 0.05, "backends diverged: rel diff {rel:.3}");
+            println!("  backends agree to {:.2}% — OK", rel * 100.0);
+        }
+        Err(e) => println!("  skipped (artifacts not built: {e})"),
+    }
+
+    println!("\n=== end-to-end complete in {:.1}s ===", total.elapsed_secs());
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! The three-layer stack in isolation: load the AOT-compiled JAX/Pallas
+//! artifacts via PJRT, run the Propose step, the objective, and the
+//! 500-step line search, and cross-check each against the pure-Rust
+//! sparse implementations.
+//!
+//!     make artifacts && cargo run --release --example hlo_propose
+
+use std::sync::atomic::Ordering::Relaxed;
+
+use gencd::coordinator::problem::{Problem, SharedState};
+use gencd::coordinator::{linesearch, propose};
+use gencd::data::{dorothea_like, GenOptions};
+use gencd::loss::Logistic;
+use gencd::runtime::{HloObjective, HloProposer, Runtime};
+use gencd::util::{Pcg64, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_default_dir()
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts:");
+    for e in &rt.manifest.entries {
+        println!("  {:<11} {:<9} n={:<6} b={}", e.kind, e.loss, e.n, e.b);
+    }
+
+    // small DOROTHEA twin fits the n=1024 artifacts
+    let mut ds = dorothea_like(&GenOptions::with_scale(0.05));
+    ds.x.normalize_columns();
+    let problem = Problem::new(ds, Box::new(Logistic), 1e-4);
+    println!(
+        "\nproblem: {} x {}, lam = {:.0e}",
+        problem.n_samples(),
+        problem.n_features(),
+        problem.lam
+    );
+
+    // warm start with a few active weights
+    let mut rng = Pcg64::seeded(1);
+    let w0: Vec<f64> = (0..problem.n_features())
+        .map(|j| if j % 113 == 0 { rng.range_f64(-0.4, 0.4) } else { 0.0 })
+        .collect();
+    let state = SharedState::from_warm_start(&problem, &w0);
+    propose::refresh_dloss(&problem, &state, 0, problem.n_samples());
+
+    // ---- Propose: artifact vs sparse Rust --------------------------------
+    let mut proposer = HloProposer::new(&rt, &problem)?;
+    let selected: Vec<u32> = (0..proposer.block_width() as u32).collect();
+    let t = Timer::start();
+    let (g, delta, phi) = proposer.run_block(&problem, &state, &selected)?;
+    let hlo_secs = t.elapsed_secs();
+
+    let t = Timer::start();
+    let mut max_rel = 0.0f64;
+    for (i, &j) in selected.iter().enumerate() {
+        let sp = propose::propose(&problem, &state, j as usize, true);
+        for (a, b) in [
+            (g[i] as f64, sp.g),
+            (delta[i] as f64, sp.delta),
+            (phi[i] as f64, sp.phi),
+        ] {
+            max_rel = max_rel.max((a - b).abs() / (1.0 + b.abs()));
+        }
+    }
+    let sparse_secs = t.elapsed_secs();
+    println!(
+        "\npropose block ({} coords): hlo {:.2}ms vs sparse {:.3}ms, max rel err {:.2e}",
+        selected.len(),
+        hlo_secs * 1e3,
+        sparse_secs * 1e3,
+        max_rel
+    );
+    anyhow::ensure!(max_rel < 1e-4, "propose mismatch");
+
+    // ---- Objective --------------------------------------------------------
+    let mut obj = HloObjective::new(&rt, &problem)?;
+    let z = state.z_snapshot();
+    let f_hlo = obj.smooth(&z)?;
+    let f_rust = gencd::loss::smooth_part(problem.loss.as_ref(), &problem.y, &z);
+    println!("objective: hlo {f_hlo:.6} vs rust {f_rust:.6}");
+    anyhow::ensure!((f_hlo - f_rust).abs() < 1e-5);
+
+    // ---- Line search (the 500-step artifact) ------------------------------
+    let ls = rt.compile_kind("linesearch", "logistic", problem.n_samples())?;
+    let steps = ls.entry.ls_steps.unwrap_or(0);
+    let b = ls.entry.b;
+    let n_pad = ls.entry.n;
+    let js: Vec<u32> = (0..b as u32).collect();
+    // panel + padded vectors
+    let mut panel = vec![0.0f32; n_pad * b];
+    for (col, &j) in js.iter().enumerate() {
+        let (rows, vals) = problem.x.col(j as usize);
+        for (&i, &v) in rows.iter().zip(vals) {
+            panel[i as usize * b + col] = v as f32;
+        }
+    }
+    let mut y_pad = vec![1.0f32; n_pad];
+    let mut z_pad = vec![0.0f32; n_pad];
+    let mut mask = vec![0.0f32; n_pad];
+    for i in 0..problem.n_samples() {
+        y_pad[i] = problem.y[i] as f32;
+        z_pad[i] = z[i] as f32;
+        mask[i] = 1.0;
+    }
+    let w_blk: Vec<f32> = js
+        .iter()
+        .map(|&j| state.w[j as usize].load(Relaxed) as f32)
+        .collect();
+    let delta0: Vec<f32> = js
+        .iter()
+        .enumerate()
+        .map(|(i, _)| delta[i])
+        .collect();
+    let beta_eff = problem.loss.beta() / problem.n_samples() as f64;
+    let scalars = [
+        problem.lam as f32,
+        beta_eff as f32,
+        (1.0 / problem.n_samples() as f64) as f32,
+    ];
+    let t = Timer::start();
+    let outs = ls.run_f32(&[&panel, &y_pad, &z_pad, &mask, &w_blk, &delta0, &scalars])?;
+    println!(
+        "\nline search ({steps} steps x {b} coords): {:.2}ms via artifact",
+        t.elapsed_secs() * 1e3
+    );
+    let mut max_err = 0.0f64;
+    for (i, &j) in js.iter().enumerate() {
+        let rust = linesearch::refine(&problem, &state, j as usize, delta0[i] as f64, steps);
+        max_err = max_err.max((outs[0][i] as f64 - rust).abs());
+    }
+    println!("line search max |hlo - rust| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-4, "line search mismatch");
+
+    println!("\nall three artifact kinds match the Rust reference — OK");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Regularization-path demo: squared-loss Lasso solved over a geometric
+//! lambda sweep with warm starts — the pathwise-coordinate-descent
+//! workload (Friedman et al. 2007) the paper's Sec. 6 cites, and the
+//! decreasing-lambda schedule Bradley et al. suggest for Shotgun
+//! (Sec. 4.1) — via the first-class `coordinator::path` API.
+//!
+//!     cargo run --release --example lasso_pathwise
+
+use gencd::coordinator::path::{lambda_max, solve_path, PathConfig};
+use gencd::coordinator::Algorithm;
+use gencd::data::{reuters_like, GenOptions};
+use gencd::eval;
+use gencd::loss;
+
+fn main() -> anyhow::Result<()> {
+    // tf-idf-like synthetic data; squared loss on the +-1 labels = Lasso.
+    let mut ds = reuters_like(&GenOptions::with_scale(0.05));
+    ds.x.normalize_columns();
+    let (train, test) = eval::train_test_split(&ds, 0.25, 3);
+    println!(
+        "dataset: {} train / {} test x {} features, {} nnz",
+        train.n_samples(),
+        test.n_samples(),
+        ds.n_features(),
+        ds.x.nnz()
+    );
+    let sq = loss::by_name("squared")?;
+    println!(
+        "lambda_max = {:.5}\n",
+        lambda_max(&train.x, &train.y, sq.as_ref())
+    );
+
+    let cfg = PathConfig {
+        algorithm: Algorithm::Shotgun,
+        n_points: 8,
+        min_ratio: 1e-2,
+        threads: 4,
+        max_seconds: 2.0,
+        tol: 1e-8,
+        ..Default::default()
+    };
+    let path = solve_path(&train, "squared", &cfg)?;
+
+    println!(
+        "{:>10} {:>12} {:>7} {:>9} {:>7} {:>9} {:>8}",
+        "lambda", "objective", "nnz", "updates", "secs", "test-acc", "test-auc"
+    );
+    for p in &path {
+        let scores = eval::scores(&test.x, &p.w);
+        let m = eval::classification_metrics(&test.y, &scores);
+        println!(
+            "{:>10.2e} {:>12.6} {:>7} {:>9} {:>7.2} {:>9.3} {:>8.3}",
+            p.lam, p.objective, p.nnz, p.updates, p.elapsed_secs, m.accuracy, m.auc
+        );
+    }
+    println!(
+        "\nNNZ grows as lambda shrinks; held-out AUC peaks mid-path — \
+         the lasso path, warm-started."
+    );
+    Ok(())
+}

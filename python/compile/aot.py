@@ -1,0 +1,140 @@
+"""AOT compiler: lower the L2 entry points to HLO *text* + a manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. Text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--variants test]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text (see module docstring for why text)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# Shape variants: one set of artifacts per (dataset scale, loss).
+# n is the padded sample count (multiple of 1024 = losses.NT); b is the
+# dense panel width. ``ls_steps`` is the paper's Sec. 4.1 refinement count.
+VARIANTS = {
+    "test": dict(n=1024, b=16, losses=("squared", "logistic"), ls_steps=8),
+    "dorothea": dict(n=1024, b=64, losses=("logistic", "squared"), ls_steps=500),
+    # intermediate paddings so scaled-down runs don't pay full-size
+    # panel-gather cost (the runtime picks the smallest fitting n)
+    "mid2k": dict(n=2048, b=64, losses=("logistic",), ls_steps=500),
+    "mid4k": dict(n=4096, b=64, losses=("logistic",), ls_steps=500),
+    "mid8k": dict(n=8192, b=64, losses=("logistic",), ls_steps=500),
+    "reuters": dict(n=24576, b=64, losses=("logistic",), ls_steps=500),
+}
+
+
+def lower_variant(name: str, cfg: dict, out_dir: str, force: bool):
+    n, b = cfg["n"], cfg["b"]
+    entries = []
+    for loss in cfg["losses"]:
+        jobs = [
+            (
+                f"propose_{loss}_n{n}_b{b}",
+                "propose",
+                model.propose_entry(loss),
+                [spec(n, b), spec(n), spec(n), spec(n), spec(b), spec(3)],
+                ["x_panel", "y", "z", "mask", "w", "scalars"],
+                ["g", "delta", "phi"],
+                None,
+            ),
+            (
+                f"objective_{loss}_n{n}",
+                "objective",
+                model.objective_entry(loss),
+                [spec(n), spec(n), spec(n), spec(3)],
+                ["y", "z", "mask", "scalars"],
+                ["f_smooth"],
+                None,
+            ),
+            (
+                f"linesearch_{loss}_n{n}_b{b}_s{cfg['ls_steps']}",
+                "linesearch",
+                model.linesearch_entry(loss, cfg["ls_steps"]),
+                [spec(n, b), spec(n), spec(n), spec(n), spec(b), spec(b),
+                 spec(3)],
+                ["x_panel", "y", "z", "mask", "w", "delta0", "scalars"],
+                ["delta_refined"],
+                cfg["ls_steps"],
+            ),
+        ]
+        for stem, kind, fn, in_specs, in_names, out_names, steps in jobs:
+            path = os.path.join(out_dir, stem + ".hlo.txt")
+            if force or not os.path.exists(path):
+                lowered = jax.jit(fn).lower(*in_specs)
+                text = to_hlo_text(lowered)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"  wrote {path} ({len(text)} chars)")
+            else:
+                print(f"  kept  {path}")
+            entry = {
+                "variant": name,
+                "kind": kind,
+                "loss": loss,
+                "n": n,
+                "b": b,
+                "file": stem + ".hlo.txt",
+                "inputs": in_names,
+                "input_shapes": [list(s.shape) for s in in_specs],
+                "outputs": out_names,
+            }
+            if steps is not None:
+                entry["ls_steps"] = steps
+            entries.append(entry)
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", nargs="*", default=list(VARIANTS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": 1, "scalars": ["lam", "beta", "inv_n"],
+                "entries": []}
+    for name in args.variants:
+        cfg = VARIANTS[name]
+        print(f"variant {name}: n={cfg['n']} b={cfg['b']}")
+        manifest["entries"].extend(
+            lower_variant(name, cfg, args.out_dir, args.force))
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""L1 Pallas kernels: elementwise loss value / derivative over the samples.
+
+These are 1-D elementwise kernels tiled along the sample axis. On a real
+TPU the BlockSpec below maps each tile into VMEM (tile size NT is a
+multiple of the 128-lane VPU width); on this CPU-only image they run
+under ``interpret=True`` (see DESIGN.md §Hardware-Adaptation).
+
+The loss kind is *static* (baked at lowering time) so the generated HLO
+contains no branching on the hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sample-axis tile. 1024 f32 lanes = 4 KiB per input tile in VMEM; the
+# kernel touches 3 input tiles + 1 output tile = 16 KiB, far under VMEM.
+NT = 1024
+
+INTERPRET = True  # CPU image: Mosaic lowering unavailable (see DESIGN.md)
+
+
+def _dloss_kernel(loss: str, y_ref, z_ref, m_ref, o_ref):
+    """o = mask * dl(y, z), one sample tile."""
+    y = y_ref[...]
+    z = z_ref[...]
+    m = m_ref[...]
+    if loss == "squared":
+        d = z - y
+    elif loss == "logistic":
+        d = -y * (1.0 / (1.0 + jnp.exp(y * z)))
+    else:  # pragma: no cover - static arg validated by callers
+        raise ValueError(loss)
+    o_ref[...] = m * d
+
+
+def _loss_kernel(loss: str, y_ref, z_ref, m_ref, o_ref):
+    """o = mask * loss(y, z), one sample tile."""
+    y = y_ref[...]
+    z = z_ref[...]
+    m = m_ref[...]
+    if loss == "squared":
+        v = 0.5 * (y - z) * (y - z)
+    elif loss == "logistic":
+        v = jnp.logaddexp(0.0, -y * z)
+    else:  # pragma: no cover
+        raise ValueError(loss)
+    o_ref[...] = m * v
+
+
+def _elementwise_call(kernel, loss: str, y, z, mask):
+    n = y.shape[0]
+    assert n % NT == 0, f"sample count {n} must be padded to a multiple of {NT}"
+    grid = (n // NT,)
+    spec = pl.BlockSpec((NT,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(kernel, loss),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), y.dtype),
+        interpret=INTERPRET,
+    )(y, z, mask)
+
+
+def masked_dloss(loss: str, y, z, mask):
+    """Pallas: mask * ell'(y, z) over padded samples."""
+    return _elementwise_call(_dloss_kernel, loss, y, z, mask)
+
+
+def masked_loss(loss: str, y, z, mask):
+    """Pallas: mask * ell(y, z) over padded samples."""
+    return _elementwise_call(_loss_kernel, loss, y, z, mask)

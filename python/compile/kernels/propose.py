@@ -1,0 +1,197 @@
+"""L1 Pallas kernels for the GenCD Propose step over a dense column panel.
+
+The paper's Propose step (Algorithm 4) is, per selected coordinate j:
+
+    g      = <ell'(y, z), X_j> / n
+    delta  = -psi(w_j; (g - lam)/beta, (g + lam)/beta)        (Eq. 7)
+    phi    = beta/2 delta^2 + g delta + lam(|w+d| - |w|)      (Eq. 9)
+
+On the OpenMP original this is one sparse column traversal per thread.
+The TPU adaptation (DESIGN.md §Hardware-Adaptation) batches a block of B
+columns into a dense panel X_J (n x B) and computes all B proposals with
+one MXU matvec: the HBM->VMEM schedule that the paper expressed with
+threadblocks/threads is expressed here with a BlockSpec grid:
+
+  * ``grad``     — grid (B/BT, n/NT); each step loads an (NT, BT) panel
+                   tile + an (NT,) dloss tile into VMEM and accumulates
+                   g_tile += X_tile^T d_tile on the MXU. n is the inner
+                   (fastest) grid axis so the g tile stays resident.
+  * ``epilogue`` — grid (B/BT,); elementwise Eq. 7 + Eq. 9 on the VPU.
+  * ``linesearch`` — grid (B/BT,); whole-column panel resident in VMEM,
+                   ``n_steps`` fused quadratic-approximation steps per
+                   coordinate (paper Sec. 4.1's 500-step refinement).
+
+All kernels run under ``interpret=True`` on this CPU-only image; real-TPU
+VMEM/MXU estimates are in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# Panel tile sizes. NT x BT f32 = 64 KiB in VMEM; both are multiples of
+# the TPU-friendly 8x128 register tiling when the block is big enough.
+NT = 256
+BT = 64
+
+
+def _tiles(n: int, b: int) -> tuple[int, int]:
+    """Pick (nt, bt) tile sizes dividing (n, b), capped at (NT, BT)."""
+    nt = min(n, NT)
+    bt = min(b, BT)
+    if n % nt or b % bt:
+        raise ValueError(f"panel ({n},{b}) not divisible by tiles ({nt},{bt})")
+    return nt, bt
+
+
+# ---------------------------------------------------------------------------
+# g = X^T d * inv_n  (MXU accumulation kernel)
+# ---------------------------------------------------------------------------
+
+def _grad_kernel(x_ref, d_ref, g_ref):
+    """One (NT, BT) panel tile: g_tile += x_tile^T @ d_tile.
+
+    The n axis is grid axis 1 (innermost); the output BlockSpec maps every
+    n step to the same g tile, so it acts as a VMEM-resident accumulator.
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    g_ref[...] += x_ref[...].T @ d_ref[...]
+
+
+def grad_panel(x_panel, d):
+    """g_raw = X_J^T d for a dense (n, B) panel. Caller scales by inv_n."""
+    n, b = x_panel.shape
+    nt, bt = _tiles(n, b)
+    grid = (b // bt, n // nt)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nt, bt), lambda j, i: (i, j)),
+            pl.BlockSpec((nt,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x_panel.dtype),
+        interpret=INTERPRET,
+    )(x_panel, d)
+
+
+# ---------------------------------------------------------------------------
+# epilogue: Eq. (7) + Eq. (9) elementwise over the block
+# ---------------------------------------------------------------------------
+
+def _epilogue_kernel(graw_ref, w_ref, s_ref, g_ref, d_ref, p_ref):
+    """s_ref holds the runtime scalars [lam, beta, inv_n]."""
+    lam = s_ref[0]
+    beta = s_ref[1]
+    inv_n = s_ref[2]
+    g = graw_ref[...] * inv_n
+    w = w_ref[...]
+    lo = (g - lam) / beta
+    hi = (g + lam) / beta
+    delta = -jnp.clip(w, lo, hi)
+    phi = 0.5 * beta * delta * delta + g * delta + lam * (
+        jnp.abs(w + delta) - jnp.abs(w)
+    )
+    g_ref[...] = g
+    d_ref[...] = delta
+    p_ref[...] = phi
+
+
+def propose_epilogue(g_raw, w, scalars):
+    """(g, delta, phi) from the raw gradient accumulator.
+
+    ``scalars`` is a (3,) f32 array [lam, beta, inv_n] — runtime values so
+    a single AOT artifact serves every (lam, beta) sweep point.
+    """
+    (b,) = g_raw.shape
+    bt = min(b, BT)
+    if b % bt:
+        raise ValueError(f"block {b} not divisible by tile {bt}")
+    grid = (b // bt,)
+    vec = pl.BlockSpec((bt,), lambda j: (j,))
+    out = jax.ShapeDtypeStruct((b,), g_raw.dtype)
+    return pl.pallas_call(
+        _epilogue_kernel,
+        grid=grid,
+        in_specs=[vec, vec, pl.BlockSpec((3,), lambda j: (0,))],
+        out_specs=(vec, vec, vec),
+        out_shape=(out, out, out),
+        interpret=INTERPRET,
+    )(g_raw, w, scalars)
+
+
+# ---------------------------------------------------------------------------
+# fused line search (paper Sec. 4.1: repeated quadratic-approximation steps)
+# ---------------------------------------------------------------------------
+
+def _linesearch_kernel(loss: str, n_steps: int,
+                       x_ref, y_ref, z_ref, m_ref, w_ref, d0_ref, s_ref,
+                       out_ref):
+    """Refine each coordinate of one BT tile independently, n_steps times.
+
+    The whole (n, bt) column panel stays VMEM-resident across the inner
+    fori_loop, so each refinement step is one VPU pass + one reduction —
+    no HBM traffic. VMEM budget: n*bt*4 bytes for the panel (documented
+    in DESIGN.md §Perf; n is tiled upstream for very large n).
+    """
+    lam = s_ref[0]
+    beta = s_ref[1]
+    inv_n = s_ref[2]
+    x = x_ref[...]          # (n, bt)
+    y = y_ref[...]          # (n,)
+    z = z_ref[...]
+    m = m_ref[...]
+    w = w_ref[...]          # (bt,)
+
+    def step(_, delta_tot):
+        zj = z[:, None] + x * delta_tot[None, :]
+        if loss == "squared":
+            d = zj - y[:, None]
+        elif loss == "logistic":
+            d = -y[:, None] * (1.0 / (1.0 + jnp.exp(y[:, None] * zj)))
+        else:  # pragma: no cover
+            raise ValueError(loss)
+        d = m[:, None] * d
+        g = jnp.sum(x * d, axis=0) * inv_n
+        wj = w + delta_tot
+        lo = (g - lam) / beta
+        hi = (g + lam) / beta
+        return delta_tot - jnp.clip(wj, lo, hi)
+
+    out_ref[...] = jax.lax.fori_loop(0, n_steps, step, d0_ref[...])
+
+
+def linesearch_panel(loss: str, n_steps: int, x_panel, y, z, mask, w, delta0,
+                     scalars):
+    """Refined total increments for a dense (n, B) panel (see ref.py)."""
+    n, b = x_panel.shape
+    bt = min(b, BT)
+    if b % bt:
+        raise ValueError(f"block {b} not divisible by tile {bt}")
+    grid = (b // bt,)
+    col = pl.BlockSpec((n,), lambda j: (0,))
+    vec = pl.BlockSpec((bt,), lambda j: (j,))
+    return pl.pallas_call(
+        functools.partial(_linesearch_kernel, loss, n_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bt), lambda j: (0, j)),
+            col, col, col, vec, vec,
+            pl.BlockSpec((3,), lambda j: (0,)),
+        ],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((b,), x_panel.dtype),
+        interpret=INTERPRET,
+    )(x_panel, y, z, mask, w, delta0, scalars)

@@ -1,0 +1,72 @@
+"""L2: the GenCD compute graph in JAX, composed from the L1 Pallas kernels.
+
+Three AOT entry points, each lowered once per (dataset, loss) shape
+variant by ``aot.py`` and executed from the Rust coordinator via PJRT:
+
+  propose_block   (x, y, z, mask, w, scalars) -> (g, delta, phi)
+  objective       (y, z, mask, scalars)       -> (f_smooth,)
+  linesearch      (x, y, z, mask, w, d0, scalars) -> (delta_refined,)
+
+``scalars`` is a (3,) f32 array [lam, beta, inv_n]: runtime inputs so one
+artifact serves a whole regularization path. All shapes are static at
+lowering time (n padded to a multiple of the loss-kernel tile, B the
+panel width); Rust pads with zero rows and a zero mask.
+
+Python (this file) never runs on the solve path — see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import losses as lk
+from .kernels import propose as pk
+
+
+def propose_block(loss: str, x_panel, y, z, mask, w, scalars):
+    """Full Propose step (Algorithm 4) for a dense column panel.
+
+    Returns ``(g, delta, phi)`` per coordinate of the block: the scaled
+    gradient, the Eq. (7) increment and the Eq. (9) proxy.
+    """
+    d = lk.masked_dloss(loss, y, z, mask)
+    g_raw = pk.grad_panel(x_panel, d)
+    return pk.propose_epilogue(g_raw, w, scalars)
+
+
+def objective_smooth(loss: str, y, z, mask, scalars):
+    """F(w) (Eq. 3) from fitted values; the l1 term is added in Rust."""
+    inv_n = scalars[2]
+    v = lk.masked_loss(loss, y, z, mask)
+    return (jnp.sum(v) * inv_n,)
+
+
+def linesearch(loss: str, n_steps: int, x_panel, y, z, mask, w, delta0,
+               scalars):
+    """Sec. 4.1 refinement: n_steps quadratic-approximation iterations."""
+    return (pk.linesearch_panel(loss, n_steps, x_panel, y, z, mask, w,
+                                delta0, scalars),)
+
+
+def propose_entry(loss: str):
+    """Closure with the loss baked in (static), for jax.jit/lower."""
+
+    def fn(x_panel, y, z, mask, w, scalars):
+        return propose_block(loss, x_panel, y, z, mask, w, scalars)
+
+    return fn
+
+
+def objective_entry(loss: str):
+    def fn(y, z, mask, scalars):
+        return objective_smooth(loss, y, z, mask, scalars)
+
+    return fn
+
+
+def linesearch_entry(loss: str, n_steps: int):
+    def fn(x_panel, y, z, mask, w, delta0, scalars):
+        return linesearch(loss, n_steps, x_panel, y, z, mask, w, delta0,
+                          scalars)
+
+    return fn

@@ -1,0 +1,172 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes-compatible value ranges, and scalar
+parameters; every property asserts allclose against ref.py. This is the
+core correctness signal for the compute layer (DESIGN.md §5).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import losses as lk
+from compile.kernels import propose as pk
+
+LOSSES = ("squared", "logistic")
+
+
+def make_problem(seed, n, b, n_real=None):
+    rng = np.random.default_rng(seed)
+    n_real = n if n_real is None else n_real
+    x = rng.standard_normal((n, b)).astype(np.float32)
+    x[n_real:, :] = 0.0
+    y = np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32)
+    z = (rng.standard_normal(n) * 0.5).astype(np.float32)
+    mask = (np.arange(n) < n_real).astype(np.float32)
+    w = (rng.standard_normal(b) * 0.2).astype(np.float32)
+    return x, y, z, mask, w, 1.0 / n_real
+
+
+shape_strategy = st.tuples(
+    st.integers(0, 2**31 - 1),                      # seed
+    st.sampled_from([lk.NT, 2 * lk.NT, 3 * lk.NT]),  # padded n
+    st.sampled_from([1, 3, 8, 16, pk.BT, 2 * pk.BT]),  # block width
+    st.sampled_from(LOSSES),
+    st.floats(1e-6, 1e-1),                           # lam
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_propose_block_matches_ref(params):
+    seed, n, b, loss, lam = params
+    if n % b:  # grad kernel requires b | tiles; any b dividing into bt ok
+        b = 16
+    x, y, z, mask, w, inv_n = make_problem(seed, n, b, n_real=n - n // 4)
+    beta = ref.loss_beta(loss)
+    sc = np.array([lam, beta, inv_n], np.float32)
+    g, d, p = model.propose_block(loss, x, y, z, mask, w, sc)
+    gr, dr, pr = ref.propose_block(loss, x, y, z, mask, w, lam, beta, inv_n)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(d, dr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(p, pr, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(LOSSES))
+def test_objective_matches_ref(seed, loss):
+    n = lk.NT
+    x, y, z, mask, _, inv_n = make_problem(seed, n, 4, n_real=n - 7)
+    sc = np.array([0.0, 0.0, inv_n], np.float32)
+    (f,) = model.objective_smooth(loss, y, z, mask, sc)
+    fr = ref.objective_smooth(loss, y, z, mask, inv_n)
+    np.testing.assert_allclose(float(f), float(fr), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(LOSSES),
+       st.integers(1, 12))
+def test_linesearch_matches_ref(seed, loss, steps):
+    n, b = lk.NT, 16
+    x, y, z, mask, w, inv_n = make_problem(seed, n, b, n_real=n - 3)
+    lam, beta = 1e-3, ref.loss_beta(loss)
+    sc = np.array([lam, beta, inv_n], np.float32)
+    _, d0, _ = ref.propose_block(loss, x, y, z, mask, w, lam, beta, inv_n)
+    (dl,) = model.linesearch(loss, steps, x, y, z, mask, w,
+                             np.asarray(d0), sc)
+    dlr = ref.linesearch_block(loss, x, y, z, mask, w, jnp.asarray(d0),
+                               lam, beta, inv_n, steps)
+    np.testing.assert_allclose(dl, dlr, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# analytic invariants of the Eq. (7)/(9) math, independent of the oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-5, 5), st.floats(-5, 5), st.floats(1e-4, 1.0),
+       st.floats(0.1, 4.0))
+def test_delta_optimality(w, g, lam, beta):
+    """Eq. (7)'s delta minimizes the quadratic upper bound q(d)."""
+    w = np.float32(w); g = np.float32(g)
+    d = float(ref.propose_delta(w, g, lam, beta))
+
+    def q(dd):
+        return 0.5 * beta * dd * dd + g * dd + lam * abs(w + dd)
+
+    base = q(d)
+    for step in (1e-3, 1e-2, 0.1):
+        assert base <= q(d + step) + 1e-5
+        assert base <= q(d - step) + 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-5, 5), st.floats(-5, 5), st.floats(1e-4, 1.0),
+       st.floats(0.1, 4.0))
+def test_proxy_nonpositive(w, g, lam, beta):
+    """phi <= 0: the quadratic-bound decrease is never an increase."""
+    w = np.float32(w); g = np.float32(g)
+    d = ref.propose_delta(w, g, lam, beta)
+    p = float(ref.proxy_phi(w, g, d, lam, beta))
+    assert p <= 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(LOSSES))
+def test_update_never_increases_objective(seed, loss):
+    """Sec. 3.2: a single-coordinate Eq. (7) update cannot increase
+    F(w) + lam |w|_1 (the quadratic approximation is an upper bound)."""
+    n, b = lk.NT, 8
+    x, y, z, mask, w, inv_n = make_problem(seed, n, b)
+    lam, beta = 1e-3, ref.loss_beta(loss)
+    g, d, _ = ref.propose_block(loss, x, y, z, mask, w, lam, beta, inv_n)
+    f0 = float(ref.objective_smooth(loss, y, z, mask, inv_n)) + lam * float(
+        np.abs(w).sum())
+    j = int(np.argmax(np.abs(np.asarray(d))))
+    z1 = z + float(d[j]) * x[:, j]
+    w1 = w.copy(); w1[j] += float(d[j])
+    f1 = float(ref.objective_smooth(loss, y, z1, mask, inv_n)) + lam * float(
+        np.abs(w1).sum())
+    assert f1 <= f0 + 1e-6
+
+
+def test_soft_threshold_equivalence():
+    """Sec. 3.1: the clipping form equals the soft-threshold form."""
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal(100).astype(np.float32)
+    g = rng.standard_normal(100).astype(np.float32)
+    lam, beta = 0.05, 1.0
+    d_clip = ref.propose_delta(w, g, lam, beta)
+
+    def soft(x, tau):
+        return np.sign(x) * np.maximum(np.abs(x) - tau, 0.0)
+
+    d_soft = soft(w - g / beta, lam / beta) - w
+    np.testing.assert_allclose(d_clip, d_soft, rtol=1e-5, atol=1e-6)
+
+
+def test_mask_zeroes_padding():
+    x, y, z, mask, w, inv_n = make_problem(7, lk.NT, 8, n_real=100)
+    beta = 0.25
+    sc = np.array([1e-3, beta, inv_n], np.float32)
+    g1, _, _ = model.propose_block("logistic", x, y, z, mask, w, sc)
+    # corrupt padded region of y/z: results must not change
+    y2, z2 = y.copy(), z.copy()
+    y2[100:] = 99.0
+    z2[100:] = -99.0
+    g2, _, _ = model.propose_block("logistic", x, y2, z2, mask, w, sc)
+    np.testing.assert_allclose(g1, g2, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_beta_bounds_second_derivative(loss):
+    """beta really is an upper bound on ell'' (finite-difference check)."""
+    beta = ref.loss_beta(loss)
+    ts = np.linspace(-10, 10, 2001)
+    for y in (-1.0, 1.0):
+        d = np.asarray(ref.loss_deriv(loss, y, ts))
+        dd = np.gradient(d, ts)
+        assert dd.max() <= beta + 1e-3

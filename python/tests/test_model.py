@@ -1,0 +1,120 @@
+"""L2 model-level invariants: composition, tiling edge cases, and the
+runtime-scalar contract the Rust side relies on."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import propose as pk
+from compile.kernels import ref
+
+
+def problem(seed=0, n=1024, b=16, n_real=None):
+    rng = np.random.default_rng(seed)
+    n_real = n if n_real is None else n_real
+    x = rng.standard_normal((n, b)).astype(np.float32)
+    x[n_real:] = 0.0
+    y = np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32)
+    z = (rng.standard_normal(n) * 0.4).astype(np.float32)
+    mask = (np.arange(n) < n_real).astype(np.float32)
+    w = (rng.standard_normal(b) * 0.1).astype(np.float32)
+    return x, y, z, mask, w, 1.0 / n_real
+
+
+def test_tile_validation_rejects_ragged_panels():
+    with pytest.raises(ValueError):
+        pk._tiles(1000, 16)  # 1000 not divisible by min(1000, 256)
+
+
+def test_epilogue_rejects_ragged_block():
+    g = np.zeros(65, np.float32)  # 65 % 64 != 0
+    w = np.zeros(65, np.float32)
+    s = np.zeros(3, np.float32)
+    with pytest.raises(ValueError):
+        pk.propose_epilogue(g, w, s)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([64, 128, 192]))
+def test_wide_blocks_tile_correctly(b):
+    """Blocks wider than BT exercise the multi-tile grid path."""
+    x, y, z, mask, w, inv_n = problem(1, 1024, b)
+    sc = np.array([1e-3, 0.25, inv_n], np.float32)
+    g, d, p = model.propose_block("logistic", x, y, z, mask, w, sc)
+    gr, dr, pr = ref.propose_block("logistic", x, y, z, mask, w, 1e-3, 0.25,
+                                   inv_n)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(d, dr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(p, pr, rtol=1e-5, atol=1e-6)
+
+
+def test_scalars_are_runtime_not_baked():
+    """One lowered graph must serve any (lam, beta): the whole point of
+    the scalars input (a single artifact serves lambda sweeps)."""
+    import jax
+    x, y, z, mask, w, inv_n = problem(2)
+    fn = jax.jit(model.propose_entry("logistic"))
+    for lam in (1e-5, 1e-3, 0.1):
+        sc = np.array([lam, 0.25, inv_n], np.float32)
+        _, d, _ = fn(x, y, z, mask, w, sc)
+        _, dr, _ = ref.propose_block("logistic", x, y, z, mask, w, lam,
+                                     0.25, inv_n)
+        np.testing.assert_allclose(d, dr, rtol=1e-5, atol=1e-6)
+
+
+def test_linesearch_zero_delta_fixed_point_squared():
+    """For squared loss with beta = ||X_j||^2-consistent scaling, the
+    Eq. 7 step from the proposal is already optimal: refinement must not
+    move it (mirrors the Rust linesearch test)."""
+    x, y, z, mask, w, inv_n = problem(3, 1024, 8)
+    # unit-normalize panel columns so a scalar beta is exact
+    x = x / np.linalg.norm(x, axis=0, keepdims=True).astype(np.float32)
+    beta_eff = inv_n  # squared loss: beta=1, ||X_j||=1 => beta_j = 1/n
+    sc = np.array([1e-3, beta_eff, inv_n], np.float32)
+    g, d0, _ = model.propose_block("squared", x, y, z, mask, w, sc)
+    (d1,) = model.linesearch("squared", 25, x, y, z, mask, w,
+                             np.asarray(d0), sc)
+    np.testing.assert_allclose(d1, d0, rtol=1e-4, atol=1e-6)
+
+
+def test_linesearch_descends_1d_objective():
+    x, y, z, mask, w, inv_n = problem(4, 1024, 8)
+    lam, beta = 1e-3, 0.25
+    sc = np.array([lam, beta, inv_n], np.float32)
+    g, d0, _ = model.propose_block("logistic", x, y, z, mask, w, sc)
+    (d1,) = model.linesearch("logistic", 30, x, y, z, mask, w,
+                             np.asarray(d0), sc)
+
+    def obj_1d(delta):
+        zj = z[:, None] + x * np.asarray(delta)[None, :]
+        v = mask[:, None] * np.asarray(
+            ref.loss_value("logistic", y[:, None], zj))
+        f = v.sum(axis=0) * inv_n
+        return f + lam * np.abs(w + np.asarray(delta))
+
+    f0 = obj_1d(d0)
+    f1 = obj_1d(d1)
+    assert (f1 <= f0 + 1e-6).all(), (f0 - f1).min()
+
+
+def test_objective_invariant_to_padded_region():
+    x, y, z, mask, w, inv_n = problem(5, 2048, 4, n_real=1500)
+    sc = np.array([0.0, 0.0, inv_n], np.float32)
+    (f1,) = model.objective_smooth("logistic", y, z, mask, sc)
+    y2, z2 = y.copy(), z.copy()
+    y2[1500:] = -7.0
+    z2[1500:] = 55.0
+    (f2,) = model.objective_smooth("logistic", y2, z2, mask, sc)
+    assert float(f1) == float(f2)
+
+
+def test_grad_panel_accumulation_over_many_tiles():
+    """n >> NT exercises the accumulator-in-VMEM grid pattern."""
+    rng = np.random.default_rng(6)
+    n, b = 4096, 32
+    x = rng.standard_normal((n, b)).astype(np.float32)
+    d = rng.standard_normal(n).astype(np.float32)
+    got = pk.grad_panel(x, d)
+    want = x.T @ d
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)

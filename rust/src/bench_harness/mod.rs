@@ -1,0 +1,151 @@
+//! Shared machinery for `benches/`: dataset/config setup and the
+//! table/figure printers that regenerate the paper's evaluation outputs
+//! (see DESIGN.md §6 for the experiment index).
+
+pub mod experiments;
+pub mod plot;
+
+use crate::config::RunConfig;
+use crate::coordinator::driver::SolveResult;
+use crate::coordinator::Algorithm;
+use crate::data;
+use crate::sparse::io::Dataset;
+
+/// Scale used by default for bench runs. The paper's full-size matrices
+/// run too (set `GENCD_BENCH_SCALE=1.0`), they just take longer; CI-ish
+/// runs use a fraction that keeps every figure's *shape* intact.
+pub fn bench_scale() -> f64 {
+    std::env::var("GENCD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+/// Per-figure time budget (seconds per algorithm run).
+pub fn bench_budget() -> f64 {
+    std::env::var("GENCD_BENCH_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3.0)
+}
+
+/// The two evaluation datasets at bench scale, with the paper's lambda.
+pub fn paper_datasets() -> Vec<(Dataset, f64)> {
+    let scale = bench_scale();
+    vec![
+        (
+            data::by_name(&format!("dorothea@{scale}")).expect("dorothea"),
+            crate::data::dorothea::PAPER_LAMBDA,
+        ),
+        (
+            data::by_name(&format!("reuters@{scale}")).expect("reuters"),
+            crate::data::reuters::PAPER_LAMBDA,
+        ),
+    ]
+}
+
+/// Baseline RunConfig for a (dataset, algorithm) pair.
+pub fn bench_config(dataset_name: &str, lam: f64, alg: Algorithm) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset.name = dataset_name.into();
+    cfg.problem.loss = "logistic".into();
+    cfg.problem.lam = lam;
+    cfg.solver.algorithm = alg.name().into();
+    cfg.solver.threads = 4;
+    cfg.solver.max_seconds = bench_budget();
+    cfg.solver.max_iters = usize::MAX;
+    cfg.solver.seed = 7;
+    cfg
+}
+
+/// Markdown-ish table printer (fixed-width columns).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:>w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Convergence summary line for Figure 1-style reporting.
+pub fn convergence_row(res: &SolveResult) -> Vec<String> {
+    vec![
+        res.algorithm.name().to_string(),
+        format!("{:.6}", res.objective),
+        format!("{}", res.nnz),
+        format!("{}", res.metrics.updates),
+        format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
+        format!("{:.2}", res.elapsed_secs),
+        res.stop.to_string(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["alg", "obj"]);
+        t.row(vec!["shotgun".into(), "0.5".into()]);
+        t.row(vec!["x".into(), "0.25".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(s.contains("shotgun"));
+    }
+
+    #[test]
+    fn bench_config_resolves() {
+        let cfg = bench_config("dorothea@0.02", 1e-4, Algorithm::Shotgun);
+        assert_eq!(cfg.solver.algorithm, "shotgun");
+        assert_eq!(cfg.problem.lam, 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

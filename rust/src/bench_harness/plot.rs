@@ -1,0 +1,242 @@
+//! Dependency-free SVG line charts — renders the Figure 1 / Figure 2
+//! curves the paper prints, straight from solver histories.
+
+/// One line series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Chart configuration.
+#[derive(Clone, Debug)]
+pub struct Chart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    /// log10-scale the y axis (Figure 2 style).
+    pub log_y: bool,
+    pub series: Vec<Series>,
+}
+
+const W: f64 = 640.0;
+const H: f64 = 420.0;
+const ML: f64 = 70.0; // margins
+const MR: f64 = 150.0;
+const MT: f64 = 40.0;
+const MB: f64 = 50.0;
+const COLORS: [&str; 6] = [
+    "#d62728", "#1f77b4", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b",
+];
+
+impl Chart {
+    /// Render to an SVG string. Returns None if there is nothing finite
+    /// to plot.
+    pub fn to_svg(&self) -> Option<String> {
+        let tx = |v: f64| v;
+        let ty = |v: f64| if self.log_y { v.max(1e-300).log10() } else { v };
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                if x.is_finite() && y.is_finite() && (!self.log_y || y > 0.0) {
+                    xs.push(tx(x));
+                    ys.push(ty(y));
+                }
+            }
+        }
+        if xs.is_empty() {
+            return None;
+        }
+        let (x0, x1) = bounds(&xs);
+        let (y0, y1) = bounds(&ys);
+        let px = |x: f64| ML + (tx(x) - x0) / (x1 - x0).max(1e-300) * (W - ML - MR);
+        let py = |y: f64| H - MB - (ty(y) - y0) / (y1 - y0).max(1e-300) * (H - MT - MB);
+
+        let mut svg = format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}">
+<style>text{{font-family:monospace;font-size:12px}}.t{{font-size:14px;font-weight:bold}}</style>
+<rect width="{W}" height="{H}" fill="white"/>
+<text class="t" x="{}" y="20" text-anchor="middle">{}</text>
+"#,
+            ML + (W - ML - MR) / 2.0,
+            xml(&self.title)
+        );
+        // axes
+        svg.push_str(&format!(
+            r#"<line x1="{ML}" y1="{MT}" x2="{ML}" y2="{}" stroke="black"/>
+<line x1="{ML}" y1="{}" x2="{}" y2="{}" stroke="black"/>
+"#,
+            H - MB,
+            H - MB,
+            W - MR,
+            H - MB
+        ));
+        // ticks (5 per axis)
+        for i in 0..=4 {
+            let fx = x0 + (x1 - x0) * i as f64 / 4.0;
+            let fy = y0 + (y1 - y0) * i as f64 / 4.0;
+            let sx = ML + (W - ML - MR) * i as f64 / 4.0;
+            let sy = H - MB - (H - MT - MB) * i as f64 / 4.0;
+            let ylab = if self.log_y {
+                format!("1e{fy:.1}")
+            } else {
+                format!("{fy:.4}")
+            };
+            svg.push_str(&format!(
+                r#"<line x1="{sx}" y1="{}" x2="{sx}" y2="{}" stroke="black"/>
+<text x="{sx}" y="{}" text-anchor="middle">{fx:.1}</text>
+<line x1="{}" y1="{sy}" x2="{ML}" y2="{sy}" stroke="black"/>
+<text x="{}" y="{}" text-anchor="end">{ylab}</text>
+"#,
+                H - MB,
+                H - MB + 5.0,
+                H - MB + 18.0,
+                ML - 5.0,
+                ML - 8.0,
+                sy + 4.0
+            ));
+        }
+        // axis labels
+        svg.push_str(&format!(
+            r#"<text x="{}" y="{}" text-anchor="middle">{}</text>
+<text x="18" y="{}" text-anchor="middle" transform="rotate(-90 18 {})">{}</text>
+"#,
+            ML + (W - ML - MR) / 2.0,
+            H - 10.0,
+            xml(&self.x_label),
+            H / 2.0,
+            H / 2.0,
+            xml(&self.y_label)
+        ));
+        // series
+        for (i, s) in self.series.iter().enumerate() {
+            let color = COLORS[i % COLORS.len()];
+            let pts: Vec<String> = s
+                .points
+                .iter()
+                .filter(|(x, y)| x.is_finite() && y.is_finite() && (!self.log_y || *y > 0.0))
+                .map(|&(x, y)| format!("{:.1},{:.1}", px(x), py(y)))
+                .collect();
+            if pts.is_empty() {
+                continue;
+            }
+            svg.push_str(&format!(
+                r#"<polyline fill="none" stroke="{color}" stroke-width="1.8" points="{}"/>
+<text x="{}" y="{}" fill="{color}">{}</text>
+"#,
+                pts.join(" "),
+                W - MR + 8.0,
+                MT + 16.0 * i as f64 + 10.0,
+                xml(&s.label)
+            ));
+        }
+        svg.push_str("</svg>\n");
+        Some(svg)
+    }
+
+    /// Render and write to a file; returns whether anything was drawn.
+    pub fn write_svg(&self, path: &str) -> anyhow::Result<bool> {
+        match self.to_svg() {
+            Some(svg) => {
+                std::fs::write(path, svg)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+}
+
+fn bounds(v: &[f64]) -> (f64, f64) {
+    let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if (hi - lo).abs() < 1e-300 {
+        (lo - 0.5, hi + 0.5)
+    } else {
+        (lo, hi)
+    }
+}
+
+fn xml(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chart(log_y: bool) -> Chart {
+        Chart {
+            title: "test <chart>".into(),
+            x_label: "seconds".into(),
+            y_label: "objective".into(),
+            log_y,
+            series: vec![
+                Series {
+                    label: "a".into(),
+                    points: vec![(0.0, 1.0), (1.0, 0.5), (2.0, 0.25)],
+                },
+                Series {
+                    label: "b".into(),
+                    points: vec![(0.0, 0.9), (2.0, 0.8)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn renders_valid_svg() {
+        let svg = chart(false).to_svg().unwrap();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert!(svg.contains("&lt;chart&gt;"), "title must be escaped");
+        // balanced tags
+        assert_eq!(svg.matches("<text").count(), svg.matches("</text>").count());
+    }
+
+    #[test]
+    fn log_scale_drops_nonpositive() {
+        let mut c = chart(true);
+        c.series[0].points.push((3.0, 0.0)); // dropped on log axis
+        let svg = c.to_svg().unwrap();
+        assert!(svg.contains("1e"));
+    }
+
+    #[test]
+    fn empty_chart_is_none() {
+        let c = Chart {
+            title: "t".into(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+            log_y: false,
+            series: vec![],
+        };
+        assert!(c.to_svg().is_none());
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let c = Chart {
+            title: "t".into(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+            log_y: false,
+            series: vec![Series {
+                label: "p".into(),
+                points: vec![(1.0, 1.0)],
+            }],
+        };
+        assert!(c.to_svg().is_some());
+    }
+
+    #[test]
+    fn write_svg_creates_file() {
+        let dir = std::env::temp_dir().join("gencd_plot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.svg");
+        assert!(chart(false).write_svg(path.to_str().unwrap()).unwrap());
+        assert!(std::fs::read_to_string(&path).unwrap().contains("<svg"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,149 @@
+//! Command-line argument parsing (offline stand-in for `clap`).
+//!
+//! Grammar: `gencd <subcommand> [positionals] [--flag] [--key value]
+//! [--key=value]`. Flags may repeat (`--set a=1 --set b=2`). Unknown
+//! flags are an error at `finish()` so typos fail fast.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                anyhow::ensure!(!flag.is_empty(), "bare '--' not supported");
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    out.flags.entry(flag.to_string()).or_default().push(v);
+                } else {
+                    // boolean flag
+                    out.flags.entry(flag.to_string()).or_default().push(String::new());
+                }
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// All values of a repeatable flag.
+    pub fn values(&mut self, name: &str) -> Vec<String> {
+        self.consumed.insert(name.to_string());
+        self.flags.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Last value of a flag, if present.
+    pub fn value(&mut self, name: &str) -> Option<String> {
+        self.consumed.insert(name.to_string());
+        self.flags.get(name).and_then(|v| v.last().cloned())
+    }
+
+    /// Boolean flag (present with no value, or `=true`).
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.insert(name.to_string());
+        match self.flags.get(name) {
+            None => false,
+            Some(vals) => vals
+                .last()
+                .map(|v| v.is_empty() || v == "true" || v == "1")
+                .unwrap_or(true),
+        }
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&mut self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.value(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    /// Error on any flag that was never consumed (typo detection).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for key in self.flags.keys() {
+            if !self.consumed.contains(key) {
+                anyhow::bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let mut a = parse(&[
+            "train", "--config", "c.toml", "--set", "a=1", "--set=b=2", "--verbose",
+        ]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.value("config").as_deref(), Some("c.toml"));
+        assert_eq!(a.values("set"), vec!["a=1", "b=2"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn typed_get_with_default() {
+        let mut a = parse(&["bench", "--threads", "8"]);
+        assert_eq!(a.get("threads", 1usize).unwrap(), 8);
+        assert_eq!(a.get("seed", 42u64).unwrap(), 42);
+        assert!(a.get::<usize>("threads", 0).is_ok());
+        let mut b = parse(&["bench", "--threads", "x"]);
+        assert!(b.get("threads", 1usize).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let mut a = parse(&["run", "--oops", "1"]);
+        let _ = a.value("config");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["color", "dorothea", "reuters"]);
+        assert_eq!(a.positionals, vec!["dorothea", "reuters"]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, "");
+    }
+}

@@ -1,0 +1,312 @@
+//! Structurally-independent feature detection via partial distance-2
+//! coloring of the bipartite feature/sample graph (paper Appendix A and
+//! Sec. 4.1, COLORING).
+//!
+//! Two features *conflict* when their columns share a nonzero row: then
+//! concurrent updates to `z` would collide. A partial distance-2 coloring
+//! on the feature side assigns conflicting features different colors, so
+//! every color class can be updated with **no synchronization at all**
+//! (not even atomics) — the property COLORING exploits.
+//!
+//! The paper's §7 notes that minimizing the *number* of colors is the
+//! wrong objective for parallelism — balanced class sizes matter more —
+//! so alongside the classic greedy heuristic we provide a
+//! load-balancing variant ([`Strategy::Balanced`]).
+
+pub mod speculative;
+pub mod verify;
+
+use crate::sparse::{CscMatrix, RowPattern};
+use crate::util::{Pcg64, Timer};
+
+/// Vertex-ordering and color-choice strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// First-fit greedy in natural feature order (classic heuristic;
+    /// minimizes colors well).
+    Greedy,
+    /// First-fit greedy over a random feature permutation.
+    GreedyRandomOrder,
+    /// Largest-degree-first ordering (features touching the most samples
+    /// colored first), first-fit choice.
+    LargestFirst,
+    /// Least-loaded admissible color (paper §7's "more balanced color
+    /// distribution, even if ... a greater number of colors").
+    Balanced,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Greedy => "greedy",
+            Strategy::GreedyRandomOrder => "greedy-random",
+            Strategy::LargestFirst => "largest-first",
+            Strategy::Balanced => "balanced",
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "greedy" => Strategy::Greedy,
+            "greedy-random" => Strategy::GreedyRandomOrder,
+            "largest-first" => Strategy::LargestFirst,
+            "balanced" => Strategy::Balanced,
+            other => anyhow::bail!("unknown coloring strategy '{other}'"),
+        })
+    }
+}
+
+/// A feature coloring: `color[j]` is the class of feature j, and
+/// `classes[c]` lists the features of color c.
+#[derive(Clone, Debug)]
+pub struct Coloring {
+    pub color: Vec<u32>,
+    pub classes: Vec<Vec<u32>>,
+    pub strategy: Strategy,
+    /// Wall-clock seconds of the preprocessing step (paper Table 3's
+    /// "Time to color").
+    pub elapsed_secs: f64,
+}
+
+impl Coloring {
+    pub fn n_colors(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Mean class size (paper Table 3's "Features/color").
+    pub fn mean_class_size(&self) -> f64 {
+        if self.classes.is_empty() {
+            0.0
+        } else {
+            self.color.len() as f64 / self.classes.len() as f64
+        }
+    }
+
+    pub fn max_class_size(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).max().unwrap_or(0)
+    }
+
+    pub fn min_class_size(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).min().unwrap_or(0)
+    }
+
+    /// Class-size imbalance: max/mean (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.mean_class_size();
+        if mean == 0.0 {
+            1.0
+        } else {
+            self.max_class_size() as f64 / mean
+        }
+    }
+}
+
+/// Color the features of `x` (partial distance-2 on the feature side).
+pub fn color_features(x: &CscMatrix, strategy: Strategy, seed: u64) -> Coloring {
+    let timer = Timer::start();
+    let k = x.n_cols();
+    let rows = RowPattern::from_csc(x);
+
+    // Feature visit order.
+    let mut order: Vec<u32> = (0..k as u32).collect();
+    match strategy {
+        Strategy::Greedy | Strategy::Balanced => {}
+        Strategy::GreedyRandomOrder => Pcg64::seeded(seed).shuffle(&mut order),
+        Strategy::LargestFirst => {
+            order.sort_by_key(|&j| std::cmp::Reverse(x.col_nnz(j as usize)));
+        }
+    }
+
+    const UNCOLORED: u32 = u32::MAX;
+    let mut color = vec![UNCOLORED; k];
+    // forbidden[c] == j+1 marks color c as conflicting for current feature
+    let mut forbidden: Vec<u32> = Vec::new();
+    let mut loads: Vec<u32> = Vec::new(); // class sizes (Balanced)
+
+    for (rank, &j) in order.iter().enumerate() {
+        let stamp = rank as u32 + 1;
+        // Mark colors of all distance-2 neighbors (features sharing a row).
+        let (cols_rows, _) = x.col(j as usize);
+        for &i in cols_rows {
+            for &j2 in rows.row(i as usize) {
+                let c = color[j2 as usize];
+                if c != UNCOLORED {
+                    if c as usize >= forbidden.len() {
+                        forbidden.resize(c as usize + 1, 0);
+                    }
+                    forbidden[c as usize] = stamp;
+                }
+            }
+        }
+        let chosen = match strategy {
+            Strategy::Balanced => {
+                // least-loaded admissible color among the open ones; open a
+                // new color only if every open color is forbidden.
+                let mut best: Option<(u32, u32)> = None; // (load, color)
+                for (c, &load) in loads.iter().enumerate() {
+                    let is_forbidden =
+                        c < forbidden.len() && forbidden[c] == stamp;
+                    if !is_forbidden {
+                        let cand = (load, c as u32);
+                        if best.map_or(true, |b| cand < b) {
+                            best = Some(cand);
+                        }
+                    }
+                }
+                match best {
+                    Some((_, c)) => c,
+                    None => {
+                        loads.push(0);
+                        (loads.len() - 1) as u32
+                    }
+                }
+            }
+            _ => {
+                // first-fit: smallest non-forbidden color index
+                let mut c = 0u32;
+                while (c as usize) < forbidden.len() && forbidden[c as usize] == stamp {
+                    c += 1;
+                }
+                c
+            }
+        };
+        color[j as usize] = chosen;
+        if strategy == Strategy::Balanced {
+            loads[chosen as usize] += 1;
+        }
+    }
+
+    // Build class lists.
+    let n_colors = color.iter().map(|&c| c + 1).max().unwrap_or(0) as usize;
+    let mut classes = vec![Vec::new(); n_colors];
+    for (j, &c) in color.iter().enumerate() {
+        classes[c as usize].push(j as u32);
+    }
+
+    Coloring {
+        color,
+        classes,
+        strategy,
+        elapsed_secs: timer.elapsed_secs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::verify::verify_coloring;
+    use super::*;
+    use crate::sparse::CooBuilder;
+    use crate::util::prop;
+
+    fn strategies() -> [Strategy; 4] {
+        [
+            Strategy::Greedy,
+            Strategy::GreedyRandomOrder,
+            Strategy::LargestFirst,
+            Strategy::Balanced,
+        ]
+    }
+
+    fn random_binary(rng: &mut Pcg64, n: usize, k: usize, p: f64) -> CscMatrix {
+        let mut b = CooBuilder::new(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                if rng.next_f64() < p {
+                    b.push(i, j, 1.0);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn disjoint_columns_one_color() {
+        // block-diagonal pattern: no conflicts at all
+        let mut b = CooBuilder::new(6, 3);
+        b.push(0, 0, 1.0);
+        b.push(1, 0, 1.0);
+        b.push(2, 1, 1.0);
+        b.push(4, 2, 1.0);
+        let m = b.build();
+        for s in strategies() {
+            let c = color_features(&m, s, 1);
+            assert_eq!(c.n_colors(), 1, "{s:?}");
+            assert!(verify_coloring(&m, &c).is_ok());
+        }
+    }
+
+    #[test]
+    fn dense_matrix_all_distinct() {
+        // every pair of columns shares row 0 => k colors
+        let mut b = CooBuilder::new(2, 5);
+        for j in 0..5 {
+            b.push(0, j, 1.0);
+        }
+        let m = b.build();
+        for s in strategies() {
+            let c = color_features(&m, s, 2);
+            assert_eq!(c.n_colors(), 5, "{s:?}");
+            assert!(verify_coloring(&m, &c).is_ok());
+        }
+    }
+
+    #[test]
+    fn prop_all_strategies_valid() {
+        prop::check("coloring valid on random matrices", 40, |rng, size| {
+            let n = 2 + rng.below(size.max(2));
+            let k = 2 + rng.below(2 * size.max(2));
+            let m = random_binary(rng, n, k, 0.2);
+            for s in strategies() {
+                let c = color_features(&m, s, rng.next_u64());
+                if c.color.len() != k {
+                    return Err(format!("{s:?}: wrong length"));
+                }
+                if let Err(e) = verify_coloring(&m, &c) {
+                    return Err(format!("{s:?}: {e}"));
+                }
+                // every feature colored, classes partition features
+                let total: usize = c.classes.iter().map(|cl| cl.len()).sum();
+                if total != k {
+                    return Err(format!("{s:?}: classes don't partition"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn balanced_no_worse_imbalance_usually() {
+        // On a structured instance the balanced strategy must produce a
+        // max/mean ratio no worse than plain greedy.
+        let mut rng = Pcg64::seeded(77);
+        let m = random_binary(&mut rng, 40, 200, 0.05);
+        let g = color_features(&m, Strategy::Greedy, 1);
+        let b = color_features(&m, Strategy::Balanced, 1);
+        assert!(verify_coloring(&m, &b).is_ok());
+        assert!(
+            b.imbalance() <= g.imbalance() + 1e-9,
+            "balanced {} vs greedy {}",
+            b.imbalance(),
+            g.imbalance()
+        );
+    }
+
+    #[test]
+    fn stats_consistent() {
+        let mut rng = Pcg64::seeded(5);
+        let m = random_binary(&mut rng, 20, 50, 0.1);
+        let c = color_features(&m, Strategy::Greedy, 1);
+        assert!(c.mean_class_size() > 0.0);
+        assert!(c.max_class_size() >= c.min_class_size());
+        assert!(c.imbalance() >= 1.0 - 1e-9);
+        assert!(c.elapsed_secs >= 0.0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CooBuilder::new(4, 3).build();
+        let c = color_features(&m, Strategy::Greedy, 1);
+        // no conflicts anywhere: single color
+        assert_eq!(c.n_colors(), 1);
+    }
+}

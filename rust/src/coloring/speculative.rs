@@ -1,0 +1,225 @@
+//! Speculative (iterative) parallel distance-2 coloring — the algorithm
+//! family of Catalyurek et al. that the paper's Appendix A builds on.
+//!
+//! Rounds of: (1) *tentative* coloring of all currently-uncolored
+//! features in parallel chunks using a stale view of neighbor colors,
+//! then (2) parallel *conflict detection* (same color, shared row), with
+//! losers (the higher feature index, per the standard tie-break)
+//! scheduled for the next round. Terminates because each round colors at
+//! least one feature permanently; typically 2-4 rounds suffice.
+//!
+//! On this container the "parallel" chunks execute on a small thread
+//! pool (correct at any thread count); the *algorithmic* structure —
+//! stale reads, speculation, conflict repair — is exactly the
+//! multi-core one, and the round/conflict counts it reports are
+//! hardware-independent.
+
+use std::sync::atomic::{AtomicU32, Ordering::Relaxed};
+
+use super::{Coloring, Strategy};
+use crate::sparse::{CscMatrix, RowPattern};
+use crate::util::Timer;
+
+const UNCOLORED: u32 = u32::MAX;
+
+/// Outcome statistics of a speculative run.
+#[derive(Clone, Copy, Debug)]
+pub struct SpeculativeStats {
+    pub rounds: usize,
+    /// Total conflicts detected and repaired across rounds.
+    pub conflicts: usize,
+}
+
+/// Speculatively color with `threads` workers. Returns the coloring and
+/// round/conflict statistics.
+pub fn color_speculative(
+    x: &CscMatrix,
+    threads: usize,
+    // retained for API symmetry with color_features
+    _seed: u64,
+) -> (Coloring, SpeculativeStats) {
+    let timer = Timer::start();
+    let k = x.n_cols();
+    let rows = RowPattern::from_csc(x);
+    let threads = threads.max(1);
+
+    let color: Vec<AtomicU32> = (0..k).map(|_| AtomicU32::new(UNCOLORED)).collect();
+    let mut pending: Vec<u32> = (0..k as u32).collect();
+    let mut rounds = 0usize;
+    let mut conflicts_total = 0usize;
+
+    while !pending.is_empty() {
+        rounds += 1;
+        // ---- phase 1: tentative coloring (parallel, stale reads) ------
+        let chunk = (pending.len() + threads - 1) / threads;
+        std::thread::scope(|scope| {
+            for piece in pending.chunks(chunk) {
+                scope.spawn(|| {
+                    let mut forbidden: Vec<u32> = Vec::new();
+                    for (stamp0, &j) in piece.iter().enumerate() {
+                        let stamp = stamp0 as u32 + 1;
+                        let (col_rows, _) = x.col(j as usize);
+                        for &i in col_rows {
+                            for &j2 in rows.row(i as usize) {
+                                let c = color[j2 as usize].load(Relaxed);
+                                if c != UNCOLORED {
+                                    if c as usize >= forbidden.len() {
+                                        forbidden.resize(c as usize + 1, 0);
+                                    }
+                                    forbidden[c as usize] = stamp;
+                                }
+                            }
+                        }
+                        let mut c = 0u32;
+                        while (c as usize) < forbidden.len()
+                            && forbidden[c as usize] == stamp
+                        {
+                            c += 1;
+                        }
+                        color[j as usize].store(c, Relaxed);
+                    }
+                });
+            }
+        });
+
+        // ---- phase 2: conflict detection (parallel, disjoint rows) -----
+        let n_rows = rows.n_rows();
+        let row_chunk = (n_rows + threads - 1) / threads;
+        let losers: Vec<Vec<u32>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let lo = t * row_chunk;
+                let hi = ((t + 1) * row_chunk).min(n_rows);
+                let rows = &rows;
+                let color = &color;
+                handles.push(scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut seen: std::collections::HashMap<u32, u32> =
+                        std::collections::HashMap::new();
+                    for i in lo..hi {
+                        seen.clear();
+                        for &j in rows.row(i) {
+                            let c = color[j as usize].load(Relaxed);
+                            match seen.entry(c) {
+                                std::collections::hash_map::Entry::Occupied(e) => {
+                                    // higher index loses (standard tie-break)
+                                    let j0 = *e.get();
+                                    out.push(j.max(j0));
+                                }
+                                std::collections::hash_map::Entry::Vacant(v) => {
+                                    v.insert(j);
+                                }
+                            }
+                        }
+                    }
+                    out
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        let mut next: Vec<u32> = losers.into_iter().flatten().collect();
+        next.sort_unstable();
+        next.dedup();
+        conflicts_total += next.len();
+        for &j in &next {
+            color[j as usize].store(UNCOLORED, Relaxed);
+        }
+        pending = next;
+    }
+
+    let color: Vec<u32> = color.iter().map(|c| c.load(Relaxed)).collect();
+    let n_colors = color.iter().map(|&c| c + 1).max().unwrap_or(0) as usize;
+    let mut classes = vec![Vec::new(); n_colors];
+    for (j, &c) in color.iter().enumerate() {
+        classes[c as usize].push(j as u32);
+    }
+    (
+        Coloring {
+            color,
+            classes,
+            strategy: Strategy::Greedy,
+            elapsed_secs: timer.elapsed_secs(),
+        },
+        SpeculativeStats {
+            rounds,
+            conflicts: conflicts_total,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::verify::verify_coloring;
+    use crate::sparse::CooBuilder;
+    use crate::util::{prop, Pcg64};
+
+    fn random_binary(rng: &mut Pcg64, n: usize, k: usize, p: f64) -> CscMatrix {
+        let mut b = CooBuilder::new(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                if rng.next_f64() < p {
+                    b.push(i, j, 1.0);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn valid_on_random_matrices_any_thread_count() {
+        prop::check("speculative coloring valid", 25, |rng, size| {
+            let n = 2 + rng.below(size.max(2));
+            let k = 2 + rng.below(2 * size.max(2));
+            let m = random_binary(rng, n, k, 0.25);
+            let threads = 1 + rng.below(8);
+            let (c, stats) = color_speculative(&m, threads, 0);
+            if let Err(e) = verify_coloring(&m, &c) {
+                return Err(format!("threads={threads}: {e}"));
+            }
+            prop::ensure(stats.rounds >= 1, "no rounds")
+        });
+    }
+
+    #[test]
+    fn single_thread_no_conflicts() {
+        // with one worker the stale view is never stale: zero conflicts
+        let mut rng = Pcg64::seeded(4);
+        let m = random_binary(&mut rng, 30, 120, 0.1);
+        let (c, stats) = color_speculative(&m, 1, 0);
+        assert!(verify_coloring(&m, &c).is_ok());
+        assert_eq!(stats.conflicts, 0);
+        assert_eq!(stats.rounds, 1);
+    }
+
+    #[test]
+    fn comparable_color_count_to_sequential() {
+        let mut rng = Pcg64::seeded(5);
+        let m = random_binary(&mut rng, 40, 300, 0.08);
+        let seq = crate::coloring::color_features(&m, Strategy::Greedy, 1);
+        let (spec, _) = color_speculative(&m, 4, 0);
+        assert!(verify_coloring(&m, &spec).is_ok());
+        // speculative may need a few extra colors but not wildly more
+        assert!(
+            spec.n_colors() <= seq.n_colors() * 2 + 4,
+            "spec {} vs seq {}",
+            spec.n_colors(),
+            seq.n_colors()
+        );
+    }
+
+    #[test]
+    fn dense_conflict_storm_terminates() {
+        // every column shares row 0: maximal conflicts, k colors
+        let mut b = CooBuilder::new(2, 24);
+        for j in 0..24 {
+            b.push(0, j, 1.0);
+        }
+        let m = b.build();
+        let (c, stats) = color_speculative(&m, 8, 0);
+        assert!(verify_coloring(&m, &c).is_ok());
+        assert_eq!(c.n_colors(), 24);
+        assert!(stats.rounds <= 25, "rounds {}", stats.rounds);
+    }
+}

@@ -1,0 +1,88 @@
+//! Coloring validation: the safety property COLORING's lock-free Update
+//! step depends on. Used by tests and (optionally, `--verify-coloring`)
+//! at solver startup.
+
+use super::Coloring;
+use crate::sparse::{CscMatrix, RowPattern};
+
+/// Check that no two features with the same color share a row — i.e. the
+/// coloring is a valid partial distance-2 coloring of the bipartite
+/// graph. Returns a description of the first violation found.
+pub fn verify_coloring(x: &CscMatrix, coloring: &Coloring) -> Result<(), String> {
+    if coloring.color.len() != x.n_cols() {
+        return Err(format!(
+            "coloring covers {} features, matrix has {}",
+            coloring.color.len(),
+            x.n_cols()
+        ));
+    }
+    let rows = RowPattern::from_csc(x);
+    for i in 0..rows.n_rows() {
+        let feats = rows.row(i);
+        // all features sharing row i must have pairwise-distinct colors
+        let mut seen: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        for &j in feats {
+            let c = coloring.color[j as usize];
+            if let Some(&j0) = seen.get(&c) {
+                return Err(format!(
+                    "features {j0} and {j} share row {i} but both have color {c}"
+                ));
+            }
+            seen.insert(c, j);
+        }
+    }
+    Ok(())
+}
+
+/// Check that the class lists agree with the color array.
+pub fn verify_classes(coloring: &Coloring) -> Result<(), String> {
+    let mut seen = vec![false; coloring.color.len()];
+    for (c, class) in coloring.classes.iter().enumerate() {
+        for &j in class {
+            if coloring.color[j as usize] != c as u32 {
+                return Err(format!("feature {j} listed in class {c} but colored {}",
+                    coloring.color[j as usize]));
+            }
+            if seen[j as usize] {
+                return Err(format!("feature {j} in two classes"));
+            }
+            seen[j as usize] = true;
+        }
+    }
+    if let Some(j) = seen.iter().position(|&s| !s) {
+        return Err(format!("feature {j} in no class"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::{color_features, Strategy};
+    use crate::sparse::CooBuilder;
+
+    #[test]
+    fn detects_conflict() {
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 0, 1.0);
+        b.push(0, 1, 1.0);
+        let m = b.build();
+        let mut c = color_features(&m, Strategy::Greedy, 1);
+        assert!(verify_coloring(&m, &c).is_ok());
+        // corrupt: force both features into color 0
+        c.color = vec![0, 0];
+        assert!(verify_coloring(&m, &c).is_err());
+    }
+
+    #[test]
+    fn detects_class_mismatch() {
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 0, 1.0);
+        b.push(1, 1, 1.0);
+        let m = b.build();
+        let mut c = color_features(&m, Strategy::Greedy, 1);
+        assert!(verify_classes(&c).is_ok());
+        c.classes[0].clear();
+        assert!(verify_classes(&c).is_err());
+    }
+}

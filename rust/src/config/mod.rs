@@ -1,0 +1,272 @@
+//! Typed experiment configuration.
+//!
+//! Experiments are described by a TOML-subset file (see `configs/`) with
+//! three tables — `[dataset]`, `[problem]`, `[solver]` — plus optional
+//! `[output]`. Every field has a default, and any field can be
+//! overridden from the CLI with `--set table.key=value`, so a config file
+//! is a starting point, not a straitjacket.
+
+pub mod toml;
+
+use toml::{parse, Document, Value};
+
+/// Which Propose backend executes the per-block math (DESIGN.md §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust sparse column traversal (the paper's OpenMP analogue).
+    SparseRust,
+    /// AOT-compiled JAX/Pallas artifact via PJRT (dense panel per block).
+    DenseBlockHlo,
+}
+
+impl Backend {
+    pub fn by_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "sparse" | "rust" => Backend::SparseRust,
+            "hlo" | "pjrt" => Backend::DenseBlockHlo,
+            other => anyhow::bail!("unknown backend '{other}' (sparse|hlo)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::SparseRust => "sparse",
+            Backend::DenseBlockHlo => "hlo",
+        }
+    }
+}
+
+/// `[dataset]` table.
+#[derive(Clone, Debug)]
+pub struct DatasetConfig {
+    /// Registry name (`dorothea`, `reuters`, optionally `@scale`) or a
+    /// path to a libsvm/binary file when `path` is set.
+    pub name: String,
+    /// Load from file instead of generating.
+    pub path: Option<String>,
+    /// Column-normalize (paper Sec. 4.4; algorithmic assumption for
+    /// beta-based steps).
+    pub normalize: bool,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        Self {
+            name: "dorothea@0.1".into(),
+            path: None,
+            normalize: true,
+        }
+    }
+}
+
+/// `[problem]` table.
+#[derive(Clone, Debug)]
+pub struct ProblemConfig {
+    pub loss: String,
+    pub lam: f64,
+}
+
+impl Default for ProblemConfig {
+    fn default() -> Self {
+        Self {
+            loss: "logistic".into(),
+            lam: 1e-4,
+        }
+    }
+}
+
+/// `[solver]` table.
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    /// Algorithm preset: ccd, scd, shotgun, thread-greedy, greedy,
+    /// coloring, topk, block-shotgun.
+    pub algorithm: String,
+    pub threads: usize,
+    pub max_iters: usize,
+    pub max_seconds: f64,
+    /// Stop when the objective improves by less than `tol` (relative)
+    /// over a log interval. 0 disables.
+    pub tol: f64,
+    pub seed: u64,
+    /// Sec. 4.1 refinement steps applied to accepted proposals.
+    pub line_search_steps: usize,
+    /// Selection size (0 = algorithm default, e.g. P* for shotgun).
+    pub select_size: usize,
+    /// TopK accept budget (0 = algorithm default).
+    pub accept_k: usize,
+    /// Objective/NNZ logging cadence in iterations (0 = auto).
+    pub log_every: usize,
+    pub coloring_strategy: String,
+    pub backend: Backend,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        Self {
+            algorithm: "shotgun".into(),
+            threads: 4,
+            max_iters: usize::MAX,
+            max_seconds: 30.0,
+            tol: 0.0,
+            seed: 1,
+            line_search_steps: 0,
+            select_size: 0,
+            accept_k: 0,
+            log_every: 0,
+            coloring_strategy: "greedy".into(),
+            backend: Backend::SparseRust,
+        }
+    }
+}
+
+/// Full run description.
+#[derive(Clone, Debug, Default)]
+pub struct RunConfig {
+    pub dataset: DatasetConfig,
+    pub problem: ProblemConfig,
+    pub solver: SolverConfig,
+    /// Optional CSV path for the convergence history.
+    pub csv: Option<String>,
+}
+
+impl RunConfig {
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let doc = parse(text)?;
+        let mut cfg = Self::default();
+        cfg.apply_doc(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    fn apply_doc(&mut self, doc: &Document) -> anyhow::Result<()> {
+        for (table, kv) in &doc.tables {
+            for (key, value) in kv {
+                self.set_value(table, key, value)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one `table.key=value` override (CLI `--set`).
+    pub fn set(&mut self, dotted: &str, raw: &str) -> anyhow::Result<()> {
+        let (table, key) = dotted
+            .split_once('.')
+            .ok_or_else(|| anyhow::anyhow!("override '{dotted}' must be table.key"))?;
+        // parse the raw string through the TOML value grammar; fall back
+        // to a bare string for unquoted names.
+        let value = toml::parse(&format!("x = {raw}\n"))
+            .ok()
+            .and_then(|d| d.get("", "x").cloned())
+            .unwrap_or_else(|| Value::String(raw.to_string()));
+        self.set_value(table, key, &value)
+    }
+
+    fn set_value(&mut self, table: &str, key: &str, value: &Value) -> anyhow::Result<()> {
+        let bad_type = || anyhow::anyhow!("{table}.{key}: wrong type {value:?}");
+        let as_str = |v: &Value| v.as_str().map(str::to_string).ok_or_else(bad_type);
+        let as_f64 = |v: &Value| v.as_float().ok_or_else(bad_type);
+        let as_usize = |v: &Value| {
+            v.as_int()
+                .filter(|&i| i >= 0)
+                .map(|i| i as usize)
+                .ok_or_else(bad_type)
+        };
+        match (table, key) {
+            ("dataset", "name") => self.dataset.name = as_str(value)?,
+            ("dataset", "path") => self.dataset.path = Some(as_str(value)?),
+            ("dataset", "normalize") => {
+                self.dataset.normalize = value.as_bool().ok_or_else(bad_type)?
+            }
+            ("problem", "loss") => self.problem.loss = as_str(value)?,
+            ("problem", "lam") => self.problem.lam = as_f64(value)?,
+            ("solver", "algorithm") => self.solver.algorithm = as_str(value)?,
+            ("solver", "threads") => self.solver.threads = as_usize(value)?.max(1),
+            ("solver", "max_iters") => self.solver.max_iters = as_usize(value)?,
+            ("solver", "max_seconds") => self.solver.max_seconds = as_f64(value)?,
+            ("solver", "tol") => self.solver.tol = as_f64(value)?,
+            ("solver", "seed") => self.solver.seed = as_usize(value)? as u64,
+            ("solver", "line_search_steps") => {
+                self.solver.line_search_steps = as_usize(value)?
+            }
+            ("solver", "select_size") => self.solver.select_size = as_usize(value)?,
+            ("solver", "accept_k") => self.solver.accept_k = as_usize(value)?,
+            ("solver", "log_every") => self.solver.log_every = as_usize(value)?,
+            ("solver", "coloring_strategy") => {
+                self.solver.coloring_strategy = as_str(value)?
+            }
+            ("solver", "backend") => {
+                self.solver.backend = Backend::by_name(&as_str(value)?)?
+            }
+            ("output", "csv") => self.csv = Some(as_str(value)?),
+            ("", _) => anyhow::bail!("top-level key '{key}' not recognized"),
+            _ => anyhow::bail!("unknown config key {table}.{key}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_file_then_override() {
+        let mut cfg = RunConfig::from_toml(
+            r#"
+            [dataset]
+            name = "reuters@0.05"
+            [problem]
+            loss = "logistic"
+            lam = 1e-5
+            [solver]
+            algorithm = "coloring"
+            threads = 8
+            max_seconds = 2.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset.name, "reuters@0.05");
+        assert_eq!(cfg.problem.lam, 1e-5);
+        assert_eq!(cfg.solver.algorithm, "coloring");
+        assert_eq!(cfg.solver.threads, 8);
+        // defaults survive for unset fields
+        assert!(cfg.dataset.normalize);
+        cfg.set("solver.threads", "2").unwrap();
+        cfg.set("solver.algorithm", "\"shotgun\"").unwrap();
+        cfg.set("solver.backend", "hlo").unwrap();
+        assert_eq!(cfg.solver.threads, 2);
+        assert_eq!(cfg.solver.algorithm, "shotgun");
+        assert_eq!(cfg.solver.backend, Backend::DenseBlockHlo);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_types() {
+        assert!(RunConfig::from_toml("[solver]\nwhat = 1\n").is_err());
+        assert!(RunConfig::from_toml("[solver]\nthreads = \"four\"\n").is_err());
+        assert!(RunConfig::from_toml("[solver]\nthreads = -2\n").is_err());
+        assert!(RunConfig::from_toml("stray = 1\n").is_err());
+    }
+
+    #[test]
+    fn bare_string_override() {
+        let mut cfg = RunConfig::default();
+        cfg.set("dataset.name", "dorothea@0.2").unwrap();
+        assert_eq!(cfg.dataset.name, "dorothea@0.2");
+        assert!(cfg.set("nodot", "x").is_err());
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(Backend::by_name("sparse").unwrap(), Backend::SparseRust);
+        assert_eq!(Backend::by_name("hlo").unwrap(), Backend::DenseBlockHlo);
+        assert!(Backend::by_name("gpu").is_err());
+        assert_eq!(Backend::SparseRust.name(), "sparse");
+    }
+}

@@ -1,0 +1,250 @@
+//! Minimal TOML-subset parser (offline stand-in for the `toml` crate).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / flat array values, `#` comments, bare and quoted
+//! keys. Unsupported (rejected, never silently misparsed): nested
+//! tables-in-arrays, multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Boolean(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`lam = 1` == `1.0`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Boolean(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `table -> key -> value`. Top-level keys live under
+/// the empty-string table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Document {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    /// Get `key` in `table` ("" for top level).
+    pub fn get(&self, table: &str, key: &str) -> Option<&Value> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    pub fn table(&self, table: &str) -> Option<&BTreeMap<String, Value>> {
+        self.tables.get(table)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> anyhow::Result<Document> {
+    let mut doc = Document::default();
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            anyhow::ensure!(
+                !name.is_empty() && !name.starts_with('['),
+                "line {}: unsupported table header '{line}'",
+                lineno + 1
+            );
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, rest) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().trim_matches('"').to_string();
+        anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+        let value = parse_value(rest.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.tables.get_mut(&current).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    anyhow::ensure!(!s.is_empty(), "empty value");
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        anyhow::ensure!(!inner.contains('"'), "embedded quote unsupported");
+        return Ok(Value::String(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner)? {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Boolean(true)),
+        "false" => return Ok(Value::Boolean(false)),
+        _ => {}
+    }
+    // integer before float so `3` parses as Integer
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Integer(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("cannot parse value '{s}'")
+}
+
+/// Split an array body on commas, respecting quotes (flat arrays only).
+fn split_top_level(s: &str) -> anyhow::Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    let mut depth = 0i32;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    anyhow::ensure!(depth == 0 && !in_str, "unbalanced array");
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typed_values() {
+        let doc = parse(
+            r#"
+            # experiment config
+            name = "fig1"          # trailing comment
+            threads = 32
+            lam = 1e-4
+            verbose = true
+            sizes = [1, 2, 4]
+            tags = ["a", "b"]
+
+            [dataset]
+            kind = "dorothea"
+            scale = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("fig1"));
+        assert_eq!(doc.get("", "threads").unwrap().as_int(), Some(32));
+        assert_eq!(doc.get("", "lam").unwrap().as_float(), Some(1e-4));
+        assert_eq!(doc.get("", "verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("", "sizes").unwrap().as_array().unwrap().len(),
+            3
+        );
+        assert_eq!(doc.get("dataset", "kind").unwrap().as_str(), Some("dorothea"));
+        assert_eq!(doc.get("dataset", "scale").unwrap().as_float(), Some(0.5));
+    }
+
+    #[test]
+    fn integer_coerces_to_float() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float(), Some(3.0));
+        assert_eq!(doc.get("", "x").unwrap().as_int(), Some(3));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("x = \"open\n").is_err());
+        assert!(parse("x = [1, 2\n").is_err());
+        assert!(parse("x = what\n").is_err());
+        assert!(parse("[[array_of_tables]]\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("x = \"a#b\" # real comment\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("n = 100_000\n").unwrap();
+        assert_eq!(doc.get("", "n").unwrap().as_int(), Some(100_000));
+    }
+}

@@ -1,0 +1,248 @@
+//! Step three: Accept (Sec. 2.3) — which proposals survive.
+//!
+//! `All` (SHOTGUN, COLORING, CCD/SCD) bypasses the proxy entirely;
+//! `ThreadGreedy` keeps each thread's best proposal (the paper's novel
+//! algorithm — no cross-thread synchronization); `GlobalBest` keeps the
+//! single best across threads (GREEDY, synchronizing reduction);
+//! `GlobalTopK` is the §7 extension: the best K *independently of which
+//! thread proposed them*.
+
+/// Accept policy. The engine evaluates `ThreadGreedy` inside each worker
+/// (zero synchronization) and the global policies in the leader.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Acceptor {
+    /// Accept every proposal.
+    All,
+    /// Each thread accepts the best (lowest phi) of its own chunk.
+    ThreadGreedy,
+    /// Single globally-best proposal (classic GREEDY).
+    GlobalBest,
+    /// Best `k` proposals across all threads (§7 extension).
+    GlobalTopK(usize),
+}
+
+/// A per-thread reduction result: the best proposal seen by one worker.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadBest {
+    pub j: u32,
+    pub phi: f64,
+    pub delta: f64,
+}
+
+impl ThreadBest {
+    pub const NONE: ThreadBest = ThreadBest {
+        j: u32::MAX,
+        phi: f64::INFINITY,
+        delta: 0.0,
+    };
+
+    #[inline]
+    pub fn consider(&mut self, j: u32, phi: f64, delta: f64) {
+        // Strictly-better keeps the first-seen on ties => deterministic.
+        if phi < self.phi {
+            *self = ThreadBest { j, phi, delta };
+        }
+    }
+
+    pub fn is_some(&self) -> bool {
+        self.j != u32::MAX && self.delta != 0.0
+    }
+}
+
+/// Leader-side resolution of the global policies. `bests` holds each
+/// worker's reduction; `selected`/`phi` give the full proposal table for
+/// TopK. Fills `out` with the accepted J'.
+pub fn resolve_global(
+    acceptor: Acceptor,
+    bests: &[ThreadBest],
+    selected: &[u32],
+    phi_of: impl Fn(u32) -> f64,
+    out: &mut Vec<u32>,
+) {
+    out.clear();
+    match acceptor {
+        Acceptor::All => out.extend_from_slice(selected),
+        Acceptor::ThreadGreedy => {
+            for b in bests {
+                if b.is_some() {
+                    out.push(b.j);
+                }
+            }
+        }
+        Acceptor::GlobalBest => {
+            let mut best = ThreadBest::NONE;
+            for b in bests {
+                if b.is_some() {
+                    best.consider(b.j, b.phi, b.delta);
+                }
+            }
+            if best.is_some() {
+                out.push(best.j);
+            }
+        }
+        Acceptor::GlobalTopK(k) => {
+            // partial selection of the k most-negative phi values
+            let mut scored: Vec<(f64, u32)> =
+                selected.iter().map(|&j| (phi_of(j), j)).collect();
+            let k = k.min(scored.len());
+            if k == 0 {
+                return;
+            }
+            scored.select_nth_unstable_by(k - 1, |a, b| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cmp(&b.1))
+            });
+            let mut top: Vec<(f64, u32)> = scored[..k].to_vec();
+            // deterministic order (by j) and drop no-op proposals
+            top.sort_by_key(|&(_, j)| j);
+            for (phi, j) in top {
+                if phi < 0.0 {
+                    out.push(j);
+                }
+            }
+        }
+    }
+}
+
+impl Acceptor {
+    pub fn name(&self) -> String {
+        match self {
+            Acceptor::All => "all".into(),
+            Acceptor::ThreadGreedy => "thread-greedy".into(),
+            Acceptor::GlobalBest => "global-best".into(),
+            Acceptor::GlobalTopK(k) => format!("top{k}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bests() -> Vec<ThreadBest> {
+        vec![
+            ThreadBest {
+                j: 3,
+                phi: -0.5,
+                delta: 0.1,
+            },
+            ThreadBest::NONE,
+            ThreadBest {
+                j: 7,
+                phi: -0.9,
+                delta: -0.2,
+            },
+        ]
+    }
+
+    #[test]
+    fn all_passes_selection_through() {
+        let mut out = Vec::new();
+        resolve_global(Acceptor::All, &bests(), &[1, 2, 3], |_| 0.0, &mut out);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn thread_greedy_keeps_per_thread_bests() {
+        let mut out = Vec::new();
+        resolve_global(Acceptor::ThreadGreedy, &bests(), &[], |_| 0.0, &mut out);
+        assert_eq!(out, vec![3, 7]); // thread 1 had nothing
+    }
+
+    #[test]
+    fn global_best_takes_minimum_phi() {
+        let mut out = Vec::new();
+        resolve_global(Acceptor::GlobalBest, &bests(), &[], |_| 0.0, &mut out);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn topk_selects_most_negative() {
+        let selected = [0u32, 1, 2, 3, 4];
+        let phi = [-0.1, -0.9, 0.0, -0.5, -0.3];
+        let mut out = Vec::new();
+        resolve_global(
+            Acceptor::GlobalTopK(3),
+            &[],
+            &selected,
+            |j| phi[j as usize],
+            &mut out,
+        );
+        assert_eq!(out, vec![1, 3, 4]); // sorted by j, phi<0 only
+    }
+
+    #[test]
+    fn topk_drops_nonnegative_phi() {
+        let selected = [0u32, 1];
+        let phi = [0.0, 0.0];
+        let mut out = Vec::new();
+        resolve_global(
+            Acceptor::GlobalTopK(2),
+            &[],
+            &selected,
+            |j| phi[j as usize],
+            &mut out,
+        );
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn prop_accepted_subset_of_selected() {
+        // the framework invariant of Sec. 2.3: J' ⊆ J for every policy
+        use crate::util::prop;
+        prop::check("J' subset of J", 100, |rng, size| {
+            let k = 2 + rng.below(2 * size.max(2));
+            let sel_n = 1 + rng.below(k);
+            let selected: Vec<u32> =
+                rng.sample_distinct(k, sel_n).into_iter().map(|j| j as u32).collect();
+            let phi: Vec<f64> = (0..k).map(|_| rng.range_f64(-1.0, 0.0)).collect();
+            let threads = 1 + rng.below(6);
+            // per-thread bests drawn from the selection chunks
+            let bests: Vec<ThreadBest> = (0..threads)
+                .map(|t| {
+                    let lo = selected.len() * t / threads;
+                    let hi = selected.len() * (t + 1) / threads;
+                    let mut b = ThreadBest::NONE;
+                    for &j in &selected[lo..hi] {
+                        b.consider(j, phi[j as usize], 0.1);
+                    }
+                    b
+                })
+                .collect();
+            let policies = [
+                Acceptor::All,
+                Acceptor::ThreadGreedy,
+                Acceptor::GlobalBest,
+                Acceptor::GlobalTopK(1 + rng.below(sel_n)),
+            ];
+            let sel_set: std::collections::HashSet<u32> =
+                selected.iter().copied().collect();
+            let mut out = Vec::new();
+            for policy in policies {
+                resolve_global(policy, &bests, &selected, |j| phi[j as usize], &mut out);
+                for &j in &out {
+                    if !sel_set.contains(&j) {
+                        return Err(format!("{policy:?}: {j} not selected"));
+                    }
+                }
+                // no duplicates in J'
+                let uniq: std::collections::HashSet<u32> = out.iter().copied().collect();
+                if uniq.len() != out.len() {
+                    return Err(format!("{policy:?}: duplicate accepts {out:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn consider_prefers_lower_phi_and_is_deterministic_on_ties() {
+        let mut b = ThreadBest::NONE;
+        b.consider(5, -0.3, 0.1);
+        b.consider(9, -0.3, 0.2); // tie: keeps first
+        assert_eq!(b.j, 5);
+        b.consider(2, -0.4, 0.3);
+        assert_eq!(b.j, 2);
+    }
+}

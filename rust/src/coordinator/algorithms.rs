@@ -1,0 +1,336 @@
+//! Named algorithm presets — the paper's Table 2 plus the sequential
+//! baselines and the §7 extensions.
+//!
+//! | Algorithm     | Select        | Accept        |
+//! |---------------|---------------|---------------|
+//! | CCD           | cyclic single | all           |
+//! | SCD           | random single | all           |
+//! | SHOTGUN       | rand subset P*| all           |
+//! | THREAD-GREEDY | rand subset   | greedy/thread |
+//! | GREEDY        | all           | greedy        |
+//! | COLORING      | rand color    | all           |
+//! | TOPK (§7)     | rand subset   | best K global |
+//! | BLOCK-SHOTGUN (§7 "soft coloring") | per-block rand subsets | all |
+
+use super::accept::Acceptor;
+use super::select::Selector;
+use crate::coloring::{color_features, Coloring, Strategy};
+use crate::linalg::{shotgun_pstar, spectral_radius_xtx};
+use crate::sparse::CscMatrix;
+use crate::util::Pcg64;
+
+/// The algorithm catalogue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Ccd,
+    Scd,
+    Shotgun,
+    ThreadGreedy,
+    Greedy,
+    Coloring,
+    TopK,
+    BlockShotgun,
+}
+
+impl Algorithm {
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "ccd" => Algorithm::Ccd,
+            "scd" => Algorithm::Scd,
+            "shotgun" => Algorithm::Shotgun,
+            "thread-greedy" | "thread_greedy" => Algorithm::ThreadGreedy,
+            "greedy" => Algorithm::Greedy,
+            "coloring" => Algorithm::Coloring,
+            "topk" => Algorithm::TopK,
+            "block-shotgun" | "block_shotgun" => Algorithm::BlockShotgun,
+            other => anyhow::bail!(
+                "unknown algorithm '{other}' \
+                 (ccd|scd|shotgun|thread-greedy|greedy|coloring|topk|block-shotgun)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Ccd => "ccd",
+            Algorithm::Scd => "scd",
+            Algorithm::Shotgun => "shotgun",
+            Algorithm::ThreadGreedy => "thread-greedy",
+            Algorithm::Greedy => "greedy",
+            Algorithm::Coloring => "coloring",
+            Algorithm::TopK => "topk",
+            Algorithm::BlockShotgun => "block-shotgun",
+        }
+    }
+
+    /// The four algorithms of the paper's experiments (Sec. 4.1).
+    pub fn paper_set() -> [Algorithm; 4] {
+        [
+            Algorithm::Shotgun,
+            Algorithm::ThreadGreedy,
+            Algorithm::Greedy,
+            Algorithm::Coloring,
+        ]
+    }
+
+    /// Does this algorithm need the coloring preprocessing?
+    pub fn needs_coloring(&self) -> bool {
+        matches!(self, Algorithm::Coloring)
+    }
+
+    /// Does this algorithm need the spectral-radius / P* estimate?
+    pub fn needs_pstar(&self) -> bool {
+        matches!(self, Algorithm::Shotgun | Algorithm::BlockShotgun)
+    }
+}
+
+/// Everything precomputed the policies may need.
+pub struct Preprocessed {
+    pub pstar: Option<usize>,
+    pub rho: Option<f64>,
+    pub coloring: Option<Coloring>,
+}
+
+impl Preprocessed {
+    /// Run the preprocessing an algorithm requires (spectral radius for
+    /// SHOTGUN-family, coloring for COLORING).
+    pub fn for_algorithm(
+        alg: Algorithm,
+        x: &CscMatrix,
+        coloring_strategy: Strategy,
+        seed: u64,
+    ) -> Self {
+        let (pstar, rho) = if alg.needs_pstar() {
+            let est = spectral_radius_xtx(x, 200, 1e-6, seed ^ 0x5EC7);
+            (Some(shotgun_pstar(x.n_cols(), est.rho)), Some(est.rho))
+        } else {
+            (None, None)
+        };
+        let coloring = alg
+            .needs_coloring()
+            .then(|| color_features(x, coloring_strategy, seed ^ 0xC0102));
+        Self {
+            pstar,
+            rho,
+            coloring,
+        }
+    }
+
+    pub fn none() -> Self {
+        Self {
+            pstar: None,
+            rho: None,
+            coloring: None,
+        }
+    }
+}
+
+/// Policy pair an algorithm resolves to.
+pub struct Instantiation {
+    pub selector: Selector,
+    pub acceptor: Acceptor,
+}
+
+/// Resolve an algorithm into (Selector, Acceptor) for a concrete problem.
+///
+/// * `select_size` overrides the selection size (0 = default: P* for
+///   SHOTGUN, `threads * 32` for THREAD-GREEDY/TopK).
+/// * `accept_k` overrides TopK's budget (0 = `threads`).
+pub fn instantiate(
+    alg: Algorithm,
+    k: usize,
+    threads: usize,
+    select_size: usize,
+    accept_k: usize,
+    pre: &Preprocessed,
+    seed: u64,
+) -> anyhow::Result<Instantiation> {
+    let rng = Pcg64::new(seed, 0xA160);
+    let inst = match alg {
+        Algorithm::Ccd => Instantiation {
+            selector: Selector::Cyclic { next: 0, k },
+            acceptor: Acceptor::All,
+        },
+        Algorithm::Scd => Instantiation {
+            selector: Selector::Stochastic { rng, k },
+            acceptor: Acceptor::All,
+        },
+        Algorithm::Shotgun => {
+            let size = if select_size > 0 {
+                select_size
+            } else {
+                pre.pstar
+                    .ok_or_else(|| anyhow::anyhow!("shotgun needs P* preprocessing"))?
+            };
+            Instantiation {
+                selector: Selector::RandomSubset { rng, k, size },
+                acceptor: Acceptor::All,
+            }
+        }
+        Algorithm::ThreadGreedy => {
+            // paper: random set, each thread keeps its best; default
+            // gives each thread a pool of 32 candidates
+            let size = if select_size > 0 {
+                select_size
+            } else {
+                (threads * 32).min(k)
+            };
+            Instantiation {
+                selector: Selector::RandomSubset { rng, k, size },
+                acceptor: Acceptor::ThreadGreedy,
+            }
+        }
+        Algorithm::Greedy => Instantiation {
+            selector: Selector::All { k },
+            acceptor: Acceptor::GlobalBest,
+        },
+        Algorithm::Coloring => {
+            let coloring = pre
+                .coloring
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("coloring algorithm needs a coloring"))?;
+            Instantiation {
+                selector: Selector::RandomColor { rng, coloring },
+                acceptor: Acceptor::All,
+            }
+        }
+        Algorithm::TopK => {
+            let size = if select_size > 0 {
+                select_size
+            } else {
+                (threads * 32).min(k)
+            };
+            let kk = if accept_k > 0 { accept_k } else { threads };
+            Instantiation {
+                selector: Selector::RandomSubset { rng, k, size },
+                acceptor: Acceptor::GlobalTopK(kk),
+            }
+        }
+        Algorithm::BlockShotgun => {
+            // §7: partition columns into `threads` blocks; per-block P*_b
+            // approximated by P* / blocks (a faithful "soft coloring"
+            // would estimate rho per block; the ablation bench compares).
+            let blocks = threads.max(2);
+            let total = if select_size > 0 {
+                select_size
+            } else {
+                pre.pstar
+                    .ok_or_else(|| anyhow::anyhow!("block-shotgun needs P*"))?
+            };
+            let per = (total / blocks).max(1);
+            Instantiation {
+                selector: Selector::BlockSubset {
+                    rng,
+                    k,
+                    blocks,
+                    per_block: vec![per; blocks],
+                },
+                acceptor: Acceptor::All,
+            }
+        }
+    };
+    Ok(inst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+
+    fn matrix() -> CscMatrix {
+        let mut rng = Pcg64::seeded(1);
+        let mut b = CooBuilder::new(20, 40);
+        for j in 0..40 {
+            for _ in 0..3 {
+                b.push(rng.below(20), j, 1.0);
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for alg in [
+            Algorithm::Ccd,
+            Algorithm::Scd,
+            Algorithm::Shotgun,
+            Algorithm::ThreadGreedy,
+            Algorithm::Greedy,
+            Algorithm::Coloring,
+            Algorithm::TopK,
+            Algorithm::BlockShotgun,
+        ] {
+            assert_eq!(Algorithm::by_name(alg.name()).unwrap(), alg);
+        }
+        assert!(Algorithm::by_name("sgd").is_err());
+    }
+
+    #[test]
+    fn preprocessing_matches_needs() {
+        let x = matrix();
+        let pre = Preprocessed::for_algorithm(Algorithm::Shotgun, &x, Strategy::Greedy, 1);
+        assert!(pre.pstar.is_some() && pre.coloring.is_none());
+        let pre = Preprocessed::for_algorithm(Algorithm::Coloring, &x, Strategy::Greedy, 1);
+        assert!(pre.pstar.is_none() && pre.coloring.is_some());
+        let pre = Preprocessed::for_algorithm(Algorithm::Greedy, &x, Strategy::Greedy, 1);
+        assert!(pre.pstar.is_none() && pre.coloring.is_none());
+    }
+
+    #[test]
+    fn instantiate_all() {
+        let x = matrix();
+        for alg in [
+            Algorithm::Ccd,
+            Algorithm::Scd,
+            Algorithm::Shotgun,
+            Algorithm::ThreadGreedy,
+            Algorithm::Greedy,
+            Algorithm::Coloring,
+            Algorithm::TopK,
+            Algorithm::BlockShotgun,
+        ] {
+            let pre =
+                Preprocessed::for_algorithm(alg, &x, Strategy::Greedy, 7);
+            let inst = instantiate(alg, x.n_cols(), 4, 0, 0, &pre, 7).unwrap();
+            // smoke: selector produces a nonempty in-range selection
+            let mut sel = inst.selector;
+            let mut out = Vec::new();
+            sel.select(&mut out);
+            assert!(!out.is_empty());
+            assert!(out.iter().all(|&j| (j as usize) < x.n_cols()));
+        }
+    }
+
+    #[test]
+    fn shotgun_without_pstar_errors() {
+        assert!(instantiate(
+            Algorithm::Shotgun,
+            10,
+            2,
+            0,
+            0,
+            &Preprocessed::none(),
+            1
+        )
+        .is_err());
+        // explicit select_size sidesteps preprocessing
+        assert!(instantiate(
+            Algorithm::Shotgun,
+            10,
+            2,
+            5,
+            0,
+            &Preprocessed::none(),
+            1
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn thread_greedy_defaults_scale_with_threads() {
+        let pre = Preprocessed::none();
+        let inst = instantiate(Algorithm::ThreadGreedy, 1000, 8, 0, 0, &pre, 1).unwrap();
+        assert_eq!(inst.selector.expected_size(), 256.0);
+        assert_eq!(inst.acceptor, Acceptor::ThreadGreedy);
+    }
+}

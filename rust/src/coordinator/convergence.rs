@@ -1,0 +1,152 @@
+//! Convergence tracking: the (time, objective, NNZ) history behind the
+//! paper's Figure 1, plus stopping criteria.
+
+/// One history sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Record {
+    pub elapsed_secs: f64,
+    pub iter: usize,
+    /// Total coordinate updates so far (Figure 2's numerator).
+    pub updates: u64,
+    /// Full objective F(w) + lam |w|_1.
+    pub objective: f64,
+    /// Nonzero weights (Figure 1's NNZ curves).
+    pub nnz: usize,
+}
+
+/// The solver's convergence log.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub records: Vec<Record>,
+}
+
+impl History {
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&Record> {
+        self.records.last()
+    }
+
+    pub fn best_objective(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.objective)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Relative improvement between the last two records (used by the
+    /// `tol` stop rule).
+    pub fn last_rel_improvement(&self) -> f64 {
+        let n = self.records.len();
+        if n < 2 {
+            return f64::INFINITY;
+        }
+        let prev = self.records[n - 2].objective;
+        let cur = self.records[n - 1].objective;
+        (prev - cur) / prev.abs().max(1e-300)
+    }
+
+    /// First time the objective got within `(1 + rel_gap)` of its final
+    /// best — a "time to quality" summary used by the bench harness.
+    pub fn time_to_within(&self, rel_gap: f64) -> Option<f64> {
+        let best = self.best_objective();
+        if !best.is_finite() {
+            return None;
+        }
+        let target = best + rel_gap * best.abs().max(1e-300);
+        self.records
+            .iter()
+            .find(|r| r.objective <= target)
+            .map(|r| r.elapsed_secs)
+    }
+
+    /// Serialize as CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("elapsed_secs,iter,updates,objective,nnz\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{:.6},{},{},{:.9},{}\n",
+                r.elapsed_secs, r.iter, r.updates, r.objective, r.nnz
+            ));
+        }
+        out
+    }
+}
+
+/// Why the solver stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    MaxIters,
+    MaxSeconds,
+    Tolerance,
+    /// Objective became non-finite (divergence — e.g. Shotgun past P*).
+    Diverged,
+}
+
+impl std::fmt::Display for StopReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            StopReason::MaxIters => "max-iters",
+            StopReason::MaxSeconds => "max-seconds",
+            StopReason::Tolerance => "tolerance",
+            StopReason::Diverged => "diverged",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: f64, obj: f64) -> Record {
+        Record {
+            elapsed_secs: t,
+            iter: 0,
+            updates: 0,
+            objective: obj,
+            nnz: 0,
+        }
+    }
+
+    #[test]
+    fn improvement_tracking() {
+        let mut h = History::default();
+        assert_eq!(h.last_rel_improvement(), f64::INFINITY);
+        h.push(rec(0.0, 1.0));
+        h.push(rec(1.0, 0.9));
+        assert!((h.last_rel_improvement() - 0.1).abs() < 1e-12);
+        h.push(rec(2.0, 0.9));
+        assert_eq!(h.last_rel_improvement(), 0.0);
+        assert_eq!(h.best_objective(), 0.9);
+    }
+
+    #[test]
+    fn time_to_within() {
+        let mut h = History::default();
+        h.push(rec(0.0, 2.0));
+        h.push(rec(1.0, 1.0));
+        h.push(rec(2.0, 0.5));
+        h.push(rec(3.0, 0.5));
+        assert_eq!(h.time_to_within(0.0), Some(2.0));
+        assert_eq!(h.time_to_within(1.1), Some(1.0)); // within 0.5*(1+1.1)=1.05
+        assert_eq!(h.time_to_within(10.0), Some(0.0));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut h = History::default();
+        h.push(Record {
+            elapsed_secs: 0.5,
+            iter: 3,
+            updates: 12,
+            objective: 0.25,
+            nnz: 7,
+        });
+        let csv = h.to_csv();
+        assert!(csv.starts_with("elapsed_secs,iter,updates,objective,nnz\n"));
+        assert!(csv.contains("0.500000,3,12,0.250000000,7\n"));
+    }
+}

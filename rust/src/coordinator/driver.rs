@@ -1,0 +1,228 @@
+//! High-level entry point: config -> dataset -> preprocessing -> solve.
+//!
+//! This is what the `gencd` binary, the examples, and the bench harness
+//! call. It owns everything around the engine: dataset resolution,
+//! column normalization, P*/coloring preprocessing, backend selection,
+//! and result packaging.
+
+use super::algorithms::{instantiate, Algorithm, Preprocessed};
+use super::convergence::{History, StopReason};
+use super::engine::{self, BlockProposer, EngineConfig};
+use super::metrics::MetricsSnapshot;
+use super::problem::{Problem, SharedState};
+use crate::coloring::Strategy;
+use crate::config::{Backend, RunConfig};
+use crate::data;
+use crate::loss;
+use crate::sparse::io::Dataset;
+use crate::util::Timer;
+
+/// Everything a run produces (the unit of the bench harness).
+pub struct SolveResult {
+    pub algorithm: Algorithm,
+    pub w: Vec<f64>,
+    pub objective: f64,
+    pub nnz: usize,
+    pub history: History,
+    pub metrics: MetricsSnapshot,
+    pub stop: StopReason,
+    pub elapsed_secs: f64,
+    /// Preprocessing outputs (Table 3 columns).
+    pub pstar: Option<usize>,
+    pub rho: Option<f64>,
+    pub coloring_colors: Option<usize>,
+    pub coloring_mean_size: Option<f64>,
+    pub coloring_secs: Option<f64>,
+    pub preprocess_secs: f64,
+    pub dataset: String,
+}
+
+/// Load (or generate) the dataset a config names.
+pub fn load_dataset(cfg: &RunConfig) -> anyhow::Result<Dataset> {
+    let mut ds = match &cfg.dataset.path {
+        Some(path) if path.ends_with(".bin") => {
+            crate::sparse::io::read_binary(std::path::Path::new(path))?
+        }
+        Some(path) => {
+            let f = std::fs::File::open(path)
+                .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
+            crate::sparse::io::read_libsvm(f, None)?
+        }
+        None => data::by_name(&cfg.dataset.name)?,
+    };
+    if cfg.dataset.normalize {
+        ds.x.normalize_columns();
+    }
+    Ok(ds)
+}
+
+/// Run a full experiment described by `cfg`.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<SolveResult> {
+    let ds = load_dataset(cfg)?;
+    run_on(cfg, ds, None)
+}
+
+/// Run on an already-loaded dataset (bench harness reuses datasets
+/// across algorithms). Applies `cfg.dataset.normalize` (idempotent for
+/// already-normalized data). `block_proposer` overrides the Propose
+/// backend.
+pub fn run_on(
+    cfg: &RunConfig,
+    mut ds: Dataset,
+    block_proposer: Option<&mut dyn BlockProposer>,
+) -> anyhow::Result<SolveResult> {
+    if cfg.dataset.normalize {
+        ds.x.normalize_columns();
+    }
+    anyhow::ensure!(
+        !(cfg.solver.backend == Backend::DenseBlockHlo && block_proposer.is_none()),
+        "backend=hlo requires a block proposer (runtime::propose_backend) — \
+         use gencd::runtime::HloProposer::from_manifest"
+    );
+
+    let alg = Algorithm::by_name(&cfg.solver.algorithm)?;
+    let strategy = Strategy::by_name(&cfg.solver.coloring_strategy)?;
+    let loss = loss::by_name(&cfg.problem.loss)?;
+    let dataset_name = ds.name.clone();
+
+    let pre_timer = Timer::start();
+    let pre = Preprocessed::for_algorithm(alg, &ds.x, strategy, cfg.solver.seed);
+    let preprocess_secs = pre_timer.elapsed_secs();
+
+    let problem = Problem::new(ds, loss, cfg.problem.lam);
+    let inst = instantiate(
+        alg,
+        problem.n_features(),
+        cfg.solver.threads,
+        cfg.solver.select_size,
+        cfg.solver.accept_k,
+        &pre,
+        cfg.solver.seed,
+    )?;
+
+    let engine_cfg = EngineConfig {
+        threads: cfg.solver.threads,
+        acceptor: inst.acceptor,
+        line_search_steps: cfg.solver.line_search_steps,
+        max_iters: cfg.solver.max_iters,
+        max_seconds: cfg.solver.max_seconds,
+        tol: cfg.solver.tol,
+        log_every: cfg.solver.log_every,
+        force_dloss: None,
+        // COLORING's color classes are conflict-free: the paper's
+        // synchronization-free Update (Sec. 4.2) — see §Perf
+        conflict_free_update: alg == Algorithm::Coloring,
+    };
+
+    let state = SharedState::new(problem.n_samples(), problem.n_features());
+    let out = engine::solve_from(&problem, &state, inst.selector, &engine_cfg, block_proposer);
+
+    let result = SolveResult {
+        algorithm: alg,
+        w: out.w,
+        objective: out.objective,
+        nnz: out.nnz,
+        history: out.history,
+        metrics: out.metrics,
+        stop: out.stop,
+        elapsed_secs: out.elapsed_secs,
+        pstar: pre.pstar,
+        rho: pre.rho,
+        coloring_colors: pre.coloring.as_ref().map(|c| c.n_colors()),
+        coloring_mean_size: pre.coloring.as_ref().map(|c| c.mean_class_size()),
+        coloring_secs: pre.coloring.as_ref().map(|c| c.elapsed_secs),
+        preprocess_secs,
+        dataset: dataset_name,
+    };
+
+    if let Some(csv) = &cfg.csv {
+        std::fs::write(csv, result.history.to_csv())
+            .map_err(|e| anyhow::anyhow!("writing {csv}: {e}"))?;
+    }
+    Ok(result)
+}
+
+impl SolveResult {
+    /// One-line summary (CLI output).
+    pub fn summary(&self) -> String {
+        format!(
+            "{:>13} | obj {:.6} | nnz {:>6} | updates {:>9} ({:.2e}/s) | iters {:>7} | {:>6.2}s | stop {}",
+            self.algorithm.name(),
+            self.objective,
+            self.nnz,
+            self.metrics.updates,
+            self.metrics.updates_per_sec(self.elapsed_secs),
+            self.metrics.iterations,
+            self.elapsed_secs,
+            self.stop,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(alg: &str) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.dataset.name = "dorothea@0.02".into();
+        cfg.problem.lam = 1e-3;
+        cfg.solver.algorithm = alg.into();
+        cfg.solver.threads = 2;
+        cfg.solver.max_iters = 120;
+        cfg.solver.max_seconds = 15.0;
+        cfg
+    }
+
+    #[test]
+    fn all_paper_algorithms_descend_on_dorothea_twin() {
+        for alg in ["shotgun", "thread-greedy", "greedy", "coloring"] {
+            let res = run(&base_cfg(alg)).unwrap();
+            let first = res.history.records.first().unwrap().objective;
+            assert!(
+                res.objective < first,
+                "{alg}: {} -> {}",
+                first,
+                res.objective
+            );
+            assert!(res.metrics.updates > 0, "{alg} made no updates");
+        }
+    }
+
+    #[test]
+    fn preprocessing_surfaced_in_result() {
+        let res = run(&base_cfg("shotgun")).unwrap();
+        assert!(res.pstar.unwrap() >= 1);
+        assert!(res.rho.unwrap() > 0.0);
+        let res = run(&base_cfg("coloring")).unwrap();
+        assert!(res.coloring_colors.unwrap() >= 1);
+        assert!(res.coloring_mean_size.unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("gencd_driver_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hist.csv");
+        let mut cfg = base_cfg("scd");
+        cfg.solver.max_iters = 30;
+        cfg.csv = Some(path.to_string_lossy().into_owned());
+        run(&cfg).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("elapsed_secs,"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn hlo_backend_without_proposer_errors() {
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.backend = Backend::DenseBlockHlo;
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn unknown_algorithm_errors() {
+        let cfg = base_cfg("adam");
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -1,0 +1,704 @@
+//! The parallel GenCD iteration engine — the OpenMP `parallel for`
+//! analogue (Sec. 4.2 Implementation).
+//!
+//! A pool of `threads` workers (the calling thread is worker 0, the
+//! *leader*) runs the four-step iteration in lock-step, separated by
+//! barriers (OpenMP's implicit region barriers):
+//!
+//! ```text
+//!   leader: Select J, decide gradient path, check stop   |  workers wait
+//!   ── barrier ──
+//!   all: refresh dloss chunk (when precomputation wins)
+//!   ── barrier ──
+//!   all: Propose over static chunk of J  (Algorithm 4)
+//!   ── barrier ──
+//!   leader: Accept -> J'                  (policy-dependent reduction)
+//!   ── barrier ──
+//!   all: Update over static chunk of J'   (Algorithm 3, atomic z)
+//!   ── barrier ──
+//!   leader: metrics, objective log, convergence checks
+//! ```
+//!
+//! Work is divided with *static contiguous chunking* (the paper's
+//! `schedule(static)`): thread t of T owns `len*t/T .. len*(t+1)/T`.
+//! Shared numeric state is atomic (see [`super::problem::SharedState`]);
+//! each phase gives every element a unique writer, and barriers provide
+//! the happens-before edges, so relaxed ordering suffices throughout.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Barrier, Mutex, RwLock};
+
+use super::accept::{resolve_global, Acceptor, ThreadBest};
+use super::convergence::{History, Record, StopReason};
+use super::linesearch;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::problem::{Problem, SharedState};
+use super::propose::{self, Proposal};
+use super::select::Selector;
+use crate::loss;
+use crate::util::Timer;
+
+/// Engine knobs (a subset of [`crate::config::SolverConfig`], resolved).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub threads: usize,
+    pub acceptor: Acceptor,
+    /// Sec. 4.1 refinement steps on accepted proposals.
+    pub line_search_steps: usize,
+    pub max_iters: usize,
+    pub max_seconds: f64,
+    /// Relative-improvement stop (0 disables). Applied over logged
+    /// objectives, three consecutive hits required.
+    pub tol: f64,
+    /// Log cadence in iterations; 0 = time-based (every ~50 ms).
+    pub log_every: usize,
+    /// Force the gradient path: `Some(true)` = always precompute dloss,
+    /// `Some(false)` = always on-the-fly, `None` = per-iteration
+    /// heuristic (ablation: `benches/ablations.rs`).
+    pub force_dloss: Option<bool>,
+    /// Update `z` with plain load+store instead of the CAS fetch-add.
+    /// Safe when every `z[i]` has a unique writer per Update phase:
+    /// single-threaded runs, or COLORING's conflict-free color classes
+    /// (paper Sec. 4.2: "no need for synchronization in the Update step
+    /// of the COLORING algorithm"). ~9x faster per nonzero (§Perf).
+    pub conflict_free_update: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            threads: 1,
+            acceptor: Acceptor::All,
+            line_search_steps: 0,
+            max_iters: usize::MAX,
+            max_seconds: 10.0,
+            tol: 0.0,
+            log_every: 0,
+            force_dloss: None,
+            conflict_free_update: false,
+        }
+    }
+}
+
+/// Pluggable Propose backend for a whole selected block — how the
+/// PJRT/HLO path (DESIGN.md §2) slots into the engine. Runs on the
+/// leader, which is the *calling* thread (never a spawned one), so
+/// implementations need not be `Send`; workers are parked at a barrier
+/// during the call, giving it effectively exclusive access to the
+/// shared arrays.
+pub trait BlockProposer {
+    /// Compute proposals for every `j` in `selected`, storing
+    /// `delta[j]` / `phi[j]` into `state`.
+    fn propose_block(
+        &mut self,
+        problem: &Problem,
+        state: &SharedState,
+        selected: &[u32],
+    ) -> anyhow::Result<()>;
+
+    fn name(&self) -> &str;
+}
+
+/// Outcome of a solve.
+pub struct SolveOutput {
+    pub w: Vec<f64>,
+    pub objective: f64,
+    pub nnz: usize,
+    pub history: History,
+    pub metrics: MetricsSnapshot,
+    pub stop: StopReason,
+    pub elapsed_secs: f64,
+}
+
+/// Iteration plan: written by the leader, read by workers. The RwLock is
+/// uncontended outside phase edges (reads happen strictly after the
+/// barrier following the leader's write).
+struct Plan {
+    selected: Vec<u32>,
+    accepted: Vec<u32>,
+    use_dloss: bool,
+    /// Propose runs on the leader via the block proposer (HLO backend);
+    /// workers skip the sparse propose loop.
+    hlo: bool,
+    stop: Option<StopReason>,
+}
+
+/// Static contiguous chunk of `0..len` owned by thread `tid` of `t`.
+#[inline]
+pub fn chunk(len: usize, tid: usize, threads: usize) -> std::ops::Range<usize> {
+    let lo = len * tid / threads;
+    let hi = len * (tid + 1) / threads;
+    lo..hi
+}
+
+/// Barrier that compiles to nothing for single-thread runs (§Perf: a
+/// 1-party `std::sync::Barrier` still takes a mutex; CCD/SCD and the
+/// Fig. 2 T=1 anchors run millions of tiny iterations).
+enum PhaseBarrier {
+    Noop,
+    Real(Barrier),
+}
+
+impl PhaseBarrier {
+    fn new(threads: usize) -> Self {
+        if threads <= 1 {
+            PhaseBarrier::Noop
+        } else {
+            PhaseBarrier::Real(Barrier::new(threads))
+        }
+    }
+
+    #[inline]
+    fn wait(&self) {
+        if let PhaseBarrier::Real(b) = self {
+            b.wait();
+        }
+    }
+}
+
+/// Run GenCD from the zero vector.
+pub fn solve(problem: &Problem, selector: Selector, cfg: &EngineConfig) -> SolveOutput {
+    let state = SharedState::new(problem.n_samples(), problem.n_features());
+    solve_from(problem, &state, selector, cfg, None)
+}
+
+/// Run GenCD from existing state (warm start), optionally with a custom
+/// block-propose backend.
+pub fn solve_from(
+    problem: &Problem,
+    state: &SharedState,
+    selector: Selector,
+    cfg: &EngineConfig,
+    block_proposer: Option<&mut dyn BlockProposer>,
+) -> SolveOutput {
+    let threads = cfg.threads.max(1);
+    let n = problem.n_samples();
+    let mean_col_nnz = problem.x.mean_col_nnz();
+    let unsync_update = cfg.conflict_free_update || threads == 1;
+    // per-thread best reductions are only consumed by the greedy accept
+    // policies; skip the bookkeeping for All / TopK (§Perf)
+    let need_best = matches!(
+        cfg.acceptor,
+        Acceptor::ThreadGreedy | Acceptor::GlobalBest
+    );
+
+    let plan = RwLock::new(Plan {
+        selected: Vec::new(),
+        accepted: Vec::new(),
+        use_dloss: false,
+        hlo: false,
+        stop: None,
+    });
+    let barrier = PhaseBarrier::new(threads);
+    let metrics = Metrics::default();
+    let bests: Vec<Mutex<ThreadBest>> =
+        (0..threads).map(|_| Mutex::new(ThreadBest::NONE)).collect();
+    // Leader-only bookkeeping, moved into the leader closure.
+    let mut leader_state = LeaderState {
+        selector,
+        history: History::default(),
+        timer: Timer::start(),
+        last_log_at: -1.0,
+        tol_hits: 0,
+        iter: 0,
+        block_proposer,
+    };
+
+    let run_worker = |tid: usize, leader: Option<&mut LeaderState>| {
+        let mut leader = leader;
+        // leader-only chained phase timestamps: one clock read per phase
+        // boundary instead of start/stop pairs (§Perf — iterations can
+        // be sub-microsecond)
+        let mut mark = std::time::Instant::now();
+        macro_rules! lap {
+            ($counter:ident) => {
+                if tid == 0 {
+                    let now = std::time::Instant::now();
+                    metrics
+                        .$counter
+                        .fetch_add((now - mark).as_nanos() as u64, Relaxed);
+                    mark = now;
+                }
+            };
+        }
+        loop {
+            // ---- leader: plan the iteration -------------------------
+            if let Some(ls) = leader.as_deref_mut() {
+                let mut p = plan.write().unwrap();
+                plan_iteration(problem, state, cfg, ls, &metrics, &mut p, mean_col_nnz);
+            }
+            barrier.wait();
+            lap!(select_nanos);
+
+            let (stop, use_dloss, hlo_mode, selected_len) = {
+                let p = plan.read().unwrap();
+                (p.stop, p.use_dloss, p.hlo, p.selected.len())
+            };
+            if stop.is_some() {
+                break;
+            }
+
+            // ---- dloss refresh (parallel over samples) ---------------
+            if use_dloss {
+                let r = chunk(n, tid, threads);
+                propose::refresh_dloss(problem, state, r.start, r.end);
+            }
+            barrier.wait();
+
+            // ---- Propose (parallel over J) ---------------------------
+            {
+                let p = plan.read().unwrap();
+                if let Some(ls) = leader.as_deref_mut() {
+                    if let Some(bp) = ls.block_proposer.as_deref_mut() {
+                        bp.propose_block(problem, state, &p.selected)
+                            .expect("block proposer failed");
+                    }
+                }
+                if !hlo_mode {
+                    let my = chunk(p.selected.len(), tid, threads);
+                    let mut best = ThreadBest::NONE;
+                    let mut nnz_work = 0u64;
+                    for &j in &p.selected[my] {
+                        let pr = propose::propose(problem, state, j as usize, use_dloss);
+                        store_proposal(state, &pr);
+                        nnz_work += problem.x.col_nnz(j as usize) as u64;
+                        if need_best {
+                            best.consider(j, pr.phi, pr.delta);
+                        }
+                    }
+                    metrics.add_propose_nnz(nnz_work);
+                    if need_best {
+                        *bests[tid].lock().unwrap() = best;
+                    }
+                }
+            }
+            barrier.wait();
+            lap!(propose_nanos);
+
+            // ---- Accept (leader) -------------------------------------
+            // All-policy fast path: J' == J; the Update phase reads
+            // `selected` directly (plan.accept_is_select), so the write
+            // lock and the copy are skipped entirely (§Perf)
+            if leader.is_some() && cfg.acceptor != Acceptor::All {
+                let mut p = plan.write().unwrap();
+                if hlo_mode {
+                    // derive per-chunk bests from the phi array so the
+                    // accept policies behave identically to sparse mode
+                    for t in 0..threads {
+                        let my = chunk(p.selected.len(), t, threads);
+                        let mut best = ThreadBest::NONE;
+                        for &j in &p.selected[my] {
+                            best.consider(
+                                j,
+                                state.phi[j as usize].load(Relaxed),
+                                state.delta[j as usize].load(Relaxed),
+                            );
+                        }
+                        *bests[t].lock().unwrap() = best;
+                    }
+                }
+                let bests_snapshot: Vec<ThreadBest> =
+                    bests.iter().map(|b| *b.lock().unwrap()).collect();
+                let Plan {
+                    selected, accepted, ..
+                } = &mut *p;
+                resolve_global(
+                    cfg.acceptor,
+                    &bests_snapshot,
+                    selected,
+                    |j| state.phi[j as usize].load(Relaxed),
+                    accepted,
+                );
+            }
+            if tid == 0 {
+                metrics.add_proposals(selected_len as u64);
+            }
+            barrier.wait();
+            lap!(accept_nanos);
+
+            // ---- Update (parallel over J') ---------------------------
+            {
+                let p = plan.read().unwrap();
+                let accepted: &[u32] = if cfg.acceptor == Acceptor::All {
+                    &p.selected
+                } else {
+                    &p.accepted
+                };
+                let my = chunk(accepted.len(), tid, threads);
+                let mut applied = 0u64;
+                for &j in &accepted[my] {
+                    let j = j as usize;
+                    let d0 = state.delta[j].load(Relaxed);
+                    if d0 == 0.0 && cfg.line_search_steps == 0 {
+                        continue;
+                    }
+                    let d = linesearch::refine(problem, state, j, d0, cfg.line_search_steps);
+                    if d == 0.0 {
+                        continue;
+                    }
+                    // unique writer for w[j] within this phase
+                    let wj = state.w[j].load(Relaxed);
+                    state.w[j].store(wj + d, Relaxed);
+                    let (rows, vals) = problem.x.col(j);
+                    if unsync_update {
+                        // unique writer per z[i] too (T=1 or coloring):
+                        // plain load+store, no CAS (§Perf)
+                        for (&i, &v) in rows.iter().zip(vals) {
+                            let zi = &state.z[i as usize];
+                            zi.store(zi.load(Relaxed) + d * v, Relaxed);
+                        }
+                    } else {
+                        // z updates may collide across columns -> atomic add
+                        for (&i, &v) in rows.iter().zip(vals) {
+                            state.z[i as usize].fetch_add(d * v, Relaxed);
+                        }
+                    }
+                    applied += 1;
+                }
+                metrics.add_updates(applied);
+            }
+            barrier.wait();
+            lap!(update_nanos);
+            // loop; leader re-plans at the top
+        }
+    };
+
+    if threads == 1 {
+        run_worker(0, Some(&mut leader_state));
+    } else {
+        std::thread::scope(|scope| {
+            let run_worker = &run_worker;
+            for tid in 1..threads {
+                scope.spawn(move || run_worker(tid, None));
+            }
+            run_worker(0, Some(&mut leader_state));
+        });
+    }
+
+    let elapsed = leader_state.timer.elapsed_secs();
+    let w = state.w_snapshot();
+    let z = state.z_snapshot();
+    let objective = problem.objective(&w, &z);
+    let stop = plan.read().unwrap().stop.unwrap_or(StopReason::MaxIters);
+    SolveOutput {
+        nnz: loss::nnz(&w),
+        w,
+        objective,
+        history: leader_state.history,
+        metrics: metrics.snapshot(),
+        stop,
+        elapsed_secs: elapsed,
+    }
+}
+
+struct LeaderState<'a> {
+    selector: Selector,
+    history: History,
+    timer: Timer,
+    last_log_at: f64,
+    tol_hits: u32,
+    iter: usize,
+    block_proposer: Option<&'a mut dyn BlockProposer>,
+}
+
+fn plan_iteration(
+    problem: &Problem,
+    state: &SharedState,
+    cfg: &EngineConfig,
+    ls: &mut LeaderState,
+    metrics: &Metrics,
+    plan: &mut Plan,
+    mean_col_nnz: f64,
+) {
+    let elapsed = ls.timer.elapsed_secs();
+
+    // ---- logging + divergence/tolerance checks ---------------------
+    let should_log = match cfg.log_every {
+        0 => elapsed - ls.last_log_at >= 0.05 || ls.iter == 0,
+        every => ls.iter % every == 0,
+    };
+    if should_log {
+        let t0 = Timer::start();
+        let w = state.w_snapshot();
+        let z = state.z_snapshot();
+        let objective = problem.objective(&w, &z);
+        ls.history.push(Record {
+            elapsed_secs: elapsed,
+            iter: ls.iter,
+            updates: metrics.updates.load(Relaxed),
+            objective,
+            nnz: loss::nnz(&w),
+        });
+        ls.last_log_at = elapsed;
+        if !objective.is_finite() || objective > 1e12 {
+            plan.stop = Some(StopReason::Diverged);
+        }
+        if cfg.tol > 0.0 {
+            let imp = ls.history.last_rel_improvement();
+            if imp.abs() < cfg.tol {
+                ls.tol_hits += 1;
+            } else {
+                ls.tol_hits = 0;
+            }
+            if ls.tol_hits >= 3 {
+                plan.stop = Some(StopReason::Tolerance);
+            }
+        }
+        metrics
+            .log_nanos
+            .fetch_add((t0.elapsed_secs() * 1e9) as u64, Relaxed);
+    }
+
+    // ---- stop checks ------------------------------------------------
+    if plan.stop.is_none() {
+        if ls.iter >= cfg.max_iters {
+            plan.stop = Some(StopReason::MaxIters);
+        } else if elapsed >= cfg.max_seconds {
+            plan.stop = Some(StopReason::MaxSeconds);
+        }
+    }
+    if plan.stop.is_some() {
+        return;
+    }
+
+    // ---- Select ------------------------------------------------------
+    ls.selector.select(&mut plan.selected);
+    plan.hlo = ls.block_proposer.is_some();
+
+    // ---- gradient-path heuristic --------------------------------------
+    // Precomputing dloss costs n `ell'` evaluations; on-the-fly costs one
+    // per traversed nonzero (~|J| * mean_col_nnz). Pick the cheaper.
+    plan.use_dloss = match cfg.force_dloss {
+        Some(forced) => forced,
+        None => {
+            ls.block_proposer.is_none()
+                && plan.selected.len() as f64 * mean_col_nnz
+                    >= problem.n_samples() as f64
+        }
+    };
+
+    metrics.iterations.fetch_add(1, Relaxed);
+    ls.iter += 1;
+}
+
+#[inline]
+fn store_proposal(state: &SharedState, pr: &Proposal) {
+    state.delta[pr.j].store(pr.delta, Relaxed);
+    state.phi[pr.j].store(pr.phi, Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::{Logistic, Squared};
+    use crate::sparse::io::Dataset;
+    use crate::sparse::CooBuilder;
+    use crate::util::Pcg64;
+
+    /// Small random problem with a known planted signal.
+    fn make_problem(seed: u64, n: usize, k: usize, logistic: bool) -> Problem {
+        let mut rng = Pcg64::seeded(seed);
+        let mut b = CooBuilder::new(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                if rng.next_f64() < 0.3 {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let mut x = b.build();
+        x.normalize_columns();
+        let wstar: Vec<f64> = (0..k)
+            .map(|j| if j < 3 { 1.5 } else { 0.0 })
+            .collect();
+        let scores = x.matvec(&wstar);
+        let y: Vec<f64> = if logistic {
+            scores.iter().map(|&s| if s > 0.0 { 1.0 } else { -1.0 }).collect()
+        } else {
+            scores
+        };
+        let loss: Box<dyn crate::loss::Loss> =
+            if logistic { Box::new(Logistic) } else { Box::new(Squared) };
+        Problem::new(
+            Dataset {
+                x,
+                y,
+                name: "t".into(),
+            },
+            loss,
+            1e-3,
+        )
+    }
+
+    fn cfg(threads: usize, acceptor: Acceptor, iters: usize) -> EngineConfig {
+        EngineConfig {
+            threads,
+            acceptor,
+            max_iters: iters,
+            max_seconds: 30.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ccd_descends_squared() {
+        let p = make_problem(1, 24, 10, false);
+        let sel = Selector::Cyclic {
+            next: 0,
+            k: p.n_features(),
+        };
+        let out = solve(&p, sel, &cfg(1, Acceptor::All, 200));
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first * 0.5, "{} -> {}", first, out.objective);
+        assert_eq!(out.stop, StopReason::MaxIters);
+        assert_eq!(out.metrics.iterations, 200);
+    }
+
+    #[test]
+    fn shotgun_multithreaded_descends_logistic() {
+        let p = make_problem(2, 32, 16, true);
+        let sel = Selector::RandomSubset {
+            rng: Pcg64::seeded(3),
+            k: p.n_features(),
+            size: 4,
+        };
+        let out = solve(&p, sel, &cfg(4, Acceptor::All, 300));
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{} -> {}", first, out.objective);
+        // z must remain consistent with w after all the atomic updates
+        let state = SharedState::from_warm_start(&p, &out.w);
+        let z = state.z_snapshot();
+        let obj = p.objective(&out.w, &z);
+        assert!((obj - out.objective).abs() < 1e-6);
+    }
+
+    #[test]
+    fn thread_greedy_accepts_at_most_one_per_thread() {
+        let p = make_problem(4, 24, 12, true);
+        let threads = 3;
+        let sel = Selector::RandomSubset {
+            rng: Pcg64::seeded(5),
+            k: p.n_features(),
+            size: 9,
+        };
+        let out = solve(&p, sel, &cfg(threads, Acceptor::ThreadGreedy, 50));
+        assert!(out.metrics.updates <= 50 * threads as u64);
+        assert!(out.metrics.accept_rate() <= threads as f64 / 9.0 + 1e-9);
+    }
+
+    #[test]
+    fn greedy_single_update_per_iteration() {
+        let p = make_problem(6, 20, 8, false);
+        let sel = Selector::All { k: p.n_features() };
+        let out = solve(&p, sel, &cfg(2, Acceptor::GlobalBest, 40));
+        assert!(out.metrics.updates <= 40);
+        assert!(out.objective <= out.history.records[0].objective);
+    }
+
+    #[test]
+    fn topk_bounded() {
+        let p = make_problem(7, 20, 12, true);
+        let sel = Selector::All { k: p.n_features() };
+        let out = solve(&p, sel, &cfg(2, Acceptor::GlobalTopK(3), 30));
+        assert!(out.metrics.updates <= 90);
+    }
+
+    #[test]
+    fn deterministic_single_thread() {
+        let p = make_problem(8, 16, 8, true);
+        let mk = || {
+            let sel = Selector::RandomSubset {
+                rng: Pcg64::seeded(9),
+                k: p.n_features(),
+                size: 3,
+            };
+            solve(&p, sel, &cfg(1, Acceptor::All, 100))
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.objective, b.objective);
+    }
+
+    #[test]
+    fn dloss_paths_equivalent() {
+        let p = make_problem(10, 20, 10, true);
+        let run = |force: Option<bool>| {
+            let sel = Selector::Cyclic {
+                next: 0,
+                k: p.n_features(),
+            };
+            let mut c = cfg(1, Acceptor::All, 60);
+            c.force_dloss = force;
+            solve(&p, sel, &c)
+        };
+        let a = run(Some(true));
+        let b = run(Some(false));
+        for (x, y) in a.w.iter().zip(&b.w) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn max_seconds_stops() {
+        let p = make_problem(11, 16, 8, true);
+        let sel = Selector::All { k: p.n_features() };
+        let mut c = cfg(2, Acceptor::GlobalBest, usize::MAX);
+        c.max_seconds = 0.2;
+        let out = solve(&p, sel, &c);
+        assert_eq!(out.stop, StopReason::MaxSeconds);
+        assert!(out.elapsed_secs < 5.0);
+    }
+
+    #[test]
+    fn tolerance_stops() {
+        let p = make_problem(12, 16, 8, false);
+        let sel = Selector::Cyclic {
+            next: 0,
+            k: p.n_features(),
+        };
+        let mut c = cfg(1, Acceptor::All, usize::MAX);
+        c.max_seconds = 20.0;
+        c.tol = 1e-10;
+        c.log_every = 10;
+        let out = solve(&p, sel, &c);
+        assert_eq!(out.stop, StopReason::Tolerance);
+    }
+
+    #[test]
+    fn line_search_accelerates_convergence() {
+        let p = make_problem(13, 30, 10, true);
+        let run = |steps: usize| {
+            let sel = Selector::Cyclic {
+                next: 0,
+                k: p.n_features(),
+            };
+            let mut c = cfg(1, Acceptor::All, 50);
+            c.line_search_steps = steps;
+            solve(&p, sel, &c)
+        };
+        let plain = run(0);
+        let refined = run(20);
+        assert!(
+            refined.objective <= plain.objective + 1e-12,
+            "{} vs {}",
+            refined.objective,
+            plain.objective
+        );
+    }
+
+    #[test]
+    fn z_consistency_under_concurrency() {
+        // many threads, many iterations: incremental z must not drift
+        let p = make_problem(14, 40, 24, true);
+        let sel = Selector::RandomSubset {
+            rng: Pcg64::seeded(15),
+            k: p.n_features(),
+            size: 8,
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let c = cfg(8, Acceptor::All, 200);
+        solve_from(&p, &state, sel, &c, None);
+        assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+    }
+}

@@ -1,0 +1,170 @@
+//! KKT optimality certificate for the l1 problem (Eq. 1).
+//!
+//! At an optimum of `F(w) + lam |w|_1`:
+//!   * `w_j > 0`  =>  `g_j = -lam`
+//!   * `w_j < 0`  =>  `g_j = +lam`
+//!   * `w_j = 0`  =>  `|g_j| <= lam`
+//!
+//! The *violation* of coordinate j is how far `g_j` is from satisfying
+//! its condition; the max over j certifies (sub)optimality — a
+//! convergence measure that, unlike objective deltas, does not depend
+//! on knowing the optimal value. Reported by `gencd train --kkt` and
+//! used by tests to certify solver output.
+
+use super::problem::Problem;
+use crate::loss;
+
+/// Per-run KKT summary.
+#[derive(Clone, Copy, Debug)]
+pub struct KktReport {
+    /// Maximum violation over all coordinates.
+    pub max_violation: f64,
+    /// Mean violation.
+    pub mean_violation: f64,
+    /// Coordinate attaining the max.
+    pub argmax: usize,
+    /// Violations exceeding `tol` (strict suboptimality witnesses).
+    pub n_violating: usize,
+    pub tol: f64,
+}
+
+/// Violation of coordinate j given its gradient `g`, weight `w` and
+/// `lam`.
+#[inline]
+pub fn violation(w: f64, g: f64, lam: f64) -> f64 {
+    if w > 0.0 {
+        (g + lam).abs()
+    } else if w < 0.0 {
+        (g - lam).abs()
+    } else {
+        (g.abs() - lam).max(0.0)
+    }
+}
+
+/// Full KKT check at `w` (computes the exact gradient; O(nnz)).
+pub fn check(problem: &Problem, w: &[f64], tol: f64) -> KktReport {
+    let z = problem.x.matvec(w);
+    let g = loss::full_gradient(problem.loss.as_ref(), &problem.x, &problem.y, &z);
+    let mut max_v = 0.0;
+    let mut sum = 0.0;
+    let mut argmax = 0;
+    let mut n_violating = 0;
+    for j in 0..w.len() {
+        let v = violation(w[j], g[j], problem.lam);
+        sum += v;
+        if v > max_v {
+            max_v = v;
+            argmax = j;
+        }
+        if v > tol {
+            n_violating += 1;
+        }
+    }
+    KktReport {
+        max_violation: max_v,
+        mean_violation: sum / w.len().max(1) as f64,
+        argmax,
+        n_violating,
+        tol,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::coordinator::driver::run_on;
+    use crate::loss::Squared;
+    use crate::sparse::io::Dataset;
+    use crate::sparse::CooBuilder;
+    use crate::util::prop;
+
+    #[test]
+    fn violation_cases() {
+        let lam = 0.5;
+        // active positive weight: g must be -lam
+        assert_eq!(violation(1.0, -0.5, lam), 0.0);
+        assert!((violation(1.0, -0.3, lam) - 0.2).abs() < 1e-12);
+        // active negative weight: g must be +lam
+        assert_eq!(violation(-1.0, 0.5, lam), 0.0);
+        // zero weight: |g| <= lam is fine
+        assert_eq!(violation(0.0, 0.3, lam), 0.0);
+        assert_eq!(violation(0.0, -0.5, lam), 0.0);
+        assert!((violation(0.0, 0.8, lam) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_form_solution_certifies() {
+        // identity design: solution is soft-threshold, violation ~ 0
+        let n = 12;
+        let mut b = CooBuilder::new(n, n);
+        for i in 0..n {
+            b.push(i, i, 1.0);
+        }
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 - 6.0) / 3.0).collect();
+        let lam = 0.02;
+        let tau = n as f64 * lam;
+        let w: Vec<f64> = y.iter().map(|&v| crate::util::soft_threshold(v, tau)).collect();
+        let p = crate::coordinator::Problem::new(
+            Dataset {
+                x: b.build(),
+                y,
+                name: "id".into(),
+            },
+            Box::new(Squared),
+            lam,
+        );
+        let r = check(&p, &w, 1e-9);
+        assert!(r.max_violation < 1e-12, "{r:?}");
+        assert_eq!(r.n_violating, 0);
+    }
+
+    #[test]
+    fn solver_output_has_small_violation() {
+        let ds = crate::data::by_name("reuters@0.02").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.dataset.name = "reuters@0.02".into();
+        cfg.problem.lam = 1e-3;
+        cfg.solver.algorithm = "ccd".into();
+        cfg.solver.threads = 1;
+        cfg.solver.max_seconds = 6.0;
+        cfg.solver.tol = 1e-10;
+        cfg.solver.line_search_steps = 10;
+        let res = run_on(&cfg, ds, None).unwrap();
+        let mut d = crate::data::by_name("reuters@0.02").unwrap();
+        d.x.normalize_columns();
+        let p = crate::coordinator::Problem::new(
+            d,
+            crate::loss::by_name("logistic").unwrap(),
+            1e-3,
+        );
+        let r = check(&p, &res.w, 1e-4);
+        // far from machine precision (finite budget) but certifiably
+        // near-stationary relative to the gradient scale
+        assert!(
+            r.max_violation < 0.05 * p.lam.max(1e-3) + 5e-4,
+            "max violation {} at {}",
+            r.max_violation,
+            r.argmax
+        );
+    }
+
+    #[test]
+    fn prop_violation_nonnegative_and_zero_only_at_kkt() {
+        prop::check("violation >= 0", 200, |rng, _| {
+            let w = rng.range_f64(-2.0, 2.0);
+            let g = rng.range_f64(-2.0, 2.0);
+            let lam = rng.range_f64(1e-4, 1.0);
+            let v = violation(w, g, lam);
+            prop::ensure(v >= 0.0, format!("negative violation {v}"))?;
+            if v == 0.0 && w != 0.0 {
+                let want = if w > 0.0 { -lam } else { lam };
+                prop::ensure(
+                    (g - want).abs() < 1e-12,
+                    format!("zero violation but g={g} want {want}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,110 @@
+//! Solver counters: updates, proposals, iterations, per-phase time — the
+//! measurements behind Figure 2 (updates/sec) and the §Perf profiles.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Shared counters, updated by workers with relaxed atomics (negligible
+/// cost next to the column traversals they count).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Coordinate updates applied (|J'| summed over iterations).
+    pub updates: AtomicU64,
+    /// Proposals computed (|J| summed over iterations).
+    pub proposals: AtomicU64,
+    /// Iterations completed.
+    pub iterations: AtomicU64,
+    /// Nonzeros traversed in Propose (work metric).
+    pub propose_nnz: AtomicU64,
+    /// Nanoseconds spent in each phase (leader-measured).
+    pub select_nanos: AtomicU64,
+    pub propose_nanos: AtomicU64,
+    pub accept_nanos: AtomicU64,
+    pub update_nanos: AtomicU64,
+    pub log_nanos: AtomicU64,
+}
+
+impl Metrics {
+    pub fn add_updates(&self, n: u64) {
+        self.updates.fetch_add(n, Relaxed);
+    }
+
+    pub fn add_proposals(&self, n: u64) {
+        self.proposals.fetch_add(n, Relaxed);
+    }
+
+    pub fn add_propose_nnz(&self, n: u64) {
+        self.propose_nnz.fetch_add(n, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            updates: self.updates.load(Relaxed),
+            proposals: self.proposals.load(Relaxed),
+            iterations: self.iterations.load(Relaxed),
+            propose_nnz: self.propose_nnz.load(Relaxed),
+            select_secs: self.select_nanos.load(Relaxed) as f64 * 1e-9,
+            propose_secs: self.propose_nanos.load(Relaxed) as f64 * 1e-9,
+            accept_secs: self.accept_nanos.load(Relaxed) as f64 * 1e-9,
+            update_secs: self.update_nanos.load(Relaxed) as f64 * 1e-9,
+            log_secs: self.log_nanos.load(Relaxed) as f64 * 1e-9,
+        }
+    }
+}
+
+/// Plain-value copy of [`Metrics`] for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub updates: u64,
+    pub proposals: u64,
+    pub iterations: u64,
+    pub propose_nnz: u64,
+    pub select_secs: f64,
+    pub propose_secs: f64,
+    pub accept_secs: f64,
+    pub update_secs: f64,
+    pub log_secs: f64,
+}
+
+impl MetricsSnapshot {
+    /// Figure 2's y-axis.
+    pub fn updates_per_sec(&self, elapsed: f64) -> f64 {
+        self.updates as f64 / elapsed.max(1e-12)
+    }
+
+    /// Acceptance ratio |J'| / |J|.
+    pub fn accept_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            0.0
+        } else {
+            self.updates as f64 / self.proposals as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.add_updates(3);
+        m.add_updates(4);
+        m.add_proposals(10);
+        m.add_propose_nnz(100);
+        m.iterations.store(2, Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.updates, 7);
+        assert_eq!(s.proposals, 10);
+        assert_eq!(s.iterations, 2);
+        assert!((s.accept_rate() - 0.7).abs() < 1e-12);
+        assert!((s.updates_per_sec(2.0) - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_rates() {
+        let s = MetricsSnapshot::default();
+        assert_eq!(s.accept_rate(), 0.0);
+        assert_eq!(s.updates_per_sec(0.0), 0.0);
+    }
+}

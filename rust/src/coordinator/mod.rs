@@ -1,0 +1,34 @@
+//! The GenCD coordinator — the paper's contribution (Sec. 2).
+//!
+//! Every iteration runs the four-step scheme of Algorithm 1:
+//!
+//! 1. **Select** a set `J` of coordinates ([`select`])
+//! 2. **Propose** increments `delta_j` + proxies `phi_j` in parallel
+//!    ([`propose`], Eq. 7/9)
+//! 3. **Accept** a subset `J' ⊆ J` ([`accept`])
+//! 4. **Update** `w`, `z` in parallel with atomic `z` adds ([`engine`],
+//!    Algorithm 3), optionally refining each increment first
+//!    ([`linesearch`], Sec. 4.1)
+//!
+//! [`algorithms`] maps the paper's named algorithms (Table 2) onto
+//! policy pairs; [`engine`] is the OpenMP-analogue thread pool;
+//! [`driver`] wires datasets, preprocessing (coloring, P*), and logging
+//! into a single entry point.
+
+pub mod accept;
+pub mod algorithms;
+pub mod convergence;
+pub mod driver;
+pub mod engine;
+pub mod linesearch;
+pub mod kkt;
+pub mod metrics;
+pub mod path;
+pub mod problem;
+pub mod propose;
+pub mod select;
+
+pub use algorithms::Algorithm;
+pub use convergence::{History, Record};
+pub use driver::{run, SolveResult};
+pub use problem::Problem;

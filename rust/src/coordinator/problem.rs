@@ -1,0 +1,181 @@
+//! Problem definition + the shared solver state of Table 1.
+
+use std::sync::atomic::Ordering;
+
+use crate::loss::{self, Loss};
+use crate::sparse::io::Dataset;
+use crate::sparse::CscMatrix;
+use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
+
+/// An l1-regularized ERM instance (Eq. 1): design matrix, labels, loss,
+/// regularization strength, plus cached per-column curvature info.
+pub struct Problem {
+    pub x: CscMatrix,
+    pub y: Vec<f64>,
+    pub loss: Box<dyn Loss>,
+    pub lam: f64,
+    /// Squared column norms; the per-coordinate curvature bound is
+    /// `beta * col_sq_norm[j]` (== `beta` for normalized columns, the
+    /// paper's setting).
+    pub col_sq_norms: Vec<f64>,
+}
+
+impl Problem {
+    pub fn new(ds: Dataset, loss: Box<dyn Loss>, lam: f64) -> Self {
+        let col_sq_norms = ds.x.col_sq_norms();
+        Self {
+            x: ds.x,
+            y: ds.y,
+            loss,
+            lam,
+            col_sq_norms,
+        }
+    }
+
+    #[inline]
+    pub fn n_samples(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    /// Per-coordinate quadratic upper-bound curvature (Sec. 3.2
+    /// specialized to coordinate j). With `F(w) = (1/n) sum_i ell(...)`,
+    /// `d^2F/ddelta^2 = (1/n) sum_i ell'' x_ij^2 <= beta ||X_j||^2 / n`.
+    /// For squared loss this equals `H_jj` exactly, so the Eq. (7) step
+    /// is the exact coordinate minimizer (Sec. 3.1).
+    #[inline]
+    pub fn beta_j(&self, j: usize) -> f64 {
+        (self.loss.beta() * self.col_sq_norms[j] / self.n_samples() as f64).max(1e-12)
+    }
+
+    /// Full objective (Eq. 1) at explicit (w, z).
+    pub fn objective(&self, w: &[f64], z: &[f64]) -> f64 {
+        loss::objective(self.loss.as_ref(), &self.y, z, w, self.lam)
+    }
+}
+
+/// The shared arrays of Table 1 (plus the cached loss-derivative vector),
+/// all atomic so cross-thread access during the phase-separated iteration
+/// is well-defined. Phases are separated by barriers; within a phase each
+/// element has a unique writer (see `engine`).
+pub struct SharedState {
+    /// Weight estimate `w` (k).
+    pub w: Vec<AtomicF64>,
+    /// Fitted values `z = X w` (n) — updated incrementally with atomic
+    /// adds (Algorithm 3).
+    pub z: Vec<AtomicF64>,
+    /// Proposed increments `delta` (k).
+    pub delta: Vec<AtomicF64>,
+    /// Proposal proxies `phi` (k), Eq. 9 — more negative is better.
+    pub phi: Vec<AtomicF64>,
+    /// Cached `ell'(y_i, z_i)` (n), recomputed each iteration when the
+    /// engine decides precomputation is cheaper (see `engine`).
+    pub dloss: Vec<AtomicF64>,
+}
+
+impl SharedState {
+    pub fn new(n: usize, k: usize) -> Self {
+        Self {
+            w: atomic_vec(k),
+            z: atomic_vec(n),
+            delta: atomic_vec(k),
+            phi: atomic_vec(k),
+            dloss: atomic_vec(n),
+        }
+    }
+
+    /// Initialize from a warm-start weight vector.
+    pub fn from_warm_start(problem: &Problem, w0: &[f64]) -> Self {
+        let state = Self::new(problem.n_samples(), problem.n_features());
+        for (j, &wj) in w0.iter().enumerate() {
+            state.w[j].store(wj, Ordering::Relaxed);
+        }
+        let z = problem.x.matvec(w0);
+        for (i, &zi) in z.iter().enumerate() {
+            state.z[i].store(zi, Ordering::Relaxed);
+        }
+        state
+    }
+
+    pub fn w_snapshot(&self) -> Vec<f64> {
+        snapshot(&self.w)
+    }
+
+    pub fn z_snapshot(&self) -> Vec<f64> {
+        snapshot(&self.z)
+    }
+
+    /// Recompute `z = X w` exactly (drift repair / invariant tests).
+    pub fn recompute_z(&self, problem: &Problem) -> Vec<f64> {
+        problem.x.matvec(&self.w_snapshot())
+    }
+
+    /// Max |z - X w| drift from incremental updates (diagnostics).
+    pub fn z_drift(&self, problem: &Problem) -> f64 {
+        let exact = self.recompute_z(problem);
+        let cur = self.z_snapshot();
+        exact
+            .iter()
+            .zip(&cur)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::{Logistic, Squared};
+    use crate::sparse::csc::small_fixture;
+
+    fn fixture_problem() -> Problem {
+        let ds = Dataset {
+            x: small_fixture(),
+            y: vec![1.0, -1.0, 1.0, -1.0],
+            name: "t".into(),
+        };
+        Problem::new(ds, Box::new(Squared), 0.1)
+    }
+
+    #[test]
+    fn beta_j_scales_with_column_norm() {
+        let p = fixture_problem();
+        assert_eq!(p.beta_j(0), 17.0 / 4.0);
+        assert_eq!(p.beta_j(2), 40.0 / 4.0);
+    }
+
+    #[test]
+    fn warm_start_consistent() {
+        let p = fixture_problem();
+        let w0 = vec![0.5, -0.25, 1.0];
+        let s = SharedState::from_warm_start(&p, &w0);
+        assert_eq!(s.w_snapshot(), w0);
+        assert!(s.z_drift(&p) < 1e-12);
+    }
+
+    #[test]
+    fn objective_matches_loss_module() {
+        let ds = Dataset {
+            x: small_fixture(),
+            y: vec![1.0, -1.0, 1.0, -1.0],
+            name: "t".into(),
+        };
+        let p = Problem::new(ds, Box::new(Logistic), 0.05);
+        let w = vec![0.1, 0.0, -0.2];
+        let z = p.x.matvec(&w);
+        let want = crate::loss::objective(&Logistic, &p.y, &z, &w, 0.05);
+        assert!((p.objective(&w, &z) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_state() {
+        let p = fixture_problem();
+        let s = SharedState::new(p.n_samples(), p.n_features());
+        assert_eq!(s.w_snapshot(), vec![0.0; 3]);
+        assert!(s.z_drift(&p) < 1e-15);
+    }
+}

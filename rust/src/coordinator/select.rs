@@ -1,0 +1,233 @@
+//! Step one: Select (Sec. 2.1) — which coordinates get proposals this
+//! iteration.
+//!
+//! The policies cover the paper's spectrum: singletons (CCD/SCD), random
+//! subsets of a given size (SHOTGUN, THREAD-GREEDY), everything (GREEDY,
+//! "full greedy"), one color class (COLORING), and the §7 "soft
+//! coloring" extension (per-block random subsets sized by a per-block
+//! P*).
+
+use crate::coloring::Coloring;
+use crate::util::Pcg64;
+
+/// A selection policy. Stateful (cyclic pointer, RNG) and owned by the
+/// leader thread; `select` fills `out` with the iteration's J.
+pub enum Selector {
+    /// Deterministic single coordinate: 0, 1, 2, … (CCD).
+    Cyclic { next: usize, k: usize },
+    /// Uniform random single coordinate (SCD).
+    Stochastic { rng: Pcg64, k: usize },
+    /// Uniform random subset of fixed size without replacement
+    /// (SHOTGUN with size = P*, THREAD-GREEDY with size = threads * c).
+    RandomSubset { rng: Pcg64, k: usize, size: usize },
+    /// All coordinates (GREEDY / full greedy).
+    All { k: usize },
+    /// A uniformly random color class (COLORING).
+    RandomColor { rng: Pcg64, coloring: Coloring },
+    /// §7 extension: partition into `blocks` contiguous column blocks,
+    /// select an independent random subset of `per_block` from each.
+    BlockSubset {
+        rng: Pcg64,
+        k: usize,
+        blocks: usize,
+        per_block: Vec<usize>,
+    },
+}
+
+impl Selector {
+    /// Fill `out` with this iteration's selected coordinate set J.
+    pub fn select(&mut self, out: &mut Vec<u32>) {
+        out.clear();
+        match self {
+            Selector::Cyclic { next, k } => {
+                out.push(*next as u32);
+                *next = (*next + 1) % *k;
+            }
+            Selector::Stochastic { rng, k } => {
+                out.push(rng.below(*k) as u32);
+            }
+            Selector::RandomSubset { rng, k, size } => {
+                let size = (*size).min(*k);
+                if size * 4 >= *k {
+                    // dense regime: shuffle a prefix
+                    let mut all: Vec<u32> = (0..*k as u32).collect();
+                    for i in 0..size {
+                        let j = i + rng.below(*k - i);
+                        all.swap(i, j);
+                        out.push(all[i]);
+                    }
+                } else if size <= 64 {
+                    // small regime: quadratic rejection into `out` —
+                    // allocation-free (§Perf: this runs every iteration
+                    // of SHOTGUN, whose P* is often tiny)
+                    while out.len() < size {
+                        let j = rng.below(*k) as u32;
+                        if !out.contains(&j) {
+                            out.push(j);
+                        }
+                    }
+                } else {
+                    for j in rng.sample_distinct(*k, size) {
+                        out.push(j as u32);
+                    }
+                }
+            }
+            Selector::All { k } => {
+                out.extend(0..*k as u32);
+            }
+            Selector::RandomColor { rng, coloring } => {
+                let c = rng.below(coloring.n_colors());
+                out.extend_from_slice(&coloring.classes[c]);
+            }
+            Selector::BlockSubset {
+                rng,
+                k,
+                blocks,
+                per_block,
+            } => {
+                let bsize = (*k + *blocks - 1) / *blocks;
+                for b in 0..*blocks {
+                    let lo = b * bsize;
+                    let hi = ((b + 1) * bsize).min(*k);
+                    if lo >= hi {
+                        break;
+                    }
+                    let m = per_block[b].min(hi - lo);
+                    for idx in rng.sample_distinct(hi - lo, m) {
+                        out.push((lo + idx) as u32);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Expected |J| per iteration (sizing hints for metrics/benches).
+    pub fn expected_size(&self) -> f64 {
+        match self {
+            Selector::Cyclic { .. } | Selector::Stochastic { .. } => 1.0,
+            Selector::RandomSubset { size, k, .. } => (*size).min(*k) as f64,
+            Selector::All { k } => *k as f64,
+            Selector::RandomColor { coloring, .. } => coloring.mean_class_size(),
+            Selector::BlockSubset { per_block, .. } => {
+                per_block.iter().sum::<usize>() as f64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::{color_features, Strategy};
+    use crate::sparse::CooBuilder;
+
+    #[test]
+    fn cyclic_wraps() {
+        let mut s = Selector::Cyclic { next: 0, k: 3 };
+        let mut out = Vec::new();
+        let seen: Vec<u32> = (0..7)
+            .map(|_| {
+                s.select(&mut out);
+                out[0]
+            })
+            .collect();
+        assert_eq!(seen, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn stochastic_in_range() {
+        let mut s = Selector::Stochastic {
+            rng: Pcg64::seeded(1),
+            k: 5,
+        };
+        let mut out = Vec::new();
+        let mut hit = [false; 5];
+        for _ in 0..200 {
+            s.select(&mut out);
+            assert_eq!(out.len(), 1);
+            hit[out[0] as usize] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "all coordinates eventually chosen");
+    }
+
+    #[test]
+    fn random_subset_distinct_and_sized() {
+        for size in [1usize, 5, 20, 99, 200] {
+            let mut s = Selector::RandomSubset {
+                rng: Pcg64::seeded(2),
+                k: 100,
+                size,
+            };
+            let mut out = Vec::new();
+            s.select(&mut out);
+            assert_eq!(out.len(), size.min(100));
+            let set: std::collections::HashSet<_> = out.iter().collect();
+            assert_eq!(set.len(), out.len(), "size={size} must be distinct");
+            assert!(out.iter().all(|&j| j < 100));
+        }
+    }
+
+    #[test]
+    fn all_selects_everything() {
+        let mut s = Selector::All { k: 7 };
+        let mut out = Vec::new();
+        s.select(&mut out);
+        assert_eq!(out, (0..7).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn random_color_selects_whole_class() {
+        let mut b = CooBuilder::new(4, 6);
+        for j in 0..6 {
+            b.push(j % 4, j, 1.0);
+        }
+        let m = b.build();
+        let coloring = color_features(&m, Strategy::Greedy, 1);
+        let classes = coloring.classes.clone();
+        let mut s = Selector::RandomColor {
+            rng: Pcg64::seeded(3),
+            coloring,
+        };
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            s.select(&mut out);
+            assert!(
+                classes.iter().any(|c| c == &out),
+                "selection {out:?} must equal one color class"
+            );
+        }
+    }
+
+    #[test]
+    fn block_subset_respects_blocks() {
+        let mut s = Selector::BlockSubset {
+            rng: Pcg64::seeded(4),
+            k: 100,
+            blocks: 4,
+            per_block: vec![2, 3, 1, 4],
+        };
+        let mut out = Vec::new();
+        s.select(&mut out);
+        assert_eq!(out.len(), 10);
+        // count selections per 25-wide block
+        let mut counts = [0usize; 4];
+        for &j in &out {
+            counts[(j as usize) / 25] += 1;
+        }
+        assert_eq!(counts, [2, 3, 1, 4]);
+    }
+
+    #[test]
+    fn expected_sizes() {
+        assert_eq!(Selector::All { k: 9 }.expected_size(), 9.0);
+        assert_eq!(
+            Selector::RandomSubset {
+                rng: Pcg64::seeded(1),
+                k: 10,
+                size: 25
+            }
+            .expected_size(),
+            10.0
+        );
+    }
+}

@@ -1,0 +1,87 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on DOROTHEA (NIPS'03 drug discovery) and REUTERS
+//! (RCV1-v2, CCAT topic). Neither is fetchable in this offline
+//! environment, so `dorothea.rs` / `reuters.rs` generate *synthetic
+//! twins*: matrices matching the published shape, sparsity, value
+//! distribution and label balance, with labels from a planted sparse
+//! linear model so that an l1-regularized logistic fit has a meaningful
+//! sparse optimum (see DESIGN.md §4, Substitutions).
+
+pub mod dorothea;
+pub mod planted;
+pub mod reuters;
+pub mod synth;
+
+pub use dorothea::dorothea_like;
+pub use reuters::reuters_like;
+
+use crate::sparse::io::Dataset;
+
+/// Shape/scale knobs common to the generators. `scale` shrinks both
+/// dimensions (and the planted support) proportionally for tests and
+/// quick benches; 1.0 reproduces the paper's dimensions.
+#[derive(Clone, Copy, Debug)]
+pub struct GenOptions {
+    pub seed: u64,
+    pub scale: f64,
+    /// Fraction of labels flipped after thresholding (realism noise).
+    pub label_noise: f64,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        Self {
+            seed: 20120626, // ICML 2012 started June 26
+            scale: 1.0,
+            label_noise: 0.02,
+        }
+    }
+}
+
+impl GenOptions {
+    pub fn with_scale(scale: f64) -> Self {
+        Self {
+            scale,
+            ..Default::default()
+        }
+    }
+
+    pub(crate) fn scaled(&self, full: usize) -> usize {
+        ((full as f64 * self.scale).round() as usize).max(4)
+    }
+}
+
+/// Registry lookup used by the CLI and bench harness.
+/// Names: `dorothea`, `reuters`, optionally suffixed `@<scale>`
+/// (e.g. `reuters@0.05`).
+pub fn by_name(name: &str) -> anyhow::Result<Dataset> {
+    let (base, scale) = match name.split_once('@') {
+        Some((b, s)) => (b, s.parse::<f64>()?),
+        None => (name, 1.0),
+    };
+    anyhow::ensure!(
+        scale > 0.0 && scale <= 1.0,
+        "scale must be in (0, 1], got {scale}"
+    );
+    let opts = GenOptions::with_scale(scale);
+    match base {
+        "dorothea" => Ok(dorothea_like(&opts)),
+        "reuters" => Ok(reuters_like(&opts)),
+        other => anyhow::bail!("unknown dataset '{other}' (try dorothea, reuters)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves() {
+        let ds = by_name("dorothea@0.02").unwrap();
+        assert_eq!(ds.name, "dorothea-like");
+        assert!(by_name("nope").is_err());
+        assert!(by_name("reuters@0.0").is_err());
+        assert!(by_name("reuters@1.5").is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Planted-model labeling shared by the synthetic dataset generators.
+//!
+//! A sparse ground-truth weight vector is drawn over a chosen support,
+//! samples are scored through the design matrix, and labels are assigned
+//! by thresholding the scores so a *target number* of positives comes out
+//! exactly (matching the published class balances), with a small flip
+//! noise so the problem is not perfectly separable.
+
+use crate::sparse::CscMatrix;
+use crate::util::Pcg64;
+
+/// A planted sparse linear model.
+#[derive(Clone, Debug)]
+pub struct PlantedModel {
+    /// Feature indices carrying true signal.
+    pub support: Vec<usize>,
+    /// Weights on the support (same order).
+    pub weights: Vec<f64>,
+}
+
+impl PlantedModel {
+    /// Draw a model over `support_size` features sampled *by popularity*
+    /// (columns with more nonzeros are preferred — signal on features
+    /// that never fire would be unlearnable).
+    pub fn draw(x: &CscMatrix, support_size: usize, rng: &mut Pcg64) -> Self {
+        let k = x.n_cols();
+        let support_size = support_size.min(k);
+        // popularity-weighted sampling without replacement: take the
+        // top 4*support_size by nnz, sample the support among them.
+        let mut by_nnz: Vec<usize> = (0..k).collect();
+        by_nnz.sort_by_key(|&j| std::cmp::Reverse(x.col_nnz(j)));
+        let pool = &by_nnz[..(4 * support_size).min(k)];
+        let picks = rng.sample_distinct(pool.len(), support_size);
+        let support: Vec<usize> = picks.iter().map(|&p| pool[p]).collect();
+        let weights = support
+            .iter()
+            .map(|_| {
+                let sign = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+                sign * (1.0 + 0.5 * rng.next_normal()).abs().max(0.2)
+            })
+            .collect();
+        Self { support, weights }
+    }
+
+    /// Scores `X w*` (sparse accumulation over the support only).
+    pub fn scores(&self, x: &CscMatrix) -> Vec<f64> {
+        let mut s = vec![0.0; x.n_rows()];
+        for (&j, &w) in self.support.iter().zip(&self.weights) {
+            x.axpy_col(j, w, &mut s);
+        }
+        s
+    }
+}
+
+/// Threshold `scores` so exactly `n_pos` samples are labeled +1, then
+/// flip each label independently with probability `noise`.
+pub fn labels_with_positive_count(
+    scores: &[f64],
+    n_pos: usize,
+    noise: f64,
+    rng: &mut Pcg64,
+) -> Vec<f64> {
+    let n = scores.len();
+    let n_pos = n_pos.min(n);
+    // threshold = n_pos-th largest score (stable under ties via index)
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut y = vec![-1.0; n];
+    for &i in &order[..n_pos] {
+        y[i] = 1.0;
+    }
+    if noise > 0.0 {
+        for yi in &mut y {
+            if rng.next_f64() < noise {
+                *yi = -*yi;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+
+    fn fixture() -> CscMatrix {
+        let mut rng = Pcg64::seeded(1);
+        let mut b = CooBuilder::new(50, 30);
+        for j in 0..30 {
+            for i in 0..50 {
+                if rng.next_f64() < 0.2 {
+                    b.push(i, j, 1.0);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn planted_model_has_requested_support() {
+        let x = fixture();
+        let mut rng = Pcg64::seeded(2);
+        let m = PlantedModel::draw(&x, 5, &mut rng);
+        assert_eq!(m.support.len(), 5);
+        assert_eq!(m.weights.len(), 5);
+        let set: std::collections::HashSet<_> = m.support.iter().collect();
+        assert_eq!(set.len(), 5, "support must be distinct");
+        assert!(m.weights.iter().all(|w| w.abs() >= 0.2));
+    }
+
+    #[test]
+    fn scores_match_matvec() {
+        let x = fixture();
+        let mut rng = Pcg64::seeded(3);
+        let m = PlantedModel::draw(&x, 4, &mut rng);
+        let mut w = vec![0.0; x.n_cols()];
+        for (&j, &v) in m.support.iter().zip(&m.weights) {
+            w[j] = v;
+        }
+        let a = m.scores(&x);
+        let b = x.matvec(&w);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn exact_positive_count_without_noise() {
+        let scores: Vec<f64> = (0..100).map(|i| (i as f64) * 0.1).collect();
+        let mut rng = Pcg64::seeded(4);
+        let y = labels_with_positive_count(&scores, 17, 0.0, &mut rng);
+        assert_eq!(y.iter().filter(|&&v| v > 0.0).count(), 17);
+        // the positives are the top-17 scores
+        assert!(y[99] > 0.0 && y[82] < 0.0 && y[83] > 0.0);
+    }
+
+    #[test]
+    fn noise_flips_some() {
+        let scores = vec![0.0; 1000];
+        let mut rng = Pcg64::seeded(5);
+        let y = labels_with_positive_count(&scores, 500, 0.1, &mut rng);
+        let pos = y.iter().filter(|&&v| v > 0.0).count();
+        assert!(pos > 400 && pos < 600, "pos={pos}");
+        assert_ne!(pos, 500); // overwhelmingly likely under the seed
+    }
+}

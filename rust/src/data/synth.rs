@@ -1,0 +1,151 @@
+//! Generic synthetic sparse-matrix generation primitives used by the
+//! dataset twins: skewed discrete sampling (alias-free cumulative table)
+//! and per-column/per-row support drawing.
+
+use crate::sparse::{CooBuilder, CscMatrix};
+use crate::util::Pcg64;
+
+/// Cumulative-weight sampler over `0..weights.len()` (binary search on
+/// the CDF). Deterministic given the RNG; O(log n) per draw.
+pub struct WeightedSampler {
+    cdf: Vec<f64>,
+}
+
+impl WeightedSampler {
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty());
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            assert!(w >= 0.0, "negative weight");
+            acc += w;
+            cdf.push(acc);
+        }
+        assert!(acc > 0.0, "all-zero weights");
+        Self { cdf }
+    }
+
+    /// Zipf-like popularity weights: weight(i) ~ 1 / (i + offset)^s.
+    pub fn zipf(n: usize, s: f64, offset: f64) -> Self {
+        let w: Vec<f64> = (0..n).map(|i| 1.0 / (i as f64 + offset).powf(s)).collect();
+        Self::new(&w)
+    }
+
+    /// Log-normal popularity weights.
+    pub fn lognormal(n: usize, sigma: f64, rng: &mut Pcg64) -> Self {
+        let w: Vec<f64> = (0..n).map(|_| (sigma * rng.next_normal()).exp()).collect();
+        Self::new(&w)
+    }
+
+    #[inline]
+    pub fn draw(&self, rng: &mut Pcg64) -> usize {
+        let total = *self.cdf.last().unwrap();
+        let u = rng.next_f64() * total;
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i,
+        }
+    }
+
+    /// Draw `m` *distinct* indices (rejection; m must be << n for speed).
+    pub fn draw_distinct(&self, m: usize, rng: &mut Pcg64) -> Vec<usize> {
+        let n = self.cdf.len();
+        let m = m.min(n);
+        let mut seen = std::collections::HashSet::with_capacity(m * 2);
+        let mut out = Vec::with_capacity(m);
+        let mut attempts = 0usize;
+        while out.len() < m {
+            let i = self.draw(rng);
+            if seen.insert(i) {
+                out.push(i);
+            }
+            attempts += 1;
+            if attempts > 50 * m + 1000 {
+                // pathological skew: fall back to filling uniformly
+                for j in 0..n {
+                    if out.len() == m {
+                        break;
+                    }
+                    if seen.insert(j) {
+                        out.push(j);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Build a binary matrix column-by-column: column j gets
+/// `nnz_of(j, rng)` distinct rows drawn from `row_sampler`.
+pub fn binary_by_columns(
+    n_rows: usize,
+    n_cols: usize,
+    row_sampler: &WeightedSampler,
+    rng: &mut Pcg64,
+    mut nnz_of: impl FnMut(usize, &mut Pcg64) -> usize,
+) -> CscMatrix {
+    let mut b = CooBuilder::new(n_rows, n_cols);
+    for j in 0..n_cols {
+        let nnz = nnz_of(j, rng).clamp(1, n_rows);
+        for i in row_sampler.draw_distinct(nnz, rng) {
+            b.push(i, j, 1.0);
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_sampler_respects_weights() {
+        let s = WeightedSampler::new(&[1.0, 0.0, 3.0]);
+        let mut rng = Pcg64::seeded(1);
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[s.draw(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn draw_distinct_distinct() {
+        let s = WeightedSampler::zipf(100, 1.2, 2.0);
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..50 {
+            let v = s.draw_distinct(20, &mut rng);
+            let set: std::collections::HashSet<_> = v.iter().collect();
+            assert_eq!(set.len(), 20);
+        }
+    }
+
+    #[test]
+    fn draw_distinct_handles_m_equals_n() {
+        let s = WeightedSampler::new(&[5.0, 1.0, 1.0]);
+        let mut rng = Pcg64::seeded(3);
+        let mut v = s.draw_distinct(3, &mut rng);
+        v.sort_unstable();
+        assert_eq!(v, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn binary_by_columns_shape() {
+        let mut rng = Pcg64::seeded(4);
+        let s = WeightedSampler::lognormal(30, 1.0, &mut rng);
+        let m = binary_by_columns(30, 10, &s, &mut rng, |_, r| 1 + r.next_poisson(3.0) as usize);
+        assert_eq!(m.n_rows(), 30);
+        assert_eq!(m.n_cols(), 10);
+        for j in 0..10 {
+            assert!(m.col_nnz(j) >= 1);
+            let (_, vals) = m.col(j);
+            assert!(vals.iter().all(|&v| v == 1.0));
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Model evaluation: train/test splitting and classification metrics
+//! for the trained l1 models (accuracy, precision/recall/F1, AUC) —
+//! what a downstream user of the solver actually reports.
+
+pub mod model_io;
+
+use crate::sparse::io::Dataset;
+use crate::sparse::{CooBuilder, CscMatrix};
+use crate::util::Pcg64;
+
+/// Split a dataset into train/test by sampling rows without
+/// replacement. Column count is preserved in both halves.
+pub fn train_test_split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let n = ds.n_samples();
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let mut rng = Pcg64::new(seed, 0x5B117);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let test_set: std::collections::HashSet<usize> =
+        idx[..n_test].iter().copied().collect();
+
+    // map old row -> new row per half
+    let mut train_map = vec![usize::MAX; n];
+    let mut test_map = vec![usize::MAX; n];
+    let (mut tr, mut te) = (0usize, 0usize);
+    for i in 0..n {
+        if test_set.contains(&i) {
+            test_map[i] = te;
+            te += 1;
+        } else {
+            train_map[i] = tr;
+            tr += 1;
+        }
+    }
+
+    let mut btr = CooBuilder::new(tr, ds.n_features());
+    let mut bte = CooBuilder::new(te, ds.n_features());
+    for j in 0..ds.n_features() {
+        let (rows, vals) = ds.x.col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            let i = i as usize;
+            if test_set.contains(&i) {
+                bte.push(test_map[i], j, v);
+            } else {
+                btr.push(train_map[i], j, v);
+            }
+        }
+    }
+    let mut y_tr = vec![0.0; tr];
+    let mut y_te = vec![0.0; te];
+    for i in 0..n {
+        if test_set.contains(&i) {
+            y_te[test_map[i]] = ds.y[i];
+        } else {
+            y_tr[train_map[i]] = ds.y[i];
+        }
+    }
+    (
+        Dataset {
+            x: btr.build(),
+            y: y_tr,
+            name: format!("{}-train", ds.name),
+        },
+        Dataset {
+            x: bte.build(),
+            y: y_te,
+            name: format!("{}-test", ds.name),
+        },
+    )
+}
+
+/// Decision scores `X w` for a weight vector.
+pub fn scores(x: &CscMatrix, w: &[f64]) -> Vec<f64> {
+    x.matvec(w)
+}
+
+/// Binary classification metrics from +-1 labels and real scores.
+#[derive(Clone, Copy, Debug)]
+pub struct Metrics {
+    pub accuracy: f64,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub auc: f64,
+    pub n: usize,
+}
+
+/// Compute metrics (sign thresholding at 0; AUC via rank statistic).
+pub fn classification_metrics(y: &[f64], scores: &[f64]) -> Metrics {
+    assert_eq!(y.len(), scores.len());
+    let n = y.len();
+    let (mut tp, mut fp, mut tn, mut fne) = (0usize, 0usize, 0usize, 0usize);
+    for (&yi, &s) in y.iter().zip(scores) {
+        let pred_pos = s > 0.0;
+        let is_pos = yi > 0.0;
+        match (is_pos, pred_pos) {
+            (true, true) => tp += 1,
+            (false, true) => fp += 1,
+            (false, false) => tn += 1,
+            (true, false) => fne += 1,
+        }
+    }
+    let safe = |num: f64, den: f64| if den > 0.0 { num / den } else { 0.0 };
+    let accuracy = safe((tp + tn) as f64, n as f64);
+    let precision = safe(tp as f64, (tp + fp) as f64);
+    let recall = safe(tp as f64, (tp + fne) as f64);
+    let f1 = safe(2.0 * precision * recall, precision + recall);
+    Metrics {
+        accuracy,
+        precision,
+        recall,
+        f1,
+        auc: auc(y, scores),
+        n,
+    }
+}
+
+/// AUC = P(score_pos > score_neg), ties counted half (Mann-Whitney U
+/// from midranks).
+pub fn auc(y: &[f64], scores: &[f64]) -> f64 {
+    let n = y.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    // midranks over tie groups
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for &o in &order[i..=j] {
+            ranks[o] = mid;
+        }
+        i = j + 1;
+    }
+    let n_pos = y.iter().filter(|&&v| v > 0.0).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let rank_sum_pos: f64 = y
+        .iter()
+        .zip(&ranks)
+        .filter(|(&yi, _)| yi > 0.0)
+        .map(|(_, &r)| r)
+        .sum();
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{dorothea_like, GenOptions};
+
+    #[test]
+    fn split_preserves_everything() {
+        let ds = dorothea_like(&GenOptions {
+            scale: 0.03,
+            ..Default::default()
+        });
+        let (tr, te) = train_test_split(&ds, 0.25, 1);
+        assert_eq!(tr.n_samples() + te.n_samples(), ds.n_samples());
+        assert_eq!(te.n_samples(), (ds.n_samples() as f64 * 0.25).round() as usize);
+        assert_eq!(tr.n_features(), ds.n_features());
+        assert_eq!(te.n_features(), ds.n_features());
+        assert_eq!(tr.x.nnz() + te.x.nnz(), ds.x.nnz());
+        // label counts preserved
+        let pos = |d: &Dataset| d.y.iter().filter(|&&v| v > 0.0).count();
+        assert_eq!(pos(&tr) + pos(&te), pos(&ds));
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let ds = dorothea_like(&GenOptions {
+            scale: 0.02,
+            ..Default::default()
+        });
+        let (a, _) = train_test_split(&ds, 0.3, 9);
+        let (b, _) = train_test_split(&ds, 0.3, 9);
+        assert_eq!(a.x, b.x);
+        let (c, _) = train_test_split(&ds, 0.3, 10);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn metrics_perfect_classifier() {
+        let y = vec![1.0, 1.0, -1.0, -1.0];
+        let s = vec![2.0, 0.5, -0.5, -2.0];
+        let m = classification_metrics(&y, &s);
+        assert_eq!(m.accuracy, 1.0);
+        assert_eq!(m.precision, 1.0);
+        assert_eq!(m.recall, 1.0);
+        assert_eq!(m.f1, 1.0);
+        assert_eq!(m.auc, 1.0);
+    }
+
+    #[test]
+    fn metrics_inverted_classifier() {
+        let y = vec![1.0, 1.0, -1.0, -1.0];
+        let s = vec![-2.0, -0.5, 0.5, 2.0];
+        let m = classification_metrics(&y, &s);
+        assert_eq!(m.accuracy, 0.0);
+        assert_eq!(m.auc, 0.0);
+    }
+
+    #[test]
+    fn auc_handles_ties_and_degenerate() {
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let s = vec![0.0, 0.0, 0.0, 0.0];
+        assert!((auc(&y, &s) - 0.5).abs() < 1e-12);
+        assert_eq!(auc(&[1.0, 1.0], &[0.1, 0.2]), 0.5); // one class only
+    }
+
+    #[test]
+    fn auc_matches_pair_enumeration() {
+        let mut rng = crate::util::Pcg64::seeded(3);
+        let n = 50;
+        let y: Vec<f64> = (0..n)
+            .map(|_| if rng.next_f64() < 0.4 { 1.0 } else { -1.0 })
+            .collect();
+        let s: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let got = auc(&y, &s);
+        // brute force
+        let (mut wins, mut total) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            for j in 0..n {
+                if y[i] > 0.0 && y[j] < 0.0 {
+                    total += 1.0;
+                    if s[i] > s[j] {
+                        wins += 1.0;
+                    } else if s[i] == s[j] {
+                        wins += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((got - wins / total).abs() < 1e-12, "{got} vs {}", wins / total);
+    }
+
+    #[test]
+    fn trained_model_beats_chance_on_heldout() {
+        // the whole point: train on train, evaluate on test.
+        // reuters twin: ~45% positive, so a 30% split is never one-class
+        let mut ds = crate::data::reuters_like(&GenOptions {
+            scale: 0.03,
+            ..Default::default()
+        });
+        ds.x.normalize_columns();
+        let (train, test) = train_test_split(&ds, 0.3, 5);
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.dataset.normalize = false; // already normalized
+        cfg.problem.lam = 1e-4;
+        cfg.solver.algorithm = "thread-greedy".into();
+        cfg.solver.threads = 2;
+        cfg.solver.max_seconds = 4.0;
+        cfg.solver.line_search_steps = 10;
+        let res = crate::coordinator::driver::run_on(&cfg, train, None).unwrap();
+        let s = scores(&test.x, &res.w);
+        let m = classification_metrics(&test.y, &s);
+        assert!(m.auc > 0.7, "test AUC {} (metrics {m:?})", m.auc);
+    }
+}

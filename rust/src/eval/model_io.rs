@@ -1,0 +1,71 @@
+//! Trained-model persistence: sparse text format (feature index +
+//! weight per line) so models are diffable, plus load for `gencd
+//! predict`.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+
+/// Write nonzero weights as `# gencd-model <k>` header + `j w` lines.
+pub fn write_model(w: &[f64], writer: impl Write) -> anyhow::Result<()> {
+    let mut out = BufWriter::new(writer);
+    writeln!(out, "# gencd-model {}", w.len())?;
+    for (j, &wj) in w.iter().enumerate() {
+        if wj != 0.0 {
+            writeln!(out, "{j} {wj}")?;
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Read a [`write_model`] file back into a dense weight vector.
+pub fn read_model(reader: impl Read) -> anyhow::Result<Vec<f64>> {
+    let mut lines = BufReader::new(reader).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty model file"))??;
+    let k: usize = header
+        .strip_prefix("# gencd-model ")
+        .ok_or_else(|| anyhow::anyhow!("bad model header '{header}'"))?
+        .trim()
+        .parse()?;
+    let mut w = vec![0.0; k];
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (j, v) = line
+            .split_once(' ')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected 'j w'", lineno + 2))?;
+        let j: usize = j.parse()?;
+        anyhow::ensure!(j < k, "line {}: index {j} >= {k}", lineno + 2);
+        w[j] = v.parse()?;
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut w = vec![0.0; 100];
+        w[3] = 1.5;
+        w[97] = -0.25;
+        let mut buf = Vec::new();
+        write_model(&w, &mut buf).unwrap();
+        let back = read_model(&buf[..]).unwrap();
+        assert_eq!(back, w);
+        // sparse: only 3 lines (header + 2 weights)
+        assert_eq!(String::from_utf8(buf).unwrap().lines().count(), 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_model(&b"nope"[..]).is_err());
+        assert!(read_model(&b"# gencd-model 2\n5 1.0\n"[..]).is_err());
+        assert!(read_model(&b""[..]).is_err());
+    }
+}

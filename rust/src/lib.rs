@@ -1,0 +1,34 @@
+//! # GenCD — Generic Parallel Coordinate Descent
+//!
+//! A production-oriented reproduction of *Scaling Up Coordinate Descent
+//! Algorithms for Large ℓ1 Regularization Problems* (Scherrer,
+//! Halappanavar, Tewari, Haglin; ICML 2012): the GenCD
+//! Select/Propose/Accept/Update framework and its instantiations
+//! (CCD/SCD, SHOTGUN, THREAD-GREEDY, GREEDY, COLORING), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the shared-memory coordinator: selection
+//!   policies, parallel propose workers, accept policies, atomic
+//!   updates, coloring preprocessing, datasets, metrics, CLI.
+//! * **L2/L1 (python/, build-time only)** — the dense-block Propose /
+//!   objective / line-search compute graph in JAX calling Pallas
+//!   kernels, AOT-lowered to HLO text.
+//! * **runtime** — PJRT CPU client loading `artifacts/*.hlo.txt` so the
+//!   solve path never touches Python.
+//!
+//! Start with [`coordinator::driver`] or the `gencd` binary; see
+//! `examples/quickstart.rs`.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod coloring;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod loss;
+pub mod runtime;
+pub mod simulate;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,178 @@
+//! Dense linear-algebra helpers: the power-iteration estimate of the
+//! spectral radius of `X^T X`, which determines Shotgun's safe
+//! parallelism bound `P* = k / (2 rho)` (paper Sec. 4.1).
+
+use crate::sparse::CscMatrix;
+use crate::util::Pcg64;
+
+/// Result of a spectral-radius estimation run.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralEstimate {
+    /// Estimated maximal eigenvalue of `X^T X`.
+    pub rho: f64,
+    /// Iterations performed.
+    pub iters: usize,
+    /// Relative change of the estimate at the last iteration.
+    pub rel_change: f64,
+}
+
+/// Power iteration on `X^T X` (never materialized: each step is one
+/// `X v` and one `X^T (X v)` sparse pass).
+pub fn spectral_radius_xtx(
+    x: &CscMatrix,
+    max_iters: usize,
+    tol: f64,
+    seed: u64,
+) -> SpectralEstimate {
+    let k = x.n_cols();
+    if k == 0 || x.nnz() == 0 {
+        return SpectralEstimate {
+            rho: 0.0,
+            iters: 0,
+            rel_change: 0.0,
+        };
+    }
+    let mut rng = Pcg64::seeded(seed);
+    let mut v: Vec<f64> = (0..k).map(|_| rng.next_normal()).collect();
+    normalize(&mut v);
+
+    let mut rho = 0.0;
+    let mut rel_change = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..max_iters {
+        let xv = x.matvec(&v);
+        let mut xtxv = x.matvec_t(&xv);
+        // Rayleigh quotient: v is unit, so rho ~ <v, X^T X v> = |X v|^2
+        let new_rho: f64 = xv.iter().map(|t| t * t).sum();
+        let norm = normalize(&mut xtxv);
+        if norm == 0.0 {
+            rho = 0.0;
+            iters = it + 1;
+            rel_change = 0.0;
+            break;
+        }
+        v = xtxv;
+        rel_change = (new_rho - rho).abs() / new_rho.max(1e-300);
+        rho = new_rho;
+        iters = it + 1;
+        if rel_change < tol {
+            break;
+        }
+    }
+    SpectralEstimate {
+        rho,
+        iters,
+        rel_change,
+    }
+}
+
+/// Shotgun's maximum safe parallel update count `P* = k / (2 rho)`,
+/// clamped to at least 1 (Bradley et al. 2011, as used in Sec. 4.1).
+pub fn shotgun_pstar(n_features: usize, rho: f64) -> usize {
+    if rho <= 0.0 {
+        return n_features.max(1);
+    }
+    ((n_features as f64 / (2.0 * rho)).floor() as usize).max(1)
+}
+
+/// Normalize to unit L2 norm in place; returns the original norm.
+pub fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+
+    #[test]
+    fn identity_block_has_rho_one() {
+        // orthonormal columns => X^T X = I => rho = 1
+        let mut b = CooBuilder::new(6, 6);
+        for i in 0..6 {
+            b.push(i, i, 1.0);
+        }
+        let m = b.build();
+        let est = spectral_radius_xtx(&m, 200, 1e-12, 1);
+        assert!((est.rho - 1.0).abs() < 1e-9, "rho={}", est.rho);
+    }
+
+    #[test]
+    fn duplicated_column_doubles_rho() {
+        // two identical unit columns: X^T X = [[1,1],[1,1]], rho = 2
+        let mut b = CooBuilder::new(4, 2);
+        b.push(0, 0, 1.0);
+        b.push(0, 1, 1.0);
+        let m = b.build();
+        let est = spectral_radius_xtx(&m, 500, 1e-14, 2);
+        assert!((est.rho - 2.0).abs() < 1e-6, "rho={}", est.rho);
+    }
+
+    #[test]
+    fn matches_dense_eigen_small() {
+        // random 5x4, compare against the dominant eigenvalue obtained by
+        // straightforward dense power iteration with many iterations.
+        let mut rng = Pcg64::seeded(3);
+        let mut b = CooBuilder::new(5, 4);
+        for i in 0..5 {
+            for j in 0..4 {
+                if rng.next_f64() < 0.7 {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let m = b.build();
+        let dense = m.to_dense();
+        // dense X^T X
+        let mut xtx = [[0.0f64; 4]; 4];
+        for a in 0..4 {
+            for c in 0..4 {
+                xtx[a][c] = (0..5).map(|i| dense[i][a] * dense[i][c]).sum();
+            }
+        }
+        let mut v = [1.0, 0.5, -0.3, 0.8];
+        let mut lam = 0.0;
+        for _ in 0..2000 {
+            let mut nv = [0.0; 4];
+            for a in 0..4 {
+                for c in 0..4 {
+                    nv[a] += xtx[a][c] * v[c];
+                }
+            }
+            lam = (0..4).map(|a| nv[a] * v[a]).sum::<f64>()
+                / (0..4).map(|a| v[a] * v[a]).sum::<f64>();
+            let norm = nv.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for a in 0..4 {
+                v[a] = nv[a] / norm;
+            }
+        }
+        let est = spectral_radius_xtx(&m, 2000, 1e-14, 4);
+        assert!(
+            (est.rho - lam).abs() < 1e-6 * lam.max(1.0),
+            "sparse {} dense {}",
+            est.rho,
+            lam
+        );
+    }
+
+    #[test]
+    fn pstar_formula() {
+        // paper Table 3: DOROTHEA has k=100000, P*~23 => rho ~ 2174
+        assert_eq!(shotgun_pstar(100_000, 2173.9), 23);
+        assert_eq!(shotgun_pstar(10, 0.0), 10);
+        assert_eq!(shotgun_pstar(10, 1e9), 1);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let m = CooBuilder::new(3, 3).build();
+        let est = spectral_radius_xtx(&m, 10, 1e-10, 5);
+        assert_eq!(est.rho, 0.0);
+    }
+}

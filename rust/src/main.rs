@@ -1,0 +1,469 @@
+//! `gencd` — the GenCD launcher.
+//!
+//! Subcommands:
+//!   train     run one experiment from a config file / CLI overrides
+//!   datagen   generate a synthetic dataset twin and write it to disk
+//!   color     run the coloring preprocessing and print statistics
+//!   spectral  estimate rho(X^T X) and Shotgun's P*
+//!   table3    regenerate the paper's Table 3
+//!   fig1      regenerate Figure 1 (convergence, 4 algorithms)
+//!   fig2      regenerate Figure 2 (scalability, measured + simulated)
+//!   artifacts inspect the AOT artifact manifest and smoke-run one
+//!
+//! Examples:
+//!   gencd train --dataset reuters@0.1 --algorithm coloring --seconds 10
+//!   gencd train --config configs/dorothea.toml --set solver.threads=8
+//!   gencd table3 --scale 0.1
+
+use gencd::cli::Args;
+use gencd::coloring::{color_features, Strategy};
+use gencd::config::RunConfig;
+use gencd::coordinator::driver;
+use gencd::linalg::{shotgun_pstar, spectral_radius_xtx};
+use gencd::sparse::io as sio;
+use gencd::util::Timer;
+
+fn main() {
+    let mut args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&mut args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &mut Args) -> anyhow::Result<()> {
+    match args.subcommand.as_str() {
+        "train" => cmd_train(args),
+        "path" => cmd_path(args),
+        "eval" => cmd_eval(args),
+        "datagen" => cmd_datagen(args),
+        "color" => cmd_color(args),
+        "spectral" => cmd_spectral(args),
+        "table3" => cmd_table3(args),
+        "fig1" => cmd_fig1(args),
+        "fig2" => cmd_fig2(args),
+        "artifacts" => cmd_artifacts(args),
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try `gencd help`)"),
+    }
+}
+
+const HELP: &str = "\
+gencd — GenCD parallel coordinate descent (Scherrer et al., ICML 2012)
+
+USAGE: gencd <subcommand> [flags]
+
+SUBCOMMANDS
+  train      --config FILE | --dataset NAME --algorithm ALG [--lam X]
+             [--threads N] [--seconds S] [--line-search N] [--csv FILE]
+             [--set table.key=value]...
+  path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
+             [--seconds S] [--threads N]     (warm-started lambda path)
+  eval       --dataset NAME [--test-frac F] [--model FILE | train flags]
+             [--save FILE]                   (train/test split + metrics)
+  datagen    NAME --out FILE[.bin|.libsvm] [--scale F] [--seed N]
+  color      --dataset NAME [--strategy greedy|balanced|largest-first]
+  spectral   --dataset NAME [--iters N]
+  table3     [--scale F] [--seconds S]     (paper Table 3)
+  fig1       [--scale F] [--seconds S]     (paper Figure 1)
+  fig2       [--scale F] [--seconds S] [--threads-list 1,2,4,...]
+  artifacts  [--dir PATH] [--smoke]
+
+Datasets: dorothea, reuters, optionally suffixed @scale (reuters@0.1),
+or any libsvm/binary file via --set dataset.path=FILE.
+Algorithms: ccd scd shotgun thread-greedy greedy coloring topk block-shotgun
+";
+
+/// Build a RunConfig from --config + shortcut flags + --set overrides.
+fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.value("config") {
+        Some(path) => RunConfig::from_file(&path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.value("dataset") {
+        cfg.dataset.name = v;
+    }
+    if let Some(v) = args.value("algorithm") {
+        cfg.solver.algorithm = v;
+    }
+    if let Some(v) = args.value("lam") {
+        cfg.problem.lam = v.parse()?;
+    }
+    if let Some(v) = args.value("loss") {
+        cfg.problem.loss = v;
+    }
+    if let Some(v) = args.value("threads") {
+        cfg.solver.threads = v.parse()?;
+    }
+    if let Some(v) = args.value("seconds") {
+        cfg.solver.max_seconds = v.parse()?;
+    }
+    if let Some(v) = args.value("iters") {
+        cfg.solver.max_iters = v.parse()?;
+    }
+    if let Some(v) = args.value("line-search") {
+        cfg.solver.line_search_steps = v.parse()?;
+    }
+    if let Some(v) = args.value("seed") {
+        cfg.solver.seed = v.parse()?;
+    }
+    if let Some(v) = args.value("csv") {
+        cfg.csv = Some(v);
+    }
+    for kv in args.values("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+        cfg.set(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
+    let profile = args.flag("profile");
+    let kkt = args.flag("kkt");
+    let cfg = config_from_args(args)?;
+    args.finish()?;
+    println!(
+        "dataset={} loss={} lam={:.1e} algorithm={} threads={} backend={}",
+        cfg.dataset.name,
+        cfg.problem.loss,
+        cfg.problem.lam,
+        cfg.solver.algorithm,
+        cfg.solver.threads,
+        cfg.solver.backend.name(),
+    );
+    let res = if cfg.solver.backend == gencd::config::Backend::DenseBlockHlo {
+        let ds = driver::load_dataset(&cfg)?;
+        let loss = gencd::loss::by_name(&cfg.problem.loss)?;
+        let problem =
+            gencd::coordinator::Problem::new(ds, loss, cfg.problem.lam);
+        let rt = gencd::runtime::Runtime::from_default_dir()?;
+        let mut proposer = gencd::runtime::HloProposer::new(&rt, &problem)?;
+        let ds = driver::load_dataset(&cfg)?; // problem consumed the first copy
+        driver::run_on(&cfg, ds, Some(&mut proposer))?
+    } else {
+        driver::run(&cfg)?
+    };
+    if let Some(p) = res.pstar {
+        println!("P* = {p} (rho = {:.2})", res.rho.unwrap_or(f64::NAN));
+    }
+    if let Some(c) = res.coloring_colors {
+        println!(
+            "coloring: {c} colors, {:.1} features/color, {:.2}s",
+            res.coloring_mean_size.unwrap_or(0.0),
+            res.coloring_secs.unwrap_or(0.0)
+        );
+    }
+    println!("{}", res.summary());
+    if kkt {
+        let mut ds = driver::load_dataset(&cfg)?;
+        if cfg.dataset.normalize {
+            ds.x.normalize_columns();
+        }
+        let problem = gencd::coordinator::Problem::new(
+            ds,
+            gencd::loss::by_name(&cfg.problem.loss)?,
+            cfg.problem.lam,
+        );
+        let r = gencd::coordinator::kkt::check(&problem, &res.w, 1e-6);
+        println!(
+            "KKT: max violation {:.3e} (coord {}), mean {:.3e}, {} coords > {:.0e}",
+            r.max_violation, r.argmax, r.mean_violation, r.n_violating, r.tol
+        );
+    }
+    if profile {
+        let m = &res.metrics;
+        let total = res.elapsed_secs.max(1e-12);
+        let phases = [
+            ("select+log", m.select_secs),
+            ("propose", m.propose_secs),
+            ("accept", m.accept_secs),
+            ("update", m.update_secs),
+        ];
+        println!("phase breakdown (leader wall-clock):");
+        for (name, secs) in phases {
+            println!("  {name:<11} {secs:>8.3}s  {:>5.1}%", 100.0 * secs / total);
+        }
+        let sum: f64 = phases.iter().map(|(_, s)| s).sum();
+        println!(
+            "  {:<11} {:>8.3}s  {:>5.1}%  (barriers + worker wait)",
+            "other",
+            total - sum,
+            100.0 * (total - sum) / total
+        );
+        println!(
+            "  propose traversed {:.1}M nnz ({:.2} ns/nnz incl. barrier overlap)",
+            m.propose_nnz as f64 / 1e6,
+            m.propose_secs * 1e9 / m.propose_nnz.max(1) as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_path(args: &mut Args) -> anyhow::Result<()> {
+    let dataset = args
+        .value("dataset")
+        .unwrap_or_else(|| "reuters@0.05".into());
+    let loss = args.value("loss").unwrap_or_else(|| "logistic".into());
+    let cfg = gencd::coordinator::path::PathConfig {
+        algorithm: gencd::coordinator::Algorithm::by_name(
+            &args.value("algorithm").unwrap_or_else(|| "shotgun".into()),
+        )?,
+        n_points: args.get("points", 10usize)?,
+        min_ratio: args.get("min-ratio", 1e-3f64)?,
+        threads: args.get("threads", 4usize)?,
+        max_seconds: args.get("seconds", 3.0f64)?,
+        tol: args.get("tol", 1e-7f64)?,
+        line_search_steps: args.get("line-search", 0usize)?,
+        seed: args.get("seed", 1u64)?,
+        ..Default::default()
+    };
+    args.finish()?;
+    let mut ds = gencd::data::by_name(&dataset)?;
+    ds.x.normalize_columns();
+    println!(
+        "{dataset}: {} x {}, loss {loss}, {} path points",
+        ds.n_samples(),
+        ds.n_features(),
+        cfg.n_points
+    );
+    println!(
+        "{:>11} {:>12} {:>8} {:>10} {:>7}",
+        "lambda", "objective", "nnz", "updates", "secs"
+    );
+    for p in gencd::coordinator::path::solve_path(&ds, &loss, &cfg)? {
+        println!(
+            "{:>11.3e} {:>12.6} {:>8} {:>10} {:>7.2}",
+            p.lam, p.objective, p.nnz, p.updates, p.elapsed_secs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &mut Args) -> anyhow::Result<()> {
+    let test_frac: f64 = args.get("test-frac", 0.25)?;
+    let split_seed: u64 = args.get("split-seed", 11)?;
+    let model_path = args.value("model");
+    let save_path = args.value("save");
+    let cfg = config_from_args(args)?;
+    args.finish()?;
+
+    let mut ds = driver::load_dataset(&cfg)?;
+    if cfg.dataset.normalize {
+        ds.x.normalize_columns();
+    }
+    let (train, test) = gencd::eval::train_test_split(&ds, test_frac, split_seed);
+    println!(
+        "{}: {} train / {} test x {} features",
+        cfg.dataset.name,
+        train.n_samples(),
+        test.n_samples(),
+        ds.n_features()
+    );
+
+    let w = match model_path {
+        Some(path) => {
+            let w = gencd::eval::model_io::read_model(std::fs::File::open(&path)?)?;
+            anyhow::ensure!(
+                w.len() == ds.n_features(),
+                "model has {} features, dataset {}",
+                w.len(),
+                ds.n_features()
+            );
+            println!("loaded model from {path}");
+            w
+        }
+        None => {
+            let mut train_cfg = cfg.clone();
+            train_cfg.dataset.normalize = false; // already applied
+            let res = driver::run_on(&train_cfg, train, None)?;
+            println!("{}", res.summary());
+            res.w
+        }
+    };
+    if let Some(path) = save_path {
+        gencd::eval::model_io::write_model(&w, std::fs::File::create(&path)?)?;
+        println!("saved model to {path}");
+    }
+    let m = gencd::eval::classification_metrics(
+        &test.y,
+        &gencd::eval::scores(&test.x, &w),
+    );
+    println!(
+        "held-out ({} samples): accuracy {:.4} | precision {:.4} | recall {:.4} | F1 {:.4} | AUC {:.4}",
+        m.n, m.accuracy, m.precision, m.recall, m.f1, m.auc
+    );
+    Ok(())
+}
+
+fn cmd_datagen(args: &mut Args) -> anyhow::Result<()> {
+    let name = args
+        .positionals
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("datagen needs a dataset name"))?;
+    let scale: f64 = args.get("scale", 1.0)?;
+    let seed: u64 = args.get("seed", gencd::data::GenOptions::default().seed)?;
+    let out = args
+        .value("out")
+        .ok_or_else(|| anyhow::anyhow!("--out required"))?;
+    args.finish()?;
+    let mut opts = gencd::data::GenOptions::with_scale(scale);
+    opts.seed = seed;
+    let (ds, secs) = gencd::util::timer::timed(|| match name.as_str() {
+        "dorothea" => Ok(gencd::data::dorothea_like(&opts)),
+        "reuters" => Ok(gencd::data::reuters_like(&opts)),
+        other => Err(anyhow::anyhow!("unknown dataset '{other}'")),
+    });
+    let ds = ds?;
+    println!(
+        "{}: {} samples x {} features, {} nnz ({:.1}/feature) in {secs:.2}s",
+        ds.name,
+        ds.n_samples(),
+        ds.n_features(),
+        ds.x.nnz(),
+        ds.x.mean_col_nnz()
+    );
+    if out.ends_with(".bin") {
+        sio::write_binary(&ds, std::path::Path::new(&out))?;
+    } else {
+        sio::write_libsvm(&ds, std::fs::File::create(&out)?)?;
+    }
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_color(args: &mut Args) -> anyhow::Result<()> {
+    let dataset = args
+        .value("dataset")
+        .unwrap_or_else(|| "dorothea@0.1".into());
+    let strategy =
+        Strategy::by_name(&args.value("strategy").unwrap_or_else(|| "greedy".into()))?;
+    args.finish()?;
+    let mut ds = gencd::data::by_name(&dataset)?;
+    ds.x.normalize_columns();
+    let c = color_features(&ds.x, strategy, 1);
+    gencd::coloring::verify::verify_coloring(&ds.x, &c)
+        .map_err(|e| anyhow::anyhow!("INVALID COLORING: {e}"))?;
+    println!(
+        "{dataset}: {} colors | features/color mean {:.1} min {} max {} | imbalance {:.2} | {:.3}s [{}]",
+        c.n_colors(),
+        c.mean_class_size(),
+        c.min_class_size(),
+        c.max_class_size(),
+        c.imbalance(),
+        c.elapsed_secs,
+        strategy.name(),
+    );
+    Ok(())
+}
+
+fn cmd_spectral(args: &mut Args) -> anyhow::Result<()> {
+    let dataset = args
+        .value("dataset")
+        .unwrap_or_else(|| "dorothea@0.1".into());
+    let iters: usize = args.get("iters", 200)?;
+    args.finish()?;
+    let mut ds = gencd::data::by_name(&dataset)?;
+    ds.x.normalize_columns();
+    let t = Timer::start();
+    let est = spectral_radius_xtx(&ds.x, iters, 1e-8, 1);
+    println!(
+        "{dataset}: rho(X^T X) = {:.3} ({} iters, rel change {:.1e}, {:.2}s) => P* = {}",
+        est.rho,
+        est.iters,
+        est.rel_change,
+        t.elapsed_secs(),
+        shotgun_pstar(ds.n_features(), est.rho)
+    );
+    Ok(())
+}
+
+fn bench_env(args: &mut Args, default_secs: f64) -> anyhow::Result<()> {
+    let scale: f64 = args.get("scale", 0.1)?;
+    let seconds: f64 = args.get("seconds", default_secs)?;
+    std::env::set_var("GENCD_BENCH_SCALE", scale.to_string());
+    std::env::set_var("GENCD_BENCH_SECONDS", seconds.to_string());
+    Ok(())
+}
+
+fn cmd_table3(args: &mut Args) -> anyhow::Result<()> {
+    bench_env(args, 5.0)?;
+    args.finish()?;
+    gencd::bench_harness::experiments::print_table3();
+    Ok(())
+}
+
+fn cmd_fig1(args: &mut Args) -> anyhow::Result<()> {
+    bench_env(args, 5.0)?;
+    let csv_dir = args.value("csv-dir");
+    args.finish()?;
+    gencd::bench_harness::experiments::print_fig1(csv_dir.as_deref());
+    Ok(())
+}
+
+fn cmd_fig2(args: &mut Args) -> anyhow::Result<()> {
+    bench_env(args, 2.0)?;
+    let threads: Vec<usize> = args
+        .value("threads-list")
+        .unwrap_or_else(|| "1,2,4,8,16,32".into())
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    args.finish()?;
+    gencd::bench_harness::experiments::print_fig2(&threads);
+    Ok(())
+}
+
+fn cmd_artifacts(args: &mut Args) -> anyhow::Result<()> {
+    let dir = args
+        .value("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(gencd::runtime::Manifest::default_dir);
+    let smoke = args.flag("smoke");
+    args.finish()?;
+    let m = gencd::runtime::Manifest::load(&dir)?;
+    println!("{} entries in {}", m.entries.len(), dir.display());
+    for e in &m.entries {
+        println!(
+            "  {:<12} {:<9} n={:<6} b={:<3} {} {}",
+            e.kind,
+            e.loss,
+            e.n,
+            e.b,
+            e.file,
+            e.ls_steps.map(|s| format!("steps={s}")).unwrap_or_default()
+        );
+    }
+    if smoke {
+        let rt = gencd::runtime::Runtime::new(&dir)?;
+        println!("platform: {}", rt.platform());
+        let entry = m.find("objective", "logistic", 1)?.clone();
+        let exe = rt.compile(&entry)?;
+        let n = entry.n;
+        let y = vec![1.0f32; n];
+        let z = vec![0.0f32; n];
+        let mask = vec![1.0f32; n];
+        let scalars = [0.0f32, 0.0, 1.0 / n as f32];
+        let out = exe.run_f32(&[&y, &z, &mask, &scalars])?;
+        let want = (2f32).ln();
+        println!("smoke objective(0) = {} (expect ~{want})", out[0][0]);
+        anyhow::ensure!((out[0][0] - want).abs() < 1e-4, "smoke mismatch");
+        println!("smoke OK");
+    }
+    Ok(())
+}

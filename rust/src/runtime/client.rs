@@ -1,0 +1,130 @@
+//! PJRT client wrapper: load an HLO-text artifact, compile it once,
+//! execute it many times from the solve path.
+//!
+//! Mirrors /opt/xla-example/load_hlo: the interchange format is HLO
+//! *text* (`HloModuleProto::from_text_file`) because serialized
+//! jax >= 0.5 protos carry 64-bit instruction ids that this XLA rejects.
+
+use std::path::Path;
+
+use super::manifest::{Entry, Manifest};
+
+/// A PJRT CPU session. One per process is plenty; executables borrow it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU client and load the manifest from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest })
+    }
+
+    /// Load + manifest from the default artifacts directory.
+    pub fn from_default_dir() -> anyhow::Result<Self> {
+        Self::new(Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one manifest entry into an executable.
+    pub fn compile(&self, entry: &Entry) -> anyhow::Result<Executable> {
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {}", path.display()))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable {
+            exe,
+            entry: entry.clone(),
+        })
+    }
+
+    /// Convenience: find + compile.
+    pub fn compile_kind(
+        &self,
+        kind: &str,
+        loss: &str,
+        n_real: usize,
+    ) -> anyhow::Result<Executable> {
+        let entry = self.manifest.find(kind, loss, n_real)?.clone();
+        self.compile(&entry)
+    }
+}
+
+/// A compiled artifact plus its manifest entry (shapes).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: Entry,
+}
+
+impl Executable {
+    /// Execute with f32 inputs matching the manifest's `input_shapes`.
+    /// Returns the flattened f32 outputs in manifest order.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.input_shapes.len(),
+            "{}: expected {} inputs, got {}",
+            self.entry.file,
+            self.entry.input_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.entry.input_shapes) {
+            let numel: usize = shape.iter().product();
+            anyhow::ensure!(
+                data.len() == numel,
+                "{}: input length {} != shape {:?}",
+                self.entry.file,
+                data.len(),
+                shape
+            );
+            let lit = xla::Literal::vec1(data);
+            let lit = if shape.len() == 1 {
+                lit
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.entry.file))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {}: {e:?}", self.entry.file))?;
+        // lowered with return_tuple=True: always a tuple
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.entry.file))?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.entry.file,
+            self.entry.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .map(|p| {
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("read output: {e:?}"))
+            })
+            .collect()
+    }
+}

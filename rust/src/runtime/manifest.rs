@@ -1,0 +1,219 @@
+//! The AOT artifact manifest: what `python/compile/aot.py` produced and
+//! how to call it. Source of truth for shapes — the Rust side never
+//! guesses padding.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// One lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub variant: String,
+    /// `propose` | `objective` | `linesearch`.
+    pub kind: String,
+    pub loss: String,
+    /// Padded sample count baked into the module.
+    pub n: usize,
+    /// Panel width baked into the module.
+    pub b: usize,
+    /// File name inside the artifacts directory.
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub outputs: Vec<String>,
+    /// Line-search step count (linesearch kind only).
+    pub ls_steps: Option<usize>,
+}
+
+/// Parsed manifest + its directory (file paths resolve against it).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let doc = parse(&text)?;
+        let format = doc
+            .get("format")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing format"))?;
+        anyhow::ensure!(format == 1, "unsupported manifest format {format}");
+
+        let scalars: Vec<&str> = doc
+            .get("scalars")
+            .and_then(Json::as_array)
+            .map(|a| a.iter().filter_map(Json::as_str).collect())
+            .unwrap_or_default();
+        anyhow::ensure!(
+            scalars == ["lam", "beta", "inv_n"],
+            "unexpected scalar layout {scalars:?} (rust expects [lam, beta, inv_n])"
+        );
+
+        let mut entries = Vec::new();
+        for e in doc
+            .get("entries")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?
+        {
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("entry missing {k}"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| -> anyhow::Result<usize> {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("entry missing {k}"))
+            };
+            let strings = |k: &str| -> Vec<String> {
+                e.get(k)
+                    .and_then(Json::as_array)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(Json::as_str)
+                            .map(str::to_string)
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let input_shapes = e
+                .get("input_shapes")
+                .and_then(Json::as_array)
+                .map(|a| {
+                    a.iter()
+                        .map(|s| {
+                            s.as_array()
+                                .map(|d| d.iter().filter_map(Json::as_usize).collect())
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            entries.push(Entry {
+                variant: get_str("variant")?,
+                kind: get_str("kind")?,
+                loss: get_str("loss")?,
+                n: get_usize("n")?,
+                b: get_usize("b")?,
+                file: get_str("file")?,
+                inputs: strings("inputs"),
+                input_shapes,
+                outputs: strings("outputs"),
+                ls_steps: e.get("ls_steps").and_then(Json::as_usize),
+            });
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// Default artifacts directory: `$GENCD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GENCD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Find the entry of `kind`/`loss` with the smallest padded `n`
+    /// that fits `n_real` samples. Among equal `n`, prefers the widest
+    /// panel and the deepest line search (the "production" variant over
+    /// the small test one).
+    pub fn find(&self, kind: &str, loss: &str, n_real: usize) -> anyhow::Result<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.loss == loss && e.n >= n_real)
+            .min_by_key(|e| {
+                (
+                    e.n,
+                    std::cmp::Reverse(e.b),
+                    std::cmp::Reverse(e.ls_steps.unwrap_or(0)),
+                )
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no {kind}/{loss} artifact with n >= {n_real} in {} \
+                     (run `make artifacts`, or add a variant in python/compile/aot.py)",
+                    self.dir.display()
+                )
+            })
+    }
+
+    /// Absolute path of an entry's HLO text.
+    pub fn path_of(&self, e: &Entry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "format": 1,
+              "scalars": ["lam", "beta", "inv_n"],
+              "entries": [
+               {"variant": "t", "kind": "propose", "loss": "logistic",
+                "n": 1024, "b": 16, "file": "a.hlo.txt",
+                "inputs": ["x_panel","y","z","mask","w","scalars"],
+                "input_shapes": [[1024,16],[1024],[1024],[1024],[16],[3]],
+                "outputs": ["g","delta","phi"]},
+               {"variant": "r", "kind": "propose", "loss": "logistic",
+                "n": 24576, "b": 64, "file": "b.hlo.txt",
+                "inputs": [], "input_shapes": [], "outputs": []},
+               {"variant": "t", "kind": "linesearch", "loss": "logistic",
+                "n": 1024, "b": 16, "file": "c.hlo.txt",
+                "inputs": [], "input_shapes": [], "outputs": [],
+                "ls_steps": 8}
+              ]
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_find() {
+        let dir = std::env::temp_dir().join("gencd_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        // picks the smallest fitting n
+        assert_eq!(m.find("propose", "logistic", 800).unwrap().n, 1024);
+        assert_eq!(m.find("propose", "logistic", 2000).unwrap().n, 24576);
+        assert!(m.find("propose", "logistic", 99999).is_err());
+        assert!(m.find("propose", "squared", 100).is_err());
+        assert_eq!(
+            m.find("linesearch", "logistic", 100).unwrap().ls_steps,
+            Some(8)
+        );
+        let e = m.find("propose", "logistic", 800).unwrap();
+        assert!(m.path_of(e).ends_with("a.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration: the repo's own artifacts (skipped when absent)
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: {} not built", dir.display());
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find("propose", "logistic", 800).is_ok());
+        for e in &m.entries {
+            assert!(m.path_of(e).exists(), "missing {}", e.file);
+            assert_eq!(*e.input_shapes.last().unwrap(), vec![3]);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` + the
+//! manifest) built by `make artifacts` and executes them from the Rust
+//! solve path. Python never runs here — the artifacts are the only
+//! contract between the layers (DESIGN.md §2).
+
+pub mod client;
+pub mod manifest;
+pub mod proposer;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{Entry, Manifest};
+pub use proposer::{HloObjective, HloProposer};

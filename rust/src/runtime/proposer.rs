@@ -1,0 +1,205 @@
+//! The DenseBlockHlo Propose backend: GenCD's Propose step executed by
+//! the AOT-compiled JAX/Pallas artifact instead of the sparse Rust loop
+//! (DESIGN.md §2).
+//!
+//! Per selected block of up to `b` coordinates, the leader gathers the
+//! columns into a dense `n_pad x b` panel, invokes the compiled
+//! `propose` module — which fuses `ell'(y, z)`, the panel mat-vec
+//! (Pallas MXU kernel) and the Eq. 7/9 epilogue — and scatters
+//! `delta`/`phi` back into the shared state. Numerics are f32 inside the
+//! artifact and f64 in the solver; the integration test bounds the
+//! difference against the sparse path.
+
+use std::sync::atomic::Ordering::Relaxed;
+
+use super::client::{Executable, Runtime};
+use crate::coordinator::engine::BlockProposer;
+use crate::coordinator::problem::{Problem, SharedState};
+
+/// BlockProposer running the AOT `propose` artifact. Holds prebuilt
+/// padded `y`/`mask` buffers and scratch space; construction validates
+/// the column-normalization assumption the scalar `beta` encodes.
+pub struct HloProposer {
+    exe: Executable,
+    n_real: usize,
+    n_pad: usize,
+    b: usize,
+    /// [lam, beta_eff, inv_n] — runtime scalars of the artifact.
+    scalars: [f32; 3],
+    y_pad: Vec<f32>,
+    mask: Vec<f32>,
+    // scratch (reused across calls; propose_block is leader-only)
+    panel: Vec<f32>,
+    z_pad: Vec<f32>,
+    w_blk: Vec<f32>,
+    /// Executions performed (perf accounting).
+    pub calls: u64,
+}
+
+impl HloProposer {
+    /// Build from a runtime + problem. Fails when no artifact variant
+    /// fits the sample count or when columns are not unit-normalized
+    /// (the artifact's scalar `beta` assumes `||X_j|| = 1`; see
+    /// `Problem::beta_j`).
+    pub fn new(rt: &Runtime, problem: &Problem) -> anyhow::Result<Self> {
+        let n_real = problem.n_samples();
+        let loss = problem.loss.name();
+        let exe = rt.compile_kind("propose", loss, n_real)?;
+        let (n_pad, b) = (exe.entry.n, exe.entry.b);
+
+        for (j, &sq) in problem.col_sq_norms.iter().enumerate() {
+            anyhow::ensure!(
+                sq == 0.0 || (sq - 1.0).abs() < 1e-6,
+                "HLO propose backend requires unit-normalized columns \
+                 (column {j} has ||X_j||^2 = {sq}); set dataset.normalize = true"
+            );
+        }
+
+        let mut y_pad = vec![1.0f32; n_pad]; // padded labels: any finite value
+        for (i, &yi) in problem.y.iter().enumerate() {
+            y_pad[i] = yi as f32;
+        }
+        let mut mask = vec![0.0f32; n_pad];
+        mask[..n_real].fill(1.0);
+
+        let beta_eff = problem.loss.beta() / n_real as f64;
+        Ok(Self {
+            exe,
+            n_real,
+            n_pad,
+            b,
+            scalars: [
+                problem.lam as f32,
+                beta_eff as f32,
+                (1.0 / n_real as f64) as f32,
+            ],
+            y_pad,
+            mask,
+            panel: vec![0.0; n_pad * b],
+            z_pad: vec![0.0; n_pad],
+            w_blk: vec![0.0; b],
+            calls: 0,
+        })
+    }
+
+    /// Padded sample count of the bound artifact.
+    pub fn n_pad(&self) -> usize {
+        self.n_pad
+    }
+
+    /// Panel width of the bound artifact.
+    pub fn block_width(&self) -> usize {
+        self.b
+    }
+
+    /// Run one block (<= b coordinates); returns (g, delta, phi) rows
+    /// for exactly `js.len()` coordinates.
+    pub fn run_block(
+        &mut self,
+        problem: &Problem,
+        state: &SharedState,
+        js: &[u32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(js.len() <= self.b, "block too wide: {}", js.len());
+        // gather panel (row-major: XLA literal layout for f32[n, b])
+        self.panel.fill(0.0);
+        for (col, &j) in js.iter().enumerate() {
+            let (rows, vals) = problem.x.col(j as usize);
+            for (&i, &v) in rows.iter().zip(vals) {
+                self.panel[i as usize * self.b + col] = v as f32;
+            }
+        }
+        // snapshot z (padded region stays 0; mask kills its dloss)
+        for i in 0..self.n_real {
+            self.z_pad[i] = state.z[i].load(Relaxed) as f32;
+        }
+        self.w_blk.fill(0.0);
+        for (col, &j) in js.iter().enumerate() {
+            self.w_blk[col] = state.w[j as usize].load(Relaxed) as f32;
+        }
+        let outs = self.exe.run_f32(&[
+            &self.panel,
+            &self.y_pad,
+            &self.z_pad,
+            &self.mask,
+            &self.w_blk,
+            &self.scalars,
+        ])?;
+        self.calls += 1;
+        let take = |v: &Vec<f32>| v[..js.len()].to_vec();
+        Ok((take(&outs[0]), take(&outs[1]), take(&outs[2])))
+    }
+}
+
+impl BlockProposer for HloProposer {
+    fn propose_block(
+        &mut self,
+        problem: &Problem,
+        state: &SharedState,
+        selected: &[u32],
+    ) -> anyhow::Result<()> {
+        let width = self.b;
+        for blk in selected.chunks(width) {
+            let (_, delta, phi) = self.run_block(problem, state, blk)?;
+            for (col, &j) in blk.iter().enumerate() {
+                state.delta[j as usize].store(delta[col] as f64, Relaxed);
+                state.phi[j as usize].store(phi[col] as f64, Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &str {
+        "dense-block-hlo"
+    }
+}
+
+/// Objective evaluation via the AOT `objective` artifact: `F(w)` from
+/// fitted values (the l1 term is added on the Rust side).
+pub struct HloObjective {
+    exe: Executable,
+    n_real: usize,
+    n_pad: usize,
+    scalars: [f32; 3],
+    y_pad: Vec<f32>,
+    mask: Vec<f32>,
+    z_pad: Vec<f32>,
+}
+
+impl HloObjective {
+    pub fn new(rt: &Runtime, problem: &Problem) -> anyhow::Result<Self> {
+        let n_real = problem.n_samples();
+        let exe = rt.compile_kind("objective", problem.loss.name(), n_real)?;
+        let n_pad = exe.entry.n;
+        let mut y_pad = vec![1.0f32; n_pad];
+        for (i, &yi) in problem.y.iter().enumerate() {
+            y_pad[i] = yi as f32;
+        }
+        let mut mask = vec![0.0f32; n_pad];
+        mask[..n_real].fill(1.0);
+        Ok(Self {
+            exe,
+            n_real,
+            n_pad,
+            scalars: [0.0, 0.0, (1.0 / n_real as f64) as f32],
+            y_pad,
+            mask,
+            z_pad: vec![0.0; n_pad],
+        })
+    }
+
+    /// Smooth part `F(w)` from fitted values `z` (length = real n).
+    pub fn smooth(&mut self, z: &[f64]) -> anyhow::Result<f64> {
+        anyhow::ensure!(z.len() == self.n_real, "z length");
+        for i in 0..self.n_real {
+            self.z_pad[i] = z[i] as f32;
+        }
+        for v in &mut self.z_pad[self.n_real..self.n_pad] {
+            *v = 0.0;
+        }
+        let outs = self
+            .exe
+            .run_f32(&[&self.y_pad, &self.z_pad, &self.mask, &self.scalars])?;
+        Ok(outs[0][0] as f64)
+    }
+}

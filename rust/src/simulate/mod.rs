@@ -1,0 +1,288 @@
+//! Thread-scalability cost model — the Figure 2 substitution.
+//!
+//! The paper measures updates/second on a 48-core Opteron for 1..32
+//! threads. This container has a single core, so true multi-thread
+//! *timing* is unobservable (the engine still runs correctly with any
+//! thread count — correctness is tested with real oversubscribed
+//! threads). Following DESIGN.md §4, Figure 2 is regenerated from an
+//! analytic cost model whose per-operation constants are **calibrated
+//! from measured single-thread runs** of the real engine, and whose
+//! synchronization structure mirrors the implementation:
+//!
+//!   iter_time(T) = propose_max_chunk + accept(T) + update_max_chunk
+//!                  + barriers_per_iter * barrier(T)
+//!
+//! * propose/update parallelize over static chunks (max over threads);
+//! * GREEDY's accept is a serial critical-section reduction, linear in
+//!   T (the paper's explanation for its flat scaling — Sec. 5.2);
+//! * atomic `z` adds pay a contention premium proportional to the
+//!   expected support overlap of concurrently-updated columns;
+//! * barriers cost `O(log2 T)` (tree barrier).
+//!
+//! What the model is *for*: reproducing the relative shapes of Fig. 2
+//! (who scales, who saturates, who stays flat) — not absolute Opteron
+//! numbers.
+
+use crate::coordinator::accept::Acceptor;
+use crate::sparse::{CscMatrix, RowPattern};
+
+/// Calibrated per-operation costs (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Per-nonzero cost of the Propose traversal (gather + fma).
+    pub propose_per_nnz: f64,
+    /// Per-sample cost of a dloss refresh.
+    pub dloss_per_sample: f64,
+    /// Per-nonzero cost of the atomic Update scatter.
+    pub update_per_nnz: f64,
+    /// Per-coordinate fixed cost in Propose (Eq. 7/9 epilogue).
+    pub propose_per_coord: f64,
+    /// Serial per-thread cost of a critical-section reduction (GREEDY).
+    pub reduce_per_thread: f64,
+    /// Per-candidate cost of TopK selection.
+    pub select_per_coord: f64,
+    /// Base barrier latency and per-log2(T) increment.
+    pub barrier_base: f64,
+    pub barrier_per_log2t: f64,
+    /// Multiplier on `update_per_nnz` per expected concurrent collision.
+    pub atomic_contention: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Documented defaults in the right order of magnitude for a
+        // 2010s x86 shared-memory node; calibrate() replaces the compute
+        // constants with measured ones.
+        Self {
+            propose_per_nnz: 4e-9,
+            dloss_per_sample: 8e-9,
+            update_per_nnz: 6e-9,
+            propose_per_coord: 8e-9,
+            reduce_per_thread: 2.5e-7, // lock handoff + cacheline bounce
+            select_per_coord: 2e-9,
+            barrier_base: 4e-7,
+            barrier_per_log2t: 3e-7,
+            atomic_contention: 0.5,
+        }
+    }
+}
+
+impl CostModel {
+    /// Replace the compute constants with values measured by the real
+    /// engine (metrics phase timers from a single-thread run).
+    pub fn calibrated(
+        propose_secs: f64,
+        propose_nnz: u64,
+        proposals: u64,
+        update_secs: f64,
+        updates: u64,
+        mean_col_nnz: f64,
+    ) -> Self {
+        let mut m = Self::default();
+        if propose_nnz > 0 {
+            // split propose time between traversal and per-coordinate
+            // epilogue using the default ratio
+            m.propose_per_nnz = 0.8 * propose_secs / propose_nnz as f64;
+            if proposals > 0 {
+                m.propose_per_coord = 0.2 * propose_secs / proposals as f64;
+            }
+        }
+        if updates > 0 && mean_col_nnz > 0.0 {
+            m.update_per_nnz = update_secs / (updates as f64 * mean_col_nnz);
+        }
+        m
+    }
+}
+
+/// Per-(algorithm, dataset) iteration profile the model needs.
+#[derive(Clone, Debug)]
+pub struct IterProfile {
+    /// Mean selected-set size |J|.
+    pub selected: f64,
+    /// Mean accepted-set size |J'| at T threads (callers pass a closure
+    /// result; THREAD-GREEDY accepts exactly T).
+    pub accepted_of_t: fn(f64, usize) -> f64,
+    /// Accept policy (determines the serial reduction term).
+    pub acceptor: Acceptor,
+    /// Mean column nnz.
+    pub mean_col_nnz: f64,
+    /// Samples (dloss refresh size).
+    pub n_samples: usize,
+    /// Expected support overlap of two random columns (atomic
+    /// contention driver); see [`expected_pairwise_overlap`].
+    pub pairwise_overlap: f64,
+    /// Barriers per iteration (5 in the engine).
+    pub barriers: f64,
+}
+
+/// E[|supp(j1) ∩ supp(j2)|] for independent random columns = sum_i
+/// (d_i / k)^2 where d_i is the row degree. COLORING's classes are
+/// constructed to make this 0.
+pub fn expected_pairwise_overlap(x: &CscMatrix) -> f64 {
+    let rows = RowPattern::from_csc(x);
+    let k = x.n_cols().max(1) as f64;
+    (0..rows.n_rows())
+        .map(|i| {
+            let d = rows.row_nnz(i) as f64;
+            (d / k) * (d / k)
+        })
+        .sum()
+}
+
+/// Predicted updates/second at `threads`.
+pub fn updates_per_sec(m: &CostModel, p: &IterProfile, threads: usize) -> f64 {
+    let t = threads.max(1);
+    let tf = t as f64;
+    let accepted = (p.accepted_of_t)(p.selected, t).max(0.0);
+
+    // Propose: static chunks of |J|; the dloss-vs-on-the-fly heuristic
+    // mirrors the engine's.
+    let use_dloss = p.selected * p.mean_col_nnz >= p.n_samples as f64;
+    let chunk = (p.selected / tf).ceil();
+    let mut propose = chunk * (p.mean_col_nnz * m.propose_per_nnz + m.propose_per_coord);
+    if use_dloss {
+        propose += (p.n_samples as f64 / tf).ceil() * m.dloss_per_sample;
+    }
+
+    // Accept: policy-dependent serial work on the leader.
+    let accept = match p.acceptor {
+        Acceptor::All | Acceptor::ThreadGreedy => m.reduce_per_thread * tf * 0.25,
+        Acceptor::GlobalBest => m.reduce_per_thread * tf,
+        Acceptor::GlobalTopK(_) => {
+            m.reduce_per_thread * tf * 0.5 + p.selected * m.select_per_coord
+        }
+    };
+
+    // Update: atomic scatter with contention from expected collisions.
+    // Colliding writers among the (accepted/T per thread, T threads)
+    // concurrent updates: approx (T-1) * overlap.
+    let collisions = (tf - 1.0) * p.pairwise_overlap;
+    let per_nnz = m.update_per_nnz * (1.0 + m.atomic_contention * collisions);
+    let update = (accepted / tf).ceil() * p.mean_col_nnz * per_nnz;
+
+    let barrier = m.barrier_base + m.barrier_per_log2t * (tf.log2().max(0.0));
+    let iter_time = propose + accept + update + p.barriers * barrier;
+    accepted / iter_time
+}
+
+/// Accepted-set-size closures for the paper's algorithms.
+pub mod accepted {
+    /// SHOTGUN / COLORING / CCD / SCD: accept everything selected.
+    pub fn all(selected: f64, _t: usize) -> f64 {
+        selected
+    }
+
+    /// THREAD-GREEDY: one per thread.
+    pub fn per_thread(_selected: f64, t: usize) -> f64 {
+        t as f64
+    }
+
+    /// GREEDY: single best.
+    pub fn one(_selected: f64, _t: usize) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+
+    fn profile(acceptor: Acceptor, selected: f64, accepted_of_t: fn(f64, usize) -> f64) -> IterProfile {
+        IterProfile {
+            selected,
+            accepted_of_t,
+            acceptor,
+            mean_col_nnz: 10.0,
+            n_samples: 1000,
+            pairwise_overlap: 0.05,
+            barriers: 5.0,
+        }
+    }
+
+    #[test]
+    fn thread_greedy_scales_shotgun_saturates() {
+        let m = CostModel::default();
+        let tg = profile(Acceptor::ThreadGreedy, 1024.0, accepted::per_thread);
+        let sg = profile(Acceptor::All, 23.0, accepted::all); // DOROTHEA P*
+        let tg_speedup = updates_per_sec(&m, &tg, 32) / updates_per_sec(&m, &tg, 1);
+        let sg_speedup = updates_per_sec(&m, &sg, 32) / updates_per_sec(&m, &sg, 1);
+        assert!(
+            tg_speedup > sg_speedup,
+            "thread-greedy {tg_speedup} should outscale small-P* shotgun {sg_speedup}"
+        );
+        assert!(tg_speedup > 4.0, "thread-greedy speedup {tg_speedup}");
+    }
+
+    #[test]
+    fn greedy_flattest() {
+        // GREEDY's serial reduction caps scaling (paper Sec. 5.2)
+        let m = CostModel::default();
+        let gr = profile(Acceptor::GlobalBest, 100_000.0, accepted::one);
+        let tg = profile(Acceptor::ThreadGreedy, 1024.0, accepted::per_thread);
+        let gr_speedup = updates_per_sec(&m, &gr, 32) / updates_per_sec(&m, &gr, 1);
+        let tg_speedup = updates_per_sec(&m, &tg, 32) / updates_per_sec(&m, &tg, 1);
+        assert!(gr_speedup < tg_speedup);
+        // and absolute updates/sec stays orders of magnitude below
+        assert!(
+            updates_per_sec(&m, &gr, 32) < updates_per_sec(&m, &tg, 32) / 10.0
+        );
+    }
+
+    #[test]
+    fn bigger_pstar_scales_further() {
+        // REUTERS (P*=800) keeps gaining past where DOROTHEA (P*=23) stops
+        let m = CostModel::default();
+        let small = profile(Acceptor::All, 23.0, accepted::all);
+        let large = profile(Acceptor::All, 800.0, accepted::all);
+        let s = updates_per_sec(&m, &small, 32) / updates_per_sec(&m, &small, 8);
+        let l = updates_per_sec(&m, &large, 32) / updates_per_sec(&m, &large, 8);
+        assert!(l > s, "large-P* 8->32 gain {l} vs small {s}");
+    }
+
+    #[test]
+    fn coloring_zero_overlap_beats_contended() {
+        let m = CostModel::default();
+        let mut contended = profile(Acceptor::All, 22.0, accepted::all);
+        contended.pairwise_overlap = 0.5;
+        let mut clean = contended.clone();
+        clean.pairwise_overlap = 0.0; // coloring guarantee
+        assert!(
+            updates_per_sec(&m, &clean, 16) > updates_per_sec(&m, &contended, 16)
+        );
+    }
+
+    #[test]
+    fn overlap_formula_matches_enumeration() {
+        // 3 cols, rows shared: col0={0,1}, col1={0}, col2={1}
+        let mut b = CooBuilder::new(2, 3);
+        b.push(0, 0, 1.0);
+        b.push(1, 0, 1.0);
+        b.push(0, 1, 1.0);
+        b.push(1, 2, 1.0);
+        let x = b.build();
+        // d_0 = 2 (cols 0,1), d_1 = 2 (cols 0,2); sum (d/k)^2 = 2*(2/3)^2
+        let got = expected_pairwise_overlap(&x);
+        assert!((got - 2.0 * (2.0 / 3.0) * (2.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibration_uses_measurements() {
+        let m = CostModel::calibrated(1.0, 100_000_000, 1_000_000, 0.5, 100_000, 10.0);
+        assert!((m.propose_per_nnz - 8e-9).abs() < 1e-12);
+        assert!((m.update_per_nnz - 5e-10 * 1000.0).abs() < 1e-9);
+        // non-measured constants keep defaults
+        assert_eq!(m.barrier_base, CostModel::default().barrier_base);
+    }
+
+    #[test]
+    fn monotone_in_work() {
+        let m = CostModel::default();
+        let p = profile(Acceptor::All, 100.0, accepted::all);
+        let mut heavier = p.clone();
+        heavier.mean_col_nnz = 100.0;
+        for t in [1, 4, 16] {
+            assert!(updates_per_sec(&m, &p, t) > updates_per_sec(&m, &heavier, t));
+        }
+    }
+}

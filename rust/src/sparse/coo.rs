@@ -1,0 +1,125 @@
+//! Coordinate-format builder: the ergonomic way to construct a
+//! [`CscMatrix`] from generators and file loaders. Accumulates (row, col,
+//! value) triplets, then sorts/deduplicates into CSC.
+
+use super::csc::CscMatrix;
+
+/// Triplet accumulator. Duplicate (row, col) entries are summed on
+/// [`CooBuilder::build`], matching the usual COO->CSC convention.
+#[derive(Clone, Debug, Default)]
+pub struct CooBuilder {
+    n_rows: usize,
+    n_cols: usize,
+    entries: Vec<(u32, u32, f64)>, // (col, row, value) for cheap col sort
+}
+
+impl CooBuilder {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        assert!(n_rows < u32::MAX as usize && n_cols < u32::MAX as usize);
+        Self {
+            n_rows,
+            n_cols,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Preallocate for `nnz` entries.
+    pub fn with_capacity(n_rows: usize, n_cols: usize, nnz: usize) -> Self {
+        let mut b = Self::new(n_rows, n_cols);
+        b.entries.reserve(nnz);
+        b
+    }
+
+    /// Add one entry. Panics on out-of-bounds indices.
+    #[inline]
+    pub fn push(&mut self, row: usize, col: usize, value: f64) {
+        assert!(row < self.n_rows, "row {row} >= {}", self.n_rows);
+        assert!(col < self.n_cols, "col {col} >= {}", self.n_cols);
+        self.entries.push((col as u32, row as u32, value));
+    }
+
+    /// Number of (possibly duplicate) triplets so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sort, merge duplicates (summing), drop explicit zeros, build CSC.
+    pub fn build(mut self) -> CscMatrix {
+        self.entries.sort_unstable_by_key(|&(c, r, _)| (c, r));
+
+        let mut col_ptr = vec![0usize; self.n_cols + 1];
+        let mut row_idx = Vec::with_capacity(self.entries.len());
+        let mut values: Vec<f64> = Vec::with_capacity(self.entries.len());
+
+        let mut it = self.entries.iter().peekable();
+        while let Some(&(c, r, v)) = it.next() {
+            let mut acc = v;
+            while let Some(&&(c2, r2, v2)) = it.peek() {
+                if c2 == c && r2 == r {
+                    acc += v2;
+                    it.next();
+                } else {
+                    break;
+                }
+            }
+            if acc != 0.0 {
+                row_idx.push(r);
+                values.push(acc);
+                col_ptr[c as usize + 1] += 1;
+            }
+        }
+        for j in 0..self.n_cols {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        CscMatrix::from_parts(self.n_rows, self.n_cols, col_ptr, row_idx, values)
+            .expect("CooBuilder produced invalid CSC (internal bug)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_sorted_csc() {
+        let mut b = CooBuilder::new(3, 2);
+        b.push(2, 1, 5.0);
+        b.push(0, 0, 1.0);
+        b.push(1, 1, 2.0);
+        b.push(2, 0, 3.0);
+        let m = b.build();
+        assert_eq!(m.col(0), (&[0u32, 2][..], &[1.0, 3.0][..]));
+        assert_eq!(m.col(1), (&[1u32, 2][..], &[2.0, 5.0][..]));
+    }
+
+    #[test]
+    fn duplicates_sum_and_zeros_drop() {
+        let mut b = CooBuilder::new(2, 1);
+        b.push(0, 0, 1.5);
+        b.push(0, 0, 2.5);
+        b.push(1, 0, 3.0);
+        b.push(1, 0, -3.0); // cancels to zero -> dropped
+        let m = b.build();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.col(0), (&[0u32][..], &[4.0][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row 5")]
+    fn bounds_checked() {
+        let mut b = CooBuilder::new(3, 2);
+        b.push(5, 0, 1.0);
+    }
+
+    #[test]
+    fn empty_build() {
+        let m = CooBuilder::new(4, 3).build();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.n_rows(), 4);
+        assert_eq!(m.n_cols(), 3);
+    }
+}

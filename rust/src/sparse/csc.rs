@@ -1,0 +1,303 @@
+//! Compressed sparse column matrix — the design-matrix representation.
+//!
+//! Row indices are `u32` (the paper's datasets have n < 2^32 by a wide
+//! margin) and values `f64`; a DOROTHEA-scale matrix (800 x 100 000,
+//! 730k nnz) is ~9 MB.
+
+/// CSC sparse matrix. Columns are the *features* of the learning problem.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    /// `col_ptr[j]..col_ptr[j+1]` indexes the entries of column j.
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from raw CSC arrays. Validates invariants.
+    pub fn from_parts(
+        n_rows: usize,
+        n_cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<u32>,
+        values: Vec<f64>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(col_ptr.len() == n_cols + 1, "col_ptr length");
+        anyhow::ensure!(col_ptr[0] == 0, "col_ptr[0] != 0");
+        anyhow::ensure!(
+            *col_ptr.last().unwrap() == row_idx.len(),
+            "col_ptr tail != nnz"
+        );
+        anyhow::ensure!(row_idx.len() == values.len(), "idx/val length mismatch");
+        anyhow::ensure!(
+            col_ptr.windows(2).all(|w| w[0] <= w[1]),
+            "col_ptr not monotone"
+        );
+        anyhow::ensure!(
+            row_idx.iter().all(|&r| (r as usize) < n_rows),
+            "row index out of bounds"
+        );
+        // rows sorted strictly within each column (no duplicates)
+        for j in 0..n_cols {
+            let rows = &row_idx[col_ptr[j]..col_ptr[j + 1]];
+            anyhow::ensure!(
+                rows.windows(2).all(|w| w[0] < w[1]),
+                "column {j} rows not strictly sorted"
+            );
+        }
+        Ok(Self {
+            n_rows,
+            n_cols,
+            col_ptr,
+            row_idx,
+            values,
+        })
+    }
+
+    /// Rows (samples).
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Columns (features).
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Total stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Entries of column j: parallel slices (rows, values).
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let range = self.col_ptr[j]..self.col_ptr[j + 1];
+        (&self.row_idx[range.clone()], &self.values[range])
+    }
+
+    /// nnz of column j.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Mean nnz per column (the paper's "Nonzeros/feature").
+    pub fn mean_col_nnz(&self) -> f64 {
+        self.nnz() as f64 / self.n_cols.max(1) as f64
+    }
+
+    /// Squared L2 norm of each column.
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        (0..self.n_cols)
+            .map(|j| {
+                let (_, v) = self.col(j);
+                v.iter().map(|x| x * x).sum()
+            })
+            .collect()
+    }
+
+    /// Scale each column to unit L2 norm in place (paper Sec. 4.4:
+    /// "we normalized columns of the feature matrix"). Zero columns are
+    /// left untouched. Returns the original norms.
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.n_cols);
+        for j in 0..self.n_cols {
+            let range = self.col_ptr[j]..self.col_ptr[j + 1];
+            let norm = self.values[range.clone()]
+                .iter()
+                .map(|x| x * x)
+                .sum::<f64>()
+                .sqrt();
+            norms.push(norm);
+            if norm > 0.0 {
+                for v in &mut self.values[range] {
+                    *v /= norm;
+                }
+            }
+        }
+        norms
+    }
+
+    /// y += alpha * X_j (scatter along one column) — the Update step's
+    /// `z <- z + delta_j X_j` without atomics (single-thread path).
+    #[inline]
+    pub fn axpy_col(&self, j: usize, alpha: f64, y: &mut [f64]) {
+        let (rows, vals) = self.col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            y[i as usize] += alpha * v;
+        }
+    }
+
+    /// <X_j, d> (gather along one column) — the Propose step's gradient
+    /// numerator.
+    #[inline]
+    pub fn dot_col(&self, j: usize, d: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        let mut acc = 0.0;
+        for (&i, &v) in rows.iter().zip(vals) {
+            acc += v * d[i as usize];
+        }
+        acc
+    }
+
+    /// Dense matvec `X w` (used by power iteration and tests).
+    pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.n_cols);
+        let mut out = vec![0.0; self.n_rows];
+        for j in 0..self.n_cols {
+            let wj = w[j];
+            if wj != 0.0 {
+                self.axpy_col(j, wj, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Transposed matvec `X^T u`.
+    pub fn matvec_t(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.n_rows);
+        (0..self.n_cols).map(|j| self.dot_col(j, u)).collect()
+    }
+
+    /// Gather columns `js` into a dense column-major panel (n x B) of f32
+    /// — the staging step for the DenseBlockHlo propose backend.
+    /// `panel` must have length `n_rows * js.len()` and is fully
+    /// overwritten.
+    pub fn gather_panel_f32(&self, js: &[usize], panel: &mut [f32]) {
+        assert_eq!(panel.len(), self.n_rows * js.len());
+        panel.fill(0.0);
+        for (b, &j) in js.iter().enumerate() {
+            let base = b * self.n_rows;
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                panel[base + i as usize] = v as f32;
+            }
+        }
+    }
+
+    /// Dense representation (tests only; O(n*k) memory).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.n_cols]; self.n_rows];
+        for j in 0..self.n_cols {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                d[i as usize][j] = v;
+            }
+        }
+        d
+    }
+
+    /// Internal accessors for sibling modules (io, csr conversion).
+    pub(crate) fn parts(&self) -> (&[usize], &[u32], &[f64]) {
+        (&self.col_ptr, &self.row_idx, &self.values)
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn small_fixture() -> CscMatrix {
+    // 4x3:
+    //   [1 0 2]
+    //   [0 3 0]
+    //   [4 0 0]
+    //   [0 5 6]
+    CscMatrix::from_parts(
+        4,
+        3,
+        vec![0, 2, 4, 6],
+        vec![0, 2, 1, 3, 0, 3],
+        vec![1.0, 4.0, 3.0, 5.0, 2.0, 6.0],
+    )
+    .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(CscMatrix::from_parts(2, 1, vec![0, 1], vec![5], vec![1.0]).is_err());
+        assert!(CscMatrix::from_parts(2, 1, vec![0], vec![], vec![]).is_err());
+        assert!(
+            CscMatrix::from_parts(2, 1, vec![0, 2], vec![1, 0], vec![1.0, 1.0]).is_err(),
+            "unsorted rows must be rejected"
+        );
+        assert!(
+            CscMatrix::from_parts(2, 1, vec![0, 2], vec![0, 0], vec![1.0, 1.0]).is_err(),
+            "duplicate rows must be rejected"
+        );
+    }
+
+    #[test]
+    fn col_access() {
+        let m = small_fixture();
+        assert_eq!(m.n_rows(), 4);
+        assert_eq!(m.n_cols(), 3);
+        assert_eq!(m.nnz(), 6);
+        let (rows, vals) = m.col(1);
+        assert_eq!(rows, &[1, 3]);
+        assert_eq!(vals, &[3.0, 5.0]);
+        assert_eq!(m.col_nnz(2), 2);
+        assert_eq!(m.mean_col_nnz(), 2.0);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let m = small_fixture();
+        let d = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.dot_col(0, &d), 1.0 + 12.0);
+        let mut y = [0.0; 4];
+        m.axpy_col(2, 2.0, &mut y);
+        assert_eq!(y, [4.0, 0.0, 0.0, 12.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = small_fixture();
+        let w = [1.0, -1.0, 0.5];
+        let got = m.matvec(&w);
+        let dense = m.to_dense();
+        for i in 0..4 {
+            let want: f64 = (0..3).map(|j| dense[i][j] * w[j]).sum();
+            assert!((got[i] - want).abs() < 1e-12);
+        }
+        let u = [1.0, 2.0, 3.0, 4.0];
+        let got_t = m.matvec_t(&u);
+        for j in 0..3 {
+            let want: f64 = (0..4).map(|i| dense[i][j] * u[i]).sum();
+            assert!((got_t[j] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let mut m = small_fixture();
+        let norms = m.normalize_columns();
+        assert!((norms[0] - (17f64).sqrt()).abs() < 1e-12);
+        for (j, _) in norms.iter().enumerate() {
+            let (_, vals) = m.col(j);
+            let n: f64 = vals.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gather_panel() {
+        let m = small_fixture();
+        let mut panel = vec![9.0f32; 8];
+        m.gather_panel_f32(&[2, 0], &mut panel);
+        assert_eq!(panel, vec![2.0, 0.0, 0.0, 6.0, 1.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn col_sq_norms_match() {
+        let m = small_fixture();
+        assert_eq!(m.col_sq_norms(), vec![17.0, 34.0, 40.0]);
+    }
+}

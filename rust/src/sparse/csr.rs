@@ -1,0 +1,192 @@
+//! Row-oriented views of the design matrix.
+//!
+//! [`RowPattern`] is the *pattern-only* transpose (no values): it is what
+//! the coloring preprocessing (Appendix A) walks — "features sharing a
+//! sample" is exactly "columns adjacent through a row". [`CsrMatrix`]
+//! carries values too, for row-oriented numerics.
+
+use super::csc::CscMatrix;
+
+/// Pattern-only CSR: for each row, the sorted column indices with a
+/// nonzero in that row.
+#[derive(Clone, Debug)]
+pub struct RowPattern {
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    n_cols: usize,
+}
+
+impl RowPattern {
+    /// Build from a CSC matrix by bucket-counting (O(nnz)).
+    pub fn from_csc(m: &CscMatrix) -> Self {
+        let (col_ptr, row_idx, _) = m.parts();
+        let n_rows = m.n_rows();
+        let mut row_ptr = vec![0usize; n_rows + 1];
+        for &r in row_idx {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..n_rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = vec![0u32; row_idx.len()];
+        let mut cursor = row_ptr.clone();
+        for j in 0..m.n_cols() {
+            for &r in &row_idx[col_ptr[j]..col_ptr[j + 1]] {
+                col_idx[cursor[r as usize]] = j as u32;
+                cursor[r as usize] += 1;
+            }
+        }
+        // columns visited in increasing j, so each row is already sorted
+        Self {
+            row_ptr,
+            col_idx,
+            n_cols: m.n_cols(),
+        }
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Columns with support on row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// nnz of row i (the row "degree" in the bipartite graph).
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Maximum row degree (bounds the number of colors needed).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.n_rows()).map(|i| self.row_nnz(i)).max().unwrap_or(0)
+    }
+}
+
+/// Value-carrying CSR.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    values: Vec<f64>,
+    n_cols: usize,
+}
+
+impl CsrMatrix {
+    pub fn from_csc(m: &CscMatrix) -> Self {
+        let (col_ptr, row_idx, vals) = m.parts();
+        let n_rows = m.n_rows();
+        let mut row_ptr = vec![0usize; n_rows + 1];
+        for &r in row_idx {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..n_rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = vec![0u32; row_idx.len()];
+        let mut values = vec![0.0; row_idx.len()];
+        let mut cursor = row_ptr.clone();
+        for j in 0..m.n_cols() {
+            for (&r, &v) in row_idx[col_ptr[j]..col_ptr[j + 1]]
+                .iter()
+                .zip(&vals[col_ptr[j]..col_ptr[j + 1]])
+            {
+                let c = cursor[r as usize];
+                col_idx[c] = j as u32;
+                values[c] = v;
+                cursor[r as usize] += 1;
+            }
+        }
+        Self {
+            row_ptr,
+            col_idx,
+            values,
+            n_cols: m.n_cols(),
+        }
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Entries of row i as (cols, values) parallel slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let r = self.row_ptr[i]..self.row_ptr[i + 1];
+        (&self.col_idx[r.clone()], &self.values[r])
+    }
+
+    /// Row dot product <x_i, w>.
+    #[inline]
+    pub fn dot_row(&self, i: usize, w: &[f64]) -> f64 {
+        let (cols, vals) = self.row(i);
+        cols.iter()
+            .zip(vals)
+            .map(|(&j, &v)| v * w[j as usize])
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csc::small_fixture;
+
+    #[test]
+    fn row_pattern_roundtrip() {
+        let m = small_fixture();
+        let p = RowPattern::from_csc(&m);
+        assert_eq!(p.n_rows(), 4);
+        assert_eq!(p.n_cols(), 3);
+        assert_eq!(p.row(0), &[0, 2]);
+        assert_eq!(p.row(1), &[1]);
+        assert_eq!(p.row(2), &[0]);
+        assert_eq!(p.row(3), &[1, 2]);
+        assert_eq!(p.max_row_nnz(), 2);
+    }
+
+    #[test]
+    fn csr_matches_dense() {
+        let m = small_fixture();
+        let r = CsrMatrix::from_csc(&m);
+        let dense = m.to_dense();
+        for i in 0..4 {
+            let (cols, vals) = r.row(i);
+            let mut rowv = vec![0.0; 3];
+            for (&j, &v) in cols.iter().zip(vals) {
+                rowv[j as usize] = v;
+            }
+            assert_eq!(rowv, dense[i]);
+        }
+        let w = [1.0, 2.0, 3.0];
+        for i in 0..4 {
+            let want: f64 = (0..3).map(|j| dense[i][j] * w[j]).sum();
+            assert!((r.dot_row(i, &w) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rows_sorted() {
+        let m = small_fixture();
+        let p = RowPattern::from_csc(&m);
+        for i in 0..p.n_rows() {
+            let row = p.row(i);
+            assert!(row.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

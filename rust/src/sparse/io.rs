@@ -1,0 +1,246 @@
+//! Dataset I/O: LIBSVM text format (the lingua franca for DOROTHEA /
+//! RCV1-style problems) and a fast binary snapshot format so generated
+//! synthetic datasets can be cached across runs.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::coo::CooBuilder;
+use super::csc::CscMatrix;
+
+/// A supervised sparse dataset: design matrix + labels (+-1 for
+/// classification, arbitrary reals for regression).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: CscMatrix,
+    pub y: Vec<f64>,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n_samples(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.n_cols()
+    }
+}
+
+/// Parse LIBSVM text: `label idx:val idx:val ...` per line, 1-based
+/// indices. `n_features` of `None` infers the dimension from the data.
+pub fn read_libsvm(reader: impl Read, n_features: Option<usize>) -> Result<Dataset> {
+    let mut labels = Vec::new();
+    let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+    let mut max_feat = 0usize;
+
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let row = labels.len();
+        labels.push(label);
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: token '{tok}'", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: index '{idx}'", lineno + 1))?;
+            anyhow::ensure!(idx >= 1, "line {}: libsvm indices are 1-based", lineno + 1);
+            let val: f64 = val
+                .parse()
+                .with_context(|| format!("line {}: value '{val}'", lineno + 1))?;
+            max_feat = max_feat.max(idx);
+            trips.push((row, idx - 1, val));
+        }
+    }
+
+    let k = match n_features {
+        Some(k) => {
+            anyhow::ensure!(max_feat <= k, "feature index {max_feat} > declared {k}");
+            k
+        }
+        None => max_feat,
+    };
+    let mut b = CooBuilder::with_capacity(labels.len(), k, trips.len());
+    for (r, c, v) in trips {
+        b.push(r, c, v);
+    }
+    Ok(Dataset {
+        x: b.build(),
+        y: labels,
+        name: "libsvm".into(),
+    })
+}
+
+/// Write LIBSVM text (1-based indices, row-major).
+pub fn write_libsvm(ds: &Dataset, writer: impl Write) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    let csr = super::csr::CsrMatrix::from_csc(&ds.x);
+    for i in 0..ds.n_samples() {
+        write!(w, "{}", ds.y[i])?;
+        let (cols, vals) = csr.row(i);
+        for (&j, &v) in cols.iter().zip(vals) {
+            write!(w, " {}:{}", j + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"GENCDDS1";
+
+/// Binary snapshot: magic, dims, col_ptr, row_idx, values, labels — all
+/// little-endian. ~8x faster to load than libsvm text for REUTERS scale.
+pub fn write_binary(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    let (col_ptr, row_idx, values) = ds.x.parts();
+    for dim in [ds.x.n_rows() as u64, ds.x.n_cols() as u64, ds.x.nnz() as u64] {
+        w.write_all(&dim.to_le_bytes())?;
+    }
+    for &p in col_ptr {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &r in row_idx {
+        w.write_all(&r.to_le_bytes())?;
+    }
+    for &v in values {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &v in &ds.y {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a [`write_binary`] snapshot.
+pub fn read_binary(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == BIN_MAGIC, "bad magic in {}", path.display());
+
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut dyn Read| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let n_rows = read_u64(&mut r)? as usize;
+    let n_cols = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+
+    let mut col_ptr = Vec::with_capacity(n_cols + 1);
+    for _ in 0..=n_cols {
+        col_ptr.push(read_u64(&mut r)? as usize);
+    }
+    let mut row_idx = vec![0u32; nnz];
+    {
+        let mut buf = vec![0u8; nnz * 4];
+        r.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            row_idx[i] = u32::from_le_bytes(c.try_into().unwrap());
+        }
+    }
+    let read_f64s = |r: &mut dyn Read, len: usize| -> Result<Vec<f64>> {
+        let mut buf = vec![0u8; len * 8];
+        r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    };
+    let values = read_f64s(&mut r, nnz)?;
+    let y = read_f64s(&mut r, n_rows)?;
+
+    Ok(Dataset {
+        x: CscMatrix::from_parts(n_rows, n_cols, col_ptr, row_idx, values)?,
+        y,
+        name: path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "binary".into()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Dataset {
+        let mut b = CooBuilder::new(3, 4);
+        b.push(0, 0, 1.0);
+        b.push(0, 3, -2.5);
+        b.push(1, 1, 0.5);
+        b.push(2, 0, 3.0);
+        b.push(2, 2, 4.0);
+        Dataset {
+            x: b.build(),
+            y: vec![1.0, -1.0, 1.0],
+            name: "fixture".into(),
+        }
+    }
+
+    #[test]
+    fn libsvm_roundtrip() {
+        let ds = fixture();
+        let mut buf = Vec::new();
+        write_libsvm(&ds, &mut buf).unwrap();
+        let back = read_libsvm(&buf[..], Some(4)).unwrap();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+    }
+
+    #[test]
+    fn libsvm_parses_comments_and_blank_lines() {
+        let text = "# header\n1 1:2.0 3:1.5\n\n-1 2:0.25 # trailing\n";
+        let ds = read_libsvm(text.as_bytes(), None).unwrap();
+        assert_eq!(ds.n_samples(), 2);
+        assert_eq!(ds.n_features(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.x.col(0), (&[0u32][..], &[2.0][..]));
+        assert_eq!(ds.x.col(1), (&[1u32][..], &[0.25][..]));
+    }
+
+    #[test]
+    fn libsvm_rejects_zero_based() {
+        let text = "1 0:2.0\n";
+        assert!(read_libsvm(text.as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let ds = fixture();
+        let dir = std::env::temp_dir().join("gencd_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fixture.bin");
+        write_binary(&ds, &path).unwrap();
+        let back = read_binary(&path).unwrap();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let dir = std::env::temp_dir().join("gencd_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(read_binary(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! Sparse matrix substrate.
+//!
+//! Coordinate descent traverses *columns* of the design matrix `X`
+//! (one column per proposal — the paper's definition of CD), so the
+//! primary storage is CSC ([`CscMatrix`]). The coloring preprocessing
+//! (Appendix A) and the spectral-radius matvec also need fast row
+//! access, provided by the pattern-only [`RowPattern`] / value-carrying
+//! [`CsrMatrix`].
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod io;
+pub mod ops;
+
+pub use coo::CooBuilder;
+pub use csc::CscMatrix;
+pub use csr::{CsrMatrix, RowPattern};

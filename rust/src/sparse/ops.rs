@@ -1,0 +1,106 @@
+//! Cross-representation operations and property tests tying the sparse
+//! substrate together.
+
+use super::csc::CscMatrix;
+use super::csr::CsrMatrix;
+
+/// Frobenius norm.
+pub fn frobenius(m: &CscMatrix) -> f64 {
+    m.col_sq_norms().iter().sum::<f64>().sqrt()
+}
+
+/// Density = nnz / (rows * cols).
+pub fn density(m: &CscMatrix) -> f64 {
+    m.nnz() as f64 / (m.n_rows() as f64 * m.n_cols() as f64).max(1.0)
+}
+
+/// Verify CSC and CSR agree on every entry (used in integration tests).
+pub fn csc_csr_consistent(csc: &CscMatrix, csr: &CsrMatrix) -> bool {
+    if csc.n_rows() != csr.n_rows() || csc.n_cols() != csr.n_cols() {
+        return false;
+    }
+    let mut nnz = 0usize;
+    for i in 0..csr.n_rows() {
+        let (cols, vals) = csr.row(i);
+        nnz += cols.len();
+        for (&j, &v) in cols.iter().zip(vals) {
+            let (rows, cvals) = csc.col(j as usize);
+            match rows.binary_search(&(i as u32)) {
+                Ok(pos) => {
+                    if cvals[pos] != v {
+                        return false;
+                    }
+                }
+                Err(_) => return false,
+            }
+        }
+    }
+    nnz == csc.nnz()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::CooBuilder;
+    use crate::util::prop;
+
+    fn random_matrix(rng: &mut crate::util::Pcg64, size: usize) -> CscMatrix {
+        let n = 1 + rng.below(size.max(1));
+        let k = 1 + rng.below(size.max(1));
+        let nnz = rng.below(n * k + 1);
+        let mut b = CooBuilder::new(n, k);
+        for _ in 0..nnz {
+            b.push(rng.below(n), rng.below(k), rng.range_f64(-2.0, 2.0));
+        }
+        b.build()
+    }
+
+    #[test]
+    fn prop_csc_csr_roundtrip() {
+        prop::check("csc<->csr consistent", 60, |rng, size| {
+            let m = random_matrix(rng, size);
+            let r = CsrMatrix::from_csc(&m);
+            prop::ensure(
+                csc_csr_consistent(&m, &r),
+                format!("{}x{} nnz={}", m.n_rows(), m.n_cols(), m.nnz()),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_matvec_agree() {
+        prop::check("X w via csc == via csr", 60, |rng, size| {
+            let m = random_matrix(rng, size);
+            let r = CsrMatrix::from_csc(&m);
+            let w: Vec<f64> = (0..m.n_cols()).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let a = m.matvec(&w);
+            let b: Vec<f64> = (0..m.n_rows()).map(|i| r.dot_row(i, &w)).collect();
+            let ok = a
+                .iter()
+                .zip(&b)
+                .all(|(x, y)| (x - y).abs() <= 1e-9 * (1.0 + x.abs()));
+            prop::ensure(ok, format!("mismatch {a:?} vs {b:?}"))
+        });
+    }
+
+    #[test]
+    fn prop_normalize_then_unit() {
+        prop::check("normalized columns have unit norm", 40, |rng, size| {
+            let mut m = random_matrix(rng, size);
+            m.normalize_columns();
+            for sq in m.col_sq_norms() {
+                if sq != 0.0 && (sq - 1.0).abs() > 1e-9 {
+                    return Err(format!("col norm^2 {sq}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn density_and_frobenius() {
+        let m = crate::sparse::csc::small_fixture();
+        assert!((density(&m) - 6.0 / 12.0).abs() < 1e-12);
+        assert!((frobenius(&m) - (17.0f64 + 34.0 + 40.0).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,122 @@
+//! Atomic `f64` — the Rust analogue of OpenMP's `#pragma omp atomic` on a
+//! `double`, which the paper uses for the shared fitted-value vector `z`
+//! (Algorithm 3) and which we additionally use for `w`, `delta`, `phi` so
+//! stale cross-thread reads are well-defined rather than UB.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// An `f64` supporting atomic load/store/fetch-add via `AtomicU64` bit
+/// casting. `fetch_add` is a CAS loop, exactly what `omp atomic` compiles
+/// to for floating-point addition on x86.
+#[derive(Debug)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    #[inline]
+    pub fn new(v: f64) -> Self {
+        Self(AtomicU64::new(v.to_bits()))
+    }
+
+    #[inline]
+    pub fn load(&self, order: Ordering) -> f64 {
+        f64::from_bits(self.0.load(order))
+    }
+
+    #[inline]
+    pub fn store(&self, v: f64, order: Ordering) {
+        self.0.store(v.to_bits(), order);
+    }
+
+    /// Atomically add `v`; returns the previous value.
+    #[inline]
+    pub fn fetch_add(&self, v: f64, order: Ordering) -> f64 {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, new, order, Ordering::Relaxed)
+            {
+                Ok(prev) => return f64::from_bits(prev),
+                Err(next) => cur = next,
+            }
+        }
+    }
+}
+
+impl Default for AtomicF64 {
+    fn default() -> Self {
+        Self::new(0.0)
+    }
+}
+
+impl Clone for AtomicF64 {
+    fn clone(&self) -> Self {
+        Self::new(self.load(Ordering::Relaxed))
+    }
+}
+
+/// Allocate a vector of atomic zeros (the shared arrays of Table 1).
+pub fn atomic_vec(len: usize) -> Vec<AtomicF64> {
+    (0..len).map(|_| AtomicF64::new(0.0)).collect()
+}
+
+/// Snapshot an atomic vector into a plain `Vec<f64>` (Relaxed loads).
+pub fn snapshot(xs: &[AtomicF64]) -> Vec<f64> {
+    xs.iter().map(|x| x.load(Ordering::Relaxed)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
+
+    #[test]
+    fn load_store_roundtrip() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.load(Relaxed), 1.5);
+        a.store(-2.25, Relaxed);
+        assert_eq!(a.load(Relaxed), -2.25);
+        // NaN and infinities round-trip bit-exactly
+        a.store(f64::NEG_INFINITY, Relaxed);
+        assert_eq!(a.load(Relaxed), f64::NEG_INFINITY);
+        a.store(f64::NAN, Relaxed);
+        assert!(a.load(Relaxed).is_nan());
+    }
+
+    #[test]
+    fn fetch_add_returns_previous() {
+        let a = AtomicF64::new(1.0);
+        assert_eq!(a.fetch_add(2.0, Relaxed), 1.0);
+        assert_eq!(a.load(Relaxed), 3.0);
+    }
+
+    #[test]
+    fn concurrent_fetch_add_loses_nothing() {
+        // The exact property the paper relies on for z updates: with
+        // atomic adds, concurrent column updates never lose increments.
+        let a = std::sync::Arc::new(AtomicF64::new(0.0));
+        let threads = 8;
+        let per = 10_000;
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..per {
+                    a.fetch_add(1.0, Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load(Relaxed), (threads * per) as f64);
+    }
+
+    #[test]
+    fn snapshot_copies() {
+        let v = atomic_vec(4);
+        v[2].store(7.0, Relaxed);
+        assert_eq!(snapshot(&v), vec![0.0, 0.0, 7.0, 0.0]);
+    }
+}

@@ -1,0 +1,97 @@
+//! Small self-contained substrates the coordinator is built on.
+//!
+//! This crate builds fully offline; the usual ecosystem crates (`rand`,
+//! `parking_lot`, `serde`, …) are replaced by the minimal implementations
+//! here. Each submodule is independently unit-tested.
+
+pub mod atomic;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use atomic::AtomicF64;
+pub use rng::Pcg64;
+pub use timer::Timer;
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation of a slice.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Soft-threshold operator `s_tau(x) = sign(x) * max(|x| - tau, 0)`
+/// (Sec. 3.1 of the paper).
+#[inline(always)]
+pub fn soft_threshold(x: f64, tau: f64) -> f64 {
+    if x > tau {
+        x - tau
+    } else if x < -tau {
+        x + tau
+    } else {
+        0.0
+    }
+}
+
+/// The paper's clipping function `psi(x; a, b)` (Sec. 3.1). Requires a <= b.
+#[inline(always)]
+pub fn clip_psi(x: f64, a: f64, b: f64) -> f64 {
+    x.clamp(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_threshold_basic() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn clip_psi_matches_definition() {
+        assert_eq!(clip_psi(0.0, -1.0, 1.0), 0.0);
+        assert_eq!(clip_psi(-5.0, -1.0, 1.0), -1.0);
+        assert_eq!(clip_psi(5.0, -1.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn soft_threshold_equals_clip_form() {
+        // s_{lam/beta}(w - g/beta) - w == -psi(w; (g-lam)/beta, (g+lam)/beta)
+        let cases = [
+            (0.3, -1.2, 0.05, 0.25),
+            (-0.7, 0.4, 0.01, 1.0),
+            (0.0, 0.0, 0.1, 0.5),
+            (2.0, 3.0, 0.5, 0.25),
+        ];
+        for (w, g, lam, beta) in cases {
+            let a = soft_threshold(w - g / beta, lam / beta) - w;
+            let b = -clip_psi(w, (g - lam) / beta, (g + lam) / beta);
+            assert!((a - b).abs() < 1e-12, "w={w} g={g}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mean_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[1.0, 1.0, 1.0])).abs() < 1e-12);
+        assert!((stddev(&[0.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+}

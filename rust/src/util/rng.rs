@@ -1,0 +1,229 @@
+//! PCG64 (XSL-RR 128/64) pseudo-random generator.
+//!
+//! Deterministic, seedable, splittable — every experiment in this repo is
+//! reproducible from a single seed. Implemented locally because the build
+//! is offline (no `rand` crate); matches the reference PCG output
+//! function.
+
+/// PCG XSL-RR 128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    /// Convenience constructor with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent generator (used to hand one stream per thread).
+    pub fn split(&mut self, stream: u64) -> Self {
+        Self::new(self.next_u64(), stream.wrapping_mul(2654435769).wrapping_add(1))
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) via Lemire's method.
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Poisson sample (Knuth for small mean, normal approx for large).
+    pub fn next_poisson(&mut self, mean: f64) -> u64 {
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = mean + mean.sqrt() * self.next_normal();
+            x.max(0.0).round() as u64
+        }
+    }
+
+    /// Zipf-distributed integer in [0, n) with exponent `s` (rejection-free
+    /// inverse-CDF over a precomputed table is the caller's job for hot
+    /// loops; this is the convenience path).
+    pub fn next_zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse transform on the (approximate) continuous Zipf CDF.
+        debug_assert!(n > 0);
+        let u = 1.0 - self.next_f64(); // (0, 1]
+        if (s - 1.0).abs() < 1e-9 {
+            let h = (n as f64).ln();
+            ((u * h).exp() - 1.0).min((n - 1) as f64) as usize
+        } else {
+            let p = 1.0 - s;
+            let h = ((n as f64).powf(p) - 1.0) / p;
+            (((u * h * p + 1.0).powf(1.0 / p) - 1.0).min((n - 1) as f64)) as usize
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from [0, n) (Floyd's algorithm).
+    pub fn sample_distinct(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n);
+        let mut chosen = std::collections::HashSet::with_capacity(m);
+        let mut out = Vec::with_capacity(m);
+        for j in (n - m)..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_dependent() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        let mut c = Pcg64::new(42, 2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Pcg64::seeded(7);
+        for _ in 0..10_000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+            let i = r.below(13);
+            assert!(i < 13);
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Pcg64::seeded(3);
+        let m: f64 = (0..50_000).map(|_| r.next_f64()).sum::<f64>() / 50_000.0;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(11);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.next_normal()).collect();
+        let m = crate::util::mean(&xs);
+        let s = crate::util::stddev(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((s - 1.0).abs() < 0.02, "std {s}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Pcg64::seeded(5);
+        for lam in [0.5, 3.0, 7.3, 40.0] {
+            let n = 20_000;
+            let m: f64 =
+                (0..n).map(|_| r.next_poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!((m - lam).abs() < 0.15 * lam.max(1.0), "lam={lam} m={m}");
+        }
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Pcg64::seeded(9);
+        for _ in 0..100 {
+            let s = r.sample_distinct(50, 20);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), 20);
+            assert!(s.iter().all(|&x| x < 50));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(13);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut r = Pcg64::seeded(17);
+        let n = 1000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..100_000 {
+            let z = r.next_zipf(n, 1.1);
+            counts[z] += 1;
+        }
+        // head must dominate tail
+        let head: usize = counts[..10].iter().sum();
+        let tail: usize = counts[n - 10..].iter().sum();
+        assert!(head > 10 * (tail + 1), "head={head} tail={tail}");
+    }
+}

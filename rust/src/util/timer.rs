@@ -1,0 +1,117 @@
+//! Wall-clock timing helpers for the solver's convergence log and the
+//! bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch.
+#[derive(Clone, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds elapsed since start.
+    #[inline]
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Run `f` repeatedly until `min_time` has elapsed and at least
+/// `min_iters` runs happened; returns per-run seconds (best, mean).
+/// This is the criterion-less micro-bench primitive used by `benches/`.
+pub fn bench_loop(min_time: f64, min_iters: usize, mut f: impl FnMut()) -> BenchStats {
+    // warmup
+    f();
+    let mut times = Vec::new();
+    let total = Timer::start();
+    while times.len() < min_iters || total.elapsed_secs() < min_time {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_secs());
+        if times.len() > 10_000_000 {
+            break;
+        }
+    }
+    let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = crate::util::mean(&times);
+    let sd = crate::util::stddev(&times);
+    BenchStats {
+        iters: times.len(),
+        best,
+        mean,
+        stddev: sd,
+    }
+}
+
+/// Summary statistics from [`bench_loop`].
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub best: f64,
+    pub mean: f64,
+    pub stddev: f64,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "best {:>10.3?}us mean {:>10.3?}us (+-{:.3}us) over {} iters",
+            self.best * 1e6,
+            self.mean * 1e6,
+            self.stddev * 1e6,
+            self.iters
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_secs();
+        let b = t.elapsed_secs();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, s) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn bench_loop_runs_min_iters() {
+        let mut count = 0usize;
+        let stats = bench_loop(0.0, 5, || count += 1);
+        assert!(stats.iters >= 5);
+        assert!(count >= 6); // warmup + timed runs
+        assert!(stats.best <= stats.mean + 1e-12);
+    }
+}

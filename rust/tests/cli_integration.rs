@@ -1,0 +1,147 @@
+//! CLI integration: run the built `gencd` binary end-to-end through its
+//! subcommands (the way a user drives the system).
+
+use std::process::Command;
+
+fn gencd() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gencd"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = gencd().args(args).output().expect("spawn gencd");
+    assert!(
+        out.status.success(),
+        "gencd {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = run_ok(&["help"]);
+    for cmd in ["train", "datagen", "color", "spectral", "table3", "fig1", "fig2"] {
+        assert!(out.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn train_runs_and_reports() {
+    let out = run_ok(&[
+        "train",
+        "--dataset",
+        "dorothea@0.03",
+        "--algorithm",
+        "shotgun",
+        "--seconds",
+        "1",
+        "--threads",
+        "2",
+    ]);
+    assert!(out.contains("P* ="), "missing P*: {out}");
+    assert!(out.contains("shotgun |"), "missing summary: {out}");
+    assert!(out.contains("stop"), "missing stop reason: {out}");
+}
+
+#[test]
+fn train_with_config_file_and_overrides() {
+    let dir = std::env::temp_dir().join("gencd_cli_int");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.toml");
+    std::fs::write(
+        &cfg,
+        r#"
+        [dataset]
+        name = "reuters@0.02"
+        [problem]
+        lam = 1e-4
+        [solver]
+        algorithm = "coloring"
+        max_seconds = 1.0
+        threads = 2
+        "#,
+    )
+    .unwrap();
+    let csv = dir.join("hist.csv");
+    let out = run_ok(&[
+        "train",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--set",
+        "solver.threads=1",
+        "--csv",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(out.contains("coloring"), "{out}");
+    assert!(out.contains("threads=1"), "{out}");
+    let hist = std::fs::read_to_string(&csv).unwrap();
+    assert!(hist.starts_with("elapsed_secs,"));
+    assert!(hist.lines().count() > 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn datagen_writes_loadable_files() {
+    let dir = std::env::temp_dir().join("gencd_cli_datagen");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bin = dir.join("d.bin");
+    run_ok(&[
+        "datagen",
+        "dorothea",
+        "--scale",
+        "0.02",
+        "--out",
+        bin.to_str().unwrap(),
+    ]);
+    // train from the file
+    let out = run_ok(&[
+        "train",
+        "--set",
+        &format!("dataset.path={}", bin.display()),
+        "--algorithm",
+        "scd",
+        "--iters",
+        "50",
+        "--threads",
+        "1",
+    ]);
+    assert!(out.contains("scd |"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn color_and_spectral_report() {
+    let out = run_ok(&["color", "--dataset", "dorothea@0.05", "--strategy", "balanced"]);
+    assert!(out.contains("colors"), "{out}");
+    let out = run_ok(&["spectral", "--dataset", "dorothea@0.05"]);
+    assert!(out.contains("P* ="), "{out}");
+}
+
+#[test]
+fn unknown_subcommand_fails_cleanly() {
+    let out = gencd().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn unknown_flag_fails_cleanly() {
+    let out = gencd()
+        .args(["train", "--datset", "dorothea@0.02"]) // typo
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown flag"));
+}
+
+#[test]
+fn artifacts_subcommand_lists_when_built() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = run_ok(&["artifacts", "--smoke"]);
+    assert!(out.contains("propose"), "{out}");
+    assert!(out.contains("smoke OK"), "{out}");
+}

@@ -1,0 +1,239 @@
+//! Edge cases and failure injection: degenerate inputs, corrupt
+//! artifacts, extreme parameters — the solver must fail cleanly or
+//! behave sensibly, never hang or corrupt state.
+
+use gencd::config::RunConfig;
+use gencd::coordinator::accept::Acceptor;
+use gencd::coordinator::engine::{solve, EngineConfig};
+use gencd::coordinator::problem::Problem;
+use gencd::coordinator::select::Selector;
+use gencd::coordinator::driver::run_on;
+use gencd::loss::{Logistic, SmoothedHinge};
+use gencd::sparse::io::Dataset;
+use gencd::sparse::CooBuilder;
+use gencd::util::Pcg64;
+
+fn cfg(iters: usize) -> EngineConfig {
+    EngineConfig {
+        threads: 2,
+        acceptor: Acceptor::All,
+        max_iters: iters,
+        max_seconds: 10.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn empty_columns_are_inert() {
+    // matrix with several all-zero columns: proposals there must be 0
+    let mut b = CooBuilder::new(8, 6);
+    for i in 0..8 {
+        b.push(i, 0, 1.0);
+        b.push(i, 3, (i as f64) - 3.5);
+    }
+    let x = b.build();
+    let y: Vec<f64> = (0..8).map(|i| if i < 4 { 1.0 } else { -1.0 }).collect();
+    let p = Problem::new(
+        Dataset {
+            x,
+            y,
+            name: "zeros".into(),
+        },
+        Box::new(Logistic),
+        1e-3,
+    );
+    let sel = Selector::Cyclic {
+        next: 0,
+        k: p.n_features(),
+    };
+    let out = solve(&p, sel, &cfg(60));
+    for j in [1usize, 2, 4, 5] {
+        assert_eq!(out.w[j], 0.0, "empty column {j} must stay zero");
+    }
+    assert!(out.objective.is_finite());
+}
+
+#[test]
+fn single_sample_single_feature() {
+    let mut b = CooBuilder::new(1, 1);
+    b.push(0, 0, 1.0);
+    let p = Problem::new(
+        Dataset {
+            x: b.build(),
+            y: vec![1.0],
+            name: "tiny".into(),
+        },
+        Box::new(Logistic),
+        1e-4,
+    );
+    let sel = Selector::Cyclic { next: 0, k: 1 };
+    let out = solve(&p, sel, &cfg(200));
+    assert!(out.w[0] > 0.0, "weight should move toward the label");
+    assert!(out.objective < (2f64).ln());
+}
+
+#[test]
+fn huge_lambda_keeps_everything_zero() {
+    let ds = gencd::data::by_name("dorothea@0.02").unwrap();
+    let mut rc = RunConfig::default();
+    rc.dataset.name = "dorothea@0.02".into();
+    rc.problem.lam = 1e6;
+    rc.solver.algorithm = "shotgun".into();
+    rc.solver.max_iters = 100;
+    rc.solver.threads = 2;
+    let res = run_on(&rc, ds, None).unwrap();
+    assert_eq!(res.nnz, 0);
+    assert_eq!(res.metrics.updates, 0);
+}
+
+#[test]
+fn extreme_labels_stay_finite() {
+    // y values far outside {-1, +1} with squared loss: large gradients,
+    // but conservative steps must keep everything finite
+    let mut b = CooBuilder::new(4, 3);
+    let mut rng = Pcg64::seeded(1);
+    for j in 0..3 {
+        for i in 0..4 {
+            b.push(i, j, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    let mut x = b.build();
+    x.normalize_columns();
+    let p = Problem::new(
+        Dataset {
+            x,
+            y: vec![1e8, -1e8, 1e8, -1e8],
+            name: "extreme".into(),
+        },
+        Box::new(gencd::loss::Squared),
+        1e-3,
+    );
+    let sel = Selector::Cyclic { next: 0, k: 3 };
+    let out = solve(&p, sel, &cfg(300));
+    assert!(out.objective.is_finite());
+    assert!(out.w.iter().all(|w| w.is_finite()));
+}
+
+#[test]
+fn smoothed_hinge_extension_trains() {
+    // the non-paper loss exercises the Loss trait genericity end to end
+    let ds = gencd::data::by_name("reuters@0.02").unwrap();
+    let mut rc = RunConfig::default();
+    rc.dataset.name = "reuters@0.02".into();
+    rc.problem.loss = "smoothed_hinge".into();
+    rc.problem.lam = 1e-4;
+    rc.solver.algorithm = "thread-greedy".into();
+    rc.solver.threads = 2;
+    rc.solver.max_seconds = 3.0;
+    let res = run_on(&rc, ds, None).unwrap();
+    let first = res.history.records.first().unwrap().objective;
+    assert!(res.objective < first * 0.8, "{first} -> {}", res.objective);
+    assert!(res.nnz > 0);
+}
+
+#[test]
+fn corrupt_artifact_fails_cleanly() {
+    let dir = std::env::temp_dir().join("gencd_corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": 1, "scalars": ["lam", "beta", "inv_n"], "entries": [
+            {"variant": "x", "kind": "propose", "loss": "logistic",
+             "n": 1024, "b": 16, "file": "broken.hlo.txt",
+             "inputs": ["x_panel","y","z","mask","w","scalars"],
+             "input_shapes": [[1024,16],[1024],[1024],[1024],[16],[3]],
+             "outputs": ["g","delta","phi"]}]}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("broken.hlo.txt"), "this is not HLO").unwrap();
+    let rt = gencd::runtime::Runtime::new(&dir).expect("client still builds");
+    let entry = rt.manifest.find("propose", "logistic", 100).unwrap().clone();
+    let err = match rt.compile(&entry) {
+        Ok(_) => panic!("compiling garbage HLO must fail"),
+        Err(e) => e,
+    };
+    assert!(
+        err.to_string().contains("broken.hlo.txt"),
+        "error should name the file: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_with_wrong_scalars_rejected() {
+    let dir = std::env::temp_dir().join("gencd_bad_scalars");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": 1, "scalars": ["beta", "lam", "inv_n"], "entries": []}"#,
+    )
+    .unwrap();
+    assert!(gencd::runtime::Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn oversubscribed_threads_still_correct() {
+    // way more threads than cores AND than selected coordinates
+    let ds = gencd::data::by_name("dorothea@0.02").unwrap();
+    let mut rc = RunConfig::default();
+    rc.dataset.name = "dorothea@0.02".into();
+    rc.problem.lam = 1e-4;
+    rc.solver.algorithm = "scd".into(); // |J| = 1 << threads
+    rc.solver.threads = 16;
+    rc.solver.max_iters = 300;
+    let res = run_on(&rc, ds, None).unwrap();
+    let first = res.history.records.first().unwrap().objective;
+    assert!(res.objective <= first);
+    assert!(res.objective.is_finite());
+}
+
+#[test]
+fn zero_second_budget_stops_immediately() {
+    let ds = gencd::data::by_name("dorothea@0.02").unwrap();
+    let mut rc = RunConfig::default();
+    rc.dataset.name = "dorothea@0.02".into();
+    rc.solver.max_seconds = 0.0;
+    rc.solver.algorithm = "scd".into();
+    let res = run_on(&rc, ds, None).unwrap();
+    assert_eq!(res.metrics.iterations, 0);
+    assert_eq!(
+        res.stop,
+        gencd::coordinator::convergence::StopReason::MaxSeconds
+    );
+}
+
+#[test]
+fn hinge_gamma_variants_all_descend() {
+    for gamma in [0.25, 1.0, 4.0] {
+        let mut b = CooBuilder::new(20, 10);
+        let mut rng = Pcg64::seeded(7);
+        for j in 0..10 {
+            for i in 0..20 {
+                if rng.next_f64() < 0.4 {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let mut x = b.build();
+        x.normalize_columns();
+        let y: Vec<f64> = (0..20).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let p = Problem::new(
+            Dataset {
+                x,
+                y,
+                name: "hinge".into(),
+            },
+            Box::new(SmoothedHinge { gamma }),
+            1e-4,
+        );
+        let sel = Selector::Cyclic { next: 0, k: 10 };
+        let out = solve(&p, sel, &cfg(200));
+        let first = out.history.records.first().unwrap().objective;
+        assert!(
+            out.objective <= first,
+            "gamma={gamma}: {first} -> {}",
+            out.objective
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration: the PJRT runtime executing the AOT artifacts, validated
+//! against the pure-Rust sparse propose path. Skips (with a notice) when
+//! `make artifacts` hasn't been run.
+
+use std::sync::atomic::Ordering::Relaxed;
+
+use gencd::config::RunConfig;
+use gencd::coordinator::engine::{self, BlockProposer, EngineConfig};
+use gencd::coordinator::problem::{Problem, SharedState};
+use gencd::coordinator::propose;
+use gencd::coordinator::select::Selector;
+use gencd::coordinator::accept::Acceptor;
+use gencd::data::{dorothea_like, GenOptions};
+use gencd::loss::Logistic;
+use gencd::runtime::{HloObjective, HloProposer, Manifest, Runtime};
+use gencd::util::Pcg64;
+
+fn artifacts_available() -> bool {
+    let ok = Manifest::default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping HLO runtime test: run `make artifacts` first");
+    }
+    ok
+}
+
+/// A dorothea-twin problem small enough for the n=1024 artifact.
+fn problem() -> Problem {
+    let mut ds = dorothea_like(&GenOptions {
+        scale: 0.05, // n = 40, k = 5000
+        ..Default::default()
+    });
+    ds.x.normalize_columns();
+    Problem::new(ds, Box::new(Logistic), 1e-4)
+}
+
+#[test]
+fn hlo_propose_matches_sparse_path() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::from_default_dir().expect("runtime");
+    let p = problem();
+    let mut hlo = HloProposer::new(&rt, &p).expect("proposer");
+
+    // random warm start so gradients are nontrivial
+    let mut rng = Pcg64::seeded(42);
+    let w0: Vec<f64> = (0..p.n_features())
+        .map(|j| if j % 97 == 0 { rng.range_f64(-0.5, 0.5) } else { 0.0 })
+        .collect();
+    let state = SharedState::from_warm_start(&p, &w0);
+    propose::refresh_dloss(&p, &state, 0, p.n_samples());
+
+    // a mixed selection: dense-ish and empty columns
+    let selected: Vec<u32> = (0..200u32).step_by(3).collect();
+    hlo.propose_block(&p, &state, &selected).expect("propose");
+
+    for &j in &selected {
+        let sparse = propose::propose(&p, &state, j as usize, true);
+        let d_hlo = state.delta[j as usize].load(Relaxed);
+        let phi_hlo = state.phi[j as usize].load(Relaxed);
+        assert!(
+            (sparse.delta - d_hlo).abs() < 1e-4 * (1.0 + sparse.delta.abs()),
+            "j={j}: delta sparse {} vs hlo {}",
+            sparse.delta,
+            d_hlo
+        );
+        assert!(
+            (sparse.phi - phi_hlo).abs() < 1e-4 * (1.0 + sparse.phi.abs()),
+            "j={j}: phi sparse {} vs hlo {}",
+            sparse.phi,
+            phi_hlo
+        );
+    }
+}
+
+#[test]
+fn hlo_objective_matches_rust() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::from_default_dir().expect("runtime");
+    let p = problem();
+    let mut obj = HloObjective::new(&rt, &p).expect("objective");
+
+    let mut rng = Pcg64::seeded(7);
+    let z: Vec<f64> = (0..p.n_samples()).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let f_hlo = obj.smooth(&z).expect("smooth");
+    let f_rust = gencd::loss::smooth_part(p.loss.as_ref(), &p.y, &z);
+    assert!(
+        (f_hlo - f_rust).abs() < 1e-5 * (1.0 + f_rust.abs()),
+        "hlo {f_hlo} vs rust {f_rust}"
+    );
+}
+
+#[test]
+fn full_solve_with_hlo_backend_descends() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::from_default_dir().expect("runtime");
+    let p = problem();
+    let mut hlo = HloProposer::new(&rt, &p).expect("proposer");
+
+    let sel = Selector::RandomSubset {
+        rng: Pcg64::seeded(3),
+        k: p.n_features(),
+        size: 32,
+    };
+    let cfg = EngineConfig {
+        threads: 1,
+        acceptor: Acceptor::All,
+        max_iters: 25,
+        max_seconds: 60.0,
+        ..Default::default()
+    };
+    let state = SharedState::new(p.n_samples(), p.n_features());
+    let out = engine::solve_from(&p, &state, sel, &cfg, Some(&mut hlo));
+    let first = out.history.records.first().unwrap().objective;
+    assert!(
+        out.objective < first,
+        "objective {first} -> {} (should descend)",
+        out.objective
+    );
+    assert!(hlo.calls > 0, "proposer never invoked");
+}
+
+#[test]
+fn driver_rejects_hlo_without_proposer() {
+    let mut cfg = RunConfig::default();
+    cfg.dataset.name = "dorothea@0.02".into();
+    cfg.solver.backend = gencd::config::Backend::DenseBlockHlo;
+    assert!(gencd::coordinator::driver::run(&cfg).is_err());
+}

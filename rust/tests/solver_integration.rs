@@ -1,0 +1,243 @@
+//! Cross-module integration: the full solver against known-answer
+//! problems, algorithm agreement, coloring safety under the real
+//! engine, and serialization round-trips through the driver.
+
+use gencd::config::RunConfig;
+use gencd::coordinator::driver::{run, run_on};
+use gencd::coordinator::problem::Problem;
+use gencd::coordinator::Algorithm;
+use gencd::data::{self, GenOptions};
+use gencd::loss::{self, Squared};
+use gencd::sparse::io::Dataset;
+use gencd::sparse::CooBuilder;
+use gencd::util::prop;
+use gencd::util::Pcg64;
+
+/// With X = I (orthonormal design) and squared loss, the lasso solution
+/// is the soft threshold: F = (1/n) sum 0.5 (y_i - w_i)^2 has
+/// d/dw_j = (w_j - y_j)/n and curvature 1/n, so the minimizer of
+/// F + lam |w|_1 is w_j = soft_threshold(y_j, n * lam).
+#[test]
+fn lasso_identity_design_closed_form() {
+    let n = 16;
+    let mut b = CooBuilder::new(n, n);
+    for i in 0..n {
+        b.push(i, i, 1.0);
+    }
+    let x = b.build();
+    let mut rng = Pcg64::seeded(5);
+    let y: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let lam = 0.02;
+    let ds = Dataset {
+        x,
+        y: y.clone(),
+        name: "identity".into(),
+    };
+    let problem = Problem::new(ds.clone(), Box::new(Squared), lam);
+
+    let mut cfg = RunConfig::default();
+    cfg.problem.loss = "squared".into();
+    cfg.problem.lam = lam;
+    cfg.dataset.normalize = false; // already unit columns
+    cfg.solver.algorithm = "ccd".into();
+    cfg.solver.threads = 1;
+    cfg.solver.max_iters = 2000;
+    cfg.solver.max_seconds = 30.0;
+    let res = run_on(&cfg, ds, None).unwrap();
+
+    let tau = n as f64 * lam;
+    for (j, &wj) in res.w.iter().enumerate() {
+        let want = gencd::util::soft_threshold(y[j], tau);
+        assert!(
+            (wj - want).abs() < 1e-8,
+            "w[{j}] = {wj}, closed form {want}"
+        );
+    }
+    let w_star: Vec<f64> = y
+        .iter()
+        .map(|&v| gencd::util::soft_threshold(v, tau))
+        .collect();
+    let z_star = problem.x.matvec(&w_star);
+    assert!((res.objective - problem.objective(&w_star, &z_star)).abs() < 1e-10);
+}
+
+/// All algorithms must approach the same optimum on a well-conditioned
+/// problem (global convergence of CD for separable l1 objectives).
+#[test]
+fn algorithms_agree_on_optimum() {
+    let ds = data::by_name("reuters@0.02").unwrap();
+    let lam = 1e-4;
+    let mut objectives = Vec::new();
+    for alg in [
+        Algorithm::Ccd,
+        Algorithm::Scd,
+        Algorithm::Shotgun,
+        Algorithm::ThreadGreedy,
+        Algorithm::Greedy,
+        Algorithm::Coloring,
+        Algorithm::TopK,
+        Algorithm::BlockShotgun,
+    ] {
+        let mut cfg = RunConfig::default();
+        cfg.dataset.name = "reuters@0.02".into();
+        cfg.problem.lam = lam;
+        cfg.solver.algorithm = alg.name().into();
+        cfg.solver.threads = 2;
+        cfg.solver.max_seconds = 6.0;
+        cfg.solver.line_search_steps = 5;
+        let res = run_on(&cfg, ds.clone(), None).unwrap();
+        objectives.push((alg.name(), res.objective));
+    }
+    let best = objectives
+        .iter()
+        .map(|(_, o)| *o)
+        .fold(f64::INFINITY, f64::min);
+    for (name, obj) in &objectives {
+        assert!(
+            (obj - best) / best < 0.25,
+            "{name} landed at {obj}, best {best} (all: {objectives:?})"
+        );
+    }
+}
+
+/// COLORING with many threads must leave z consistent with w (its color
+/// classes are conflict-free, so no update may be lost or doubled).
+#[test]
+fn coloring_concurrent_updates_consistent() {
+    let ds = data::by_name("dorothea@0.05").unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.dataset.name = "dorothea@0.05".into();
+    cfg.problem.lam = 1e-4;
+    cfg.solver.algorithm = "coloring".into();
+    cfg.solver.threads = 8;
+    cfg.solver.max_iters = 400;
+    cfg.solver.max_seconds = 20.0;
+    let res = run_on(&cfg, ds, None).unwrap();
+    let ds2 = {
+        let mut d = data::by_name("dorothea@0.05").unwrap();
+        d.x.normalize_columns();
+        d
+    };
+    let problem = Problem::new(ds2, loss::by_name("logistic").unwrap(), 1e-4);
+    let z = problem.x.matvec(&res.w);
+    let obj = problem.objective(&res.w, &z);
+    assert!(
+        (obj - res.objective).abs() < 1e-9,
+        "reported {} vs recomputed {obj}",
+        res.objective
+    );
+}
+
+/// Shotgun past the P* bound on a pathological (perfectly correlated)
+/// design diverges or stalls — the behaviour the Accept step exists to
+/// prevent (Sec. 2.3) — while P*-sized selection stays stable.
+#[test]
+fn shotgun_divergence_cliff_on_correlated_design() {
+    // 64 identical columns: rho = 64 after normalization, P* -> 1
+    let n = 32;
+    let k = 64;
+    let mut b = CooBuilder::new(n, k);
+    let mut rng = Pcg64::seeded(9);
+    let col: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 1.0)).collect();
+    for j in 0..k {
+        for (i, &v) in col.iter().enumerate() {
+            b.push(i, j, v);
+        }
+    }
+    let mut x = b.build();
+    x.normalize_columns();
+    let y: Vec<f64> = (0..n)
+        .map(|i| if i % 2 == 0 { 2.0 } else { -2.0 })
+        .collect();
+    let ds = Dataset {
+        x,
+        y,
+        name: "correlated".into(),
+    };
+
+    let run_size = |size: usize| {
+        let mut cfg = RunConfig::default();
+        cfg.problem.loss = "squared".into();
+        cfg.problem.lam = 1e-6;
+        cfg.dataset.normalize = false;
+        cfg.solver.algorithm = "shotgun".into();
+        cfg.solver.select_size = size;
+        cfg.solver.threads = 2;
+        cfg.solver.max_iters = 3000;
+        cfg.solver.max_seconds = 10.0;
+        cfg.solver.log_every = 25;
+        run_on(&cfg, ds.clone(), None).unwrap()
+    };
+    let safe = run_size(1); // P* = 1
+    assert!(
+        safe.objective.is_finite()
+            && safe.stop != gencd::coordinator::convergence::StopReason::Diverged,
+        "safe run should converge, got {} ({:?})",
+        safe.objective,
+        safe.stop
+    );
+    let wild = run_size(64); // way past P*
+    assert!(
+        wild.stop == gencd::coordinator::convergence::StopReason::Diverged
+            || wild.objective > safe.objective * 2.0,
+        "expected divergence or stall past P*: safe {} wild {} ({:?})",
+        safe.objective,
+        wild.objective,
+        wild.stop
+    );
+}
+
+/// Dataset IO round-trip through the driver (path-based loading).
+#[test]
+fn driver_loads_from_files() {
+    let dir = std::env::temp_dir().join("gencd_solver_int");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = data::dorothea_like(&GenOptions {
+        scale: 0.02,
+        ..Default::default()
+    });
+    let bin = dir.join("d.bin");
+    gencd::sparse::io::write_binary(&ds, &bin).unwrap();
+    let svm = dir.join("d.libsvm");
+    gencd::sparse::io::write_libsvm(&ds, std::fs::File::create(&svm).unwrap()).unwrap();
+
+    for path in [bin.to_str().unwrap(), svm.to_str().unwrap()] {
+        let mut cfg = RunConfig::default();
+        cfg.dataset.path = Some(path.to_string());
+        cfg.problem.lam = 1e-3;
+        cfg.solver.algorithm = "scd".into();
+        cfg.solver.threads = 1;
+        cfg.solver.max_iters = 50;
+        let res = run(&cfg).unwrap();
+        assert!(res.objective.is_finite());
+        assert_eq!(res.w.len(), ds.n_features());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: random small problems, random algorithms/threads — final
+/// objective never worse than initial; reported nnz consistent.
+#[test]
+fn prop_all_algorithms_sane_on_random_problems() {
+    prop::check("algorithms sane", 8, |rng, _| {
+        let algs = ["scd", "shotgun", "thread-greedy", "coloring"];
+        let alg = algs[rng.below(algs.len())];
+        let scale = 0.01 + rng.next_f64() * 0.02;
+        let mut cfg = RunConfig::default();
+        cfg.dataset.name = format!("reuters@{scale:.3}");
+        cfg.problem.lam = 10f64.powf(rng.range_f64(-5.0, -3.0));
+        cfg.solver.algorithm = alg.into();
+        cfg.solver.threads = 1 + rng.below(4);
+        cfg.solver.max_iters = 150;
+        cfg.solver.max_seconds = 10.0;
+        cfg.solver.seed = rng.next_u64();
+        let res = run(&cfg).map_err(|e| e.to_string())?;
+        let first = res.history.records.first().unwrap().objective;
+        prop::ensure(
+            res.objective <= first + 1e-9,
+            format!("{alg}: {first} -> {}", res.objective),
+        )?;
+        let nnz = res.w.iter().filter(|w| **w != 0.0).count();
+        prop::ensure(nnz == res.nnz, format!("{alg}: nnz mismatch"))
+    });
+}
