@@ -5,6 +5,8 @@
 //!  3. coloring strategy: greedy vs balanced (§7's open question)
 //!  4. gradient path: cached dloss vs on-the-fly (engine heuristic)
 //!  5. SHOTGUN selection size: P*/2, P*, 2 P* (the divergence cliff)
+//!  6. Update-phase z discipline: auto / atomic CAS / buffered (engine
+//!     heuristic, §Perf)
 //!
 //!     cargo bench --bench ablations
 
@@ -91,47 +93,12 @@ fn main() {
         ("always on-the-fly", Some(false)),
     ] {
         // go through the engine directly to force the path
-        let mut cfg = bench_config(&ds_name, lam, Algorithm::Shotgun);
-        cfg.solver.max_seconds = bench_budget();
-        let alg = Algorithm::Shotgun;
-        let mut d = ds.clone();
-        if cfg.dataset.normalize {
-            d.x.normalize_columns();
-        }
-        let pre = gencd::coordinator::algorithms::Preprocessed::for_algorithm(
-            alg,
-            &d.x,
-            Strategy::Greedy,
-            7,
-        );
-        let problem = gencd::coordinator::Problem::new(
-            d,
-            gencd::loss::by_name("logistic").unwrap(),
-            lam,
-        );
-        let inst = gencd::coordinator::algorithms::instantiate(
-            alg,
-            problem.n_features(),
-            cfg.solver.threads,
-            0,
-            0,
-            &pre,
-            7,
-        )
-        .unwrap();
-        let ecfg = gencd::coordinator::engine::EngineConfig {
-            threads: cfg.solver.threads,
-            acceptor: inst.acceptor,
-            max_seconds: cfg.solver.max_seconds,
-            force_dloss: force,
-            ..Default::default()
-        };
-        let out = gencd::coordinator::engine::solve(&problem, inst.selector, &ecfg);
+        let r = shotgun_engine_run(&ds, &ds_name, lam, force, None);
         t.row(vec![
             name.into(),
-            format!("{:.6}", out.objective),
-            out.metrics.updates.to_string(),
-            format!("{:.2e}", out.metrics.updates_per_sec(out.elapsed_secs)),
+            format!("{:.6}", r.out.objective),
+            r.out.metrics.updates.to_string(),
+            format!("{:.2e}", r.out.metrics.updates_per_sec(r.out.elapsed_secs)),
         ]);
     }
     println!("{}", t.render());
@@ -158,4 +125,88 @@ fn main() {
     }
     println!("{}", t.render());
     println!("(P* = {pstar} on this twin at scale {scale})");
+
+    // ---- 6. update path (atomic CAS vs buffered scatter/reduce) ---------------
+    println!("\n## update path: CAS fetch-add vs buffered scatter+reduce (T=4)\n");
+    let mut t = Table::new(&["path", "objective", "updates", "upd/s", "z drift"]);
+    for (name, path) in [
+        ("auto", gencd::coordinator::engine::UpdatePath::Auto),
+        ("atomic", gencd::coordinator::engine::UpdatePath::Atomic),
+        ("buffered", gencd::coordinator::engine::UpdatePath::Buffered),
+    ] {
+        let r = shotgun_engine_run(&ds, &ds_name, lam, None, Some(path));
+        t.row(vec![
+            name.into(),
+            format!("{:.6}", r.out.objective),
+            r.out.metrics.updates.to_string(),
+            format!("{:.2e}", r.out.metrics.updates_per_sec(r.out.elapsed_secs)),
+            format!("{:.1e}", r.state.z_drift(&r.problem)),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+/// Output of [`shotgun_engine_run`]: the solve plus the state/problem
+/// pair needed for drift checks.
+struct EngineRun {
+    out: gencd::coordinator::engine::SolveOutput,
+    state: gencd::coordinator::problem::SharedState,
+    problem: gencd::coordinator::Problem,
+}
+
+/// Direct-engine Shotgun run shared by the forced-path ablations
+/// (sections 4 and 6): normalize, preprocess P*, instantiate, solve.
+fn shotgun_engine_run(
+    ds: &gencd::sparse::io::Dataset,
+    ds_name: &str,
+    lam: f64,
+    force_dloss: Option<bool>,
+    update_path: Option<gencd::coordinator::engine::UpdatePath>,
+) -> EngineRun {
+    let alg = Algorithm::Shotgun;
+    let cfg = bench_config(ds_name, lam, alg);
+    let mut d = ds.clone();
+    if cfg.dataset.normalize {
+        d.x.normalize_columns();
+    }
+    let pre = gencd::coordinator::algorithms::Preprocessed::for_algorithm(
+        alg,
+        &d.x,
+        Strategy::Greedy,
+        7,
+    );
+    let problem = gencd::coordinator::Problem::new(
+        d,
+        gencd::loss::by_name("logistic").unwrap(),
+        lam,
+    );
+    let inst = gencd::coordinator::algorithms::instantiate(
+        alg,
+        problem.n_features(),
+        cfg.solver.threads,
+        0,
+        0,
+        &pre,
+        7,
+    )
+    .unwrap();
+    let ecfg = gencd::coordinator::engine::EngineConfig {
+        threads: cfg.solver.threads,
+        acceptor: inst.acceptor,
+        max_seconds: bench_budget(),
+        force_dloss,
+        update_path: update_path.unwrap_or(gencd::coordinator::engine::UpdatePath::Auto),
+        ..Default::default()
+    };
+    let state = gencd::coordinator::problem::SharedState::new(
+        problem.n_samples(),
+        problem.n_features(),
+    );
+    let out =
+        gencd::coordinator::engine::solve_from(&problem, &state, inst.selector, &ecfg, None);
+    EngineRun {
+        out,
+        state,
+        problem,
+    }
 }

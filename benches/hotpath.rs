@@ -3,9 +3,17 @@
 //!
 //!     cargo bench --bench hotpath
 //!
-//! Covers: sparse propose (dloss vs on-the-fly), dloss refresh, atomic
-//! vs plain z update, line-search refinement, panel gather, and — when
-//! artifacts are built — the HLO dense-block propose for comparison.
+//! Covers: sparse propose (dloss vs on-the-fly), dloss refresh, the
+//! three z-update disciplines (atomic CAS, unsync store, plain scatter)
+//! single-threaded AND under real multi-thread contention (CAS vs the
+//! engine's buffered scatter+reduce), phase-barrier crossings (std mutex
+//! barrier vs the spin barrier), line-search refinement, objective
+//! evaluation, and — when artifacts are built — the HLO dense-block
+//! propose for comparison.
+//!
+//! Besides the human-readable table, results are appended to a
+//! machine-readable JSON file (`BENCH_hotpath.json`, override with
+//! `GENCD_BENCH_JSON=...`) so successive PRs leave a perf trajectory.
 
 use std::sync::atomic::Ordering::Relaxed;
 
@@ -13,8 +21,40 @@ use gencd::coordinator::problem::{Problem, SharedState};
 use gencd::coordinator::{linesearch, propose};
 use gencd::data::{reuters_like, GenOptions};
 use gencd::loss::Logistic;
+use gencd::util::atomic::SyncF64Vec;
+use gencd::util::par::{aligned_chunk, SpinBarrier};
 use gencd::util::timer::bench_loop;
 use gencd::util::Pcg64;
+
+/// Collected (key, value) metrics destined for the JSON trail.
+struct Report {
+    entries: Vec<(String, f64)>,
+}
+
+impl Report {
+    fn push(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    fn write_json(&self, header: &[(String, String)]) {
+        let path = std::env::var("GENCD_BENCH_JSON")
+            .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+        let mut out = String::from("{\n");
+        for (k, v) in header {
+            out.push_str(&format!("  \"{k}\": {v},\n"));
+        }
+        out.push_str("  \"kernels\": {\n");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let comma = if i + 1 == self.entries.len() { "" } else { "," };
+            out.push_str(&format!("    \"{k}\": {v:.4}{comma}\n"));
+        }
+        out.push_str("  }\n}\n");
+        match std::fs::write(&path, out) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\ncould not write {path}: {e}"),
+        }
+    }
+}
 
 fn main() {
     let mut ds = reuters_like(&GenOptions::with_scale(0.05));
@@ -24,6 +64,7 @@ fn main() {
     let nnz = ds.x.nnz();
     println!("workload: reuters@0.05 ({n} x {k}, {nnz} nnz)\n");
     let problem = Problem::new(ds, Box::new(Logistic), 1e-5);
+    let mut report = Report { entries: Vec::new() };
 
     let mut rng = Pcg64::seeded(3);
     let w0: Vec<f64> = (0..k)
@@ -48,6 +89,7 @@ fn main() {
         s.best * 1e9 / cols.len() as f64,
         s.best * 1e9 / col_nnz as f64
     );
+    report.push("propose_dloss_ns_per_nnz", s.best * 1e9 / col_nnz as f64);
 
     // ---- propose: on-the-fly ell' -----------------------------------------
     let s = bench_loop(0.5, 20, || {
@@ -62,14 +104,16 @@ fn main() {
         s.best * 1e9 / cols.len() as f64,
         s.best * 1e9 / col_nnz as f64
     );
+    report.push("propose_onthefly_ns_per_nnz", s.best * 1e9 / col_nnz as f64);
 
     // ---- dloss refresh -----------------------------------------------------
     let s = bench_loop(0.5, 20, || {
         propose::refresh_dloss(&problem, &state, 0, n);
     });
     println!("dloss refresh      {:>9.2} ns/sample          {s}", s.best * 1e9 / n as f64);
+    report.push("dloss_refresh_ns_per_sample", s.best * 1e9 / n as f64);
 
-    // ---- update: atomic z scatter ------------------------------------------
+    // ---- update: atomic z scatter (single thread) ---------------------------
     let s = bench_loop(0.5, 20, || {
         for &j in &cols {
             let (rows, vals) = problem.x.col(j);
@@ -79,28 +123,157 @@ fn main() {
         }
     });
     println!("update/atomic      {:>9.2} ns/nnz             {s}", s.best * 1e9 / col_nnz as f64);
+    report.push("update_atomic_1t_ns_per_nnz", s.best * 1e9 / col_nnz as f64);
 
-    // ---- update: unsync load+store (T=1 / coloring fast path, §Perf) -------
+    // ---- update: unsync plain store (T=1 / coloring / buffered-scatter
+    // discipline; the gap to update/atomic is the CAS overhead) --------------
     let s = bench_loop(0.5, 20, || {
         for &j in &cols {
             let (rows, vals) = problem.x.col(j);
             for (&i, &v) in rows.iter().zip(vals) {
-                let zi = &state.z[i as usize];
-                zi.store(zi.load(Relaxed) + 1e-12 * v, Relaxed);
+                state.z.add(i as usize, 1e-12 * v);
             }
         }
     });
     println!("update/unsync      {:>9.2} ns/nnz             {s}", s.best * 1e9 / col_nnz as f64);
+    report.push("update_unsync_1t_ns_per_nnz", s.best * 1e9 / col_nnz as f64);
 
-    // ---- update: single-thread plain scatter (the atomics overhead) --------
-    let mut z_plain = state.z_snapshot();
-    let s = bench_loop(0.5, 20, || {
-        for &j in &cols {
-            problem.x.axpy_col(j, 1e-12, &mut z_plain);
-        }
-        std::hint::black_box(&z_plain);
+    // ---- update under contention: CAS vs buffered scatter+reduce ------------
+    // The acceptance kernel of the buffered-update work: mt_threads
+    // workers scatter disjoint column sets into the SAME z. The CAS
+    // variant is Algorithm 3's `omp atomic`; the buffered variant is the
+    // engine's per-thread accumulator + cache-aligned chunked reduce.
+    let mt_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .clamp(2, 4);
+    // distinct columns partitioned across threads, like the engine's
+    // deduplicated accepted set: contention comes from shared rows, not
+    // from two threads scattering the same column
+    let total_cols = (mt_threads * 2048).min(k);
+    let distinct: Vec<usize> = rng.sample_distinct(k, total_cols);
+    let per_thread = total_cols / mt_threads;
+    let mt_cols: Vec<Vec<usize>> = (0..mt_threads)
+        .map(|t| distinct[t * per_thread..(t + 1) * per_thread].to_vec())
+        .collect();
+    let mt_nnz: usize = mt_cols
+        .iter()
+        .flat_map(|set| set.iter())
+        .map(|&j| problem.x.col_nnz(j))
+        .sum();
+    println!("\nmulti-thread z-update: {mt_threads} threads, {mt_nnz} nnz/round");
+
+    let s_cas = bench_loop(0.5, 5, || {
+        std::thread::scope(|scope| {
+            let problem = &problem;
+            let state = &state;
+            for cols in &mt_cols {
+                scope.spawn(move || {
+                    for &j in cols {
+                        let (rows, vals) = problem.x.col(j);
+                        for (&i, &v) in rows.iter().zip(vals) {
+                            state.z[i as usize].fetch_add(1e-12 * v, Relaxed);
+                        }
+                    }
+                });
+            }
+        });
     });
-    println!("update/plain       {:>9.2} ns/nnz             {s}", s.best * 1e9 / col_nnz as f64);
+    println!(
+        "update/atomic-mt   {:>9.2} ns/nnz             {s_cas}",
+        s_cas.best * 1e9 / mt_nnz as f64
+    );
+    report.push("update_atomic_mt_ns_per_nnz", s_cas.best * 1e9 / mt_nnz as f64);
+
+    // per-thread accumulators; each SyncF64Vec slab is 128-byte aligned.
+    // One spawn round per measured iteration (same as the CAS kernel);
+    // scatter and reduce are separated by the engine's own SpinBarrier,
+    // so the spawn/join overhead cancels in the speedup ratio.
+    let bufs: Vec<SyncF64Vec> = (0..mt_threads).map(|_| SyncF64Vec::zeros(n)).collect();
+    let reduce_barrier = SpinBarrier::new(mt_threads);
+    let s_buf = bench_loop(0.5, 5, || {
+        std::thread::scope(|scope| {
+            let problem = &problem;
+            let state = &state;
+            let bufs = &bufs;
+            let reduce_barrier = &reduce_barrier;
+            for (t, cols) in mt_cols.iter().enumerate() {
+                scope.spawn(move || {
+                    // phase 1: scatter into this thread's accumulator
+                    let buf = &bufs[t];
+                    for &j in cols {
+                        let (rows, vals) = problem.x.col(j);
+                        for (&i, &v) in rows.iter().zip(vals) {
+                            buf.add(i as usize, 1e-12 * v);
+                        }
+                    }
+                    reduce_barrier.wait();
+                    // phase 2: fold all accumulators over my aligned chunk
+                    for i in aligned_chunk(n, t, mt_threads) {
+                        let mut acc = 0.0;
+                        for b in bufs {
+                            let v = b.get(i);
+                            if v != 0.0 {
+                                acc += v;
+                                b.set(i, 0.0);
+                            }
+                        }
+                        if acc != 0.0 {
+                            state.z.add(i, acc);
+                        }
+                    }
+                });
+            }
+        });
+    });
+    println!(
+        "update/buffered-mt {:>9.2} ns/nnz             {s_buf}",
+        s_buf.best * 1e9 / mt_nnz as f64
+    );
+    report.push("update_buffered_mt_ns_per_nnz", s_buf.best * 1e9 / mt_nnz as f64);
+    let speedup = s_cas.best / s_buf.best;
+    println!("update/buffered-mt speedup vs CAS: {speedup:.2}x");
+    report.push("update_buffered_vs_cas_speedup", speedup);
+
+    // ---- phase barrier crossings: std::sync::Barrier vs SpinBarrier ---------
+    const ROUNDS: usize = 2000;
+    let s_std = bench_loop(0.3, 5, || {
+        let b = std::sync::Barrier::new(mt_threads);
+        std::thread::scope(|scope| {
+            let b = &b;
+            for _ in 0..mt_threads {
+                scope.spawn(move || {
+                    for _ in 0..ROUNDS {
+                        b.wait();
+                    }
+                });
+            }
+        });
+    });
+    println!(
+        "barrier/std        {:>9.0} ns/crossing        {s_std}",
+        s_std.best * 1e9 / ROUNDS as f64
+    );
+    report.push("barrier_std_ns_per_crossing", s_std.best * 1e9 / ROUNDS as f64);
+
+    let s_spin = bench_loop(0.3, 5, || {
+        let b = SpinBarrier::new(mt_threads);
+        std::thread::scope(|scope| {
+            let b = &b;
+            for _ in 0..mt_threads {
+                scope.spawn(move || {
+                    for _ in 0..ROUNDS {
+                        b.wait();
+                    }
+                });
+            }
+        });
+    });
+    println!(
+        "barrier/spin       {:>9.0} ns/crossing        {s_spin}",
+        s_spin.best * 1e9 / ROUNDS as f64
+    );
+    report.push("barrier_spin_ns_per_crossing", s_spin.best * 1e9 / ROUNDS as f64);
 
     // ---- line search ---------------------------------------------------------
     for steps in [20usize, 500] {
@@ -115,6 +288,10 @@ fn main() {
             "line search s={steps:<4} {:>9.2} us/coord          {s}",
             s.best * 1e6 / 32.0
         );
+        report.push(
+            &format!("linesearch_{steps}_us_per_coord"),
+            s.best * 1e6 / 32.0,
+        );
     }
 
     // ---- objective evaluation (the logging cost) ------------------------------
@@ -124,6 +301,7 @@ fn main() {
         std::hint::black_box(problem.objective(&w, &z));
     });
     println!("objective eval     {:>9.2} us                {s}", s.best * 1e6);
+    report.push("objective_eval_us", s.best * 1e6);
 
     // ---- HLO dense-block propose (needs artifacts) ------------------------------
     match gencd::runtime::Runtime::from_default_dir() {
@@ -139,9 +317,19 @@ fn main() {
                     s.best * 1e6 / js.len() as f64,
                     js.len()
                 );
+                report.push("propose_hlo_us_per_col", s.best * 1e6 / js.len() as f64);
             }
             Err(e) => println!("propose/hlo-block  skipped: {e}"),
         },
         Err(e) => println!("propose/hlo-block  skipped: {e}"),
     }
+
+    let header = vec![
+        ("workload".to_string(), "\"reuters@0.05\"".to_string()),
+        ("n".to_string(), n.to_string()),
+        ("k".to_string(), k.to_string()),
+        ("nnz".to_string(), nnz.to_string()),
+        ("mt_threads".to_string(), mt_threads.to_string()),
+    ];
+    report.write_json(&header);
 }

@@ -98,6 +98,10 @@ pub struct SolverConfig {
     pub log_every: usize,
     pub coloring_strategy: String,
     pub backend: Backend,
+    /// Update-phase z discipline: auto | atomic | buffered |
+    /// conflict-free (resolved by the driver; COLORING defaults to
+    /// conflict-free under `auto`). See `engine::UpdatePath`.
+    pub update_path: String,
 }
 
 impl Default for SolverConfig {
@@ -115,6 +119,7 @@ impl Default for SolverConfig {
             log_every: 0,
             coloring_strategy: "greedy".into(),
             backend: Backend::SparseRust,
+            update_path: "auto".into(),
         }
     }
 }
@@ -204,6 +209,7 @@ impl RunConfig {
             ("solver", "backend") => {
                 self.solver.backend = Backend::by_name(&as_str(value)?)?
             }
+            ("solver", "update_path") => self.solver.update_path = as_str(value)?,
             ("output", "csv") => self.csv = Some(as_str(value)?),
             ("", _) => anyhow::bail!("top-level key '{key}' not recognized"),
             _ => anyhow::bail!("unknown config key {table}.{key}"),
@@ -244,6 +250,12 @@ mod tests {
         assert_eq!(cfg.solver.threads, 2);
         assert_eq!(cfg.solver.algorithm, "shotgun");
         assert_eq!(cfg.solver.backend, Backend::DenseBlockHlo);
+        // update path: default, TOML, and --set override
+        assert_eq!(cfg.solver.update_path, "auto");
+        let cfg2 = RunConfig::from_toml("[solver]\nupdate_path = \"buffered\"\n").unwrap();
+        assert_eq!(cfg2.solver.update_path, "buffered");
+        cfg.set("solver.update_path", "conflict-free").unwrap();
+        assert_eq!(cfg.solver.update_path, "conflict-free");
     }
 
     #[test]

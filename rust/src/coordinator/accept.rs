@@ -52,6 +52,14 @@ impl ThreadBest {
 /// Leader-side resolution of the global policies. `bests` holds each
 /// worker's reduction; `selected`/`phi` give the full proposal table for
 /// TopK. Fills `out` with the accepted J'.
+///
+/// J' must be duplicate-free (unique-writer invariant of the engine's
+/// Update phase). `selected` is already deduplicated by the engine's
+/// plan-time filter, which covers the `All` and `GlobalTopK` arms; the
+/// bests-derived arm additionally collapses repeats here (first
+/// occurrence wins, allocation-free — the set is at most one entry per
+/// thread). The engine's Update phase double-checks with a debug
+/// assertion.
 pub fn resolve_global(
     acceptor: Acceptor,
     bests: &[ThreadBest],
@@ -64,7 +72,7 @@ pub fn resolve_global(
         Acceptor::All => out.extend_from_slice(selected),
         Acceptor::ThreadGreedy => {
             for b in bests {
-                if b.is_some() {
+                if b.is_some() && !out.contains(&b.j) {
                     out.push(b.j);
                 }
             }
@@ -234,6 +242,33 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn duplicate_thread_bests_collapse() {
+        // two threads reporting the same best coordinate (possible only
+        // if the selection itself repeated) collapse to one accept —
+        // the unique-writer invariant of the Update phase
+        let phi = |_j: u32| -0.5;
+        let twin = ThreadBest {
+            j: 4,
+            phi: -0.9,
+            delta: 0.1,
+        };
+        let other = ThreadBest {
+            j: 2,
+            phi: -0.3,
+            delta: 0.2,
+        };
+        let mut out = Vec::new();
+        resolve_global(
+            Acceptor::ThreadGreedy,
+            &[twin, other, twin],
+            &[],
+            phi,
+            &mut out,
+        );
+        assert_eq!(out, vec![4, 2]);
     }
 
     #[test]

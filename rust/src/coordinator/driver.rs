@@ -100,6 +100,20 @@ pub fn run_on(
         cfg.solver.seed,
     )?;
 
+    let update_path = engine::UpdatePath::by_name(&cfg.solver.update_path)?;
+    // conflict-free plain stores are only sound when every z[i] has a
+    // unique writer per Update phase; from the config surface that means
+    // COLORING's color classes or a single thread. Anything else would
+    // be a data race that silently loses updates.
+    anyhow::ensure!(
+        update_path != engine::UpdatePath::ConflictFree
+            || alg == Algorithm::Coloring
+            || cfg.solver.threads <= 1,
+        "solver.update_path = \"conflict-free\" requires algorithm = \"coloring\" \
+         or threads = 1 (got {} with {} threads); use \"buffered\" or \"atomic\"",
+        alg.name(),
+        cfg.solver.threads
+    );
     let engine_cfg = EngineConfig {
         threads: cfg.solver.threads,
         acceptor: inst.acceptor,
@@ -110,8 +124,15 @@ pub fn run_on(
         log_every: cfg.solver.log_every,
         force_dloss: None,
         // COLORING's color classes are conflict-free: the paper's
-        // synchronization-free Update (Sec. 4.2) — see §Perf
-        conflict_free_update: alg == Algorithm::Coloring,
+        // synchronization-free Update (Sec. 4.2) — see §Perf. An
+        // explicit solver.update_path still overrides.
+        update_path: if update_path == engine::UpdatePath::Auto && alg == Algorithm::Coloring
+        {
+            engine::UpdatePath::ConflictFree
+        } else {
+            update_path
+        },
+        ..Default::default()
     };
 
     let state = SharedState::new(problem.n_samples(), problem.n_features());

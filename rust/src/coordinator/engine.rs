@@ -6,7 +6,7 @@
 //! barriers (OpenMP's implicit region barriers):
 //!
 //! ```text
-//!   leader: Select J, decide gradient path, check stop   |  workers wait
+//!   leader: Select J, pick gradient + update paths, check stop | workers wait
 //!   ── barrier ──
 //!   all: refresh dloss chunk (when precomputation wins)
 //!   ── barrier ──
@@ -14,19 +14,79 @@
 //!   ── barrier ──
 //!   leader: Accept -> J'                  (policy-dependent reduction)
 //!   ── barrier ──
-//!   all: Update over static chunk of J'   (Algorithm 3, atomic z)
+//!   all: Update over static chunk of J'   (Algorithm 3)
+//!   [buffered mode only: ── barrier ── all: reduce z chunks]
 //!   ── barrier ──
 //!   leader: metrics, objective log, convergence checks
 //! ```
 //!
 //! Work is divided with *static contiguous chunking* (the paper's
-//! `schedule(static)`): thread t of T owns `len*t/T .. len*(t+1)/T`.
-//! Shared numeric state is atomic (see [`super::problem::SharedState`]);
-//! each phase gives every element a unique writer, and barriers provide
-//! the happens-before edges, so relaxed ordering suffices throughout.
+//! `schedule(static)`): thread t of T owns `len*t/T .. len*(t+1)/T`;
+//! chunks over the dense sample arrays (`z`, `dloss`) additionally have
+//! cache-line-aligned boundaries ([`crate::util::par::aligned_chunk`]).
+//!
+//! # Concurrency substrate
+//!
+//! Barriers are sense-reversing spin barriers with a parking fallback
+//! ([`crate::util::par::SpinBarrier`]); phases are often sub-microsecond
+//! and a mutex barrier would dominate them. The barriers provide the
+//! happens-before edges between phases, and within a phase every shared
+//! element has a unique writer, so the shared arrays
+//! ([`super::problem::SharedState`], backed by
+//! [`crate::util::atomic::SyncF64Vec`]) are accessed with *plain*
+//! loads/stores everywhere except where writers genuinely collide: the
+//! atomic-mode `z` scatter below. Per-thread reduction slots (best
+//! proposals, work counters) are cache-padded so workers never
+//! invalidate each other's lines.
+//!
+//! # Update paths
+//!
+//! The Update phase applies `z += delta_j * X_j` for every accepted j.
+//! Three disciplines are available ([`UpdatePath`]), chosen per
+//! iteration by a work heuristic when the config says `Auto`:
+//!
+//! * **conflict-free** — plain read+write. Legal when every `z[i]` has a
+//!   unique writer: single-threaded runs, or COLORING's color classes
+//!   (paper Sec. 4.2: "no need for synchronization in the Update step of
+//!   the COLORING algorithm").
+//! * **atomic** — `fetch_add` CAS loop per nonzero, the paper's
+//!   `omp atomic`. Always safe; slow under contention.
+//! * **buffered** — each worker scatters into a private dense
+//!   accumulator, then (after one extra barrier) all workers fold every
+//!   accumulator over disjoint cache-aligned chunks of `z` in one pass.
+//!   No CAS anywhere; costs one O(n·T/T) sweep, so it wins exactly when
+//!   the scatter volume `|J'| · mean_col_nnz` reaches the sample count
+//!   `n` — which is the `Auto` switch rule (mirroring the dloss
+//!   heuristic).
+//!
+//! # §Perf
+//!
+//! `cargo bench --bench hotpath` measures every row below and writes
+//! the machine-readable trail to `BENCH_hotpath.json`. **The reference
+//! values here are projections for a typical 8-core x86-64 box (from
+//! the per-op costs of CAS vs plain stores and futex vs spin wakeups),
+//! recorded before this tree had been run under a toolchain — treat
+//! them as expected orders of magnitude until a real bench run
+//! refreshes the JSON** (tracked in ROADMAP Open items):
+//!
+//! | kernel                         | seed discipline | this PR  |
+//! |--------------------------------|-----------------|----------|
+//! | z-update, 1T, atomic CAS       |  ~3 ns/nnz      | unchanged (fallback) |
+//! | z-update, 1T, unsync store     |  ~1 ns/nnz      | unchanged |
+//! | z-update, 4T, contended CAS    | ~20 ns/nnz      | kept as fallback |
+//! | z-update, 4T, buffered+reduce  |      —          | ~5 ns/nnz (≥2x vs CAS is the acceptance bar) |
+//! | barrier crossing, 4T           | ~5 us (mutex)   | ~0.2 us (spin) |
+//!
+//! Independent of the numbers, correctness is pinned by the
+//! differential tests (`rust/tests/update_paths.rs`, authored with this
+//! change and awaiting their first toolchain run): all three update
+//! paths must produce identical `w` at T=1 (bit-exact) and 1e-12
+//! agreement under an 8-thread SHOTGUN run, with the `z_drift`
+//! invariant checked after every path.
 
+use std::collections::HashSet;
 use std::sync::atomic::Ordering::Relaxed;
-use std::sync::{Barrier, Mutex, RwLock};
+use std::sync::RwLock;
 
 use super::accept::{resolve_global, Acceptor, ThreadBest};
 use super::convergence::{History, Record, StopReason};
@@ -36,7 +96,51 @@ use super::problem::{Problem, SharedState};
 use super::propose::{self, Proposal};
 use super::select::Selector;
 use crate::loss;
+use crate::util::atomic::{SyncCell, SyncF64Vec};
+use crate::util::par::{aligned_chunk, CachePadded, SpinBarrier, DEFAULT_SPIN};
 use crate::util::Timer;
+
+/// Update-phase discipline for the shared residual vector `z` (see the
+/// module docs). `Auto` picks per iteration; the forced variants exist
+/// for ablations, tests and configs that know better.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdatePath {
+    /// Per-iteration heuristic: conflict-free at T=1, buffered when the
+    /// scatter volume reaches `n`, atomic otherwise.
+    Auto,
+    /// Always CAS `fetch_add` (the paper's `omp atomic`).
+    Atomic,
+    /// Always per-thread buffers + chunked reduce (falls back to atomic
+    /// if the engine could not allocate buffers — never the case when
+    /// this is the configured path).
+    Buffered,
+    /// Plain load+store. Caller asserts every `z[i]` has a unique writer
+    /// per Update phase (T=1, or COLORING's color classes).
+    ConflictFree,
+}
+
+impl UpdatePath {
+    pub fn by_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "auto" => UpdatePath::Auto,
+            "atomic" => UpdatePath::Atomic,
+            "buffered" => UpdatePath::Buffered,
+            "conflict-free" | "conflict_free" | "unsync" => UpdatePath::ConflictFree,
+            other => anyhow::bail!(
+                "unknown update path '{other}' (auto|atomic|buffered|conflict-free)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpdatePath::Auto => "auto",
+            UpdatePath::Atomic => "atomic",
+            UpdatePath::Buffered => "buffered",
+            UpdatePath::ConflictFree => "conflict-free",
+        }
+    }
+}
 
 /// Engine knobs (a subset of [`crate::config::SolverConfig`], resolved).
 #[derive(Clone, Debug)]
@@ -56,12 +160,13 @@ pub struct EngineConfig {
     /// `Some(false)` = always on-the-fly, `None` = per-iteration
     /// heuristic (ablation: `benches/ablations.rs`).
     pub force_dloss: Option<bool>,
-    /// Update `z` with plain load+store instead of the CAS fetch-add.
-    /// Safe when every `z[i]` has a unique writer per Update phase:
-    /// single-threaded runs, or COLORING's conflict-free color classes
-    /// (paper Sec. 4.2: "no need for synchronization in the Update step
-    /// of the COLORING algorithm"). ~9x faster per nonzero (§Perf).
-    pub conflict_free_update: bool,
+    /// `z` scatter discipline for the Update phase (module docs §Update
+    /// paths). `Auto` unless the caller knows better (the driver forces
+    /// `ConflictFree` for COLORING).
+    pub update_path: UpdatePath,
+    /// Spin budget of the phase barrier before a waiter parks; 0 parks
+    /// immediately (useful when heavily oversubscribed).
+    pub barrier_spin: u32,
 }
 
 impl Default for EngineConfig {
@@ -75,7 +180,8 @@ impl Default for EngineConfig {
             tol: 0.0,
             log_every: 0,
             force_dloss: None,
-            conflict_free_update: false,
+            update_path: UpdatePath::Auto,
+            barrier_spin: DEFAULT_SPIN,
         }
     }
 }
@@ -110,6 +216,14 @@ pub struct SolveOutput {
     pub elapsed_secs: f64,
 }
 
+/// Resolved per-iteration update discipline (the `Auto` decision).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum UpdateMode {
+    ConflictFree,
+    Atomic,
+    Buffered,
+}
+
 /// Iteration plan: written by the leader, read by workers. The RwLock is
 /// uncontended outside phase edges (reads happen strictly after the
 /// barrier following the leader's write).
@@ -117,6 +231,7 @@ struct Plan {
     selected: Vec<u32>,
     accepted: Vec<u32>,
     use_dloss: bool,
+    update: UpdateMode,
     /// Propose runs on the leader via the block proposer (HLO backend);
     /// workers skip the sparse propose loop.
     hlo: bool,
@@ -131,29 +246,57 @@ pub fn chunk(len: usize, tid: usize, threads: usize) -> std::ops::Range<usize> {
     lo..hi
 }
 
-/// Barrier that compiles to nothing for single-thread runs (§Perf: a
-/// 1-party `std::sync::Barrier` still takes a mutex; CCD/SCD and the
-/// Fig. 2 T=1 anchors run millions of tiny iterations).
+/// Phase barrier: compiles to nothing for single-thread runs (CCD/SCD
+/// and the Fig. 2 T=1 anchors run millions of tiny iterations), a
+/// [`SpinBarrier`] otherwise.
 enum PhaseBarrier {
     Noop,
-    Real(Barrier),
+    Spin(SpinBarrier),
 }
 
 impl PhaseBarrier {
-    fn new(threads: usize) -> Self {
+    fn new(threads: usize, spin: u32) -> Self {
         if threads <= 1 {
             PhaseBarrier::Noop
         } else {
-            PhaseBarrier::Real(Barrier::new(threads))
+            PhaseBarrier::Spin(SpinBarrier::with_spin(threads, spin))
         }
     }
 
     #[inline]
     fn wait(&self) {
-        if let PhaseBarrier::Real(b) = self {
+        if let PhaseBarrier::Spin(b) = self {
             b.wait();
         }
     }
+
+    fn poison(&self) {
+        if let PhaseBarrier::Spin(b) = self {
+            b.poison();
+        }
+    }
+}
+
+/// Poisons the phase barrier if the owning worker unwinds, so the other
+/// workers panic out of their `wait` instead of deadlocking at a
+/// crossing the dead thread will never reach.
+struct PoisonOnPanic<'a>(&'a PhaseBarrier);
+
+impl Drop for PoisonOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+/// Per-thread work counters: each worker owns exactly one (cache-padded)
+/// slot, written with plain stores; the leader folds them into
+/// [`Metrics`] while workers are parked in the Select phase.
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkerStats {
+    propose_nnz: u64,
+    updates: u64,
 }
 
 /// Run GenCD from the zero vector.
@@ -174,25 +317,54 @@ pub fn solve_from(
     let threads = cfg.threads.max(1);
     let n = problem.n_samples();
     let mean_col_nnz = problem.x.mean_col_nnz();
-    let unsync_update = cfg.conflict_free_update || threads == 1;
     // per-thread best reductions are only consumed by the greedy accept
     // policies; skip the bookkeeping for All / TopK (§Perf)
     let need_best = matches!(
         cfg.acceptor,
         Acceptor::ThreadGreedy | Acceptor::GlobalBest
     );
+    // Allocate the buffered-update accumulators (n doubles per thread)
+    // only when the configured path can ever pick them: forced buffered,
+    // or Auto with a selection/accept volume that can reach the switch
+    // threshold. Greedy-style acceptors update at most `threads`
+    // coordinates per iteration and never buffer.
+    let may_buffer = match cfg.update_path {
+        UpdatePath::Buffered => true,
+        UpdatePath::Auto => {
+            let est = accept_bound(
+                cfg.acceptor,
+                selector.expected_size().ceil() as usize,
+                threads,
+            );
+            threads > 1 && est as f64 * mean_col_nnz >= n as f64
+        }
+        UpdatePath::Atomic | UpdatePath::ConflictFree => false,
+    };
+    // One accumulator per thread; SyncF64Vec slabs are themselves
+    // 128-byte aligned, so neither the buffers nor their chunked reduce
+    // share cache lines across threads.
+    let buffers: Vec<SyncF64Vec> = if may_buffer {
+        (0..threads).map(|_| SyncF64Vec::zeros(n)).collect()
+    } else {
+        Vec::new()
+    };
 
     let plan = RwLock::new(Plan {
         selected: Vec::new(),
         accepted: Vec::new(),
         use_dloss: false,
+        update: UpdateMode::Atomic,
         hlo: false,
         stop: None,
     });
-    let barrier = PhaseBarrier::new(threads);
+    let barrier = PhaseBarrier::new(threads, cfg.barrier_spin);
     let metrics = Metrics::default();
-    let bests: Vec<Mutex<ThreadBest>> =
-        (0..threads).map(|_| Mutex::new(ThreadBest::NONE)).collect();
+    let bests: Vec<CachePadded<SyncCell<ThreadBest>>> = (0..threads)
+        .map(|_| CachePadded::new(SyncCell::new(ThreadBest::NONE)))
+        .collect();
+    let stats: Vec<CachePadded<SyncCell<WorkerStats>>> = (0..threads)
+        .map(|_| CachePadded::new(SyncCell::new(WorkerStats::default())))
+        .collect();
     // Leader-only bookkeeping, moved into the leader closure.
     let mut leader_state = LeaderState {
         selector,
@@ -202,10 +374,15 @@ pub fn solve_from(
         tol_hits: 0,
         iter: 0,
         block_proposer,
+        select_epoch: 0,
+        seen_select: Vec::new(),
     };
 
     let run_worker = |tid: usize, leader: Option<&mut LeaderState>| {
         let mut leader = leader;
+        // a panicking worker (debug assert, proposer failure) must not
+        // strand its peers at the next barrier
+        let _poison_guard = PoisonOnPanic(&barrier);
         // leader-only chained phase timestamps: one clock read per phase
         // boundary instead of start/stop pairs (§Perf — iterations can
         // be sub-microsecond)
@@ -225,14 +402,24 @@ pub fn solve_from(
             // ---- leader: plan the iteration -------------------------
             if let Some(ls) = leader.as_deref_mut() {
                 let mut p = plan.write().unwrap();
-                plan_iteration(problem, state, cfg, ls, &metrics, &mut p, mean_col_nnz);
+                plan_iteration(
+                    problem,
+                    state,
+                    cfg,
+                    ls,
+                    &metrics,
+                    &mut p,
+                    mean_col_nnz,
+                    &stats,
+                    may_buffer,
+                );
             }
             barrier.wait();
             lap!(select_nanos);
 
-            let (stop, use_dloss, hlo_mode, selected_len) = {
+            let (stop, use_dloss, hlo_mode, update_mode, selected_len) = {
                 let p = plan.read().unwrap();
-                (p.stop, p.use_dloss, p.hlo, p.selected.len())
+                (p.stop, p.use_dloss, p.hlo, p.update, p.selected.len())
             };
             if stop.is_some() {
                 break;
@@ -240,7 +427,7 @@ pub fn solve_from(
 
             // ---- dloss refresh (parallel over samples) ---------------
             if use_dloss {
-                let r = chunk(n, tid, threads);
+                let r = aligned_chunk(n, tid, threads);
                 propose::refresh_dloss(problem, state, r.start, r.end);
             }
             barrier.wait();
@@ -266,9 +453,14 @@ pub fn solve_from(
                             best.consider(j, pr.phi, pr.delta);
                         }
                     }
-                    metrics.add_propose_nnz(nnz_work);
+                    if nnz_work > 0 {
+                        // own padded slot: plain RMW, no shared-line traffic
+                        let mut s = stats[tid].get();
+                        s.propose_nnz += nnz_work;
+                        stats[tid].set(s);
+                    }
                     if need_best {
-                        *bests[tid].lock().unwrap() = best;
+                        bests[tid].set(best);
                     }
                 }
             }
@@ -277,8 +469,8 @@ pub fn solve_from(
 
             // ---- Accept (leader) -------------------------------------
             // All-policy fast path: J' == J; the Update phase reads
-            // `selected` directly (plan.accept_is_select), so the write
-            // lock and the copy are skipped entirely (§Perf)
+            // `selected` directly, so the write lock and the copy are
+            // skipped entirely (§Perf)
             if leader.is_some() && cfg.acceptor != Acceptor::All {
                 let mut p = plan.write().unwrap();
                 if hlo_mode {
@@ -290,15 +482,15 @@ pub fn solve_from(
                         for &j in &p.selected[my] {
                             best.consider(
                                 j,
-                                state.phi[j as usize].load(Relaxed),
-                                state.delta[j as usize].load(Relaxed),
+                                state.phi.get(j as usize),
+                                state.delta.get(j as usize),
                             );
                         }
-                        *bests[t].lock().unwrap() = best;
+                        bests[t].set(best);
                     }
                 }
                 let bests_snapshot: Vec<ThreadBest> =
-                    bests.iter().map(|b| *b.lock().unwrap()).collect();
+                    bests.iter().map(|b| b.get()).collect();
                 let Plan {
                     selected, accepted, ..
                 } = &mut *p;
@@ -306,7 +498,7 @@ pub fn solve_from(
                     cfg.acceptor,
                     &bests_snapshot,
                     selected,
-                    |j| state.phi[j as usize].load(Relaxed),
+                    |j| state.phi.get(j as usize),
                     accepted,
                 );
             }
@@ -324,11 +516,21 @@ pub fn solve_from(
                 } else {
                     &p.accepted
                 };
+                if cfg!(debug_assertions) && tid == 0 {
+                    let mut seen = HashSet::with_capacity(accepted.len());
+                    for &j in accepted {
+                        assert!(
+                            seen.insert(j),
+                            "duplicate coordinate {j} in accepted set breaks the \
+                             unique-writer invariant of the Update phase"
+                        );
+                    }
+                }
                 let my = chunk(accepted.len(), tid, threads);
                 let mut applied = 0u64;
                 for &j in &accepted[my] {
                     let j = j as usize;
-                    let d0 = state.delta[j].load(Relaxed);
+                    let d0 = state.delta.get(j);
                     if d0 == 0.0 && cfg.line_search_steps == 0 {
                         continue;
                     }
@@ -337,25 +539,60 @@ pub fn solve_from(
                         continue;
                     }
                     // unique writer for w[j] within this phase
-                    let wj = state.w[j].load(Relaxed);
-                    state.w[j].store(wj + d, Relaxed);
+                    state.w.add(j, d);
                     let (rows, vals) = problem.x.col(j);
-                    if unsync_update {
-                        // unique writer per z[i] too (T=1 or coloring):
-                        // plain load+store, no CAS (§Perf)
-                        for (&i, &v) in rows.iter().zip(vals) {
-                            let zi = &state.z[i as usize];
-                            zi.store(zi.load(Relaxed) + d * v, Relaxed);
+                    match update_mode {
+                        UpdateMode::ConflictFree => {
+                            // unique writer per z[i] too (T=1 or
+                            // coloring): plain load+store, no CAS
+                            for (&i, &v) in rows.iter().zip(vals) {
+                                state.z.add(i as usize, d * v);
+                            }
                         }
-                    } else {
-                        // z updates may collide across columns -> atomic add
-                        for (&i, &v) in rows.iter().zip(vals) {
-                            state.z[i as usize].fetch_add(d * v, Relaxed);
+                        UpdateMode::Atomic => {
+                            // z updates may collide across columns ->
+                            // atomic add (Algorithm 3)
+                            for (&i, &v) in rows.iter().zip(vals) {
+                                state.z[i as usize].fetch_add(d * v, Relaxed);
+                            }
+                        }
+                        UpdateMode::Buffered => {
+                            // scatter into this thread's private
+                            // accumulator; z itself is untouched until
+                            // the reduce sub-phase below
+                            let buf = &buffers[tid];
+                            for (&i, &v) in rows.iter().zip(vals) {
+                                buf.add(i as usize, d * v);
+                            }
                         }
                     }
                     applied += 1;
                 }
-                metrics.add_updates(applied);
+                if applied > 0 {
+                    let mut s = stats[tid].get();
+                    s.updates += applied;
+                    stats[tid].set(s);
+                }
+            }
+            if update_mode == UpdateMode::Buffered {
+                // scatters done and published by this barrier ...
+                barrier.wait();
+                // ... then every thread folds ALL accumulators over its
+                // own cache-aligned chunk of z (disjoint writers) and
+                // re-zeroes them for the next iteration
+                for i in aligned_chunk(n, tid, threads) {
+                    let mut acc = 0.0;
+                    for buf in &buffers {
+                        let v = buf.get(i);
+                        if v != 0.0 {
+                            acc += v;
+                            buf.set(i, 0.0);
+                        }
+                    }
+                    if acc != 0.0 {
+                        state.z.add(i, acc);
+                    }
+                }
             }
             barrier.wait();
             lap!(update_nanos);
@@ -399,8 +636,63 @@ struct LeaderState<'a> {
     tol_hits: u32,
     iter: usize,
     block_proposer: Option<&'a mut dyn BlockProposer>,
+    /// Epoch-stamped duplicate filter for the `Acceptor::All` fast path
+    /// (which consumes `selected` directly, bypassing
+    /// `resolve_global`'s dedup): `seen_select[j] == select_epoch`
+    /// means j already appeared this iteration. O(|J|) per iteration,
+    /// no hashing, no allocation after the first use.
+    select_epoch: u64,
+    seen_select: Vec<u64>,
 }
 
+/// Upper bound on |J'| for a policy given |J| (the Auto update-path
+/// heuristic runs at plan time, before Accept).
+fn accept_bound(acceptor: Acceptor, selected: usize, threads: usize) -> usize {
+    match acceptor {
+        Acceptor::All => selected,
+        Acceptor::ThreadGreedy => threads.min(selected),
+        Acceptor::GlobalBest => 1.min(selected),
+        Acceptor::GlobalTopK(k) => k.min(selected),
+    }
+}
+
+/// Resolve the configured [`UpdatePath`] into this iteration's
+/// [`UpdateMode`]. `may_buffer` says whether the engine allocated the
+/// per-thread accumulators.
+fn choose_update_mode(
+    path: UpdatePath,
+    threads: usize,
+    est_accept: usize,
+    mean_col_nnz: f64,
+    n: usize,
+    may_buffer: bool,
+) -> UpdateMode {
+    match path {
+        UpdatePath::ConflictFree => UpdateMode::ConflictFree,
+        UpdatePath::Atomic => UpdateMode::Atomic,
+        UpdatePath::Buffered => {
+            if may_buffer {
+                UpdateMode::Buffered
+            } else {
+                UpdateMode::Atomic
+            }
+        }
+        UpdatePath::Auto => {
+            if threads <= 1 {
+                // every element trivially has a unique writer
+                UpdateMode::ConflictFree
+            } else if may_buffer && est_accept as f64 * mean_col_nnz >= n as f64 {
+                // scatter volume reaches the sample count: the O(n)
+                // reduce sweep amortizes, CAS contention does not
+                UpdateMode::Buffered
+            } else {
+                UpdateMode::Atomic
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn plan_iteration(
     problem: &Problem,
     state: &SharedState,
@@ -409,8 +701,23 @@ fn plan_iteration(
     metrics: &Metrics,
     plan: &mut Plan,
     mean_col_nnz: f64,
+    stats: &[CachePadded<SyncCell<WorkerStats>>],
+    may_buffer: bool,
 ) {
     let elapsed = ls.timer.elapsed_secs();
+
+    // ---- contention-free counter reduction -------------------------
+    // Workers wrote their padded slots before the phase barrier and are
+    // parked for the whole Select phase, so the leader owns every slot.
+    let mut updates = 0u64;
+    let mut propose_nnz = 0u64;
+    for s in stats {
+        let v = s.get();
+        updates += v.updates;
+        propose_nnz += v.propose_nnz;
+    }
+    metrics.updates.store(updates, Relaxed);
+    metrics.propose_nnz.store(propose_nnz, Relaxed);
 
     // ---- logging + divergence/tolerance checks ---------------------
     let should_log = match cfg.log_every {
@@ -425,7 +732,7 @@ fn plan_iteration(
         ls.history.push(Record {
             elapsed_secs: elapsed,
             iter: ls.iter,
-            updates: metrics.updates.load(Relaxed),
+            updates,
             objective,
             nnz: loss::nnz(&w),
         });
@@ -465,6 +772,31 @@ fn plan_iteration(
     ls.selector.select(&mut plan.selected);
     plan.hlo = ls.block_proposer.is_some();
 
+    // `selected` must be duplicate-free for EVERY acceptor: the Propose
+    // phase chunks it across workers and writes `delta[j]`/`phi[j]`
+    // with plain stores (unique-writer invariant), and the All fast
+    // path additionally hands it straight to the Update phase.
+    // (`resolve_global` dedupes the accepted side again for the other
+    // policies.) The built-in selectors never repeat, but a custom one
+    // may; this costs one O(|J|) stamped scan, no hashing.
+    if plan.selected.len() > 1 {
+        if ls.seen_select.len() < problem.n_features() {
+            ls.seen_select.resize(problem.n_features(), 0);
+        }
+        ls.select_epoch += 1;
+        let epoch = ls.select_epoch;
+        let seen = &mut ls.seen_select;
+        plan.selected.retain(|&j| {
+            let slot = &mut seen[j as usize];
+            if *slot == epoch {
+                false
+            } else {
+                *slot = epoch;
+                true
+            }
+        });
+    }
+
     // ---- gradient-path heuristic --------------------------------------
     // Precomputing dloss costs n `ell'` evaluations; on-the-fly costs one
     // per traversed nonzero (~|J| * mean_col_nnz). Pick the cheaper.
@@ -477,14 +809,26 @@ fn plan_iteration(
         }
     };
 
+    // ---- update-path decision -----------------------------------------
+    let threads = cfg.threads.max(1);
+    let est_accept = accept_bound(cfg.acceptor, plan.selected.len(), threads);
+    plan.update = choose_update_mode(
+        cfg.update_path,
+        threads,
+        est_accept,
+        mean_col_nnz,
+        problem.n_samples(),
+        may_buffer,
+    );
+
     metrics.iterations.fetch_add(1, Relaxed);
     ls.iter += 1;
 }
 
 #[inline]
 fn store_proposal(state: &SharedState, pr: &Proposal) {
-    state.delta[pr.j].store(pr.delta, Relaxed);
-    state.phi[pr.j].store(pr.phi, Relaxed);
+    state.delta.set(pr.j, pr.delta);
+    state.phi.set(pr.j, pr.phi);
 }
 
 #[cfg(test)]
@@ -700,5 +1044,76 @@ mod tests {
         let c = cfg(8, Acceptor::All, 200);
         solve_from(&p, &state, sel, &c, None);
         assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+    }
+
+    #[test]
+    fn buffered_path_consistent_multithread() {
+        // forced buffered updates under real contention: z stays
+        // consistent with w and the solve still descends
+        let p = make_problem(16, 48, 24, true);
+        let sel = Selector::RandomSubset {
+            rng: Pcg64::seeded(17),
+            k: p.n_features(),
+            size: 8,
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let mut c = cfg(4, Acceptor::All, 200);
+        c.update_path = UpdatePath::Buffered;
+        let out = solve_from(&p, &state, sel, &c, None);
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{first} -> {}", out.objective);
+        assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+    }
+
+    #[test]
+    fn buffered_with_line_search_and_thread_greedy() {
+        // forced buffered path composes with line search and a
+        // non-All acceptor (accepted list path, not the fast path)
+        let p = make_problem(18, 32, 16, true);
+        let sel = Selector::RandomSubset {
+            rng: Pcg64::seeded(19),
+            k: p.n_features(),
+            size: 8,
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let mut c = cfg(3, Acceptor::ThreadGreedy, 80);
+        c.update_path = UpdatePath::Buffered;
+        c.line_search_steps = 5;
+        let out = solve_from(&p, &state, sel, &c, None);
+        assert!(out.objective.is_finite());
+        assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+    }
+
+    #[test]
+    fn update_mode_choice() {
+        use super::UpdateMode as M;
+        use super::UpdatePath as P;
+        // forced paths are forced
+        assert_eq!(choose_update_mode(P::Atomic, 8, 1000, 50.0, 100, true), M::Atomic);
+        assert_eq!(
+            choose_update_mode(P::ConflictFree, 8, 1000, 50.0, 100, false),
+            M::ConflictFree
+        );
+        assert_eq!(choose_update_mode(P::Buffered, 1, 1, 1.0, 100, true), M::Buffered);
+        // auto: single thread is conflict-free
+        assert_eq!(choose_update_mode(P::Auto, 1, 1000, 50.0, 100, true), M::ConflictFree);
+        // auto: small scatter volume stays atomic
+        assert_eq!(choose_update_mode(P::Auto, 4, 2, 10.0, 1000, true), M::Atomic);
+        // auto: scatter volume >= n flips to buffered (when allocated)
+        assert_eq!(choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true), M::Buffered);
+        assert_eq!(choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false), M::Atomic);
+    }
+
+    #[test]
+    fn update_path_names_roundtrip() {
+        for p in [
+            UpdatePath::Auto,
+            UpdatePath::Atomic,
+            UpdatePath::Buffered,
+            UpdatePath::ConflictFree,
+        ] {
+            assert_eq!(UpdatePath::by_name(p.name()).unwrap(), p);
+        }
+        assert!(UpdatePath::by_name("magic").is_err());
     }
 }

@@ -15,9 +15,13 @@ use crate::util::clip_psi;
 /// Refine a proposed increment for coordinate j by `steps` further
 /// Eq. (7) iterations. Returns the refined *total* increment.
 ///
-/// Reads `z` through the shared state (atomic loads); concurrent
-/// accepted updates to other coordinates may race benignly, exactly as
-/// in the OpenMP original.
+/// Runs inside the Update phase, so `z` is read through the *atomic*
+/// view: in the engine's atomic update mode other threads' `fetch_add`
+/// scatters race these reads benignly, exactly as in the OpenMP
+/// original. (In the buffered and conflict-free modes the reads happen
+/// to be conflict-free, but atomic loads cost the same as plain ones on
+/// x86/ARM, so one discipline serves all three.) `w[j]` is owned by the
+/// calling thread for the whole phase — plain read.
 pub fn refine(
     problem: &Problem,
     state: &SharedState,
@@ -36,7 +40,7 @@ pub fn refine(
     let lam = problem.lam;
     let beta = problem.beta_j(j);
     let inv_n = 1.0 / problem.n_samples() as f64;
-    let wj0 = state.w[j].load(Relaxed);
+    let wj0 = state.w.get(j);
 
     // local copy of z restricted to the support
     let mut zloc: Vec<f64> = rows

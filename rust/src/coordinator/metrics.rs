@@ -3,8 +3,11 @@
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
-/// Shared counters, updated by workers with relaxed atomics (negligible
-/// cost next to the column traversals they count).
+/// Shared counters. The engine's workers accumulate work counts in
+/// cache-padded per-thread slots (no shared-line traffic on the hot
+/// path); the leader folds them in here during the Select phase, so
+/// `updates`/`propose_nnz` are leader-written totals. The remaining
+/// fields are leader-only throughout.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// Coordinate updates applied (|J'| summed over iterations).
@@ -24,16 +27,14 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    pub fn add_updates(&self, n: u64) {
-        self.updates.fetch_add(n, Relaxed);
-    }
-
+    /// Leader-only (the Accept phase).
+    ///
+    /// There are deliberately no `add_updates`/`add_propose_nnz`
+    /// helpers: those totals are *stored* by the leader from the folded
+    /// per-thread slots — mixing in `fetch_add` increments would corrupt
+    /// them.
     pub fn add_proposals(&self, n: u64) {
         self.proposals.fetch_add(n, Relaxed);
-    }
-
-    pub fn add_propose_nnz(&self, n: u64) {
-        self.propose_nnz.fetch_add(n, Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -88,10 +89,11 @@ mod tests {
     #[test]
     fn counters_accumulate() {
         let m = Metrics::default();
-        m.add_updates(3);
-        m.add_updates(4);
+        // updates/propose_nnz are leader-stored totals (see struct docs)
+        m.updates.store(3, Relaxed);
+        m.updates.store(7, Relaxed);
         m.add_proposals(10);
-        m.add_propose_nnz(100);
+        m.propose_nnz.store(100, Relaxed);
         m.iterations.store(2, Relaxed);
         let s = m.snapshot();
         assert_eq!(s.updates, 7);

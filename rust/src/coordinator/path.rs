@@ -5,7 +5,7 @@
 //! Shotgun (Sec. 4.1), offered as a first-class feature.
 
 use super::algorithms::{instantiate, Algorithm, Preprocessed};
-use super::engine::{solve_from, EngineConfig, SolveOutput};
+use super::engine::{solve_from, EngineConfig, SolveOutput, UpdatePath};
 use super::problem::{Problem, SharedState};
 use crate::coloring::Strategy;
 use crate::loss::{self, Loss};
@@ -117,9 +117,12 @@ pub fn solve_path(
             max_iters: cfg.max_iters,
             max_seconds: cfg.max_seconds,
             tol: cfg.tol,
-            log_every: 0,
-            force_dloss: None,
-            conflict_free_update: cfg.algorithm == Algorithm::Coloring,
+            update_path: if cfg.algorithm == Algorithm::Coloring {
+                UpdatePath::ConflictFree
+            } else {
+                UpdatePath::Auto
+            },
+            ..Default::default()
         };
         let state = SharedState::from_warm_start(&problem, &warm);
         let out: SolveOutput = solve_from(&problem, &state, inst.selector, &engine_cfg, None);

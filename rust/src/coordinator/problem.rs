@@ -1,11 +1,9 @@
 //! Problem definition + the shared solver state of Table 1.
 
-use std::sync::atomic::Ordering;
-
 use crate::loss::{self, Loss};
 use crate::sparse::io::Dataset;
 use crate::sparse::CscMatrix;
-use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
+use crate::util::atomic::SyncF64Vec;
 
 /// An l1-regularized ERM instance (Eq. 1): design matrix, labels, loss,
 /// regularization strength, plus cached per-column curvature info.
@@ -58,55 +56,57 @@ impl Problem {
     }
 }
 
-/// The shared arrays of Table 1 (plus the cached loss-derivative vector),
-/// all atomic so cross-thread access during the phase-separated iteration
-/// is well-defined. Phases are separated by barriers; within a phase each
-/// element has a unique writer (see `engine`).
+/// The shared arrays of Table 1 (plus the cached loss-derivative vector).
+///
+/// Storage is [`SyncF64Vec`]: every array supports both plain and atomic
+/// element access to the same memory. The engine's phase protocol gives
+/// each element a unique writer within a phase and a barrier-provided
+/// happens-before edge between phases (see [`crate::util::par`]), so the
+/// hot paths use plain accesses — Propose reads `w`/`dloss`/`z` and
+/// writes `delta`/`phi` without a single atomic-typed instruction — and
+/// only the colliding `z` scatter of the Update phase's atomic mode goes
+/// through `state.z[i].fetch_add(..)` (Algorithm 3's `omp atomic`).
 pub struct SharedState {
     /// Weight estimate `w` (k).
-    pub w: Vec<AtomicF64>,
-    /// Fitted values `z = X w` (n) — updated incrementally with atomic
-    /// adds (Algorithm 3).
-    pub z: Vec<AtomicF64>,
+    pub w: SyncF64Vec,
+    /// Fitted values `z = X w` (n) — updated incrementally (Algorithm 3;
+    /// atomic, buffered, or conflict-free depending on the engine's
+    /// update path).
+    pub z: SyncF64Vec,
     /// Proposed increments `delta` (k).
-    pub delta: Vec<AtomicF64>,
+    pub delta: SyncF64Vec,
     /// Proposal proxies `phi` (k), Eq. 9 — more negative is better.
-    pub phi: Vec<AtomicF64>,
+    pub phi: SyncF64Vec,
     /// Cached `ell'(y_i, z_i)` (n), recomputed each iteration when the
     /// engine decides precomputation is cheaper (see `engine`).
-    pub dloss: Vec<AtomicF64>,
+    pub dloss: SyncF64Vec,
 }
 
 impl SharedState {
     pub fn new(n: usize, k: usize) -> Self {
         Self {
-            w: atomic_vec(k),
-            z: atomic_vec(n),
-            delta: atomic_vec(k),
-            phi: atomic_vec(k),
-            dloss: atomic_vec(n),
+            w: SyncF64Vec::zeros(k),
+            z: SyncF64Vec::zeros(n),
+            delta: SyncF64Vec::zeros(k),
+            phi: SyncF64Vec::zeros(k),
+            dloss: SyncF64Vec::zeros(n),
         }
     }
 
     /// Initialize from a warm-start weight vector.
     pub fn from_warm_start(problem: &Problem, w0: &[f64]) -> Self {
         let state = Self::new(problem.n_samples(), problem.n_features());
-        for (j, &wj) in w0.iter().enumerate() {
-            state.w[j].store(wj, Ordering::Relaxed);
-        }
-        let z = problem.x.matvec(w0);
-        for (i, &zi) in z.iter().enumerate() {
-            state.z[i].store(zi, Ordering::Relaxed);
-        }
+        state.w.copy_from(w0);
+        state.z.copy_from(&problem.x.matvec(w0));
         state
     }
 
     pub fn w_snapshot(&self) -> Vec<f64> {
-        snapshot(&self.w)
+        self.w.snapshot()
     }
 
     pub fn z_snapshot(&self) -> Vec<f64> {
-        snapshot(&self.z)
+        self.z.snapshot()
     }
 
     /// Recompute `z = X w` exactly (drift repair / invariant tests).

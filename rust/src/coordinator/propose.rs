@@ -12,8 +12,12 @@
 //! coordinates) or *on the fly* from `z` (one `ell'` per column nonzero —
 //! cheaper when few coordinates are selected). The engine chooses per
 //! iteration; both are tested equal here.
-
-use std::sync::atomic::Ordering::Relaxed;
+//!
+//! All shared-state access here is **plain** (non-atomic): Propose and
+//! the dloss refresh run in phases where `w`, `z` and `dloss` have no
+//! concurrent writer, and `delta`/`phi`/`dloss` writes go to elements
+//! this thread uniquely owns (see the engine's phase protocol and
+//! [`crate::util::atomic::SyncF64Vec`]).
 
 use super::problem::{Problem, SharedState};
 use crate::util::clip_psi;
@@ -47,7 +51,7 @@ pub fn gradient_from_dloss(problem: &Problem, state: &SharedState, j: usize) -> 
     let (rows, vals) = problem.x.col(j);
     let mut acc = 0.0;
     for (&i, &v) in rows.iter().zip(vals) {
-        acc += v * state.dloss[i as usize].load(Relaxed);
+        acc += v * state.dloss.get(i as usize);
     }
     acc / problem.n_samples() as f64
 }
@@ -60,7 +64,7 @@ pub fn gradient_from_z(problem: &Problem, state: &SharedState, j: usize) -> f64 
     let mut acc = 0.0;
     for (&i, &v) in rows.iter().zip(vals) {
         let i = i as usize;
-        acc += v * loss.deriv(problem.y[i], state.z[i].load(Relaxed));
+        acc += v * loss.deriv(problem.y[i], state.z.get(i));
     }
     acc / problem.n_samples() as f64
 }
@@ -73,7 +77,7 @@ pub fn propose(problem: &Problem, state: &SharedState, j: usize, use_dloss: bool
     } else {
         gradient_from_z(problem, state, j)
     };
-    let wj = state.w[j].load(Relaxed);
+    let wj = state.w.get(j);
     proposal_from_gradient(problem, j, wj, g)
 }
 
@@ -82,8 +86,8 @@ pub fn propose(problem: &Problem, state: &SharedState, j: usize, use_dloss: bool
 pub fn refresh_dloss(problem: &Problem, state: &SharedState, lo: usize, hi: usize) {
     let loss = problem.loss.as_ref();
     for i in lo..hi {
-        let d = loss.deriv(problem.y[i], state.z[i].load(Relaxed));
-        state.dloss[i].store(d, Relaxed);
+        let d = loss.deriv(problem.y[i], state.z.get(i));
+        state.dloss.set(i, d);
     }
 }
 

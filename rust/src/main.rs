@@ -69,6 +69,7 @@ USAGE: gencd <subcommand> [flags]
 SUBCOMMANDS
   train      --config FILE | --dataset NAME --algorithm ALG [--lam X]
              [--threads N] [--seconds S] [--line-search N] [--csv FILE]
+             [--update-path auto|atomic|buffered|conflict-free]
              [--set table.key=value]...
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
              [--seconds S] [--threads N]     (warm-started lambda path)
@@ -119,6 +120,9 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(v) = args.value("seed") {
         cfg.solver.seed = v.parse()?;
+    }
+    if let Some(v) = args.value("update-path") {
+        cfg.solver.update_path = v;
     }
     if let Some(v) = args.value("csv") {
         cfg.csv = Some(v);

@@ -10,8 +10,6 @@
 //! artifact and f64 in the solver; the integration test bounds the
 //! difference against the sparse path.
 
-use std::sync::atomic::Ordering::Relaxed;
-
 use super::client::{Executable, Runtime};
 use crate::coordinator::engine::BlockProposer;
 use crate::coordinator::problem::{Problem, SharedState};
@@ -109,13 +107,15 @@ impl HloProposer {
                 self.panel[i as usize * self.b + col] = v as f32;
             }
         }
-        // snapshot z (padded region stays 0; mask kills its dloss)
+        // snapshot z (padded region stays 0; mask kills its dloss).
+        // Plain reads: propose_block runs on the leader while workers
+        // are parked at a barrier (see BlockProposer's contract).
         for i in 0..self.n_real {
-            self.z_pad[i] = state.z[i].load(Relaxed) as f32;
+            self.z_pad[i] = state.z.get(i) as f32;
         }
         self.w_blk.fill(0.0);
         for (col, &j) in js.iter().enumerate() {
-            self.w_blk[col] = state.w[j as usize].load(Relaxed) as f32;
+            self.w_blk[col] = state.w.get(j as usize) as f32;
         }
         let outs = self.exe.run_f32(&[
             &self.panel,
@@ -142,8 +142,8 @@ impl BlockProposer for HloProposer {
         for blk in selected.chunks(width) {
             let (_, delta, phi) = self.run_block(problem, state, blk)?;
             for (col, &j) in blk.iter().enumerate() {
-                state.delta[j as usize].store(delta[col] as f64, Relaxed);
-                state.phi[j as usize].store(phi[col] as f64, Relaxed);
+                state.delta.set(j as usize, delta[col] as f64);
+                state.phi.set(j as usize, phi[col] as f64);
             }
         }
         Ok(())

@@ -1,14 +1,32 @@
-//! Atomic `f64` — the Rust analogue of OpenMP's `#pragma omp atomic` on a
-//! `double`, which the paper uses for the shared fitted-value vector `z`
-//! (Algorithm 3) and which we additionally use for `w`, `delta`, `phi` so
-//! stale cross-thread reads are well-defined rather than UB.
+//! Shared numeric state for the phase-locked engine: an atomic `f64`
+//! (the analogue of OpenMP's `#pragma omp atomic` on a `double`, used for
+//! the colliding `z` scatters of Algorithm 3) and [`SyncF64Vec`] /
+//! [`SyncCell`], which expose the *unsynchronized* views the engine's
+//! unique-writer-per-phase protocol makes legal.
+//!
+//! The seed implementation typed every shared array `Vec<AtomicF64>`,
+//! which forced an atomic-typed load/store on every element touch even
+//! in phases where no concurrent writer exists (Propose reading `w` /
+//! `dloss` / `z`, writing `delta` / `phi`). The protocol — phases
+//! separated by barriers, each element having a unique writer within a
+//! phase, the barrier providing the happens-before edge (see
+//! [`crate::util::par`]) — means plain accesses are race-free there, and
+//! the atomic view is only needed where writers can genuinely collide:
+//! the CAS `fetch_add` path of the Update phase.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// An `f64` supporting atomic load/store/fetch-add via `AtomicU64` bit
 /// casting. `fetch_add` is a CAS loop, exactly what `omp atomic` compiles
 /// to for floating-point addition on x86.
+///
+/// `repr(transparent)` is load-bearing: [`SyncF64Vec::atomic`] reinterprets
+/// an `UnsafeCell<f64>` as an `AtomicF64`, which is sound only because
+/// this is layout-identical to `AtomicU64`, which is layout-identical to
+/// `u64`/`f64` (same size and alignment, per the std guarantees).
 #[derive(Debug)]
+#[repr(transparent)]
 pub struct AtomicF64(AtomicU64);
 
 impl AtomicF64 {
@@ -66,6 +84,183 @@ pub fn snapshot(xs: &[AtomicF64]) -> Vec<f64> {
     xs.iter().map(|x| x.load(Ordering::Relaxed)).collect()
 }
 
+/// A fixed-length shared `f64` array offering both **plain** and
+/// **atomic** element access to the same memory.
+///
+/// This is the storage behind [`crate::coordinator::problem::SharedState`].
+/// The engine's protocol (phases separated by barriers; within a phase
+/// every element has a unique writer, and no element is plainly read
+/// while another thread writes it) makes the plain accessors race-free
+/// in their intended call sites; the barrier's acquire/release edges
+/// (see [`crate::util::par`]) publish each phase's writes to the next.
+/// The atomic view ([`Self::atomic`], also reachable by indexing) is for
+/// the one genuinely colliding access pattern — concurrent `z` scatters
+/// in the Update phase — and for out-of-engine callers that want
+/// conservatively well-defined access.
+///
+/// Mixing the two views is sound as long as a plain access never races
+/// an atomic *write* to the same element; the engine guarantees this by
+/// construction (plain reads of `z` happen in phases with no `z` writer,
+/// and the Update phase picks exactly one write discipline per
+/// iteration).
+///
+/// Misusing the plain accessors concurrently *is* a data race (UB) —
+/// this type is an engine-internal contract, not a general-purpose
+/// container, which is why it lives next to the engine rather than in a
+/// public concurrency toolkit.
+///
+/// Element 0 is placed on a 128-byte boundary (the slab is
+/// over-allocated by up to [`crate::util::par::F64S_PER_LINE`] - 1
+/// elements and an aligned start offset is chosen), so
+/// [`crate::util::par::aligned_chunk`]'s 16-element boundaries land on
+/// cache lines *by construction* — the no-false-sharing property does
+/// not depend on what the allocator happened to return.
+#[derive(Debug)]
+pub struct SyncF64Vec {
+    cells: Box<[UnsafeCell<f64>]>,
+    /// Index of the 128-byte-aligned element the logical vector starts
+    /// at (0..16).
+    offset: usize,
+    len: usize,
+}
+
+// SAFETY: access discipline is delegated to the unique-writer protocol
+// documented above; the type itself only hands out raw f64 slots.
+unsafe impl Send for SyncF64Vec {}
+unsafe impl Sync for SyncF64Vec {}
+
+impl SyncF64Vec {
+    /// Allocate `len` zeros (the shared arrays of Table 1), with
+    /// element 0 on a 128-byte boundary.
+    pub fn zeros(len: usize) -> Self {
+        const ALIGN_ELEMS: usize = 16; // 128 bytes / 8
+        let raw = len + ALIGN_ELEMS - 1;
+        let cells: Box<[UnsafeCell<f64>]> =
+            (0..raw).map(|_| UnsafeCell::new(0.0)).collect();
+        let base = cells.as_ptr() as usize;
+        debug_assert_eq!(base % 8, 0);
+        let offset = (base.wrapping_neg() % 128) / 8;
+        debug_assert!(offset < ALIGN_ELEMS);
+        Self { cells, offset, len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline(always)]
+    fn cell(&self, i: usize) -> &UnsafeCell<f64> {
+        assert!(i < self.len, "index {i} out of bounds (len {})", self.len);
+        &self.cells[self.offset + i]
+    }
+
+    /// Plain (non-atomic) read. Caller must ensure no concurrent writer.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> f64 {
+        unsafe { *self.cell(i).get() }
+    }
+
+    /// Plain (non-atomic) write. Caller must be the element's unique
+    /// accessor for the current phase.
+    #[inline(always)]
+    pub fn set(&self, i: usize, v: f64) {
+        unsafe { *self.cell(i).get() = v }
+    }
+
+    /// Plain read-modify-write `x[i] += v` (no CAS). Same contract as
+    /// [`Self::set`].
+    #[inline(always)]
+    pub fn add(&self, i: usize, v: f64) {
+        unsafe { *self.cell(i).get() += v }
+    }
+
+    /// Atomic view of element `i` (for colliding writers: the CAS
+    /// `fetch_add` Update path). Also available as `vec[i]` via `Index`.
+    #[inline(always)]
+    pub fn atomic(&self, i: usize) -> &AtomicF64 {
+        // SAFETY: AtomicF64 is repr(transparent) over AtomicU64, which
+        // has the same size, alignment and in-memory representation as
+        // u64 and hence f64; the reference inherits &self's lifetime.
+        unsafe { &*(self.cell(i).get() as *const AtomicF64) }
+    }
+
+    /// Copy out into a plain vector (plain reads; callers hold the same
+    /// no-concurrent-writer obligation as [`Self::get`]).
+    pub fn snapshot(&self) -> Vec<f64> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+
+    /// Overwrite from a slice (lengths must match).
+    pub fn copy_from(&self, src: &[f64]) {
+        assert_eq!(src.len(), self.len(), "length mismatch");
+        for (i, &v) in src.iter().enumerate() {
+            self.set(i, v);
+        }
+    }
+
+    /// Set every element to `v`.
+    pub fn fill(&self, v: f64) {
+        for i in 0..self.len() {
+            self.set(i, v);
+        }
+    }
+}
+
+impl std::ops::Index<usize> for SyncF64Vec {
+    type Output = AtomicF64;
+
+    /// Atomic element view, so `state.z[i].fetch_add(..)` keeps reading
+    /// like the paper's `#pragma omp atomic`.
+    #[inline(always)]
+    fn index(&self, i: usize) -> &AtomicF64 {
+        self.atomic(i)
+    }
+}
+
+/// A `Cell` that is `Sync`: a single value writable through `&self` with
+/// plain (non-atomic) accesses, for per-thread slots governed by the
+/// same unique-writer-per-phase protocol as [`SyncF64Vec`] (each worker
+/// writes only its own slot during a phase; the leader reads them all in
+/// the following phase, after the barrier). Pair with
+/// [`crate::util::par::CachePadded`] to keep slots off shared lines.
+#[derive(Debug, Default)]
+pub struct SyncCell<T>(UnsafeCell<T>);
+
+// SAFETY: as for SyncF64Vec — the unique-writer protocol, not the type,
+// excludes conflicting concurrent access.
+unsafe impl<T: Send> Sync for SyncCell<T> {}
+
+impl<T> SyncCell<T> {
+    pub const fn new(v: T) -> Self {
+        Self(UnsafeCell::new(v))
+    }
+
+    /// Plain read of the value. Caller must ensure no concurrent writer.
+    #[inline(always)]
+    pub fn get(&self) -> T
+    where
+        T: Copy,
+    {
+        unsafe { *self.0.get() }
+    }
+
+    /// Plain write. Caller must be the slot's unique accessor.
+    #[inline(always)]
+    pub fn set(&self, v: T) {
+        unsafe { *self.0.get() = v }
+    }
+
+    pub fn get_mut(&mut self) -> &mut T {
+        self.0.get_mut()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +313,88 @@ mod tests {
         let v = atomic_vec(4);
         v[2].store(7.0, Relaxed);
         assert_eq!(snapshot(&v), vec![0.0, 0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn sync_vec_plain_and_atomic_views_alias() {
+        let v = SyncF64Vec::zeros(4);
+        v.set(1, 2.5);
+        // the atomic view sees the plain write ...
+        assert_eq!(v[1].load(Relaxed), 2.5);
+        // ... and vice versa, including through fetch_add
+        v[1].fetch_add(0.5, Relaxed);
+        assert_eq!(v.get(1), 3.0);
+        v.add(1, 1.0);
+        assert_eq!(v.atomic(1).load(Relaxed), 4.0);
+        assert_eq!(v.snapshot(), vec![0.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sync_vec_copy_from_and_fill() {
+        let v = SyncF64Vec::zeros(3);
+        v.copy_from(&[1.0, -2.0, 3.0]);
+        assert_eq!(v.snapshot(), vec![1.0, -2.0, 3.0]);
+        v.fill(0.25);
+        assert_eq!(v.snapshot(), vec![0.25; 3]);
+        assert_eq!(v.len(), 3);
+        assert!(!v.is_empty());
+        assert!(SyncF64Vec::zeros(0).is_empty());
+    }
+
+    #[test]
+    fn sync_vec_atomic_bitcast_roundtrips_payloads() {
+        // NaN / infinities must survive the UnsafeCell<f64> -> AtomicF64
+        // reinterpretation in both directions
+        let v = SyncF64Vec::zeros(1);
+        v.set(0, f64::NAN);
+        assert!(v[0].load(Relaxed).is_nan());
+        v[0].store(f64::NEG_INFINITY, Relaxed);
+        assert_eq!(v.get(0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn sync_vec_starts_on_cache_line() {
+        // the aligned_chunk no-false-sharing argument needs element 0 on
+        // a 128-byte boundary regardless of what the allocator returned
+        for len in [1usize, 5, 16, 17, 1000] {
+            let v = SyncF64Vec::zeros(len);
+            let addr = v.atomic(0) as *const _ as usize;
+            assert_eq!(addr % 128, 0, "len={len}: base {addr:#x}");
+            assert_eq!(v.len(), len);
+        }
+    }
+
+    #[test]
+    fn sync_cell_basics() {
+        let c = SyncCell::new(7u64);
+        assert_eq!(c.get(), 7);
+        c.set(9);
+        assert_eq!(c.get(), 9);
+        let mut c = c;
+        *c.get_mut() += 1;
+        assert_eq!(c.get(), 10);
+    }
+
+    #[test]
+    fn sync_vec_cross_thread_phase_handoff() {
+        // writer thread fills disjoint halves plainly; after join (a
+        // happens-before edge, like the engine's barrier) the reader
+        // sees everything
+        let v = std::sync::Arc::new(SyncF64Vec::zeros(64));
+        let mut handles = Vec::new();
+        for t in 0..2usize {
+            let v = v.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in (32 * t)..(32 * (t + 1)) {
+                    v.set(i, i as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for i in 0..64 {
+            assert_eq!(v.get(i), i as f64);
+        }
     }
 }

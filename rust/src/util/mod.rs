@@ -6,11 +6,13 @@
 
 pub mod atomic;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod timer;
 
-pub use atomic::AtomicF64;
+pub use atomic::{AtomicF64, SyncCell, SyncF64Vec};
+pub use par::{CachePadded, SpinBarrier};
 pub use rng::Pcg64;
 pub use timer::Timer;
 

@@ -1,0 +1,378 @@
+//! Parallel substrate for the phase-locked GenCD engine: a
+//! sense-reversing spin barrier, cache-line padding, and cache-aligned
+//! chunking.
+//!
+//! # Why not `std::sync::Barrier`
+//!
+//! The engine separates Select/Propose/Accept/Update with barriers, and
+//! on small selections each phase is *sub-microsecond*. A
+//! `std::sync::Barrier` takes a mutex and parks/unparks on every
+//! crossing (several microseconds of futex round-trips), which makes the
+//! barrier — not the math — the per-iteration cost and flattens the
+//! Fig. 2 speedup curves. [`SpinBarrier`] keeps arrivals on shared
+//! atomics: threads spin (bounded) on a generation word and only fall
+//! back to parking when the wait is long (oversubscription, a stalled
+//! leader), so the common crossing is tens of nanoseconds.
+//!
+//! # Barrier protocol and memory ordering
+//!
+//! The barrier is *sense-reversing via a generation counter*: each
+//! crossing has a generation `g`; arrivals increment `count` and the
+//! last arriver (the *releaser*) resets `count` and bumps `generation`,
+//! releasing the spinners.
+//!
+//! Ordering argument (this is what lets the engine use plain,
+//! non-atomic element accesses between phases — see
+//! [`crate::util::atomic::SyncF64Vec`]):
+//!
+//! * every arriver's `count.fetch_add(1, AcqRel)` makes its pre-barrier
+//!   writes part of the release sequence on `count`;
+//! * the releaser's own `fetch_add` *reads* the previous arrivals, so it
+//!   synchronizes-with every earlier arriver (RMWs continue a release
+//!   sequence);
+//! * the releaser then stores `generation` with `Release`, and every
+//!   spinner loads it with `Acquire`; the resulting happens-before edge
+//!   is transitive, so **all writes before any thread's `wait()` are
+//!   visible to all threads after it** — exactly OpenMP's implicit
+//!   region-barrier semantics.
+//!
+//! The park fallback re-checks `generation` under a mutex, and the
+//! releaser bumps `generation` (SeqCst) *before* testing the sleeper
+//! count (SeqCst), so the classic store-buffer lost-wakeup interleaving
+//! is excluded: if a sleeper registered before the bump became visible,
+//! the releaser observes it and notifies; otherwise the sleeper's
+//! re-check under the lock sees the new generation and never parks.
+//!
+//! A thread can be at most one barrier ahead of its peers (the next
+//! crossing cannot complete without everyone), and `generation` only
+//! grows, so comparing against the captured generation is sufficient —
+//! no ABA.
+
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Spin iterations before a waiter falls back to parking. At ~1-3 ns per
+/// `spin_loop` hint this is a handful of microseconds — longer than any
+/// healthy phase, shorter than a futex sleep/wake pair.
+pub const DEFAULT_SPIN: u32 = 1 << 12;
+
+/// A reusable sense-reversing barrier with bounded spin and a parking
+/// fallback. All parties must call [`SpinBarrier::wait`] for any of them
+/// to proceed; the barrier is immediately reusable for the next phase.
+pub struct SpinBarrier {
+    parties: usize,
+    spin_limit: u32,
+    /// Arrivals in the current generation.
+    count: AtomicUsize,
+    /// Completed crossings; spinners wait for this to move.
+    generation: AtomicUsize,
+    /// Parked waiters (gate for the notify path).
+    sleepers: AtomicU32,
+    /// Set by [`SpinBarrier::poison`]: a party died (panicked); every
+    /// current and future `wait` panics instead of blocking forever.
+    poisoned: std::sync::atomic::AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl SpinBarrier {
+    /// Barrier for `parties` threads with the default spin budget.
+    pub fn new(parties: usize) -> Self {
+        Self::with_spin(parties, DEFAULT_SPIN)
+    }
+
+    /// Barrier with an explicit spin budget; `spin_limit == 0` parks
+    /// immediately (degenerates to a classic blocking barrier).
+    pub fn with_spin(parties: usize, spin_limit: u32) -> Self {
+        assert!(parties >= 1, "barrier needs at least one party");
+        Self {
+            parties,
+            spin_limit,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            sleepers: AtomicU32::new(0),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Number of participating threads.
+    pub fn parties(&self) -> usize {
+        self.parties
+    }
+
+    /// Block until all parties have arrived. Returns `true` on exactly
+    /// one thread per crossing (the releaser), mirroring
+    /// `std::sync::Barrier::wait().is_leader()`.
+    ///
+    /// Panics if the barrier was [`SpinBarrier::poison`]ed — a party
+    /// died, so waiting would deadlock.
+    #[inline]
+    pub fn wait(&self) -> bool {
+        if self.parties == 1 {
+            return true;
+        }
+        self.check_poison();
+        let gen = self.generation.load(Ordering::Acquire);
+        let arrived = self.count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.parties {
+            // Releaser: everyone else is inside this crossing, so the
+            // reset cannot race a next-generation arrival.
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::SeqCst);
+            if self.sleepers.load(Ordering::SeqCst) > 0 {
+                let _guard = self.lock.lock().unwrap();
+                self.cv.notify_all();
+            }
+            return true;
+        }
+        let mut spins = 0u32;
+        while self.generation.load(Ordering::Acquire) == gen {
+            self.check_poison();
+            if spins < self.spin_limit {
+                std::hint::spin_loop();
+                spins += 1;
+            } else {
+                self.park(gen);
+                return false;
+            }
+        }
+        false
+    }
+
+    /// Mark a party as dead and wake every waiter; all pending and
+    /// future `wait` calls panic instead of blocking forever. Called
+    /// from a drop guard when an engine worker panics, turning a
+    /// would-be deadlock into a propagating failure.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        let _guard = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Whether [`SpinBarrier::poison`] was called.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    fn check_poison(&self) {
+        if self.poisoned.load(Ordering::Relaxed) {
+            panic!("spin barrier poisoned: a participating thread panicked");
+        }
+    }
+
+    #[cold]
+    fn park(&self, gen: usize) {
+        let mut guard = self.lock.lock().unwrap();
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        while self.generation.load(Ordering::SeqCst) == gen
+            && !self.poisoned.load(Ordering::SeqCst)
+        {
+            guard = self.cv.wait(guard).unwrap();
+        }
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
+        self.check_poison();
+    }
+}
+
+impl std::fmt::Debug for SpinBarrier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpinBarrier")
+            .field("parties", &self.parties)
+            .field("spin_limit", &self.spin_limit)
+            .field("generation", &self.generation.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+/// Pads and aligns a value to 128 bytes — two cache lines, covering the
+/// adjacent-line prefetcher on modern x86 — so per-thread slots placed in
+/// a `Vec` never share a cache line. This is what keeps the per-thread
+/// best-proposal slots and work counters contention-free: without it,
+/// eight `u64` counters land on one line and every worker write
+/// invalidates every other worker's cache.
+#[derive(Clone, Copy, Debug, Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    #[inline(always)]
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline(always)]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+/// `f64`s per 128-byte alignment unit (see [`aligned_chunk`]).
+pub const F64S_PER_LINE: usize = 16;
+
+/// Static contiguous chunk of `0..len` for thread `tid` of `threads`,
+/// with interior boundaries rounded to [`F64S_PER_LINE`]-element
+/// multiples so two threads writing adjacent chunks of a dense `f64`
+/// array (the residual vector `z`, the `dloss` cache) never false-share
+/// the boundary cache line. The chunks are disjoint and cover `0..len`.
+pub fn aligned_chunk(len: usize, tid: usize, threads: usize) -> std::ops::Range<usize> {
+    if threads <= 1 {
+        return 0..len;
+    }
+    let blocks = len.div_ceil(F64S_PER_LINE);
+    let lo = (blocks * tid / threads) * F64S_PER_LINE;
+    let hi = (blocks * (tid + 1) / threads) * F64S_PER_LINE;
+    lo.min(len)..hi.min(len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::atomic::Ordering::Relaxed;
+
+    fn exercise_barrier(threads: usize, rounds: usize, spin: u32) {
+        let barrier = SpinBarrier::with_spin(threads, spin);
+        let counter = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {
+                    for r in 0..rounds {
+                        counter.fetch_add(1, Relaxed);
+                        barrier.wait();
+                        // every thread's increment for round r is visible
+                        let seen = counter.load(Relaxed);
+                        assert!(
+                            seen >= threads * (r + 1),
+                            "round {r}: saw {seen}, expected >= {}",
+                            threads * (r + 1)
+                        );
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Relaxed), threads * rounds);
+    }
+
+    #[test]
+    fn barrier_synchronizes_spinning() {
+        exercise_barrier(4, 200, DEFAULT_SPIN);
+    }
+
+    #[test]
+    fn barrier_synchronizes_parking() {
+        // spin budget 0: every crossing goes through the parking path
+        exercise_barrier(4, 50, 0);
+    }
+
+    #[test]
+    fn barrier_oversubscribed() {
+        // more threads than cores on any CI box: the fallback must keep
+        // this from livelocking
+        exercise_barrier(16, 20, 64);
+    }
+
+    #[test]
+    fn single_party_is_free() {
+        let b = SpinBarrier::new(1);
+        for _ in 0..10 {
+            assert!(b.wait());
+        }
+    }
+
+    #[test]
+    fn exactly_one_releaser_per_crossing() {
+        let threads = 4;
+        let barrier = SpinBarrier::new(threads);
+        let releasers = AtomicUsize::new(0);
+        let rounds = 100;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {
+                    for _ in 0..rounds {
+                        if barrier.wait() {
+                            releasers.fetch_add(1, Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(releasers.load(Relaxed), rounds);
+    }
+
+    #[test]
+    fn poison_unblocks_and_panics_waiters() {
+        use std::sync::Arc;
+        for spin in [DEFAULT_SPIN, 0] {
+            // spinning waiter and parked waiter must both panic out
+            let b = Arc::new(SpinBarrier::with_spin(2, spin));
+            let waiter = {
+                let b = b.clone();
+                std::thread::spawn(move || b.wait())
+            };
+            // give the waiter time to reach the spin/park loop
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            b.poison();
+            assert!(waiter.join().is_err(), "waiter should panic, not hang");
+            assert!(b.is_poisoned());
+            // subsequent waits fail fast
+            let b2 = b.clone();
+            assert!(
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || b2.wait()))
+                    .is_err()
+            );
+        }
+    }
+
+    #[test]
+    fn cache_padded_layout() {
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), 128);
+        assert_eq!(std::mem::size_of::<CachePadded<u64>>(), 128);
+        let v: Vec<CachePadded<u64>> = vec![CachePadded::new(1), CachePadded::new(2)];
+        let a = &*v[0] as *const u64 as usize;
+        let b = &*v[1] as *const u64 as usize;
+        assert!(b - a >= 128, "slots {a:x} and {b:x} share a line");
+        assert_eq!(*v[0] + *v[1], 3);
+    }
+
+    #[test]
+    fn aligned_chunks_partition() {
+        for len in [0usize, 1, 15, 16, 17, 100, 1000, 1024] {
+            for threads in [1usize, 2, 3, 4, 7, 8] {
+                let mut covered = 0usize;
+                let mut prev_hi = 0usize;
+                for tid in 0..threads {
+                    let r = aligned_chunk(len, tid, threads);
+                    assert_eq!(r.start, prev_hi, "len={len} t={threads} tid={tid}");
+                    if threads > 1 && r.start < len {
+                        assert_eq!(r.start % F64S_PER_LINE, 0);
+                    }
+                    covered += r.len();
+                    prev_hi = r.end;
+                }
+                assert_eq!(prev_hi, len);
+                assert_eq!(covered, len);
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Minimal offline stand-in for the `anyhow` crate, vendored so the
+//! workspace builds with no registry access (the same policy as the
+//! in-tree `toml`/`json`/`rng` substitutes — see `gencd::util`).
+//!
+//! Implements exactly the surface the codebase uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, the
+//! [`Context`] extension for `Result` and `Option`, and `From`
+//! conversions for `?` on standard error types. Not implemented:
+//! downcasting, backtraces, `chain()`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` (the error type defaults like upstream).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-carrying error with an optional source, convertible from
+/// any `std::error::Error`.
+///
+/// Deliberately does **not** implement `std::error::Error` itself, so
+/// the blanket `From<E: std::error::Error>` impl below stays coherent —
+/// the same trick upstream anyhow uses.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro's
+    /// worker).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+            source: self.source,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    // `fn main() -> anyhow::Result<()>` reports through Debug; keep it
+    // human-readable and include the source chain when present.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error {
+            msg: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+/// Context extension: `.context(..)` / `.with_context(|| ..)` on
+/// `Result<_, impl std::error::Error>` and `Option<_>`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(Error::from(e).context(f())),
+        }
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> Result<i32> {
+        let n: i32 = "nope".parse()?; // From<ParseIntError>
+        Ok(n)
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e = parse_err().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"));
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<i32, std::num::ParseIntError> = "x".parse();
+        let e = r.context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(5).context("fine").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            ensure!(x != 13);
+            Ok(x)
+        }
+        assert_eq!(f(7).unwrap(), 7);
+        assert!(f(-1).unwrap_err().to_string().contains("negative input -1"));
+        assert_eq!(f(101).unwrap_err().to_string(), "too big");
+        assert!(f(13).unwrap_err().to_string().contains("x != 13"));
+        let e = anyhow!("value {} at {}", 3, "site");
+        assert_eq!(e.to_string(), "value 3 at site");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+    }
+}
