@@ -155,7 +155,8 @@ struct EngineRun {
 }
 
 /// Direct-engine Shotgun run shared by the forced-path ablations
-/// (sections 4 and 6): normalize, preprocess P*, instantiate, solve.
+/// (sections 4 and 6): normalize, preprocess P*, instantiate the preset
+/// policy pair, solve.
 fn shotgun_engine_run(
     ds: &gencd::sparse::io::Dataset,
     ds_name: &str,
@@ -163,6 +164,8 @@ fn shotgun_engine_run(
     force_dloss: Option<bool>,
     update_path: Option<gencd::coordinator::engine::UpdatePath>,
 ) -> EngineRun {
+    use gencd::coordinator::engine::{solve_from, EngineConfig, EngineHooks};
+
     let alg = Algorithm::Shotgun;
     let cfg = bench_config(ds_name, lam, alg);
     let mut d = ds.clone();
@@ -190,9 +193,8 @@ fn shotgun_engine_run(
         7,
     )
     .unwrap();
-    let ecfg = gencd::coordinator::engine::EngineConfig {
+    let ecfg = EngineConfig {
         threads: cfg.solver.threads,
-        acceptor: inst.acceptor,
         max_seconds: bench_budget(),
         force_dloss,
         update_path: update_path.unwrap_or(gencd::coordinator::engine::UpdatePath::Auto),
@@ -202,8 +204,14 @@ fn shotgun_engine_run(
         problem.n_samples(),
         problem.n_features(),
     );
-    let out =
-        gencd::coordinator::engine::solve_from(&problem, &state, inst.selector, &ecfg, None);
+    let out = solve_from(
+        &problem,
+        &state,
+        inst.selector,
+        inst.acceptor,
+        &ecfg,
+        EngineHooks::none(),
+    );
     EngineRun {
         out,
         state,

@@ -11,11 +11,13 @@
 
 use gencd::bench_harness::Table;
 use gencd::config::RunConfig;
-use gencd::coordinator::driver::{run_on, SolveResult};
+use gencd::coordinator::driver::run_on;
+use gencd::coordinator::engine::SolveOutput;
 use gencd::coordinator::{Algorithm, Problem};
 use gencd::data;
 use gencd::linalg::{shotgun_pstar, spectral_radius_xtx};
 use gencd::loss;
+use gencd::prelude::{Logistic, Solver};
 use gencd::runtime::{HloProposer, Runtime};
 use gencd::util::Timer;
 
@@ -69,28 +71,39 @@ fn main() -> anyhow::Result<()> {
         );
 
         // --- stage 3: train all four paper algorithms --------------------
+        // through the typed Solver builder (the embeddable surface; the
+        // TOML/CLI driver routes through the same thing)
         let mut table = Table::new(&[
             "algorithm", "objective", "nnz", "updates", "updates/s", "secs", "stop",
         ]);
-        let mut results: Vec<SolveResult> = Vec::new();
+        let mut results: Vec<(Algorithm, SolveOutput)> = Vec::new();
         for alg in Algorithm::paper_set() {
-            let mut cfg = RunConfig::default();
-            cfg.dataset.name = dsname.clone();
-            cfg.problem.loss = "logistic".into();
-            cfg.problem.lam = lam;
-            cfg.solver.algorithm = alg.name().into();
-            cfg.solver.threads = 4;
-            cfg.solver.max_seconds = seconds;
-            cfg.solver.line_search_steps = 20;
-            cfg.solver.seed = 7;
-            let res = run_on(&cfg, ds.clone(), None)?;
-            table.row(gencd::bench_harness::convergence_row(&res));
-            results.push(res);
+            let res = Solver::builder()
+                .dataset(ds.clone()) // already normalized in stage 1
+                .loss(Logistic)
+                .lambda(lam)
+                .algorithm(alg)
+                .threads(4)
+                .max_seconds(seconds)
+                .line_search_steps(20)
+                .seed(7)
+                .build()?
+                .solve();
+            table.row(vec![
+                alg.name().to_string(),
+                format!("{:.6}", res.objective),
+                format!("{}", res.nnz),
+                format!("{}", res.metrics.updates),
+                format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
+                format!("{:.2}", res.elapsed_secs),
+                res.stop.to_string(),
+            ]);
+            results.push((alg, res));
         }
         println!("\n[{dsname}] convergence (lambda = {lam:.0e}):\n{}", table.render());
 
         // loss curves (head) for the report
-        for res in &results {
+        for (alg, res) in &results {
             let pts: Vec<String> = res
                 .history
                 .records
@@ -98,16 +111,16 @@ fn main() -> anyhow::Result<()> {
                 .step_by((res.history.records.len() / 6).max(1))
                 .map(|r| format!("({:.1}s, {:.4})", r.elapsed_secs, r.objective))
                 .collect();
-            println!("  {:<13} loss curve: {}", res.algorithm.name(), pts.join(" "));
+            println!("  {:<13} loss curve: {}", alg.name(), pts.join(" "));
         }
 
         // all algorithms must have made real progress
-        for res in &results {
+        for (alg, res) in &results {
             let first = res.history.records.first().unwrap().objective;
             anyhow::ensure!(
                 res.objective < first,
                 "{} failed to descend on {dsname}",
-                res.algorithm.name()
+                alg.name()
             );
         }
 

@@ -1,29 +1,34 @@
-//! Quickstart: solve an l1-regularized logistic regression with the
-//! GenCD public API in ~30 lines.
+//! Quickstart: the GenCD public API in three acts —
+//!
+//!  1. solve an l1-regularized logistic regression with a named preset
+//!     through the typed `Solver` builder;
+//!  2. stream per-iteration metrics and stop early with an `Observer`;
+//!  3. plug in a *custom* selection policy (the point of the GenCD
+//!     framework: Select/Accept are open traits, the named algorithms
+//!     are just presets).
 //!
 //!     cargo run --release --example quickstart
 
-use gencd::config::RunConfig;
-use gencd::coordinator::driver;
+use gencd::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    // Describe the experiment. Everything here can come from a TOML
-    // config file (RunConfig::from_file) or CLI overrides instead.
-    let mut cfg = RunConfig::default();
-    cfg.dataset.name = "dorothea@0.1".into(); // synthetic DOROTHEA twin
-    cfg.problem.loss = "logistic".into();
-    cfg.problem.lam = 1e-4; // the paper's choice for DOROTHEA
-    cfg.solver.algorithm = "shotgun".into(); // or thread-greedy | greedy | coloring
-    cfg.solver.threads = 4;
-    cfg.solver.max_seconds = 5.0;
-    cfg.solver.line_search_steps = 20; // Sec. 4.1 refinement
+    // A synthetic DOROTHEA twin from the dataset registry. Any CSC
+    // matrix + label vector works: .matrix(x).labels(y).
+    let ds = gencd::data::by_name("dorothea@0.1")?;
 
-    let res = driver::run(&cfg)?;
+    // ---- 1. named preset through the builder -------------------------
+    let res = Solver::builder()
+        .dataset(ds.clone())
+        .normalize(true) // the paper's column normalization
+        .loss(Logistic)
+        .lambda(1e-4) // the paper's choice for DOROTHEA
+        .algorithm(Algorithm::Shotgun) // or ThreadGreedy | Greedy | Coloring
+        .threads(4)
+        .line_search_steps(20) // Sec. 4.1 refinement
+        .max_seconds(5.0)
+        .build()?
+        .solve();
 
-    println!("dataset        : {}", res.dataset);
-    if let Some(p) = res.pstar {
-        println!("shotgun P*     : {p}");
-    }
     println!("objective      : {:.6}", res.objective);
     println!("nonzero weights: {} / {}", res.nnz, res.w.len());
     println!(
@@ -40,5 +45,81 @@ fn main() -> anyhow::Result<()> {
             r.elapsed_secs, r.iter, r.objective, r.nnz
         );
     }
+
+    // ---- 2. observer: streaming metrics + early stopping -------------
+    // Observers run on the leader each iteration; History itself is just
+    // the default observer. Returning Break stops the solve.
+    let res = Solver::builder()
+        .dataset(ds.clone())
+        .normalize(true)
+        .lambda(1e-4)
+        .algorithm(Algorithm::ThreadGreedy)
+        .threads(4)
+        .max_seconds(30.0)
+        .observer(|info: &IterationInfo<'_>| {
+            if let Some(obj) = info.objective {
+                println!(
+                    "  [observer] t={:.2}s iter={} obj={obj:.6} updates={}",
+                    info.elapsed_secs, info.iter, info.updates
+                );
+            }
+            if info.iter >= 2000 {
+                ControlFlow::Break(()) // user-side stopping rule
+            } else {
+                ControlFlow::Continue(())
+            }
+        })
+        .build()?
+        .solve();
+    println!(
+        "solve stopped: stop={} after {} iterations (observer breaks at 2000; \
+         a slow box may hit max-seconds first)\n",
+        res.stop, res.metrics.iterations
+    );
+
+    // ---- 3. custom Select policy --------------------------------------
+    // Anything implementing `Select` slots into the engine — here a
+    // strided sampler; swap in feature clustering, importance sampling…
+    struct Strided {
+        k: usize,
+        stride: usize,
+        offset: usize,
+    }
+    impl Select for Strided {
+        fn select(&mut self, out: &mut Vec<u32>) {
+            let mut j = self.offset;
+            while j < self.k {
+                out.push(j as u32);
+                j += self.stride;
+            }
+            self.offset = (self.offset + 1) % self.stride;
+        }
+        fn expected_size(&self) -> f64 {
+            self.k as f64 / self.stride as f64
+        }
+        fn name(&self) -> String {
+            "strided".into()
+        }
+    }
+
+    let k = ds.n_features();
+    let res = Solver::builder()
+        .dataset(ds)
+        .normalize(true)
+        .lambda(1e-4)
+        .select(Strided {
+            k,
+            stride: 64,
+            offset: 0,
+        })
+        .accept(gencd::coordinator::accept::AcceptAll)
+        .threads(4)
+        .max_seconds(3.0)
+        .build()?
+        .solve();
+    println!(
+        "custom Strided policy: obj {:.6}, nnz {}, {} updates",
+        res.objective, res.nnz, res.metrics.updates
+    );
     Ok(())
 }

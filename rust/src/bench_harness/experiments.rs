@@ -4,11 +4,10 @@
 
 use super::{bench_budget, bench_config, bench_scale, paper_datasets, Table};
 use crate::coloring::{color_features, Strategy};
-use crate::coordinator::accept::Acceptor;
 use crate::coordinator::driver::{run_on, SolveResult};
 use crate::coordinator::Algorithm;
 use crate::linalg::{shotgun_pstar, spectral_radius_xtx};
-use crate::simulate::{self, accepted, CostModel, IterProfile};
+use crate::simulate::{self, accepted, AcceptShape, CostModel, IterProfile};
 use crate::sparse::io::Dataset;
 
 /// Table 3: dataset summary statistics.
@@ -162,10 +161,13 @@ fn profile_for(
 ) -> IterProfile {
     let iters = res.metrics.iterations.max(1) as f64;
     let selected = res.metrics.proposals as f64 / iters;
-    let (acceptor, accepted_of_t): (Acceptor, fn(f64, usize) -> f64) = match alg {
-        Algorithm::Greedy => (Acceptor::GlobalBest, accepted::one),
-        Algorithm::ThreadGreedy => (Acceptor::ThreadGreedy, accepted::per_thread),
-        _ => (Acceptor::All, accepted::all),
+    let (acceptor, accepted_of_t): (AcceptShape, fn(f64, usize) -> f64) = match alg {
+        Algorithm::Greedy => (AcceptShape::Single, accepted::one),
+        Algorithm::ThreadGreedy => (AcceptShape::PerThread, accepted::per_thread),
+        // TopK's default budget is `threads`, so |J'| ~ T like
+        // thread-greedy, but the leader pays the selection pass
+        Algorithm::TopK => (AcceptShape::TopK, accepted::per_thread),
+        _ => (AcceptShape::All, accepted::all),
     };
     IterProfile {
         selected,
@@ -263,7 +265,7 @@ mod tests {
         let ds = crate::data::by_name("dorothea@0.02").unwrap();
         let p = profile_for(Algorithm::Shotgun, &ds, &res, 0.01);
         assert!(p.selected >= 1.0);
-        assert_eq!(p.acceptor, Acceptor::All);
+        assert_eq!(p.acceptor, AcceptShape::All);
         let pc = profile_for(Algorithm::Coloring, &ds, &res, 0.01);
         assert_eq!(pc.pairwise_overlap, 0.0);
     }

@@ -102,6 +102,11 @@ pub struct SolverConfig {
     /// conflict-free (resolved by the driver; COLORING defaults to
     /// conflict-free under `auto`). See `engine::UpdatePath`.
     pub update_path: String,
+    /// Memory budget (MiB) for the buffered update path's dense
+    /// per-thread accumulators (`n * threads` doubles); past it,
+    /// buffered iterations spill to sparse per-thread maps. See
+    /// `engine::EngineConfig::buffer_budget_mb`.
+    pub buffer_budget_mb: usize,
 }
 
 impl Default for SolverConfig {
@@ -120,6 +125,7 @@ impl Default for SolverConfig {
             coloring_strategy: "greedy".into(),
             backend: Backend::SparseRust,
             update_path: "auto".into(),
+            buffer_budget_mb: 1024,
         }
     }
 }
@@ -210,6 +216,9 @@ impl RunConfig {
                 self.solver.backend = Backend::by_name(&as_str(value)?)?
             }
             ("solver", "update_path") => self.solver.update_path = as_str(value)?,
+            ("solver", "buffer_budget_mb") => {
+                self.solver.buffer_budget_mb = as_usize(value)?
+            }
             ("output", "csv") => self.csv = Some(as_str(value)?),
             ("", _) => anyhow::bail!("top-level key '{key}' not recognized"),
             _ => anyhow::bail!("unknown config key {table}.{key}"),
@@ -256,6 +265,12 @@ mod tests {
         assert_eq!(cfg2.solver.update_path, "buffered");
         cfg.set("solver.update_path", "conflict-free").unwrap();
         assert_eq!(cfg.solver.update_path, "conflict-free");
+        // buffer budget: default, TOML, and --set override
+        assert_eq!(cfg.solver.buffer_budget_mb, 1024);
+        let cfg3 = RunConfig::from_toml("[solver]\nbuffer_budget_mb = 64\n").unwrap();
+        assert_eq!(cfg3.solver.buffer_budget_mb, 64);
+        cfg.set("solver.buffer_budget_mb", "0").unwrap();
+        assert_eq!(cfg.solver.buffer_budget_mb, 0);
     }
 
     #[test]

@@ -1,24 +1,96 @@
 //! Step three: Accept (Sec. 2.3) — which proposals survive.
 //!
-//! `All` (SHOTGUN, COLORING, CCD/SCD) bypasses the proxy entirely;
-//! `ThreadGreedy` keeps each thread's best proposal (the paper's novel
-//! algorithm — no cross-thread synchronization); `GlobalBest` keeps the
-//! single best across threads (GREEDY, synchronizing reduction);
-//! `GlobalTopK` is the §7 extension: the best K *independently of which
-//! thread proposed them*.
+//! Acceptance is an *open* extension point: [`Accept`] is an object-safe
+//! trait and the paper's policies are plain implementations of it.
+//! [`AcceptAll`] (SHOTGUN, COLORING, CCD/SCD) bypasses the proxy
+//! entirely; [`ThreadGreedy`] keeps each thread's best proposal (the
+//! paper's novel algorithm — no cross-thread synchronization);
+//! [`GlobalBest`] keeps the single best across threads (GREEDY,
+//! synchronizing reduction); [`GlobalTopK`] is the §7 extension: the
+//! best K *independently of which thread proposed them*. Implement the
+//! trait yourself (through
+//! [`SolverBuilder::accept`](crate::solver::SolverBuilder::accept)) to
+//! plug in a new policy.
 
-/// Accept policy. The engine evaluates `ThreadGreedy` inside each worker
-/// (zero synchronization) and the global policies in the leader.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Acceptor {
-    /// Accept every proposal.
-    All,
-    /// Each thread accepts the best (lowest phi) of its own chunk.
-    ThreadGreedy,
-    /// Single globally-best proposal (classic GREEDY).
-    GlobalBest,
-    /// Best `k` proposals across all threads (§7 extension).
-    GlobalTopK(usize),
+/// Everything an accept policy may inspect, assembled by the engine's
+/// leader after the Propose phase.
+pub struct AcceptContext<'a> {
+    /// Each worker's best-proposal reduction (one slot per thread;
+    /// meaningful only when the policy reports
+    /// [`needs_thread_bests`](Accept::needs_thread_bests) — otherwise
+    /// the slots are stale).
+    pub bests: &'a [ThreadBest],
+    /// This iteration's selected set J (duplicate-free).
+    pub selected: &'a [u32],
+    /// Proposal proxy phi_j (Eq. 9; more negative is better) for any
+    /// selected j.
+    pub phi_of: &'a dyn Fn(u32) -> f64,
+    /// Worker count (for policies that budget per thread).
+    pub threads: usize,
+}
+
+/// An accept policy: chooses the surviving subset J' ⊆ J.
+///
+/// # Contract
+///
+/// * `accept` runs on the leader thread while workers are parked at a
+///   barrier, once per iteration. Policies may be stateful.
+/// * The output must be duplicate-free and a subset of `ctx.selected` —
+///   J' coordinates become the Update phase's unique writers; the
+///   engine's debug build asserts duplicate-freedom.
+/// * `accept_bound` must never under-estimate |J'| for a given |J|: the
+///   engine sizes its buffered-update decision with it at plan time.
+///   The default (|J| itself) is always safe.
+pub trait Accept: Send {
+    /// Fill `out` with the accepted set J'. The engine clears `out`
+    /// before every call — implementations append only.
+    fn accept(&mut self, ctx: AcceptContext<'_>, out: &mut Vec<u32>);
+
+    /// Does this policy consume the per-thread best reductions? When
+    /// `true`, each Propose worker tracks its running best (j, phi,
+    /// delta) and publishes it to `ctx.bests`. Defaults to `true` so a
+    /// custom policy never sees stale slots; built-ins that ignore
+    /// `bests` override to `false` and skip the bookkeeping (§Perf).
+    fn needs_thread_bests(&self) -> bool {
+        true
+    }
+
+    /// `true` only for the accept-everything policy: the engine then
+    /// skips the Accept phase entirely and hands the selection straight
+    /// to Update (the J' == J fast path).
+    fn passes_all(&self) -> bool {
+        false
+    }
+
+    /// Upper bound on |J'| given |J| = `selected` — a *sizing hint* for
+    /// the engine's plan-time update-path heuristic. Must not
+    /// under-estimate; tightness only improves the heuristic.
+    fn accept_bound(&self, selected: usize, _threads: usize) -> usize {
+        selected
+    }
+
+    /// Human-readable policy name (logs and summaries).
+    fn name(&self) -> String {
+        "custom".into()
+    }
+}
+
+impl<A: Accept + ?Sized> Accept for Box<A> {
+    fn accept(&mut self, ctx: AcceptContext<'_>, out: &mut Vec<u32>) {
+        (**self).accept(ctx, out)
+    }
+    fn needs_thread_bests(&self) -> bool {
+        (**self).needs_thread_bests()
+    }
+    fn passes_all(&self) -> bool {
+        (**self).passes_all()
+    }
+    fn accept_bound(&self, selected: usize, threads: usize) -> usize {
+        (**self).accept_bound(selected, threads)
+    }
+    fn name(&self) -> String {
+        (**self).name()
+    }
 }
 
 /// A per-thread reduction result: the best proposal seen by one worker.
@@ -49,79 +121,154 @@ impl ThreadBest {
     }
 }
 
-/// Leader-side resolution of the global policies. `bests` holds each
-/// worker's reduction; `selected`/`phi` give the full proposal table for
-/// TopK. Fills `out` with the accepted J'.
-///
-/// J' must be duplicate-free (unique-writer invariant of the engine's
-/// Update phase). `selected` is already deduplicated by the engine's
-/// plan-time filter, which covers the `All` and `GlobalTopK` arms; the
-/// bests-derived arm additionally collapses repeats here (first
-/// occurrence wins, allocation-free — the set is at most one entry per
-/// thread). The engine's Update phase double-checks with a debug
-/// assertion.
-pub fn resolve_global(
-    acceptor: Acceptor,
-    bests: &[ThreadBest],
-    selected: &[u32],
-    phi_of: impl Fn(u32) -> f64,
-    out: &mut Vec<u32>,
-) {
-    out.clear();
-    match acceptor {
-        Acceptor::All => out.extend_from_slice(selected),
-        Acceptor::ThreadGreedy => {
-            for b in bests {
-                if b.is_some() && !out.contains(&b.j) {
-                    out.push(b.j);
-                }
-            }
-        }
-        Acceptor::GlobalBest => {
-            let mut best = ThreadBest::NONE;
-            for b in bests {
-                if b.is_some() {
-                    best.consider(b.j, b.phi, b.delta);
-                }
-            }
-            if best.is_some() {
-                out.push(best.j);
-            }
-        }
-        Acceptor::GlobalTopK(k) => {
-            // partial selection of the k most-negative phi values
-            let mut scored: Vec<(f64, u32)> =
-                selected.iter().map(|&j| (phi_of(j), j)).collect();
-            let k = k.min(scored.len());
-            if k == 0 {
-                return;
-            }
-            scored.select_nth_unstable_by(k - 1, |a, b| {
-                a.0.partial_cmp(&b.0)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.1.cmp(&b.1))
-            });
-            let mut top: Vec<(f64, u32)> = scored[..k].to_vec();
-            // deterministic order (by j) and drop no-op proposals
-            top.sort_by_key(|&(_, j)| j);
-            for (phi, j) in top {
-                if phi < 0.0 {
-                    out.push(j);
-                }
-            }
-        }
+/// Accept every proposal (J' = J). The engine special-cases this via
+/// [`Accept::passes_all`] and never materializes a separate accepted
+/// list.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AcceptAll;
+
+impl Accept for AcceptAll {
+    fn accept(&mut self, ctx: AcceptContext<'_>, out: &mut Vec<u32>) {
+        out.extend_from_slice(ctx.selected);
+    }
+
+    fn needs_thread_bests(&self) -> bool {
+        false
+    }
+
+    fn passes_all(&self) -> bool {
+        true
+    }
+
+    fn accept_bound(&self, selected: usize, _threads: usize) -> usize {
+        selected
+    }
+
+    fn name(&self) -> String {
+        "all".into()
     }
 }
 
-impl Acceptor {
-    pub fn name(&self) -> String {
-        match self {
-            Acceptor::All => "all".into(),
-            Acceptor::ThreadGreedy => "thread-greedy".into(),
-            Acceptor::GlobalBest => "global-best".into(),
-            Acceptor::GlobalTopK(k) => format!("top{k}"),
+/// Each thread accepts the best (lowest phi) of its own chunk — the
+/// paper's THREAD-GREEDY, zero cross-thread synchronization.
+///
+/// J' must be duplicate-free (unique-writer invariant of the engine's
+/// Update phase); the selection is already deduplicated by the engine's
+/// plan-time filter, but two threads can still report the same j only if
+/// the selection repeated — collapsed here anyway (first occurrence
+/// wins, allocation-free: the set is at most one entry per thread).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ThreadGreedy;
+
+impl Accept for ThreadGreedy {
+    fn accept(&mut self, ctx: AcceptContext<'_>, out: &mut Vec<u32>) {
+        for b in ctx.bests {
+            if b.is_some() && !out.contains(&b.j) {
+                out.push(b.j);
+            }
         }
     }
+
+    fn accept_bound(&self, selected: usize, threads: usize) -> usize {
+        threads.min(selected)
+    }
+
+    fn name(&self) -> String {
+        "thread-greedy".into()
+    }
+}
+
+/// Single globally-best proposal (classic GREEDY).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GlobalBest;
+
+impl Accept for GlobalBest {
+    fn accept(&mut self, ctx: AcceptContext<'_>, out: &mut Vec<u32>) {
+        let mut best = ThreadBest::NONE;
+        for b in ctx.bests {
+            if b.is_some() {
+                best.consider(b.j, b.phi, b.delta);
+            }
+        }
+        if best.is_some() {
+            out.push(best.j);
+        }
+    }
+
+    fn accept_bound(&self, selected: usize, _threads: usize) -> usize {
+        1.min(selected)
+    }
+
+    fn name(&self) -> String {
+        "global-best".into()
+    }
+}
+
+/// Best `k` proposals across all threads (§7 extension). Keeps only
+/// strictly-improving (phi < 0) proposals, in deterministic j order.
+#[derive(Clone, Copy, Debug)]
+pub struct GlobalTopK {
+    pub k: usize,
+}
+
+impl Accept for GlobalTopK {
+    fn accept(&mut self, ctx: AcceptContext<'_>, out: &mut Vec<u32>) {
+        // partial selection of the k most-negative phi values
+        let mut scored: Vec<(f64, u32)> = ctx
+            .selected
+            .iter()
+            .map(|&j| ((ctx.phi_of)(j), j))
+            .collect();
+        let k = self.k.min(scored.len());
+        if k == 0 {
+            return;
+        }
+        scored.select_nth_unstable_by(k - 1, |a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        let mut top: Vec<(f64, u32)> = scored[..k].to_vec();
+        // deterministic order (by j) and drop no-op proposals
+        top.sort_by_key(|&(_, j)| j);
+        for (phi, j) in top {
+            if phi < 0.0 {
+                out.push(j);
+            }
+        }
+    }
+
+    fn needs_thread_bests(&self) -> bool {
+        false
+    }
+
+    fn accept_bound(&self, selected: usize, _threads: usize) -> usize {
+        self.k.min(selected)
+    }
+
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+}
+
+/// Accept-everything policy, boxed.
+pub fn all() -> Box<dyn Accept> {
+    Box::new(AcceptAll)
+}
+
+/// Per-thread-best policy (THREAD-GREEDY), boxed.
+pub fn thread_greedy() -> Box<dyn Accept> {
+    Box::new(ThreadGreedy)
+}
+
+/// Single-global-best policy (GREEDY), boxed.
+pub fn global_best() -> Box<dyn Accept> {
+    Box::new(GlobalBest)
+}
+
+/// Global top-k policy (§7 extension), boxed.
+pub fn top_k(k: usize) -> Box<dyn Accept> {
+    Box::new(GlobalTopK { k })
 }
 
 #[cfg(test)]
@@ -144,24 +291,46 @@ mod tests {
         ]
     }
 
+    fn resolve(
+        policy: &mut dyn Accept,
+        bests: &[ThreadBest],
+        selected: &[u32],
+        phi_of: impl Fn(u32) -> f64,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        policy.accept(
+            AcceptContext {
+                bests,
+                selected,
+                phi_of: &phi_of,
+                threads: bests.len().max(1),
+            },
+            out,
+        );
+    }
+
     #[test]
     fn all_passes_selection_through() {
         let mut out = Vec::new();
-        resolve_global(Acceptor::All, &bests(), &[1, 2, 3], |_| 0.0, &mut out);
+        resolve(&mut AcceptAll, &bests(), &[1, 2, 3], |_| 0.0, &mut out);
         assert_eq!(out, vec![1, 2, 3]);
+        assert!(AcceptAll.passes_all());
+        assert!(!AcceptAll.needs_thread_bests());
     }
 
     #[test]
     fn thread_greedy_keeps_per_thread_bests() {
         let mut out = Vec::new();
-        resolve_global(Acceptor::ThreadGreedy, &bests(), &[], |_| 0.0, &mut out);
+        resolve(&mut ThreadGreedy, &bests(), &[], |_| 0.0, &mut out);
         assert_eq!(out, vec![3, 7]); // thread 1 had nothing
+        assert!(ThreadGreedy.needs_thread_bests());
     }
 
     #[test]
     fn global_best_takes_minimum_phi() {
         let mut out = Vec::new();
-        resolve_global(Acceptor::GlobalBest, &bests(), &[], |_| 0.0, &mut out);
+        resolve(&mut GlobalBest, &bests(), &[], |_| 0.0, &mut out);
         assert_eq!(out, vec![7]);
     }
 
@@ -170,8 +339,8 @@ mod tests {
         let selected = [0u32, 1, 2, 3, 4];
         let phi = [-0.1, -0.9, 0.0, -0.5, -0.3];
         let mut out = Vec::new();
-        resolve_global(
-            Acceptor::GlobalTopK(3),
+        resolve(
+            &mut GlobalTopK { k: 3 },
             &[],
             &selected,
             |j| phi[j as usize],
@@ -185,8 +354,8 @@ mod tests {
         let selected = [0u32, 1];
         let phi = [0.0, 0.0];
         let mut out = Vec::new();
-        resolve_global(
-            Acceptor::GlobalTopK(2),
+        resolve(
+            &mut GlobalTopK { k: 2 },
             &[],
             &selected,
             |j| phi[j as usize],
@@ -196,14 +365,30 @@ mod tests {
     }
 
     #[test]
+    fn bounds_are_upper_bounds_and_names_stable() {
+        assert_eq!(AcceptAll.accept_bound(10, 4), 10);
+        assert_eq!(ThreadGreedy.accept_bound(10, 4), 4);
+        assert_eq!(ThreadGreedy.accept_bound(2, 4), 2);
+        assert_eq!(GlobalBest.accept_bound(10, 4), 1);
+        assert_eq!(GlobalTopK { k: 3 }.accept_bound(10, 4), 3);
+        assert_eq!(AcceptAll.name(), "all");
+        assert_eq!(ThreadGreedy.name(), "thread-greedy");
+        assert_eq!(GlobalBest.name(), "global-best");
+        assert_eq!(top_k(5).name(), "top5");
+    }
+
+    #[test]
     fn prop_accepted_subset_of_selected() {
         // the framework invariant of Sec. 2.3: J' ⊆ J for every policy
         use crate::util::prop;
         prop::check("J' subset of J", 100, |rng, size| {
             let k = 2 + rng.below(2 * size.max(2));
             let sel_n = 1 + rng.below(k);
-            let selected: Vec<u32> =
-                rng.sample_distinct(k, sel_n).into_iter().map(|j| j as u32).collect();
+            let selected: Vec<u32> = rng
+                .sample_distinct(k, sel_n)
+                .into_iter()
+                .map(|j| j as u32)
+                .collect();
             let phi: Vec<f64> = (0..k).map(|_| rng.range_f64(-1.0, 0.0)).collect();
             let threads = 1 + rng.below(6);
             // per-thread bests drawn from the selection chunks
@@ -218,26 +403,43 @@ mod tests {
                     b
                 })
                 .collect();
-            let policies = [
-                Acceptor::All,
-                Acceptor::ThreadGreedy,
-                Acceptor::GlobalBest,
-                Acceptor::GlobalTopK(1 + rng.below(sel_n)),
+            let mut policies: Vec<Box<dyn Accept>> = vec![
+                all(),
+                thread_greedy(),
+                global_best(),
+                top_k(1 + rng.below(sel_n)),
             ];
             let sel_set: std::collections::HashSet<u32> =
                 selected.iter().copied().collect();
             let mut out = Vec::new();
-            for policy in policies {
-                resolve_global(policy, &bests, &selected, |j| phi[j as usize], &mut out);
+            for policy in &mut policies {
+                let name = policy.name();
+                out.clear();
+                policy.accept(
+                    AcceptContext {
+                        bests: &bests,
+                        selected: &selected,
+                        phi_of: &|j| phi[j as usize],
+                        threads,
+                    },
+                    &mut out,
+                );
                 for &j in &out {
                     if !sel_set.contains(&j) {
-                        return Err(format!("{policy:?}: {j} not selected"));
+                        return Err(format!("{name}: {j} not selected"));
                     }
                 }
-                // no duplicates in J'
+                // no duplicates in J', and the plan-time bound holds
                 let uniq: std::collections::HashSet<u32> = out.iter().copied().collect();
                 if uniq.len() != out.len() {
-                    return Err(format!("{policy:?}: duplicate accepts {out:?}"));
+                    return Err(format!("{name}: duplicate accepts {out:?}"));
+                }
+                if out.len() > policy.accept_bound(selected.len(), threads) {
+                    return Err(format!(
+                        "{name}: |J'|={} exceeds accept_bound {}",
+                        out.len(),
+                        policy.accept_bound(selected.len(), threads)
+                    ));
                 }
             }
             Ok(())
@@ -249,7 +451,6 @@ mod tests {
         // two threads reporting the same best coordinate (possible only
         // if the selection itself repeated) collapse to one accept —
         // the unique-writer invariant of the Update phase
-        let phi = |_j: u32| -0.5;
         let twin = ThreadBest {
             j: 4,
             phi: -0.9,
@@ -261,11 +462,11 @@ mod tests {
             delta: 0.2,
         };
         let mut out = Vec::new();
-        resolve_global(
-            Acceptor::ThreadGreedy,
+        resolve(
+            &mut ThreadGreedy,
             &[twin, other, twin],
             &[],
-            phi,
+            |_| -0.5,
             &mut out,
         );
         assert_eq!(out, vec![4, 2]);

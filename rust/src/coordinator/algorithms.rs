@@ -11,13 +11,19 @@
 //! | COLORING      | rand color    | all           |
 //! | TOPK (§7)     | rand subset   | best K global |
 //! | BLOCK-SHOTGUN (§7 "soft coloring") | per-block rand subsets | all |
+//!
+//! [`Algorithm`] is a thin *preset catalogue*: [`instantiate`] resolves
+//! each name into a ([`Select`], [`Accept`]) trait-object pair built
+//! from the constructor functions in [`super::select`] /
+//! [`super::accept`]. Nothing in the engine knows about the enum — a
+//! custom policy pair built by hand (or through
+//! [`crate::solver::SolverBuilder`]) is a first-class citizen.
 
-use super::accept::Acceptor;
-use super::select::Selector;
+use super::accept::{self, Accept};
+use super::select::{self, Select};
 use crate::coloring::{color_features, Coloring, Strategy};
 use crate::linalg::{shotgun_pstar, spectral_radius_xtx};
 use crate::sparse::CscMatrix;
-use crate::util::Pcg64;
 
 /// The algorithm catalogue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,21 +39,24 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Every preset, in catalogue order. CLI/TOML name lists and the
+    /// `FromStr` error message derive from this — add a preset here and
+    /// both stay current.
+    pub const ALL: [Algorithm; 8] = [
+        Algorithm::Ccd,
+        Algorithm::Scd,
+        Algorithm::Shotgun,
+        Algorithm::ThreadGreedy,
+        Algorithm::Greedy,
+        Algorithm::Coloring,
+        Algorithm::TopK,
+        Algorithm::BlockShotgun,
+    ];
+
+    /// Resolve a CLI/TOML name.
+    #[deprecated(note = "use `name.parse::<Algorithm>()` (FromStr) instead")]
     pub fn by_name(name: &str) -> anyhow::Result<Self> {
-        Ok(match name {
-            "ccd" => Algorithm::Ccd,
-            "scd" => Algorithm::Scd,
-            "shotgun" => Algorithm::Shotgun,
-            "thread-greedy" | "thread_greedy" => Algorithm::ThreadGreedy,
-            "greedy" => Algorithm::Greedy,
-            "coloring" => Algorithm::Coloring,
-            "topk" => Algorithm::TopK,
-            "block-shotgun" | "block_shotgun" => Algorithm::BlockShotgun,
-            other => anyhow::bail!(
-                "unknown algorithm '{other}' \
-                 (ccd|scd|shotgun|thread-greedy|greedy|coloring|topk|block-shotgun)"
-            ),
-        })
+        name.parse()
     }
 
     pub fn name(&self) -> &'static str {
@@ -84,7 +93,32 @@ impl Algorithm {
     }
 }
 
+impl std::str::FromStr for Algorithm {
+    type Err = anyhow::Error;
+
+    /// Accepts the canonical dashed names ([`Algorithm::name`]) plus
+    /// underscore spellings (`thread_greedy`).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let canon = s.replace('_', "-");
+        Algorithm::ALL
+            .iter()
+            .copied()
+            .find(|a| a.name() == canon)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Algorithm::ALL.iter().map(|a| a.name()).collect();
+                anyhow::anyhow!("unknown algorithm '{s}' ({})", names.join("|"))
+            })
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 /// Everything precomputed the policies may need.
+#[derive(Clone)]
 pub struct Preprocessed {
     pub pstar: Option<usize>,
     pub rho: Option<f64>,
@@ -125,13 +159,15 @@ impl Preprocessed {
     }
 }
 
-/// Policy pair an algorithm resolves to.
+/// Policy pair an algorithm resolves to: boxed [`Select`] / [`Accept`]
+/// trait objects, exactly what a custom policy pair would be.
 pub struct Instantiation {
-    pub selector: Selector,
-    pub acceptor: Acceptor,
+    pub selector: Box<dyn Select>,
+    pub acceptor: Box<dyn Accept>,
 }
 
-/// Resolve an algorithm into (Selector, Acceptor) for a concrete problem.
+/// Resolve an algorithm into its (Select, Accept) pair for a concrete
+/// problem.
 ///
 /// * `select_size` overrides the selection size (0 = default: P* for
 ///   SHOTGUN, `threads * 32` for THREAD-GREEDY/TopK).
@@ -145,15 +181,14 @@ pub fn instantiate(
     pre: &Preprocessed,
     seed: u64,
 ) -> anyhow::Result<Instantiation> {
-    let rng = Pcg64::new(seed, 0xA160);
     let inst = match alg {
         Algorithm::Ccd => Instantiation {
-            selector: Selector::Cyclic { next: 0, k },
-            acceptor: Acceptor::All,
+            selector: select::cyclic(k),
+            acceptor: accept::all(),
         },
         Algorithm::Scd => Instantiation {
-            selector: Selector::Stochastic { rng, k },
-            acceptor: Acceptor::All,
+            selector: select::stochastic(k, seed),
+            acceptor: accept::all(),
         },
         Algorithm::Shotgun => {
             let size = if select_size > 0 {
@@ -163,8 +198,8 @@ pub fn instantiate(
                     .ok_or_else(|| anyhow::anyhow!("shotgun needs P* preprocessing"))?
             };
             Instantiation {
-                selector: Selector::RandomSubset { rng, k, size },
-                acceptor: Acceptor::All,
+                selector: select::random_subset(k, size, seed),
+                acceptor: accept::all(),
             }
         }
         Algorithm::ThreadGreedy => {
@@ -176,13 +211,13 @@ pub fn instantiate(
                 (threads * 32).min(k)
             };
             Instantiation {
-                selector: Selector::RandomSubset { rng, k, size },
-                acceptor: Acceptor::ThreadGreedy,
+                selector: select::random_subset(k, size, seed),
+                acceptor: accept::thread_greedy(),
             }
         }
         Algorithm::Greedy => Instantiation {
-            selector: Selector::All { k },
-            acceptor: Acceptor::GlobalBest,
+            selector: select::full_set(k),
+            acceptor: accept::global_best(),
         },
         Algorithm::Coloring => {
             let coloring = pre
@@ -190,8 +225,8 @@ pub fn instantiate(
                 .clone()
                 .ok_or_else(|| anyhow::anyhow!("coloring algorithm needs a coloring"))?;
             Instantiation {
-                selector: Selector::RandomColor { rng, coloring },
-                acceptor: Acceptor::All,
+                selector: select::random_color(coloring, seed),
+                acceptor: accept::all(),
             }
         }
         Algorithm::TopK => {
@@ -202,8 +237,8 @@ pub fn instantiate(
             };
             let kk = if accept_k > 0 { accept_k } else { threads };
             Instantiation {
-                selector: Selector::RandomSubset { rng, k, size },
-                acceptor: Acceptor::GlobalTopK(kk),
+                selector: select::random_subset(k, size, seed),
+                acceptor: accept::top_k(kk),
             }
         }
         Algorithm::BlockShotgun => {
@@ -219,13 +254,8 @@ pub fn instantiate(
             };
             let per = (total / blocks).max(1);
             Instantiation {
-                selector: Selector::BlockSubset {
-                    rng,
-                    k,
-                    blocks,
-                    per_block: vec![per; blocks],
-                },
-                acceptor: Acceptor::All,
+                selector: select::block_subset(k, blocks, vec![per; blocks], seed),
+                acceptor: accept::all(),
             }
         }
     };
@@ -236,6 +266,7 @@ pub fn instantiate(
 mod tests {
     use super::*;
     use crate::sparse::CooBuilder;
+    use crate::util::Pcg64;
 
     fn matrix() -> CscMatrix {
         let mut rng = Pcg64::seeded(1);
@@ -250,18 +281,41 @@ mod tests {
 
     #[test]
     fn name_roundtrip() {
-        for alg in [
-            Algorithm::Ccd,
-            Algorithm::Scd,
-            Algorithm::Shotgun,
-            Algorithm::ThreadGreedy,
-            Algorithm::Greedy,
-            Algorithm::Coloring,
-            Algorithm::TopK,
-            Algorithm::BlockShotgun,
-        ] {
-            assert_eq!(Algorithm::by_name(alg.name()).unwrap(), alg);
+        for alg in Algorithm::ALL {
+            assert_eq!(alg.name().parse::<Algorithm>().unwrap(), alg);
+            assert_eq!(alg.to_string(), alg.name());
         }
+        assert!("sgd".parse::<Algorithm>().is_err());
+        // underscore spellings keep working
+        assert_eq!(
+            "thread_greedy".parse::<Algorithm>().unwrap(),
+            Algorithm::ThreadGreedy
+        );
+        assert_eq!(
+            "block_shotgun".parse::<Algorithm>().unwrap(),
+            Algorithm::BlockShotgun
+        );
+    }
+
+    #[test]
+    fn unknown_name_error_lists_catalogue() {
+        let err = "sgd".parse::<Algorithm>().unwrap_err().to_string();
+        for alg in Algorithm::ALL {
+            assert!(
+                err.contains(alg.name()),
+                "error should list '{}' (derived from ALL): {err}",
+                alg.name()
+            );
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn by_name_shim_still_works() {
+        assert!(matches!(
+            Algorithm::by_name("shotgun"),
+            Ok(Algorithm::Shotgun)
+        ));
         assert!(Algorithm::by_name("sgd").is_err());
     }
 
@@ -279,22 +333,13 @@ mod tests {
     #[test]
     fn instantiate_all() {
         let x = matrix();
-        for alg in [
-            Algorithm::Ccd,
-            Algorithm::Scd,
-            Algorithm::Shotgun,
-            Algorithm::ThreadGreedy,
-            Algorithm::Greedy,
-            Algorithm::Coloring,
-            Algorithm::TopK,
-            Algorithm::BlockShotgun,
-        ] {
-            let pre =
-                Preprocessed::for_algorithm(alg, &x, Strategy::Greedy, 7);
+        for alg in Algorithm::ALL {
+            let pre = Preprocessed::for_algorithm(alg, &x, Strategy::Greedy, 7);
             let inst = instantiate(alg, x.n_cols(), 4, 0, 0, &pre, 7).unwrap();
             // smoke: selector produces a nonempty in-range selection
             let mut sel = inst.selector;
             let mut out = Vec::new();
+            out.clear();
             sel.select(&mut out);
             assert!(!out.is_empty());
             assert!(out.iter().all(|&j| (j as usize) < x.n_cols()));
@@ -331,6 +376,6 @@ mod tests {
         let pre = Preprocessed::none();
         let inst = instantiate(Algorithm::ThreadGreedy, 1000, 8, 0, 0, &pre, 1).unwrap();
         assert_eq!(inst.selector.expected_size(), 256.0);
-        assert_eq!(inst.acceptor, Acceptor::ThreadGreedy);
+        assert_eq!(inst.acceptor.name(), "thread-greedy");
     }
 }

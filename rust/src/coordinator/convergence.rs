@@ -83,6 +83,9 @@ pub enum StopReason {
     Tolerance,
     /// Objective became non-finite (divergence — e.g. Shotgun past P*).
     Diverged,
+    /// An [`Observer`](super::observer::Observer) returned
+    /// `ControlFlow::Break` (user-side early stopping).
+    Observer,
 }
 
 impl std::fmt::Display for StopReason {
@@ -92,6 +95,7 @@ impl std::fmt::Display for StopReason {
             StopReason::MaxSeconds => "max-seconds",
             StopReason::Tolerance => "tolerance",
             StopReason::Diverged => "diverged",
+            StopReason::Observer => "observer",
         };
         write!(f, "{s}")
     }

@@ -1,19 +1,21 @@
 //! High-level entry point: config -> dataset -> preprocessing -> solve.
 //!
-//! This is what the `gencd` binary, the examples, and the bench harness
-//! call. It owns everything around the engine: dataset resolution,
-//! column normalization, P*/coloring preprocessing, backend selection,
-//! and result packaging.
+//! This is what the `gencd` binary and the bench harness call. It owns
+//! the *config-shaped* surface — dataset resolution, TOML/CLI names,
+//! result packaging — and routes everything through the typed
+//! [`Solver`](crate::solver::Solver) builder underneath, so the two
+//! surfaces cannot drift apart. Library users should go to
+//! [`crate::solver::SolverBuilder`] directly.
 
-use super::algorithms::{instantiate, Algorithm, Preprocessed};
+use super::algorithms::Algorithm;
 use super::convergence::{History, StopReason};
-use super::engine::{self, BlockProposer, EngineConfig};
+use super::engine::{BlockProposer, UpdatePath};
 use super::metrics::MetricsSnapshot;
-use super::problem::{Problem, SharedState};
 use crate::coloring::Strategy;
 use crate::config::{Backend, RunConfig};
 use crate::data;
 use crate::loss;
+use crate::solver::Solver;
 use crate::sparse::io::Dataset;
 use crate::util::Timer;
 
@@ -58,14 +60,20 @@ pub fn load_dataset(cfg: &RunConfig) -> anyhow::Result<Dataset> {
 
 /// Run a full experiment described by `cfg`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<SolveResult> {
-    let ds = load_dataset(cfg)?;
+    // load raw and let run_on apply cfg.dataset.normalize exactly once:
+    // normalize_columns is only idempotent up to ulps, and the builder
+    // path (and the bit-exactness tests) normalize a single time
+    let mut raw = cfg.clone();
+    raw.dataset.normalize = false;
+    let ds = load_dataset(&raw)?;
     run_on(cfg, ds, None)
 }
 
 /// Run on an already-loaded dataset (bench harness reuses datasets
-/// across algorithms). Applies `cfg.dataset.normalize` (idempotent for
-/// already-normalized data). `block_proposer` overrides the Propose
-/// backend.
+/// across algorithms). Applies `cfg.dataset.normalize` — pass raw data,
+/// or set the flag to false for pre-normalized data (normalization is
+/// only idempotent up to ulps, which matters for bit-exact
+/// comparisons). `block_proposer` overrides the Propose backend.
 pub fn run_on(
     cfg: &RunConfig,
     mut ds: Dataset,
@@ -80,63 +88,49 @@ pub fn run_on(
          use gencd::runtime::HloProposer::from_manifest"
     );
 
-    let alg = Algorithm::by_name(&cfg.solver.algorithm)?;
+    let alg: Algorithm = cfg.solver.algorithm.parse()?;
     let strategy = Strategy::by_name(&cfg.solver.coloring_strategy)?;
     let loss = loss::by_name(&cfg.problem.loss)?;
+    let update_path = UpdatePath::by_name(&cfg.solver.update_path)?;
     let dataset_name = ds.name.clone();
 
+    // build() runs the algorithm's preprocessing (spectral P*,
+    // coloring) and validates the full combination — e.g.
+    // conflict-free updates without a coloring are rejected here.
     let pre_timer = Timer::start();
-    let pre = Preprocessed::for_algorithm(alg, &ds.x, strategy, cfg.solver.seed);
+    let solver = Solver::builder()
+        .dataset(ds)
+        .normalize(false) // applied above, per cfg.dataset.normalize
+        .boxed_loss(loss)
+        .lambda(cfg.problem.lam)
+        .algorithm(alg)
+        .threads(cfg.solver.threads)
+        .seed(cfg.solver.seed)
+        .select_size(cfg.solver.select_size)
+        .accept_k(cfg.solver.accept_k)
+        .line_search_steps(cfg.solver.line_search_steps)
+        .max_iters(cfg.solver.max_iters)
+        .max_seconds(cfg.solver.max_seconds)
+        .tol(cfg.solver.tol)
+        .log_every(cfg.solver.log_every)
+        .coloring_strategy(strategy)
+        .update_path(update_path)
+        .buffer_budget_mb(cfg.solver.buffer_budget_mb)
+        .build()?;
     let preprocess_secs = pre_timer.elapsed_secs();
 
-    let problem = Problem::new(ds, loss, cfg.problem.lam);
-    let inst = instantiate(
-        alg,
-        problem.n_features(),
-        cfg.solver.threads,
-        cfg.solver.select_size,
-        cfg.solver.accept_k,
-        &pre,
-        cfg.solver.seed,
-    )?;
-
-    let update_path = engine::UpdatePath::by_name(&cfg.solver.update_path)?;
-    // conflict-free plain stores are only sound when every z[i] has a
-    // unique writer per Update phase; from the config surface that means
-    // COLORING's color classes or a single thread. Anything else would
-    // be a data race that silently loses updates.
-    anyhow::ensure!(
-        update_path != engine::UpdatePath::ConflictFree
-            || alg == Algorithm::Coloring
-            || cfg.solver.threads <= 1,
-        "solver.update_path = \"conflict-free\" requires algorithm = \"coloring\" \
-         or threads = 1 (got {} with {} threads); use \"buffered\" or \"atomic\"",
-        alg.name(),
-        cfg.solver.threads
-    );
-    let engine_cfg = EngineConfig {
-        threads: cfg.solver.threads,
-        acceptor: inst.acceptor,
-        line_search_steps: cfg.solver.line_search_steps,
-        max_iters: cfg.solver.max_iters,
-        max_seconds: cfg.solver.max_seconds,
-        tol: cfg.solver.tol,
-        log_every: cfg.solver.log_every,
-        force_dloss: None,
-        // COLORING's color classes are conflict-free: the paper's
-        // synchronization-free Update (Sec. 4.2) — see §Perf. An
-        // explicit solver.update_path still overrides.
-        update_path: if update_path == engine::UpdatePath::Auto && alg == Algorithm::Coloring
-        {
-            engine::UpdatePath::ConflictFree
-        } else {
-            update_path
-        },
-        ..Default::default()
+    let pre = solver.preprocessing();
+    let (pstar, rho) = (pre.pstar, pre.rho);
+    let (coloring_colors, coloring_mean_size, coloring_secs) = match &pre.coloring {
+        Some(c) => (
+            Some(c.n_colors()),
+            Some(c.mean_class_size()),
+            Some(c.elapsed_secs),
+        ),
+        None => (None, None, None),
     };
 
-    let state = SharedState::new(problem.n_samples(), problem.n_features());
-    let out = engine::solve_from(&problem, &state, inst.selector, &engine_cfg, block_proposer);
+    let out = solver.solve_with(block_proposer);
 
     let result = SolveResult {
         algorithm: alg,
@@ -147,11 +141,11 @@ pub fn run_on(
         metrics: out.metrics,
         stop: out.stop,
         elapsed_secs: out.elapsed_secs,
-        pstar: pre.pstar,
-        rho: pre.rho,
-        coloring_colors: pre.coloring.as_ref().map(|c| c.n_colors()),
-        coloring_mean_size: pre.coloring.as_ref().map(|c| c.mean_class_size()),
-        coloring_secs: pre.coloring.as_ref().map(|c| c.elapsed_secs),
+        pstar,
+        rho,
+        coloring_colors,
+        coloring_mean_size,
+        coloring_secs,
         preprocess_secs,
         dataset: dataset_name,
     };
@@ -245,5 +239,17 @@ mod tests {
     fn unknown_algorithm_errors() {
         let cfg = base_cfg("adam");
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn conflict_free_validation_flows_from_builder() {
+        // the builder's validation backs the config surface: a racy
+        // conflict-free combination is refused, coloring is allowed
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.update_path = "conflict-free".into();
+        assert!(run(&cfg).is_err());
+        let mut cfg = base_cfg("coloring");
+        cfg.solver.update_path = "conflict-free".into();
+        assert!(run(&cfg).is_ok());
     }
 }

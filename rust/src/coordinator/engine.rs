@@ -6,7 +6,8 @@
 //! barriers (OpenMP's implicit region barriers):
 //!
 //! ```text
-//!   leader: Select J, pick gradient + update paths, check stop | workers wait
+//!   leader: Select J, pick gradient + update paths, check stop,
+//!           run observers                           | workers wait
 //!   ── barrier ──
 //!   all: refresh dloss chunk (when precomputation wins)
 //!   ── barrier ──
@@ -19,6 +20,16 @@
 //!   ── barrier ──
 //!   leader: metrics, objective log, convergence checks
 //! ```
+//!
+//! The Select and Accept steps are *policy objects* — any
+//! [`Select`](super::select::Select) / [`Accept`](super::accept::Accept)
+//! implementation, owned by the leader and invoked between barriers
+//! (never concurrently). The eight named algorithms are just preset
+//! pairs ([`super::algorithms`]); external policies plug in through
+//! [`crate::solver::SolverBuilder`]. Per-iteration
+//! [`Observer`](super::observer::Observer) hooks run in the leader's
+//! planning phase; the convergence [`History`] is itself the default
+//! observer rather than hardwired engine state.
 //!
 //! Work is divided with *static contiguous chunking* (the paper's
 //! `schedule(static)`): thread t of T owns `len*t/T .. len*(t+1)/T`;
@@ -42,7 +53,7 @@
 //! # Update paths
 //!
 //! The Update phase applies `z += delta_j * X_j` for every accepted j.
-//! Three disciplines are available ([`UpdatePath`]), chosen per
+//! Three disciplines are configurable ([`UpdatePath`]), chosen per
 //! iteration by a work heuristic when the config says `Auto`:
 //!
 //! * **conflict-free** — plain read+write. Legal when every `z[i]` has a
@@ -58,6 +69,21 @@
 //!   the scatter volume `|J'| · mean_col_nnz` reaches the sample count
 //!   `n` — which is the `Auto` switch rule (mirroring the dloss
 //!   heuristic).
+//!
+//! The dense accumulators cost `n * threads` doubles. Past the
+//! configured memory budget ([`EngineConfig::buffer_budget_mb`]) the
+//! engine refuses that allocation and *spills*: each worker coalesces
+//! its scatter into a thread-local sparse map and, after the same
+//! end-of-scatter barrier the dense reduce uses (so line search still
+//! sees the frozen residual), drains it with one atomic add per
+//! **distinct** touched sample — repeated hits within an iteration
+//! collapse to one CAS. The maps themselves are bounded too: a worker
+//! whose map outgrows its per-thread share of the budget drains early
+//! (atomic-visible, like the Atomic path; floored at ~1k entries —
+//! roughly 32 KiB per thread — so tiny budgets don't drain after every
+//! column), keeping spill mode far under the dense allocation it
+//! replaced. Spilled iterations are counted in
+//! [`MetricsSnapshot::spill_iters`].
 //!
 //! # §Perf
 //!
@@ -78,23 +104,23 @@
 //! | barrier crossing, 4T           | ~5 us (mutex)   | ~0.2 us (spin) |
 //!
 //! Independent of the numbers, correctness is pinned by the
-//! differential tests (`rust/tests/update_paths.rs`, authored with this
-//! change and awaiting their first toolchain run): all three update
-//! paths must produce identical `w` at T=1 (bit-exact) and 1e-12
-//! agreement under an 8-thread SHOTGUN run, with the `z_drift`
-//! invariant checked after every path.
+//! differential tests (`rust/tests/update_paths.rs`): all update paths
+//! must produce identical `w` at T=1 (bit-exact) and 1e-12 agreement
+//! under an 8-thread SHOTGUN run, with the `z_drift` invariant checked
+//! after every path.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::RwLock;
 
-use super::accept::{resolve_global, Acceptor, ThreadBest};
-use super::convergence::{History, Record, StopReason};
+use super::accept::{Accept, AcceptContext, ThreadBest};
+use super::convergence::{History, StopReason};
 use super::linesearch;
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::observer::{IterationInfo, Observer};
 use super::problem::{Problem, SharedState};
 use super::propose::{self, Proposal};
-use super::select::Selector;
+use super::select::Select;
 use crate::loss;
 use crate::util::atomic::{SyncCell, SyncF64Vec};
 use crate::util::par::{aligned_chunk, CachePadded, SpinBarrier, DEFAULT_SPIN};
@@ -110,9 +136,9 @@ pub enum UpdatePath {
     Auto,
     /// Always CAS `fetch_add` (the paper's `omp atomic`).
     Atomic,
-    /// Always per-thread buffers + chunked reduce (falls back to atomic
-    /// if the engine could not allocate buffers — never the case when
-    /// this is the configured path).
+    /// Always per-thread buffers + chunked reduce; spills to sparse
+    /// per-thread maps when the dense accumulators would exceed
+    /// [`EngineConfig::buffer_budget_mb`].
     Buffered,
     /// Plain load+store. Caller asserts every `z[i]` has a unique writer
     /// per Update phase (T=1, or COLORING's color classes).
@@ -143,10 +169,12 @@ impl UpdatePath {
 }
 
 /// Engine knobs (a subset of [`crate::config::SolverConfig`], resolved).
+/// The Select/Accept policies are separate arguments to
+/// [`solve`]/[`solve_from`] — they are stateful objects, not
+/// configuration.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub threads: usize,
-    pub acceptor: Acceptor,
     /// Sec. 4.1 refinement steps on accepted proposals.
     pub line_search_steps: usize,
     pub max_iters: usize,
@@ -161,9 +189,14 @@ pub struct EngineConfig {
     /// heuristic (ablation: `benches/ablations.rs`).
     pub force_dloss: Option<bool>,
     /// `z` scatter discipline for the Update phase (module docs §Update
-    /// paths). `Auto` unless the caller knows better (the driver forces
+    /// paths). `Auto` unless the caller knows better (the builder forces
     /// `ConflictFree` for COLORING).
     pub update_path: UpdatePath,
+    /// Memory budget for the buffered Update path's dense per-thread
+    /// accumulators (`n * threads` doubles). When they would exceed this
+    /// many MiB, buffered iterations spill to sparse per-thread maps
+    /// instead (module docs §Update paths).
+    pub buffer_budget_mb: usize,
     /// Spin budget of the phase barrier before a waiter parks; 0 parks
     /// immediately (useful when heavily oversubscribed).
     pub barrier_spin: u32,
@@ -173,7 +206,6 @@ impl Default for EngineConfig {
     fn default() -> Self {
         Self {
             threads: 1,
-            acceptor: Acceptor::All,
             line_search_steps: 0,
             max_iters: usize::MAX,
             max_seconds: 10.0,
@@ -181,6 +213,7 @@ impl Default for EngineConfig {
             log_every: 0,
             force_dloss: None,
             update_path: UpdatePath::Auto,
+            buffer_budget_mb: 1024,
             barrier_spin: DEFAULT_SPIN,
         }
     }
@@ -205,6 +238,35 @@ pub trait BlockProposer {
     fn name(&self) -> &str;
 }
 
+/// Optional leader-side hooks for a solve: a per-iteration
+/// [`Observer`] and/or a [`BlockProposer`] backend. `Default` is "no
+/// hooks".
+#[derive(Default)]
+pub struct EngineHooks<'a> {
+    pub observer: Option<&'a mut dyn Observer>,
+    pub block_proposer: Option<&'a mut dyn BlockProposer>,
+}
+
+impl<'a> EngineHooks<'a> {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_observer(observer: &'a mut dyn Observer) -> Self {
+        Self {
+            observer: Some(observer),
+            block_proposer: None,
+        }
+    }
+
+    pub fn with_block_proposer(bp: &'a mut dyn BlockProposer) -> Self {
+        Self {
+            observer: None,
+            block_proposer: Some(bp),
+        }
+    }
+}
+
 /// Outcome of a solve.
 pub struct SolveOutput {
     pub w: Vec<f64>,
@@ -222,6 +284,9 @@ enum UpdateMode {
     ConflictFree,
     Atomic,
     Buffered,
+    /// Buffered semantics under the memory budget: thread-local sparse
+    /// accumulation, atomic drain.
+    Spill,
 }
 
 /// Iteration plan: written by the leader, read by workers. The RwLock is
@@ -299,47 +364,71 @@ struct WorkerStats {
     updates: u64,
 }
 
-/// Run GenCD from the zero vector.
-pub fn solve(problem: &Problem, selector: Selector, cfg: &EngineConfig) -> SolveOutput {
+/// Run GenCD from the zero vector with the given policy pair.
+pub fn solve(
+    problem: &Problem,
+    select: impl Select + 'static,
+    accept: impl Accept + 'static,
+    cfg: &EngineConfig,
+) -> SolveOutput {
     let state = SharedState::new(problem.n_samples(), problem.n_features());
-    solve_from(problem, &state, selector, cfg, None)
+    solve_from(
+        problem,
+        &state,
+        Box::new(select),
+        Box::new(accept),
+        cfg,
+        EngineHooks::none(),
+    )
 }
 
-/// Run GenCD from existing state (warm start), optionally with a custom
-/// block-propose backend.
+/// Run GenCD from existing state (warm start), with arbitrary Select /
+/// Accept policies and optional leader-side hooks (observer, custom
+/// block-propose backend).
 pub fn solve_from(
     problem: &Problem,
     state: &SharedState,
-    selector: Selector,
+    select: Box<dyn Select>,
+    accept: Box<dyn Accept>,
     cfg: &EngineConfig,
-    block_proposer: Option<&mut dyn BlockProposer>,
+    hooks: EngineHooks<'_>,
 ) -> SolveOutput {
     let threads = cfg.threads.max(1);
     let n = problem.n_samples();
     let mean_col_nnz = problem.x.mean_col_nnz();
-    // per-thread best reductions are only consumed by the greedy accept
-    // policies; skip the bookkeeping for All / TopK (§Perf)
-    let need_best = matches!(
-        cfg.acceptor,
-        Acceptor::ThreadGreedy | Acceptor::GlobalBest
-    );
-    // Allocate the buffered-update accumulators (n doubles per thread)
-    // only when the configured path can ever pick them: forced buffered,
-    // or Auto with a selection/accept volume that can reach the switch
-    // threshold. Greedy-style acceptors update at most `threads`
-    // coordinates per iteration and never buffer.
-    let may_buffer = match cfg.update_path {
+    // per-thread best reductions are consumed by the accept policy;
+    // built-ins that ignore them opt out of the bookkeeping (§Perf)
+    let need_best = accept.needs_thread_bests();
+    // J' == J fast path: Update reads `selected` directly and the whole
+    // Accept phase is skipped
+    let passes_all = accept.passes_all();
+    // Dense buffered accumulators cost n doubles per thread; past the
+    // configured budget the Spill mode takes over (no allocation here).
+    let dense_fits = (n.saturating_mul(threads)).saturating_mul(8)
+        <= cfg.buffer_budget_mb.saturating_mul(1024 * 1024);
+    // Allocate the buffered-update accumulators only when the configured
+    // path can ever pick them: forced buffered, or Auto with a
+    // selection/accept volume that can reach the switch threshold.
+    // Greedy-style acceptors update at most `threads` coordinates per
+    // iteration and never buffer.
+    let wants_buffer = match cfg.update_path {
         UpdatePath::Buffered => true,
         UpdatePath::Auto => {
-            let est = accept_bound(
-                cfg.acceptor,
-                selector.expected_size().ceil() as usize,
-                threads,
-            );
+            let est = accept.accept_bound(select.expected_size().ceil() as usize, threads);
             threads > 1 && est as f64 * mean_col_nnz >= n as f64
         }
         UpdatePath::Atomic | UpdatePath::ConflictFree => false,
     };
+    let may_buffer = wants_buffer && dense_fits;
+    // Spill-mode maps cost ~32 bytes per distinct entry (key + value +
+    // HashMap overhead); cap each thread's map so the spill fallback
+    // cannot itself blow the budget it exists to honor — past the cap a
+    // worker drains early (still correct: the drain is atomic adds).
+    let spill_cap = (cfg
+        .buffer_budget_mb
+        .saturating_mul(1024 * 1024)
+        / (threads * 32))
+        .max(1024);
     // One accumulator per thread; SyncF64Vec slabs are themselves
     // 128-byte aligned, so neither the buffers nor their chunked reduce
     // share cache lines across threads.
@@ -367,13 +456,15 @@ pub fn solve_from(
         .collect();
     // Leader-only bookkeeping, moved into the leader closure.
     let mut leader_state = LeaderState {
-        selector,
+        selector: select,
+        acceptor: accept,
         history: History::default(),
+        observer: hooks.observer,
         timer: Timer::start(),
         last_log_at: -1.0,
         tol_hits: 0,
         iter: 0,
-        block_proposer,
+        block_proposer: hooks.block_proposer,
         select_epoch: 0,
         seen_select: Vec::new(),
     };
@@ -383,6 +474,9 @@ pub fn solve_from(
         // a panicking worker (debug assert, proposer failure) must not
         // strand its peers at the next barrier
         let _poison_guard = PoisonOnPanic(&barrier);
+        // spill-mode scratch: thread-local, so the engine holds no
+        // n-sized allocation per thread when over the buffer budget
+        let mut spill: HashMap<u32, f64> = HashMap::new();
         // leader-only chained phase timestamps: one clock read per phase
         // boundary instead of start/stop pairs (§Perf — iterations can
         // be sub-microsecond)
@@ -412,6 +506,7 @@ pub fn solve_from(
                     mean_col_nnz,
                     &stats,
                     may_buffer,
+                    dense_fits,
                 );
             }
             barrier.wait();
@@ -468,39 +563,44 @@ pub fn solve_from(
             lap!(propose_nanos);
 
             // ---- Accept (leader) -------------------------------------
-            // All-policy fast path: J' == J; the Update phase reads
-            // `selected` directly, so the write lock and the copy are
-            // skipped entirely (§Perf)
-            if leader.is_some() && cfg.acceptor != Acceptor::All {
-                let mut p = plan.write().unwrap();
-                if hlo_mode {
-                    // derive per-chunk bests from the phi array so the
-                    // accept policies behave identically to sparse mode
-                    for t in 0..threads {
-                        let my = chunk(p.selected.len(), t, threads);
-                        let mut best = ThreadBest::NONE;
-                        for &j in &p.selected[my] {
-                            best.consider(
-                                j,
-                                state.phi.get(j as usize),
-                                state.delta.get(j as usize),
-                            );
+            // passes_all fast path: J' == J; the Update phase reads
+            // `selected` directly, so the write lock, the policy call
+            // and the copy are skipped entirely (§Perf)
+            if !passes_all {
+                if let Some(ls) = leader.as_deref_mut() {
+                    let mut p = plan.write().unwrap();
+                    if hlo_mode && need_best {
+                        // derive per-chunk bests from the phi array so the
+                        // accept policies behave identically to sparse mode
+                        for t in 0..threads {
+                            let my = chunk(p.selected.len(), t, threads);
+                            let mut best = ThreadBest::NONE;
+                            for &j in &p.selected[my] {
+                                best.consider(
+                                    j,
+                                    state.phi.get(j as usize),
+                                    state.delta.get(j as usize),
+                                );
+                            }
+                            bests[t].set(best);
                         }
-                        bests[t].set(best);
                     }
+                    let bests_snapshot: Vec<ThreadBest> =
+                        bests.iter().map(|b| b.get()).collect();
+                    let Plan {
+                        selected, accepted, ..
+                    } = &mut *p;
+                    accepted.clear();
+                    ls.acceptor.accept(
+                        AcceptContext {
+                            bests: &bests_snapshot,
+                            selected,
+                            phi_of: &|j| state.phi.get(j as usize),
+                            threads,
+                        },
+                        accepted,
+                    );
                 }
-                let bests_snapshot: Vec<ThreadBest> =
-                    bests.iter().map(|b| b.get()).collect();
-                let Plan {
-                    selected, accepted, ..
-                } = &mut *p;
-                resolve_global(
-                    cfg.acceptor,
-                    &bests_snapshot,
-                    selected,
-                    |j| state.phi.get(j as usize),
-                    accepted,
-                );
             }
             if tid == 0 {
                 metrics.add_proposals(selected_len as u64);
@@ -511,7 +611,7 @@ pub fn solve_from(
             // ---- Update (parallel over J') ---------------------------
             {
                 let p = plan.read().unwrap();
-                let accepted: &[u32] = if cfg.acceptor == Acceptor::All {
+                let accepted: &[u32] = if passes_all {
                     &p.selected
                 } else {
                     &p.accepted
@@ -557,12 +657,27 @@ pub fn solve_from(
                             }
                         }
                         UpdateMode::Buffered => {
-                            // scatter into this thread's private
+                            // scatter into this thread's private dense
                             // accumulator; z itself is untouched until
                             // the reduce sub-phase below
                             let buf = &buffers[tid];
                             for (&i, &v) in rows.iter().zip(vals) {
                                 buf.add(i as usize, d * v);
+                            }
+                        }
+                        UpdateMode::Spill => {
+                            // over the buffer budget: coalesce into the
+                            // thread-local sparse map; drained below.
+                            // Past spill_cap entries, drain early so the
+                            // map itself stays within the budget.
+                            for (&i, &v) in rows.iter().zip(vals) {
+                                *spill.entry(i).or_insert(0.0) += d * v;
+                            }
+                            if spill.len() >= spill_cap {
+                                for (&i, &acc) in &spill {
+                                    state.z[i as usize].fetch_add(acc, Relaxed);
+                                }
+                                spill.clear();
                             }
                         }
                     }
@@ -572,6 +687,21 @@ pub fn solve_from(
                     let mut s = stats[tid].get();
                     s.updates += applied;
                     stats[tid].set(s);
+                }
+            }
+            if update_mode == UpdateMode::Spill {
+                // scatters — and any same-phase line-search reads of z —
+                // complete at this barrier; draining after it preserves
+                // the buffered path's frozen-residual semantics (only a
+                // cap-overflow early drain above is atomic-visible)
+                barrier.wait();
+                if !spill.is_empty() {
+                    // one atomic add per *distinct* sample this thread
+                    // touched; collisions across threads remain safe
+                    for (&i, &acc) in &spill {
+                        state.z[i as usize].fetch_add(acc, Relaxed);
+                    }
+                    spill.clear();
                 }
             }
             if update_mode == UpdateMode::Buffered {
@@ -629,36 +759,32 @@ pub fn solve_from(
 }
 
 struct LeaderState<'a> {
-    selector: Selector,
+    selector: Box<dyn Select>,
+    acceptor: Box<dyn Accept>,
+    /// The default observer: records the convergence log that
+    /// [`SolveOutput::history`] reports.
     history: History,
+    /// User hook, run after the default observer each iteration.
+    observer: Option<&'a mut dyn Observer>,
     timer: Timer,
     last_log_at: f64,
     tol_hits: u32,
     iter: usize,
     block_proposer: Option<&'a mut dyn BlockProposer>,
-    /// Epoch-stamped duplicate filter for the `Acceptor::All` fast path
-    /// (which consumes `selected` directly, bypassing
-    /// `resolve_global`'s dedup): `seen_select[j] == select_epoch`
-    /// means j already appeared this iteration. O(|J|) per iteration,
-    /// no hashing, no allocation after the first use.
+    /// Epoch-stamped duplicate filter for the `passes_all` fast path
+    /// (which consumes `selected` directly, bypassing the accept
+    /// policy's dedup): `seen_select[j] == select_epoch` means j already
+    /// appeared this iteration. O(|J|) per iteration, no hashing, no
+    /// allocation after the first use.
     select_epoch: u64,
     seen_select: Vec<u64>,
 }
 
-/// Upper bound on |J'| for a policy given |J| (the Auto update-path
-/// heuristic runs at plan time, before Accept).
-fn accept_bound(acceptor: Acceptor, selected: usize, threads: usize) -> usize {
-    match acceptor {
-        Acceptor::All => selected,
-        Acceptor::ThreadGreedy => threads.min(selected),
-        Acceptor::GlobalBest => 1.min(selected),
-        Acceptor::GlobalTopK(k) => k.min(selected),
-    }
-}
-
 /// Resolve the configured [`UpdatePath`] into this iteration's
 /// [`UpdateMode`]. `may_buffer` says whether the engine allocated the
-/// per-thread accumulators.
+/// dense per-thread accumulators; `dense_fits` whether the memory
+/// budget would even allow them (when not, buffered work spills to
+/// sparse per-thread maps).
 fn choose_update_mode(
     path: UpdatePath,
     threads: usize,
@@ -666,6 +792,7 @@ fn choose_update_mode(
     mean_col_nnz: f64,
     n: usize,
     may_buffer: bool,
+    dense_fits: bool,
 ) -> UpdateMode {
     match path {
         UpdatePath::ConflictFree => UpdateMode::ConflictFree,
@@ -674,17 +801,26 @@ fn choose_update_mode(
             if may_buffer {
                 UpdateMode::Buffered
             } else {
-                UpdateMode::Atomic
+                // forced buffered semantics under the memory budget
+                UpdateMode::Spill
             }
         }
         UpdatePath::Auto => {
             if threads <= 1 {
                 // every element trivially has a unique writer
                 UpdateMode::ConflictFree
-            } else if may_buffer && est_accept as f64 * mean_col_nnz >= n as f64 {
+            } else if est_accept as f64 * mean_col_nnz >= n as f64 {
                 // scatter volume reaches the sample count: the O(n)
                 // reduce sweep amortizes, CAS contention does not
-                UpdateMode::Buffered
+                if may_buffer {
+                    UpdateMode::Buffered
+                } else if !dense_fits {
+                    UpdateMode::Spill
+                } else {
+                    // plan-time estimate said buffering would never pay,
+                    // so no accumulators exist; CAS fallback
+                    UpdateMode::Atomic
+                }
             } else {
                 UpdateMode::Atomic
             }
@@ -703,6 +839,7 @@ fn plan_iteration(
     mean_col_nnz: f64,
     stats: &[CachePadded<SyncCell<WorkerStats>>],
     may_buffer: bool,
+    dense_fits: bool,
 ) {
     let elapsed = ls.timer.elapsed_secs();
 
@@ -719,41 +856,60 @@ fn plan_iteration(
     metrics.updates.store(updates, Relaxed);
     metrics.propose_nnz.store(propose_nnz, Relaxed);
 
-    // ---- logging + divergence/tolerance checks ---------------------
+    // ---- objective log + divergence check ---------------------------
     let should_log = match cfg.log_every {
         0 => elapsed - ls.last_log_at >= 0.05 || ls.iter == 0,
         every => ls.iter % every == 0,
     };
+    let mut objective = None;
+    let mut nnz_now = None;
     if should_log {
         let t0 = Timer::start();
         let w = state.w_snapshot();
         let z = state.z_snapshot();
-        let objective = problem.objective(&w, &z);
-        ls.history.push(Record {
-            elapsed_secs: elapsed,
-            iter: ls.iter,
-            updates,
-            objective,
-            nnz: loss::nnz(&w),
-        });
+        let obj = problem.objective(&w, &z);
+        objective = Some(obj);
+        nnz_now = Some(loss::nnz(&w));
         ls.last_log_at = elapsed;
-        if !objective.is_finite() || objective > 1e12 {
+        if !obj.is_finite() || obj > 1e12 {
             plan.stop = Some(StopReason::Diverged);
-        }
-        if cfg.tol > 0.0 {
-            let imp = ls.history.last_rel_improvement();
-            if imp.abs() < cfg.tol {
-                ls.tol_hits += 1;
-            } else {
-                ls.tol_hits = 0;
-            }
-            if ls.tol_hits >= 3 {
-                plan.stop = Some(StopReason::Tolerance);
-            }
         }
         metrics
             .log_nanos
             .fetch_add((t0.elapsed_secs() * 1e9) as u64, Relaxed);
+    }
+
+    // ---- observers ---------------------------------------------------
+    // The default History observer records the log; the user observer
+    // runs after it and may stop the solve. Both see the *completed*
+    // iteration (`iter` = iterations finished so far).
+    let info = IterationInfo {
+        iter: ls.iter,
+        elapsed_secs: elapsed,
+        updates,
+        selected: plan.selected.len(),
+        objective,
+        nnz: nnz_now,
+        state,
+    };
+    let _ = ls.history.on_iteration(&info);
+    if let Some(obs) = ls.observer.as_deref_mut() {
+        if obs.on_iteration(&info).is_break() && plan.stop.is_none() {
+            plan.stop = Some(StopReason::Observer);
+        }
+    }
+
+    // ---- tolerance stop (over the history the observer just fed) ----
+    if should_log && cfg.tol > 0.0 {
+        let imp = ls.history.last_rel_improvement();
+        if imp.abs() < cfg.tol {
+            ls.tol_hits += 1;
+        } else {
+            ls.tol_hits = 0;
+        }
+        if ls.tol_hits >= 3 && plan.stop.is_none() {
+            plan.stop = Some(StopReason::Tolerance);
+        }
     }
 
     // ---- stop checks ------------------------------------------------
@@ -769,15 +925,17 @@ fn plan_iteration(
     }
 
     // ---- Select ------------------------------------------------------
+    // the Select contract: `out` arrives cleared
+    plan.selected.clear();
     ls.selector.select(&mut plan.selected);
     plan.hlo = ls.block_proposer.is_some();
 
     // `selected` must be duplicate-free for EVERY acceptor: the Propose
     // phase chunks it across workers and writes `delta[j]`/`phi[j]`
-    // with plain stores (unique-writer invariant), and the All fast
-    // path additionally hands it straight to the Update phase.
-    // (`resolve_global` dedupes the accepted side again for the other
-    // policies.) The built-in selectors never repeat, but a custom one
+    // with plain stores (unique-writer invariant), and the passes_all
+    // fast path additionally hands it straight to the Update phase.
+    // (Accept policies dedupe the accepted side again for the other
+    // cases.) The built-in selectors never repeat, but a custom one
     // may; this costs one O(|J|) stamped scan, no hashing.
     if plan.selected.len() > 1 {
         if ls.seen_select.len() < problem.n_features() {
@@ -811,7 +969,7 @@ fn plan_iteration(
 
     // ---- update-path decision -----------------------------------------
     let threads = cfg.threads.max(1);
-    let est_accept = accept_bound(cfg.acceptor, plan.selected.len(), threads);
+    let est_accept = ls.acceptor.accept_bound(plan.selected.len(), threads);
     plan.update = choose_update_mode(
         cfg.update_path,
         threads,
@@ -819,7 +977,11 @@ fn plan_iteration(
         mean_col_nnz,
         problem.n_samples(),
         may_buffer,
+        dense_fits,
     );
+    if plan.update == UpdateMode::Spill {
+        metrics.spill_iters.fetch_add(1, Relaxed);
+    }
 
     metrics.iterations.fetch_add(1, Relaxed);
     ls.iter += 1;
@@ -834,10 +996,13 @@ fn store_proposal(state: &SharedState, pr: &Proposal) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::accept::{self, AcceptAll, GlobalBest, GlobalTopK, ThreadGreedy};
+    use crate::coordinator::select::{Cyclic, FullSet, RandomSubset};
     use crate::loss::{Logistic, Squared};
     use crate::sparse::io::Dataset;
     use crate::sparse::CooBuilder;
     use crate::util::Pcg64;
+    use std::ops::ControlFlow;
 
     /// Small random problem with a known planted signal.
     fn make_problem(seed: u64, n: usize, k: usize, logistic: bool) -> Problem {
@@ -874,10 +1039,9 @@ mod tests {
         )
     }
 
-    fn cfg(threads: usize, acceptor: Acceptor, iters: usize) -> EngineConfig {
+    fn cfg(threads: usize, iters: usize) -> EngineConfig {
         EngineConfig {
             threads,
-            acceptor,
             max_iters: iters,
             max_seconds: 30.0,
             ..Default::default()
@@ -887,11 +1051,11 @@ mod tests {
     #[test]
     fn ccd_descends_squared() {
         let p = make_problem(1, 24, 10, false);
-        let sel = Selector::Cyclic {
+        let sel = Cyclic {
             next: 0,
             k: p.n_features(),
         };
-        let out = solve(&p, sel, &cfg(1, Acceptor::All, 200));
+        let out = solve(&p, sel, AcceptAll, &cfg(1, 200));
         let first = out.history.records.first().unwrap().objective;
         assert!(out.objective < first * 0.5, "{} -> {}", first, out.objective);
         assert_eq!(out.stop, StopReason::MaxIters);
@@ -901,12 +1065,12 @@ mod tests {
     #[test]
     fn shotgun_multithreaded_descends_logistic() {
         let p = make_problem(2, 32, 16, true);
-        let sel = Selector::RandomSubset {
+        let sel = RandomSubset {
             rng: Pcg64::seeded(3),
             k: p.n_features(),
             size: 4,
         };
-        let out = solve(&p, sel, &cfg(4, Acceptor::All, 300));
+        let out = solve(&p, sel, AcceptAll, &cfg(4, 300));
         let first = out.history.records.first().unwrap().objective;
         assert!(out.objective < first, "{} -> {}", first, out.objective);
         // z must remain consistent with w after all the atomic updates
@@ -920,12 +1084,12 @@ mod tests {
     fn thread_greedy_accepts_at_most_one_per_thread() {
         let p = make_problem(4, 24, 12, true);
         let threads = 3;
-        let sel = Selector::RandomSubset {
+        let sel = RandomSubset {
             rng: Pcg64::seeded(5),
             k: p.n_features(),
             size: 9,
         };
-        let out = solve(&p, sel, &cfg(threads, Acceptor::ThreadGreedy, 50));
+        let out = solve(&p, sel, ThreadGreedy, &cfg(threads, 50));
         assert!(out.metrics.updates <= 50 * threads as u64);
         assert!(out.metrics.accept_rate() <= threads as f64 / 9.0 + 1e-9);
     }
@@ -933,8 +1097,8 @@ mod tests {
     #[test]
     fn greedy_single_update_per_iteration() {
         let p = make_problem(6, 20, 8, false);
-        let sel = Selector::All { k: p.n_features() };
-        let out = solve(&p, sel, &cfg(2, Acceptor::GlobalBest, 40));
+        let sel = FullSet { k: p.n_features() };
+        let out = solve(&p, sel, GlobalBest, &cfg(2, 40));
         assert!(out.metrics.updates <= 40);
         assert!(out.objective <= out.history.records[0].objective);
     }
@@ -942,8 +1106,8 @@ mod tests {
     #[test]
     fn topk_bounded() {
         let p = make_problem(7, 20, 12, true);
-        let sel = Selector::All { k: p.n_features() };
-        let out = solve(&p, sel, &cfg(2, Acceptor::GlobalTopK(3), 30));
+        let sel = FullSet { k: p.n_features() };
+        let out = solve(&p, sel, GlobalTopK { k: 3 }, &cfg(2, 30));
         assert!(out.metrics.updates <= 90);
     }
 
@@ -951,12 +1115,12 @@ mod tests {
     fn deterministic_single_thread() {
         let p = make_problem(8, 16, 8, true);
         let mk = || {
-            let sel = Selector::RandomSubset {
+            let sel = RandomSubset {
                 rng: Pcg64::seeded(9),
                 k: p.n_features(),
                 size: 3,
             };
-            solve(&p, sel, &cfg(1, Acceptor::All, 100))
+            solve(&p, sel, AcceptAll, &cfg(1, 100))
         };
         let a = mk();
         let b = mk();
@@ -968,13 +1132,13 @@ mod tests {
     fn dloss_paths_equivalent() {
         let p = make_problem(10, 20, 10, true);
         let run = |force: Option<bool>| {
-            let sel = Selector::Cyclic {
+            let sel = Cyclic {
                 next: 0,
                 k: p.n_features(),
             };
-            let mut c = cfg(1, Acceptor::All, 60);
+            let mut c = cfg(1, 60);
             c.force_dloss = force;
-            solve(&p, sel, &c)
+            solve(&p, sel, AcceptAll, &c)
         };
         let a = run(Some(true));
         let b = run(Some(false));
@@ -986,10 +1150,10 @@ mod tests {
     #[test]
     fn max_seconds_stops() {
         let p = make_problem(11, 16, 8, true);
-        let sel = Selector::All { k: p.n_features() };
-        let mut c = cfg(2, Acceptor::GlobalBest, usize::MAX);
+        let sel = FullSet { k: p.n_features() };
+        let mut c = cfg(2, usize::MAX);
         c.max_seconds = 0.2;
-        let out = solve(&p, sel, &c);
+        let out = solve(&p, sel, GlobalBest, &c);
         assert_eq!(out.stop, StopReason::MaxSeconds);
         assert!(out.elapsed_secs < 5.0);
     }
@@ -997,15 +1161,15 @@ mod tests {
     #[test]
     fn tolerance_stops() {
         let p = make_problem(12, 16, 8, false);
-        let sel = Selector::Cyclic {
+        let sel = Cyclic {
             next: 0,
             k: p.n_features(),
         };
-        let mut c = cfg(1, Acceptor::All, usize::MAX);
+        let mut c = cfg(1, usize::MAX);
         c.max_seconds = 20.0;
         c.tol = 1e-10;
         c.log_every = 10;
-        let out = solve(&p, sel, &c);
+        let out = solve(&p, sel, AcceptAll, &c);
         assert_eq!(out.stop, StopReason::Tolerance);
     }
 
@@ -1013,13 +1177,13 @@ mod tests {
     fn line_search_accelerates_convergence() {
         let p = make_problem(13, 30, 10, true);
         let run = |steps: usize| {
-            let sel = Selector::Cyclic {
+            let sel = Cyclic {
                 next: 0,
                 k: p.n_features(),
             };
-            let mut c = cfg(1, Acceptor::All, 50);
+            let mut c = cfg(1, 50);
             c.line_search_steps = steps;
-            solve(&p, sel, &c)
+            solve(&p, sel, AcceptAll, &c)
         };
         let plain = run(0);
         let refined = run(20);
@@ -1035,14 +1199,21 @@ mod tests {
     fn z_consistency_under_concurrency() {
         // many threads, many iterations: incremental z must not drift
         let p = make_problem(14, 40, 24, true);
-        let sel = Selector::RandomSubset {
+        let sel = RandomSubset {
             rng: Pcg64::seeded(15),
             k: p.n_features(),
             size: 8,
         };
         let state = SharedState::new(p.n_samples(), p.n_features());
-        let c = cfg(8, Acceptor::All, 200);
-        solve_from(&p, &state, sel, &c, None);
+        let c = cfg(8, 200);
+        solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::all(),
+            &c,
+            EngineHooks::none(),
+        );
         assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
     }
 
@@ -1051,18 +1222,26 @@ mod tests {
         // forced buffered updates under real contention: z stays
         // consistent with w and the solve still descends
         let p = make_problem(16, 48, 24, true);
-        let sel = Selector::RandomSubset {
+        let sel = RandomSubset {
             rng: Pcg64::seeded(17),
             k: p.n_features(),
             size: 8,
         };
         let state = SharedState::new(p.n_samples(), p.n_features());
-        let mut c = cfg(4, Acceptor::All, 200);
+        let mut c = cfg(4, 200);
         c.update_path = UpdatePath::Buffered;
-        let out = solve_from(&p, &state, sel, &c, None);
+        let out = solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::all(),
+            &c,
+            EngineHooks::none(),
+        );
         let first = out.history.records.first().unwrap().objective;
         assert!(out.objective < first, "{first} -> {}", out.objective);
         assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+        assert_eq!(out.metrics.spill_iters, 0, "dense buffers fit the budget");
     }
 
     #[test]
@@ -1070,18 +1249,127 @@ mod tests {
         // forced buffered path composes with line search and a
         // non-All acceptor (accepted list path, not the fast path)
         let p = make_problem(18, 32, 16, true);
-        let sel = Selector::RandomSubset {
+        let sel = RandomSubset {
             rng: Pcg64::seeded(19),
             k: p.n_features(),
             size: 8,
         };
         let state = SharedState::new(p.n_samples(), p.n_features());
-        let mut c = cfg(3, Acceptor::ThreadGreedy, 80);
+        let mut c = cfg(3, 80);
         c.update_path = UpdatePath::Buffered;
         c.line_search_steps = 5;
-        let out = solve_from(&p, &state, sel, &c, None);
+        let out = solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::thread_greedy(),
+            &c,
+            EngineHooks::none(),
+        );
         assert!(out.objective.is_finite());
         assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+    }
+
+    #[test]
+    fn zero_budget_spills_and_stays_consistent() {
+        // buffer_budget_mb = 0 refuses the dense accumulators: forced
+        // buffered runs must take the spill path and remain correct
+        let p = make_problem(20, 48, 24, true);
+        let sel = RandomSubset {
+            rng: Pcg64::seeded(21),
+            k: p.n_features(),
+            size: 8,
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let mut c = cfg(4, 200);
+        c.update_path = UpdatePath::Buffered;
+        c.buffer_budget_mb = 0;
+        let out = solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::all(),
+            &c,
+            EngineHooks::none(),
+        );
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{first} -> {}", out.objective);
+        assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+        assert_eq!(
+            out.metrics.spill_iters, out.metrics.iterations,
+            "every iteration should have spilled"
+        );
+    }
+
+    #[test]
+    fn observer_early_stop_and_cadence() {
+        let p = make_problem(22, 24, 12, true);
+        let sel = Cyclic {
+            next: 0,
+            k: p.n_features(),
+        };
+        let mut calls = 0usize;
+        let mut last_iter = 0usize;
+        let obs = |info: &IterationInfo<'_>| {
+            calls += 1;
+            last_iter = info.iter;
+            if info.iter >= 25 {
+                ControlFlow::Break(())
+            } else {
+                ControlFlow::Continue(())
+            }
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let mut obs_box = obs;
+        let out = solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::all(),
+            &cfg(1, 1000),
+            EngineHooks::with_observer(&mut obs_box),
+        );
+        assert_eq!(out.stop, StopReason::Observer);
+        assert_eq!(out.metrics.iterations, 25);
+        assert_eq!(last_iter, 25, "observer sees the completed count");
+        assert_eq!(calls, 26, "one call per planning step incl. iter 0");
+    }
+
+    #[test]
+    fn observer_sees_logged_objective_and_state() {
+        let p = make_problem(23, 24, 12, false);
+        let sel = Cyclic {
+            next: 0,
+            k: p.n_features(),
+        };
+        let mut logged = 0usize;
+        let mut unlogged = 0usize;
+        let mut obs = |info: &IterationInfo<'_>| {
+            match info.objective {
+                Some(obj) => {
+                    logged += 1;
+                    assert!(obj.is_finite());
+                    assert!(info.nnz.is_some());
+                    // state is readable while workers are parked
+                    assert_eq!(info.state.w_snapshot().len(), 12);
+                }
+                None => unlogged += 1,
+            }
+            ControlFlow::Continue(())
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let mut c = cfg(1, 40);
+        c.log_every = 10;
+        solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::all(),
+            &c,
+            EngineHooks::with_observer(&mut obs),
+        );
+        assert!(logged >= 4, "log_every=10 over 40 iters: {logged}");
+        assert!(unlogged > 0);
     }
 
     #[test]
@@ -1089,19 +1377,47 @@ mod tests {
         use super::UpdateMode as M;
         use super::UpdatePath as P;
         // forced paths are forced
-        assert_eq!(choose_update_mode(P::Atomic, 8, 1000, 50.0, 100, true), M::Atomic);
         assert_eq!(
-            choose_update_mode(P::ConflictFree, 8, 1000, 50.0, 100, false),
+            choose_update_mode(P::Atomic, 8, 1000, 50.0, 100, true, true),
+            M::Atomic
+        );
+        assert_eq!(
+            choose_update_mode(P::ConflictFree, 8, 1000, 50.0, 100, false, true),
             M::ConflictFree
         );
-        assert_eq!(choose_update_mode(P::Buffered, 1, 1, 1.0, 100, true), M::Buffered);
+        assert_eq!(
+            choose_update_mode(P::Buffered, 1, 1, 1.0, 100, true, true),
+            M::Buffered
+        );
+        // forced buffered past the budget spills
+        assert_eq!(
+            choose_update_mode(P::Buffered, 4, 200, 10.0, 1000, false, false),
+            M::Spill
+        );
         // auto: single thread is conflict-free
-        assert_eq!(choose_update_mode(P::Auto, 1, 1000, 50.0, 100, true), M::ConflictFree);
+        assert_eq!(
+            choose_update_mode(P::Auto, 1, 1000, 50.0, 100, true, true),
+            M::ConflictFree
+        );
         // auto: small scatter volume stays atomic
-        assert_eq!(choose_update_mode(P::Auto, 4, 2, 10.0, 1000, true), M::Atomic);
+        assert_eq!(
+            choose_update_mode(P::Auto, 4, 2, 10.0, 1000, true, true),
+            M::Atomic
+        );
         // auto: scatter volume >= n flips to buffered (when allocated)
-        assert_eq!(choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true), M::Buffered);
-        assert_eq!(choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false), M::Atomic);
+        assert_eq!(
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true, true),
+            M::Buffered
+        );
+        assert_eq!(
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, true),
+            M::Atomic
+        );
+        // auto over the budget: spill rather than CAS-per-nnz
+        assert_eq!(
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, false),
+            M::Spill
+        );
     }
 
     #[test]

@@ -18,6 +18,10 @@ pub struct Metrics {
     pub iterations: AtomicU64,
     /// Nonzeros traversed in Propose (work metric).
     pub propose_nnz: AtomicU64,
+    /// Iterations whose buffered update spilled to sparse per-thread
+    /// maps because the dense accumulators exceeded the memory budget
+    /// (`EngineConfig::buffer_budget_mb`).
+    pub spill_iters: AtomicU64,
     /// Nanoseconds spent in each phase (leader-measured).
     pub select_nanos: AtomicU64,
     pub propose_nanos: AtomicU64,
@@ -43,6 +47,7 @@ impl Metrics {
             proposals: self.proposals.load(Relaxed),
             iterations: self.iterations.load(Relaxed),
             propose_nnz: self.propose_nnz.load(Relaxed),
+            spill_iters: self.spill_iters.load(Relaxed),
             select_secs: self.select_nanos.load(Relaxed) as f64 * 1e-9,
             propose_secs: self.propose_nanos.load(Relaxed) as f64 * 1e-9,
             accept_secs: self.accept_nanos.load(Relaxed) as f64 * 1e-9,
@@ -59,6 +64,8 @@ pub struct MetricsSnapshot {
     pub proposals: u64,
     pub iterations: u64,
     pub propose_nnz: u64,
+    /// Buffered iterations that spilled to sparse maps (memory budget).
+    pub spill_iters: u64,
     pub select_secs: f64,
     pub propose_secs: f64,
     pub accept_secs: f64,

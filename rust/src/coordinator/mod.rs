@@ -10,10 +10,14 @@
 //!    Algorithm 3), optionally refining each increment first
 //!    ([`linesearch`], Sec. 4.1)
 //!
-//! [`algorithms`] maps the paper's named algorithms (Table 2) onto
-//! policy pairs; [`engine`] is the OpenMP-analogue thread pool;
-//! [`driver`] wires datasets, preprocessing (coloring, P*), and logging
-//! into a single entry point.
+//! Select and Accept are *open* trait-based extension points
+//! ([`select::Select`], [`accept::Accept`]); [`algorithms`] maps the
+//! paper's named algorithms (Table 2) onto preset policy pairs;
+//! [`engine`] is the OpenMP-analogue thread pool with per-iteration
+//! [`observer::Observer`] hooks; [`driver`] wires datasets,
+//! preprocessing (coloring, P*), and logging into a single
+//! config-driven entry point. For embedding, prefer
+//! [`crate::solver::SolverBuilder`].
 
 pub mod accept;
 pub mod algorithms;
@@ -23,12 +27,16 @@ pub mod engine;
 pub mod linesearch;
 pub mod kkt;
 pub mod metrics;
+pub mod observer;
 pub mod path;
 pub mod problem;
 pub mod propose;
 pub mod select;
 
+pub use accept::Accept;
 pub use algorithms::Algorithm;
 pub use convergence::{History, Record};
 pub use driver::{run, SolveResult};
+pub use observer::{IterationInfo, Observer};
 pub use problem::Problem;
+pub use select::Select;

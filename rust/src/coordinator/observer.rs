@@ -1,0 +1,135 @@
+//! Iteration observers: user-side hooks into the solve loop.
+//!
+//! The engine calls [`Observer::on_iteration`] on the *leader* thread
+//! once per completed iteration (and once before the first, with
+//! `iter == 0`, so the initial state is observable), while the workers
+//! are parked at the Select-phase barrier. Observers enable early
+//! stopping (`ControlFlow::Break`), checkpointing (snapshot `w` through
+//! [`IterationInfo::state`]), and streaming metrics — without the engine
+//! hardwiring any particular consumer. The convergence
+//! [`History`](super::convergence::History) is itself just the default
+//! observer the engine attaches so
+//! [`SolveOutput`](super::engine::SolveOutput) can report a log.
+//!
+//! Cheap by construction: the engine computes the objective only at its
+//! log cadence, so `objective`/`nnz` are `Some` on logged iterations and
+//! `None` otherwise. Everything else in [`IterationInfo`] is already on
+//! hand each iteration.
+
+use std::ops::ControlFlow;
+
+use super::convergence::{History, Record};
+use super::problem::SharedState;
+
+/// Snapshot handed to [`Observer::on_iteration`].
+pub struct IterationInfo<'a> {
+    /// Completed iterations so far (0 on the pre-first-iteration call).
+    pub iter: usize,
+    /// Wall-clock seconds since the solve started.
+    pub elapsed_secs: f64,
+    /// Cumulative coordinate updates applied (Figure 2's numerator).
+    pub updates: u64,
+    /// |J| of the most recent Select (0 before the first iteration).
+    pub selected: usize,
+    /// Full objective F(w) + lam |w|_1 — computed only on logged
+    /// iterations (`solver.log_every` cadence), `None` otherwise.
+    pub objective: Option<f64>,
+    /// Nonzero weights — same cadence as `objective`.
+    pub nnz: Option<usize>,
+    /// The live solver state. The observer runs while all workers are
+    /// parked, so plain reads (`state.w_snapshot()`, …) are safe; do
+    /// not write.
+    pub state: &'a SharedState,
+}
+
+/// Per-iteration hook. Return [`ControlFlow::Break`] to stop the solve
+/// (the output's stop reason becomes
+/// [`StopReason::Observer`](super::convergence::StopReason::Observer)).
+///
+/// Runs on the leader thread; keep it cheap on non-logged iterations —
+/// it sits between two phase barriers. `Send` is required (as for
+/// [`Select`](super::select::Select) and
+/// [`Accept`](super::accept::Accept)) so a built
+/// [`Solver`](crate::solver::Solver) can be moved to another thread
+/// before running.
+pub trait Observer: Send {
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ControlFlow<()>;
+}
+
+/// Any `FnMut(&IterationInfo) -> ControlFlow<()>` closure is an
+/// observer: `.observer(|info| { …; ControlFlow::Continue(()) })`.
+impl<F> Observer for F
+where
+    F: FnMut(&IterationInfo<'_>) -> ControlFlow<()> + Send,
+{
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ControlFlow<()> {
+        self(info)
+    }
+}
+
+/// The default observer: record a [`Record`] at every logged iteration.
+/// This is exactly how the engine builds [`SolveOutput::history`] — no
+/// hardwired history plumbing remains in the iteration loop.
+///
+/// [`SolveOutput::history`]: super::engine::SolveOutput::history
+impl Observer for History {
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ControlFlow<()> {
+        if let (Some(objective), Some(nnz)) = (info.objective, info.nnz) {
+            self.push(Record {
+                elapsed_secs: info.elapsed_secs,
+                iter: info.iter,
+                updates: info.updates,
+                objective,
+                nnz,
+            });
+        }
+        ControlFlow::Continue(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(state: &SharedState, iter: usize, objective: Option<f64>) -> IterationInfo<'_> {
+        IterationInfo {
+            iter,
+            elapsed_secs: iter as f64 * 0.5,
+            updates: iter as u64,
+            selected: 3,
+            objective,
+            nnz: objective.map(|_| 2),
+            state,
+        }
+    }
+
+    #[test]
+    fn history_records_only_logged_iterations() {
+        let state = SharedState::new(4, 3);
+        let mut h = History::default();
+        assert!(h.on_iteration(&info(&state, 0, Some(1.0))).is_continue());
+        assert!(h.on_iteration(&info(&state, 1, None)).is_continue());
+        assert!(h.on_iteration(&info(&state, 2, Some(0.5))).is_continue());
+        assert_eq!(h.records.len(), 2);
+        assert_eq!(h.records[1].iter, 2);
+        assert_eq!(h.records[1].objective, 0.5);
+    }
+
+    #[test]
+    fn closures_are_observers() {
+        let state = SharedState::new(2, 2);
+        let mut count = 0usize;
+        let mut obs = |_: &IterationInfo<'_>| {
+            count += 1;
+            if count >= 3 {
+                ControlFlow::Break(())
+            } else {
+                ControlFlow::Continue(())
+            }
+        };
+        for i in 0..2 {
+            assert!(obs.on_iteration(&info(&state, i, None)).is_continue());
+        }
+        assert!(obs.on_iteration(&info(&state, 2, None)).is_break());
+    }
+}

@@ -4,11 +4,13 @@
 //! "decreasing regularization" schedule Bradley et al. suggest for
 //! Shotgun (Sec. 4.1), offered as a first-class feature.
 
-use super::algorithms::{instantiate, Algorithm, Preprocessed};
-use super::engine::{solve_from, EngineConfig, SolveOutput, UpdatePath};
-use super::problem::{Problem, SharedState};
+use std::sync::Arc;
+
+use super::algorithms::{Algorithm, Preprocessed};
+use super::engine::SolveOutput;
 use crate::coloring::Strategy;
 use crate::loss::{self, Loss};
+use crate::solver::Solver;
 use crate::sparse::io::Dataset;
 
 /// One point on the regularization path.
@@ -78,12 +80,12 @@ pub fn solve_path(
     anyhow::ensure!(lmax > 0.0, "lambda_max = 0 (degenerate problem)");
     anyhow::ensure!(cfg.n_points >= 1, "need at least one path point");
 
-    let pre = Preprocessed::for_algorithm(
+    let pre = Arc::new(Preprocessed::for_algorithm(
         cfg.algorithm,
         &ds.x,
         Strategy::Greedy,
         cfg.seed,
-    );
+    ));
 
     // geometric grid from lmax*ratio^(1/n) down to lmax*min_ratio
     let ratio = cfg.min_ratio.powf(1.0 / cfg.n_points as f64);
@@ -92,40 +94,24 @@ pub fn solve_path(
 
     for step in 1..=cfg.n_points {
         let lam = lmax * ratio.powi(step as i32);
-        let problem = Problem::new(
-            Dataset {
-                x: ds.x.clone(),
-                y: ds.y.clone(),
-                name: ds.name.clone(),
-            },
-            loss::by_name(loss_name)?,
-            lam,
-        );
-        let inst = instantiate(
-            cfg.algorithm,
-            problem.n_features(),
-            cfg.threads,
-            0,
-            0,
-            &pre,
-            cfg.seed.wrapping_add(step as u64),
-        )?;
-        let engine_cfg = EngineConfig {
-            threads: cfg.threads,
-            acceptor: inst.acceptor,
-            line_search_steps: cfg.line_search_steps,
-            max_iters: cfg.max_iters,
-            max_seconds: cfg.max_seconds,
-            tol: cfg.tol,
-            update_path: if cfg.algorithm == Algorithm::Coloring {
-                UpdatePath::ConflictFree
-            } else {
-                UpdatePath::Auto
-            },
-            ..Default::default()
-        };
-        let state = SharedState::from_warm_start(&problem, &warm);
-        let out: SolveOutput = solve_from(&problem, &state, inst.selector, &engine_cfg, None);
+        // one builder per point; the expensive preprocessing (P*,
+        // coloring) is injected so it is computed exactly once
+        let out: SolveOutput = Solver::builder()
+            .matrix(ds.x.clone())
+            .labels(ds.y.clone())
+            .boxed_loss(loss::by_name(loss_name)?)
+            .lambda(lam)
+            .algorithm(cfg.algorithm)
+            .preprocessed(pre.clone())
+            .threads(cfg.threads)
+            .seed(cfg.seed.wrapping_add(step as u64))
+            .line_search_steps(cfg.line_search_steps)
+            .max_iters(cfg.max_iters)
+            .max_seconds(cfg.max_seconds)
+            .tol(cfg.tol)
+            .warm_start(warm.clone())
+            .build()?
+            .solve();
         warm = out.w.clone();
         points.push(PathPoint {
             lam,
@@ -142,6 +128,7 @@ pub fn solve_path(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::problem::{Problem, SharedState};
     use crate::data::{reuters_like, GenOptions};
 
     fn dataset() -> Dataset {
@@ -217,32 +204,20 @@ mod tests {
         };
         let path = solve_path(&ds, "squared", &cfg).unwrap();
         let final_lam = path.last().unwrap().lam;
-        // cold start directly at the final lambda
-        let problem = Problem::new(
-            Dataset {
-                x: ds.x.clone(),
-                y: ds.y.clone(),
-                name: ds.name.clone(),
-            },
-            loss::by_name("squared").unwrap(),
-            final_lam,
-        );
-        let pre = Preprocessed::for_algorithm(
-            Algorithm::Shotgun,
-            &ds.x,
-            Strategy::Greedy,
-            3,
-        );
-        let inst = instantiate(Algorithm::Shotgun, ds.x.n_cols(), 1, 0, 0, &pre, 3).unwrap();
-        let engine_cfg = EngineConfig {
-            threads: 1,
-            acceptor: inst.acceptor,
-            max_seconds: 8.0,
-            tol: 1e-9,
-            ..Default::default()
-        };
-        let state = SharedState::new(problem.n_samples(), problem.n_features());
-        let cold = solve_from(&problem, &state, inst.selector, &engine_cfg, None);
+        // cold start directly at the final lambda, through the builder
+        let cold = Solver::builder()
+            .matrix(ds.x.clone())
+            .labels(ds.y.clone())
+            .boxed_loss(loss::by_name("squared").unwrap())
+            .lambda(final_lam)
+            .algorithm(Algorithm::Shotgun)
+            .threads(1)
+            .seed(3)
+            .max_seconds(8.0)
+            .tol(1e-9)
+            .build()
+            .unwrap()
+            .solve();
         // warm-started final point reaches a comparable objective
         let warm_obj = path.last().unwrap().objective;
         assert!(

@@ -96,9 +96,15 @@ impl SharedState {
     /// Initialize from a warm-start weight vector.
     pub fn from_warm_start(problem: &Problem, w0: &[f64]) -> Self {
         let state = Self::new(problem.n_samples(), problem.n_features());
-        state.w.copy_from(w0);
-        state.z.copy_from(&problem.x.matvec(w0));
+        state.apply_warm_start(problem, w0);
         state
+    }
+
+    /// Load a warm-start weight vector into existing state
+    /// (`w = w0`, `z = X w0`).
+    pub fn apply_warm_start(&self, problem: &Problem, w0: &[f64]) {
+        self.w.copy_from(w0);
+        self.z.copy_from(&problem.x.matvec(w0));
     }
 
     pub fn w_snapshot(&self) -> Vec<f64> {

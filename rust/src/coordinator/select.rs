@@ -1,118 +1,290 @@
 //! Step one: Select (Sec. 2.1) — which coordinates get proposals this
 //! iteration.
 //!
-//! The policies cover the paper's spectrum: singletons (CCD/SCD), random
+//! Selection is an *open* extension point: [`Select`] is an object-safe
+//! trait, and the paper's policies — singletons (CCD/SCD), random
 //! subsets of a given size (SHOTGUN, THREAD-GREEDY), everything (GREEDY,
 //! "full greedy"), one color class (COLORING), and the §7 "soft
 //! coloring" extension (per-block random subsets sized by a per-block
-//! P*).
+//! P*) — are plain implementations of it, constructible either as
+//! structs ([`Cyclic`], [`RandomSubset`], …) or through the boxed
+//! constructor functions ([`cyclic`], [`random_subset`], …) that the
+//! [`Algorithm`](super::algorithms::Algorithm) preset catalogue and
+//! [`SolverBuilder`](crate::solver::SolverBuilder) use. Implement the
+//! trait yourself to plug a new policy (feature clustering, importance
+//! sampling, …) into the engine without touching this crate.
 
 use crate::coloring::Coloring;
 use crate::util::Pcg64;
 
-/// A selection policy. Stateful (cyclic pointer, RNG) and owned by the
-/// leader thread; `select` fills `out` with the iteration's J.
-pub enum Selector {
-    /// Deterministic single coordinate: 0, 1, 2, … (CCD).
-    Cyclic { next: usize, k: usize },
-    /// Uniform random single coordinate (SCD).
-    Stochastic { rng: Pcg64, k: usize },
-    /// Uniform random subset of fixed size without replacement
-    /// (SHOTGUN with size = P*, THREAD-GREEDY with size = threads * c).
-    RandomSubset { rng: Pcg64, k: usize, size: usize },
-    /// All coordinates (GREEDY / full greedy).
-    All { k: usize },
-    /// A uniformly random color class (COLORING).
-    RandomColor { rng: Pcg64, coloring: Coloring },
-    /// §7 extension: partition into `blocks` contiguous column blocks,
-    /// select an independent random subset of `per_block` from each.
-    BlockSubset {
-        rng: Pcg64,
-        k: usize,
-        blocks: usize,
-        per_block: Vec<usize>,
-    },
+/// RNG stream id shared by every stochastic built-in policy. The boxed
+/// constructors seed their [`Pcg64`] as `Pcg64::new(seed, POLICY_STREAM)`,
+/// which is also what [`super::algorithms::instantiate`] has always done
+/// — so a hand-built policy with the same seed reproduces a preset's
+/// selection sequence bit-exactly.
+pub const POLICY_STREAM: u64 = 0xA160;
+
+/// A selection policy: fills `out` with the iteration's coordinate set
+/// `J`.
+///
+/// # Contract
+///
+/// * `select` is called exactly once per iteration, on the leader
+///   thread, while the workers are parked at a barrier — implementations
+///   may be freely stateful (cyclic pointers, RNGs, adaptive scores) and
+///   need no internal synchronization. `Send` is required so a built
+///   solver can be moved to another thread before running.
+/// * The selection should be duplicate-free; the engine additionally
+///   collapses repeats (first occurrence wins) before Propose, so a
+///   sloppy custom policy degrades performance but not correctness.
+/// * Every index must be `< k` (the number of features). Out-of-range
+///   indices panic in the engine.
+pub trait Select: Send {
+    /// Fill `out` with this iteration's selected coordinate set J.
+    /// The engine clears `out` before every call — implementations
+    /// append only (the single owner of that invariant is the engine's
+    /// plan step, not the policies).
+    fn select(&mut self, out: &mut Vec<u32>);
+
+    /// Expected |J| per iteration — a *sizing hint* used by the engine's
+    /// buffered-update heuristic and by metrics/benches. An estimate is
+    /// fine; it never affects correctness.
+    fn expected_size(&self) -> f64;
+
+    /// Human-readable policy name (logs and summaries). `String` so
+    /// parameterized policies can include their sizing (mirrors
+    /// [`Accept::name`](super::accept::Accept::name)).
+    fn name(&self) -> String {
+        "custom".into()
+    }
 }
 
-impl Selector {
-    /// Fill `out` with this iteration's selected coordinate set J.
-    pub fn select(&mut self, out: &mut Vec<u32>) {
-        out.clear();
-        match self {
-            Selector::Cyclic { next, k } => {
-                out.push(*next as u32);
-                *next = (*next + 1) % *k;
+impl<S: Select + ?Sized> Select for Box<S> {
+    fn select(&mut self, out: &mut Vec<u32>) {
+        (**self).select(out)
+    }
+    fn expected_size(&self) -> f64 {
+        (**self).expected_size()
+    }
+    fn name(&self) -> String {
+        (**self).name()
+    }
+}
+
+/// Deterministic single coordinate: 0, 1, 2, … (CCD).
+pub struct Cyclic {
+    pub next: usize,
+    pub k: usize,
+}
+
+impl Select for Cyclic {
+    fn select(&mut self, out: &mut Vec<u32>) {
+        out.push(self.next as u32);
+        self.next = (self.next + 1) % self.k;
+    }
+
+    fn expected_size(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> String {
+        "cyclic".into()
+    }
+}
+
+/// Uniform random single coordinate (SCD).
+pub struct Stochastic {
+    pub rng: Pcg64,
+    pub k: usize,
+}
+
+impl Select for Stochastic {
+    fn select(&mut self, out: &mut Vec<u32>) {
+        out.push(self.rng.below(self.k) as u32);
+    }
+
+    fn expected_size(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> String {
+        "stochastic".into()
+    }
+}
+
+/// Uniform random subset of fixed size without replacement (SHOTGUN
+/// with size = P*, THREAD-GREEDY with size = threads * c).
+pub struct RandomSubset {
+    pub rng: Pcg64,
+    pub k: usize,
+    pub size: usize,
+}
+
+impl Select for RandomSubset {
+    fn select(&mut self, out: &mut Vec<u32>) {
+        debug_assert!(out.is_empty(), "engine clears the selection buffer");
+        let k = self.k;
+        let size = self.size.min(k);
+        if size * 4 >= k {
+            // dense regime: shuffle a prefix
+            let mut all: Vec<u32> = (0..k as u32).collect();
+            for i in 0..size {
+                let j = i + self.rng.below(k - i);
+                all.swap(i, j);
+                out.push(all[i]);
             }
-            Selector::Stochastic { rng, k } => {
-                out.push(rng.below(*k) as u32);
-            }
-            Selector::RandomSubset { rng, k, size } => {
-                let size = (*size).min(*k);
-                if size * 4 >= *k {
-                    // dense regime: shuffle a prefix
-                    let mut all: Vec<u32> = (0..*k as u32).collect();
-                    for i in 0..size {
-                        let j = i + rng.below(*k - i);
-                        all.swap(i, j);
-                        out.push(all[i]);
-                    }
-                } else if size <= 64 {
-                    // small regime: quadratic rejection into `out` —
-                    // allocation-free (§Perf: this runs every iteration
-                    // of SHOTGUN, whose P* is often tiny)
-                    while out.len() < size {
-                        let j = rng.below(*k) as u32;
-                        if !out.contains(&j) {
-                            out.push(j);
-                        }
-                    }
-                } else {
-                    for j in rng.sample_distinct(*k, size) {
-                        out.push(j as u32);
-                    }
+        } else if size <= 64 {
+            // small regime: quadratic rejection into `out` —
+            // allocation-free (§Perf: this runs every iteration
+            // of SHOTGUN, whose P* is often tiny)
+            while out.len() < size {
+                let j = self.rng.below(k) as u32;
+                if !out.contains(&j) {
+                    out.push(j);
                 }
             }
-            Selector::All { k } => {
-                out.extend(0..*k as u32);
-            }
-            Selector::RandomColor { rng, coloring } => {
-                let c = rng.below(coloring.n_colors());
-                out.extend_from_slice(&coloring.classes[c]);
-            }
-            Selector::BlockSubset {
-                rng,
-                k,
-                blocks,
-                per_block,
-            } => {
-                let bsize = (*k + *blocks - 1) / *blocks;
-                for b in 0..*blocks {
-                    let lo = b * bsize;
-                    let hi = ((b + 1) * bsize).min(*k);
-                    if lo >= hi {
-                        break;
-                    }
-                    let m = per_block[b].min(hi - lo);
-                    for idx in rng.sample_distinct(hi - lo, m) {
-                        out.push((lo + idx) as u32);
-                    }
-                }
+        } else {
+            for j in self.rng.sample_distinct(k, size) {
+                out.push(j as u32);
             }
         }
     }
 
-    /// Expected |J| per iteration (sizing hints for metrics/benches).
-    pub fn expected_size(&self) -> f64 {
-        match self {
-            Selector::Cyclic { .. } | Selector::Stochastic { .. } => 1.0,
-            Selector::RandomSubset { size, k, .. } => (*size).min(*k) as f64,
-            Selector::All { k } => *k as f64,
-            Selector::RandomColor { coloring, .. } => coloring.mean_class_size(),
-            Selector::BlockSubset { per_block, .. } => {
-                per_block.iter().sum::<usize>() as f64
+    fn expected_size(&self) -> f64 {
+        self.size.min(self.k) as f64
+    }
+
+    fn name(&self) -> String {
+        "random-subset".into()
+    }
+}
+
+/// All coordinates (GREEDY / full greedy).
+pub struct FullSet {
+    pub k: usize,
+}
+
+impl Select for FullSet {
+    fn select(&mut self, out: &mut Vec<u32>) {
+        out.extend(0..self.k as u32);
+    }
+
+    fn expected_size(&self) -> f64 {
+        self.k as f64
+    }
+
+    fn name(&self) -> String {
+        "all".into()
+    }
+}
+
+/// A uniformly random color class (COLORING).
+pub struct RandomColor {
+    pub rng: Pcg64,
+    pub coloring: Coloring,
+}
+
+impl Select for RandomColor {
+    fn select(&mut self, out: &mut Vec<u32>) {
+        let c = self.rng.below(self.coloring.n_colors());
+        out.extend_from_slice(&self.coloring.classes[c]);
+    }
+
+    fn expected_size(&self) -> f64 {
+        self.coloring.mean_class_size()
+    }
+
+    fn name(&self) -> String {
+        "random-color".into()
+    }
+}
+
+/// §7 extension: partition into `blocks` contiguous column blocks,
+/// select an independent random subset of `per_block` from each.
+pub struct BlockSubset {
+    pub rng: Pcg64,
+    pub k: usize,
+    pub blocks: usize,
+    pub per_block: Vec<usize>,
+}
+
+impl Select for BlockSubset {
+    fn select(&mut self, out: &mut Vec<u32>) {
+        let bsize = (self.k + self.blocks - 1) / self.blocks;
+        for b in 0..self.blocks {
+            let lo = b * bsize;
+            let hi = ((b + 1) * bsize).min(self.k);
+            if lo >= hi {
+                break;
+            }
+            let m = self.per_block[b].min(hi - lo);
+            for idx in self.rng.sample_distinct(hi - lo, m) {
+                out.push((lo + idx) as u32);
             }
         }
     }
+
+    fn expected_size(&self) -> f64 {
+        self.per_block.iter().sum::<usize>() as f64
+    }
+
+    fn name(&self) -> String {
+        "block-subset".into()
+    }
+}
+
+fn policy_rng(seed: u64) -> Pcg64 {
+    Pcg64::new(seed, POLICY_STREAM)
+}
+
+/// CCD selection over `k` coordinates.
+pub fn cyclic(k: usize) -> Box<dyn Select> {
+    Box::new(Cyclic { next: 0, k })
+}
+
+/// SCD selection over `k` coordinates.
+pub fn stochastic(k: usize, seed: u64) -> Box<dyn Select> {
+    Box::new(Stochastic {
+        rng: policy_rng(seed),
+        k,
+    })
+}
+
+/// SHOTGUN-style random subset of `size` out of `k`.
+pub fn random_subset(k: usize, size: usize, seed: u64) -> Box<dyn Select> {
+    Box::new(RandomSubset {
+        rng: policy_rng(seed),
+        k,
+        size,
+    })
+}
+
+/// GREEDY's full selection of all `k` coordinates.
+pub fn full_set(k: usize) -> Box<dyn Select> {
+    Box::new(FullSet { k })
+}
+
+/// COLORING's random-color-class selection.
+pub fn random_color(coloring: Coloring, seed: u64) -> Box<dyn Select> {
+    Box::new(RandomColor {
+        rng: policy_rng(seed),
+        coloring,
+    })
+}
+
+/// BLOCK-SHOTGUN's per-block random subsets.
+pub fn block_subset(
+    k: usize,
+    blocks: usize,
+    per_block: Vec<usize>,
+    seed: u64,
+) -> Box<dyn Select> {
+    Box::new(BlockSubset {
+        rng: policy_rng(seed),
+        k,
+        blocks,
+        per_block,
+    })
 }
 
 #[cfg(test)]
@@ -123,10 +295,11 @@ mod tests {
 
     #[test]
     fn cyclic_wraps() {
-        let mut s = Selector::Cyclic { next: 0, k: 3 };
+        let mut s = Cyclic { next: 0, k: 3 };
         let mut out = Vec::new();
         let seen: Vec<u32> = (0..7)
             .map(|_| {
+                out.clear();
                 s.select(&mut out);
                 out[0]
             })
@@ -136,13 +309,14 @@ mod tests {
 
     #[test]
     fn stochastic_in_range() {
-        let mut s = Selector::Stochastic {
+        let mut s = Stochastic {
             rng: Pcg64::seeded(1),
             k: 5,
         };
         let mut out = Vec::new();
         let mut hit = [false; 5];
         for _ in 0..200 {
+            out.clear();
             s.select(&mut out);
             assert_eq!(out.len(), 1);
             hit[out[0] as usize] = true;
@@ -153,7 +327,7 @@ mod tests {
     #[test]
     fn random_subset_distinct_and_sized() {
         for size in [1usize, 5, 20, 99, 200] {
-            let mut s = Selector::RandomSubset {
+            let mut s = RandomSubset {
                 rng: Pcg64::seeded(2),
                 k: 100,
                 size,
@@ -169,7 +343,7 @@ mod tests {
 
     #[test]
     fn all_selects_everything() {
-        let mut s = Selector::All { k: 7 };
+        let mut s = FullSet { k: 7 };
         let mut out = Vec::new();
         s.select(&mut out);
         assert_eq!(out, (0..7).collect::<Vec<u32>>());
@@ -184,12 +358,13 @@ mod tests {
         let m = b.build();
         let coloring = color_features(&m, Strategy::Greedy, 1);
         let classes = coloring.classes.clone();
-        let mut s = Selector::RandomColor {
+        let mut s = RandomColor {
             rng: Pcg64::seeded(3),
             coloring,
         };
         let mut out = Vec::new();
         for _ in 0..20 {
+            out.clear();
             s.select(&mut out);
             assert!(
                 classes.iter().any(|c| c == &out),
@@ -200,7 +375,7 @@ mod tests {
 
     #[test]
     fn block_subset_respects_blocks() {
-        let mut s = Selector::BlockSubset {
+        let mut s = BlockSubset {
             rng: Pcg64::seeded(4),
             k: 100,
             blocks: 4,
@@ -219,9 +394,9 @@ mod tests {
 
     #[test]
     fn expected_sizes() {
-        assert_eq!(Selector::All { k: 9 }.expected_size(), 9.0);
+        assert_eq!(FullSet { k: 9 }.expected_size(), 9.0);
         assert_eq!(
-            Selector::RandomSubset {
+            RandomSubset {
                 rng: Pcg64::seeded(1),
                 k: 10,
                 size: 25
@@ -229,5 +404,49 @@ mod tests {
             .expected_size(),
             10.0
         );
+    }
+
+    #[test]
+    fn boxed_constructors_match_struct_policies() {
+        // the boxed constructors must replay the exact stream of the
+        // struct form seeded through POLICY_STREAM (the bit-exactness
+        // contract that lets external code reproduce presets)
+        let mut boxed = random_subset(200, 9, 42);
+        let mut plain = RandomSubset {
+            rng: Pcg64::new(42, POLICY_STREAM),
+            k: 200,
+            size: 9,
+        };
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for _ in 0..50 {
+            a.clear();
+            b.clear();
+            boxed.select(&mut a);
+            plain.select(&mut b);
+            assert_eq!(a, b);
+        }
+        assert_eq!(boxed.name(), "random-subset");
+    }
+
+    #[test]
+    fn custom_policy_implements_trait() {
+        // an out-of-crate-style custom policy: every third coordinate
+        struct EveryThird {
+            k: usize,
+        }
+        impl Select for EveryThird {
+            fn select(&mut self, out: &mut Vec<u32>) {
+                out.clear();
+                out.extend((0..self.k as u32).step_by(3));
+            }
+            fn expected_size(&self) -> f64 {
+                (self.k as f64 / 3.0).ceil()
+            }
+        }
+        let mut s: Box<dyn Select> = Box::new(EveryThird { k: 10 });
+        let mut out = Vec::new();
+        s.select(&mut out);
+        assert_eq!(out, vec![0, 3, 6, 9]);
+        assert_eq!(s.name(), "custom");
     }
 }

@@ -7,17 +7,71 @@
 //! (CCD/SCD, SHOTGUN, THREAD-GREEDY, GREEDY, COLORING), built as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the shared-memory coordinator: selection
-//!   policies, parallel propose workers, accept policies, atomic
-//!   updates, coloring preprocessing, datasets, metrics, CLI.
+//! * **L3 (this crate)** — the shared-memory coordinator: trait-based
+//!   selection/accept policies, parallel propose workers, atomic /
+//!   buffered / conflict-free updates, coloring preprocessing, datasets,
+//!   metrics, CLI.
 //! * **L2/L1 (python/, build-time only)** — the dense-block Propose /
 //!   objective / line-search compute graph in JAX calling Pallas
 //!   kernels, AOT-lowered to HLO text.
 //! * **runtime** — PJRT CPU client loading `artifacts/*.hlo.txt` so the
 //!   solve path never touches Python.
 //!
-//! Start with [`coordinator::driver`] or the `gencd` binary; see
-//! `examples/quickstart.rs`.
+//! ## Embedding the solver
+//!
+//! The paper's point is that GenCD is *generic*: the named algorithms
+//! are just (Select, Accept) policy pairs. The crate exposes exactly
+//! that genericity — [`Select`](coordinator::select::Select) and
+//! [`Accept`](coordinator::accept::Accept) are open traits, the eight
+//! presets are a thin catalogue over them
+//! ([`Algorithm`](coordinator::Algorithm)), and the typed
+//! [`Solver::builder`] is the front door:
+//!
+//! ```
+//! use gencd::prelude::*;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let ds = gencd::data::by_name("dorothea@0.01")?;
+//! let out = Solver::builder()
+//!     .dataset(ds)
+//!     .normalize(true)           // the paper's column normalization
+//!     .loss(Logistic)
+//!     .lambda(1e-4)
+//!     .algorithm(Algorithm::ThreadGreedy)
+//!     .threads(2)
+//!     .max_iters(100)
+//!     .build()?
+//!     .solve();
+//! assert!(out.objective.is_finite());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Custom policies implement the traits; per-iteration
+//! [`Observer`](coordinator::observer::Observer) hooks give early
+//! stopping, checkpointing and metric streaming. See
+//! [`solver`] and `examples/quickstart.rs`.
+//!
+//! ## Migration from the config-driven surface
+//!
+//! The TOML/CLI surface ([`coordinator::driver`], the `gencd` binary)
+//! is unchanged and now routes through the builder. For library use,
+//! migrate like this:
+//!
+//! | pre-0.2 (config-shaped)                              | 0.2 (builder)                                          |
+//! |------------------------------------------------------|--------------------------------------------------------|
+//! | `cfg.solver.algorithm = "shotgun".into()`            | `.algorithm(Algorithm::Shotgun)`                       |
+//! | `cfg.problem.lam = 1e-4`                             | `.lambda(1e-4)`                                        |
+//! | `cfg.problem.loss = "logistic".into()`               | `.loss(Logistic)`                                      |
+//! | `cfg.solver.threads = 8`                             | `.threads(8)`                                          |
+//! | `cfg.solver.update_path = "buffered".into()`         | `.update_path(UpdatePath::Buffered)`                   |
+//! | `driver::run(&cfg)?`                                 | `Solver::builder()…build()?.solve()`                   |
+//! | `engine::solve_from(&p, &s, Selector::Cyclic{..}, &ecfg, None)` | `.select(select::Cyclic{..})` or `engine::solve_from(&p, &s, sel, acc, &ecfg, EngineHooks::none())` |
+//! | `Algorithm::by_name("ccd")?` *(deprecated)*          | `"ccd".parse::<Algorithm>()?`                          |
+//! | history hardwired in the engine                      | `History` is the default [`Observer`](coordinator::observer::Observer); add your own with `.observer(..)` |
+//!
+//! Start with [`Solver::builder`], [`coordinator::driver`] for the
+//! config surface, or the `gencd` binary; see `examples/quickstart.rs`.
 
 pub mod bench_harness;
 pub mod cli;
@@ -28,7 +82,11 @@ pub mod data;
 pub mod eval;
 pub mod linalg;
 pub mod loss;
+pub mod prelude;
 pub mod runtime;
 pub mod simulate;
+pub mod solver;
 pub mod sparse;
 pub mod util;
+
+pub use solver::{Solver, SolverBuilder};

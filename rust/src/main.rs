@@ -70,7 +70,7 @@ SUBCOMMANDS
   train      --config FILE | --dataset NAME --algorithm ALG [--lam X]
              [--threads N] [--seconds S] [--line-search N] [--csv FILE]
              [--update-path auto|atomic|buffered|conflict-free]
-             [--set table.key=value]...
+             [--set table.key=value]...   (e.g. solver.buffer_budget_mb=512)
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
              [--seconds S] [--threads N]     (warm-started lambda path)
   eval       --dataset NAME [--test-frac F] [--model FILE | train flags]
@@ -157,7 +157,11 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
             gencd::coordinator::Problem::new(ds, loss, cfg.problem.lam);
         let rt = gencd::runtime::Runtime::from_default_dir()?;
         let mut proposer = gencd::runtime::HloProposer::new(&rt, &problem)?;
-        let ds = driver::load_dataset(&cfg)?; // problem consumed the first copy
+        // reload raw (problem consumed the first copy); run_on applies
+        // cfg.dataset.normalize exactly once
+        let mut raw = cfg.clone();
+        raw.dataset.normalize = false;
+        let ds = driver::load_dataset(&raw)?;
         driver::run_on(&cfg, ds, Some(&mut proposer))?
     } else {
         driver::run(&cfg)?
@@ -174,10 +178,8 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     }
     println!("{}", res.summary());
     if kkt {
-        let mut ds = driver::load_dataset(&cfg)?;
-        if cfg.dataset.normalize {
-            ds.x.normalize_columns();
-        }
+        // load_dataset already applied cfg.dataset.normalize
+        let ds = driver::load_dataset(&cfg)?;
         let problem = gencd::coordinator::Problem::new(
             ds,
             gencd::loss::by_name(&cfg.problem.loss)?,
@@ -224,9 +226,10 @@ fn cmd_path(args: &mut Args) -> anyhow::Result<()> {
         .unwrap_or_else(|| "reuters@0.05".into());
     let loss = args.value("loss").unwrap_or_else(|| "logistic".into());
     let cfg = gencd::coordinator::path::PathConfig {
-        algorithm: gencd::coordinator::Algorithm::by_name(
-            &args.value("algorithm").unwrap_or_else(|| "shotgun".into()),
-        )?,
+        algorithm: args
+            .value("algorithm")
+            .unwrap_or_else(|| "shotgun".into())
+            .parse()?,
         n_points: args.get("points", 10usize)?,
         min_ratio: args.get("min-ratio", 1e-3f64)?,
         threads: args.get("threads", 4usize)?,
@@ -266,10 +269,8 @@ fn cmd_eval(args: &mut Args) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
     args.finish()?;
 
-    let mut ds = driver::load_dataset(&cfg)?;
-    if cfg.dataset.normalize {
-        ds.x.normalize_columns();
-    }
+    // load_dataset already applied cfg.dataset.normalize
+    let ds = driver::load_dataset(&cfg)?;
     let (train, test) = gencd::eval::train_test_split(&ds, test_frac, split_seed);
     println!(
         "{}: {} train / {} test x {} features",

@@ -1,0 +1,23 @@
+//! One-stop imports for embedding GenCD:
+//! `use gencd::prelude::*;`
+//!
+//! Brings in the builder surface ([`Solver`], [`SolverBuilder`]), the
+//! extension-point traits ([`Select`], [`Accept`], [`Observer`]), the
+//! preset catalogue ([`Algorithm`]), the engine knobs most callers
+//! touch ([`UpdatePath`], [`EngineConfig`]), the losses, and the
+//! result types — plus [`ControlFlow`], which observers return.
+
+pub use crate::coordinator::accept::{Accept, AcceptContext, ThreadBest};
+pub use crate::coordinator::algorithms::{Algorithm, Preprocessed};
+pub use crate::coordinator::convergence::{History, Record, StopReason};
+pub use crate::coordinator::engine::{
+    EngineConfig, EngineHooks, SolveOutput, UpdatePath,
+};
+pub use crate::coordinator::metrics::MetricsSnapshot;
+pub use crate::coordinator::observer::{IterationInfo, Observer};
+pub use crate::coordinator::problem::{Problem, SharedState};
+pub use crate::coordinator::select::Select;
+pub use crate::loss::{Logistic, Loss, SmoothedHinge, Squared};
+pub use crate::solver::{Solver, SolverBuilder};
+pub use crate::sparse::{CooBuilder, CscMatrix};
+pub use std::ops::ControlFlow;

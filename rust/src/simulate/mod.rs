@@ -23,8 +23,23 @@
 //! (who scales, who saturates, who stays flat) — not absolute Opteron
 //! numbers.
 
-use crate::coordinator::accept::Acceptor;
 use crate::sparse::{CscMatrix, RowPattern};
+
+/// The *shape* of an accept policy, as the cost model sees it: which
+/// serial reduction term the leader pays. Decoupled from the live
+/// [`Accept`](crate::coordinator::accept::Accept) trait objects — the
+/// model only needs the synchronization structure, not the policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcceptShape {
+    /// Accept-everything (SHOTGUN, COLORING, CCD/SCD): no reduction.
+    All,
+    /// Per-thread best (THREAD-GREEDY): folded from padded slots.
+    PerThread,
+    /// Single global best (GREEDY): serial critical-section reduction.
+    Single,
+    /// Global top-K (§7): reduction plus a selection pass over |J|.
+    TopK,
+}
 
 /// Calibrated per-operation costs (seconds).
 #[derive(Clone, Copy, Debug)]
@@ -102,8 +117,8 @@ pub struct IterProfile {
     /// Mean accepted-set size |J'| at T threads (callers pass a closure
     /// result; THREAD-GREEDY accepts exactly T).
     pub accepted_of_t: fn(f64, usize) -> f64,
-    /// Accept policy (determines the serial reduction term).
-    pub acceptor: Acceptor,
+    /// Accept-policy shape (determines the serial reduction term).
+    pub acceptor: AcceptShape,
     /// Mean column nnz.
     pub mean_col_nnz: f64,
     /// Samples (dloss refresh size).
@@ -146,9 +161,9 @@ pub fn updates_per_sec(m: &CostModel, p: &IterProfile, threads: usize) -> f64 {
 
     // Accept: policy-dependent serial work on the leader.
     let accept = match p.acceptor {
-        Acceptor::All | Acceptor::ThreadGreedy => m.reduce_per_thread * tf * 0.25,
-        Acceptor::GlobalBest => m.reduce_per_thread * tf,
-        Acceptor::GlobalTopK(_) => {
+        AcceptShape::All | AcceptShape::PerThread => m.reduce_per_thread * tf * 0.25,
+        AcceptShape::Single => m.reduce_per_thread * tf,
+        AcceptShape::TopK => {
             m.reduce_per_thread * tf * 0.5 + p.selected * m.select_per_coord
         }
     };
@@ -188,7 +203,7 @@ mod tests {
     use super::*;
     use crate::sparse::CooBuilder;
 
-    fn profile(acceptor: Acceptor, selected: f64, accepted_of_t: fn(f64, usize) -> f64) -> IterProfile {
+    fn profile(acceptor: AcceptShape, selected: f64, accepted_of_t: fn(f64, usize) -> f64) -> IterProfile {
         IterProfile {
             selected,
             accepted_of_t,
@@ -203,8 +218,8 @@ mod tests {
     #[test]
     fn thread_greedy_scales_shotgun_saturates() {
         let m = CostModel::default();
-        let tg = profile(Acceptor::ThreadGreedy, 1024.0, accepted::per_thread);
-        let sg = profile(Acceptor::All, 23.0, accepted::all); // DOROTHEA P*
+        let tg = profile(AcceptShape::PerThread, 1024.0, accepted::per_thread);
+        let sg = profile(AcceptShape::All, 23.0, accepted::all); // DOROTHEA P*
         let tg_speedup = updates_per_sec(&m, &tg, 32) / updates_per_sec(&m, &tg, 1);
         let sg_speedup = updates_per_sec(&m, &sg, 32) / updates_per_sec(&m, &sg, 1);
         assert!(
@@ -218,8 +233,8 @@ mod tests {
     fn greedy_flattest() {
         // GREEDY's serial reduction caps scaling (paper Sec. 5.2)
         let m = CostModel::default();
-        let gr = profile(Acceptor::GlobalBest, 100_000.0, accepted::one);
-        let tg = profile(Acceptor::ThreadGreedy, 1024.0, accepted::per_thread);
+        let gr = profile(AcceptShape::Single, 100_000.0, accepted::one);
+        let tg = profile(AcceptShape::PerThread, 1024.0, accepted::per_thread);
         let gr_speedup = updates_per_sec(&m, &gr, 32) / updates_per_sec(&m, &gr, 1);
         let tg_speedup = updates_per_sec(&m, &tg, 32) / updates_per_sec(&m, &tg, 1);
         assert!(gr_speedup < tg_speedup);
@@ -233,8 +248,8 @@ mod tests {
     fn bigger_pstar_scales_further() {
         // REUTERS (P*=800) keeps gaining past where DOROTHEA (P*=23) stops
         let m = CostModel::default();
-        let small = profile(Acceptor::All, 23.0, accepted::all);
-        let large = profile(Acceptor::All, 800.0, accepted::all);
+        let small = profile(AcceptShape::All, 23.0, accepted::all);
+        let large = profile(AcceptShape::All, 800.0, accepted::all);
         let s = updates_per_sec(&m, &small, 32) / updates_per_sec(&m, &small, 8);
         let l = updates_per_sec(&m, &large, 32) / updates_per_sec(&m, &large, 8);
         assert!(l > s, "large-P* 8->32 gain {l} vs small {s}");
@@ -243,7 +258,7 @@ mod tests {
     #[test]
     fn coloring_zero_overlap_beats_contended() {
         let m = CostModel::default();
-        let mut contended = profile(Acceptor::All, 22.0, accepted::all);
+        let mut contended = profile(AcceptShape::All, 22.0, accepted::all);
         contended.pairwise_overlap = 0.5;
         let mut clean = contended.clone();
         clean.pairwise_overlap = 0.0; // coloring guarantee
@@ -278,7 +293,7 @@ mod tests {
     #[test]
     fn monotone_in_work() {
         let m = CostModel::default();
-        let p = profile(Acceptor::All, 100.0, accepted::all);
+        let p = profile(AcceptShape::All, 100.0, accepted::all);
         let mut heavier = p.clone();
         heavier.mean_col_nnz = 100.0;
         for t in [1, 4, 16] {

@@ -1,0 +1,752 @@
+//! The embeddable solver surface: [`Solver`] / [`SolverBuilder`].
+//!
+//! This is the front door for using GenCD as a *library* — no config
+//! files, no dataset registry, no CLI. Hand the builder a sparse design
+//! matrix and labels, pick either a named [`Algorithm`] preset or your
+//! own [`Select`]/[`Accept`] policies, and `build()` validates the
+//! combination before anything runs:
+//!
+//! ```
+//! use gencd::prelude::*;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // a toy 4x3 problem; real callers load/generate something bigger
+//! let mut b = gencd::sparse::CooBuilder::new(4, 3);
+//! for (i, j, v) in [(0, 0, 1.0), (1, 0, -1.0), (2, 1, 1.0), (3, 2, -1.0)] {
+//!     b.push(i, j, v);
+//! }
+//! let out = Solver::builder()
+//!     .matrix(b.build())
+//!     .labels(vec![1.0, -1.0, 1.0, -1.0])
+//!     .loss(Logistic)
+//!     .lambda(1e-4)
+//!     .algorithm(Algorithm::Scd)
+//!     .update_path(UpdatePath::Auto)
+//!     .max_iters(50)
+//!     .build()?
+//!     .solve();
+//! assert!(out.objective.is_finite());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Custom policies and per-iteration observers are first-class:
+//!
+//! ```
+//! use gencd::prelude::*;
+//!
+//! struct EveryThird { k: usize }
+//! impl Select for EveryThird {
+//!     fn select(&mut self, out: &mut Vec<u32>) {
+//!         out.extend((0..self.k as u32).step_by(3));
+//!     }
+//!     fn expected_size(&self) -> f64 { (self.k as f64 / 3.0).ceil() }
+//! }
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut b = gencd::sparse::CooBuilder::new(4, 6);
+//! for j in 0..6 { b.push(j % 4, j, 1.0); }
+//! let out = Solver::builder()
+//!     .matrix(b.build())
+//!     .labels(vec![1.0, -1.0, 1.0, -1.0])
+//!     .select(EveryThird { k: 6 })
+//!     .accept(gencd::coordinator::accept::AcceptAll)
+//!     .observer(|info: &IterationInfo<'_>| {
+//!         if info.iter >= 5 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+//!     })
+//!     .build()?
+//!     .solve();
+//! assert_eq!(out.stop, StopReason::Observer);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Validation happens at [`SolverBuilder::build`]: missing matrix or
+//! labels, label/row count mismatches, a preset combined with custom
+//! policies, conflict-free updates without a coloring guarantee, preset
+//! sizing knobs applied to custom policies, and malformed lambda /
+//! thread counts are all rejected with actionable messages *before* any
+//! threads spawn.
+
+use std::sync::Arc;
+
+use crate::coloring::Strategy;
+use crate::coordinator::accept::{self, Accept};
+use crate::coordinator::algorithms::{instantiate, Algorithm, Preprocessed};
+use crate::coordinator::engine::{
+    self, BlockProposer, EngineConfig, EngineHooks, SolveOutput, UpdatePath,
+};
+use crate::coordinator::observer::Observer;
+use crate::coordinator::problem::{Problem, SharedState};
+use crate::coordinator::select::Select;
+use crate::loss::{Logistic, Loss};
+use crate::sparse::io::Dataset;
+use crate::sparse::CscMatrix;
+
+/// A fully validated, ready-to-run GenCD solve. Construct with
+/// [`Solver::builder`]; run with [`Solver::solve`].
+pub struct Solver {
+    problem: Problem,
+    select: Box<dyn Select>,
+    accept: Box<dyn Accept>,
+    cfg: EngineConfig,
+    observer: Option<Box<dyn Observer>>,
+    pre: Arc<Preprocessed>,
+    algorithm: Option<Algorithm>,
+    warm_start: Option<Vec<f64>>,
+}
+
+impl Solver {
+    /// Start describing a solve.
+    pub fn builder() -> SolverBuilder {
+        SolverBuilder::default()
+    }
+
+    /// The preset this solver was built from (`None` for custom
+    /// policies).
+    pub fn algorithm(&self) -> Option<Algorithm> {
+        self.algorithm
+    }
+
+    /// Preprocessing outputs (P*, spectral radius, coloring) computed —
+    /// or injected — at build time.
+    pub fn preprocessing(&self) -> &Preprocessed {
+        &self.pre
+    }
+
+    /// The problem instance the solve will run on.
+    pub fn problem(&self) -> &Problem {
+        &self.problem
+    }
+
+    /// The resolved engine configuration.
+    pub fn engine_config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Run the solve to completion.
+    pub fn solve(self) -> SolveOutput {
+        self.solve_with(None)
+    }
+
+    /// Run with an optional custom Propose backend (the PJRT/HLO path).
+    pub fn solve_with(
+        self,
+        block_proposer: Option<&mut dyn BlockProposer>,
+    ) -> SolveOutput {
+        let state = SharedState::new(self.problem.n_samples(), self.problem.n_features());
+        self.run(&state, block_proposer)
+    }
+
+    /// Like [`solve_with`](Self::solve_with) but writes into
+    /// caller-owned [`SharedState`] (drift diagnostics, incremental
+    /// re-solves), optionally with a custom Propose backend.
+    ///
+    /// # Panics
+    ///
+    /// If the state's dimensions don't match the problem's (a
+    /// programming error, caught before any threads spawn).
+    pub fn solve_into(
+        self,
+        state: &SharedState,
+        block_proposer: Option<&mut dyn BlockProposer>,
+    ) -> SolveOutput {
+        assert_eq!(
+            state.z.len(),
+            self.problem.n_samples(),
+            "solve_into: state built for {} samples, problem has {}",
+            state.z.len(),
+            self.problem.n_samples()
+        );
+        assert_eq!(
+            state.w.len(),
+            self.problem.n_features(),
+            "solve_into: state built for {} features, problem has {}",
+            state.w.len(),
+            self.problem.n_features()
+        );
+        self.run(state, block_proposer)
+    }
+
+    /// Shared tail of every `solve*` entry point: apply the warm start,
+    /// assemble the hooks, run the engine.
+    fn run(
+        mut self,
+        state: &SharedState,
+        block_proposer: Option<&mut dyn BlockProposer>,
+    ) -> SolveOutput {
+        if let Some(w0) = &self.warm_start {
+            state.apply_warm_start(&self.problem, w0);
+        }
+        let hooks = EngineHooks {
+            observer: self.observer.as_deref_mut(),
+            block_proposer,
+        };
+        engine::solve_from(&self.problem, state, self.select, self.accept, &self.cfg, hooks)
+    }
+}
+
+/// Typed, validating builder for [`Solver`]. Every setter is chainable;
+/// [`build`](Self::build) rejects incompatible combinations.
+pub struct SolverBuilder {
+    matrix: Option<CscMatrix>,
+    labels: Option<Vec<f64>>,
+    loss: Box<dyn Loss>,
+    lambda: f64,
+    algorithm: Option<Algorithm>,
+    select: Option<Box<dyn Select>>,
+    accept: Option<Box<dyn Accept>>,
+    observer: Option<Box<dyn Observer>>,
+    preprocessed: Option<Arc<Preprocessed>>,
+    threads: usize,
+    seed: u64,
+    max_iters: usize,
+    max_seconds: f64,
+    tol: f64,
+    line_search_steps: usize,
+    log_every: usize,
+    select_size: usize,
+    accept_k: usize,
+    update_path: UpdatePath,
+    buffer_budget_mb: usize,
+    coloring_strategy: Strategy,
+    normalize: bool,
+    warm_start: Option<Vec<f64>>,
+}
+
+impl Default for SolverBuilder {
+    fn default() -> Self {
+        let ecfg = EngineConfig::default();
+        Self {
+            matrix: None,
+            labels: None,
+            loss: Box::new(Logistic),
+            lambda: 1e-4,
+            algorithm: None,
+            select: None,
+            accept: None,
+            observer: None,
+            preprocessed: None,
+            threads: 1,
+            seed: 1,
+            max_iters: ecfg.max_iters,
+            max_seconds: ecfg.max_seconds,
+            tol: ecfg.tol,
+            line_search_steps: ecfg.line_search_steps,
+            log_every: ecfg.log_every,
+            select_size: 0,
+            accept_k: 0,
+            update_path: UpdatePath::Auto,
+            buffer_budget_mb: ecfg.buffer_budget_mb,
+            coloring_strategy: Strategy::Greedy,
+            normalize: false,
+            warm_start: None,
+        }
+    }
+}
+
+impl SolverBuilder {
+    /// The design matrix X (samples x features, CSC).
+    pub fn matrix(mut self, x: CscMatrix) -> Self {
+        self.matrix = Some(x);
+        self
+    }
+
+    /// The label/target vector y (one entry per sample; ±1 for the
+    /// classification losses).
+    pub fn labels(mut self, y: Vec<f64>) -> Self {
+        self.labels = Some(y);
+        self
+    }
+
+    /// Convenience: matrix + labels from a loaded/generated [`Dataset`].
+    pub fn dataset(mut self, ds: Dataset) -> Self {
+        self.matrix = Some(ds.x);
+        self.labels = Some(ds.y);
+        self
+    }
+
+    /// The smooth loss (default [`Logistic`]).
+    pub fn loss(mut self, loss: impl Loss + 'static) -> Self {
+        self.loss = Box::new(loss);
+        self
+    }
+
+    /// Boxed-loss variant (for `loss::by_name` results).
+    pub fn boxed_loss(mut self, loss: Box<dyn Loss>) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    /// l1 regularization strength (default 1e-4).
+    pub fn lambda(mut self, lam: f64) -> Self {
+        self.lambda = lam;
+        self
+    }
+
+    /// Use a named preset from the paper's catalogue. Mutually exclusive
+    /// with [`select`](Self::select)/[`accept`](Self::accept).
+    pub fn algorithm(mut self, alg: Algorithm) -> Self {
+        self.algorithm = Some(alg);
+        self
+    }
+
+    /// Use a custom selection policy. Mutually exclusive with
+    /// [`algorithm`](Self::algorithm).
+    pub fn select(mut self, select: impl Select + 'static) -> Self {
+        self.select = Some(Box::new(select));
+        self
+    }
+
+    /// Use a custom accept policy (default: accept-all). Requires
+    /// [`select`](Self::select).
+    pub fn accept(mut self, accept: impl Accept + 'static) -> Self {
+        self.accept = Some(Box::new(accept));
+        self
+    }
+
+    /// Per-iteration observer hook (early stopping, checkpointing,
+    /// streaming metrics). Closures work:
+    /// `.observer(|info: &IterationInfo<'_>| ControlFlow::Continue(()))`.
+    pub fn observer(mut self, observer: impl Observer + 'static) -> Self {
+        self.observer = Some(Box::new(observer));
+        self
+    }
+
+    /// Inject already-computed preprocessing (P*, coloring) instead of
+    /// recomputing at build time — e.g. shared across a lambda path.
+    /// Takes `Preprocessed` or `Arc<Preprocessed>`; sharing an `Arc`
+    /// keeps injection O(1) (no deep copy of a coloring).
+    pub fn preprocessed(mut self, pre: impl Into<Arc<Preprocessed>>) -> Self {
+        self.preprocessed = Some(pre.into());
+        self
+    }
+
+    /// Worker thread count (default 1; the calling thread is worker 0).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Seed for the preset policies' RNG streams and preprocessing.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn max_iters(mut self, iters: usize) -> Self {
+        self.max_iters = iters;
+        self
+    }
+
+    pub fn max_seconds(mut self, secs: f64) -> Self {
+        self.max_seconds = secs;
+        self
+    }
+
+    /// Relative-improvement stop over logged objectives (0 disables).
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Sec. 4.1 refinement steps on accepted proposals.
+    pub fn line_search_steps(mut self, steps: usize) -> Self {
+        self.line_search_steps = steps;
+        self
+    }
+
+    /// Objective/NNZ log cadence in iterations (0 = time-based).
+    pub fn log_every(mut self, every: usize) -> Self {
+        self.log_every = every;
+        self
+    }
+
+    /// Preset selection-size override (0 = preset default, e.g. P* for
+    /// SHOTGUN). Rejected for custom policies.
+    pub fn select_size(mut self, size: usize) -> Self {
+        self.select_size = size;
+        self
+    }
+
+    /// TopK accept-budget override (0 = preset default). Rejected for
+    /// custom policies.
+    pub fn accept_k(mut self, k: usize) -> Self {
+        self.accept_k = k;
+        self
+    }
+
+    /// Update-phase z discipline (see
+    /// [`UpdatePath`]). `ConflictFree` is validated at build time.
+    pub fn update_path(mut self, path: UpdatePath) -> Self {
+        self.update_path = path;
+        self
+    }
+
+    /// Memory budget (MiB) for the buffered update path's dense
+    /// accumulators; past it, buffered iterations spill to sparse
+    /// per-thread maps.
+    pub fn buffer_budget_mb(mut self, mb: usize) -> Self {
+        self.buffer_budget_mb = mb;
+        self
+    }
+
+    /// Coloring strategy for the COLORING preset's preprocessing.
+    pub fn coloring_strategy(mut self, strategy: Strategy) -> Self {
+        self.coloring_strategy = strategy;
+        self
+    }
+
+    /// Column-normalize the matrix at build time (the paper's setting;
+    /// default `false` — the matrix is used exactly as given).
+    pub fn normalize(mut self, normalize: bool) -> Self {
+        self.normalize = normalize;
+        self
+    }
+
+    /// Start from this weight vector instead of zero.
+    pub fn warm_start(mut self, w0: Vec<f64>) -> Self {
+        self.warm_start = Some(w0);
+        self
+    }
+
+    /// Validate the full combination and assemble a runnable [`Solver`].
+    pub fn build(self) -> anyhow::Result<Solver> {
+        let mut x = self.matrix.ok_or_else(|| {
+            anyhow::anyhow!("SolverBuilder: no design matrix (use .matrix(x) or .dataset(ds))")
+        })?;
+        let y = self.labels.ok_or_else(|| {
+            anyhow::anyhow!("SolverBuilder: no labels (use .labels(y) or .dataset(ds))")
+        })?;
+        anyhow::ensure!(
+            y.len() == x.n_rows(),
+            "SolverBuilder: {} labels for a matrix with {} rows",
+            y.len(),
+            x.n_rows()
+        );
+        anyhow::ensure!(
+            self.lambda.is_finite() && self.lambda >= 0.0,
+            "SolverBuilder: lambda must be finite and >= 0, got {}",
+            self.lambda
+        );
+        anyhow::ensure!(
+            self.threads >= 1,
+            "SolverBuilder: threads must be >= 1 (the calling thread is worker 0)"
+        );
+        if let Some(w0) = &self.warm_start {
+            anyhow::ensure!(
+                w0.len() == x.n_cols(),
+                "SolverBuilder: warm start has {} weights for {} features",
+                w0.len(),
+                x.n_cols()
+            );
+        }
+
+        let custom = self.select.is_some() || self.accept.is_some();
+        anyhow::ensure!(
+            !(self.algorithm.is_some() && custom),
+            "SolverBuilder: .algorithm(..) and custom .select(..)/.accept(..) are \
+             mutually exclusive — presets already define both policies"
+        );
+        anyhow::ensure!(
+            !(self.accept.is_some() && self.select.is_none()),
+            "SolverBuilder: a custom .accept(..) needs a .select(..) policy too"
+        );
+        anyhow::ensure!(
+            self.algorithm.is_some() || self.select.is_some(),
+            "SolverBuilder: choose an .algorithm(..) preset or provide a custom \
+             .select(..) policy"
+        );
+        if custom {
+            anyhow::ensure!(
+                self.select_size == 0 && self.accept_k == 0,
+                "SolverBuilder: .select_size/.accept_k are preset sizing knobs; \
+                 size a custom policy directly"
+            );
+        }
+        // conflict-free plain stores are only sound when every z[i] has
+        // a unique writer per Update phase: COLORING's color classes or
+        // a single thread. A custom policy cannot prove that here.
+        anyhow::ensure!(
+            self.update_path != UpdatePath::ConflictFree
+                || self.threads <= 1
+                || self.algorithm == Some(Algorithm::Coloring),
+            "SolverBuilder: update_path = ConflictFree requires \
+             Algorithm::Coloring or threads = 1 (got {} with {} threads); \
+             use Buffered or Atomic",
+            self.algorithm
+                .map(|a| a.name().to_string())
+                .unwrap_or_else(|| "a custom policy".into()),
+            self.threads
+        );
+
+        if self.normalize {
+            x.normalize_columns();
+        }
+
+        let (pre, select, accept) = match self.algorithm {
+            Some(alg) => {
+                let pre = match self.preprocessed {
+                    Some(pre) => pre,
+                    None => Arc::new(Preprocessed::for_algorithm(
+                        alg,
+                        &x,
+                        self.coloring_strategy,
+                        self.seed,
+                    )),
+                };
+                let inst = instantiate(
+                    alg,
+                    x.n_cols(),
+                    self.threads,
+                    self.select_size,
+                    self.accept_k,
+                    &pre,
+                    self.seed,
+                )?;
+                (pre, inst.selector, inst.acceptor)
+            }
+            None => (
+                self.preprocessed
+                    .unwrap_or_else(|| Arc::new(Preprocessed::none())),
+                self.select.expect("validated above"),
+                self.accept.unwrap_or_else(accept::all),
+            ),
+        };
+
+        // COLORING's color classes are conflict-free: the paper's
+        // synchronization-free Update (Sec. 4.2). An explicit
+        // update_path still overrides.
+        let update_path = if self.update_path == UpdatePath::Auto
+            && self.algorithm == Some(Algorithm::Coloring)
+        {
+            UpdatePath::ConflictFree
+        } else {
+            self.update_path
+        };
+
+        let cfg = EngineConfig {
+            threads: self.threads,
+            line_search_steps: self.line_search_steps,
+            max_iters: self.max_iters,
+            max_seconds: self.max_seconds,
+            tol: self.tol,
+            log_every: self.log_every,
+            force_dloss: None,
+            update_path,
+            buffer_budget_mb: self.buffer_budget_mb,
+            ..Default::default()
+        };
+
+        let problem = Problem::new(
+            Dataset {
+                x,
+                y,
+                name: String::new(),
+            },
+            self.loss,
+            self.lambda,
+        );
+
+        Ok(Solver {
+            problem,
+            select,
+            accept,
+            cfg,
+            observer: self.observer,
+            pre,
+            algorithm: self.algorithm,
+            warm_start: self.warm_start,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::convergence::StopReason;
+    use crate::coordinator::observer::IterationInfo;
+    use crate::coordinator::select;
+    use crate::util::Pcg64;
+    use std::ops::ControlFlow;
+
+    fn small_xy(seed: u64, n: usize, k: usize) -> (CscMatrix, Vec<f64>) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut b = crate::sparse::CooBuilder::new(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                if rng.next_f64() < 0.3 {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let mut x = b.build();
+        x.normalize_columns();
+        let y = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn preset_builds_and_descends() {
+        let (x, y) = small_xy(1, 40, 20);
+        let out = Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .lambda(1e-3)
+            .algorithm(Algorithm::Scd)
+            .max_iters(300)
+            .max_seconds(20.0)
+            .build()
+            .unwrap()
+            .solve();
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{first} -> {}", out.objective);
+    }
+
+    #[test]
+    fn custom_select_with_default_accept() {
+        let (x, y) = small_xy(2, 30, 15);
+        let k = x.n_cols();
+        let out = Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .lambda(1e-3)
+            .select(select::Cyclic { next: 0, k })
+            .max_iters(200)
+            .max_seconds(20.0)
+            .build()
+            .unwrap()
+            .solve();
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first);
+    }
+
+    #[test]
+    fn observer_hook_streams_and_stops() {
+        let (x, y) = small_xy(3, 30, 15);
+        let k = x.n_cols();
+        let out = Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .select(select::Cyclic { next: 0, k })
+            .observer(|info: &IterationInfo<'_>| {
+                if info.iter >= 10 {
+                    ControlFlow::Break(())
+                } else {
+                    ControlFlow::Continue(())
+                }
+            })
+            .max_seconds(30.0)
+            .build()
+            .unwrap()
+            .solve();
+        assert_eq!(out.stop, StopReason::Observer);
+        assert_eq!(out.metrics.iterations, 10);
+    }
+
+    #[test]
+    fn coloring_preset_defaults_to_conflict_free() {
+        let (x, y) = small_xy(4, 30, 15);
+        let solver = Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .algorithm(Algorithm::Coloring)
+            .threads(4)
+            .build()
+            .unwrap();
+        assert_eq!(solver.engine_config().update_path, UpdatePath::ConflictFree);
+        assert!(solver.preprocessing().coloring.is_some());
+    }
+
+    #[test]
+    fn warm_start_resumes() {
+        let (x, y) = small_xy(5, 30, 15);
+        let k = x.n_cols();
+        let first = Solver::builder()
+            .matrix(x.clone())
+            .labels(y.clone())
+            .algorithm(Algorithm::Ccd)
+            .max_iters(100)
+            .max_seconds(20.0)
+            .build()
+            .unwrap()
+            .solve();
+        let resumed = Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .algorithm(Algorithm::Ccd)
+            .warm_start(first.w.clone())
+            .max_iters(k) // one sweep
+            .max_seconds(20.0)
+            .build()
+            .unwrap()
+            .solve();
+        assert!(resumed.objective <= first.objective + 1e-12);
+    }
+
+    #[test]
+    fn rejected_combinations() {
+        let (x, y) = small_xy(6, 10, 5);
+        let base = || {
+            Solver::builder()
+                .matrix(x.clone())
+                .labels(y.clone())
+                .algorithm(Algorithm::Scd)
+        };
+        // no matrix
+        assert!(Solver::builder().labels(y.clone()).build().is_err());
+        // no labels
+        assert!(Solver::builder()
+            .matrix(x.clone())
+            .algorithm(Algorithm::Scd)
+            .build()
+            .is_err());
+        // label count mismatch
+        assert!(Solver::builder()
+            .matrix(x.clone())
+            .labels(vec![1.0; 3])
+            .algorithm(Algorithm::Scd)
+            .build()
+            .is_err());
+        // neither preset nor custom select
+        assert!(Solver::builder()
+            .matrix(x.clone())
+            .labels(y.clone())
+            .build()
+            .is_err());
+        // preset + custom policy
+        assert!(base().select(select::Cyclic { next: 0, k: 5 }).build().is_err());
+        // custom accept without select
+        assert!(Solver::builder()
+            .matrix(x.clone())
+            .labels(y.clone())
+            .accept(accept::AcceptAll)
+            .build()
+            .is_err());
+        // conflict-free without coloring at >1 thread
+        assert!(base()
+            .threads(4)
+            .update_path(UpdatePath::ConflictFree)
+            .build()
+            .is_err());
+        // ... but fine single-threaded
+        assert!(base()
+            .threads(1)
+            .update_path(UpdatePath::ConflictFree)
+            .build()
+            .is_ok());
+        // sizing knobs on custom policies
+        assert!(Solver::builder()
+            .matrix(x.clone())
+            .labels(y.clone())
+            .select(select::Cyclic { next: 0, k: 5 })
+            .select_size(3)
+            .build()
+            .is_err());
+        // bad lambda / threads / warm-start length
+        assert!(base().lambda(f64::NAN).build().is_err());
+        assert!(base().lambda(-1.0).build().is_err());
+        assert!(base().threads(0).build().is_err());
+        assert!(base().warm_start(vec![0.0; 2]).build().is_err());
+    }
+}

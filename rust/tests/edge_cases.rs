@@ -3,10 +3,10 @@
 //! behave sensibly, never hang or corrupt state.
 
 use gencd::config::RunConfig;
-use gencd::coordinator::accept::Acceptor;
+use gencd::coordinator::accept::AcceptAll;
 use gencd::coordinator::engine::{solve, EngineConfig};
 use gencd::coordinator::problem::Problem;
-use gencd::coordinator::select::Selector;
+use gencd::coordinator::select::Cyclic;
 use gencd::coordinator::driver::run_on;
 use gencd::loss::{Logistic, SmoothedHinge};
 use gencd::sparse::io::Dataset;
@@ -16,7 +16,6 @@ use gencd::util::Pcg64;
 fn cfg(iters: usize) -> EngineConfig {
     EngineConfig {
         threads: 2,
-        acceptor: Acceptor::All,
         max_iters: iters,
         max_seconds: 10.0,
         ..Default::default()
@@ -42,11 +41,11 @@ fn empty_columns_are_inert() {
         Box::new(Logistic),
         1e-3,
     );
-    let sel = Selector::Cyclic {
+    let sel = Cyclic {
         next: 0,
         k: p.n_features(),
     };
-    let out = solve(&p, sel, &cfg(60));
+    let out = solve(&p, sel, AcceptAll, &cfg(60));
     for j in [1usize, 2, 4, 5] {
         assert_eq!(out.w[j], 0.0, "empty column {j} must stay zero");
     }
@@ -66,8 +65,8 @@ fn single_sample_single_feature() {
         Box::new(Logistic),
         1e-4,
     );
-    let sel = Selector::Cyclic { next: 0, k: 1 };
-    let out = solve(&p, sel, &cfg(200));
+    let sel = Cyclic { next: 0, k: 1 };
+    let out = solve(&p, sel, AcceptAll, &cfg(200));
     assert!(out.w[0] > 0.0, "weight should move toward the label");
     assert!(out.objective < (2f64).ln());
 }
@@ -108,8 +107,8 @@ fn extreme_labels_stay_finite() {
         Box::new(gencd::loss::Squared),
         1e-3,
     );
-    let sel = Selector::Cyclic { next: 0, k: 3 };
-    let out = solve(&p, sel, &cfg(300));
+    let sel = Cyclic { next: 0, k: 3 };
+    let out = solve(&p, sel, AcceptAll, &cfg(300));
     assert!(out.objective.is_finite());
     assert!(out.w.iter().all(|w| w.is_finite()));
 }
@@ -227,8 +226,8 @@ fn hinge_gamma_variants_all_descend() {
             Box::new(SmoothedHinge { gamma }),
             1e-4,
         );
-        let sel = Selector::Cyclic { next: 0, k: 10 };
-        let out = solve(&p, sel, &cfg(200));
+        let sel = Cyclic { next: 0, k: 10 };
+        let out = solve(&p, sel, AcceptAll, &cfg(200));
         let first = out.history.records.first().unwrap().objective;
         assert!(
             out.objective <= first,

@@ -8,8 +8,8 @@ use gencd::config::RunConfig;
 use gencd::coordinator::engine::{self, BlockProposer, EngineConfig};
 use gencd::coordinator::problem::{Problem, SharedState};
 use gencd::coordinator::propose;
-use gencd::coordinator::select::Selector;
-use gencd::coordinator::accept::Acceptor;
+use gencd::coordinator::accept;
+use gencd::coordinator::select::RandomSubset;
 use gencd::data::{dorothea_like, GenOptions};
 use gencd::loss::Logistic;
 use gencd::runtime::{HloObjective, HloProposer, Manifest, Runtime};
@@ -101,20 +101,26 @@ fn full_solve_with_hlo_backend_descends() {
     let p = problem();
     let mut hlo = HloProposer::new(&rt, &p).expect("proposer");
 
-    let sel = Selector::RandomSubset {
+    let sel = RandomSubset {
         rng: Pcg64::seeded(3),
         k: p.n_features(),
         size: 32,
     };
     let cfg = EngineConfig {
         threads: 1,
-        acceptor: Acceptor::All,
         max_iters: 25,
         max_seconds: 60.0,
         ..Default::default()
     };
     let state = SharedState::new(p.n_samples(), p.n_features());
-    let out = engine::solve_from(&p, &state, sel, &cfg, Some(&mut hlo));
+    let out = engine::solve_from(
+        &p,
+        &state,
+        Box::new(sel),
+        accept::all(),
+        &cfg,
+        engine::EngineHooks::with_block_proposer(&mut hlo),
+    );
     let first = out.history.records.first().unwrap().objective;
     assert!(
         out.objective < first,

@@ -5,10 +5,10 @@
 //! and must leave the incremental residual `z` consistent with `w`
 //! (the `z_drift` invariant) after every run.
 
-use gencd::coordinator::accept::Acceptor;
-use gencd::coordinator::engine::{solve_from, EngineConfig, SolveOutput, UpdatePath};
+use gencd::coordinator::accept;
+use gencd::coordinator::engine::{solve_from, EngineConfig, EngineHooks, SolveOutput, UpdatePath};
 use gencd::coordinator::problem::{Problem, SharedState};
-use gencd::coordinator::select::Selector;
+use gencd::coordinator::select::{Cyclic, RandomSubset, Select};
 use gencd::loss::{Logistic, Squared};
 use gencd::sparse::io::Dataset;
 use gencd::sparse::CooBuilder;
@@ -58,28 +58,42 @@ fn run(
     iters: usize,
     cyclic: bool,
 ) -> (SolveOutput, f64) {
-    let sel = if cyclic {
-        Selector::Cyclic {
+    run_budget(problem, threads, path, seed, iters, cyclic, 1024)
+}
+
+/// [`run`] with an explicit buffered-update memory budget (MiB).
+#[allow(clippy::too_many_arguments)]
+fn run_budget(
+    problem: &Problem,
+    threads: usize,
+    path: UpdatePath,
+    seed: u64,
+    iters: usize,
+    cyclic: bool,
+    budget_mb: usize,
+) -> (SolveOutput, f64) {
+    let sel: Box<dyn Select> = if cyclic {
+        Box::new(Cyclic {
             next: 0,
             k: problem.n_features(),
-        }
+        })
     } else {
-        Selector::RandomSubset {
+        Box::new(RandomSubset {
             rng: Pcg64::seeded(seed),
             k: problem.n_features(),
             size: 6,
-        }
+        })
     };
     let cfg = EngineConfig {
         threads,
-        acceptor: Acceptor::All,
         max_iters: iters,
         max_seconds: 60.0,
         update_path: path,
+        buffer_budget_mb: budget_mb,
         ..Default::default()
     };
     let state = SharedState::new(problem.n_samples(), problem.n_features());
-    let out = solve_from(problem, &state, sel, &cfg, None);
+    let out = solve_from(problem, &state, sel, accept::all(), &cfg, EngineHooks::none());
     let drift = state.z_drift(problem);
     (out, drift)
 }
@@ -165,6 +179,41 @@ fn z_drift_invariant_all_paths() {
     }
 }
 
+/// The memory-budget spill path (buffered semantics without the dense
+/// `n * threads` accumulators) is just another discipline: bit-exact at
+/// T=1 single-coordinate selections, 1e-12 under 8-thread contention,
+/// z_drift-clean, and visibly engaged via the spill_iters counter.
+#[test]
+fn budget_spill_matches_other_paths() {
+    let problem = make_problem(14, 48, 24, true);
+    // T=1, cyclic: identical FP sequence => bit-exact against atomic
+    let (atomic, _) = run(&problem, 1, UpdatePath::Atomic, 3, 300, true);
+    let (spill, d_spill) = run_budget(&problem, 1, UpdatePath::Buffered, 3, 300, true, 0);
+    assert!(d_spill < 1e-9, "spill z drift {d_spill}");
+    assert_eq!(atomic.w, spill.w, "T=1 spill diverged bit-wise from atomic");
+    assert_eq!(
+        spill.metrics.spill_iters, spill.metrics.iterations,
+        "budget 0 must spill every iteration"
+    );
+    // 8 threads: reassociation-bounded agreement with the atomic path
+    let (atomic, _) = run(&problem, 8, UpdatePath::Atomic, 5, 25, false);
+    let (spill, d_spill) = run_budget(&problem, 8, UpdatePath::Buffered, 5, 25, false, 0);
+    assert!(d_spill < 1e-9, "mt spill z drift {d_spill}");
+    let max_diff = atomic
+        .w
+        .iter()
+        .zip(&spill.w)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(
+        max_diff <= 1e-12,
+        "atomic vs spill weights diverged by {max_diff}"
+    );
+    // a roomy budget keeps the dense path (no spilling)
+    let (dense, _) = run_budget(&problem, 4, UpdatePath::Buffered, 5, 25, false, 1024);
+    assert_eq!(dense.metrics.spill_iters, 0);
+}
+
 /// The solver config string plumbs through to the engine: a driver run
 /// with solver.update_path = buffered behaves and converges like the
 /// default, and an unknown name errors cleanly.
@@ -190,6 +239,12 @@ fn driver_respects_update_path_config() {
     let first = a.history.records.first().unwrap().objective;
     assert!(a.objective < first);
     assert!(b.objective < first);
+    // solver.buffer_budget_mb plumbs through: budget 0 spills, converges
+    let mut capped = mk("buffered");
+    capped.solver.buffer_budget_mb = 0;
+    let c = run_on(&capped, ds.clone(), None).unwrap();
+    assert!(c.objective < first);
+    assert_eq!(c.metrics.spill_iters, c.metrics.iterations);
     // conflict-free with a racy algorithm/thread combination is refused
     assert!(run_on(&mk("conflict-free"), ds.clone(), None).is_err());
     let mut single = mk("conflict-free");
