@@ -235,6 +235,100 @@ fn main() {
     println!("update/buffered-mt speedup vs CAS: {speedup:.2}x");
     report.push("update_buffered_vs_cas_speedup", speedup);
 
+    // ---- sharded replicas: private-z scatter + round reconcile --------------
+    // The shards dimension: each of `shards` pools scatters its column
+    // set into its OWN full-length z replica (plain stores, zero
+    // cross-shard traffic), then all fold replica deltas into the
+    // canonical z over aligned chunks and refresh the replicas — the
+    // per-round cost of gencd::shard's bulk-synchronous reconcile.
+    let shards = mt_threads;
+    let replicas: Vec<SyncF64Vec> = (0..shards).map(|_| SyncF64Vec::zeros(n)).collect();
+    let z_canon = SyncF64Vec::zeros(n);
+    let shard_barrier = SpinBarrier::new(shards);
+    let s_shard = bench_loop(0.5, 5, || {
+        std::thread::scope(|scope| {
+            let problem = &problem;
+            let replicas = &replicas;
+            let z_canon = &z_canon;
+            let shard_barrier = &shard_barrier;
+            for (t, cols) in mt_cols.iter().enumerate() {
+                scope.spawn(move || {
+                    // round: scatter into this shard's replica
+                    let rep = &replicas[t];
+                    for &j in cols {
+                        let (rows, vals) = problem.x.col(j);
+                        for (&i, &v) in rows.iter().zip(vals) {
+                            rep.add(i as usize, 1e-12 * v);
+                        }
+                    }
+                    shard_barrier.wait();
+                    // boundary: fold every replica's delta over my
+                    // aligned chunk, refresh all replicas
+                    for i in aligned_chunk(n, t, shards) {
+                        let base = z_canon.get(i);
+                        let mut acc = base;
+                        for rep in replicas {
+                            let d = rep.get(i) - base;
+                            if d != 0.0 {
+                                acc += d;
+                            }
+                        }
+                        for rep in replicas {
+                            if rep.get(i) != acc {
+                                rep.set(i, acc);
+                            }
+                        }
+                        if acc != base {
+                            z_canon.set(i, acc);
+                        }
+                    }
+                });
+            }
+        });
+    });
+    println!(
+        "update/sharded-mt  {:>9.2} ns/nnz ({} shards)  {s_shard}",
+        s_shard.best * 1e9 / mt_nnz as f64,
+        shards
+    );
+    report.push("update_sharded_mt_ns_per_nnz", s_shard.best * 1e9 / mt_nnz as f64);
+
+    // reconcile fold alone (replicas already scattered once: measures
+    // the O(n·S) boundary sweep the shard layer pays per round)
+    let s_rec = bench_loop(0.3, 5, || {
+        std::thread::scope(|scope| {
+            let replicas = &replicas;
+            let z_canon = &z_canon;
+            for t in 0..shards {
+                scope.spawn(move || {
+                    for i in aligned_chunk(n, t, shards) {
+                        let base = z_canon.get(i);
+                        let mut acc = base;
+                        for rep in replicas {
+                            let d = rep.get(i) - base;
+                            if d != 0.0 {
+                                acc += d;
+                            }
+                        }
+                        for rep in replicas {
+                            if rep.get(i) != acc {
+                                rep.set(i, acc);
+                            }
+                        }
+                        if acc != base {
+                            z_canon.set(i, acc);
+                        }
+                    }
+                });
+            }
+        });
+    });
+    println!(
+        "shard/reconcile    {:>9.2} ns/sample          {s_rec}",
+        s_rec.best * 1e9 / n as f64
+    );
+    report.push("shard_reconcile_ns_per_sample", s_rec.best * 1e9 / n as f64);
+
     // ---- phase barrier crossings: std::sync::Barrier vs SpinBarrier ---------
     const ROUNDS: usize = 2000;
     let s_std = bench_loop(0.3, 5, || {
@@ -325,11 +419,16 @@ fn main() {
     }
 
     let header = vec![
+        (
+            "comment".to_string(),
+            "\"measured by cargo bench --bench hotpath\"".to_string(),
+        ),
         ("workload".to_string(), "\"reuters@0.05\"".to_string()),
         ("n".to_string(), n.to_string()),
         ("k".to_string(), k.to_string()),
         ("nnz".to_string(), nnz.to_string()),
         ("mt_threads".to_string(), mt_threads.to_string()),
+        ("shards".to_string(), shards.to_string()),
     ];
     report.write_json(&header);
 }

@@ -251,6 +251,56 @@ pub fn print_fig2(threads_list: &[usize]) {
     }
 }
 
+/// Shard-scaling experiment (the `shards` dimension of the evaluation):
+/// the sharded execution layer vs the single pool at equal total thread
+/// budget, for both partitioning extremes. Everything here is
+/// *measured* (the sharded layer runs for real on one box; the
+/// cross-socket win it is built for shows up as reduced reconcile
+/// corrections under min-overlap partitioning).
+pub fn print_shard_scaling(shards_list: &[usize], threads: usize) {
+    let scale = bench_scale();
+    let budget = bench_budget();
+    println!(
+        "# Shard scaling (scale {scale}, {budget}s/run, {threads} total threads, shotgun)\n"
+    );
+    for (ds, lam) in paper_datasets() {
+        println!("## {}\n", ds.name);
+        let mut table = Table::new(&[
+            "shards",
+            "strategy",
+            "objective",
+            "nnz",
+            "updates/s",
+            "reconcile s",
+            "divergence",
+        ]);
+        for &s in shards_list {
+            let strategies: &[&str] = if s <= 1 {
+                &["contiguous"]
+            } else {
+                &["contiguous", "min-overlap"]
+            };
+            for strategy in strategies {
+                let mut cfg = bench_config(&ds.name, lam, Algorithm::Shotgun);
+                cfg.solver.threads = threads;
+                cfg.solver.shards = s;
+                cfg.solver.shard_strategy = (*strategy).into();
+                let res = run_on(&cfg, ds.clone(), None).expect("solve");
+                table.row(vec![
+                    s.to_string(),
+                    (*strategy).into(),
+                    format!("{:.6}", res.objective),
+                    res.nnz.to_string(),
+                    format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
+                    format!("{:.3}", res.metrics.reconcile_secs),
+                    format!("{:.3e}", res.metrics.replica_divergence),
+                ]);
+            }
+        }
+        println!("{}", table.render());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -107,6 +107,13 @@ pub struct SolverConfig {
     /// buffered iterations spill to sparse per-thread maps. See
     /// `engine::EngineConfig::buffer_budget_mb`.
     pub buffer_budget_mb: usize,
+    /// Shard count for the sharded execution layer (1 = single engine
+    /// pool). See `shard` and `SolverBuilder::shards`.
+    pub shards: usize,
+    /// Column partitioning strategy for `shards > 1`:
+    /// contiguous | round-robin | min-overlap. See
+    /// `shard::ShardStrategy`.
+    pub shard_strategy: String,
 }
 
 impl Default for SolverConfig {
@@ -126,6 +133,8 @@ impl Default for SolverConfig {
             backend: Backend::SparseRust,
             update_path: "auto".into(),
             buffer_budget_mb: 1024,
+            shards: 1,
+            shard_strategy: "contiguous".into(),
         }
     }
 }
@@ -219,6 +228,10 @@ impl RunConfig {
             ("solver", "buffer_budget_mb") => {
                 self.solver.buffer_budget_mb = as_usize(value)?
             }
+            ("solver", "shards") => self.solver.shards = as_usize(value)?.max(1),
+            ("solver", "shard_strategy") => {
+                self.solver.shard_strategy = as_str(value)?
+            }
             ("output", "csv") => self.csv = Some(as_str(value)?),
             ("", _) => anyhow::bail!("top-level key '{key}' not recognized"),
             _ => anyhow::bail!("unknown config key {table}.{key}"),
@@ -271,6 +284,22 @@ mod tests {
         assert_eq!(cfg3.solver.buffer_budget_mb, 64);
         cfg.set("solver.buffer_budget_mb", "0").unwrap();
         assert_eq!(cfg.solver.buffer_budget_mb, 0);
+        // sharding knobs: defaults, TOML, and --set override
+        assert_eq!(cfg.solver.shards, 1);
+        assert_eq!(cfg.solver.shard_strategy, "contiguous");
+        let cfg4 = RunConfig::from_toml(
+            "[solver]\nshards = 4\nshard_strategy = \"min-overlap\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg4.solver.shards, 4);
+        assert_eq!(cfg4.solver.shard_strategy, "min-overlap");
+        cfg.set("solver.shards", "2").unwrap();
+        cfg.set("solver.shard_strategy", "round-robin").unwrap();
+        assert_eq!(cfg.solver.shards, 2);
+        assert_eq!(cfg.solver.shard_strategy, "round-robin");
+        // shards = 0 clamps to 1 (like threads)
+        cfg.set("solver.shards", "0").unwrap();
+        assert_eq!(cfg.solver.shards, 1);
     }
 
     #[test]

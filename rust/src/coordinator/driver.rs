@@ -15,6 +15,7 @@ use crate::coloring::Strategy;
 use crate::config::{Backend, RunConfig};
 use crate::data;
 use crate::loss;
+use crate::shard::ShardStrategy;
 use crate::solver::Solver;
 use crate::sparse::io::Dataset;
 use crate::util::Timer;
@@ -87,9 +88,14 @@ pub fn run_on(
         "backend=hlo requires a block proposer (runtime::propose_backend) — \
          use gencd::runtime::HloProposer::from_manifest"
     );
+    anyhow::ensure!(
+        !(cfg.solver.shards > 1 && block_proposer.is_some()),
+        "backend=hlo binds to a single engine pool — set solver.shards = 1"
+    );
 
     let alg: Algorithm = cfg.solver.algorithm.parse()?;
     let strategy = Strategy::by_name(&cfg.solver.coloring_strategy)?;
+    let shard_strategy = ShardStrategy::by_name(&cfg.solver.shard_strategy)?;
     let loss = loss::by_name(&cfg.problem.loss)?;
     let update_path = UpdatePath::by_name(&cfg.solver.update_path)?;
     let dataset_name = ds.name.clone();
@@ -116,6 +122,8 @@ pub fn run_on(
         .coloring_strategy(strategy)
         .update_path(update_path)
         .buffer_budget_mb(cfg.solver.buffer_budget_mb)
+        .shards(cfg.solver.shards)
+        .shard_strategy(shard_strategy)
         .build()?;
     let preprocess_secs = pre_timer.elapsed_secs();
 
@@ -239,6 +247,28 @@ mod tests {
     fn unknown_algorithm_errors() {
         let cfg = base_cfg("adam");
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn sharded_config_flows_through() {
+        for strategy in ["contiguous", "round-robin", "min-overlap"] {
+            let mut cfg = base_cfg("shotgun");
+            cfg.solver.shards = 2;
+            cfg.solver.shard_strategy = strategy.into();
+            let res = run(&cfg).unwrap();
+            let first = res.history.records.first().unwrap().objective;
+            assert!(
+                res.objective < first,
+                "{strategy}: {} -> {}",
+                first,
+                res.objective
+            );
+            assert_eq!(res.metrics.shards, 2, "{strategy}");
+        }
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.shards = 2;
+        cfg.solver.shard_strategy = "voronoi".into();
+        assert!(run(&cfg).is_err(), "unknown strategy must be rejected");
     }
 
     #[test]

@@ -65,10 +65,12 @@
 //! * **buffered** — each worker scatters into a private dense
 //!   accumulator, then (after one extra barrier) all workers fold every
 //!   accumulator over disjoint cache-aligned chunks of `z` in one pass.
-//!   No CAS anywhere; costs one O(n·T/T) sweep, so it wins exactly when
-//!   the scatter volume `|J'| · mean_col_nnz` reaches the sample count
-//!   `n` — which is the `Auto` switch rule (mirroring the dloss
-//!   heuristic).
+//!   No CAS anywhere; costs one O(n·T/T) sweep, so it wins when the
+//!   scatter volume `|J'| · mean_col_nnz` reaches a machine-dependent
+//!   multiple of the sample count `n`. The multiple is *fitted at
+//!   startup* from the measured CAS-vs-plain-store cost ratio
+//!   ([`crate::util::atomic::cas_plain_ratio`]; the seed hardwired 1.0)
+//!   and reported as [`MetricsSnapshot::auto_switch_factor`].
 //!
 //! The dense accumulators cost `n * threads` doubles. Past the
 //! configured memory budget ([`EngineConfig::buffer_budget_mb`]) the
@@ -182,7 +184,12 @@ pub struct EngineConfig {
     /// Relative-improvement stop (0 disables). Applied over logged
     /// objectives, three consecutive hits required.
     pub tol: f64,
-    /// Log cadence in iterations; 0 = time-based (every ~50 ms).
+    /// Log cadence in iterations; 0 = time-based (every ~50 ms);
+    /// `usize::MAX` disables the engine's own objective log entirely —
+    /// no records, no divergence/tolerance stops from logging. The
+    /// sharded layer uses this: its pools must never stop unilaterally
+    /// (lockstep), and the global objective is logged by the shard
+    /// coordinator instead.
     pub log_every: usize,
     /// Force the gradient path: `Some(true)` = always precompute dloss,
     /// `Some(false)` = always on-the-fly, `None` = per-iteration
@@ -303,13 +310,10 @@ struct Plan {
     stop: Option<StopReason>,
 }
 
-/// Static contiguous chunk of `0..len` owned by thread `tid` of `t`.
-#[inline]
-pub fn chunk(len: usize, tid: usize, threads: usize) -> std::ops::Range<usize> {
-    let lo = len * tid / threads;
-    let hi = len * (tid + 1) / threads;
-    lo..hi
-}
+/// Static contiguous chunk of `0..len` owned by thread `tid` of `t` —
+/// re-exported from the canonical implementation in [`crate::util::par`]
+/// (the engine and the shard partitioner share one chunking helper).
+pub use crate::util::par::chunk;
 
 /// Phase barrier: compiles to nothing for single-thread runs (CCD/SCD
 /// and the Fig. 2 T=1 anchors run millions of tiny iterations), a
@@ -402,6 +406,28 @@ pub fn solve_from(
     // J' == J fast path: Update reads `selected` directly and the whole
     // Accept phase is skipped
     let passes_all = accept.passes_all();
+    // Fitted Auto switch (closes the ROADMAP open item): the buffered
+    // path trades |J'|·nnz̄ CAS adds for |J'|·nnz̄ plain stores plus an
+    // O(n·T) reduce sweep, so it wins when
+    //   |J'|·nnz̄ · (c_cas - c_plain) >= n · T · c_plain
+    // i.e. when |J'|·nnz̄ >= n · T / (ratio - 1) with
+    // ratio = c_cas / c_plain. The seed hardwired the factor to 1; here
+    // it is derived from the startup micro-calibration
+    // ([`crate::util::atomic::cas_plain_ratio`], measured once per
+    // process). The measured ratio is uncontended — contention only
+    // makes CAS worse — so the factor is clamped rather than trusted
+    // blindly. Calibration only runs when Auto at T > 1 can actually
+    // pick between the disciplines.
+    let (auto_cas_ratio, auto_switch_factor) =
+        if cfg.update_path == UpdatePath::Auto && threads > 1 {
+            let ratio = crate::util::atomic::cas_plain_ratio();
+            let factor = (threads as f64 / (ratio - 1.0).max(0.125)).clamp(0.25, 16.0);
+            (ratio, factor)
+        } else {
+            // forced paths and T = 1 take no Auto decision; keep the
+            // seed's neutral factor so reported numbers stay meaningful
+            (0.0, 1.0)
+        };
     // Dense buffered accumulators cost n doubles per thread; past the
     // configured budget the Spill mode takes over (no allocation here).
     let dense_fits = (n.saturating_mul(threads)).saturating_mul(8)
@@ -415,7 +441,7 @@ pub fn solve_from(
         UpdatePath::Buffered => true,
         UpdatePath::Auto => {
             let est = accept.accept_bound(select.expected_size().ceil() as usize, threads);
-            threads > 1 && est as f64 * mean_col_nnz >= n as f64
+            threads > 1 && est as f64 * mean_col_nnz >= auto_switch_factor * n as f64
         }
         UpdatePath::Atomic | UpdatePath::ConflictFree => false,
     };
@@ -507,6 +533,7 @@ pub fn solve_from(
                     &stats,
                     may_buffer,
                     dense_fits,
+                    auto_switch_factor,
                 );
             }
             barrier.wait();
@@ -747,12 +774,15 @@ pub fn solve_from(
     let z = state.z_snapshot();
     let objective = problem.objective(&w, &z);
     let stop = plan.read().unwrap().stop.unwrap_or(StopReason::MaxIters);
+    let mut snapshot = metrics.snapshot();
+    snapshot.auto_cas_ratio = auto_cas_ratio;
+    snapshot.auto_switch_factor = auto_switch_factor;
     SolveOutput {
         nnz: loss::nnz(&w),
         w,
         objective,
         history: leader_state.history,
-        metrics: metrics.snapshot(),
+        metrics: snapshot,
         stop,
         elapsed_secs: elapsed,
     }
@@ -784,7 +814,10 @@ struct LeaderState<'a> {
 /// [`UpdateMode`]. `may_buffer` says whether the engine allocated the
 /// dense per-thread accumulators; `dense_fits` whether the memory
 /// budget would even allow them (when not, buffered work spills to
-/// sparse per-thread maps).
+/// sparse per-thread maps). `switch_factor` is the fitted Auto-switch
+/// constant: buffered-style updates engage when
+/// `est_accept · mean_col_nnz >= switch_factor · n` (1.0 reproduces the
+/// seed's fixed rule).
 fn choose_update_mode(
     path: UpdatePath,
     threads: usize,
@@ -793,6 +826,7 @@ fn choose_update_mode(
     n: usize,
     may_buffer: bool,
     dense_fits: bool,
+    switch_factor: f64,
 ) -> UpdateMode {
     match path {
         UpdatePath::ConflictFree => UpdateMode::ConflictFree,
@@ -809,7 +843,7 @@ fn choose_update_mode(
             if threads <= 1 {
                 // every element trivially has a unique writer
                 UpdateMode::ConflictFree
-            } else if est_accept as f64 * mean_col_nnz >= n as f64 {
+            } else if est_accept as f64 * mean_col_nnz >= switch_factor * n as f64 {
                 // scatter volume reaches the sample count: the O(n)
                 // reduce sweep amortizes, CAS contention does not
                 if may_buffer {
@@ -840,6 +874,7 @@ fn plan_iteration(
     stats: &[CachePadded<SyncCell<WorkerStats>>],
     may_buffer: bool,
     dense_fits: bool,
+    switch_factor: f64,
 ) {
     let elapsed = ls.timer.elapsed_secs();
 
@@ -859,6 +894,7 @@ fn plan_iteration(
     // ---- objective log + divergence check ---------------------------
     let should_log = match cfg.log_every {
         0 => elapsed - ls.last_log_at >= 0.05 || ls.iter == 0,
+        usize::MAX => false,
         every => ls.iter % every == 0,
     };
     let mut objective = None;
@@ -978,6 +1014,7 @@ fn plan_iteration(
         problem.n_samples(),
         may_buffer,
         dense_fits,
+        switch_factor,
     );
     if plan.update == UpdateMode::Spill {
         metrics.spill_iters.fetch_add(1, Relaxed);
@@ -1378,46 +1415,87 @@ mod tests {
         use super::UpdatePath as P;
         // forced paths are forced
         assert_eq!(
-            choose_update_mode(P::Atomic, 8, 1000, 50.0, 100, true, true),
+            choose_update_mode(P::Atomic, 8, 1000, 50.0, 100, true, true, 1.0),
             M::Atomic
         );
         assert_eq!(
-            choose_update_mode(P::ConflictFree, 8, 1000, 50.0, 100, false, true),
+            choose_update_mode(P::ConflictFree, 8, 1000, 50.0, 100, false, true, 1.0),
             M::ConflictFree
         );
         assert_eq!(
-            choose_update_mode(P::Buffered, 1, 1, 1.0, 100, true, true),
+            choose_update_mode(P::Buffered, 1, 1, 1.0, 100, true, true, 1.0),
             M::Buffered
         );
         // forced buffered past the budget spills
         assert_eq!(
-            choose_update_mode(P::Buffered, 4, 200, 10.0, 1000, false, false),
+            choose_update_mode(P::Buffered, 4, 200, 10.0, 1000, false, false, 1.0),
             M::Spill
         );
         // auto: single thread is conflict-free
         assert_eq!(
-            choose_update_mode(P::Auto, 1, 1000, 50.0, 100, true, true),
+            choose_update_mode(P::Auto, 1, 1000, 50.0, 100, true, true, 1.0),
             M::ConflictFree
         );
         // auto: small scatter volume stays atomic
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 2, 10.0, 1000, true, true),
+            choose_update_mode(P::Auto, 4, 2, 10.0, 1000, true, true, 1.0),
             M::Atomic
         );
-        // auto: scatter volume >= n flips to buffered (when allocated)
+        // auto: scatter volume >= factor·n flips to buffered (when
+        // allocated)
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true, true),
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true, true, 1.0),
             M::Buffered
         );
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, true),
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, true, 1.0),
             M::Atomic
         );
         // auto over the budget: spill rather than CAS-per-nnz
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, false),
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, false, 1.0),
             M::Spill
         );
+        // the fitted factor moves the switch point: the same scatter
+        // volume stays atomic under a high factor and buffers under a
+        // low one
+        assert_eq!(
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true, true, 4.0),
+            M::Atomic
+        );
+        assert_eq!(
+            choose_update_mode(P::Auto, 4, 40, 10.0, 1000, true, true, 0.25),
+            M::Buffered
+        );
+    }
+
+    #[test]
+    fn auto_calibration_exposed_in_metrics() {
+        // a multi-threaded Auto solve reports the measured CAS ratio and
+        // the switch factor derived from it; forced paths report the
+        // neutral constants
+        let p = make_problem(30, 32, 16, true);
+        let sel = || RandomSubset {
+            rng: Pcg64::seeded(31),
+            k: p.n_features(),
+            size: 4,
+        };
+        let auto = solve(&p, sel(), AcceptAll, &cfg(4, 20));
+        assert!(
+            auto.metrics.auto_cas_ratio >= 1.0,
+            "ratio {} not calibrated",
+            auto.metrics.auto_cas_ratio
+        );
+        assert!(
+            (0.25..=16.0).contains(&auto.metrics.auto_switch_factor),
+            "factor {} outside clamp",
+            auto.metrics.auto_switch_factor
+        );
+        let mut forced = cfg(4, 20);
+        forced.update_path = UpdatePath::Atomic;
+        let atomic = solve(&p, sel(), AcceptAll, &forced);
+        assert_eq!(atomic.metrics.auto_cas_ratio, 0.0);
+        assert_eq!(atomic.metrics.auto_switch_factor, 1.0);
     }
 
     #[test]

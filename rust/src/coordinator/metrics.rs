@@ -53,6 +53,11 @@ impl Metrics {
             accept_secs: self.accept_nanos.load(Relaxed) as f64 * 1e-9,
             update_secs: self.update_nanos.load(Relaxed) as f64 * 1e-9,
             log_secs: self.log_nanos.load(Relaxed) as f64 * 1e-9,
+            auto_cas_ratio: 0.0,
+            auto_switch_factor: 0.0,
+            shards: 0,
+            reconcile_secs: 0.0,
+            replica_divergence: 0.0,
         }
     }
 }
@@ -71,6 +76,28 @@ pub struct MetricsSnapshot {
     pub accept_secs: f64,
     pub update_secs: f64,
     pub log_secs: f64,
+    /// Measured CAS-vs-plain-store cost ratio behind the fitted `Auto`
+    /// update-path switch (0 when the solve never calibrated: forced
+    /// paths or single-threaded runs).
+    pub auto_cas_ratio: f64,
+    /// The fitted switch constant actually used: `Auto` flips to
+    /// buffered when `|J'|·nnz̄ >= factor · n`. Calibrated runs derive
+    /// it from `auto_cas_ratio` and the thread count; uncalibrated runs
+    /// (forced paths, single-threaded) report the seed's neutral 1.0 —
+    /// test `auto_cas_ratio == 0` to detect those.
+    pub auto_switch_factor: f64,
+    /// Shard count of the execution layer that produced this snapshot
+    /// (0 for plain single-engine solves).
+    pub shards: u64,
+    /// Wall-clock seconds spent reconciling per-shard residual replicas
+    /// at round boundaries (max across shard leaders; 0 unsharded).
+    pub reconcile_secs: f64,
+    /// Largest reconcile correction ever applied to a sample *the shard
+    /// itself updated that round* — the magnitude of genuine
+    /// cross-shard write conflicts. 0 when shards touch disjoint
+    /// samples (a perfect min-overlap partition on block-structured
+    /// data), and 0 for unsharded or single-shard solves.
+    pub replica_divergence: f64,
 }
 
 impl MetricsSnapshot {

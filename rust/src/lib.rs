@@ -52,6 +52,49 @@
 //! stopping, checkpointing and metric streaming. See
 //! [`solver`] and `examples/quickstart.rs`.
 //!
+//! ## Execution layers
+//!
+//! The solve path is a stack of execution layers, each wrapping the one
+//! below and owning one scale of parallelism:
+//!
+//! | layer | unit of parallelism | shared state | synchronization |
+//! |-------|---------------------|--------------|-----------------|
+//! | [`coordinator::engine`] | worker threads in one pool | one `z`/`w` ([`SharedState`](coordinator::problem::SharedState)) | phase spin barriers |
+//! | [`shard`] (`SolverBuilder::shards(n)`) | one engine pool per column shard | per-shard `z` *replica* | round-boundary reconcile barrier |
+//! | future: NUMA pinning / distributed backends | sockets / machines | replica per domain | same reconcile contract |
+//!
+//! The engine scales until every worker hammering the same residual
+//! vector saturates one coherent memory domain; the shard layer
+//! ([`shard::engine::solve_sharded`]) removes that wall by giving each
+//! shard — a column subset chosen by a topology-aware partitioner
+//! ([`shard::ShardStrategy`]: contiguous, round-robin, or greedy
+//! sample-overlap minimization) — its own full engine pool and its own
+//! residual replica over a **zero-copy column-range view**
+//! ([`sparse::CscMatrix::col_range_view`]) of the design matrix,
+//! reconciling replicas once per lockstep round. A NUMA-pinning or
+//! distributed backend plugs in at the same seam: it only has to speak
+//! the reconcile contract, not the engine's phase protocol.
+//!
+//! ```no_run
+//! use gencd::prelude::*;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let ds = gencd::data::by_name("reuters@0.1")?;
+//! let out = Solver::builder()
+//!     .dataset(ds)
+//!     .normalize(true)
+//!     .algorithm(Algorithm::Shotgun)
+//!     .threads(8)                      // total, split across pools
+//!     .shards(2)                       // one pool + z replica each
+//!     .shard_strategy(ShardStrategy::MinOverlap)
+//!     .max_seconds(5.0)
+//!     .build()?
+//!     .solve();
+//! println!("divergence {:.2e}", out.metrics.replica_divergence);
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! ## Migration from the config-driven surface
 //!
 //! The TOML/CLI surface ([`coordinator::driver`], the `gencd` binary)
@@ -84,6 +127,7 @@ pub mod linalg;
 pub mod loss;
 pub mod prelude;
 pub mod runtime;
+pub mod shard;
 pub mod simulate;
 pub mod solver;
 pub mod sparse;

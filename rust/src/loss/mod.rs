@@ -19,6 +19,10 @@ pub trait Loss: Send + Sync {
     fn beta(&self) -> f64;
     /// Stable identifier (matches the python kernels' `loss` arg).
     fn name(&self) -> &'static str;
+    /// Boxed copy — the sharded execution layer gives each shard
+    /// sub-problem its own loss instance (`#[derive(Clone)]` plus
+    /// `Box::new(self.clone())` is the standard implementation).
+    fn clone_box(&self) -> Box<dyn Loss>;
 }
 
 /// Squared loss `(y - t)^2 / 2` — Lasso. Exact coordinate minimization
@@ -40,6 +44,10 @@ impl Loss for Squared {
     #[inline]
     fn beta(&self) -> f64 {
         1.0
+    }
+
+    fn clone_box(&self) -> Box<dyn Loss> {
+        Box::new(*self)
     }
 
     fn name(&self) -> &'static str {
@@ -77,6 +85,10 @@ impl Loss for Logistic {
     #[inline]
     fn beta(&self) -> f64 {
         0.25
+    }
+
+    fn clone_box(&self) -> Box<dyn Loss> {
+        Box::new(*self)
     }
 
     fn name(&self) -> &'static str {
@@ -126,6 +138,10 @@ impl Loss for SmoothedHinge {
     #[inline]
     fn beta(&self) -> f64 {
         1.0 / self.gamma
+    }
+
+    fn clone_box(&self) -> Box<dyn Loss> {
+        Box::new(*self)
     }
 
     fn name(&self) -> &'static str {
@@ -297,5 +313,15 @@ mod tests {
     fn by_name_lookup() {
         assert_eq!(by_name("logistic").unwrap().name(), "logistic");
         assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn clone_box_preserves_identity_and_params() {
+        for l in losses() {
+            let c = l.clone_box();
+            assert_eq!(c.name(), l.name());
+            assert_eq!(c.beta(), l.beta(), "{}", l.name());
+            assert_eq!(c.value(1.0, 0.3), l.value(1.0, 0.3));
+        }
     }
 }

@@ -52,6 +52,7 @@ fn run(args: &mut Args) -> anyhow::Result<()> {
         "table3" => cmd_table3(args),
         "fig1" => cmd_fig1(args),
         "fig2" => cmd_fig2(args),
+        "shards" => cmd_shards(args),
         "artifacts" => cmd_artifacts(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -70,6 +71,7 @@ SUBCOMMANDS
   train      --config FILE | --dataset NAME --algorithm ALG [--lam X]
              [--threads N] [--seconds S] [--line-search N] [--csv FILE]
              [--update-path auto|atomic|buffered|conflict-free]
+             [--shards N] [--shard-strategy contiguous|round-robin|min-overlap]
              [--set table.key=value]...   (e.g. solver.buffer_budget_mb=512)
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
              [--seconds S] [--threads N]     (warm-started lambda path)
@@ -81,6 +83,8 @@ SUBCOMMANDS
   table3     [--scale F] [--seconds S]     (paper Table 3)
   fig1       [--scale F] [--seconds S]     (paper Figure 1)
   fig2       [--scale F] [--seconds S] [--threads-list 1,2,4,...]
+  shards     [--scale F] [--seconds S] [--shards-list 1,2,4] [--threads N]
+             (sharded-layer scaling: per-shard replicas vs one pool)
   artifacts  [--dir PATH] [--smoke]
 
 Datasets: dorothea, reuters, optionally suffixed @scale (reuters@0.1),
@@ -123,6 +127,12 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(v) = args.value("update-path") {
         cfg.solver.update_path = v;
+    }
+    if let Some(v) = args.value("shards") {
+        cfg.solver.shards = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = args.value("shard-strategy") {
+        cfg.solver.shard_strategy = v;
     }
     if let Some(v) = args.value("csv") {
         cfg.csv = Some(v);
@@ -431,6 +441,20 @@ fn cmd_fig2(args: &mut Args) -> anyhow::Result<()> {
         .collect::<Result<_, _>>()?;
     args.finish()?;
     gencd::bench_harness::experiments::print_fig2(&threads);
+    Ok(())
+}
+
+fn cmd_shards(args: &mut Args) -> anyhow::Result<()> {
+    bench_env(args, 2.0)?;
+    let shards: Vec<usize> = args
+        .value("shards-list")
+        .unwrap_or_else(|| "1,2,4".into())
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let threads: usize = args.get("threads", 4)?;
+    args.finish()?;
+    gencd::bench_harness::experiments::print_shard_scaling(&shards, threads);
     Ok(())
 }
 

@@ -4,8 +4,9 @@
 //! Brings in the builder surface ([`Solver`], [`SolverBuilder`]), the
 //! extension-point traits ([`Select`], [`Accept`], [`Observer`]), the
 //! preset catalogue ([`Algorithm`]), the engine knobs most callers
-//! touch ([`UpdatePath`], [`EngineConfig`]), the losses, and the
-//! result types — plus [`ControlFlow`], which observers return.
+//! touch ([`UpdatePath`], [`EngineConfig`]), the sharded execution
+//! layer's surface ([`ShardStrategy`], [`ShardPlan`]), the losses, and
+//! the result types — plus [`ControlFlow`], which observers return.
 
 pub use crate::coordinator::accept::{Accept, AcceptContext, ThreadBest};
 pub use crate::coordinator::algorithms::{Algorithm, Preprocessed};
@@ -18,6 +19,7 @@ pub use crate::coordinator::observer::{IterationInfo, Observer};
 pub use crate::coordinator::problem::{Problem, SharedState};
 pub use crate::coordinator::select::Select;
 pub use crate::loss::{Logistic, Loss, SmoothedHinge, Squared};
+pub use crate::shard::{ShardPlan, ShardStrategy};
 pub use crate::solver::{Solver, SolverBuilder};
 pub use crate::sparse::{CooBuilder, CscMatrix};
 pub use std::ops::ControlFlow;

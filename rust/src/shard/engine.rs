@@ -1,0 +1,699 @@
+//! The sharded execution layer: one GenCD worker pool per shard, each
+//! against a **shard-local residual replica**, reconciled at iteration
+//! boundaries.
+//!
+//! # Why replicas
+//!
+//! The single-engine hot path already minimizes synchronization *within*
+//! one coherent memory domain (spin barriers, buffered scatters), but
+//! every worker still writes the same `z` array — across sockets that
+//! cross-domain traffic, not arithmetic, is the wall (the Shotgun
+//! shared-memory contention of Bradley et al. 2011, one level up).
+//! Sharding removes it structurally: shard `s` owns a column subset
+//! (a [`ShardPlan`](super::partition::ShardPlan)) and runs a complete,
+//! unmodified [`engine::solve_from`] pool against its own full-length
+//! `z` replica, so **no cache line is ever shared between shards inside
+//! a round**.
+//!
+//! # Bulk-synchronous rounds
+//!
+//! Every pool runs exactly one GenCD iteration per *round*. At the
+//! round boundary — delivered through the engine's own
+//! [`Observer`] hook, which runs on each pool's leader while that
+//! pool's workers are parked — the shards meet at a reconcile barrier
+//! and fold their replicas, buffered-reduce style (disjoint
+//! cache-aligned sample chunks, one owner per element, exactly the
+//! machinery of [`crate::util::par::aligned_chunk`]):
+//!
+//! ```text
+//!   z[i]  <-  z[i] + sum_s (z_s[i] - z[i])     (one owner per chunk)
+//!   z_s[i] <- z[i]                             (replicas refreshed)
+//! ```
+//!
+//! Within a round a shard sees only its *own* updates on top of the
+//! last reconciled residual — the same frozen-residual semantics the
+//! accept/line-search phases already assume for the buffered update
+//! path, now at shard granularity. Cross-shard corrections surface as
+//! [`MetricsSnapshot::replica_divergence`]; reconcile time as
+//! [`MetricsSnapshot::reconcile_secs`].
+//!
+//! # Lockstep stopping
+//!
+//! A pool that stopped on its own (time, iteration cap, divergence)
+//! would strand the other shards at the reconcile barrier, so the
+//! per-shard engines are configured to never stop themselves: all
+//! stopping decisions (round cap, wall clock, tolerance, divergence)
+//! are taken once per round by the shard-0 *coordinator* between
+//! barrier crossings and delivered to every pool simultaneously through
+//! the observer's `ControlFlow::Break`. The coordinator also owns the
+//! global convergence [`History`]: it gathers `w` across shards and
+//! evaluates the true global objective at the usual log cadence.
+//!
+//! # Single-shard exactness
+//!
+//! With one shard the reconcile degenerates to nothing — the replica
+//! *is* the canonical residual and is never rewritten — so a one-shard
+//! sharded solve replays the unsharded engine's floating-point sequence
+//! bit-exactly at T = 1 (pinned by `rust/tests/sharding.rs`).
+
+use std::ops::ControlFlow;
+
+use crate::coordinator::accept::Accept;
+use crate::coordinator::convergence::{History, Record, StopReason};
+use crate::coordinator::engine::{self, EngineConfig, EngineHooks, SolveOutput, UpdatePath};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::observer::{IterationInfo, Observer};
+use crate::coordinator::problem::{Problem, SharedState};
+use crate::coordinator::select::Select;
+use crate::loss;
+use crate::util::atomic::{SyncCell, SyncF64Vec};
+use crate::util::par::{aligned_chunk, CachePadded, SpinBarrier, DEFAULT_SPIN};
+use crate::util::Timer;
+
+/// Everything one shard's pool runs with: a sub-problem over the
+/// shard's columns (built on a zero-copy
+/// [`col_range_view`](crate::sparse::CscMatrix::col_range_view)), the
+/// local→global column map, and the shard-local policy pair
+/// (instantiated over the *local* column space, so all presets run
+/// sharded unchanged — their union is the effective global selection).
+pub struct ShardSpec {
+    /// Sub-problem: the shard's columns against the full sample space.
+    pub problem: Problem,
+    /// `cols[local] = global` column id (ascending).
+    pub cols: Vec<u32>,
+    /// Shard-local selection policy.
+    pub select: Box<dyn Select>,
+    /// Shard-local accept policy.
+    pub accept: Box<dyn Accept>,
+    /// Update discipline for this shard's pool (COLORING shards run
+    /// conflict-free: colorings only need to be valid *within* a shard,
+    /// since cross-shard writes land on different replicas).
+    pub update_path: UpdatePath,
+    /// Worker threads for this shard's pool (the shard's leader is
+    /// worker 0 of its pool; 0 is treated as 1). Per-spec so a total
+    /// thread budget can be split unevenly — the builder hands the
+    /// first `total % shards` pools one extra worker each.
+    pub threads: usize,
+}
+
+/// Knobs of a sharded solve (the cross-shard analogue of
+/// [`EngineConfig`]; per-pool knobs are derived from it — pool thread
+/// counts live on each [`ShardSpec`]).
+#[derive(Clone, Debug)]
+pub struct ShardedConfig {
+    pub line_search_steps: usize,
+    /// Round cap (a round is one lockstep GenCD iteration per shard).
+    pub max_rounds: usize,
+    pub max_seconds: f64,
+    /// Relative-improvement stop over the *global* objective log
+    /// (0 disables; three consecutive hits, like the engine).
+    pub tol: f64,
+    /// Global-objective log cadence in rounds; 0 = time-based (~50 ms).
+    pub log_every: usize,
+    /// Total buffered-update memory budget, divided across the shard
+    /// pools so the whole sharded solve honors one figure.
+    pub buffer_budget_mb: usize,
+    pub barrier_spin: u32,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        Self {
+            line_search_steps: 0,
+            max_rounds: usize::MAX,
+            max_seconds: 10.0,
+            tol: 0.0,
+            log_every: 0,
+            buffer_budget_mb: 1024,
+            barrier_spin: DEFAULT_SPIN,
+        }
+    }
+}
+
+/// Cross-shard shared state: the reconcile barrier, the canonical
+/// residual, the stop decision, and per-shard padded metric slots
+/// (unique writer per slot, read by the coordinator after a barrier).
+struct ReconcileShared<'a> {
+    barrier: SpinBarrier,
+    states: &'a [SharedState],
+    /// Canonical reconciled residual (untouched in single-shard runs —
+    /// there the replica itself is canonical).
+    z_canon: SyncF64Vec,
+    /// Written by the coordinator between the 2nd and 3rd crossings of
+    /// a round, read by every shard after the 3rd.
+    stop: SyncCell<Option<StopReason>>,
+    /// Per-shard cumulative update counts (published each round for the
+    /// coordinator's history records).
+    updates: Vec<CachePadded<SyncCell<u64>>>,
+    /// Per-shard running max of reconcile corrections ever applied.
+    divergence: Vec<CachePadded<SyncCell<f64>>>,
+    /// Per-shard nanoseconds spent in the reconcile fold.
+    reconcile_nanos: Vec<CachePadded<SyncCell<u64>>>,
+    n: usize,
+}
+
+/// The canonical residual: the reconciled array, or the lone replica in
+/// single-shard runs.
+fn canonical_z(sh: &ReconcileShared<'_>) -> &SyncF64Vec {
+    if sh.states.len() == 1 {
+        &sh.states[0].z
+    } else {
+        &sh.z_canon
+    }
+}
+
+/// Leader-side bookkeeping owned by shard 0: the global objective log
+/// and every stopping decision.
+struct Coordinator<'a> {
+    global: &'a Problem,
+    cols: &'a [Vec<u32>],
+    timer: &'a Timer,
+    cfg: &'a ShardedConfig,
+    history: History,
+    scratch_w: Vec<f64>,
+    last_log_at: f64,
+    tol_hits: u32,
+}
+
+impl Coordinator<'_> {
+    /// Runs between the reconcile-publish and decision-publish barrier
+    /// crossings: every replica equals the reconciled residual, every
+    /// pool's workers are parked, every `w` is quiescent — so gathering
+    /// the global iterate is plain reads.
+    fn plan_round(&mut self, sh: &ReconcileShared<'_>, round: usize) -> Option<StopReason> {
+        let elapsed = self.timer.elapsed_secs();
+        let mut stop = None;
+        let should_log = match self.cfg.log_every {
+            0 => elapsed - self.last_log_at >= 0.05 || round == 0,
+            every => round % every == 0,
+        };
+        if should_log {
+            for (cols, st) in self.cols.iter().zip(sh.states) {
+                for (local, &g) in cols.iter().enumerate() {
+                    self.scratch_w[g as usize] = st.w.get(local);
+                }
+            }
+            let z = canonical_z(sh).snapshot();
+            let obj = loss::objective(
+                self.global.loss.as_ref(),
+                &self.global.y,
+                &z,
+                &self.scratch_w,
+                self.global.lam,
+            );
+            let updates: u64 = sh.updates.iter().map(|u| u.get()).sum();
+            self.history.push(Record {
+                elapsed_secs: elapsed,
+                iter: round,
+                updates,
+                objective: obj,
+                nnz: loss::nnz(&self.scratch_w),
+            });
+            self.last_log_at = elapsed;
+            if !obj.is_finite() || obj > 1e12 {
+                stop = Some(StopReason::Diverged);
+            }
+            if stop.is_none() && self.cfg.tol > 0.0 {
+                if self.history.last_rel_improvement().abs() < self.cfg.tol {
+                    self.tol_hits += 1;
+                } else {
+                    self.tol_hits = 0;
+                }
+                if self.tol_hits >= 3 {
+                    stop = Some(StopReason::Tolerance);
+                }
+            }
+        }
+        if stop.is_none() {
+            if round >= self.cfg.max_rounds {
+                stop = Some(StopReason::MaxIters);
+            } else if elapsed >= self.cfg.max_seconds {
+                stop = Some(StopReason::MaxSeconds);
+            }
+        }
+        stop
+    }
+}
+
+/// The per-shard observer: runs on each pool's leader at every round
+/// boundary and implements the three-crossing reconcile protocol
+/// (arrive → fold chunks → publish → decide → publish → read decision).
+struct ShardObserver<'a> {
+    s: usize,
+    shared: &'a ReconcileShared<'a>,
+    coordinator: Option<Coordinator<'a>>,
+}
+
+impl ShardObserver<'_> {
+    /// Fold every replica's round delta into the canonical residual
+    /// over this shard's cache-aligned sample chunk, then refresh all
+    /// replicas — disjoint chunks across shards, one writer per
+    /// element, the buffered-reduce discipline of `util::par`.
+    fn reconcile(&mut self) {
+        let sh = self.shared;
+        let shards = sh.states.len();
+        if shards == 1 {
+            // the replica is canonical; rewriting it (even with an
+            // a + (b - a) identity) would perturb bit-exactness
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        let mut div = sh.divergence[self.s].get();
+        for i in aligned_chunk(sh.n, self.s, shards) {
+            let base = sh.z_canon.get(i);
+            let mut acc = base;
+            for st in sh.states {
+                let d = st.z.get(i) - base;
+                if d != 0.0 {
+                    acc += d;
+                }
+            }
+            for st in sh.states {
+                let cur = st.z.get(i);
+                if cur != acc {
+                    // a replica that updated i itself (cur != base) and
+                    // still needs a correction saw a *conflicting*
+                    // cross-shard write — the divergence the
+                    // partitioner exists to minimize. Replicas merely
+                    // *learning* another shard's update (cur == base)
+                    // are the mechanism working as designed.
+                    if cur != base {
+                        let corr = (acc - cur).abs();
+                        if corr > div {
+                            div = corr;
+                        }
+                    }
+                    st.z.set(i, acc);
+                }
+            }
+            if acc != base {
+                sh.z_canon.set(i, acc);
+            }
+        }
+        sh.divergence[self.s].set(div);
+        let prev = sh.reconcile_nanos[self.s].get();
+        sh.reconcile_nanos[self.s].set(prev + t0.elapsed().as_nanos() as u64);
+    }
+}
+
+impl Observer for ShardObserver<'_> {
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ControlFlow<()> {
+        let sh = self.shared;
+        // own padded slot; published to the coordinator by the barrier
+        // chain below
+        sh.updates[self.s].set(info.updates);
+        // crossing 1: every shard finished the round; all replica
+        // updates are visible (each pool's end-of-update barrier chains
+        // into this one)
+        sh.barrier.wait();
+        self.reconcile();
+        // crossing 2: the reconciled residual is published everywhere
+        sh.barrier.wait();
+        if let Some(c) = self.coordinator.as_mut() {
+            let stop = c.plan_round(sh, info.iter);
+            sh.stop.set(stop);
+        }
+        // crossing 3: the stop decision is published
+        sh.barrier.wait();
+        if sh.stop.get().is_some() {
+            ControlFlow::Break(())
+        } else {
+            ControlFlow::Continue(())
+        }
+    }
+}
+
+/// Poisons the reconcile barrier if a shard pool unwinds, so the other
+/// pools panic out of their crossings instead of deadlocking on a shard
+/// that will never arrive (the cross-shard analogue of the engine's
+/// internal poison guard).
+struct PoisonReconcileOnPanic<'a>(&'a SpinBarrier);
+
+impl Drop for PoisonReconcileOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+/// Run a sharded GenCD solve: one engine pool per [`ShardSpec`], each
+/// with that spec's worker count, reconciled every round.
+///
+/// `global` supplies the objective's loss/labels/lambda and the full
+/// design matrix (used once for the warm-start residual); the per-shard
+/// math runs entirely on the specs' sub-problems. The output is shaped
+/// exactly like an unsharded [`SolveOutput`]: global `w`, global
+/// objective and history, aggregated metrics (plus the shard fields of
+/// [`MetricsSnapshot`]).
+///
+/// # Panics
+///
+/// If `specs` is empty, a spec's dimensions disagree with `global`, a
+/// column map holds an out-of-range or *duplicated* global column (two
+/// shards owning one column would silently double-count its residual
+/// contribution at every reconcile), or a warm start has the wrong
+/// length — programming errors, all caught before any threads spawn.
+/// The maps need not cover every column: uncovered columns simply stay
+/// at zero (the builder always produces an exact cover).
+pub fn solve_sharded(
+    global: &Problem,
+    specs: Vec<ShardSpec>,
+    warm_start: Option<&[f64]>,
+    cfg: &ShardedConfig,
+) -> SolveOutput {
+    let s_count = specs.len();
+    assert!(s_count >= 1, "solve_sharded: need at least one shard");
+    let n = global.n_samples();
+    let k = global.n_features();
+
+    // split the specs: column maps stay with the coordinator, the
+    // (problem, policies) move into the shard threads
+    let mut owned = vec![false; k];
+    let mut cols_all = Vec::with_capacity(s_count);
+    let mut runs = Vec::with_capacity(s_count);
+    for spec in specs {
+        assert_eq!(
+            spec.problem.n_features(),
+            spec.cols.len(),
+            "shard sub-problem columns != column map"
+        );
+        assert_eq!(spec.problem.n_samples(), n, "shard sample space mismatch");
+        for &g in &spec.cols {
+            let g = g as usize;
+            assert!(g < k, "shard column map holds column {g}, problem has {k}");
+            assert!(
+                !owned[g],
+                "column {g} appears in two shards' column maps — every column \
+                 must have exactly one owning shard"
+            );
+            owned[g] = true;
+        }
+        cols_all.push(spec.cols);
+        runs.push((
+            spec.problem,
+            spec.select,
+            spec.accept,
+            spec.update_path,
+            spec.threads.max(1),
+        ));
+    }
+
+    // one full-length residual replica per shard
+    let states: Vec<SharedState> = cols_all
+        .iter()
+        .map(|c| SharedState::new(n, c.len()))
+        .collect();
+    let z_canon = SyncF64Vec::zeros(n);
+    if let Some(w0) = warm_start {
+        assert_eq!(w0.len(), k, "warm start has {} weights for {k}", w0.len());
+        let z0 = global.x.matvec(w0);
+        z_canon.copy_from(&z0);
+        for (cols, st) in cols_all.iter().zip(&states) {
+            for (local, &g) in cols.iter().enumerate() {
+                st.w.set(local, w0[g as usize]);
+            }
+            st.z.copy_from(&z0);
+        }
+    }
+
+    let shared = ReconcileShared {
+        barrier: SpinBarrier::with_spin(s_count, cfg.barrier_spin),
+        states: &states,
+        z_canon,
+        stop: SyncCell::new(None),
+        updates: (0..s_count)
+            .map(|_| CachePadded::new(SyncCell::new(0u64)))
+            .collect(),
+        divergence: (0..s_count)
+            .map(|_| CachePadded::new(SyncCell::new(0.0f64)))
+            .collect(),
+        reconcile_nanos: (0..s_count)
+            .map(|_| CachePadded::new(SyncCell::new(0u64)))
+            .collect(),
+        n,
+    };
+    let timer = Timer::start();
+
+    // Per-pool engine config: pools never stop on their own — every
+    // stop (rounds, time, tolerance, divergence) is decided by the
+    // coordinator and delivered through the observer, keeping all pools
+    // on the same round (lockstep; see module docs). log_every = MAX
+    // confines each pool's private objective log to round 0.
+    let engine_cfg = |update_path: UpdatePath, threads: usize| EngineConfig {
+        threads,
+        line_search_steps: cfg.line_search_steps,
+        max_iters: usize::MAX,
+        max_seconds: f64::INFINITY,
+        tol: 0.0,
+        log_every: usize::MAX,
+        force_dloss: None,
+        update_path,
+        buffer_budget_mb: cfg.buffer_budget_mb / s_count,
+        barrier_spin: cfg.barrier_spin,
+    };
+
+    let mut outs: Vec<SolveOutput> = Vec::with_capacity(s_count);
+    let mut coord_history: Option<History> = None;
+    std::thread::scope(|scope| {
+        let shared = &shared;
+        let mut handles = Vec::with_capacity(s_count);
+        for (s, (problem, select, accept, update_path, threads)) in
+            runs.into_iter().enumerate()
+        {
+            let ecfg = engine_cfg(update_path, threads);
+            let coordinator = (s == 0).then(|| Coordinator {
+                global,
+                cols: &cols_all,
+                timer: &timer,
+                cfg,
+                history: History::default(),
+                scratch_w: vec![0.0; k],
+                last_log_at: -1.0,
+                tol_hits: 0,
+            });
+            let st = &states[s];
+            handles.push(scope.spawn(move || {
+                let _guard = PoisonReconcileOnPanic(&shared.barrier);
+                let mut obs = ShardObserver {
+                    s,
+                    shared,
+                    coordinator,
+                };
+                let out = engine::solve_from(
+                    &problem,
+                    st,
+                    select,
+                    accept,
+                    &ecfg,
+                    EngineHooks::with_observer(&mut obs),
+                );
+                (out, obs.coordinator.map(|c| c.history))
+            }));
+        }
+        for h in handles {
+            let (out, hist) = h.join().expect("shard pool panicked");
+            if let Some(hist) = hist {
+                coord_history = Some(hist);
+            }
+            outs.push(out);
+        }
+    });
+
+    // global iterate: shard-owned w entries mapped back through the
+    // column maps; the reconciled residual is already global
+    let mut w = vec![0.0; k];
+    for (cols, st) in cols_all.iter().zip(&states) {
+        for (local, &g) in cols.iter().enumerate() {
+            w[g as usize] = st.w.get(local);
+        }
+    }
+    let z = canonical_z(&shared).snapshot();
+    let objective = global.objective(&w, &z);
+
+    // aggregate metrics: counts sum across pools, phase seconds are
+    // summed leader CPU time, reconcile is the slowest leader's
+    // wall-clock share, iterations = completed rounds (identical on
+    // every pool by lockstep)
+    let mut agg = MetricsSnapshot {
+        iterations: outs[0].metrics.iterations,
+        shards: s_count as u64,
+        reconcile_secs: shared
+            .reconcile_nanos
+            .iter()
+            .map(|c| c.get())
+            .max()
+            .unwrap_or(0) as f64
+            * 1e-9,
+        replica_divergence: shared
+            .divergence
+            .iter()
+            .map(|c| c.get())
+            .fold(0.0, f64::max),
+        ..Default::default()
+    };
+    for o in &outs {
+        agg.updates += o.metrics.updates;
+        agg.proposals += o.metrics.proposals;
+        agg.propose_nnz += o.metrics.propose_nnz;
+        agg.spill_iters += o.metrics.spill_iters;
+        agg.select_secs += o.metrics.select_secs;
+        agg.propose_secs += o.metrics.propose_secs;
+        agg.accept_secs += o.metrics.accept_secs;
+        agg.update_secs += o.metrics.update_secs;
+        agg.log_secs += o.metrics.log_secs;
+        agg.auto_cas_ratio = agg.auto_cas_ratio.max(o.metrics.auto_cas_ratio);
+        agg.auto_switch_factor = agg.auto_switch_factor.max(o.metrics.auto_switch_factor);
+    }
+
+    SolveOutput {
+        nnz: loss::nnz(&w),
+        w,
+        objective,
+        history: coord_history.unwrap_or_default(),
+        metrics: agg,
+        stop: shared.stop.get().unwrap_or(StopReason::MaxIters),
+        elapsed_secs: timer.elapsed_secs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accept;
+    use crate::coordinator::select::Cyclic;
+    use crate::loss::Squared;
+    use crate::shard::partition::{partition, ShardStrategy};
+    use crate::sparse::io::Dataset;
+    use crate::sparse::CooBuilder;
+    use crate::util::Pcg64;
+
+    fn make_problem(seed: u64, n: usize, k: usize) -> Problem {
+        let mut rng = Pcg64::seeded(seed);
+        let mut b = CooBuilder::new(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                if rng.next_f64() < 0.3 {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let mut x = b.build();
+        x.normalize_columns();
+        let wstar: Vec<f64> = (0..k).map(|j| if j < 3 { 1.0 } else { 0.0 }).collect();
+        let y = x.matvec(&wstar);
+        Problem::new(
+            Dataset {
+                x,
+                y,
+                name: "shard-t".into(),
+            },
+            Box::new(Squared),
+            1e-3,
+        )
+    }
+
+    /// Cyclic-per-shard specs over a contiguous plan.
+    fn cyclic_specs(problem: &Problem, shards: usize) -> Vec<ShardSpec> {
+        let plan = partition(&problem.x, shards, ShardStrategy::Contiguous);
+        plan.shards
+            .iter()
+            .filter(|cols| !cols.is_empty())
+            .map(|cols| {
+                let lo = cols[0] as usize;
+                let hi = cols[cols.len() - 1] as usize + 1;
+                let view = problem.x.col_range_view(lo, hi);
+                let k_s = view.n_cols();
+                ShardSpec {
+                    problem: Problem::new(
+                        Dataset {
+                            x: view,
+                            y: problem.y.clone(),
+                            name: String::new(),
+                        },
+                        problem.loss.clone_box(),
+                        problem.lam,
+                    ),
+                    cols: cols.clone(),
+                    select: Box::new(Cyclic { next: 0, k: k_s }),
+                    accept: accept::all(),
+                    update_path: UpdatePath::Auto,
+                    threads: 1,
+                }
+            })
+            .collect()
+    }
+
+    fn sharded_cfg(rounds: usize) -> ShardedConfig {
+        ShardedConfig {
+            max_rounds: rounds,
+            max_seconds: 60.0,
+            log_every: 50,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_shard_descends_and_is_consistent() {
+        let p = make_problem(1, 30, 12);
+        let out = solve_sharded(&p, cyclic_specs(&p, 1), None, &sharded_cfg(240));
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{first} -> {}", out.objective);
+        assert_eq!(out.stop, StopReason::MaxIters);
+        assert_eq!(out.metrics.iterations, 240);
+        assert_eq!(out.metrics.shards, 1);
+        assert_eq!(out.metrics.replica_divergence, 0.0);
+        // w and the reported objective agree with a from-scratch z (up
+        // to incremental-z accumulation noise)
+        let z = p.x.matvec(&out.w);
+        assert!((p.objective(&out.w, &z) - out.objective).abs() < 1e-10);
+    }
+
+    #[test]
+    fn multi_shard_descends_and_reconciles() {
+        let p = make_problem(2, 40, 18);
+        let out = solve_sharded(&p, cyclic_specs(&p, 3), None, &sharded_cfg(300));
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{first} -> {}", out.objective);
+        assert_eq!(out.metrics.shards, 3);
+        // the reconciled residual must be exactly consistent with w (up
+        // to fp reassociation across rounds)
+        let z = p.x.matvec(&out.w);
+        assert!(
+            (p.objective(&out.w, &z) - out.objective).abs() < 1e-9,
+            "reconciled z inconsistent with w"
+        );
+        assert!(out.metrics.reconcile_secs >= 0.0);
+    }
+
+    #[test]
+    fn warm_start_resumes_sharded() {
+        let p = make_problem(3, 30, 12);
+        let first = solve_sharded(&p, cyclic_specs(&p, 2), None, &sharded_cfg(200));
+        let resumed = solve_sharded(
+            &p,
+            cyclic_specs(&p, 2),
+            Some(&first.w),
+            &sharded_cfg(50),
+        );
+        assert!(resumed.objective <= first.objective + 1e-12);
+    }
+
+    #[test]
+    fn round_cap_and_timeouts_stop_lockstep() {
+        let p = make_problem(4, 24, 10);
+        let out = solve_sharded(&p, cyclic_specs(&p, 2), None, &sharded_cfg(0));
+        assert_eq!(out.stop, StopReason::MaxIters);
+        assert_eq!(out.metrics.iterations, 0);
+        let mut cfg = sharded_cfg(usize::MAX);
+        cfg.max_seconds = 0.2;
+        let out = solve_sharded(&p, cyclic_specs(&p, 2), None, &cfg);
+        assert_eq!(out.stop, StopReason::MaxSeconds);
+        let mut cfg = sharded_cfg(usize::MAX);
+        cfg.max_seconds = 30.0;
+        cfg.tol = 1e-9;
+        cfg.log_every = 10;
+        let out = solve_sharded(&p, cyclic_specs(&p, 2), None, &cfg);
+        assert_eq!(out.stop, StopReason::Tolerance);
+    }
+}

@@ -1,0 +1,29 @@
+//! Sharded execution: multi-socket scaling through per-shard residual
+//! replicas.
+//!
+//! The layer between one shared-memory engine pool and a distributed
+//! backend (see the "Execution layers" section of the crate docs):
+//!
+//! * [`mod@partition`] — topology-aware column partitioning
+//!   ([`ShardStrategy`]: contiguous / round-robin / greedy
+//!   sample-overlap minimization à la Scherrer et al. 2013's feature
+//!   clustering), producing a [`ShardPlan`] that covers every column
+//!   exactly once.
+//! * [`engine`] — the bulk-synchronous orchestration
+//!   ([`engine::solve_sharded`]): one unmodified GenCD worker pool per
+//!   shard against a shard-local `z` replica (zero-copy column-range
+//!   views of the design matrix), reconciled at round boundaries with
+//!   the buffered-reduce machinery of [`crate::util::par`].
+//!
+//! Entry points: [`SolverBuilder::shards`](crate::solver::SolverBuilder::shards)
+//! / [`shard_strategy`](crate::solver::SolverBuilder::shard_strategy)
+//! for the builder surface, `solver.shards` / `solver.shard_strategy`
+//! in TOML, `--shards` / `--shard-strategy` on the CLI; or call
+//! [`engine::solve_sharded`] directly with hand-built
+//! [`engine::ShardSpec`]s.
+
+pub mod engine;
+pub mod partition;
+
+pub use engine::{solve_sharded, ShardSpec, ShardedConfig};
+pub use partition::{partition, ShardPlan, ShardStrategy};

@@ -1,0 +1,395 @@
+//! Topology-aware column partitioning: which shard owns which features.
+//!
+//! A [`ShardPlan`] assigns every column of the design matrix to exactly
+//! one shard. Three strategies are provided:
+//!
+//! * [`ShardStrategy::Contiguous`] — shard `s` of `S` owns the static
+//!   chunk `k·s/S .. k·(s+1)/S` (the engine's `schedule(static)`
+//!   division, via the shared [`crate::util::par::chunk`] helper).
+//!   Zero-copy views need no column permutation, and columns that are
+//!   adjacent on disk stay adjacent in a shard.
+//! * [`ShardStrategy::RoundRobin`] — column `j` goes to shard `j % S`.
+//!   Balances pathological column orderings (e.g. nnz sorted) at the
+//!   cost of scattering locality.
+//! * [`ShardStrategy::MinOverlap`] — greedy feature clustering in the
+//!   spirit of Scherrer et al. 2013: columns are placed (heaviest
+//!   first) on the shard whose already-touched sample set they overlap
+//!   **most**, under a per-shard column-count cap that keeps the
+//!   partition balanced — maximizing within-shard sample sharing is
+//!   what minimizes it *between* shards. Shards that rarely touch the
+//!   same samples make per-shard residual replicas cheap to reconcile —
+//!   a reconcile conflict on sample `i` happens only when two shards
+//!   both updated `i` in the same round.
+//!
+//! All strategies are deterministic (no RNG): a given matrix and shard
+//! count always produce the same plan, which the differential tests
+//! rely on.
+
+use crate::sparse::CscMatrix;
+use crate::util::par::chunk;
+
+/// Column-partitioning strategy for [`partition`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Static contiguous ranges (default; identity permutation).
+    Contiguous,
+    /// Column `j` to shard `j % shards`.
+    RoundRobin,
+    /// Greedy sample-overlap minimization (feature-clustering style).
+    MinOverlap,
+}
+
+impl ShardStrategy {
+    /// Every strategy, in catalogue order (name lists derive from this).
+    pub const ALL: [ShardStrategy; 3] = [
+        ShardStrategy::Contiguous,
+        ShardStrategy::RoundRobin,
+        ShardStrategy::MinOverlap,
+    ];
+
+    /// Resolve a CLI/TOML name (dashed or underscored).
+    pub fn by_name(s: &str) -> anyhow::Result<Self> {
+        let canon = s.replace('_', "-");
+        ShardStrategy::ALL
+            .iter()
+            .copied()
+            .find(|st| st.name() == canon)
+            .ok_or_else(|| {
+                let names: Vec<&str> =
+                    ShardStrategy::ALL.iter().map(|st| st.name()).collect();
+                anyhow::anyhow!("unknown shard strategy '{s}' ({})", names.join("|"))
+            })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardStrategy::Contiguous => "contiguous",
+            ShardStrategy::RoundRobin => "round-robin",
+            ShardStrategy::MinOverlap => "min-overlap",
+        }
+    }
+}
+
+impl std::str::FromStr for ShardStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ShardStrategy::by_name(s)
+    }
+}
+
+/// A complete column-to-shard assignment: `shards[s]` lists the global
+/// column ids shard `s` owns, in ascending order; concatenated they are
+/// a permutation of `0..n_cols`. Shards may be empty when
+/// `n_cols < shards` (callers typically drop those).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub n_cols: usize,
+    pub strategy: ShardStrategy,
+    pub shards: Vec<Vec<u32>>,
+}
+
+impl ShardPlan {
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The concatenated assignment — a permutation of `0..n_cols` that
+    /// makes every shard a contiguous range of the permuted matrix
+    /// (feed to [`CscMatrix::select_columns`]).
+    pub fn permutation(&self) -> Vec<u32> {
+        let mut p = Vec::with_capacity(self.n_cols);
+        for sh in &self.shards {
+            p.extend_from_slice(sh);
+        }
+        p
+    }
+
+    /// Whether the permutation is the identity (true for every
+    /// contiguous plan) — the zero-copy fast path needs no
+    /// column-gather copy at all.
+    pub fn is_identity(&self) -> bool {
+        let mut expect = 0u32;
+        for sh in &self.shards {
+            for &j in sh {
+                if j != expect {
+                    return false;
+                }
+                expect += 1;
+            }
+        }
+        expect as usize == self.n_cols
+    }
+
+    /// Check the exact-cover invariant: every column in exactly one
+    /// shard. Partitions are constructed correct; this is the cheap
+    /// guard external plans go through.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut seen = vec![false; self.n_cols];
+        let mut total = 0usize;
+        for (s, sh) in self.shards.iter().enumerate() {
+            for &j in sh {
+                let j = j as usize;
+                anyhow::ensure!(
+                    j < self.n_cols,
+                    "shard {s}: column {j} out of range ({} columns)",
+                    self.n_cols
+                );
+                anyhow::ensure!(!seen[j], "column {j} assigned to two shards");
+                seen[j] = true;
+                total += 1;
+            }
+        }
+        anyhow::ensure!(
+            total == self.n_cols,
+            "{total} columns assigned, expected {}",
+            self.n_cols
+        );
+        Ok(())
+    }
+
+    /// Mean number of *shards touching each nonempty sample* — the
+    /// replica-reconcile cost proxy (1.0 is perfect: no sample is
+    /// shared, reconcile corrections are all zero). Diagnostics for the
+    /// bench harness and the partitioner tests.
+    pub fn sample_overlap(&self, x: &CscMatrix) -> f64 {
+        let words = x.n_rows().div_ceil(64);
+        let mut counts = vec![0u32; x.n_rows()];
+        let mut touched = vec![0u64; words];
+        for sh in &self.shards {
+            touched.iter_mut().for_each(|w| *w = 0);
+            for &j in sh {
+                let (rows, _) = x.col(j as usize);
+                for &i in rows {
+                    let (w, b) = (i as usize / 64, i as usize % 64);
+                    if touched[w] >> b & 1 == 0 {
+                        touched[w] |= 1 << b;
+                        counts[i as usize] += 1;
+                    }
+                }
+            }
+        }
+        let (mut sum, mut nonempty) = (0u64, 0u64);
+        for &c in &counts {
+            if c > 0 {
+                sum += c as u64;
+                nonempty += 1;
+            }
+        }
+        if nonempty == 0 {
+            0.0
+        } else {
+            sum as f64 / nonempty as f64
+        }
+    }
+}
+
+/// Partition the columns of `x` into `shards` shards with the given
+/// strategy. `shards` must be >= 1; plans for `shards > n_cols` contain
+/// empty shards.
+pub fn partition(x: &CscMatrix, shards: usize, strategy: ShardStrategy) -> ShardPlan {
+    assert!(shards >= 1, "need at least one shard");
+    let k = x.n_cols();
+    let shard_cols = match strategy {
+        ShardStrategy::Contiguous => (0..shards)
+            .map(|s| chunk(k, s, shards).map(|j| j as u32).collect())
+            .collect(),
+        ShardStrategy::RoundRobin => {
+            let mut out = vec![Vec::with_capacity(k.div_ceil(shards)); shards];
+            for j in 0..k {
+                out[j % shards].push(j as u32);
+            }
+            out
+        }
+        ShardStrategy::MinOverlap => min_overlap(x, shards),
+    };
+    ShardPlan {
+        n_cols: k,
+        strategy,
+        shards: shard_cols,
+    }
+}
+
+/// Greedy sample-affinity clustering: minimizing the sample overlap
+/// *between* shards is the same as maximizing it *within* them, so each
+/// column (heaviest first — a heavy column constrains the clustering
+/// most, so it picks while there is still freedom) joins the non-full
+/// shard whose touched-sample set it overlaps **most**; shards thereby
+/// internalize sample sharing, which is exactly what makes their
+/// residual replicas cheap to reconcile. Ties go to the lighter shard
+/// (by nnz), then the lower shard index — fully deterministic. The
+/// per-shard cap `ceil(k / shards)` guarantees cover (sum of caps >= k)
+/// and column-count balance.
+fn min_overlap(x: &CscMatrix, shards: usize) -> Vec<Vec<u32>> {
+    let k = x.n_cols();
+    let cap = k.div_ceil(shards.max(1)).max(1);
+    let words = x.n_rows().div_ceil(64);
+    let mut order: Vec<u32> = (0..k as u32).collect();
+    order.sort_by_key(|&j| (std::cmp::Reverse(x.col_nnz(j as usize)), j));
+
+    let mut touched = vec![vec![0u64; words]; shards];
+    let mut load = vec![0usize; shards];
+    let mut out = vec![Vec::with_capacity(cap); shards];
+    for &j in &order {
+        let (rows, _) = x.col(j as usize);
+        let mut best = usize::MAX;
+        let mut best_overlap = 0usize;
+        for (s, bits) in touched.iter().enumerate() {
+            if out[s].len() >= cap {
+                continue;
+            }
+            let overlap = rows
+                .iter()
+                .filter(|&&i| bits[i as usize / 64] >> (i as usize % 64) & 1 == 1)
+                .count();
+            let better = best == usize::MAX
+                || overlap > best_overlap
+                || (overlap == best_overlap && load[s] < load[best]);
+            if better {
+                best = s;
+                best_overlap = overlap;
+            }
+        }
+        debug_assert!(best != usize::MAX, "cap guarantees a non-full shard");
+        out[best].push(j);
+        for &i in rows {
+            touched[best][i as usize / 64] |= 1 << (i as usize % 64);
+        }
+        load[best] += rows.len();
+    }
+    // ascending column order within a shard: deterministic views and
+    // monotone slab access in the permuted matrix
+    for sh in &mut out {
+        sh.sort_unstable();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+    use crate::util::Pcg64;
+
+    fn random_matrix(seed: u64, n: usize, k: usize, density: f64) -> CscMatrix {
+        let mut rng = Pcg64::seeded(seed);
+        let mut b = CooBuilder::new(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                if rng.next_f64() < density {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in ShardStrategy::ALL {
+            assert_eq!(ShardStrategy::by_name(s.name()).unwrap(), s);
+        }
+        assert_eq!(
+            "min_overlap".parse::<ShardStrategy>().unwrap(),
+            ShardStrategy::MinOverlap
+        );
+        assert!(ShardStrategy::by_name("magic").is_err());
+    }
+
+    #[test]
+    fn every_strategy_exactly_covers() {
+        // the partitioner invariant, incl. the k < shards edge case
+        for (n, k) in [(30usize, 17usize), (10, 3), (8, 1), (12, 40)] {
+            let x = random_matrix(k as u64, n, k, 0.3);
+            for shards in [1usize, 2, 3, 5, 8] {
+                for strategy in ShardStrategy::ALL {
+                    let plan = partition(&x, shards, strategy);
+                    assert_eq!(plan.n_shards(), shards);
+                    plan.validate().unwrap_or_else(|e| {
+                        panic!("{} k={k} S={shards}: {e}", strategy.name())
+                    });
+                    let mut perm = plan.permutation();
+                    perm.sort_unstable();
+                    assert_eq!(perm, (0..k as u32).collect::<Vec<_>>());
+                    // ascending within each shard
+                    for sh in &plan.shards {
+                        assert!(sh.windows(2).all(|w| w[0] < w[1]));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_is_identity_and_matches_chunk() {
+        let x = random_matrix(1, 20, 23, 0.2);
+        let plan = partition(&x, 4, ShardStrategy::Contiguous);
+        assert!(plan.is_identity());
+        for s in 0..4 {
+            let want: Vec<u32> =
+                crate::util::par::chunk(23, s, 4).map(|j| j as u32).collect();
+            assert_eq!(plan.shards[s], want);
+        }
+        let rr = partition(&x, 4, ShardStrategy::RoundRobin);
+        assert!(!rr.is_identity());
+        assert_eq!(rr.shards[1][0], 1);
+        assert_eq!(rr.shards[1][1], 5);
+    }
+
+    #[test]
+    fn min_overlap_balanced_and_capped() {
+        let x = random_matrix(7, 40, 30, 0.25);
+        for shards in [2usize, 3, 7] {
+            let plan = partition(&x, shards, ShardStrategy::MinOverlap);
+            plan.validate().unwrap();
+            let cap = 30usize.div_ceil(shards);
+            for sh in &plan.shards {
+                assert!(sh.len() <= cap, "shard over cap: {} > {cap}", sh.len());
+            }
+        }
+    }
+
+    #[test]
+    fn min_overlap_separates_block_diagonal() {
+        // two independent feature blocks touching disjoint sample
+        // halves: min-overlap must recover the blocks (sample_overlap
+        // 1.0) where round-robin mixes them (overlap ~2.0). Sliding
+        // 9-row windows (stride 3) guarantee every consecutive
+        // same-block column overlaps, so the greedy has no ambiguity.
+        let mut b = CooBuilder::new(40, 20);
+        for j in 0..20 {
+            let (base, jloc) = if j < 10 { (0, j) } else { (20, j - 10) };
+            for t in 0..9 {
+                b.push(base + (3 * jloc + t) % 20, j, 1.0 + j as f64);
+            }
+        }
+        let x = b.build();
+        let mo = partition(&x, 2, ShardStrategy::MinOverlap);
+        let rr = partition(&x, 2, ShardStrategy::RoundRobin);
+        let (o_mo, o_rr) = (mo.sample_overlap(&x), rr.sample_overlap(&x));
+        assert!(
+            (o_mo - 1.0).abs() < 1e-9,
+            "min-overlap should separate the blocks: overlap {o_mo}"
+        );
+        assert!(o_rr > 1.5, "round-robin should mix the blocks: {o_rr}");
+        // and each recovered shard is one block
+        for sh in &mo.shards {
+            let halves: std::collections::HashSet<bool> =
+                sh.iter().map(|&j| j < 10).collect();
+            assert_eq!(halves.len(), 1, "shard mixes blocks: {sh:?}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_broken_plans() {
+        let mk = |shards: Vec<Vec<u32>>| ShardPlan {
+            n_cols: 4,
+            strategy: ShardStrategy::Contiguous,
+            shards,
+        };
+        assert!(mk(vec![vec![0, 1], vec![2, 3]]).validate().is_ok());
+        assert!(mk(vec![vec![0, 1], vec![1, 2, 3]]).validate().is_err());
+        assert!(mk(vec![vec![0, 1], vec![3]]).validate().is_err());
+        assert!(mk(vec![vec![0, 1, 9], vec![2, 3]]).validate().is_err());
+    }
+}

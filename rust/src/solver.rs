@@ -80,6 +80,8 @@ use crate::coordinator::observer::Observer;
 use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::select::Select;
 use crate::loss::{Logistic, Loss};
+use crate::shard::engine::{solve_sharded, ShardSpec, ShardedConfig};
+use crate::shard::{partition, ShardStrategy};
 use crate::sparse::io::Dataset;
 use crate::sparse::CscMatrix;
 
@@ -94,6 +96,16 @@ pub struct Solver {
     pre: Arc<Preprocessed>,
     algorithm: Option<Algorithm>,
     warm_start: Option<Vec<f64>>,
+    /// Present for `shards > 1`: the per-shard sub-problems and
+    /// policies the sharded execution layer runs instead of the single
+    /// engine pool.
+    sharded: Option<ShardedSetup>,
+}
+
+/// Build-time output of the shard partitioning: everything
+/// [`crate::shard::engine::solve_sharded`] needs.
+struct ShardedSetup {
+    specs: Vec<ShardSpec>,
 }
 
 impl Solver {
@@ -124,16 +136,36 @@ impl Solver {
         &self.cfg
     }
 
+    /// Whether this solve runs through the sharded execution layer
+    /// (`shards > 1` at build time).
+    pub fn is_sharded(&self) -> bool {
+        self.sharded.is_some()
+    }
+
     /// Run the solve to completion.
     pub fn solve(self) -> SolveOutput {
         self.solve_with(None)
     }
 
     /// Run with an optional custom Propose backend (the PJRT/HLO path).
+    ///
+    /// # Panics
+    ///
+    /// If a block proposer is supplied for a sharded solve (`shards >
+    /// 1`): the HLO backend binds to a single engine pool. A
+    /// programming error, caught before any threads spawn.
     pub fn solve_with(
-        self,
+        mut self,
         block_proposer: Option<&mut dyn BlockProposer>,
     ) -> SolveOutput {
+        if let Some(setup) = self.sharded.take() {
+            assert!(
+                block_proposer.is_none(),
+                "sharded solves do not support a custom block proposer yet \
+                 (backend = hlo requires shards = 1)"
+            );
+            return self.run_sharded(setup);
+        }
         let state = SharedState::new(self.problem.n_samples(), self.problem.n_features());
         self.run(&state, block_proposer)
     }
@@ -144,13 +176,19 @@ impl Solver {
     ///
     /// # Panics
     ///
-    /// If the state's dimensions don't match the problem's (a
-    /// programming error, caught before any threads spawn).
+    /// If the state's dimensions don't match the problem's, or the
+    /// solver is sharded (`shards > 1` — per-shard state is managed
+    /// internally; use [`solve`](Self::solve)). Programming errors,
+    /// caught before any threads spawn.
     pub fn solve_into(
         self,
         state: &SharedState,
         block_proposer: Option<&mut dyn BlockProposer>,
     ) -> SolveOutput {
+        assert!(
+            self.sharded.is_none(),
+            "solve_into: sharded solves manage per-shard state internally — use solve()"
+        );
         assert_eq!(
             state.z.len(),
             self.problem.n_samples(),
@@ -184,6 +222,26 @@ impl Solver {
         };
         engine::solve_from(&self.problem, state, self.select, self.accept, &self.cfg, hooks)
     }
+
+    /// Sharded tail: hand the build-time shard setup to the sharded
+    /// execution layer, mapping the engine knobs onto round-level ones.
+    fn run_sharded(self, setup: ShardedSetup) -> SolveOutput {
+        let scfg = ShardedConfig {
+            line_search_steps: self.cfg.line_search_steps,
+            max_rounds: self.cfg.max_iters,
+            max_seconds: self.cfg.max_seconds,
+            tol: self.cfg.tol,
+            log_every: self.cfg.log_every,
+            buffer_budget_mb: self.cfg.buffer_budget_mb,
+            barrier_spin: self.cfg.barrier_spin,
+        };
+        solve_sharded(
+            &self.problem,
+            setup.specs,
+            self.warm_start.as_deref(),
+            &scfg,
+        )
+    }
 }
 
 /// Typed, validating builder for [`Solver`]. Every setter is chainable;
@@ -212,6 +270,8 @@ pub struct SolverBuilder {
     coloring_strategy: Strategy,
     normalize: bool,
     warm_start: Option<Vec<f64>>,
+    shards: usize,
+    shard_strategy: ShardStrategy,
 }
 
 impl Default for SolverBuilder {
@@ -241,6 +301,8 @@ impl Default for SolverBuilder {
             coloring_strategy: Strategy::Greedy,
             normalize: false,
             warm_start: None,
+            shards: 1,
+            shard_strategy: ShardStrategy::Contiguous,
         }
     }
 }
@@ -397,6 +459,27 @@ impl SolverBuilder {
         self
     }
 
+    /// Shard count for the sharded execution layer (default 1 = the
+    /// single engine pool). With `n > 1`, build() partitions the
+    /// columns ([`shard_strategy`](Self::shard_strategy)), instantiates
+    /// the preset per shard over its local columns, and the solve runs
+    /// one worker pool per shard against a shard-local residual replica
+    /// reconciled every iteration ([`crate::shard`]). Requires an
+    /// [`algorithm`](Self::algorithm) preset; [`threads`](Self::threads)
+    /// is the *total* worker count, divided across the shard pools.
+    /// Clamped to the column count.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Column-partitioning strategy for `shards > 1` (default
+    /// [`ShardStrategy::Contiguous`]).
+    pub fn shard_strategy(mut self, strategy: ShardStrategy) -> Self {
+        self.shard_strategy = strategy;
+        self
+    }
+
     /// Column-normalize the matrix at build time (the paper's setting;
     /// default `false` — the matrix is used exactly as given).
     pub fn normalize(mut self, normalize: bool) -> Self {
@@ -464,11 +547,34 @@ impl SolverBuilder {
                  size a custom policy directly"
             );
         }
+        anyhow::ensure!(
+            self.shards >= 1,
+            "SolverBuilder: shards must be >= 1 (1 = the single engine pool)"
+        );
+        // effective shard count: never more shards than columns
+        let shards = self.shards.min(x.n_cols().max(1));
+        if shards > 1 {
+            anyhow::ensure!(
+                self.algorithm.is_some(),
+                "SolverBuilder: shards > 1 instantiates the policy pair per shard, \
+                 which needs an .algorithm(..) preset — custom Select/Accept \
+                 policies run with shards = 1"
+            );
+            anyhow::ensure!(
+                self.observer.is_none(),
+                "SolverBuilder: per-iteration observers are not supported with \
+                 shards > 1 yet (the shard layer owns the round loop)"
+            );
+        }
         // conflict-free plain stores are only sound when every z[i] has
         // a unique writer per Update phase: COLORING's color classes or
         // a single thread. A custom policy cannot prove that here.
+        // (Sharded builds re-check per *pool* inside build_shard_specs,
+        // where each pool's thread count is known — shards write
+        // disjoint replicas, so only intra-pool conflicts matter.)
         anyhow::ensure!(
-            self.update_path != UpdatePath::ConflictFree
+            shards > 1
+                || self.update_path != UpdatePath::ConflictFree
                 || self.threads <= 1
                 || self.algorithm == Some(Algorithm::Coloring),
             "SolverBuilder: update_path = ConflictFree requires \
@@ -484,7 +590,47 @@ impl SolverBuilder {
             x.normalize_columns();
         }
 
+        // shards > 1: partition the (now-final) matrix and build each
+        // shard's zero-copy sub-problem + local policy pair
+        let sharded = if shards > 1 {
+            let alg = self.algorithm.expect("validated above");
+            Some(ShardedSetup {
+                specs: build_shard_specs(
+                    &x,
+                    &y,
+                    self.loss.as_ref(),
+                    self.lambda,
+                    alg,
+                    shards,
+                    self.shard_strategy,
+                    self.threads,
+                    self.select_size,
+                    self.accept_k,
+                    self.coloring_strategy,
+                    self.update_path,
+                    self.seed,
+                )?,
+            })
+        } else {
+            None
+        };
+
+        // Policy pair + preprocessing for the single-engine path. A
+        // sharded solve runs the per-shard pairs built above and never
+        // touches these, so skip the (potentially expensive) full-matrix
+        // preprocessing there — COLORING would otherwise pay a redundant
+        // whole-matrix coloring on every sharded build. An injected
+        // `.preprocessed(..)` is still surfaced through
+        // [`Solver::preprocessing`] either way.
         let (pre, select, accept) = match self.algorithm {
+            Some(_) if sharded.is_some() => (
+                self.preprocessed
+                    .unwrap_or_else(|| Arc::new(Preprocessed::none())),
+                // placeholders, never invoked (run_sharded consumes the
+                // per-shard specs); cheap to construct by design
+                crate::coordinator::select::full_set(x.n_cols()),
+                accept::all(),
+            ),
             Some(alg) => {
                 let pre = match self.preprocessed {
                     Some(pre) => pre,
@@ -557,8 +703,114 @@ impl SolverBuilder {
             pre,
             algorithm: self.algorithm,
             warm_start: self.warm_start,
+            sharded,
         })
     }
+}
+
+/// Partition `x` and build one [`ShardSpec`] per non-empty shard: a
+/// zero-copy column-range sub-problem (the plan is made contiguous
+/// first — identity plans view `x` directly, permuted plans pay one
+/// O(nnz) column gather), per-shard preprocessing (P* and colorings are
+/// computed on the shard's own columns: a coloring only has to be valid
+/// *within* a shard, since cross-shard updates land on different
+/// replicas), and the preset's policy pair instantiated over the local
+/// column space. Global knobs keep their global meaning: `select_size`
+/// / `accept_k` divide across the active shards, and `threads` is the
+/// total worker budget — each pool gets `threads / active`, with the
+/// first `threads % active` pools taking one extra so no requested
+/// worker is dropped.
+#[allow(clippy::too_many_arguments)]
+fn build_shard_specs(
+    x: &CscMatrix,
+    y: &[f64],
+    loss: &dyn Loss,
+    lambda: f64,
+    alg: Algorithm,
+    shards: usize,
+    strategy: ShardStrategy,
+    threads_total: usize,
+    select_size: usize,
+    accept_k: usize,
+    coloring_strategy: Strategy,
+    update_path: UpdatePath,
+    seed: u64,
+) -> anyhow::Result<Vec<ShardSpec>> {
+    let plan = partition(x, shards, strategy);
+    debug_assert!(plan.validate().is_ok());
+    let base = if plan.is_identity() {
+        x.clone()
+    } else {
+        x.select_columns(&plan.permutation())
+    };
+    let active = plan.shards.iter().filter(|c| !c.is_empty()).count().max(1);
+    let per_shard = |knob: usize| if knob > 0 { (knob / active).max(1) } else { 0 };
+    let pool_threads =
+        |pool: usize| (threads_total / active + usize::from(pool < threads_total % active)).max(1);
+    // conflict-free plain stores need a unique z-writer per element
+    // within each pool (cross-shard writes land on different replicas)
+    anyhow::ensure!(
+        update_path != UpdatePath::ConflictFree
+            || alg == Algorithm::Coloring
+            || pool_threads(0) <= 1,
+        "SolverBuilder: update_path = ConflictFree requires \
+         Algorithm::Coloring or one worker per shard pool (got {} with {} \
+         threads over {} shards); use Buffered or Atomic",
+        alg.name(),
+        threads_total,
+        active
+    );
+
+    let mut specs = Vec::with_capacity(active);
+    let mut lo = 0usize;
+    let mut pool = 0usize;
+    for (s, cols) in plan.shards.iter().enumerate() {
+        let hi = lo + cols.len();
+        let range = lo..hi;
+        lo = hi;
+        if cols.is_empty() {
+            continue;
+        }
+        let threads = pool_threads(pool);
+        pool += 1;
+        let view = base.col_range_view(range.start, range.end);
+        let pre = Preprocessed::for_algorithm(alg, &view, coloring_strategy, seed);
+        let inst = instantiate(
+            alg,
+            view.n_cols(),
+            threads,
+            per_shard(select_size),
+            per_shard(accept_k),
+            &pre,
+            // distinct deterministic policy stream per shard
+            seed.wrapping_add(s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )?;
+        // COLORING shards default to the paper's synchronization-free
+        // updates, like the unsharded builder path
+        let shard_update = if update_path == UpdatePath::Auto && alg == Algorithm::Coloring
+        {
+            UpdatePath::ConflictFree
+        } else {
+            update_path
+        };
+        specs.push(ShardSpec {
+            problem: Problem::new(
+                Dataset {
+                    x: view,
+                    y: y.to_vec(),
+                    name: String::new(),
+                },
+                loss.clone_box(),
+                lambda,
+            ),
+            cols: cols.clone(),
+            select: inst.selector,
+            accept: inst.acceptor,
+            update_path: shard_update,
+            threads,
+        });
+    }
+    Ok(specs)
 }
 
 #[cfg(test)]
@@ -748,5 +1000,64 @@ mod tests {
         assert!(base().lambda(-1.0).build().is_err());
         assert!(base().threads(0).build().is_err());
         assert!(base().warm_start(vec![0.0; 2]).build().is_err());
+        // sharding: zero shards, custom policies, and observers are
+        // rejected; presets are fine
+        assert!(base().shards(0).build().is_err());
+        assert!(Solver::builder()
+            .matrix(x.clone())
+            .labels(y.clone())
+            .select(select::Cyclic { next: 0, k: 5 })
+            .shards(2)
+            .build()
+            .is_err());
+        assert!(base()
+            .shards(2)
+            .observer(|_: &IterationInfo<'_>| ControlFlow::Continue(()))
+            .build()
+            .is_err());
+        assert!(base().shards(2).build().is_ok());
+    }
+
+    #[test]
+    fn sharded_preset_builds_and_descends() {
+        let (x, y) = small_xy(7, 40, 20);
+        let solver = Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .lambda(1e-3)
+            .algorithm(Algorithm::Shotgun)
+            .shards(3)
+            .shard_strategy(ShardStrategy::MinOverlap)
+            .threads(3)
+            .max_iters(200)
+            .max_seconds(30.0)
+            .log_every(20)
+            .build()
+            .unwrap();
+        assert!(solver.is_sharded());
+        let out = solver.solve();
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{first} -> {}", out.objective);
+        assert_eq!(out.metrics.shards, 3);
+        assert_eq!(out.metrics.iterations, 200);
+        assert_eq!(out.w.len(), 20);
+    }
+
+    #[test]
+    fn shards_clamped_to_columns() {
+        // more shards than columns: clamp, drop empties, still solve
+        let (x, y) = small_xy(8, 20, 4);
+        let out = Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .algorithm(Algorithm::Ccd)
+            .shards(9)
+            .max_iters(40)
+            .max_seconds(20.0)
+            .build()
+            .unwrap()
+            .solve();
+        assert_eq!(out.metrics.shards, 4);
+        assert!(out.objective.is_finite());
     }
 }

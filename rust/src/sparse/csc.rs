@@ -3,16 +3,47 @@
 //! Row indices are `u32` (the paper's datasets have n < 2^32 by a wide
 //! margin) and values `f64`; a DOROTHEA-scale matrix (800 x 100 000,
 //! 730k nnz) is ~9 MB.
+//!
+//! The index/value slabs are `Arc`-shared so a matrix can hand out
+//! **zero-copy column-range views** ([`CscMatrix::col_range_view`]):
+//! a view re-bases a `(hi - lo + 1)`-entry copy of the column pointers
+//! and shares the row/value slabs, so shard-per-socket execution
+//! ([`crate::shard`]) slices a 100M-nnz matrix into per-shard
+//! sub-matrices without duplicating a single nonzero. Mutation
+//! ([`CscMatrix::normalize_columns`]) is copy-on-write via
+//! `Arc::make_mut`, so views are never mutated from under their base
+//! (or vice versa).
+
+use std::sync::Arc;
 
 /// CSC sparse matrix. Columns are the *features* of the learning problem.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct CscMatrix {
     n_rows: usize,
     n_cols: usize,
-    /// `col_ptr[j]..col_ptr[j+1]` indexes the entries of column j.
+    /// `col_ptr[j]..col_ptr[j+1]` (plus `nnz_start`) indexes the entries
+    /// of column j. Always re-based: `col_ptr[0] == 0`.
     col_ptr: Vec<usize>,
-    row_idx: Vec<u32>,
-    values: Vec<f64>,
+    /// Offset of column 0's first entry in the shared slabs — 0 for a
+    /// directly-built matrix, the view base for a column-range view.
+    nnz_start: usize,
+    row_idx: Arc<Vec<u32>>,
+    values: Arc<Vec<f64>>,
+}
+
+/// Semantic equality: same shape and same per-column contents. (Views
+/// share oversized slabs, so field-wise equality would wrongly
+/// distinguish a view from an identical standalone matrix.)
+impl PartialEq for CscMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        let (ap, ar, av) = self.parts();
+        let (bp, br, bv) = other.parts();
+        self.n_rows == other.n_rows
+            && self.n_cols == other.n_cols
+            && ap == bp
+            && ar == br
+            && av == bv
+    }
 }
 
 impl CscMatrix {
@@ -51,9 +82,70 @@ impl CscMatrix {
             n_rows,
             n_cols,
             col_ptr,
-            row_idx,
-            values,
+            nnz_start: 0,
+            row_idx: Arc::new(row_idx),
+            values: Arc::new(values),
         })
+    }
+
+    /// Zero-copy view of the contiguous column range `lo..hi`: the
+    /// returned matrix has `hi - lo` columns (view-local indices
+    /// `0..hi-lo` map to base columns `lo..hi`) and **shares** the
+    /// row-index/value slabs with `self` — only the `hi - lo + 1`
+    /// column pointers are copied. Views are full-fledged matrices:
+    /// every read path (`col`, `matvec`, `col_sq_norms`, …) works
+    /// unchanged, and mutating either side copies-on-write.
+    ///
+    /// # Panics
+    ///
+    /// If `lo > hi` or `hi > n_cols` (a programming error in the
+    /// caller's partitioning).
+    pub fn col_range_view(&self, lo: usize, hi: usize) -> CscMatrix {
+        assert!(
+            lo <= hi && hi <= self.n_cols,
+            "col_range_view: {lo}..{hi} out of bounds for {} columns",
+            self.n_cols
+        );
+        let base = self.col_ptr[lo];
+        CscMatrix {
+            n_rows: self.n_rows,
+            n_cols: hi - lo,
+            col_ptr: self.col_ptr[lo..=hi].iter().map(|&p| p - base).collect(),
+            nnz_start: self.nnz_start + base,
+            row_idx: Arc::clone(&self.row_idx),
+            values: Arc::clone(&self.values),
+        }
+    }
+
+    /// Gather the listed columns into a new matrix whose column `b` is
+    /// `self`'s column `cols[b]` — a one-time O(selection nnz) copy
+    /// into fresh slabs. The shard layer uses this with a permutation
+    /// so that *arbitrary* partitions (round-robin, min-overlap) become
+    /// contiguous, after which per-shard [`Self::col_range_view`]s are
+    /// zero-copy.
+    pub fn select_columns(&self, cols: &[u32]) -> CscMatrix {
+        let mut col_ptr = Vec::with_capacity(cols.len() + 1);
+        col_ptr.push(0usize);
+        let mut nnz = 0usize;
+        for &j in cols {
+            nnz += self.col_nnz(j as usize);
+            col_ptr.push(nnz);
+        }
+        let mut row_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for &j in cols {
+            let (r, v) = self.col(j as usize);
+            row_idx.extend_from_slice(r);
+            values.extend_from_slice(v);
+        }
+        CscMatrix {
+            n_rows: self.n_rows,
+            n_cols: cols.len(),
+            col_ptr,
+            nnz_start: 0,
+            row_idx: Arc::new(row_idx),
+            values: Arc::new(values),
+        }
     }
 
     /// Rows (samples).
@@ -68,16 +160,17 @@ impl CscMatrix {
         self.n_cols
     }
 
-    /// Total stored entries.
+    /// Total stored entries (of this view — not of the shared slabs).
     #[inline]
     pub fn nnz(&self) -> usize {
-        self.values.len()
+        *self.col_ptr.last().unwrap()
     }
 
     /// Entries of column j: parallel slices (rows, values).
     #[inline]
     pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
-        let range = self.col_ptr[j]..self.col_ptr[j + 1];
+        let range =
+            (self.nnz_start + self.col_ptr[j])..(self.nnz_start + self.col_ptr[j + 1]);
         (&self.row_idx[range.clone()], &self.values[range])
     }
 
@@ -107,16 +200,20 @@ impl CscMatrix {
     /// left untouched. Returns the original norms.
     pub fn normalize_columns(&mut self) -> Vec<f64> {
         let mut norms = Vec::with_capacity(self.n_cols);
+        // copy-on-write: a matrix whose slabs are shared with a view (or
+        // that is itself a view) gets private slabs before mutating
+        let start = self.nnz_start;
+        let values = Arc::make_mut(&mut self.values);
         for j in 0..self.n_cols {
-            let range = self.col_ptr[j]..self.col_ptr[j + 1];
-            let norm = self.values[range.clone()]
+            let range = (start + self.col_ptr[j])..(start + self.col_ptr[j + 1]);
+            let norm = values[range.clone()]
                 .iter()
                 .map(|x| x * x)
                 .sum::<f64>()
                 .sqrt();
             norms.push(norm);
             if norm > 0.0 {
-                for v in &mut self.values[range] {
+                for v in &mut values[range] {
                     *v /= norm;
                 }
             }
@@ -193,9 +290,16 @@ impl CscMatrix {
         d
     }
 
-    /// Internal accessors for sibling modules (io, csr conversion).
+    /// Internal accessors for sibling modules (io, csr conversion). The
+    /// row/value slices are windowed to this view's entries, so the
+    /// (re-based) column pointers index them directly for views too.
     pub(crate) fn parts(&self) -> (&[usize], &[u32], &[f64]) {
-        (&self.col_ptr, &self.row_idx, &self.values)
+        let window = self.nnz_start..self.nnz_start + self.nnz();
+        (
+            &self.col_ptr,
+            &self.row_idx[window.clone()],
+            &self.values[window],
+        )
     }
 }
 
@@ -299,5 +403,76 @@ mod tests {
     fn col_sq_norms_match() {
         let m = small_fixture();
         assert_eq!(m.col_sq_norms(), vec![17.0, 34.0, 40.0]);
+    }
+
+    #[test]
+    fn col_range_view_matches_base() {
+        let m = small_fixture();
+        let v = m.col_range_view(1, 3);
+        assert_eq!(v.n_rows(), 4);
+        assert_eq!(v.n_cols(), 2);
+        assert_eq!(v.nnz(), 4);
+        for local in 0..2 {
+            assert_eq!(v.col(local), m.col(local + 1));
+            assert_eq!(v.col_nnz(local), m.col_nnz(local + 1));
+        }
+        assert_eq!(v.col_sq_norms(), vec![34.0, 40.0]);
+        // empty and full ranges are fine
+        assert_eq!(m.col_range_view(2, 2).nnz(), 0);
+        assert_eq!(m.col_range_view(0, 3), m);
+        // a view of a view composes
+        let vv = v.col_range_view(1, 2);
+        assert_eq!(vv.col(0), m.col(2));
+        // semantic equality: the view equals a standalone copy
+        let standalone = m.select_columns(&[1, 2]);
+        assert_eq!(v, standalone);
+    }
+
+    #[test]
+    fn view_survives_base_normalization() {
+        // copy-on-write: normalizing the base must not corrupt a live
+        // view (the view keeps the original slabs)
+        let mut m = small_fixture();
+        let v = m.col_range_view(0, 3);
+        let before = v.col(1).1.to_vec();
+        m.normalize_columns();
+        assert_eq!(v.col(1).1, &before[..], "view mutated by base CoW");
+        let (_, vals) = m.col(1);
+        let n: f64 = vals.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((n - 1.0).abs() < 1e-12, "base not normalized");
+    }
+
+    #[test]
+    fn select_columns_permutes() {
+        let m = small_fixture();
+        let p = m.select_columns(&[2, 0, 1]);
+        assert_eq!(p.n_cols(), 3);
+        assert_eq!(p.col(0), m.col(2));
+        assert_eq!(p.col(1), m.col(0));
+        assert_eq!(p.col(2), m.col(1));
+        assert_eq!(p.nnz(), m.nnz());
+        // subsets work too
+        let s = m.select_columns(&[1]);
+        assert_eq!(s.n_cols(), 1);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.col(0), m.col(1));
+        assert_eq!(m.select_columns(&[]).n_cols(), 0);
+    }
+
+    #[test]
+    fn view_matvec_and_csr_roundtrip() {
+        // views feed every downstream consumer: matvec and the
+        // parts()-based CSR conversion must see only the view's columns
+        let m = small_fixture();
+        let v = m.col_range_view(1, 3);
+        let got = v.matvec(&[1.0, 2.0]);
+        let dense = m.to_dense();
+        for i in 0..4 {
+            let want = dense[i][1] + 2.0 * dense[i][2];
+            assert!((got[i] - want).abs() < 1e-12);
+        }
+        let rp = crate::sparse::RowPattern::from_csc(&v);
+        assert_eq!(rp.n_cols(), 2);
+        assert_eq!(rp.row(3), &[0, 1], "row 3 holds view-local cols 0,1");
     }
 }

@@ -212,6 +212,58 @@ impl SyncF64Vec {
     }
 }
 
+/// Measured cost ratio of a CAS `fetch_add` versus a plain `+=` store on
+/// this machine — the input to the engine's fitted `Auto` update-path
+/// switch (ROADMAP item: replace the fixed `|J'|·nnz >= n` rule with a
+/// calibrated constant).
+///
+/// Runs a ~100 µs micro-benchmark on first call (a scatter over a
+/// 4096-element [`SyncF64Vec`] through each access discipline) and
+/// caches the result for the process, so repeated solves (lambda paths,
+/// benches) pay the measurement once. The measurement is
+/// single-threaded, i.e. *uncontended* CAS cost; under real contention
+/// CAS only gets worse, so a switch threshold derived from this ratio is
+/// conservative in buffered mode's favor. Returns a value clamped to
+/// `[1.0, 64.0]` (a CAS is never cheaper than a plain store; absurd
+/// readings on noisy machines are capped).
+pub fn cas_plain_ratio() -> f64 {
+    static RATIO: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *RATIO.get_or_init(measure_cas_plain_ratio)
+}
+
+fn measure_cas_plain_ratio() -> f64 {
+    const LEN: usize = 4096;
+    let v = SyncF64Vec::zeros(LEN);
+    // ns per element-op of one full pass, best of `passes` (best-of
+    // filters scheduler noise, like the hotpath bench's bench_loop)
+    let time_passes = |cas: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..8 {
+            let t0 = std::time::Instant::now();
+            if cas {
+                for i in 0..LEN {
+                    v[i].fetch_add(1e-12, Ordering::Relaxed);
+                }
+            } else {
+                for i in 0..LEN {
+                    v.add(i, 1e-12);
+                }
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / LEN as f64;
+            if ns < best {
+                best = ns;
+            }
+        }
+        best
+    };
+    // one warm pass each (page the slab in), then measure
+    time_passes(false);
+    time_passes(true);
+    let plain = time_passes(false).max(1e-3);
+    let cas = time_passes(true);
+    (cas / plain).clamp(1.0, 64.0)
+}
+
 impl std::ops::Index<usize> for SyncF64Vec {
     type Output = AtomicF64;
 
@@ -362,6 +414,14 @@ mod tests {
             assert_eq!(addr % 128, 0, "len={len}: base {addr:#x}");
             assert_eq!(v.len(), len);
         }
+    }
+
+    #[test]
+    fn cas_ratio_calibration_sane_and_cached() {
+        let r = cas_plain_ratio();
+        assert!((1.0..=64.0).contains(&r), "ratio {r} outside clamp");
+        // cached: second call returns the identical value
+        assert_eq!(cas_plain_ratio(), r);
     }
 
     #[test]

@@ -226,6 +226,22 @@ impl<T> std::ops::DerefMut for CachePadded<T> {
     }
 }
 
+/// Static contiguous chunk of `0..len` owned by thread `tid` of
+/// `threads` — the engine's `schedule(static)` work division over index
+/// lists (selected/accepted coordinate sets). The chunks are disjoint
+/// and cover `0..len`. This is the *canonical* implementation; the
+/// engine re-exports it ([`crate::coordinator::engine::chunk`]) and the
+/// shard partitioner's contiguous strategy is built on it. For chunks
+/// over dense `f64` arrays that threads *write*, prefer
+/// [`aligned_chunk`], which additionally aligns interior boundaries to
+/// cache lines.
+#[inline]
+pub fn chunk(len: usize, tid: usize, threads: usize) -> std::ops::Range<usize> {
+    let lo = len * tid / threads;
+    let hi = len * (tid + 1) / threads;
+    lo..hi
+}
+
 /// `f64`s per 128-byte alignment unit (see [`aligned_chunk`]).
 pub const F64S_PER_LINE: usize = 16;
 
@@ -353,6 +369,24 @@ mod tests {
         let b = &*v[1] as *const u64 as usize;
         assert!(b - a >= 128, "slots {a:x} and {b:x} share a line");
         assert_eq!(*v[0] + *v[1], 3);
+    }
+
+    #[test]
+    fn chunks_partition() {
+        for len in [0usize, 1, 7, 16, 100, 1023] {
+            for threads in [1usize, 2, 3, 5, 8] {
+                let mut prev_hi = 0usize;
+                let mut covered = 0usize;
+                for tid in 0..threads {
+                    let r = chunk(len, tid, threads);
+                    assert_eq!(r.start, prev_hi, "len={len} t={threads} tid={tid}");
+                    covered += r.len();
+                    prev_hi = r.end;
+                }
+                assert_eq!(prev_hi, len);
+                assert_eq!(covered, len);
+            }
+        }
     }
 
     #[test]

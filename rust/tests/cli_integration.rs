@@ -21,7 +21,9 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_subcommands() {
     let out = run_ok(&["help"]);
-    for cmd in ["train", "datagen", "color", "spectral", "table3", "fig1", "fig2"] {
+    for cmd in [
+        "train", "datagen", "color", "spectral", "table3", "fig1", "fig2", "shards",
+    ] {
         assert!(out.contains(cmd), "help missing {cmd}");
     }
 }
@@ -42,6 +44,31 @@ fn train_runs_and_reports() {
     assert!(out.contains("P* ="), "missing P*: {out}");
     assert!(out.contains("shotgun |"), "missing summary: {out}");
     assert!(out.contains("stop"), "missing stop reason: {out}");
+}
+
+#[test]
+fn train_sharded_runs() {
+    let out = run_ok(&[
+        "train",
+        "--dataset",
+        "dorothea@0.03",
+        "--algorithm",
+        "shotgun",
+        "--seconds",
+        "1",
+        "--threads",
+        "2",
+        "--shards",
+        "2",
+        "--shard-strategy",
+        "min-overlap",
+    ]);
+    assert!(out.contains("shotgun |"), "missing summary: {out}");
+    let err = gencd()
+        .args(["train", "--dataset", "dorothea@0.03", "--shards", "2", "--shard-strategy", "voronoi", "--seconds", "1"])
+        .output()
+        .expect("spawn gencd");
+    assert!(!err.status.success(), "unknown shard strategy must fail");
 }
 
 #[test]

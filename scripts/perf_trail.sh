@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# perf-trail: keep BENCH_hotpath.json honest.
+#
+# When a Rust toolchain is available, run the hotpath microbenchmarks
+# (now including the `shards` dimension) — the bench overwrites
+# BENCH_hotpath.json with real measurements and stamps it "measured by
+# cargo bench". When no toolchain exists (e.g. the offline authoring
+# containers this repo has been grown in so far), leave the committed
+# file alone: it carries an explicit UNMEASURED PLACEHOLDER marker, and
+# fabricating numbers would poison the perf trajectory.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if command -v cargo >/dev/null 2>&1; then
+    echo "perf-trail: toolchain found ($(rustc --version 2>/dev/null || echo 'rustc: unknown')) — running hotpath bench"
+    cargo bench --bench hotpath
+    if grep -q '"comment": "measured by cargo bench' BENCH_hotpath.json; then
+        echo "perf-trail: BENCH_hotpath.json now holds real measurements"
+    else
+        echo "perf-trail: bench ran but BENCH_hotpath.json lacks the measured marker" >&2
+        exit 1
+    fi
+else
+    echo "perf-trail: no Rust toolchain on PATH — keeping the projected placeholder BENCH_hotpath.json" >&2
+    if ! grep -q 'UNMEASURED PLACEHOLDER' BENCH_hotpath.json; then
+        echo "perf-trail: committed BENCH_hotpath.json is missing its placeholder marker" >&2
+        exit 1
+    fi
+fi
