@@ -7,9 +7,11 @@
 //! three z-update disciplines (atomic CAS, unsync store, plain scatter)
 //! single-threaded AND under real multi-thread contention (CAS vs the
 //! engine's buffered scatter+reduce), phase-barrier crossings (std mutex
-//! barrier vs the spin barrier), line-search refinement, objective
-//! evaluation, and — when artifacts are built — the HLO dense-block
-//! propose for comparison.
+//! barrier vs the spin barrier), the screening layer (full vs screened
+//! proposal sweep, the full-set KKT sweep kernel), the scalar vs
+//! 4-way-unrolled gather/scatter kernels, line-search refinement,
+//! objective evaluation, and — when artifacts are built — the HLO
+//! dense-block propose for comparison.
 //!
 //! Besides the human-readable table, results are appended to a
 //! machine-readable JSON file (`BENCH_hotpath.json`, override with
@@ -328,6 +330,118 @@ fn main() {
         s_rec.best * 1e9 / n as f64
     );
     report.push("shard_reconcile_ns_per_sample", s_rec.best * 1e9 / n as f64);
+
+    // ---- screening: full vs screened proposal sweep --------------------------
+    // The tentpole row: proposing over every column (GREEDY's Propose
+    // phase, the O(p) shape) vs over a 5% active set via the screening
+    // bitmask — the work an l1 path actually needs once KKT screening
+    // has settled.
+    let active = gencd::screen::ActiveSet::new_full(k, 1);
+    for j in 0..k {
+        if j % 20 != 0 {
+            active.deactivate(j);
+        }
+    }
+    active.rebuild_dense();
+    let s_full = bench_loop(0.5, 10, || {
+        let mut acc = 0.0;
+        for j in 0..k {
+            acc += propose::propose(&problem, &state, j, true).delta;
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "\npropose/full-sweep {:>9.1} us ({k} cols)        {s_full}",
+        s_full.best * 1e6
+    );
+    report.push("propose_full_sweep_us", s_full.best * 1e6);
+    let n_active = active.popcount();
+    let s_screened = bench_loop(0.5, 10, || {
+        let mut acc = 0.0;
+        active.for_each_active(|j| {
+            acc += propose::propose(&problem, &state, j as usize, true).delta;
+        });
+        std::hint::black_box(acc);
+    });
+    println!(
+        "propose/screened   {:>9.1} us ({n_active} cols)         {s_screened}",
+        s_screened.best * 1e6
+    );
+    report.push("propose_screened_sweep_us", s_screened.best * 1e6);
+    let sweep_speedup = s_full.best / s_screened.best;
+    println!("propose/screened speedup vs full sweep: {sweep_speedup:.2}x");
+    report.push("screened_sweep_speedup", sweep_speedup);
+
+    // ---- screening: the full-set KKT sweep (the safety net's price) ---------
+    // One fused dot_col + violation test per zero-weight column, paid
+    // every kkt_every iterations.
+    let sweep_set = gencd::screen::ActiveSet::new_full(k, 1);
+    let s_kkt = bench_loop(0.5, 10, || {
+        std::hint::black_box(gencd::screen::sweep_range(
+            &problem,
+            &state,
+            &sweep_set,
+            1e-7,
+            0..sweep_set.n_words(),
+            false,
+        ));
+    });
+    println!(
+        "screen/kkt-sweep   {:>9.2} ns/nnz             {s_kkt}",
+        s_kkt.best * 1e9 / nnz as f64
+    );
+    report.push("kkt_sweep_ns_per_nnz", s_kkt.best * 1e9 / nnz as f64);
+
+    // ---- fast kernels: scalar vs 4-way unrolled gather/scatter --------------
+    let dvec: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 * 1e-3).collect();
+    let s_dot = bench_loop(0.5, 20, || {
+        let mut acc = 0.0;
+        for &j in &cols {
+            acc += problem.x.dot_col(j, &dvec);
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "dot_col/scalar     {:>9.2} ns/nnz             {s_dot}",
+        s_dot.best * 1e9 / col_nnz as f64
+    );
+    report.push("dot_col_scalar_ns_per_nnz", s_dot.best * 1e9 / col_nnz as f64);
+    let s_dotf = bench_loop(0.5, 20, || {
+        let mut acc = 0.0;
+        for &j in &cols {
+            acc += problem.x.dot_col_fast(j, &dvec);
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "dot_col/unrolled   {:>9.2} ns/nnz             {s_dotf}",
+        s_dotf.best * 1e9 / col_nnz as f64
+    );
+    report.push("dot_col_unrolled_ns_per_nnz", s_dotf.best * 1e9 / col_nnz as f64);
+    let mut yvec = vec![0.0f64; n];
+    let s_axpy = bench_loop(0.5, 20, || {
+        for &j in &cols {
+            problem.x.axpy_col(j, 1e-12, &mut yvec);
+        }
+    });
+    println!(
+        "axpy_col/scalar    {:>9.2} ns/nnz             {s_axpy}",
+        s_axpy.best * 1e9 / col_nnz as f64
+    );
+    report.push("axpy_col_scalar_ns_per_nnz", s_axpy.best * 1e9 / col_nnz as f64);
+    let s_axpyf = bench_loop(0.5, 20, || {
+        for &j in &cols {
+            problem.x.axpy_col_fast(j, 1e-12, &mut yvec);
+        }
+    });
+    println!(
+        "axpy_col/unrolled  {:>9.2} ns/nnz             {s_axpyf}",
+        s_axpyf.best * 1e9 / col_nnz as f64
+    );
+    report.push(
+        "axpy_col_unrolled_ns_per_nnz",
+        s_axpyf.best * 1e9 / col_nnz as f64,
+    );
 
     // ---- phase barrier crossings: std::sync::Barrier vs SpinBarrier ---------
     const ROUNDS: usize = 2000;

@@ -301,6 +301,63 @@ pub fn print_shard_scaling(shards_list: &[usize], threads: usize) {
     }
 }
 
+/// Screening experiment (the `gencd screen` subcommand): active-set
+/// KKT screening on vs off at an equal time budget, for a
+/// full-selection algorithm (GREEDY — where screened proposal work is
+/// directly visible) and the paper's workhorse (SHOTGUN). Reported per
+/// run: the final objective, the surviving active set, the number of
+/// safety sweeps/reactivations, and the total Propose-phase work
+/// (nonzeros traversed) that screening saved.
+pub fn print_screening(threads: usize) {
+    let scale = bench_scale();
+    let budget = bench_budget();
+    let kkt_every = crate::config::SolverConfig::default().kkt_every;
+    println!(
+        "# Screening (scale {scale}, {budget}s/run, {threads} threads, \
+         kkt_every = {kkt_every})\n"
+    );
+    for (ds, lam) in paper_datasets() {
+        println!("## {} (lambda = {lam:.0e})\n", ds.name);
+        let mut table = Table::new(&[
+            "algorithm",
+            "screening",
+            "objective",
+            "nnz",
+            "updates/s",
+            "propose Mnnz",
+            "active cols",
+            "kkt passes",
+            "reactivations",
+            "stop",
+        ]);
+        for alg in [Algorithm::Greedy, Algorithm::Shotgun] {
+            for screening in [false, true] {
+                let mut cfg = bench_config(&ds.name, lam, alg);
+                cfg.solver.threads = threads;
+                cfg.solver.screening = screening;
+                let res = run_on(&cfg, ds.clone(), None).expect("solve");
+                table.row(vec![
+                    alg.name().into(),
+                    if screening { "on" } else { "off" }.into(),
+                    format!("{:.6}", res.objective),
+                    res.nnz.to_string(),
+                    format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
+                    format!("{:.1}", res.metrics.propose_nnz as f64 / 1e6),
+                    if screening {
+                        format!("{} / {}", res.metrics.active_cols, ds.n_features())
+                    } else {
+                        "-".into()
+                    },
+                    res.metrics.kkt_passes.to_string(),
+                    res.metrics.reactivations.to_string(),
+                    res.stop.to_string(),
+                ]);
+            }
+        }
+        println!("{}", table.render());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -114,6 +114,16 @@ pub struct SolverConfig {
     /// contiguous | round-robin | min-overlap. See
     /// `shard::ShardStrategy`.
     pub shard_strategy: String,
+    /// Active-set KKT screening (`screen` module; default off).
+    /// Requires lam > 0; validated by the builder.
+    pub screening: bool,
+    /// Full-set KKT sweep cadence in iterations when screening is on
+    /// (the reactivation safety net). See `SolverBuilder::kkt_every`.
+    pub kkt_every: usize,
+    /// Route hot gathers through the unrolled prefetching kernels
+    /// (`CscMatrix::dot_col_fast`; off by default so the scalar path
+    /// stays the bit-exactness reference).
+    pub fast_kernels: bool,
 }
 
 impl Default for SolverConfig {
@@ -135,6 +145,9 @@ impl Default for SolverConfig {
             buffer_budget_mb: 1024,
             shards: 1,
             shard_strategy: "contiguous".into(),
+            screening: false,
+            kkt_every: 16,
+            fast_kernels: false,
         }
     }
 }
@@ -232,6 +245,13 @@ impl RunConfig {
             ("solver", "shard_strategy") => {
                 self.solver.shard_strategy = as_str(value)?
             }
+            ("solver", "screening") => {
+                self.solver.screening = value.as_bool().ok_or_else(bad_type)?
+            }
+            ("solver", "kkt_every") => self.solver.kkt_every = as_usize(value)?,
+            ("solver", "fast_kernels") => {
+                self.solver.fast_kernels = value.as_bool().ok_or_else(bad_type)?
+            }
             ("output", "csv") => self.csv = Some(as_str(value)?),
             ("", _) => anyhow::bail!("top-level key '{key}' not recognized"),
             _ => anyhow::bail!("unknown config key {table}.{key}"),
@@ -300,6 +320,22 @@ mod tests {
         // shards = 0 clamps to 1 (like threads)
         cfg.set("solver.shards", "0").unwrap();
         assert_eq!(cfg.solver.shards, 1);
+        // screening knobs: defaults, TOML, and --set override
+        assert!(!cfg.solver.screening);
+        assert_eq!(cfg.solver.kkt_every, 16);
+        assert!(!cfg.solver.fast_kernels);
+        let cfg5 = RunConfig::from_toml(
+            "[solver]\nscreening = true\nkkt_every = 8\nfast_kernels = true\n",
+        )
+        .unwrap();
+        assert!(cfg5.solver.screening);
+        assert_eq!(cfg5.solver.kkt_every, 8);
+        assert!(cfg5.solver.fast_kernels);
+        cfg.set("solver.screening", "true").unwrap();
+        cfg.set("solver.kkt_every", "32").unwrap();
+        assert!(cfg.solver.screening);
+        assert_eq!(cfg.solver.kkt_every, 32);
+        assert!(RunConfig::from_toml("[solver]\nscreening = 3\n").is_err());
     }
 
     #[test]

@@ -86,6 +86,15 @@ pub enum StopReason {
     /// An [`Observer`](super::observer::Observer) returned
     /// `ControlFlow::Break` (user-side early stopping).
     Observer,
+    /// The tolerance criterion fired **and** a full-set KKT sweep
+    /// certified the screened active set: every deactivated coordinate
+    /// satisfies its optimality condition exactly at the final iterate,
+    /// so the solution is identical to what the unscreened solver's
+    /// `Tolerance` stop would accept. Only emitted with
+    /// `EngineConfig::screening` on — the sweep gates it
+    /// ([`crate::screen`]); unscreened solves keep reporting
+    /// [`Tolerance`](Self::Tolerance).
+    Converged,
 }
 
 impl std::fmt::Display for StopReason {
@@ -96,6 +105,7 @@ impl std::fmt::Display for StopReason {
             StopReason::Tolerance => "tolerance",
             StopReason::Diverged => "diverged",
             StopReason::Observer => "observer",
+            StopReason::Converged => "converged",
         };
         write!(f, "{s}")
     }

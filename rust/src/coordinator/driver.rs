@@ -124,6 +124,9 @@ pub fn run_on(
         .buffer_budget_mb(cfg.solver.buffer_budget_mb)
         .shards(cfg.solver.shards)
         .shard_strategy(shard_strategy)
+        .screening(cfg.solver.screening)
+        .kkt_every(cfg.solver.kkt_every)
+        .fast_kernels(cfg.solver.fast_kernels)
         .build()?;
     let preprocess_secs = pre_timer.elapsed_secs();
 

@@ -7,10 +7,12 @@
 //!
 //! ```text
 //!   leader: Select J, pick gradient + update paths, check stop,
-//!           run observers                           | workers wait
+//!           run observers, schedule screening       | workers wait
 //!   ── barrier ──
 //!   all: refresh dloss chunk (when precomputation wins)
 //!   ── barrier ──
+//!   [screen iterations only: all: full-set KKT sweep over bitmask
+//!    words ── barrier ──]
 //!   all: Propose over static chunk of J  (Algorithm 4)
 //!   ── barrier ──
 //!   leader: Accept -> J'                  (policy-dependent reduction)
@@ -87,6 +89,37 @@
 //! replaced. Spilled iterations are counted in
 //! [`MetricsSnapshot::spill_iters`].
 //!
+//! # Screening (the `screen` phase)
+//!
+//! With [`EngineConfig::screening`] on, the engine maintains an
+//! [`ActiveSet`](crate::screen::ActiveSet) and stops paying for
+//! coordinates that provably stay at zero (module docs:
+//! [`crate::screen`]). Three hooks, all riding the existing barrier
+//! protocol:
+//!
+//! * the incoming Select policy is wrapped in a
+//!   [`ScreenedSelect`](crate::screen::ScreenedSelect), so *every*
+//!   policy — preset or external — draws candidates from the active set;
+//! * the Propose loop fuses a KKT slack test into each proposal it
+//!   computes (the gradient is already in registers): a zero-weight
+//!   coordinate whose slack `lam - |g_j|` clears the decaying threshold
+//!   is deactivated on the spot, two flops on top of the dot product;
+//! * every [`EngineConfig::kkt_every`] iterations — and always before a
+//!   tolerance stop may become [`StopReason::Converged`] — a **screen
+//!   phase** runs: workers re-evaluate the whole coordinate space over
+//!   disjoint bitmask-word chunks (one fused `dot_col` + violation test
+//!   per zero-weight column), reactivating any violator. The sweep
+//!   costs one extra barrier crossing and `O(nnz / T)` per worker,
+//!   amortized to `O(nnz / (T · kkt_every))` per iteration; between
+//!   sweeps the screening overhead is `O(|J|)`.
+//!
+//! Convergence safety: the engine never reports `Converged` without a
+//! sweep that reactivated nothing, i.e. every frozen coordinate
+//! satisfies its KKT condition exactly at the final iterate — the
+//! screened fixed point is the unscreened one. With screening off (the
+//! default) none of this machinery is constructed and the iteration
+//! replays the unscreened engine bit-for-bit.
+//!
 //! # §Perf
 //!
 //! `cargo bench --bench hotpath` measures every row below and writes
@@ -104,6 +137,9 @@
 //! | z-update, 4T, contended CAS    | ~20 ns/nnz      | kept as fallback |
 //! | z-update, 4T, buffered+reduce  |      —          | ~5 ns/nnz (≥2x vs CAS is the acceptance bar) |
 //! | barrier crossing, 4T           | ~5 us (mutex)   | ~0.2 us (spin) |
+//! | proposal sweep, screened 5%    | O(p) cols       | O(active) cols (~20x fewer gathers) |
+//! | KKT sweep (screen phase)       |      —          | ~2 ns/nnz, every `kkt_every` iters |
+//! | `dot_col`, 4-way + prefetch    | ~1.5 ns/nnz     | ~0.9 ns/nnz (`fast_kernels`, off by default) |
 //!
 //! Independent of the numbers, correctness is pinned by the
 //! differential tests (`rust/tests/update_paths.rs`): all update paths
@@ -113,7 +149,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::Ordering::Relaxed;
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use super::accept::{Accept, AcceptContext, ThreadBest};
 use super::convergence::{History, StopReason};
@@ -124,6 +160,7 @@ use super::problem::{Problem, SharedState};
 use super::propose::{self, Proposal};
 use super::select::Select;
 use crate::loss;
+use crate::screen::{self, ActiveSet, ScreenedSelect, SweepKind, SweepStats};
 use crate::util::atomic::{SyncCell, SyncF64Vec};
 use crate::util::par::{aligned_chunk, CachePadded, SpinBarrier, DEFAULT_SPIN};
 use crate::util::Timer;
@@ -207,6 +244,22 @@ pub struct EngineConfig {
     /// Spin budget of the phase barrier before a waiter parks; 0 parks
     /// immediately (useful when heavily oversubscribed).
     pub barrier_spin: u32,
+    /// Active-set KKT screening (module docs §Screening; default off —
+    /// the unscreened iteration is replayed bit-for-bit). Requires
+    /// `lam > 0` to ever deactivate anything; the builder validates.
+    pub screening: bool,
+    /// Full-set KKT sweep cadence in iterations when `screening` is on
+    /// (the reactivation safety net; 0 disables periodic sweeps,
+    /// leaving only the convergence-gate sweep — the builder rejects
+    /// that, but the engine tolerates it for ablations).
+    pub kkt_every: usize,
+    /// Route the cached-dloss gradient gather (and the single-worker
+    /// conflict-free scatter) through the 4-way unrolled
+    /// prefetching kernels ([`crate::sparse::CscMatrix::dot_col_fast`]).
+    /// Off by default: the unrolled reduction re-associates floating
+    /// point, and the T = 1 bit-exact differential tests pin the scalar
+    /// kernels.
+    pub fast_kernels: bool,
 }
 
 impl Default for EngineConfig {
@@ -222,6 +275,9 @@ impl Default for EngineConfig {
             update_path: UpdatePath::Auto,
             buffer_budget_mb: 1024,
             barrier_spin: DEFAULT_SPIN,
+            screening: false,
+            kkt_every: 16,
+            fast_kernels: false,
         }
     }
 }
@@ -307,6 +363,12 @@ struct Plan {
     /// Propose runs on the leader via the block proposer (HLO backend);
     /// workers skip the sparse propose loop.
     hlo: bool,
+    /// Screening: run a full-set KKT sweep this iteration (extra screen
+    /// phase + barrier; forces a dloss refresh).
+    screen_sweep: Option<SweepKind>,
+    /// Screening: current deactivation threshold for the fused
+    /// Propose-phase slack test and the sweep.
+    screen_thresh: f64,
     stop: Option<StopReason>,
 }
 
@@ -400,6 +462,19 @@ pub fn solve_from(
     let threads = cfg.threads.max(1);
     let n = problem.n_samples();
     let mean_col_nnz = problem.x.mean_col_nnz();
+    // Screening: one ActiveSet shared between the Select wrapper (reads
+    // on the leader), the fused Propose-phase deactivation (atomic bit
+    // clears by workers) and the sweep phase (word-chunked rewrites).
+    // Wrapping here — not in the builder — means every entry point
+    // (driver, builder, shard pools, direct engine calls) screens every
+    // policy, preset or external, identically.
+    let screen: Option<Arc<ActiveSet>> = cfg
+        .screening
+        .then(|| Arc::new(ActiveSet::new_full(problem.n_features(), threads)));
+    let select: Box<dyn Select> = match &screen {
+        Some(active) => Box::new(ScreenedSelect::new(select, Arc::clone(active))),
+        None => select,
+    };
     // per-thread best reductions are consumed by the accept policy;
     // built-ins that ignore them opt out of the bookkeeping (§Perf)
     let need_best = accept.needs_thread_bests();
@@ -470,6 +545,8 @@ pub fn solve_from(
         use_dloss: false,
         update: UpdateMode::Atomic,
         hlo: false,
+        screen_sweep: None,
+        screen_thresh: 0.0,
         stop: None,
     });
     let barrier = PhaseBarrier::new(threads, cfg.barrier_spin);
@@ -479,6 +556,11 @@ pub fn solve_from(
         .collect();
     let stats: Vec<CachePadded<SyncCell<WorkerStats>>> = (0..threads)
         .map(|_| CachePadded::new(SyncCell::new(WorkerStats::default())))
+        .collect();
+    // Sweep results: one padded slot per worker, rewritten on every
+    // sweep, folded by the leader in the following plan phase.
+    let sweep_stats: Vec<CachePadded<SyncCell<SweepStats>>> = (0..threads)
+        .map(|_| CachePadded::new(SyncCell::new(SweepStats::default())))
         .collect();
     // Leader-only bookkeeping, moved into the leader closure.
     let mut leader_state = LeaderState {
@@ -493,6 +575,11 @@ pub fn solve_from(
         block_proposer: hooks.block_proposer,
         select_epoch: 0,
         seen_select: Vec::new(),
+        screen: ScreenLeader {
+            thresh: screen::initial_threshold(problem.lam),
+            last_sweep: None,
+            gate_pending: false,
+        },
     };
 
     let run_worker = |tid: usize, leader: Option<&mut LeaderState>| {
@@ -534,14 +621,24 @@ pub fn solve_from(
                     may_buffer,
                     dense_fits,
                     auto_switch_factor,
+                    screen.as_deref(),
+                    &sweep_stats,
                 );
             }
             barrier.wait();
             lap!(select_nanos);
 
-            let (stop, use_dloss, hlo_mode, update_mode, selected_len) = {
+            let (stop, use_dloss, hlo_mode, update_mode, selected_len, sweep, thresh) = {
                 let p = plan.read().unwrap();
-                (p.stop, p.use_dloss, p.hlo, p.update, p.selected.len())
+                (
+                    p.stop,
+                    p.use_dloss,
+                    p.hlo,
+                    p.update,
+                    p.selected.len(),
+                    p.screen_sweep,
+                    p.screen_thresh,
+                )
             };
             if stop.is_some() {
                 break;
@@ -553,6 +650,27 @@ pub fn solve_from(
                 propose::refresh_dloss(problem, state, r.start, r.end);
             }
             barrier.wait();
+
+            // ---- screen: full-set KKT sweep (sweep iterations only) --
+            // Each worker owns a disjoint chunk of bitmask words (so the
+            // whole-word rewrites never collide) and re-screens its
+            // coordinates against the fresh dloss; results land in the
+            // padded per-thread slots the leader folds next plan phase.
+            if sweep.is_some() {
+                if let Some(active) = screen.as_deref() {
+                    let words = chunk(active.n_words(), tid, threads);
+                    sweep_stats[tid].set(screen::sweep_range(
+                        problem,
+                        state,
+                        active,
+                        thresh,
+                        words,
+                        cfg.fast_kernels,
+                    ));
+                }
+                barrier.wait();
+                lap!(screen_nanos);
+            }
 
             // ---- Propose (parallel over J) ---------------------------
             {
@@ -568,8 +686,24 @@ pub fn solve_from(
                     let mut best = ThreadBest::NONE;
                     let mut nnz_work = 0u64;
                     for &j in &p.selected[my] {
-                        let pr = propose::propose(problem, state, j as usize, use_dloss);
+                        let pr = if cfg.fast_kernels {
+                            propose::propose_fast(problem, state, j as usize, use_dloss)
+                        } else {
+                            propose::propose(problem, state, j as usize, use_dloss)
+                        };
                         store_proposal(state, &pr);
+                        // fused screen: the gradient is already in hand,
+                        // so the KKT slack test costs two flops. Atomic
+                        // bit clear — workers may deactivate different
+                        // coordinates of the same bitmask word.
+                        if let Some(active) = screen.as_deref() {
+                            if pr.delta == 0.0
+                                && state.w.get(j as usize) == 0.0
+                                && problem.lam - pr.g.abs() >= thresh
+                            {
+                                active.deactivate(j as usize);
+                            }
+                        }
                         nnz_work += problem.x.col_nnz(j as usize) as u64;
                         if need_best {
                             best.consider(j, pr.phi, pr.delta);
@@ -667,13 +801,40 @@ pub fn solve_from(
                     }
                     // unique writer for w[j] within this phase
                     state.w.add(j, d);
+                    if let Some(active) = screen.as_deref() {
+                        // line search reads the LIVE z, so it can move a
+                        // coordinate whose frozen proposal was zero —
+                        // including one the fused test (or this
+                        // iteration's sweep) just deactivated; setting
+                        // the bit keeps the invariant `w_j != 0 =>
+                        // active`. Guarded by a plain load: nothing
+                        // deactivates during the Update phase, and the
+                        // common already-active case must not issue an
+                        // atomic RMW on a bitmask line 64 workers'
+                        // coordinates share.
+                        if !active.is_active(j) {
+                            active.activate(j);
+                        }
+                    }
                     let (rows, vals) = problem.x.col(j);
                     match update_mode {
                         UpdateMode::ConflictFree => {
-                            // unique writer per z[i] too (T=1 or
-                            // coloring): plain load+store, no CAS
-                            for (&i, &v) in rows.iter().zip(vals) {
-                                state.z.add(i as usize, d * v);
+                            if cfg.fast_kernels && threads == 1 {
+                                // SAFETY: single worker — the unique
+                                // accessor of z for this phase; the
+                                // slice is scoped to one kernel call
+                                let z = unsafe { state.z.plain_slice_mut() };
+                                problem.x.axpy_col_fast(j, d, z);
+                            } else {
+                                // unique writer per z[i] too (T=1 or
+                                // coloring): plain load+store, no CAS.
+                                // No unrolled kernel at T > 1 — a
+                                // coloring makes *indices* disjoint, but
+                                // handing two threads overlapping &mut
+                                // slices would still be UB.
+                                for (&i, &v) in rows.iter().zip(vals) {
+                                    state.z.add(i as usize, d * v);
+                                }
                             }
                         }
                         UpdateMode::Atomic => {
@@ -777,6 +938,11 @@ pub fn solve_from(
     let mut snapshot = metrics.snapshot();
     snapshot.auto_cas_ratio = auto_cas_ratio;
     snapshot.auto_switch_factor = auto_switch_factor;
+    if let Some(active) = &screen {
+        // exact final count (the stored value lags fused deactivations
+        // since the last sweep)
+        snapshot.active_cols = active.popcount() as u64;
+    }
     SolveOutput {
         nnz: loss::nnz(&w),
         w,
@@ -808,6 +974,22 @@ struct LeaderState<'a> {
     /// allocation after the first use.
     select_epoch: u64,
     seen_select: Vec<u64>,
+    /// Screening bookkeeping (idle when `EngineConfig::screening` is
+    /// off).
+    screen: ScreenLeader,
+}
+
+/// Leader-side screening state: the decaying deactivation threshold and
+/// the sweep pipeline (a sweep scheduled in plan N runs in iteration N
+/// and is folded — counts, threshold decay, the Converged gate — in
+/// plan N + 1).
+struct ScreenLeader {
+    thresh: f64,
+    /// The sweep that ran last iteration, awaiting its fold.
+    last_sweep: Option<SweepKind>,
+    /// A tolerance stop fired; the next scheduled sweep decides between
+    /// reactivation and `Converged`.
+    gate_pending: bool,
 }
 
 /// Resolve the configured [`UpdatePath`] into this iteration's
@@ -875,6 +1057,8 @@ fn plan_iteration(
     may_buffer: bool,
     dense_fits: bool,
     switch_factor: f64,
+    screen: Option<&ActiveSet>,
+    sweep_stats: &[CachePadded<SyncCell<SweepStats>>],
 ) {
     let elapsed = ls.timer.elapsed_secs();
 
@@ -890,6 +1074,43 @@ fn plan_iteration(
     }
     metrics.updates.store(updates, Relaxed);
     metrics.propose_nnz.store(propose_nnz, Relaxed);
+
+    // ---- fold last iteration's KKT sweep ----------------------------
+    // Workers finished the sweep before the update phase's barriers, so
+    // the leader owns every padded slot and the bitmask is quiescent.
+    if let Some(active) = screen {
+        if let Some(kind) = ls.screen.last_sweep.take() {
+            let mut reactivated = 0u64;
+            let mut violators = 0u64;
+            let mut active_now = 0u64;
+            for s in sweep_stats {
+                let v = s.get();
+                reactivated += v.reactivated;
+                violators += v.violators;
+                active_now += v.active;
+            }
+            metrics.kkt_passes.fetch_add(1, Relaxed);
+            metrics.reactivations.fetch_add(reactivated, Relaxed);
+            metrics.active_cols.store(active_now, Relaxed);
+            // refresh the dense draw list for the Select wrapper's
+            // cursor fallback
+            active.rebuild_dense();
+            // each completed sweep buys confidence: tighten the
+            // deactivation threshold toward its floor
+            ls.screen.thresh = screen::decay_threshold(ls.screen.thresh, problem.lam);
+            if kind == SweepKind::Gate && violators == 0 && plan.stop.is_none() {
+                // the gate held: every zero coordinate — frozen OR
+                // active-but-undrawn — satisfies its KKT condition
+                // exactly, so the screened solution is the unscreened
+                // one, certified
+                plan.stop = Some(StopReason::Converged);
+            }
+            // a failed gate left every violator active (reactivating
+            // frozen ones); the tolerance counter was reset when the
+            // gate was scheduled, so the solve simply continues on the
+            // reopened set
+        }
+    }
 
     // ---- objective log + divergence check ---------------------------
     let should_log = match cfg.log_every {
@@ -944,7 +1165,16 @@ fn plan_iteration(
             ls.tol_hits = 0;
         }
         if ls.tol_hits >= 3 && plan.stop.is_none() {
-            plan.stop = Some(StopReason::Tolerance);
+            if screen.is_some() {
+                // screening gates the convergence-shaped stop: schedule
+                // a full-set KKT sweep instead of stopping — the next
+                // plan phase declares Converged only if it reactivated
+                // nothing (module docs §Screening)
+                ls.screen.gate_pending = true;
+                ls.tol_hits = 0;
+            } else {
+                plan.stop = Some(StopReason::Tolerance);
+            }
         }
     }
 
@@ -961,9 +1191,16 @@ fn plan_iteration(
     }
 
     // ---- Select ------------------------------------------------------
-    // the Select contract: `out` arrives cleared
+    // the Select contract: `out` arrives cleared. A pending gate sweep
+    // freezes the iterate (its iteration runs only the sweep), so the
+    // draw is skipped entirely rather than taken and discarded —
+    // stateful policies (cyclic pointers, RNG streams) must not advance
+    // for a selection that can never be used.
     plan.selected.clear();
-    ls.selector.select(&mut plan.selected);
+    let gate_now = screen.is_some() && ls.screen.gate_pending;
+    if !gate_now {
+        ls.selector.select(&mut plan.selected);
+    }
     plan.hlo = ls.block_proposer.is_some();
 
     // `selected` must be duplicate-free for EVERY acceptor: the Propose
@@ -991,6 +1228,26 @@ fn plan_iteration(
         });
     }
 
+    // ---- screening: sweep schedule + threshold publication ----------
+    plan.screen_sweep = None;
+    if screen.is_some() {
+        plan.screen_thresh = ls.screen.thresh;
+        let periodic_due =
+            cfg.kkt_every > 0 && ls.iter > 0 && ls.iter % cfg.kkt_every == 0;
+        if ls.screen.gate_pending {
+            plan.screen_sweep = Some(SweepKind::Gate);
+            ls.screen.gate_pending = false;
+            // the iterate is frozen under the certificate: the Select
+            // block above skipped the draw, so no proposals and no
+            // updates land between the sweep and the stop decision — a
+            // clean gate then certifies exactly the returned w
+            debug_assert!(plan.selected.is_empty());
+        } else if periodic_due {
+            plan.screen_sweep = Some(SweepKind::Periodic);
+        }
+        ls.screen.last_sweep = plan.screen_sweep;
+    }
+
     // ---- gradient-path heuristic --------------------------------------
     // Precomputing dloss costs n `ell'` evaluations; on-the-fly costs one
     // per traversed nonzero (~|J| * mean_col_nnz). Pick the cheaper.
@@ -1002,6 +1259,12 @@ fn plan_iteration(
                     >= problem.n_samples() as f64
         }
     };
+    // a sweep reads the cached dloss for every zero-weight column — a
+    // full-set pass, where precomputation always wins — so it overrides
+    // the heuristic (and the force_dloss ablation knob) this iteration
+    if plan.screen_sweep.is_some() {
+        plan.use_dloss = true;
+    }
 
     // ---- update-path decision -----------------------------------------
     let threads = cfg.threads.max(1);
@@ -1496,6 +1759,153 @@ mod tests {
         let atomic = solve(&p, sel(), AcceptAll, &forced);
         assert_eq!(atomic.metrics.auto_cas_ratio, 0.0);
         assert_eq!(atomic.metrics.auto_switch_factor, 1.0);
+    }
+
+    #[test]
+    fn screening_prunes_and_still_descends() {
+        // l1-heavy problem: most coordinates stay at zero, screening
+        // must shrink the active set below k without hurting descent
+        let p = make_problem(40, 60, 24, false);
+        let run = |screening: bool| {
+            // GREEDY (full selection, single best accepted): every
+            // active coordinate is proposed each iteration, so the
+            // saved proposal work is directly visible in propose_nnz —
+            // and a deactivated coordinate always had phi = 0, so the
+            // screened greedy trajectory matches the unscreened one
+            let sel = FullSet { k: p.n_features() };
+            let mut c = cfg(1, 600);
+            c.screening = screening;
+            c.kkt_every = 16;
+            solve(&p, sel, GlobalBest, &c)
+        };
+        let plain = run(false);
+        let screened = run(true);
+        assert!(
+            (plain.objective - screened.objective).abs() < 1e-7,
+            "screened {} vs plain {}",
+            screened.objective,
+            plain.objective
+        );
+        assert_eq!(plain.metrics.active_cols, 0, "off => no active-set report");
+        assert!(
+            screened.metrics.active_cols > 0
+                && (screened.metrics.active_cols as usize) < p.n_features(),
+            "active set must shrink below k: {} of {}",
+            screened.metrics.active_cols,
+            p.n_features()
+        );
+        assert!(
+            screened.metrics.active_cols >= screened.nnz as u64,
+            "the support can never be deactivated"
+        );
+        assert!(screened.metrics.kkt_passes >= 1);
+        assert!(screened.metrics.propose_nnz < plain.metrics.propose_nnz,
+            "screening must reduce proposal work");
+    }
+
+    #[test]
+    fn screening_gates_tolerance_into_converged() {
+        let p = make_problem(41, 30, 12, false);
+        let sel = Cyclic {
+            next: 0,
+            k: p.n_features(),
+        };
+        let mut c = cfg(1, usize::MAX);
+        c.max_seconds = 30.0;
+        c.tol = 1e-10;
+        c.log_every = 10;
+        c.screening = true;
+        c.kkt_every = 8;
+        let out = solve(&p, sel, AcceptAll, &c);
+        assert_eq!(out.stop, StopReason::Converged);
+        assert!(out.metrics.kkt_passes >= 1, "the gate sweep must have run");
+        // the certificate: no frozen coordinate violates KKT at the end
+        let kkt = crate::coordinator::kkt::check(&p, &out.w, 1e-8);
+        assert!(
+            kkt.max_violation < 1e-4,
+            "converged iterate far from stationary: {kkt:?}"
+        );
+    }
+
+    #[test]
+    fn screening_multithreaded_consistent() {
+        // fused deactivations are atomic bit clears: 4 workers screening
+        // concurrently must keep z consistent and the support active
+        let p = make_problem(42, 48, 24, true);
+        let sel = RandomSubset {
+            rng: Pcg64::seeded(43),
+            k: p.n_features(),
+            size: 8,
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let mut c = cfg(4, 400);
+        c.screening = true;
+        c.kkt_every = 10;
+        let out = solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::all(),
+            &c,
+            EngineHooks::none(),
+        );
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{first} -> {}", out.objective);
+        assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+        assert!(out.metrics.active_cols >= out.nnz as u64);
+    }
+
+    #[test]
+    fn screening_with_line_search_keeps_support_active() {
+        // line search reads the live z, so it can land a nonzero step
+        // on a coordinate deactivated earlier in the same iteration —
+        // the update-site reactivation must preserve w != 0 => active
+        let p = make_problem(45, 40, 16, true);
+        let sel = RandomSubset {
+            rng: Pcg64::seeded(46),
+            k: p.n_features(),
+            size: 6,
+        };
+        let mut c = cfg(2, 500);
+        c.screening = true;
+        c.kkt_every = 10;
+        c.line_search_steps = 20;
+        let out = solve(&p, sel, AcceptAll, &c);
+        assert!(out.objective.is_finite());
+        assert!(
+            out.metrics.active_cols >= out.nnz as u64,
+            "a nonzero-weight coordinate left the active set: active = {}, nnz = {}",
+            out.metrics.active_cols,
+            out.nnz
+        );
+    }
+
+    #[test]
+    fn fast_kernels_agree_with_scalar_engine() {
+        // the unrolled gather re-associates the reduction, so no
+        // bit-exactness — but the solve must land on the same optimum
+        let p = make_problem(44, 40, 16, false);
+        let run = |fast: bool| {
+            let sel = Cyclic {
+                next: 0,
+                k: p.n_features(),
+            };
+            let mut c = cfg(1, 2000);
+            c.fast_kernels = fast;
+            c.force_dloss = Some(true); // exercise the unrolled dot path
+            solve(&p, sel, AcceptAll, &c)
+        };
+        let scalar = run(false);
+        let fast = run(true);
+        assert!(
+            (scalar.objective - fast.objective).abs() < 1e-9,
+            "{} vs {}",
+            scalar.objective,
+            fast.objective
+        );
+        for (a, b) in scalar.w.iter().zip(&fast.w) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
     }
 
     #[test]

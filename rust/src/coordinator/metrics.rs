@@ -22,11 +22,23 @@ pub struct Metrics {
     /// maps because the dense accumulators exceeded the memory budget
     /// (`EngineConfig::buffer_budget_mb`).
     pub spill_iters: AtomicU64,
+    /// Full-set KKT sweeps run by the screening layer (leader-stored).
+    pub kkt_passes: AtomicU64,
+    /// Coordinates a sweep returned to the active set because their
+    /// violation turned positive while deactivated (leader-stored).
+    pub reactivations: AtomicU64,
+    /// Active-set size after the latest sweep (leader-stored; the
+    /// engine replaces it with an exact popcount in the final
+    /// snapshot).
+    pub active_cols: AtomicU64,
     /// Nanoseconds spent in each phase (leader-measured).
     pub select_nanos: AtomicU64,
     pub propose_nanos: AtomicU64,
     pub accept_nanos: AtomicU64,
     pub update_nanos: AtomicU64,
+    /// Screen-phase time: the full-set KKT sweeps plus the dloss
+    /// refresh that precedes them on sweep iterations.
+    pub screen_nanos: AtomicU64,
     pub log_nanos: AtomicU64,
 }
 
@@ -48,10 +60,14 @@ impl Metrics {
             iterations: self.iterations.load(Relaxed),
             propose_nnz: self.propose_nnz.load(Relaxed),
             spill_iters: self.spill_iters.load(Relaxed),
+            kkt_passes: self.kkt_passes.load(Relaxed),
+            reactivations: self.reactivations.load(Relaxed),
+            active_cols: self.active_cols.load(Relaxed),
             select_secs: self.select_nanos.load(Relaxed) as f64 * 1e-9,
             propose_secs: self.propose_nanos.load(Relaxed) as f64 * 1e-9,
             accept_secs: self.accept_nanos.load(Relaxed) as f64 * 1e-9,
             update_secs: self.update_nanos.load(Relaxed) as f64 * 1e-9,
+            screen_secs: self.screen_nanos.load(Relaxed) as f64 * 1e-9,
             log_secs: self.log_nanos.load(Relaxed) as f64 * 1e-9,
             auto_cas_ratio: 0.0,
             auto_switch_factor: 0.0,
@@ -71,10 +87,25 @@ pub struct MetricsSnapshot {
     pub propose_nnz: u64,
     /// Buffered iterations that spilled to sparse maps (memory budget).
     pub spill_iters: u64,
+    /// Full-set KKT sweeps run by the screening layer
+    /// ([`crate::screen`]; 0 when screening is off).
+    pub kkt_passes: u64,
+    /// Coordinates sweeps returned to the active set after their KKT
+    /// violation turned positive while deactivated (screening's
+    /// repaired mistakes; 0 when screening is off).
+    pub reactivations: u64,
+    /// Active coordinates at the end of the solve — exact popcount of
+    /// the screening bitmask (sum over shards when sharded; 0 when
+    /// screening is off). Shrinking well below the feature count is the
+    /// whole point of the screening layer.
+    pub active_cols: u64,
     pub select_secs: f64,
     pub propose_secs: f64,
     pub accept_secs: f64,
     pub update_secs: f64,
+    /// Screen-phase seconds: full-set KKT sweeps plus the dloss refresh
+    /// preceding them on sweep iterations (0 when screening is off).
+    pub screen_secs: f64,
     pub log_secs: f64,
     /// Measured CAS-vs-plain-store cost ratio behind the fitted `Auto`
     /// update-path switch (0 when the solve never calibrated: forced

@@ -56,6 +56,20 @@ pub fn gradient_from_dloss(problem: &Problem, state: &SharedState, j: usize) -> 
     acc / problem.n_samples() as f64
 }
 
+/// [`gradient_from_dloss`] through the unrolled gather kernel
+/// ([`crate::sparse::CscMatrix::dot_col_fast`]) — the
+/// `EngineConfig::fast_kernels` path. Re-associates the reduction, so
+/// it is *not* bit-identical to the scalar gradient; the engine keeps
+/// the scalar path as the default.
+#[inline]
+pub fn gradient_from_dloss_fast(problem: &Problem, state: &SharedState, j: usize) -> f64 {
+    // SAFETY: Propose and screen phases have no dloss writer (the
+    // engine's unique-writer-per-phase protocol); the slice is scoped
+    // to this one kernel call.
+    let d = unsafe { state.dloss.plain_slice() };
+    problem.x.dot_col_fast(j, d) / problem.n_samples() as f64
+}
+
 /// Gradient along j computed directly from `z` (on-the-fly `ell'`).
 #[inline]
 pub fn gradient_from_z(problem: &Problem, state: &SharedState, j: usize) -> f64 {
@@ -74,6 +88,26 @@ pub fn gradient_from_z(problem: &Problem, state: &SharedState, j: usize) -> f64 
 pub fn propose(problem: &Problem, state: &SharedState, j: usize, use_dloss: bool) -> Proposal {
     let g = if use_dloss {
         gradient_from_dloss(problem, state, j)
+    } else {
+        gradient_from_z(problem, state, j)
+    };
+    let wj = state.w.get(j);
+    proposal_from_gradient(problem, j, wj, g)
+}
+
+/// [`propose`] with the unrolled gather kernel on the cached-dloss
+/// gradient path (`EngineConfig::fast_kernels`). The on-the-fly path is
+/// unchanged — it interleaves `ell'` evaluations with the gather and
+/// has no pure-dot inner loop to unroll.
+#[inline]
+pub fn propose_fast(
+    problem: &Problem,
+    state: &SharedState,
+    j: usize,
+    use_dloss: bool,
+) -> Proposal {
+    let g = if use_dloss {
+        gradient_from_dloss_fast(problem, state, j)
     } else {
         gradient_from_z(problem, state, j)
     };
@@ -124,6 +158,24 @@ mod tests {
                 &s.z_snapshot(),
             );
             assert!((a - full[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fast_gradient_path_matches_scalar() {
+        let p = problem(0.01);
+        let s = SharedState::from_warm_start(&p, &[0.2, -0.1, 0.4]);
+        refresh_dloss(&p, &s, 0, p.n_samples());
+        for j in 0..3 {
+            let scalar = gradient_from_dloss(&p, &s, j);
+            let fast = gradient_from_dloss_fast(&p, &s, j);
+            assert!((scalar - fast).abs() < 1e-14, "j={j}: {scalar} vs {fast}");
+            let a = propose(&p, &s, j, true);
+            let b = propose_fast(&p, &s, j, true);
+            assert!((a.delta - b.delta).abs() < 1e-12);
+            assert!((a.phi - b.phi).abs() < 1e-12);
+            // the on-the-fly arm of propose_fast is the scalar kernel
+            assert_eq!(propose(&p, &s, j, false), propose_fast(&p, &s, j, false));
         }
     }
 

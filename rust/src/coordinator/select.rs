@@ -33,7 +33,12 @@ pub const POLICY_STREAM: u64 = 0xA160;
 ///   thread, while the workers are parked at a barrier — implementations
 ///   may be freely stateful (cyclic pointers, RNGs, adaptive scores) and
 ///   need no internal synchronization. `Send` is required so a built
-///   solver can be moved to another thread before running.
+///   solver can be moved to another thread before running. Exception:
+///   with screening enabled the engine wraps policies in
+///   [`ScreenedSelect`](crate::screen::ScreenedSelect), which may call
+///   the inner `select` several times (redraws over the active set) or
+///   zero times (convergence-gate iterations) per engine iteration —
+///   see its docs before relying on call-per-iteration state.
 /// * The selection should be duplicate-free; the engine additionally
 ///   collapses repeats (first occurrence wins) before Propose, so a
 ///   sloppy custom policy degrades performance but not correctness.

@@ -59,6 +59,7 @@
 //!
 //! | layer | unit of parallelism | shared state | synchronization |
 //! |-------|---------------------|--------------|-----------------|
+//! | [`screen`] (`SolverBuilder::screening(true)`) | — (shrinks the *work*, not the workers) | per-pool [`ActiveSet`](screen::ActiveSet) bitmask | rides the engine's barriers (one extra crossing per KKT sweep) |
 //! | [`coordinator::engine`] | worker threads in one pool | one `z`/`w` ([`SharedState`](coordinator::problem::SharedState)) | phase spin barriers |
 //! | [`shard`] (`SolverBuilder::shards(n)`) | one engine pool per column shard | per-shard `z` *replica* | round-boundary reconcile barrier |
 //! | future: NUMA pinning / distributed backends | sockets / machines | replica per domain | same reconcile contract |
@@ -74,6 +75,19 @@
 //! reconciling replicas once per lockstep round. A NUMA-pinning or
 //! distributed backend plugs in at the same seam: it only has to speak
 //! the reconcile contract, not the engine's phase protocol.
+//!
+//! Orthogonal to both, the **screening layer** ([`screen`],
+//! `SolverBuilder::screening(true)`) attacks the *work per iteration*
+//! instead of its distribution: on l1 paths most coordinates sit at
+//! zero with slack subgradients forever, and KKT screening deactivates
+//! them so selection only draws from a shrinking active set
+//! ([`MetricsSnapshot::active_cols`](coordinator::metrics::MetricsSnapshot::active_cols)).
+//! Periodic full-set KKT sweeps reactivate any violator and gate every
+//! [`StopReason::Converged`](coordinator::convergence::StopReason::Converged),
+//! so the converged solution is provably the unscreened one. It wraps
+//! any [`Select`](coordinator::select::Select) policy — presets and
+//! custom ones screen for free — and composes with sharding (one active
+//! set per shard pool).
 //!
 //! ```no_run
 //! use gencd::prelude::*;
@@ -127,6 +141,7 @@ pub mod linalg;
 pub mod loss;
 pub mod prelude;
 pub mod runtime;
+pub mod screen;
 pub mod shard;
 pub mod simulate;
 pub mod solver;

@@ -53,6 +53,7 @@ fn run(args: &mut Args) -> anyhow::Result<()> {
         "fig1" => cmd_fig1(args),
         "fig2" => cmd_fig2(args),
         "shards" => cmd_shards(args),
+        "screen" => cmd_screen(args),
         "artifacts" => cmd_artifacts(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -72,6 +73,7 @@ SUBCOMMANDS
              [--threads N] [--seconds S] [--line-search N] [--csv FILE]
              [--update-path auto|atomic|buffered|conflict-free]
              [--shards N] [--shard-strategy contiguous|round-robin|min-overlap]
+             [--screening] [--kkt-every N] [--fast-kernels]
              [--set table.key=value]...   (e.g. solver.buffer_budget_mb=512)
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
              [--seconds S] [--threads N]     (warm-started lambda path)
@@ -85,6 +87,8 @@ SUBCOMMANDS
   fig2       [--scale F] [--seconds S] [--threads-list 1,2,4,...]
   shards     [--scale F] [--seconds S] [--shards-list 1,2,4] [--threads N]
              (sharded-layer scaling: per-shard replicas vs one pool)
+  screen     [--scale F] [--seconds S] [--threads N]
+             (screening on/off A-B: active set, KKT passes, saved work)
   artifacts  [--dir PATH] [--smoke]
 
 Datasets: dorothea, reuters, optionally suffixed @scale (reuters@0.1),
@@ -133,6 +137,15 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(v) = args.value("shard-strategy") {
         cfg.solver.shard_strategy = v;
+    }
+    if args.flag("screening") {
+        cfg.solver.screening = true;
+    }
+    if let Some(v) = args.value("kkt-every") {
+        cfg.solver.kkt_every = v.parse()?;
+    }
+    if args.flag("fast-kernels") {
+        cfg.solver.fast_kernels = true;
     }
     if let Some(v) = args.value("csv") {
         cfg.csv = Some(v);
@@ -187,6 +200,18 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
         );
     }
     println!("{}", res.summary());
+    if cfg.solver.screening {
+        // gate on the config, not the metric: active_cols == 0 is a
+        // legitimate outcome (lambda >= lambda_max prunes everything)
+        // and is exactly when the user most wants to see this line
+        println!(
+            "screening: {} of {} columns active | {} KKT sweeps | {} reactivations",
+            res.metrics.active_cols,
+            res.w.len(),
+            res.metrics.kkt_passes,
+            res.metrics.reactivations,
+        );
+    }
     if kkt {
         // load_dataset already applied cfg.dataset.normalize
         let ds = driver::load_dataset(&cfg)?;
@@ -209,6 +234,7 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
             ("propose", m.propose_secs),
             ("accept", m.accept_secs),
             ("update", m.update_secs),
+            ("screen", m.screen_secs),
         ];
         println!("phase breakdown (leader wall-clock):");
         for (name, secs) in phases {
@@ -455,6 +481,14 @@ fn cmd_shards(args: &mut Args) -> anyhow::Result<()> {
     let threads: usize = args.get("threads", 4)?;
     args.finish()?;
     gencd::bench_harness::experiments::print_shard_scaling(&shards, threads);
+    Ok(())
+}
+
+fn cmd_screen(args: &mut Args) -> anyhow::Result<()> {
+    bench_env(args, 2.0)?;
+    let threads: usize = args.get("threads", 4)?;
+    args.finish()?;
+    gencd::bench_harness::experiments::print_screening(threads);
     Ok(())
 }
 

@@ -5,7 +5,8 @@
 //! extension-point traits ([`Select`], [`Accept`], [`Observer`]), the
 //! preset catalogue ([`Algorithm`]), the engine knobs most callers
 //! touch ([`UpdatePath`], [`EngineConfig`]), the sharded execution
-//! layer's surface ([`ShardStrategy`], [`ShardPlan`]), the losses, and
+//! layer's surface ([`ShardStrategy`], [`ShardPlan`]), the screening
+//! layer's surface ([`ActiveSet`], [`ScreenedSelect`]), the losses, and
 //! the result types — plus [`ControlFlow`], which observers return.
 
 pub use crate::coordinator::accept::{Accept, AcceptContext, ThreadBest};
@@ -19,6 +20,7 @@ pub use crate::coordinator::observer::{IterationInfo, Observer};
 pub use crate::coordinator::problem::{Problem, SharedState};
 pub use crate::coordinator::select::Select;
 pub use crate::loss::{Logistic, Loss, SmoothedHinge, Squared};
+pub use crate::screen::{ActiveSet, ScreenedSelect};
 pub use crate::shard::{ShardPlan, ShardStrategy};
 pub use crate::solver::{Solver, SolverBuilder};
 pub use crate::sparse::{CooBuilder, CscMatrix};

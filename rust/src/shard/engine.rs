@@ -114,10 +114,28 @@ pub struct ShardedConfig {
     /// pools so the whole sharded solve honors one figure.
     pub buffer_budget_mb: usize,
     pub barrier_spin: u32,
+    /// Active-set KKT screening, **one active set per shard pool**:
+    /// each pool wraps its own Select policy and runs its own full-set
+    /// sweeps over its own columns ([`crate::screen`]). Sweeps land at
+    /// round boundaries by construction (one engine iteration == one
+    /// round), i.e. right after the reconcile refreshed the replicas,
+    /// so reactivation always judges the reconciled residual. The
+    /// coordinator gates its tolerance stop with a **global** KKT check
+    /// on the reconciled iterate (a zero-weight coordinate with
+    /// `|g| > lam` refuses the stop until the pools' sweeps repair it),
+    /// so a sharded screened solve also only converges as
+    /// [`StopReason::Converged`], certified.
+    pub screening: bool,
+    /// Per-pool full-set KKT sweep cadence in rounds.
+    pub kkt_every: usize,
+    /// Unrolled gather kernels in every pool (see
+    /// `EngineConfig::fast_kernels`).
+    pub fast_kernels: bool,
 }
 
 impl Default for ShardedConfig {
     fn default() -> Self {
+        let ecfg = EngineConfig::default();
         Self {
             line_search_steps: 0,
             max_rounds: usize::MAX,
@@ -126,6 +144,9 @@ impl Default for ShardedConfig {
             log_every: 0,
             buffer_budget_mb: 1024,
             barrier_spin: DEFAULT_SPIN,
+            screening: ecfg.screening,
+            kkt_every: ecfg.kkt_every,
+            fast_kernels: ecfg.fast_kernels,
         }
     }
 }
@@ -167,6 +188,13 @@ fn canonical_z(sh: &ReconcileShared<'_>) -> &SyncF64Vec {
 struct Coordinator<'a> {
     global: &'a Problem,
     cols: &'a [Vec<u32>],
+    /// `owned[j]`: some shard's column map covers global column j. The
+    /// screening gate only judges owned columns — an uncovered column
+    /// is structurally frozen at zero by the caller's partition (legal
+    /// per [`solve_sharded`]'s contract), so no pool could ever repair
+    /// a "violation" there and the unscreened solve would not move it
+    /// either.
+    owned: &'a [bool],
     timer: &'a Timer,
     cfg: &'a ShardedConfig,
     history: History,
@@ -220,7 +248,53 @@ impl Coordinator<'_> {
                     self.tol_hits = 0;
                 }
                 if self.tol_hits >= 3 {
-                    stop = Some(StopReason::Tolerance);
+                    if self.cfg.screening {
+                        // Cross-shard convergence gate: per-pool active
+                        // sets are pool-internal, so certify the frozen
+                        // coordinates directly on the *global* iterate —
+                        // one O(nnz) full gradient at the reconciled
+                        // residual, only on gate attempts. A zero-weight
+                        // coordinate with |g| > lam is either screened
+                        // out or simply unvisited; either way the solve
+                        // is not done, so refuse the stop and let the
+                        // pools' periodic sweeps reactivate it. A clean
+                        // pass certifies the screened solution as the
+                        // unscreened optimum's: report Converged.
+                        let g = loss::full_gradient(
+                            self.global.loss.as_ref(),
+                            &self.global.x,
+                            &self.global.y,
+                            &z,
+                        );
+                        // Margined test (screen::GATE_MARGIN): this
+                        // gradient is computed with different summation
+                        // order than the pools' dot_col gradients, so a
+                        // strict |g| > lam test could flag an ulp-level
+                        // "violation" the owning pool measures as
+                        // satisfied and will never repair — refusing
+                        // the stop forever.
+                        let lam = self.global.lam;
+                        let violated = self
+                            .scratch_w
+                            .iter()
+                            .zip(&g)
+                            .zip(self.owned)
+                            .any(|((&wj, &gj), &owned)| {
+                                // only shard-owned columns: an uncovered
+                                // column is frozen by the partition, not
+                                // by screening — no sweep can repair it
+                                owned
+                                    && wj == 0.0
+                                    && crate::screen::violates_at_zero(gj, lam)
+                            });
+                        if violated {
+                            self.tol_hits = 0;
+                        } else {
+                            stop = Some(StopReason::Converged);
+                        }
+                    } else {
+                        stop = Some(StopReason::Tolerance);
+                    }
                 }
             }
         }
@@ -352,8 +426,10 @@ impl Drop for PoisonReconcileOnPanic<'_> {
 /// If `specs` is empty, a spec's dimensions disagree with `global`, a
 /// column map holds an out-of-range or *duplicated* global column (two
 /// shards owning one column would silently double-count its residual
-/// contribution at every reconcile), or a warm start has the wrong
-/// length — programming errors, all caught before any threads spawn.
+/// contribution at every reconcile), screening is enabled with
+/// `kkt_every == 0` (pools never gate, so no sweep would ever repair a
+/// deactivation), or a warm start has the wrong length — programming
+/// errors, all caught before any threads spawn.
 /// The maps need not cover every column: uncovered columns simply stay
 /// at zero (the builder always produces an exact cover).
 pub fn solve_sharded(
@@ -364,6 +440,16 @@ pub fn solve_sharded(
 ) -> SolveOutput {
     let s_count = specs.len();
     assert!(s_count >= 1, "solve_sharded: need at least one shard");
+    // The engine tolerates kkt_every = 0 as an ablation (the gate sweep
+    // still reactivates), but sharded pools run with tol = 0 and never
+    // gate — periodic sweeps are their ONLY reactivation path, so
+    // screening without them would freeze fused deactivations forever.
+    assert!(
+        !cfg.screening || cfg.kkt_every >= 1,
+        "solve_sharded: screening requires kkt_every >= 1 (pool engines \
+         never run gate sweeps; the periodic cadence is the only \
+         reactivation path)"
+    );
     let n = global.n_samples();
     let k = global.n_features();
 
@@ -451,6 +537,9 @@ pub fn solve_sharded(
         update_path,
         buffer_budget_mb: cfg.buffer_budget_mb / s_count,
         barrier_spin: cfg.barrier_spin,
+        screening: cfg.screening,
+        kkt_every: cfg.kkt_every,
+        fast_kernels: cfg.fast_kernels,
     };
 
     let mut outs: Vec<SolveOutput> = Vec::with_capacity(s_count);
@@ -465,6 +554,7 @@ pub fn solve_sharded(
             let coordinator = (s == 0).then(|| Coordinator {
                 global,
                 cols: &cols_all,
+                owned: &owned,
                 timer: &timer,
                 cfg,
                 history: History::default(),
@@ -537,10 +627,15 @@ pub fn solve_sharded(
         agg.proposals += o.metrics.proposals;
         agg.propose_nnz += o.metrics.propose_nnz;
         agg.spill_iters += o.metrics.spill_iters;
+        // screening: per-shard active sets — totals sum across pools
+        agg.kkt_passes += o.metrics.kkt_passes;
+        agg.reactivations += o.metrics.reactivations;
+        agg.active_cols += o.metrics.active_cols;
         agg.select_secs += o.metrics.select_secs;
         agg.propose_secs += o.metrics.propose_secs;
         agg.accept_secs += o.metrics.accept_secs;
         agg.update_secs += o.metrics.update_secs;
+        agg.screen_secs += o.metrics.screen_secs;
         agg.log_secs += o.metrics.log_secs;
         agg.auto_cas_ratio = agg.auto_cas_ratio.max(o.metrics.auto_cas_ratio);
         agg.auto_switch_factor = agg.auto_switch_factor.max(o.metrics.auto_switch_factor);

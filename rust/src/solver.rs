@@ -234,6 +234,9 @@ impl Solver {
             log_every: self.cfg.log_every,
             buffer_budget_mb: self.cfg.buffer_budget_mb,
             barrier_spin: self.cfg.barrier_spin,
+            screening: self.cfg.screening,
+            kkt_every: self.cfg.kkt_every,
+            fast_kernels: self.cfg.fast_kernels,
         };
         solve_sharded(
             &self.problem,
@@ -272,6 +275,9 @@ pub struct SolverBuilder {
     warm_start: Option<Vec<f64>>,
     shards: usize,
     shard_strategy: ShardStrategy,
+    screening: bool,
+    kkt_every: usize,
+    fast_kernels: bool,
 }
 
 impl Default for SolverBuilder {
@@ -303,6 +309,9 @@ impl Default for SolverBuilder {
             warm_start: None,
             shards: 1,
             shard_strategy: ShardStrategy::Contiguous,
+            screening: ecfg.screening,
+            kkt_every: ecfg.kkt_every,
+            fast_kernels: ecfg.fast_kernels,
         }
     }
 }
@@ -480,6 +489,37 @@ impl SolverBuilder {
         self
     }
 
+    /// Active-set KKT screening ([`crate::screen`]; default off).
+    /// Restricts selection to coordinates whose optimality conditions
+    /// are not yet confidently satisfied; periodic full-set KKT sweeps
+    /// ([`kkt_every`](Self::kkt_every)) reactivate any violator, and a
+    /// sweep gates every
+    /// [`StopReason::Converged`](crate::coordinator::convergence::StopReason::Converged),
+    /// so the converged solution is identical to the unscreened one.
+    /// Works with every preset and custom policy, and per shard pool
+    /// when sharded. Requires `lambda > 0` (validated at build time).
+    pub fn screening(mut self, screening: bool) -> Self {
+        self.screening = screening;
+        self
+    }
+
+    /// Full-set KKT sweep cadence in iterations for
+    /// [`screening`](Self::screening) (default 16; must be >= 1 when
+    /// screening is on).
+    pub fn kkt_every(mut self, every: usize) -> Self {
+        self.kkt_every = every;
+        self
+    }
+
+    /// Route hot gathers through the 4-way unrolled, prefetching
+    /// kernels ([`crate::sparse::CscMatrix::dot_col_fast`]). Default
+    /// off: the unrolled reduction re-associates floating point, so the
+    /// scalar path stays the bit-exactness reference.
+    pub fn fast_kernels(mut self, fast: bool) -> Self {
+        self.fast_kernels = fast;
+        self
+    }
+
     /// Column-normalize the matrix at build time (the paper's setting;
     /// default `false` — the matrix is used exactly as given).
     pub fn normalize(mut self, normalize: bool) -> Self {
@@ -551,6 +591,19 @@ impl SolverBuilder {
             self.shards >= 1,
             "SolverBuilder: shards must be >= 1 (1 = the single engine pool)"
         );
+        if self.screening {
+            anyhow::ensure!(
+                self.lambda > 0.0,
+                "SolverBuilder: screening requires lambda > 0 — KKT screening \
+                 deactivates coordinates with subgradient slack, and an \
+                 unregularized problem has none"
+            );
+            anyhow::ensure!(
+                self.kkt_every >= 1,
+                "SolverBuilder: screening requires kkt_every >= 1 (the full-set \
+                 KKT sweep cadence is the reactivation safety net)"
+            );
+        }
         // effective shard count: never more shards than columns
         let shards = self.shards.min(x.n_cols().max(1));
         if shards > 1 {
@@ -681,6 +734,9 @@ impl SolverBuilder {
             force_dloss: None,
             update_path,
             buffer_budget_mb: self.buffer_budget_mb,
+            screening: self.screening,
+            kkt_every: self.kkt_every,
+            fast_kernels: self.fast_kernels,
             ..Default::default()
         };
 
@@ -1016,6 +1072,31 @@ mod tests {
             .build()
             .is_err());
         assert!(base().shards(2).build().is_ok());
+        // screening: needs a real l1 penalty and a sweep cadence
+        assert!(base().lambda(0.0).screening(true).build().is_err());
+        assert!(base().screening(true).kkt_every(0).build().is_err());
+        assert!(base().screening(true).build().is_ok());
+        // kkt_every = 0 is only rejected when screening is on
+        assert!(base().kkt_every(0).build().is_ok());
+    }
+
+    #[test]
+    fn screening_knobs_reach_the_engine() {
+        let (x, y) = small_xy(9, 20, 10);
+        let solver = Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .lambda(1e-3)
+            .algorithm(Algorithm::Scd)
+            .screening(true)
+            .kkt_every(7)
+            .fast_kernels(true)
+            .build()
+            .unwrap();
+        let cfg = solver.engine_config();
+        assert!(cfg.screening);
+        assert_eq!(cfg.kkt_every, 7);
+        assert!(cfg.fast_kernels);
     }
 
     #[test]

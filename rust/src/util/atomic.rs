@@ -196,6 +196,53 @@ impl SyncF64Vec {
         (0..self.len()).map(|i| self.get(i)).collect()
     }
 
+    /// Borrow the whole array as a plain `&[f64]` — the zero-cost view
+    /// the unrolled gather kernels ([`CscMatrix::dot_col_fast`]) need:
+    /// per-element [`Self::get`] carries a bounds check the optimizer
+    /// cannot always hoist out of a 4-way-unrolled loop.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee **no write of any element** (plain or
+    /// atomic) overlaps the returned slice's lifetime — the same phase
+    /// contract as [`Self::get`], extended from one element to all of
+    /// them. The engine uses this only inside phases where the array has
+    /// no writer (e.g. `dloss` during Propose/screen), with the slice
+    /// scoped to a single kernel call.
+    ///
+    /// [`CscMatrix::dot_col_fast`]: crate::sparse::CscMatrix::dot_col_fast
+    #[inline(always)]
+    pub unsafe fn plain_slice(&self) -> &[f64] {
+        // UnsafeCell::raw_get keeps the whole-slab provenance while
+        // unwrapping the cell type (repr(transparent) over f64)
+        std::slice::from_raw_parts(
+            UnsafeCell::raw_get(self.cells.as_ptr().add(self.offset)),
+            self.len,
+        )
+    }
+
+    /// Mutable variant of [`Self::plain_slice`] for the unrolled scatter
+    /// kernels ([`CscMatrix::axpy_col_fast`]).
+    ///
+    /// # Safety
+    ///
+    /// The caller must be the array's **unique accessor** (no other
+    /// read or write, plain or atomic, on any thread) for the slice's
+    /// lifetime. The engine only uses this on single-worker update
+    /// phases, scoped to one kernel call; handing overlapping mutable
+    /// slices to two threads would be instant UB even on disjoint
+    /// indices.
+    ///
+    /// [`CscMatrix::axpy_col_fast`]: crate::sparse::CscMatrix::axpy_col_fast
+    #[allow(clippy::mut_from_ref)]
+    #[inline(always)]
+    pub unsafe fn plain_slice_mut(&self) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(
+            UnsafeCell::raw_get(self.cells.as_ptr().add(self.offset)),
+            self.len,
+        )
+    }
+
     /// Overwrite from a slice (lengths must match).
     pub fn copy_from(&self, src: &[f64]) {
         assert_eq!(src.len(), self.len(), "length mismatch");
@@ -414,6 +461,19 @@ mod tests {
             assert_eq!(addr % 128, 0, "len={len}: base {addr:#x}");
             assert_eq!(v.len(), len);
         }
+    }
+
+    #[test]
+    fn plain_slices_alias_element_views() {
+        let v = SyncF64Vec::zeros(5);
+        v.set(2, 3.0);
+        // SAFETY: single-threaded test, no concurrent access
+        unsafe {
+            assert_eq!(v.plain_slice(), &[0.0, 0.0, 3.0, 0.0, 0.0]);
+            v.plain_slice_mut()[4] = 7.0;
+        }
+        assert_eq!(v.get(4), 7.0);
+        assert_eq!(v[4].load(Relaxed), 7.0);
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Differential tests for the active-set screening layer
+//! (`gencd::screen`).
+//!
+//! * screening **off** (the default) reproduces the raw engine
+//!   bit-exactly at T = 1 — none of the screening machinery may touch
+//!   the unscreened path;
+//! * every `Algorithm` preset run with screening **on** converges to
+//!   the same optimum as the unscreened solver (objective within 1e-12
+//!   on a planted squared-loss problem) — the convergence-safety
+//!   acceptance criterion;
+//! * a tolerance stop under screening is upgraded to
+//!   `StopReason::Converged` only through the gating full-set KKT
+//!   sweep, and the final iterate certifies;
+//! * `MetricsSnapshot::active_cols` shrinks below the feature count on
+//!   the planted l1 problem while never dropping below the support;
+//! * screening composes with the sharded execution layer (one active
+//!   set per shard pool).
+
+use gencd::coordinator::algorithms::{instantiate, Algorithm, Preprocessed};
+use gencd::coordinator::convergence::StopReason;
+use gencd::coordinator::engine::{self, EngineConfig, EngineHooks};
+use gencd::coordinator::kkt;
+use gencd::coordinator::problem::{Problem, SharedState};
+use gencd::loss::Squared;
+use gencd::shard::ShardStrategy;
+use gencd::sparse::io::Dataset;
+use gencd::sparse::{CooBuilder, CscMatrix};
+use gencd::util::Pcg64;
+use gencd::{Solver, SolverBuilder};
+
+/// Random sparse design with a planted 3-coordinate signal; squared
+/// loss so both solvers can reach the unique lasso optimum to machine
+/// precision (the same construction as `rust/tests/sharding.rs`).
+fn planted_xy(seed: u64, n: usize, k: usize) -> (CscMatrix, Vec<f64>) {
+    let mut rng = Pcg64::seeded(seed);
+    let mut b = CooBuilder::new(n, k);
+    for j in 0..k {
+        for i in 0..n {
+            if rng.next_f64() < 0.25 {
+                b.push(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    let mut x = b.build();
+    x.normalize_columns();
+    let wstar: Vec<f64> = (0..k)
+        .map(|j| if j < 3 { 1.5 } else { 0.0 })
+        .collect();
+    let y = x.matvec(&wstar);
+    (x, y)
+}
+
+fn problem(x: &CscMatrix, y: &[f64], lam: f64) -> Problem {
+    Problem::new(
+        Dataset {
+            x: x.clone(),
+            y: y.to_vec(),
+            name: "screen-t".into(),
+        },
+        Box::new(Squared),
+        lam,
+    )
+}
+
+fn builder(x: &CscMatrix, y: &[f64], alg: Algorithm) -> SolverBuilder {
+    Solver::builder()
+        .matrix(x.clone())
+        .labels(y.to_vec())
+        .loss(Squared)
+        .lambda(1e-2)
+        .algorithm(alg)
+        .seed(3)
+        .max_seconds(120.0)
+        .log_every(500)
+}
+
+#[test]
+fn screening_off_is_bit_exact_vs_raw_engine() {
+    // acceptance criterion: with screening off (the default) the
+    // builder path replays the raw engine bit-for-bit at T = 1 — the
+    // screening machinery must not exist on that path
+    let (x, y) = planted_xy(1, 40, 16);
+    let k = x.n_cols();
+    for alg in [Algorithm::Ccd, Algorithm::Scd, Algorithm::Shotgun] {
+        let built = builder(&x, &y, alg).max_iters(400).build().unwrap().solve();
+
+        let pre = Preprocessed::for_algorithm(alg, &x, gencd::coloring::Strategy::Greedy, 3);
+        let inst = instantiate(alg, k, 1, 0, 0, &pre, 3).unwrap();
+        let p = problem(&x, &y, 1e-2);
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let cfg = EngineConfig {
+            threads: 1,
+            max_iters: 400,
+            max_seconds: 120.0,
+            log_every: 500,
+            ..Default::default()
+        };
+        let raw = engine::solve_from(
+            &p,
+            &state,
+            inst.selector,
+            inst.acceptor,
+            &cfg,
+            EngineHooks::none(),
+        );
+        assert_eq!(built.w, raw.w, "{}: w diverged bit-wise", alg.name());
+        assert_eq!(built.objective, raw.objective, "{}", alg.name());
+        assert_eq!(built.metrics.active_cols, 0);
+        assert_eq!(built.metrics.kkt_passes, 0);
+    }
+}
+
+#[test]
+fn all_presets_screened_match_unscreened_objective() {
+    // acceptance criterion: screening is convergence-safe for every
+    // preset — run both to convergence on the planted problem and
+    // compare final objectives to 1e-12
+    let (x, y) = planted_xy(3, 60, 24);
+    let iters = 12_000usize;
+    for alg in Algorithm::ALL {
+        let plain = builder(&x, &y, alg)
+            .max_iters(iters)
+            .build()
+            .unwrap()
+            .solve();
+        let screened = builder(&x, &y, alg)
+            .screening(true)
+            .kkt_every(16)
+            .max_iters(iters)
+            .build()
+            .unwrap()
+            .solve();
+        let gap = (plain.objective - screened.objective).abs();
+        assert!(
+            gap <= 1e-12,
+            "{}: unscreened {} vs screened {} (gap {gap:.3e})",
+            alg.name(),
+            plain.objective,
+            screened.objective
+        );
+        assert!(
+            screened.metrics.kkt_passes >= 1,
+            "{}: the safety sweep must have run",
+            alg.name()
+        );
+        // the screened result is internally consistent: reported
+        // objective matches a from-scratch residual
+        let p = problem(&x, &y, 1e-2);
+        let z = p.x.matvec(&screened.w);
+        assert!(
+            (p.objective(&screened.w, &z) - screened.objective).abs() < 1e-9,
+            "{}: screened z inconsistent with w",
+            alg.name()
+        );
+    }
+}
+
+#[test]
+fn converged_is_gated_by_a_clean_sweep() {
+    let (x, y) = planted_xy(5, 40, 16);
+    let screened = builder(&x, &y, Algorithm::Ccd)
+        .screening(true)
+        .kkt_every(8)
+        .tol(1e-10)
+        .log_every(10)
+        .build()
+        .unwrap()
+        .solve();
+    assert_eq!(
+        screened.stop,
+        StopReason::Converged,
+        "a screened tolerance stop must arrive as Converged"
+    );
+    assert!(screened.metrics.kkt_passes >= 1, "the gate sweep must run");
+    // the certificate: every frozen coordinate satisfies KKT exactly,
+    // so the full violation is only the tol-level slop of the active
+    // coordinates
+    let p = problem(&x, &y, 1e-2);
+    let report = kkt::check(&p, &screened.w, 1e-8);
+    assert!(
+        report.max_violation < 1e-5,
+        "converged iterate far from stationary: {report:?}"
+    );
+    // the unscreened solver under the same tol agrees on the optimum
+    // (and keeps reporting Tolerance)
+    let plain = builder(&x, &y, Algorithm::Ccd)
+        .tol(1e-10)
+        .log_every(10)
+        .build()
+        .unwrap()
+        .solve();
+    assert_eq!(plain.stop, StopReason::Tolerance);
+    assert!(
+        (plain.objective - screened.objective).abs() < 1e-9,
+        "{} vs {}",
+        plain.objective,
+        screened.objective
+    );
+}
+
+#[test]
+fn active_cols_shrink_below_p_and_cover_the_support() {
+    let (x, y) = planted_xy(7, 80, 40);
+    let k = x.n_cols();
+    let out = builder(&x, &y, Algorithm::Shotgun)
+        .screening(true)
+        .max_iters(6_000)
+        .build()
+        .unwrap()
+        .solve();
+    assert!(
+        out.metrics.active_cols > 0 && (out.metrics.active_cols as usize) < k,
+        "active set must shrink below p: {} of {k}",
+        out.metrics.active_cols
+    );
+    assert!(
+        out.metrics.active_cols >= out.nnz as u64,
+        "the support (nnz = {}) can never be deactivated, active = {}",
+        out.nnz,
+        out.metrics.active_cols
+    );
+    assert!(out.metrics.kkt_passes >= 1);
+}
+
+#[test]
+fn sharded_screened_solve_matches_unscreened_unsharded() {
+    // screening composes with the sharded layer: one active set per
+    // shard pool, reactivation sweeps at round boundaries
+    let (x, y) = planted_xy(9, 60, 24);
+    let iters = 12_000usize;
+    let plain = builder(&x, &y, Algorithm::Shotgun)
+        .max_iters(iters)
+        .build()
+        .unwrap()
+        .solve();
+    let sharded = builder(&x, &y, Algorithm::Shotgun)
+        .screening(true)
+        .shards(3)
+        .threads(3)
+        .shard_strategy(ShardStrategy::MinOverlap)
+        .max_iters(iters)
+        .build()
+        .unwrap()
+        .solve();
+    assert_eq!(sharded.metrics.shards, 3);
+    let gap = (plain.objective - sharded.objective).abs();
+    assert!(
+        gap <= 1e-12,
+        "unscreened-unsharded {} vs screened-sharded {} (gap {gap:.3e})",
+        plain.objective,
+        sharded.objective
+    );
+    // per-shard active sets sum below the column count and cover the
+    // support; sweeps ran in every pool
+    assert!(
+        sharded.metrics.active_cols > 0
+            && (sharded.metrics.active_cols as usize) < x.n_cols(),
+        "summed active sets must shrink: {} of {}",
+        sharded.metrics.active_cols,
+        x.n_cols()
+    );
+    assert!(sharded.metrics.active_cols >= sharded.nnz as u64);
+    assert!(sharded.metrics.kkt_passes >= 3, "every pool sweeps");
+}
+
+#[test]
+fn sharded_screened_tolerance_stop_is_gated() {
+    // the cross-shard gate: the coordinator refuses a tolerance stop
+    // while any zero-weight coordinate of the global iterate violates
+    // KKT, and a clean pass arrives as Converged (never Tolerance)
+    let (x, y) = planted_xy(13, 40, 16);
+    let out = builder(&x, &y, Algorithm::Shotgun)
+        .screening(true)
+        .shards(2)
+        .threads(2)
+        .tol(1e-10)
+        .log_every(10)
+        .build()
+        .unwrap()
+        .solve();
+    assert_eq!(out.stop, StopReason::Converged);
+    let p = problem(&x, &y, 1e-2);
+    let report = kkt::check(&p, &out.w, 1e-8);
+    assert!(
+        report.max_violation < 1e-5,
+        "gated sharded iterate far from stationary: {report:?}"
+    );
+}
+
+#[test]
+fn screened_fast_kernels_still_safe() {
+    // the fused sweep through the unrolled gather and the scalar sweep
+    // land on the same optimum
+    let (x, y) = planted_xy(11, 50, 20);
+    let run = |fast: bool| {
+        builder(&x, &y, Algorithm::Ccd)
+            .screening(true)
+            .fast_kernels(fast)
+            .max_iters(8_000)
+            .build()
+            .unwrap()
+            .solve()
+    };
+    let scalar = run(false);
+    let fast = run(true);
+    assert!(
+        (scalar.objective - fast.objective).abs() < 1e-10,
+        "{} vs {}",
+        scalar.objective,
+        fast.objective
+    );
+}
