@@ -331,6 +331,135 @@ fn main() {
     );
     report.push("shard_reconcile_ns_per_sample", s_rec.best * 1e9 / n as f64);
 
+    // ---- NUMA: pinned vs unpinned replica scatter ----------------------------
+    // The §NUMA row: each shard thread scatters into its own replica,
+    // once with threads pinned round-robin across NUMA nodes (replica
+    // first-touched on the pinned thread => node-local) and once
+    // unpinned (the scheduler migrates threads across sockets and the
+    // replica pages stay wherever first touch put them). On a
+    // single-node box the two rows measure the same thing — the
+    // topology line says which reading you got.
+    let topo = gencd::util::topo::Topology::detect();
+    println!(
+        "\nNUMA scatter: {} node(s) detected{}",
+        topo.n_nodes(),
+        if topo.n_nodes() < 2 {
+            " — pinned == unpinned on this host"
+        } else {
+            ""
+        }
+    );
+    let scatter_pass = |pin: bool| {
+        // fresh replicas per measurement so first touch happens on the
+        // (possibly pinned) scatter thread, like the shard layer does
+        std::thread::scope(|scope| {
+            let problem = &problem;
+            let topo = &topo;
+            for (t, cols) in mt_cols.iter().enumerate() {
+                scope.spawn(move || {
+                    if pin && topo.n_nodes() >= 2 {
+                        topo.pin_thread_to_node(t % topo.n_nodes());
+                    }
+                    let rep = SyncF64Vec::zeros(problem.n_samples());
+                    for &j in cols {
+                        let (rows, vals) = problem.x.col(j);
+                        for (&i, &v) in rows.iter().zip(vals) {
+                            rep.add(i as usize, 1e-12 * v);
+                        }
+                    }
+                    std::hint::black_box(rep.get(0));
+                });
+            }
+        });
+    };
+    let s_unpin = bench_loop(0.5, 5, || scatter_pass(false));
+    println!(
+        "scatter/unpinned   {:>9.2} ns/nnz             {s_unpin}",
+        s_unpin.best * 1e9 / mt_nnz as f64
+    );
+    report.push(
+        "replica_scatter_unpinned_ns_per_nnz",
+        s_unpin.best * 1e9 / mt_nnz as f64,
+    );
+    let s_pin = bench_loop(0.5, 5, || scatter_pass(true));
+    println!(
+        "scatter/pinned     {:>9.2} ns/nnz             {s_pin}",
+        s_pin.best * 1e9 / mt_nnz as f64
+    );
+    report.push(
+        "replica_scatter_pinned_ns_per_nnz",
+        s_pin.best * 1e9 / mt_nnz as f64,
+    );
+    report.push("replica_scatter_pin_speedup", s_unpin.best / s_pin.best);
+
+    // ---- reconcile: dense full-scan vs dirty-chunk delta fold ----------------
+    // The delta-reconcile row: same fold arithmetic, but only chunks a
+    // dirty map flags (~5% here, the screened-run shape) are visited —
+    // shard_reconcile_ns_per_sample above is the dense baseline.
+    use gencd::util::par::{DirtyChunks, DIRTY_CHUNK_ELEMS};
+    let dirty: Vec<DirtyChunks> = (0..shards).map(|_| DirtyChunks::new(n)).collect();
+    for (t, cols) in mt_cols.iter().enumerate() {
+        // mark ~5% of each shard's columns' rows, like a settled
+        // screened run where most of z never moves
+        for &j in cols.iter().step_by(20) {
+            let (rows, _) = problem.x.col(j);
+            for &i in rows {
+                dirty[t].mark(i as usize);
+            }
+        }
+    }
+    let frac = dirty.iter().map(|d| d.count()).max().unwrap_or(0) as f64
+        / dirty[0].n_chunks() as f64;
+    let s_delta = bench_loop(0.3, 5, || {
+        std::thread::scope(|scope| {
+            let replicas = &replicas;
+            let z_canon = &z_canon;
+            let dirty = &dirty;
+            for t in 0..shards {
+                scope.spawn(move || {
+                    let range = aligned_chunk(n, t, shards);
+                    let c_lo = range.start / DIRTY_CHUNK_ELEMS;
+                    let c_hi = range.end.div_ceil(DIRTY_CHUNK_ELEMS);
+                    for c in c_lo..c_hi {
+                        if !dirty.iter().any(|d| d.is_dirty(c)) {
+                            continue;
+                        }
+                        let lo = c * DIRTY_CHUNK_ELEMS;
+                        let hi = ((c + 1) * DIRTY_CHUNK_ELEMS).min(range.end);
+                        for i in lo..hi {
+                            let base = z_canon.get(i);
+                            let mut acc = base;
+                            for rep in replicas {
+                                let d = rep.get(i) - base;
+                                if d != 0.0 {
+                                    acc += d;
+                                }
+                            }
+                            for rep in replicas {
+                                if rep.get(i) != acc {
+                                    rep.set(i, acc);
+                                }
+                            }
+                            if acc != base {
+                                z_canon.set(i, acc);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    });
+    println!(
+        "shard/delta-rec    {:>9.2} ns/sample ({:.0}% dirty) {s_delta}",
+        s_delta.best * 1e9 / n as f64,
+        frac * 100.0
+    );
+    report.push(
+        "reconcile_delta_ns_per_sample",
+        s_delta.best * 1e9 / n as f64,
+    );
+    report.push("reconcile_delta_speedup", s_rec.best / s_delta.best);
+
     // ---- screening: full vs screened proposal sweep --------------------------
     // The tentpole row: proposing over every column (GREEDY's Propose
     // phase, the O(p) shape) vs over a 5% active set via the screening

@@ -301,6 +301,60 @@ pub fn print_shard_scaling(shards_list: &[usize], threads: usize) {
     }
 }
 
+/// NUMA/cadence experiment (the `gencd numa` subcommand): the PR-5
+/// shard-layer perf levers A/B'd at an equal time budget — thread
+/// pinning + first-touch replicas on vs off, and the reconcile cadence
+/// fixed-every-round vs adaptive (max 8 rounds between reconciles).
+/// Reported per run: objective (the correctness anchor — every row must
+/// land on the same optimum), updates/s, reconcile seconds, the
+/// dirty-chunk fold fraction, rounds skipped, and the node spread
+/// (`numa_nodes`: 1 on a single-domain host means pinning degraded to
+/// its documented no-op — expected in CI, meaningful on real iron).
+pub fn print_numa_ab(shards: usize, threads: usize) {
+    let scale = bench_scale();
+    let budget = bench_budget();
+    let topo = crate::util::topo::Topology::detect();
+    println!(
+        "# NUMA / reconcile cadence (scale {scale}, {budget}s/run, {shards} shards x \
+         {threads} total threads, shotgun; host: {} NUMA node(s))\n",
+        topo.n_nodes()
+    );
+    for (ds, lam) in paper_datasets() {
+        println!("## {} (lambda = {lam:.0e})\n", ds.name);
+        let mut table = Table::new(&[
+            "pin",
+            "cadence",
+            "objective",
+            "updates/s",
+            "reconcile s",
+            "dirty frac",
+            "skipped",
+            "nodes",
+        ]);
+        for (pin, adaptive) in [(false, false), (true, false), (false, true), (true, true)]
+        {
+            let mut cfg = bench_config(&ds.name, lam, Algorithm::Shotgun);
+            cfg.solver.threads = threads;
+            cfg.solver.shards = shards;
+            cfg.solver.numa_pin = pin;
+            cfg.solver.reconcile_every = 1;
+            cfg.solver.reconcile_max_rounds = if adaptive { 8 } else { 0 };
+            let res = run_on(&cfg, ds.clone(), None).expect("solve");
+            table.row(vec![
+                if pin { "on" } else { "off" }.into(),
+                if adaptive { "adaptive<=8" } else { "every round" }.into(),
+                format!("{:.6}", res.objective),
+                format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
+                format!("{:.3}", res.metrics.reconcile_secs),
+                format!("{:.3}", res.metrics.dirty_chunk_frac),
+                res.metrics.reconcile_rounds_skipped.to_string(),
+                res.metrics.numa_nodes.to_string(),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+}
+
 /// Screening experiment (the `gencd screen` subcommand): active-set
 /// KKT screening on vs off at an equal time budget, for a
 /// full-selection algorithm (GREEDY — where screened proposal work is

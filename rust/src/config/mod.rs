@@ -114,12 +114,25 @@ pub struct SolverConfig {
     /// contiguous | round-robin | min-overlap. See
     /// `shard::ShardStrategy`.
     pub shard_strategy: String,
+    /// Pin shard pools to NUMA nodes with first-touch replica
+    /// allocation (`shard::engine` §NUMA; graceful no-op on
+    /// single-node / non-Linux hosts). See `SolverBuilder::numa_pin`.
+    pub numa_pin: bool,
+    /// Reconcile shard replicas every R rounds (`shard::engine`
+    /// §Reconcile cadence; min 1). See `SolverBuilder::reconcile_every`.
+    pub reconcile_every: usize,
+    /// Adaptive reconcile-cadence ceiling; 0 = fixed cadence. See
+    /// `SolverBuilder::reconcile_max_rounds`.
+    pub reconcile_max_rounds: usize,
     /// Active-set KKT screening (`screen` module; default off).
     /// Requires lam > 0; validated by the builder.
     pub screening: bool,
     /// Full-set KKT sweep cadence in iterations when screening is on
     /// (the reactivation safety net). See `SolverBuilder::kkt_every`.
     pub kkt_every: usize,
+    /// Reactivation-rate-driven sweep cadence (stretch when quiet,
+    /// halve on bursts). See `SolverBuilder::kkt_adaptive`.
+    pub kkt_adaptive: bool,
     /// Route hot gathers through the unrolled prefetching kernels
     /// (`CscMatrix::dot_col_fast`; off by default so the scalar path
     /// stays the bit-exactness reference).
@@ -145,8 +158,12 @@ impl Default for SolverConfig {
             buffer_budget_mb: 1024,
             shards: 1,
             shard_strategy: "contiguous".into(),
+            numa_pin: false,
+            reconcile_every: 1,
+            reconcile_max_rounds: 0,
             screening: false,
             kkt_every: 16,
+            kkt_adaptive: false,
             fast_kernels: false,
         }
     }
@@ -245,10 +262,22 @@ impl RunConfig {
             ("solver", "shard_strategy") => {
                 self.solver.shard_strategy = as_str(value)?
             }
+            ("solver", "numa_pin") => {
+                self.solver.numa_pin = value.as_bool().ok_or_else(bad_type)?
+            }
+            ("solver", "reconcile_every") => {
+                self.solver.reconcile_every = as_usize(value)?.max(1)
+            }
+            ("solver", "reconcile_max_rounds") => {
+                self.solver.reconcile_max_rounds = as_usize(value)?
+            }
             ("solver", "screening") => {
                 self.solver.screening = value.as_bool().ok_or_else(bad_type)?
             }
             ("solver", "kkt_every") => self.solver.kkt_every = as_usize(value)?,
+            ("solver", "kkt_adaptive") => {
+                self.solver.kkt_adaptive = value.as_bool().ok_or_else(bad_type)?
+            }
             ("solver", "fast_kernels") => {
                 self.solver.fast_kernels = value.as_bool().ok_or_else(bad_type)?
             }
@@ -336,6 +365,30 @@ mod tests {
         assert!(cfg.solver.screening);
         assert_eq!(cfg.solver.kkt_every, 32);
         assert!(RunConfig::from_toml("[solver]\nscreening = 3\n").is_err());
+        // NUMA / reconcile-cadence / adaptive-kkt knobs: defaults,
+        // TOML, and --set override
+        assert!(!cfg.solver.numa_pin);
+        assert_eq!(cfg.solver.reconcile_every, 1);
+        assert_eq!(cfg.solver.reconcile_max_rounds, 0);
+        assert!(!cfg.solver.kkt_adaptive);
+        let cfg6 = RunConfig::from_toml(
+            "[solver]\nnuma_pin = true\nreconcile_every = 2\n\
+             reconcile_max_rounds = 32\nkkt_adaptive = true\n",
+        )
+        .unwrap();
+        assert!(cfg6.solver.numa_pin);
+        assert_eq!(cfg6.solver.reconcile_every, 2);
+        assert_eq!(cfg6.solver.reconcile_max_rounds, 32);
+        assert!(cfg6.solver.kkt_adaptive);
+        cfg.set("solver.numa_pin", "true").unwrap();
+        cfg.set("solver.reconcile_every", "0").unwrap(); // clamps like threads
+        cfg.set("solver.reconcile_max_rounds", "8").unwrap();
+        cfg.set("solver.kkt_adaptive", "true").unwrap();
+        assert!(cfg.solver.numa_pin);
+        assert_eq!(cfg.solver.reconcile_every, 1);
+        assert_eq!(cfg.solver.reconcile_max_rounds, 8);
+        assert!(cfg.solver.kkt_adaptive);
+        assert!(RunConfig::from_toml("[solver]\nnuma_pin = 2\n").is_err());
     }
 
     #[test]

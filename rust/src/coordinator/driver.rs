@@ -124,8 +124,12 @@ pub fn run_on(
         .buffer_budget_mb(cfg.solver.buffer_budget_mb)
         .shards(cfg.solver.shards)
         .shard_strategy(shard_strategy)
+        .numa_pin(cfg.solver.numa_pin)
+        .reconcile_every(cfg.solver.reconcile_every)
+        .reconcile_max_rounds(cfg.solver.reconcile_max_rounds)
         .screening(cfg.solver.screening)
         .kkt_every(cfg.solver.kkt_every)
+        .kkt_adaptive(cfg.solver.kkt_adaptive)
         .fast_kernels(cfg.solver.fast_kernels)
         .build()?;
     let preprocess_secs = pre_timer.elapsed_secs();
@@ -272,6 +276,27 @@ mod tests {
         cfg.solver.shards = 2;
         cfg.solver.shard_strategy = "voronoi".into();
         assert!(run(&cfg).is_err(), "unknown strategy must be rejected");
+    }
+
+    #[test]
+    fn numa_and_cadence_knobs_flow_through() {
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.shards = 2;
+        cfg.solver.numa_pin = true;
+        cfg.solver.reconcile_every = 2;
+        cfg.solver.reconcile_max_rounds = 8;
+        let res = run(&cfg).unwrap();
+        assert_eq!(res.metrics.shards, 2);
+        assert!(res.metrics.numa_nodes >= 1, "numa_pin must at least warn");
+        assert!(
+            res.metrics.reconcile_rounds_skipped > 0,
+            "reconcile_every = 2 must skip rounds"
+        );
+        // inverted cadence window is refused by the builder
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.reconcile_every = 8;
+        cfg.solver.reconcile_max_rounds = 2;
+        assert!(run(&cfg).is_err());
     }
 
     #[test]

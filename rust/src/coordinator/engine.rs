@@ -162,7 +162,7 @@ use super::select::Select;
 use crate::loss;
 use crate::screen::{self, ActiveSet, ScreenedSelect, SweepKind, SweepStats};
 use crate::util::atomic::{SyncCell, SyncF64Vec};
-use crate::util::par::{aligned_chunk, CachePadded, SpinBarrier, DEFAULT_SPIN};
+use crate::util::par::{aligned_chunk, CachePadded, DirtyChunks, SpinBarrier, DEFAULT_SPIN};
 use crate::util::Timer;
 
 /// Update-phase discipline for the shared residual vector `z` (see the
@@ -253,6 +253,15 @@ pub struct EngineConfig {
     /// leaving only the convergence-gate sweep — the builder rejects
     /// that, but the engine tolerates it for ablations).
     pub kkt_every: usize,
+    /// Drive the periodic sweep cadence from the *measured* reactivation
+    /// rate instead of the fixed `kkt_every` (module docs §Screening):
+    /// a sweep that reactivates nothing doubles the interval (capped at
+    /// `kkt_every ·` [`KKT_STRETCH_MAX`]), a sweep that repairs any
+    /// mistake halves it (floored at 1). `kkt_every` stays the starting
+    /// interval and the stretch anchor; convergence-gate sweeps are
+    /// unaffected, so the Converged certificate is cadence-independent
+    /// — fixed and adaptive runs land on the same fixed point.
+    pub kkt_adaptive: bool,
     /// Route the cached-dloss gradient gather (and the single-worker
     /// conflict-free scatter) through the 4-way unrolled
     /// prefetching kernels ([`crate::sparse::CscMatrix::dot_col_fast`]).
@@ -277,10 +286,18 @@ impl Default for EngineConfig {
             barrier_spin: DEFAULT_SPIN,
             screening: false,
             kkt_every: 16,
+            kkt_adaptive: false,
             fast_kernels: false,
         }
     }
 }
+
+/// Upper bound of the adaptive sweep interval, as a multiple of
+/// `kkt_every`: clean sweeps double the interval until it reaches
+/// `kkt_every * KKT_STRETCH_MAX`, so a long-settled active set pays at
+/// most 1/16th of the fixed cadence's sweep work while the safety net
+/// never fully disappears.
+pub const KKT_STRETCH_MAX: usize = 16;
 
 /// Pluggable Propose backend for a whole selected block — how the
 /// PJRT/HLO path (DESIGN.md §2) slots into the engine. Runs on the
@@ -302,12 +319,18 @@ pub trait BlockProposer {
 }
 
 /// Optional leader-side hooks for a solve: a per-iteration
-/// [`Observer`] and/or a [`BlockProposer`] backend. `Default` is "no
-/// hooks".
+/// [`Observer`], a [`BlockProposer`] backend, and/or a dirty-chunk
+/// tracker for the Update scatter. `Default` is "no hooks".
 #[derive(Default)]
 pub struct EngineHooks<'a> {
     pub observer: Option<&'a mut dyn Observer>,
     pub block_proposer: Option<&'a mut dyn BlockProposer>,
+    /// When set, every Update-phase z scatter marks the chunks it
+    /// writes ([`DirtyChunks::mark`] per touched row, all four update
+    /// disciplines). The sharded layer reads and clears the map at
+    /// reconcile boundaries to fold only touched chunks; unsharded
+    /// solves leave this `None` and pay nothing.
+    pub dirty: Option<&'a DirtyChunks>,
 }
 
 impl<'a> EngineHooks<'a> {
@@ -318,14 +341,14 @@ impl<'a> EngineHooks<'a> {
     pub fn with_observer(observer: &'a mut dyn Observer) -> Self {
         Self {
             observer: Some(observer),
-            block_proposer: None,
+            ..Self::default()
         }
     }
 
     pub fn with_block_proposer(bp: &'a mut dyn BlockProposer) -> Self {
         Self {
-            observer: None,
             block_proposer: Some(bp),
+            ..Self::default()
         }
     }
 }
@@ -562,6 +585,9 @@ pub fn solve_from(
     let sweep_stats: Vec<CachePadded<SyncCell<SweepStats>>> = (0..threads)
         .map(|_| CachePadded::new(SyncCell::new(SweepStats::default())))
         .collect();
+    // Dirty-chunk hook: shared by every worker's scatter (Copy ref),
+    // None outside the sharded delta-reconcile path.
+    let dirty = hooks.dirty;
     // Leader-only bookkeeping, moved into the leader closure.
     let mut leader_state = LeaderState {
         selector: select,
@@ -579,6 +605,8 @@ pub fn solve_from(
             thresh: screen::initial_threshold(problem.lam),
             last_sweep: None,
             gate_pending: false,
+            sweep_interval: cfg.kkt_every.max(1),
+            next_sweep_at: cfg.kkt_every.max(1),
         },
     };
 
@@ -817,21 +845,37 @@ pub fn solve_from(
                         }
                     }
                     let (rows, vals) = problem.x.col(j);
+                    if let Some(dc) = dirty {
+                        // sharded delta reconcile: record which chunks
+                        // of z this scatter touches (idempotent marks
+                        // into a cache-resident bitmap; one pass over
+                        // the row indices only, shared by all four
+                        // disciplines below — the buffered reduce and
+                        // the spill drains write subsets of these rows)
+                        for &i in rows {
+                            dc.mark(i as usize);
+                        }
+                    }
                     match update_mode {
                         UpdateMode::ConflictFree => {
-                            if cfg.fast_kernels && threads == 1 {
-                                // SAFETY: single worker — the unique
-                                // accessor of z for this phase; the
-                                // slice is scoped to one kernel call
-                                let z = unsafe { state.z.plain_slice_mut() };
-                                problem.x.axpy_col_fast(j, d, z);
+                            if cfg.fast_kernels {
+                                // unique writer per z[i] (T=1 or
+                                // coloring's color classes), so the
+                                // unrolled prefetching scatter is legal
+                                // through the raw-pointer kernel —
+                                // index-disjoint raw stores are sound
+                                // where two threads holding overlapping
+                                // &mut slices would be UB. Bit-identical
+                                // to the scalar loop (each element
+                                // touched once, no re-association).
+                                // SAFETY: the conflict-free discipline
+                                // is exactly the kernel's contract.
+                                unsafe {
+                                    problem.x.axpy_col_fast_ptr(j, d, state.z.raw_ptr())
+                                };
                             } else {
                                 // unique writer per z[i] too (T=1 or
-                                // coloring): plain load+store, no CAS.
-                                // No unrolled kernel at T > 1 — a
-                                // coloring makes *indices* disjoint, but
-                                // handing two threads overlapping &mut
-                                // slices would still be UB.
+                                // coloring): plain load+store, no CAS
                                 for (&i, &v) in rows.iter().zip(vals) {
                                     state.z.add(i as usize, d * v);
                                 }
@@ -990,6 +1034,13 @@ struct ScreenLeader {
     /// A tolerance stop fired; the next scheduled sweep decides between
     /// reactivation and `Converged`.
     gate_pending: bool,
+    /// Adaptive sweep cadence (`EngineConfig::kkt_adaptive`): current
+    /// interval in iterations, doubled after clean periodic sweeps
+    /// (capped at `kkt_every * KKT_STRETCH_MAX`), halved after any
+    /// reactivation (floored at 1). Idle under the fixed cadence.
+    sweep_interval: usize,
+    /// Iteration the next adaptive periodic sweep is due at.
+    next_sweep_at: usize,
 }
 
 /// Resolve the configured [`UpdatePath`] into this iteration's
@@ -1092,6 +1143,20 @@ fn plan_iteration(
             metrics.kkt_passes.fetch_add(1, Relaxed);
             metrics.reactivations.fetch_add(reactivated, Relaxed);
             metrics.active_cols.store(active_now, Relaxed);
+            // adaptive cadence: let the measured reactivation rate set
+            // the next interval — a clean sweep buys a longer one, any
+            // repaired mistake snaps the net tighter. Gate sweeps are
+            // convergence machinery, not cadence samples.
+            if cfg.kkt_adaptive && kind == SweepKind::Periodic {
+                let sl = &mut ls.screen;
+                sl.sweep_interval = if reactivated == 0 {
+                    (sl.sweep_interval * 2)
+                        .min(cfg.kkt_every.saturating_mul(KKT_STRETCH_MAX).max(1))
+                } else {
+                    (sl.sweep_interval / 2).max(1)
+                };
+                sl.next_sweep_at = ls.iter + sl.sweep_interval;
+            }
             // refresh the dense draw list for the Select wrapper's
             // cursor fallback
             active.rebuild_dense();
@@ -1232,8 +1297,13 @@ fn plan_iteration(
     plan.screen_sweep = None;
     if screen.is_some() {
         plan.screen_thresh = ls.screen.thresh;
-        let periodic_due =
-            cfg.kkt_every > 0 && ls.iter > 0 && ls.iter % cfg.kkt_every == 0;
+        let periodic_due = cfg.kkt_every > 0
+            && ls.iter > 0
+            && if cfg.kkt_adaptive {
+                ls.iter >= ls.screen.next_sweep_at
+            } else {
+                ls.iter % cfg.kkt_every == 0
+            };
         if ls.screen.gate_pending {
             plan.screen_sweep = Some(SweepKind::Gate);
             ls.screen.gate_pending = false;
@@ -1881,30 +1951,133 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_kkt_matches_fixed_cadence() {
+        // the satellite's differential bar: adaptive sweep cadence must
+        // land on the same certified fixed point as the fixed cadence —
+        // both gate Converged through a clean sweep, so the objectives
+        // agree to 1e-12
+        let p = make_problem(50, 30, 12, false);
+        let run = |adaptive: bool| {
+            let sel = Cyclic {
+                next: 0,
+                k: p.n_features(),
+            };
+            let mut c = cfg(1, usize::MAX);
+            c.max_seconds = 30.0;
+            c.tol = 1e-10;
+            c.log_every = 10;
+            c.screening = true;
+            c.kkt_every = 8;
+            c.kkt_adaptive = adaptive;
+            solve(&p, sel, AcceptAll, &c)
+        };
+        let fixed = run(false);
+        let adaptive = run(true);
+        assert_eq!(fixed.stop, StopReason::Converged);
+        assert_eq!(adaptive.stop, StopReason::Converged);
+        assert!(
+            (fixed.objective - adaptive.objective).abs() < 1e-12,
+            "fixed {} vs adaptive {}",
+            fixed.objective,
+            adaptive.objective
+        );
+        assert!(adaptive.metrics.kkt_passes >= 1);
+    }
+
+    #[test]
+    fn adaptive_kkt_stretches_interval_when_quiet() {
+        // a long run on a settled problem: the adaptive cadence must
+        // run strictly fewer periodic sweeps than the fixed one
+        let p = make_problem(51, 40, 16, false);
+        let run = |adaptive: bool| {
+            let sel = FullSet { k: p.n_features() };
+            let mut c = cfg(1, 600);
+            c.screening = true;
+            c.kkt_every = 8;
+            c.kkt_adaptive = adaptive;
+            solve(&p, sel, GlobalBest, &c)
+        };
+        let fixed = run(false);
+        let adaptive = run(true);
+        assert!(
+            adaptive.metrics.kkt_passes < fixed.metrics.kkt_passes,
+            "adaptive {} sweeps vs fixed {}",
+            adaptive.metrics.kkt_passes,
+            fixed.metrics.kkt_passes
+        );
+        assert!(
+            (fixed.objective - adaptive.objective).abs() < 1e-9,
+            "{} vs {}",
+            fixed.objective,
+            adaptive.objective
+        );
+    }
+
+    #[test]
+    fn dirty_hook_covers_every_touched_sample() {
+        // every z element the solve moved must sit in a marked chunk —
+        // the contract the sharded delta reconcile relies on
+        use crate::util::par::{DirtyChunks, DIRTY_CHUNK_ELEMS};
+        let p = make_problem(52, 48, 20, true);
+        let sel = RandomSubset {
+            rng: Pcg64::seeded(53),
+            k: p.n_features(),
+            size: 6,
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let d = DirtyChunks::new(p.n_samples());
+        let out = solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::all(),
+            &cfg(2, 150),
+            EngineHooks {
+                dirty: Some(&d),
+                ..Default::default()
+            },
+        );
+        assert!(out.metrics.updates > 0);
+        assert!(d.count() > 0, "a descending solve must dirty something");
+        for (i, z) in state.z_snapshot().iter().enumerate() {
+            if *z != 0.0 {
+                assert!(
+                    d.is_dirty(i / DIRTY_CHUNK_ELEMS),
+                    "z[{i}] changed but its chunk is clean"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn fast_kernels_agree_with_scalar_engine() {
         // the unrolled gather re-associates the reduction, so no
         // bit-exactness — but the solve must land on the same optimum
         let p = make_problem(44, 40, 16, false);
-        let run = |fast: bool| {
+        let run = |fast: bool, dloss: bool| {
             let sel = Cyclic {
                 next: 0,
                 k: p.n_features(),
             };
             let mut c = cfg(1, 2000);
             c.fast_kernels = fast;
-            c.force_dloss = Some(true); // exercise the unrolled dot path
+            // exercise both unrolled gradient paths: the cached-dloss
+            // dot and the on-the-fly ell' gather
+            c.force_dloss = Some(dloss);
             solve(&p, sel, AcceptAll, &c)
         };
-        let scalar = run(false);
-        let fast = run(true);
-        assert!(
-            (scalar.objective - fast.objective).abs() < 1e-9,
-            "{} vs {}",
-            scalar.objective,
-            fast.objective
-        );
-        for (a, b) in scalar.w.iter().zip(&fast.w) {
-            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        for dloss in [true, false] {
+            let scalar = run(false, dloss);
+            let fast = run(true, dloss);
+            assert!(
+                (scalar.objective - fast.objective).abs() < 1e-9,
+                "dloss={dloss}: {} vs {}",
+                scalar.objective,
+                fast.objective
+            );
+            for (a, b) in scalar.w.iter().zip(&fast.w) {
+                assert!((a - b).abs() < 1e-7, "dloss={dloss}: {a} vs {b}");
+            }
         }
     }
 

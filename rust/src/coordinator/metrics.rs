@@ -74,6 +74,9 @@ impl Metrics {
             shards: 0,
             reconcile_secs: 0.0,
             replica_divergence: 0.0,
+            numa_nodes: 0,
+            dirty_chunk_frac: 0.0,
+            reconcile_rounds_skipped: 0,
         }
     }
 }
@@ -129,6 +132,25 @@ pub struct MetricsSnapshot {
     /// samples (a perfect min-overlap partition on block-structured
     /// data), and 0 for unsharded or single-shard solves.
     pub replica_divergence: f64,
+    /// NUMA nodes the shard pools were pinned across
+    /// (`ShardedConfig::numa_pin`): 0 when pinning was off (or the
+    /// solve was unsharded), 1 when pinning was requested but degraded
+    /// to a no-op (single-node host, non-Linux, or every
+    /// `sched_setaffinity` refused — the warning value), >= 2 for a
+    /// real multi-node spread.
+    pub numa_nodes: u64,
+    /// Mean fraction of z chunks the delta reconcile actually folded
+    /// (dirty in some shard since the last reconcile), over all
+    /// reconciles. 1.0 means every fold was dense anyway; small values
+    /// are the sparse-reconcile win (screened runs touch a few percent
+    /// of z per round). 0 for dense-reconcile, single-shard or
+    /// unsharded solves.
+    pub dirty_chunk_frac: f64,
+    /// Rounds the adaptive reconcile cadence ran *without* a reconcile
+    /// (`ShardedConfig::reconcile_max_rounds` > `reconcile_every`):
+    /// each skipped round is a full barrier protocol + fold the shards
+    /// did not pay. 0 at the default every-round cadence.
+    pub reconcile_rounds_skipped: u64,
 }
 
 impl MetricsSnapshot {

@@ -83,6 +83,54 @@ pub fn gradient_from_z(problem: &Problem, state: &SharedState, j: usize) -> f64 
     acc / problem.n_samples() as f64
 }
 
+/// [`gradient_from_z`] unrolled 4-way with software prefetch on the
+/// `z` gathers — the `EngineConfig::fast_kernels` on-the-fly path. The
+/// `ell'` evaluations stay per-element (a virtual call each), but the
+/// latency-bound part of this kernel is the random `z[rows[i]]`
+/// gather, which prefetching and the split accumulator chain attack
+/// exactly as in [`CscMatrix::dot_col_fast`]. Like that kernel it
+/// re-associates the reduction, so it is **not** bit-identical to the
+/// scalar path (scalar stays the bit-exactness reference).
+///
+/// [`CscMatrix::dot_col_fast`]: crate::sparse::CscMatrix::dot_col_fast
+#[inline]
+pub fn gradient_from_z_fast(problem: &Problem, state: &SharedState, j: usize) -> f64 {
+    use crate::sparse::csc::{prefetch_read, PREFETCH_DIST};
+    let (rows, vals) = problem.x.col(j);
+    let loss = problem.loss.as_ref();
+    let y = &problem.y;
+    // SAFETY: Propose and screen phases have no z writer (the engine's
+    // unique-writer-per-phase protocol); the slice is scoped to this
+    // one kernel call.
+    let z = unsafe { state.z.plain_slice() };
+    let len = rows.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i + 4 <= len {
+        if i + PREFETCH_DIST < len {
+            prefetch_read(&z[rows[i + PREFETCH_DIST] as usize]);
+        }
+        let (i0, i1, i2, i3) = (
+            rows[i] as usize,
+            rows[i + 1] as usize,
+            rows[i + 2] as usize,
+            rows[i + 3] as usize,
+        );
+        a0 += vals[i] * loss.deriv(y[i0], z[i0]);
+        a1 += vals[i + 1] * loss.deriv(y[i1], z[i1]);
+        a2 += vals[i + 2] * loss.deriv(y[i2], z[i2]);
+        a3 += vals[i + 3] * loss.deriv(y[i3], z[i3]);
+        i += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    while i < len {
+        let ii = rows[i] as usize;
+        acc += vals[i] * loss.deriv(y[ii], z[ii]);
+        i += 1;
+    }
+    acc / problem.n_samples() as f64
+}
+
 /// Full proposal for coordinate j; `use_dloss` picks the gradient path.
 #[inline]
 pub fn propose(problem: &Problem, state: &SharedState, j: usize, use_dloss: bool) -> Proposal {
@@ -95,10 +143,9 @@ pub fn propose(problem: &Problem, state: &SharedState, j: usize, use_dloss: bool
     proposal_from_gradient(problem, j, wj, g)
 }
 
-/// [`propose`] with the unrolled gather kernel on the cached-dloss
-/// gradient path (`EngineConfig::fast_kernels`). The on-the-fly path is
-/// unchanged — it interleaves `ell'` evaluations with the gather and
-/// has no pure-dot inner loop to unroll.
+/// [`propose`] with the unrolled gather kernels on **both** gradient
+/// paths (`EngineConfig::fast_kernels`): [`gradient_from_dloss_fast`]
+/// when the dloss cache is fresh, [`gradient_from_z_fast`] on the fly.
 #[inline]
 pub fn propose_fast(
     problem: &Problem,
@@ -109,7 +156,7 @@ pub fn propose_fast(
     let g = if use_dloss {
         gradient_from_dloss_fast(problem, state, j)
     } else {
-        gradient_from_z(problem, state, j)
+        gradient_from_z_fast(problem, state, j)
     };
     let wj = state.w.get(j);
     proposal_from_gradient(problem, j, wj, g)
@@ -174,8 +221,46 @@ mod tests {
             let b = propose_fast(&p, &s, j, true);
             assert!((a.delta - b.delta).abs() < 1e-12);
             assert!((a.phi - b.phi).abs() < 1e-12);
-            // the on-the-fly arm of propose_fast is the scalar kernel
-            assert_eq!(propose(&p, &s, j, false), propose_fast(&p, &s, j, false));
+            // the on-the-fly arm is unrolled too now: same agreement
+            // bar as the dloss arm (re-associated, not bit-identical)
+            let zf = gradient_from_z_fast(&p, &s, j);
+            let zs = gradient_from_z(&p, &s, j);
+            assert!((zf - zs).abs() < 1e-14, "j={j}: {zs} vs {zf}");
+            let a = propose(&p, &s, j, false);
+            let b = propose_fast(&p, &s, j, false);
+            assert!((a.delta - b.delta).abs() < 1e-12);
+            assert!((a.phi - b.phi).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fast_onthefly_gradient_handles_wide_columns() {
+        // columns longer than the unroll width + prefetch distance, so
+        // the unrolled body, the prefetch branch and the scalar tail
+        // all execute
+        let mut rng = crate::util::Pcg64::seeded(17);
+        let n = 200usize;
+        let mut b = crate::sparse::CooBuilder::new(n, 4);
+        for j in 0..4 {
+            for i in 0..n {
+                if rng.next_f64() < 0.6 {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let ds = Dataset {
+            x: b.build(),
+            y: (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+            name: "t".into(),
+        };
+        let p = Problem::new(ds, Box::new(Logistic), 1e-3);
+        let w0: Vec<f64> = (0..4).map(|j| 0.1 * j as f64).collect();
+        let s = SharedState::from_warm_start(&p, &w0);
+        for j in 0..4 {
+            let scalar = gradient_from_z(&p, &s, j);
+            let fast = gradient_from_z_fast(&p, &s, j);
+            let tol = 1e-12 * scalar.abs().max(1e-12);
+            assert!((scalar - fast).abs() <= tol, "j={j}: {scalar} vs {fast}");
         }
     }
 

@@ -61,8 +61,8 @@
 //! |-------|---------------------|--------------|-----------------|
 //! | [`screen`] (`SolverBuilder::screening(true)`) | — (shrinks the *work*, not the workers) | per-pool [`ActiveSet`](screen::ActiveSet) bitmask | rides the engine's barriers (one extra crossing per KKT sweep) |
 //! | [`coordinator::engine`] | worker threads in one pool | one `z`/`w` ([`SharedState`](coordinator::problem::SharedState)) | phase spin barriers |
-//! | [`shard`] (`SolverBuilder::shards(n)`) | one engine pool per column shard | per-shard `z` *replica* | round-boundary reconcile barrier |
-//! | future: NUMA pinning / distributed backends | sockets / machines | replica per domain | same reconcile contract |
+//! | [`shard`] (`SolverBuilder::shards(n)`) | one NUMA-pinnable engine pool per column shard | per-shard `z` *replica*, first-touched node-local | reconcile barrier, every R rounds (adaptive), dirty-chunk delta fold |
+//! | future: distributed backends | machines | replica per machine | same reconcile contract |
 //!
 //! The engine scales until every worker hammering the same residual
 //! vector saturates one coherent memory domain; the shard layer
@@ -72,9 +72,22 @@
 //! sample-overlap minimization) — its own full engine pool and its own
 //! residual replica over a **zero-copy column-range view**
 //! ([`sparse::CscMatrix::col_range_view`]) of the design matrix,
-//! reconciling replicas once per lockstep round. A NUMA-pinning or
-//! distributed backend plugs in at the same seam: it only has to speak
-//! the reconcile contract, not the engine's phase protocol.
+//! reconciled at round boundaries. On multi-socket hardware the layer
+//! goes the rest of the way (`SolverBuilder::numa_pin`): each pool is
+//! pinned to a NUMA node and its replica + engine scratch are
+//! first-touch-allocated on the pinned threads, so per-round traffic is
+//! node-local by construction; the reconcile itself folds only
+//! **dirty chunks** (an engine-maintained bitmap of touched 128-byte
+//! z chunks — byte-identical to the dense fold, O(touched) instead of
+//! O(n·shards)) and runs on an **adaptive cadence**
+//! (`SolverBuilder::{reconcile_every, reconcile_max_rounds}`: back off
+//! while replicas agree, snap back on a conflict spike), with all
+//! stopping decisions taken at reconciled rounds so convergence
+//! semantics are unchanged ([`shard::engine`] §NUMA, §Reconcile
+//! cadence). A distributed backend plugs in at the same seam: it only
+//! has to speak the reconcile contract — the dirty-chunk delta
+//! exchange is already the only cross-shard traffic — not the engine's
+//! phase protocol.
 //!
 //! Orthogonal to both, the **screening layer** ([`screen`],
 //! `SolverBuilder::screening(true)`) attacks the *work per iteration*

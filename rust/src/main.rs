@@ -54,6 +54,7 @@ fn run(args: &mut Args) -> anyhow::Result<()> {
         "fig2" => cmd_fig2(args),
         "shards" => cmd_shards(args),
         "screen" => cmd_screen(args),
+        "numa" => cmd_numa(args),
         "artifacts" => cmd_artifacts(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -73,7 +74,8 @@ SUBCOMMANDS
              [--threads N] [--seconds S] [--line-search N] [--csv FILE]
              [--update-path auto|atomic|buffered|conflict-free]
              [--shards N] [--shard-strategy contiguous|round-robin|min-overlap]
-             [--screening] [--kkt-every N] [--fast-kernels]
+             [--numa-pin] [--reconcile-every N] [--reconcile-max-rounds N]
+             [--screening] [--kkt-every N] [--kkt-adaptive] [--fast-kernels]
              [--set table.key=value]...   (e.g. solver.buffer_budget_mb=512)
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
              [--seconds S] [--threads N]     (warm-started lambda path)
@@ -89,6 +91,9 @@ SUBCOMMANDS
              (sharded-layer scaling: per-shard replicas vs one pool)
   screen     [--scale F] [--seconds S] [--threads N]
              (screening on/off A-B: active set, KKT passes, saved work)
+  numa       [--scale F] [--seconds S] [--shards N] [--threads N]
+             (NUMA A/B: pinned vs unpinned pools, fixed vs adaptive
+              reconcile cadence, dirty-chunk fold fraction)
   artifacts  [--dir PATH] [--smoke]
 
 Datasets: dorothea, reuters, optionally suffixed @scale (reuters@0.1),
@@ -138,11 +143,23 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     if let Some(v) = args.value("shard-strategy") {
         cfg.solver.shard_strategy = v;
     }
+    if args.flag("numa-pin") {
+        cfg.solver.numa_pin = true;
+    }
+    if let Some(v) = args.value("reconcile-every") {
+        cfg.solver.reconcile_every = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = args.value("reconcile-max-rounds") {
+        cfg.solver.reconcile_max_rounds = v.parse()?;
+    }
     if args.flag("screening") {
         cfg.solver.screening = true;
     }
     if let Some(v) = args.value("kkt-every") {
         cfg.solver.kkt_every = v.parse()?;
+    }
+    if args.flag("kkt-adaptive") {
+        cfg.solver.kkt_adaptive = true;
     }
     if args.flag("fast-kernels") {
         cfg.solver.fast_kernels = true;
@@ -200,6 +217,17 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
         );
     }
     println!("{}", res.summary());
+    if cfg.solver.shards > 1 {
+        println!(
+            "shards: {} | numa nodes {} | reconcile {:.3}s | dirty frac {:.3} | rounds skipped {} | divergence {:.2e}",
+            res.metrics.shards,
+            res.metrics.numa_nodes,
+            res.metrics.reconcile_secs,
+            res.metrics.dirty_chunk_frac,
+            res.metrics.reconcile_rounds_skipped,
+            res.metrics.replica_divergence,
+        );
+    }
     if cfg.solver.screening {
         // gate on the config, not the metric: active_cols == 0 is a
         // legitimate outcome (lambda >= lambda_max prunes everything)
@@ -489,6 +517,15 @@ fn cmd_screen(args: &mut Args) -> anyhow::Result<()> {
     let threads: usize = args.get("threads", 4)?;
     args.finish()?;
     gencd::bench_harness::experiments::print_screening(threads);
+    Ok(())
+}
+
+fn cmd_numa(args: &mut Args) -> anyhow::Result<()> {
+    bench_env(args, 2.0)?;
+    let shards: usize = args.get("shards", 2)?;
+    let threads: usize = args.get("threads", 4)?;
+    args.finish()?;
+    gencd::bench_harness::experiments::print_numa_ab(shards, threads);
     Ok(())
 }
 

@@ -5,9 +5,10 @@
 //! extension-point traits ([`Select`], [`Accept`], [`Observer`]), the
 //! preset catalogue ([`Algorithm`]), the engine knobs most callers
 //! touch ([`UpdatePath`], [`EngineConfig`]), the sharded execution
-//! layer's surface ([`ShardStrategy`], [`ShardPlan`]), the screening
-//! layer's surface ([`ActiveSet`], [`ScreenedSelect`]), the losses, and
-//! the result types — plus [`ControlFlow`], which observers return.
+//! layer's surface ([`ShardStrategy`], [`ShardPlan`], the NUMA
+//! [`Topology`]), the screening layer's surface ([`ActiveSet`],
+//! [`ScreenedSelect`]), the losses, and the result types — plus
+//! [`ControlFlow`], which observers return.
 
 pub use crate::coordinator::accept::{Accept, AcceptContext, ThreadBest};
 pub use crate::coordinator::algorithms::{Algorithm, Preprocessed};
@@ -24,4 +25,5 @@ pub use crate::screen::{ActiveSet, ScreenedSelect};
 pub use crate::shard::{ShardPlan, ShardStrategy};
 pub use crate::solver::{Solver, SolverBuilder};
 pub use crate::sparse::{CooBuilder, CscMatrix};
+pub use crate::util::topo::Topology;
 pub use std::ops::ControlFlow;

@@ -1,6 +1,6 @@
 //! The sharded execution layer: one GenCD worker pool per shard, each
 //! against a **shard-local residual replica**, reconciled at iteration
-//! boundaries.
+//! boundaries — NUMA-pinned, delta-folded, and adaptively cadenced.
 //!
 //! # Why replicas
 //!
@@ -15,39 +15,120 @@
 //! `z` replica, so **no cache line is ever shared between shards inside
 //! a round**.
 //!
+//! # §NUMA: pinning and first-touch
+//!
+//! With [`ShardedConfig::numa_pin`] on, the layer makes "one shard per
+//! memory domain" literal:
+//!
+//! 1. the host topology is read once
+//!    ([`Topology::detect`](crate::util::topo::Topology::detect):
+//!    `/sys/devices/system/node` on Linux, a single-node fallback
+//!    elsewhere) and shard `s` is assigned node `s mod nodes`;
+//! 2. each shard's spawned thread pins **itself** to its node's CPUs
+//!    (`sched_setaffinity`) *before allocating anything* — spawned
+//!    threads inherit the affinity mask, so the whole pool lands on the
+//!    node without the engine knowing pinning exists;
+//! 3. only then does the thread construct its [`SharedState`] replica
+//!    (zero-fill is the first touch, so the pages land in node-local
+//!    DRAM) and call [`engine::solve_from`], whose buffered-reduce
+//!    accumulators and spill maps are likewise allocated — first-touched
+//!    — on the pinned pool threads.
+//!
+//! The replica slots are [`OnceLock`]s filled by the shard threads and
+//! published by one extra *init* barrier crossing before round 0, so
+//! every shard (and the coordinator) can still read every replica during
+//! reconcile. Pinning degrades gracefully: on a single-node host it is
+//! skipped, on non-Linux (or when every `sched_setaffinity` is refused,
+//! e.g. by a cgroup) it becomes a no-op — either way the solve is
+//! bit-identical to the unpinned one and
+//! [`MetricsSnapshot::numa_nodes`] reports `1` as the warning value
+//! (`0` = pinning off, `>= 2` = real multi-node spread).
+//!
 //! # Bulk-synchronous rounds
 //!
-//! Every pool runs exactly one GenCD iteration per *round*. At the
-//! round boundary — delivered through the engine's own
-//! [`Observer`] hook, which runs on each pool's leader while that
-//! pool's workers are parked — the shards meet at a reconcile barrier
-//! and fold their replicas, buffered-reduce style (disjoint
-//! cache-aligned sample chunks, one owner per element, exactly the
-//! machinery of [`crate::util::par::aligned_chunk`]):
+//! Every pool runs exactly one GenCD iteration per *round*. At a
+//! reconcile boundary — delivered through the engine's own [`Observer`]
+//! hook, which runs on each pool's leader while that pool's workers are
+//! parked — the shards meet at a reconcile barrier and fold their
+//! replicas, buffered-reduce style (disjoint cache-aligned sample
+//! chunks, one owner per element, exactly the machinery of
+//! [`crate::util::par::aligned_chunk`]):
 //!
 //! ```text
 //!   z[i]  <-  z[i] + sum_s (z_s[i] - z[i])     (one owner per chunk)
 //!   z_s[i] <- z[i]                             (replicas refreshed)
 //! ```
 //!
-//! Within a round a shard sees only its *own* updates on top of the
+//! Between reconciles a shard sees only its *own* updates on top of the
 //! last reconciled residual — the same frozen-residual semantics the
 //! accept/line-search phases already assume for the buffered update
 //! path, now at shard granularity. Cross-shard corrections surface as
 //! [`MetricsSnapshot::replica_divergence`]; reconcile time as
 //! [`MetricsSnapshot::reconcile_secs`].
 //!
+//! ## Dirty-chunk delta fold
+//!
+//! The dense fold costs O(n · shards) per reconcile whether anything
+//! moved or not. With [`ShardedConfig::delta_reconcile`] (the default),
+//! each pool's Update scatter marks a per-shard
+//! [`DirtyChunks`](crate::util::par::DirtyChunks) bitmap — one bit per
+//! 128-byte chunk of z, the same granularity as the fold's aligned
+//! chunks, so no chunk straddles two fold owners — and the fold visits
+//! only chunks dirty in *some* shard since the last reconcile. The
+//! contract that makes the delta fold **byte-identical** to the dense
+//! one: every z write inside a round goes through the engine's Update
+//! phase (all four disciplines mark), and after a reconcile every
+//! replica equals the canonical residual, so a clean chunk has zero
+//! delta in every shard and the dense fold would not have written it
+//! either. On screened runs with a few percent of columns active, most
+//! of z never moves and the fold collapses to O(touched)
+//! ([`MetricsSnapshot::dirty_chunk_frac`]). Each shard clears its own
+//! bitmap between the fold-publish and decision-publish crossings,
+//! while every pool's writers are parked.
+//!
+//! # §Reconcile cadence
+//!
+//! Reconciling every round is the safest schedule and the most
+//! synchronization-hungry one. [`ShardedConfig::reconcile_every`] (R)
+//! reconciles every R rounds instead; rounds in between return from the
+//! observer *without touching the barrier at all* — the pools run fully
+//! decoupled and re-synchronize at the next reconcile round, counted by
+//! [`MetricsSnapshot::reconcile_rounds_skipped`].
+//!
+//! With [`ShardedConfig::reconcile_max_rounds`] > R the cadence becomes
+//! **adaptive**, driven by the measured per-reconcile conflict
+//! magnitude (the `replica_divergence` trend):
+//!
+//! * a conflict-free reconcile (no shard needed a correction on a
+//!   sample it wrote itself) doubles R, up to `reconcile_max_rounds`;
+//! * a conflict **spike** — this reconcile's max correction above 4x
+//!   the running EWMA, or the first conflict ever seen — snaps R back
+//!   to `reconcile_every`;
+//! * in between, R holds.
+//!
+//! The next gap is decided by the coordinator between barrier
+//! crossings and published with the stop decision, so every pool
+//! computes the *same* next reconcile round — lockstep is preserved
+//! exactly at the rounds where it matters. All stopping decisions
+//! (round cap, wall clock, tolerance, divergence, screening gate,
+//! observers) are taken **only at reconciled rounds**, and the gap is
+//! clamped so the final reconcile lands exactly on `max_rounds` — the
+//! convergence-gate semantics are unchanged from the every-round
+//! schedule.
+//!
 //! # Lockstep stopping
 //!
 //! A pool that stopped on its own (time, iteration cap, divergence)
 //! would strand the other shards at the reconcile barrier, so the
 //! per-shard engines are configured to never stop themselves: all
-//! stopping decisions (round cap, wall clock, tolerance, divergence)
-//! are taken once per round by the shard-0 *coordinator* between
-//! barrier crossings and delivered to every pool simultaneously through
-//! the observer's `ControlFlow::Break`. The coordinator also owns the
-//! global convergence [`History`]: it gathers `w` across shards and
-//! evaluates the true global objective at the usual log cadence.
+//! stopping decisions are taken once per reconcile by the shard-0
+//! *coordinator* between barrier crossings and delivered to every pool
+//! simultaneously through the observer's `ControlFlow::Break`. The
+//! coordinator also owns the global convergence [`History`]: it gathers
+//! `w` across shards and evaluates the true global objective at the
+//! usual log cadence. A caller-supplied [`Observer`] (see
+//! [`solve_sharded_with`]) runs on the coordinator at every reconciled
+//! round, against the reconciled global iterate.
 //!
 //! # Single-shard exactness
 //!
@@ -55,8 +136,11 @@
 //! *is* the canonical residual and is never rewritten — so a one-shard
 //! sharded solve replays the unsharded engine's floating-point sequence
 //! bit-exactly at T = 1 (pinned by `rust/tests/sharding.rs`).
+//!
+//! [`OnceLock`]: std::sync::OnceLock
 
 use std::ops::ControlFlow;
+use std::sync::OnceLock;
 
 use crate::coordinator::accept::Accept;
 use crate::coordinator::convergence::{History, Record, StopReason};
@@ -67,8 +151,16 @@ use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::select::Select;
 use crate::loss;
 use crate::util::atomic::{SyncCell, SyncF64Vec};
-use crate::util::par::{aligned_chunk, CachePadded, SpinBarrier, DEFAULT_SPIN};
+use crate::util::par::{
+    aligned_chunk, CachePadded, DirtyChunks, SpinBarrier, DEFAULT_SPIN, DIRTY_CHUNK_ELEMS,
+};
+use crate::util::topo::Topology;
 use crate::util::Timer;
+
+/// A conflict reading above this multiple of the running EWMA snaps the
+/// adaptive reconcile cadence back to its floor (module docs
+/// §Reconcile cadence).
+const CONFLICT_SPIKE: f64 = 4.0;
 
 /// Everything one shard's pool runs with: a sub-problem over the
 /// shard's columns (built on a zero-copy
@@ -109,6 +201,8 @@ pub struct ShardedConfig {
     /// (0 disables; three consecutive hits, like the engine).
     pub tol: f64,
     /// Global-objective log cadence in rounds; 0 = time-based (~50 ms).
+    /// Under an adaptive cadence a log point falling between reconciles
+    /// fires at the next reconciled round.
     pub log_every: usize,
     /// Total buffered-update memory budget, divided across the shard
     /// pools so the whole sharded solve honors one figure.
@@ -116,10 +210,8 @@ pub struct ShardedConfig {
     pub barrier_spin: u32,
     /// Active-set KKT screening, **one active set per shard pool**:
     /// each pool wraps its own Select policy and runs its own full-set
-    /// sweeps over its own columns ([`crate::screen`]). Sweeps land at
-    /// round boundaries by construction (one engine iteration == one
-    /// round), i.e. right after the reconcile refreshed the replicas,
-    /// so reactivation always judges the reconciled residual. The
+    /// sweeps over its own columns ([`crate::screen`]). Sweeps judge
+    /// the pool's replica (reconciled at reconcile boundaries); the
     /// coordinator gates its tolerance stop with a **global** KKT check
     /// on the reconciled iterate (a zero-weight coordinate with
     /// `|g| > lam` refuses the stop until the pools' sweeps repair it),
@@ -128,9 +220,29 @@ pub struct ShardedConfig {
     pub screening: bool,
     /// Per-pool full-set KKT sweep cadence in rounds.
     pub kkt_every: usize,
+    /// Per-pool adaptive sweep cadence (see
+    /// [`EngineConfig::kkt_adaptive`]).
+    pub kkt_adaptive: bool,
     /// Unrolled gather kernels in every pool (see
     /// `EngineConfig::fast_kernels`).
     pub fast_kernels: bool,
+    /// Pin each shard pool to a NUMA node and first-touch its replica
+    /// there (module docs §NUMA). Graceful no-op on single-node or
+    /// non-Linux hosts; default off.
+    pub numa_pin: bool,
+    /// Reconcile every R rounds (module docs §Reconcile cadence;
+    /// min 1 — values of 0 are treated as 1). Default 1: the PR-3
+    /// every-round schedule, bit-exact with it.
+    pub reconcile_every: usize,
+    /// Upper bound of the *adaptive* reconcile cadence; values at or
+    /// below `reconcile_every` (including the default) disable
+    /// adaptation and keep the fixed cadence.
+    pub reconcile_max_rounds: usize,
+    /// Fold only dirty chunks at reconcile (module docs §Dirty-chunk
+    /// delta fold; byte-identical to the dense fold, default on).
+    /// `false` keeps the PR-3 dense full-scan fold as the reference —
+    /// the differential tests and the hotpath bench A/B use it.
+    pub delta_reconcile: bool,
 }
 
 impl Default for ShardedConfig {
@@ -146,46 +258,82 @@ impl Default for ShardedConfig {
             barrier_spin: DEFAULT_SPIN,
             screening: ecfg.screening,
             kkt_every: ecfg.kkt_every,
+            kkt_adaptive: ecfg.kkt_adaptive,
             fast_kernels: ecfg.fast_kernels,
+            numa_pin: false,
+            reconcile_every: 1,
+            reconcile_max_rounds: 1,
+            delta_reconcile: true,
         }
     }
 }
 
-/// Cross-shard shared state: the reconcile barrier, the canonical
-/// residual, the stop decision, and per-shard padded metric slots
-/// (unique writer per slot, read by the coordinator after a barrier).
-struct ReconcileShared<'a> {
+/// Cross-shard shared state: the reconcile barrier, the replica slots,
+/// the canonical residual, the stop/cadence decisions, and per-shard
+/// padded metric slots (unique writer per slot, read by the coordinator
+/// after a barrier).
+struct ReconcileShared {
     barrier: SpinBarrier,
-    states: &'a [SharedState],
+    /// Replica slots, filled by each shard's *own* thread (after NUMA
+    /// pinning, so zero-fill first-touches node-local pages) and
+    /// published to every shard by the init barrier crossing.
+    states: Vec<OnceLock<SharedState>>,
     /// Canonical reconciled residual (untouched in single-shard runs —
     /// there the replica itself is canonical).
     z_canon: SyncF64Vec,
     /// Written by the coordinator between the 2nd and 3rd crossings of
-    /// a round, read by every shard after the 3rd.
+    /// a reconcile, read by every shard after the 3rd.
     stop: SyncCell<Option<StopReason>>,
-    /// Per-shard cumulative update counts (published each round for the
-    /// coordinator's history records).
+    /// Rounds until the next reconcile, published with the stop
+    /// decision (same writer, same crossings).
+    next_gap: SyncCell<usize>,
+    /// Per-shard cumulative update counts (published each reconcile for
+    /// the coordinator's history records).
     updates: Vec<CachePadded<SyncCell<u64>>>,
     /// Per-shard running max of reconcile corrections ever applied.
     divergence: Vec<CachePadded<SyncCell<f64>>>,
+    /// Per-shard max conflict correction of the *latest* reconcile —
+    /// the adaptive cadence's input signal.
+    round_div: Vec<CachePadded<SyncCell<f64>>>,
     /// Per-shard nanoseconds spent in the reconcile fold.
     reconcile_nanos: Vec<CachePadded<SyncCell<u64>>>,
+    /// Per-shard dirty-chunk bitmaps (empty when the dense fold is
+    /// forced or for single-shard runs). Written by shard s's pool
+    /// workers during rounds, read by every shard's fold between
+    /// crossings 1 and 2, cleared by the owner between 2 and 3.
+    dirty: Vec<DirtyChunks>,
+    /// Per-shard cumulative dirty chunks folded / chunks considered
+    /// (the `dirty_chunk_frac` numerator and denominator).
+    dirty_folded: Vec<CachePadded<SyncCell<u64>>>,
+    chunks_seen: Vec<CachePadded<SyncCell<u64>>>,
+    /// Per-shard rounds skipped between reconciles (equal across
+    /// shards by construction; aggregated as the max).
+    skipped: Vec<CachePadded<SyncCell<u64>>>,
     n: usize,
+}
+
+impl ReconcileShared {
+    /// Shard s's replica; only callable after the init barrier.
+    #[inline]
+    fn state(&self, s: usize) -> &SharedState {
+        self.states[s].get().expect("replica published by init barrier")
+    }
 }
 
 /// The canonical residual: the reconciled array, or the lone replica in
 /// single-shard runs.
-fn canonical_z(sh: &ReconcileShared<'_>) -> &SyncF64Vec {
+fn canonical_z(sh: &ReconcileShared) -> &SyncF64Vec {
     if sh.states.len() == 1 {
-        &sh.states[0].z
+        &sh.state(0).z
     } else {
         &sh.z_canon
     }
 }
 
-/// Leader-side bookkeeping owned by shard 0: the global objective log
-/// and every stopping decision.
-struct Coordinator<'a> {
+/// Leader-side bookkeeping owned by shard 0: the global objective log,
+/// every stopping decision, the adaptive reconcile cadence, and the
+/// caller's observer.
+struct Coordinator<'a, 'o> {
     global: &'a Problem,
     cols: &'a [Vec<u32>],
     /// `owned[j]`: some shard's column map covers global column j. The
@@ -200,42 +348,78 @@ struct Coordinator<'a> {
     history: History,
     scratch_w: Vec<f64>,
     last_log_at: f64,
+    /// Next round an iteration-cadence log is due at (rounds can skip
+    /// under the adaptive cadence, so a modulo test would miss).
+    next_log_round: usize,
     tol_hits: u32,
+    /// Adaptive cadence state machine (module docs §Reconcile cadence).
+    r_cur: usize,
+    r_min: usize,
+    r_max: usize,
+    div_ewma: f64,
+    /// Caller-supplied observer, invoked at every reconciled round on
+    /// the reconciled global iterate.
+    observer: Option<&'o mut (dyn Observer + 'o)>,
+    /// Lazily-built global-dims state backing the observer's
+    /// [`IterationInfo::state`] (only allocated when an observer is
+    /// attached).
+    obs_state: Option<SharedState>,
 }
 
-impl Coordinator<'_> {
+impl Coordinator<'_, '_> {
     /// Runs between the reconcile-publish and decision-publish barrier
     /// crossings: every replica equals the reconciled residual, every
     /// pool's workers are parked, every `w` is quiescent — so gathering
-    /// the global iterate is plain reads.
-    fn plan_round(&mut self, sh: &ReconcileShared<'_>, round: usize) -> Option<StopReason> {
+    /// the global iterate is plain reads. Returns the stop decision and
+    /// the gap to the next reconcile round.
+    fn plan_round(
+        &mut self,
+        sh: &ReconcileShared,
+        round: usize,
+    ) -> (Option<StopReason>, usize) {
         let elapsed = self.timer.elapsed_secs();
         let mut stop = None;
         let should_log = match self.cfg.log_every {
             0 => elapsed - self.last_log_at >= 0.05 || round == 0,
-            every => round % every == 0,
+            _ => round >= self.next_log_round,
         };
-        if should_log {
-            for (cols, st) in self.cols.iter().zip(sh.states) {
+        if should_log && self.cfg.log_every > 0 {
+            self.next_log_round = round + self.cfg.log_every;
+        }
+        // the observer contract needs the global iterate at every
+        // reconciled round; the log only at its cadence
+        let gather = should_log || self.observer.is_some();
+        let mut z_snap: Option<Vec<f64>> = None;
+        let mut updates = 0u64;
+        if gather {
+            for (cols, s) in self.cols.iter().zip(0..) {
+                let st = sh.state(s);
                 for (local, &g) in cols.iter().enumerate() {
                     self.scratch_w[g as usize] = st.w.get(local);
                 }
             }
-            let z = canonical_z(sh).snapshot();
+            z_snap = Some(canonical_z(sh).snapshot());
+            updates = sh.updates.iter().map(|u| u.get()).sum();
+        }
+        let mut objective = None;
+        let mut nnz_now = None;
+        if should_log {
+            let z = z_snap.as_deref().expect("gathered above");
             let obj = loss::objective(
                 self.global.loss.as_ref(),
                 &self.global.y,
-                &z,
+                z,
                 &self.scratch_w,
                 self.global.lam,
             );
-            let updates: u64 = sh.updates.iter().map(|u| u.get()).sum();
+            objective = Some(obj);
+            nnz_now = Some(loss::nnz(&self.scratch_w));
             self.history.push(Record {
                 elapsed_secs: elapsed,
                 iter: round,
                 updates,
                 objective: obj,
-                nnz: loss::nnz(&self.scratch_w),
+                nnz: nnz_now.unwrap(),
             });
             self.last_log_at = elapsed;
             if !obj.is_finite() || obj > 1e12 {
@@ -264,7 +448,7 @@ impl Coordinator<'_> {
                             self.global.loss.as_ref(),
                             &self.global.x,
                             &self.global.y,
-                            &z,
+                            z,
                         );
                         // Margined test (screen::GATE_MARGIN): this
                         // gradient is computed with different summation
@@ -298,6 +482,29 @@ impl Coordinator<'_> {
                 }
             }
         }
+        // caller observer: every reconciled round, on the reconciled
+        // iterate (workers parked — plain reads are the contract)
+        if let Some(obs) = self.observer.as_deref_mut() {
+            let st = self.obs_state.get_or_insert_with(|| {
+                SharedState::new(self.global.n_samples(), self.global.n_features())
+            });
+            st.w.copy_from(&self.scratch_w);
+            st.z.copy_from(z_snap.as_deref().expect("gathered above"));
+            let info = IterationInfo {
+                iter: round,
+                elapsed_secs: elapsed,
+                updates,
+                // per-pool selection sizes are not published
+                // cross-shard; 0 by documented convention
+                selected: 0,
+                objective,
+                nnz: nnz_now,
+                state: st,
+            };
+            if obs.on_iteration(&info).is_break() && stop.is_none() {
+                stop = Some(StopReason::Observer);
+            }
+        }
         if stop.is_none() {
             if round >= self.cfg.max_rounds {
                 stop = Some(StopReason::MaxIters);
@@ -305,44 +512,127 @@ impl Coordinator<'_> {
                 stop = Some(StopReason::MaxSeconds);
             }
         }
-        stop
+        let gap = if stop.is_some() {
+            1
+        } else {
+            self.next_reconcile_gap(sh, round)
+        };
+        (stop, gap)
+    }
+
+    /// The adaptive cadence state machine (module docs §Reconcile
+    /// cadence): double on conflict-free reconciles, snap back on a
+    /// spike, clamp so stops can only land on reconciled rounds.
+    fn next_reconcile_gap(&mut self, sh: &ReconcileShared, round: usize) -> usize {
+        if self.r_max > self.r_min {
+            let div = sh.round_div.iter().map(|c| c.get()).fold(0.0, f64::max);
+            if div <= 0.0 {
+                self.r_cur = self.r_cur.saturating_mul(2).clamp(self.r_min, self.r_max);
+            } else {
+                if self.div_ewma == 0.0 || div > CONFLICT_SPIKE * self.div_ewma {
+                    // first conflict ever, or a spike over the trend:
+                    // resynchronize every round until it calms down
+                    self.r_cur = self.r_min;
+                }
+                self.div_ewma = if self.div_ewma == 0.0 {
+                    div
+                } else {
+                    0.75 * self.div_ewma + 0.25 * div
+                };
+            }
+        }
+        let gap = self.r_cur.max(1);
+        // stops only happen at reconciled rounds: never skip past the
+        // round cap (time stops may overshoot by < gap rounds, bounded
+        // by r_max — documented)
+        if self.cfg.max_rounds == usize::MAX {
+            gap
+        } else {
+            gap.min(self.cfg.max_rounds.saturating_sub(round).max(1))
+        }
     }
 }
 
 /// The per-shard observer: runs on each pool's leader at every round
-/// boundary and implements the three-crossing reconcile protocol
-/// (arrive → fold chunks → publish → decide → publish → read decision).
-struct ShardObserver<'a> {
+/// boundary; at reconcile rounds it drives the three-crossing protocol
+/// (arrive → fold chunks → publish → decide → publish → read decision),
+/// at skipped rounds it returns immediately without touching the
+/// barrier.
+struct ShardObserver<'a, 'o> {
     s: usize,
-    shared: &'a ReconcileShared<'a>,
-    coordinator: Option<Coordinator<'a>>,
+    shared: &'a ReconcileShared,
+    /// Replica refs hoisted once after the init barrier, so the fold's
+    /// inner loop never pays the `OnceLock` re-check.
+    replicas: Vec<&'a SharedState>,
+    coordinator: Option<Coordinator<'a, 'o>>,
+    /// First round at (or after) which the next reconcile runs.
+    next_reconcile_at: usize,
 }
 
-impl ShardObserver<'_> {
-    /// Fold every replica's round delta into the canonical residual
-    /// over this shard's cache-aligned sample chunk, then refresh all
-    /// replicas — disjoint chunks across shards, one writer per
-    /// element, the buffered-reduce discipline of `util::par`.
+impl ShardObserver<'_, '_> {
+    /// Fold every replica's delta into the canonical residual over this
+    /// shard's cache-aligned sample chunk, then refresh all replicas —
+    /// disjoint chunks across shards, one writer per element, the
+    /// buffered-reduce discipline of `util::par`. With dirty maps, only
+    /// chunks some shard touched since the last reconcile are visited.
     fn reconcile(&mut self) {
         let sh = self.shared;
-        let shards = sh.states.len();
+        let shards = self.replicas.len();
         if shards == 1 {
             // the replica is canonical; rewriting it (even with an
             // a + (b - a) identity) would perturb bit-exactness
             return;
         }
         let t0 = std::time::Instant::now();
-        let mut div = sh.divergence[self.s].get();
-        for i in aligned_chunk(sh.n, self.s, shards) {
+        let mut round_div = 0.0f64;
+        let range = aligned_chunk(sh.n, self.s, shards);
+        if sh.dirty.is_empty() {
+            // dense reference fold: every element of my chunk
+            self.fold_elems(range.start, range.end, &mut round_div);
+        } else {
+            // delta fold: aligned_chunk boundaries are multiples of
+            // DIRTY_CHUNK_ELEMS, so chunk ownership never straddles
+            // shards; visit only chunks dirty in some shard
+            let c_lo = range.start / DIRTY_CHUNK_ELEMS;
+            let c_hi = range.end.div_ceil(DIRTY_CHUNK_ELEMS);
+            let mut folded = 0u64;
+            for c in c_lo..c_hi {
+                if !sh.dirty.iter().any(|d| d.is_dirty(c)) {
+                    continue;
+                }
+                folded += 1;
+                let lo = c * DIRTY_CHUNK_ELEMS;
+                let hi = ((c + 1) * DIRTY_CHUNK_ELEMS).min(range.end);
+                self.fold_elems(lo, hi, &mut round_div);
+            }
+            let df = &sh.dirty_folded[self.s];
+            df.set(df.get() + folded);
+            let cs = &sh.chunks_seen[self.s];
+            cs.set(cs.get() + (c_hi - c_lo) as u64);
+        }
+        sh.round_div[self.s].set(round_div);
+        if round_div > sh.divergence[self.s].get() {
+            sh.divergence[self.s].set(round_div);
+        }
+        let prev = sh.reconcile_nanos[self.s].get();
+        sh.reconcile_nanos[self.s].set(prev + t0.elapsed().as_nanos() as u64);
+    }
+
+    /// The per-element fold over `lo..hi` (shared by the dense and
+    /// delta paths, so they are the same arithmetic by construction).
+    #[inline]
+    fn fold_elems(&self, lo: usize, hi: usize, round_div: &mut f64) {
+        let sh = self.shared;
+        for i in lo..hi {
             let base = sh.z_canon.get(i);
             let mut acc = base;
-            for st in sh.states {
+            for st in &self.replicas {
                 let d = st.z.get(i) - base;
                 if d != 0.0 {
                     acc += d;
                 }
             }
-            for st in sh.states {
+            for st in &self.replicas {
                 let cur = st.z.get(i);
                 if cur != acc {
                     // a replica that updated i itself (cur != base) and
@@ -353,8 +643,8 @@ impl ShardObserver<'_> {
                     // are the mechanism working as designed.
                     if cur != base {
                         let corr = (acc - cur).abs();
-                        if corr > div {
-                            div = corr;
+                        if corr > *round_div {
+                            *round_div = corr;
                         }
                     }
                     st.z.set(i, acc);
@@ -364,15 +654,20 @@ impl ShardObserver<'_> {
                 sh.z_canon.set(i, acc);
             }
         }
-        sh.divergence[self.s].set(div);
-        let prev = sh.reconcile_nanos[self.s].get();
-        sh.reconcile_nanos[self.s].set(prev + t0.elapsed().as_nanos() as u64);
     }
 }
 
-impl Observer for ShardObserver<'_> {
+impl Observer for ShardObserver<'_, '_> {
     fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ControlFlow<()> {
         let sh = self.shared;
+        if info.iter < self.next_reconcile_at {
+            // skipped round: no barrier, no fold — the pools run
+            // decoupled until the next reconcile round they all agreed
+            // on at the previous one
+            let sk = &sh.skipped[self.s];
+            sk.set(sk.get() + 1);
+            return ControlFlow::Continue(());
+        }
         // own padded slot; published to the coordinator by the barrier
         // chain below
         sh.updates[self.s].set(info.updates);
@@ -383,12 +678,20 @@ impl Observer for ShardObserver<'_> {
         self.reconcile();
         // crossing 2: the reconciled residual is published everywhere
         sh.barrier.wait();
+        // clear my dirty map while every pool's writers are parked (the
+        // other shards' folds finished at crossing 2; scatters resume
+        // only after crossing 3)
+        if !sh.dirty.is_empty() {
+            sh.dirty[self.s].clear();
+        }
         if let Some(c) = self.coordinator.as_mut() {
-            let stop = c.plan_round(sh, info.iter);
+            let (stop, gap) = c.plan_round(sh, info.iter);
+            sh.next_gap.set(gap);
             sh.stop.set(stop);
         }
-        // crossing 3: the stop decision is published
+        // crossing 3: the stop decision and the next gap are published
         sh.barrier.wait();
+        self.next_reconcile_at = info.iter.saturating_add(sh.next_gap.get());
         if sh.stop.get().is_some() {
             ControlFlow::Break(())
         } else {
@@ -412,7 +715,25 @@ impl Drop for PoisonReconcileOnPanic<'_> {
 }
 
 /// Run a sharded GenCD solve: one engine pool per [`ShardSpec`], each
-/// with that spec's worker count, reconciled every round.
+/// with that spec's worker count, reconciled per the configured cadence.
+/// Equivalent to [`solve_sharded_with`] without an observer.
+pub fn solve_sharded(
+    global: &Problem,
+    specs: Vec<ShardSpec>,
+    warm_start: Option<&[f64]>,
+    cfg: &ShardedConfig,
+) -> SolveOutput {
+    solve_sharded_with(global, specs, warm_start, cfg, None)
+}
+
+/// [`solve_sharded`] with a caller observer: invoked on the shard-0
+/// coordinator at **every reconciled round**, against the reconciled
+/// global iterate (`IterationInfo::state` holds a coordinator-owned
+/// global-dims snapshot; `selected` is 0 — per-pool selection sizes are
+/// not aggregated). `ControlFlow::Break` stops every pool at that round
+/// with [`StopReason::Observer`]. Under an adaptive cadence the
+/// observer consequently fires only at reconciled rounds — the rounds
+/// at which a consistent global iterate exists at all.
 ///
 /// `global` supplies the objective's loss/labels/lambda and the full
 /// design matrix (used once for the warm-start residual); the per-shard
@@ -432,11 +753,12 @@ impl Drop for PoisonReconcileOnPanic<'_> {
 /// errors, all caught before any threads spawn.
 /// The maps need not cover every column: uncovered columns simply stay
 /// at zero (the builder always produces an exact cover).
-pub fn solve_sharded(
+pub fn solve_sharded_with(
     global: &Problem,
     specs: Vec<ShardSpec>,
     warm_start: Option<&[f64]>,
     cfg: &ShardedConfig,
+    mut observer: Option<&mut dyn Observer>,
 ) -> SolveOutput {
     let s_count = specs.len();
     assert!(s_count >= 1, "solve_sharded: need at least one shard");
@@ -450,6 +772,8 @@ pub fn solve_sharded(
          never run gate sweeps; the periodic cadence is the only \
          reactivation path)"
     );
+    let r_min = cfg.reconcile_every.max(1);
+    let r_max = cfg.reconcile_max_rounds.max(r_min);
     let n = global.n_samples();
     let k = global.n_features();
 
@@ -485,47 +809,66 @@ pub fn solve_sharded(
         ));
     }
 
-    // one full-length residual replica per shard
-    let states: Vec<SharedState> = cols_all
-        .iter()
-        .map(|c| SharedState::new(n, c.len()))
-        .collect();
-    let z_canon = SyncF64Vec::zeros(n);
-    if let Some(w0) = warm_start {
+    // warm-start residual, computed once; each shard copies it into its
+    // own replica on its own (pinned) thread
+    let z0: Option<Vec<f64>> = warm_start.map(|w0| {
         assert_eq!(w0.len(), k, "warm start has {} weights for {k}", w0.len());
-        let z0 = global.x.matvec(w0);
-        z_canon.copy_from(&z0);
-        for (cols, st) in cols_all.iter().zip(&states) {
-            for (local, &g) in cols.iter().enumerate() {
-                st.w.set(local, w0[g as usize]);
-            }
-            st.z.copy_from(&z0);
-        }
-    }
+        global.x.matvec(w0)
+    });
 
+    // NUMA plan: shard s -> topology node index (s mod nodes), skipped
+    // entirely when pinning is off or the host has one node (no-op)
+    let topo = cfg.numa_pin.then(Topology::detect);
+    let pin_idx: Vec<Option<usize>> = (0..s_count)
+        .map(|s| {
+            topo.as_ref()
+                .and_then(|t| (t.n_nodes() >= 2).then_some(s % t.n_nodes()))
+        })
+        .collect();
+    let pinned_ok: Vec<CachePadded<SyncCell<bool>>> = (0..s_count)
+        .map(|_| CachePadded::new(SyncCell::new(false)))
+        .collect();
+
+    let pad_slots_u64 = || -> Vec<CachePadded<SyncCell<u64>>> {
+        (0..s_count)
+            .map(|_| CachePadded::new(SyncCell::new(0u64)))
+            .collect()
+    };
     let shared = ReconcileShared {
         barrier: SpinBarrier::with_spin(s_count, cfg.barrier_spin),
-        states: &states,
-        z_canon,
+        states: (0..s_count).map(|_| OnceLock::new()).collect(),
+        z_canon: SyncF64Vec::zeros(n),
         stop: SyncCell::new(None),
-        updates: (0..s_count)
-            .map(|_| CachePadded::new(SyncCell::new(0u64)))
-            .collect(),
+        next_gap: SyncCell::new(1),
+        updates: pad_slots_u64(),
         divergence: (0..s_count)
             .map(|_| CachePadded::new(SyncCell::new(0.0f64)))
             .collect(),
-        reconcile_nanos: (0..s_count)
-            .map(|_| CachePadded::new(SyncCell::new(0u64)))
+        round_div: (0..s_count)
+            .map(|_| CachePadded::new(SyncCell::new(0.0f64)))
             .collect(),
+        reconcile_nanos: pad_slots_u64(),
+        dirty: if s_count > 1 && cfg.delta_reconcile {
+            (0..s_count).map(|_| DirtyChunks::new(n)).collect()
+        } else {
+            Vec::new()
+        },
+        dirty_folded: pad_slots_u64(),
+        chunks_seen: pad_slots_u64(),
+        skipped: pad_slots_u64(),
         n,
     };
+    if let Some(z0) = &z0 {
+        shared.z_canon.copy_from(z0);
+    }
     let timer = Timer::start();
 
     // Per-pool engine config: pools never stop on their own — every
     // stop (rounds, time, tolerance, divergence) is decided by the
     // coordinator and delivered through the observer, keeping all pools
-    // on the same round (lockstep; see module docs). log_every = MAX
-    // confines each pool's private objective log to round 0.
+    // on the same reconcile schedule (lockstep at reconciled rounds;
+    // see module docs). log_every = MAX confines each pool's private
+    // objective log to round 0.
     let engine_cfg = |update_path: UpdatePath, threads: usize| EngineConfig {
         threads,
         line_search_steps: cfg.line_search_steps,
@@ -539,6 +882,7 @@ pub fn solve_sharded(
         barrier_spin: cfg.barrier_spin,
         screening: cfg.screening,
         kkt_every: cfg.kkt_every,
+        kkt_adaptive: cfg.kkt_adaptive,
         fast_kernels: cfg.fast_kernels,
     };
 
@@ -546,37 +890,84 @@ pub fn solve_sharded(
     let mut coord_history: Option<History> = None;
     std::thread::scope(|scope| {
         let shared = &shared;
+        let cols_all = &cols_all;
+        let owned = &owned;
+        let topo = &topo;
+        let pin_idx = &pin_idx;
+        let pinned_ok = &pinned_ok;
+        let timer = &timer;
+        let z0 = z0.as_deref();
         let mut handles = Vec::with_capacity(s_count);
         for (s, (problem, select, accept, update_path, threads)) in
             runs.into_iter().enumerate()
         {
             let ecfg = engine_cfg(update_path, threads);
-            let coordinator = (s == 0).then(|| Coordinator {
-                global,
-                cols: &cols_all,
-                owned: &owned,
-                timer: &timer,
-                cfg,
-                history: History::default(),
-                scratch_w: vec![0.0; k],
-                last_log_at: -1.0,
-                tol_hits: 0,
-            });
-            let st = &states[s];
+            let coordinator_obs = (s == 0).then(|| observer.take()).flatten();
             handles.push(scope.spawn(move || {
                 let _guard = PoisonReconcileOnPanic(&shared.barrier);
+                // §NUMA step 2: pin *before* any allocation, so the
+                // replica below and everything solve_from allocates
+                // (buffered-reduce accumulators, spill maps, pool
+                // worker stacks) first-touches node-local memory
+                if let Some(idx) = pin_idx[s] {
+                    pinned_ok[s]
+                        .set(topo.as_ref().is_some_and(|t| t.pin_thread_to_node(idx)));
+                }
+                // §NUMA step 3: first-touch replica construction on the
+                // pinned thread (zero-fill is the first write)
+                let cols = &cols_all[s];
+                let st = SharedState::new(n, cols.len());
+                if let Some(z0) = z0 {
+                    let w0 = warm_start.expect("z0 implies warm start");
+                    for (local, &g) in cols.iter().enumerate() {
+                        st.w.set(local, w0[g as usize]);
+                    }
+                    st.z.copy_from(z0);
+                }
+                if shared.states[s].set(st).is_err() {
+                    unreachable!("replica slot {s} filled twice");
+                }
+                // init crossing: every replica published before round 0
+                shared.barrier.wait();
+                let replicas: Vec<&SharedState> =
+                    (0..s_count).map(|i| shared.state(i)).collect();
+                let coordinator = (s == 0).then(|| Coordinator {
+                    global,
+                    cols: cols_all,
+                    owned,
+                    timer,
+                    cfg,
+                    history: History::default(),
+                    scratch_w: vec![0.0; k],
+                    last_log_at: -1.0,
+                    next_log_round: 0,
+                    tol_hits: 0,
+                    r_cur: r_min,
+                    r_min,
+                    r_max,
+                    div_ewma: 0.0,
+                    observer: coordinator_obs,
+                    obs_state: None,
+                });
                 let mut obs = ShardObserver {
                     s,
                     shared,
+                    replicas,
                     coordinator,
+                    next_reconcile_at: 0,
                 };
+                let st = shared.state(s);
                 let out = engine::solve_from(
                     &problem,
                     st,
                     select,
                     accept,
                     &ecfg,
-                    EngineHooks::with_observer(&mut obs),
+                    EngineHooks {
+                        observer: Some(&mut obs),
+                        block_proposer: None,
+                        dirty: shared.dirty.get(s),
+                    },
                 );
                 (out, obs.coordinator.map(|c| c.history))
             }));
@@ -593,13 +984,30 @@ pub fn solve_sharded(
     // global iterate: shard-owned w entries mapped back through the
     // column maps; the reconciled residual is already global
     let mut w = vec![0.0; k];
-    for (cols, st) in cols_all.iter().zip(&states) {
+    for (s, cols) in cols_all.iter().enumerate() {
+        let st = shared.state(s);
         for (local, &g) in cols.iter().enumerate() {
             w[g as usize] = st.w.get(local);
         }
     }
     let z = canonical_z(&shared).snapshot();
     let objective = global.objective(&w, &z);
+
+    // numa_nodes: distinct nodes actually pinned; 1 = requested but
+    // degraded (single node / non-Linux / refused), 0 = off
+    let numa_nodes = if cfg.numa_pin {
+        let mut nodes: Vec<usize> = (0..s_count)
+            .filter(|&s| pinned_ok[s].get())
+            .filter_map(|s| pin_idx[s])
+            .collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        (nodes.len() as u64).max(1)
+    } else {
+        0
+    };
+    let dirty_folded: u64 = shared.dirty_folded.iter().map(|c| c.get()).sum();
+    let chunks_seen: u64 = shared.chunks_seen.iter().map(|c| c.get()).sum();
 
     // aggregate metrics: counts sum across pools, phase seconds are
     // summed leader CPU time, reconcile is the slowest leader's
@@ -620,6 +1028,18 @@ pub fn solve_sharded(
             .iter()
             .map(|c| c.get())
             .fold(0.0, f64::max),
+        numa_nodes,
+        dirty_chunk_frac: if chunks_seen > 0 {
+            dirty_folded as f64 / chunks_seen as f64
+        } else {
+            0.0
+        },
+        reconcile_rounds_skipped: shared
+            .skipped
+            .iter()
+            .map(|c| c.get())
+            .max()
+            .unwrap_or(0),
         ..Default::default()
     };
     for o in &outs {
@@ -738,6 +1158,8 @@ mod tests {
         assert_eq!(out.metrics.iterations, 240);
         assert_eq!(out.metrics.shards, 1);
         assert_eq!(out.metrics.replica_divergence, 0.0);
+        assert_eq!(out.metrics.numa_nodes, 0, "pinning off => 0");
+        assert_eq!(out.metrics.reconcile_rounds_skipped, 0);
         // w and the reported objective agree with a from-scratch z (up
         // to incremental-z accumulation noise)
         let z = p.x.matvec(&out.w);
@@ -751,6 +1173,11 @@ mod tests {
         let first = out.history.records.first().unwrap().objective;
         assert!(out.objective < first, "{first} -> {}", out.objective);
         assert_eq!(out.metrics.shards, 3);
+        // the delta fold actually engaged and measured its sparsity
+        assert!(
+            out.metrics.dirty_chunk_frac > 0.0,
+            "default delta reconcile must report a dirty fraction"
+        );
         // the reconciled residual must be exactly consistent with w (up
         // to fp reassociation across rounds)
         let z = p.x.matvec(&out.w);
@@ -759,6 +1186,47 @@ mod tests {
             "reconciled z inconsistent with w"
         );
         assert!(out.metrics.reconcile_secs >= 0.0);
+    }
+
+    #[test]
+    fn delta_fold_bitwise_matches_dense_fold() {
+        // the §Dirty-chunk contract, end to end: the same multi-shard
+        // solve with the delta fold and the dense reference fold must
+        // produce bit-identical iterates (T = 1 pools are deterministic
+        // and the fold order is fixed, so equality is exact)
+        let p = make_problem(7, 50, 21);
+        let run = |delta: bool| {
+            let mut cfg = sharded_cfg(400);
+            cfg.delta_reconcile = delta;
+            solve_sharded(&p, cyclic_specs(&p, 3), None, &cfg)
+        };
+        let dense = run(false);
+        let delta = run(true);
+        assert_eq!(dense.w, delta.w, "delta fold diverged from dense fold");
+        assert_eq!(dense.objective, delta.objective);
+        assert_eq!(dense.metrics.dirty_chunk_frac, 0.0, "dense path has no map");
+        assert!(delta.metrics.dirty_chunk_frac > 0.0);
+    }
+
+    #[test]
+    fn fixed_cadence_skips_rounds_and_still_converges() {
+        // reconcile_every = 4: three of four rounds skip the barrier
+        let p = make_problem(8, 40, 16);
+        let mut cfg = sharded_cfg(200);
+        cfg.reconcile_every = 4;
+        let out = solve_sharded(&p, cyclic_specs(&p, 2), None, &cfg);
+        assert_eq!(out.stop, StopReason::MaxIters);
+        assert_eq!(out.metrics.iterations, 200, "cap must land on a reconcile");
+        assert!(
+            out.metrics.reconcile_rounds_skipped > 100,
+            "~3/4 of rounds should skip, got {}",
+            out.metrics.reconcile_rounds_skipped
+        );
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first);
+        // reported objective consistent with the reconciled iterate
+        let z = p.x.matvec(&out.w);
+        assert!((p.objective(&out.w, &z) - out.objective).abs() < 1e-9);
     }
 
     #[test]
@@ -790,5 +1258,54 @@ mod tests {
         cfg.log_every = 10;
         let out = solve_sharded(&p, cyclic_specs(&p, 2), None, &cfg);
         assert_eq!(out.stop, StopReason::Tolerance);
+    }
+
+    #[test]
+    fn observer_fires_at_reconciled_rounds_and_stops() {
+        let p = make_problem(5, 30, 12);
+        let mut calls = 0usize;
+        let mut saw_state = false;
+        let mut obs = |info: &IterationInfo<'_>| {
+            calls += 1;
+            saw_state |= info.state.w_snapshot().len() == p.n_features();
+            if info.iter >= 10 {
+                ControlFlow::Break(())
+            } else {
+                ControlFlow::Continue(())
+            }
+        };
+        let out = solve_sharded_with(
+            &p,
+            cyclic_specs(&p, 2),
+            None,
+            &sharded_cfg(1000),
+            Some(&mut obs),
+        );
+        assert_eq!(out.stop, StopReason::Observer);
+        assert_eq!(out.metrics.iterations, 10);
+        assert_eq!(calls, 11, "one call per reconciled round incl. round 0");
+        assert!(saw_state, "observer must see the global-dims iterate");
+    }
+
+    #[test]
+    fn numa_pin_is_a_graceful_noop_and_bit_exact() {
+        // whatever the host topology, pinning must not change a single
+        // FP operation — and on single-node/non-Linux hosts it must
+        // degrade to the warning metric rather than fail
+        let p = make_problem(6, 40, 16);
+        let run = |pin: bool| {
+            let mut cfg = sharded_cfg(150);
+            cfg.numa_pin = pin;
+            solve_sharded(&p, cyclic_specs(&p, 2), None, &cfg)
+        };
+        let plain = run(false);
+        let pinned = run(true);
+        assert_eq!(plain.w, pinned.w, "pinning changed the math");
+        assert_eq!(plain.objective, pinned.objective);
+        assert_eq!(plain.metrics.numa_nodes, 0);
+        assert!(
+            pinned.metrics.numa_nodes >= 1,
+            "numa_pin on must report at least the degraded value"
+        );
     }
 }

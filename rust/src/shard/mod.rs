@@ -12,18 +12,26 @@
 //! * [`engine`] — the bulk-synchronous orchestration
 //!   ([`engine::solve_sharded`]): one unmodified GenCD worker pool per
 //!   shard against a shard-local `z` replica (zero-copy column-range
-//!   views of the design matrix), reconciled at round boundaries with
-//!   the buffered-reduce machinery of [`crate::util::par`].
+//!   views of the design matrix), NUMA-pinned with first-touch replica
+//!   allocation when asked ([`engine`] §NUMA), reconciled at round
+//!   boundaries — every R rounds under the adaptive cadence, folding
+//!   only dirty chunks ([`engine`] §Reconcile cadence) — with the
+//!   buffered-reduce machinery of [`crate::util::par`].
 //!
 //! Entry points: [`SolverBuilder::shards`](crate::solver::SolverBuilder::shards)
-//! / [`shard_strategy`](crate::solver::SolverBuilder::shard_strategy)
-//! for the builder surface, `solver.shards` / `solver.shard_strategy`
-//! in TOML, `--shards` / `--shard-strategy` on the CLI; or call
-//! [`engine::solve_sharded`] directly with hand-built
+//! / [`shard_strategy`](crate::solver::SolverBuilder::shard_strategy) /
+//! [`numa_pin`](crate::solver::SolverBuilder::numa_pin) /
+//! [`reconcile_every`](crate::solver::SolverBuilder::reconcile_every) /
+//! [`reconcile_max_rounds`](crate::solver::SolverBuilder::reconcile_max_rounds)
+//! for the builder surface, the same names under `solver.*` in TOML,
+//! `--shards` / `--shard-strategy` / `--numa-pin` / `--reconcile-every`
+//! / `--reconcile-max-rounds` on the CLI; or call
+//! [`engine::solve_sharded`] (or [`engine::solve_sharded_with`], which
+//! adds a coordinator-side observer) directly with hand-built
 //! [`engine::ShardSpec`]s.
 
 pub mod engine;
 pub mod partition;
 
-pub use engine::{solve_sharded, ShardSpec, ShardedConfig};
+pub use engine::{solve_sharded, solve_sharded_with, ShardSpec, ShardedConfig};
 pub use partition::{partition, ShardPlan, ShardStrategy};

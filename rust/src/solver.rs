@@ -80,7 +80,7 @@ use crate::coordinator::observer::Observer;
 use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::select::Select;
 use crate::loss::{Logistic, Loss};
-use crate::shard::engine::{solve_sharded, ShardSpec, ShardedConfig};
+use crate::shard::engine::{solve_sharded_with, ShardSpec, ShardedConfig};
 use crate::shard::{partition, ShardStrategy};
 use crate::sparse::io::Dataset;
 use crate::sparse::CscMatrix;
@@ -103,9 +103,13 @@ pub struct Solver {
 }
 
 /// Build-time output of the shard partitioning: everything
-/// [`crate::shard::engine::solve_sharded`] needs.
+/// [`crate::shard::engine::solve_sharded`] needs, plus the cross-shard
+/// knobs that have no [`EngineConfig`] home.
 struct ShardedSetup {
     specs: Vec<ShardSpec>,
+    numa_pin: bool,
+    reconcile_every: usize,
+    reconcile_max_rounds: usize,
 }
 
 impl Solver {
@@ -219,13 +223,16 @@ impl Solver {
         let hooks = EngineHooks {
             observer: self.observer.as_deref_mut(),
             block_proposer,
+            dirty: None,
         };
         engine::solve_from(&self.problem, state, self.select, self.accept, &self.cfg, hooks)
     }
 
     /// Sharded tail: hand the build-time shard setup to the sharded
     /// execution layer, mapping the engine knobs onto round-level ones.
-    fn run_sharded(self, setup: ShardedSetup) -> SolveOutput {
+    /// A caller observer runs on the shard-0 coordinator at every
+    /// reconciled round, against the reconciled global iterate.
+    fn run_sharded(mut self, setup: ShardedSetup) -> SolveOutput {
         let scfg = ShardedConfig {
             line_search_steps: self.cfg.line_search_steps,
             max_rounds: self.cfg.max_iters,
@@ -236,13 +243,19 @@ impl Solver {
             barrier_spin: self.cfg.barrier_spin,
             screening: self.cfg.screening,
             kkt_every: self.cfg.kkt_every,
+            kkt_adaptive: self.cfg.kkt_adaptive,
             fast_kernels: self.cfg.fast_kernels,
+            numa_pin: setup.numa_pin,
+            reconcile_every: setup.reconcile_every,
+            reconcile_max_rounds: setup.reconcile_max_rounds,
+            delta_reconcile: true,
         };
-        solve_sharded(
+        solve_sharded_with(
             &self.problem,
             setup.specs,
             self.warm_start.as_deref(),
             &scfg,
+            self.observer.as_deref_mut(),
         )
     }
 }
@@ -275,8 +288,12 @@ pub struct SolverBuilder {
     warm_start: Option<Vec<f64>>,
     shards: usize,
     shard_strategy: ShardStrategy,
+    numa_pin: bool,
+    reconcile_every: usize,
+    reconcile_max_rounds: usize,
     screening: bool,
     kkt_every: usize,
+    kkt_adaptive: bool,
     fast_kernels: bool,
 }
 
@@ -309,8 +326,12 @@ impl Default for SolverBuilder {
             warm_start: None,
             shards: 1,
             shard_strategy: ShardStrategy::Contiguous,
+            numa_pin: false,
+            reconcile_every: 1,
+            reconcile_max_rounds: 0,
             screening: ecfg.screening,
             kkt_every: ecfg.kkt_every,
+            kkt_adaptive: ecfg.kkt_adaptive,
             fast_kernels: ecfg.fast_kernels,
         }
     }
@@ -473,10 +494,15 @@ impl SolverBuilder {
     /// columns ([`shard_strategy`](Self::shard_strategy)), instantiates
     /// the preset per shard over its local columns, and the solve runs
     /// one worker pool per shard against a shard-local residual replica
-    /// reconciled every iteration ([`crate::shard`]). Requires an
-    /// [`algorithm`](Self::algorithm) preset; [`threads`](Self::threads)
-    /// is the *total* worker count, divided across the shard pools.
-    /// Clamped to the column count.
+    /// reconciled per the configured cadence
+    /// ([`reconcile_every`](Self::reconcile_every) /
+    /// [`reconcile_max_rounds`](Self::reconcile_max_rounds), optionally
+    /// NUMA-pinned via [`numa_pin`](Self::numa_pin); see
+    /// [`crate::shard`]). Requires an [`algorithm`](Self::algorithm)
+    /// preset; [`threads`](Self::threads) is the *total* worker count,
+    /// divided across the shard pools. Clamped to the column count. An
+    /// [`observer`](Self::observer) runs on the shard-0 coordinator at
+    /// every reconciled round, against the reconciled global iterate.
     pub fn shards(mut self, shards: usize) -> Self {
         self.shards = shards;
         self
@@ -486,6 +512,37 @@ impl SolverBuilder {
     /// [`ShardStrategy::Contiguous`]).
     pub fn shard_strategy(mut self, strategy: ShardStrategy) -> Self {
         self.shard_strategy = strategy;
+        self
+    }
+
+    /// Pin each shard pool to a NUMA node, with the shard's residual
+    /// replica and engine scratch first-touch-allocated on the pinned
+    /// threads so they live in node-local DRAM
+    /// ([`crate::shard::engine`] §NUMA; default off). A graceful no-op
+    /// on single-node or non-Linux hosts —
+    /// [`MetricsSnapshot::numa_nodes`] reports what actually happened.
+    ///
+    /// [`MetricsSnapshot::numa_nodes`]: crate::coordinator::metrics::MetricsSnapshot::numa_nodes
+    pub fn numa_pin(mut self, pin: bool) -> Self {
+        self.numa_pin = pin;
+        self
+    }
+
+    /// Reconcile shard replicas every R rounds instead of every round
+    /// ([`crate::shard::engine`] §Reconcile cadence; default 1, must be
+    /// >= 1). Rounds in between skip the cross-shard barrier entirely.
+    pub fn reconcile_every(mut self, rounds: usize) -> Self {
+        self.reconcile_every = rounds;
+        self
+    }
+
+    /// Upper bound for the *adaptive* reconcile cadence: when above
+    /// [`reconcile_every`](Self::reconcile_every), the coordinator
+    /// doubles the cadence after conflict-free reconciles and snaps it
+    /// back on a divergence spike. 0 (the default) keeps the fixed
+    /// cadence.
+    pub fn reconcile_max_rounds(mut self, rounds: usize) -> Self {
+        self.reconcile_max_rounds = rounds;
         self
     }
 
@@ -508,6 +565,18 @@ impl SolverBuilder {
     /// screening is on).
     pub fn kkt_every(mut self, every: usize) -> Self {
         self.kkt_every = every;
+        self
+    }
+
+    /// Drive the sweep cadence from the measured reactivation rate
+    /// instead of the fixed [`kkt_every`](Self::kkt_every): clean
+    /// sweeps stretch the interval (up to `kkt_every *`
+    /// [`KKT_STRETCH_MAX`](crate::coordinator::engine::KKT_STRETCH_MAX)),
+    /// any reactivation halves it. The convergence gate is unaffected,
+    /// so fixed and adaptive runs certify the same fixed point.
+    /// Default off.
+    pub fn kkt_adaptive(mut self, adaptive: bool) -> Self {
+        self.kkt_adaptive = adaptive;
         self
     }
 
@@ -591,6 +660,18 @@ impl SolverBuilder {
             self.shards >= 1,
             "SolverBuilder: shards must be >= 1 (1 = the single engine pool)"
         );
+        anyhow::ensure!(
+            self.reconcile_every >= 1,
+            "SolverBuilder: reconcile_every must be >= 1 (1 = reconcile every round)"
+        );
+        anyhow::ensure!(
+            self.reconcile_max_rounds == 0
+                || self.reconcile_max_rounds >= self.reconcile_every,
+            "SolverBuilder: reconcile_max_rounds ({}) must be 0 (fixed cadence) or \
+             >= reconcile_every ({})",
+            self.reconcile_max_rounds,
+            self.reconcile_every
+        );
         if self.screening {
             anyhow::ensure!(
                 self.lambda > 0.0,
@@ -613,11 +694,9 @@ impl SolverBuilder {
                  which needs an .algorithm(..) preset — custom Select/Accept \
                  policies run with shards = 1"
             );
-            anyhow::ensure!(
-                self.observer.is_none(),
-                "SolverBuilder: per-iteration observers are not supported with \
-                 shards > 1 yet (the shard layer owns the round loop)"
-            );
+            // observers ARE supported sharded (PR-3's restriction is
+            // lifted): the shard-0 coordinator invokes them at every
+            // reconciled round on the reconciled global iterate
         }
         // conflict-free plain stores are only sound when every z[i] has
         // a unique writer per Update phase: COLORING's color classes or
@@ -663,6 +742,13 @@ impl SolverBuilder {
                     self.update_path,
                     self.seed,
                 )?,
+                numa_pin: self.numa_pin,
+                reconcile_every: self.reconcile_every,
+                reconcile_max_rounds: if self.reconcile_max_rounds == 0 {
+                    self.reconcile_every
+                } else {
+                    self.reconcile_max_rounds
+                },
             })
         } else {
             None
@@ -736,6 +822,7 @@ impl SolverBuilder {
             buffer_budget_mb: self.buffer_budget_mb,
             screening: self.screening,
             kkt_every: self.kkt_every,
+            kkt_adaptive: self.kkt_adaptive,
             fast_kernels: self.fast_kernels,
             ..Default::default()
         };
@@ -1056,8 +1143,9 @@ mod tests {
         assert!(base().lambda(-1.0).build().is_err());
         assert!(base().threads(0).build().is_err());
         assert!(base().warm_start(vec![0.0; 2]).build().is_err());
-        // sharding: zero shards, custom policies, and observers are
-        // rejected; presets are fine
+        // sharding: zero shards and custom policies are rejected;
+        // presets are fine, and observers now run sharded (the PR-3
+        // restriction is lifted)
         assert!(base().shards(0).build().is_err());
         assert!(Solver::builder()
             .matrix(x.clone())
@@ -1070,8 +1158,15 @@ mod tests {
             .shards(2)
             .observer(|_: &IterationInfo<'_>| ControlFlow::Continue(()))
             .build()
-            .is_err());
+            .is_ok());
         assert!(base().shards(2).build().is_ok());
+        // reconcile cadence knobs: 0 cadence and an inverted window are
+        // rejected; 0 max (= fixed cadence) and a proper window are fine
+        assert!(base().reconcile_every(0).build().is_err());
+        assert!(base().reconcile_every(4).reconcile_max_rounds(2).build().is_err());
+        assert!(base().reconcile_every(4).build().is_ok());
+        assert!(base().reconcile_every(2).reconcile_max_rounds(16).build().is_ok());
+        assert!(base().shards(2).numa_pin(true).build().is_ok());
         // screening: needs a real l1 penalty and a sweep cadence
         assert!(base().lambda(0.0).screening(true).build().is_err());
         assert!(base().screening(true).kkt_every(0).build().is_err());
@@ -1090,12 +1185,14 @@ mod tests {
             .algorithm(Algorithm::Scd)
             .screening(true)
             .kkt_every(7)
+            .kkt_adaptive(true)
             .fast_kernels(true)
             .build()
             .unwrap();
         let cfg = solver.engine_config();
         assert!(cfg.screening);
         assert_eq!(cfg.kkt_every, 7);
+        assert!(cfg.kkt_adaptive);
         assert!(cfg.fast_kernels);
     }
 

@@ -20,12 +20,14 @@ use std::sync::Arc;
 /// enough to cover a memory round-trip at ~1 gather per cycle group,
 /// shallow enough that the prefetched line is still resident when the
 /// loop arrives.
-const PREFETCH_DIST: usize = 16;
+pub(crate) const PREFETCH_DIST: usize = 16;
 
 /// Best-effort read-prefetch hint for the unrolled gather/scatter
 /// kernels; compiles to `prefetcht0` on x86-64 and to nothing elsewhere.
+/// Crate-visible so the on-the-fly gradient kernel
+/// ([`crate::coordinator::propose::gradient_from_z_fast`]) shares it.
 #[inline(always)]
-fn prefetch_read(p: *const f64) {
+pub(crate) fn prefetch_read(p: *const f64) {
     #[cfg(target_arch = "x86_64")]
     // SAFETY: prefetch is a hint — it never faults and has no
     // observable effect on memory, for any address
@@ -281,6 +283,41 @@ impl CscMatrix {
         }
     }
 
+    /// [`axpy_col_fast`](Self::axpy_col_fast) writing through a raw
+    /// base pointer instead of a `&mut` slice — the multi-thread
+    /// conflict-free scatter's kernel (`EngineConfig::fast_kernels`).
+    /// Same unroll, same prefetch, bit-identical arithmetic to the
+    /// scalar kernel (each element touched once, no re-association).
+    ///
+    /// # Safety
+    ///
+    /// `y` must point to a live `f64` array indexable by every row of
+    /// column `j`, and for the duration of the call no other thread may
+    /// read or write the elements this column touches — the engine's
+    /// conflict-free discipline (COLORING's color classes, or a single
+    /// worker) provides exactly that: indices are disjoint across
+    /// concurrent callers, which is sound for raw-pointer stores where
+    /// overlapping `&mut [f64]` slices would not be.
+    pub unsafe fn axpy_col_fast_ptr(&self, j: usize, alpha: f64, y: *mut f64) {
+        let (rows, vals) = self.col(j);
+        let len = rows.len();
+        let mut i = 0;
+        while i + 4 <= len {
+            if i + PREFETCH_DIST < len {
+                prefetch_read(y.add(rows[i + PREFETCH_DIST] as usize) as *const f64);
+            }
+            *y.add(rows[i] as usize) += alpha * vals[i];
+            *y.add(rows[i + 1] as usize) += alpha * vals[i + 1];
+            *y.add(rows[i + 2] as usize) += alpha * vals[i + 2];
+            *y.add(rows[i + 3] as usize) += alpha * vals[i + 3];
+            i += 4;
+        }
+        while i < len {
+            *y.add(rows[i] as usize) += alpha * vals[i];
+            i += 1;
+        }
+    }
+
     /// <X_j, d> (gather along one column) — the Propose step's gradient
     /// numerator.
     #[inline]
@@ -476,6 +513,12 @@ mod tests {
             m.axpy_col_fast(j, 0.37, &mut y1);
             // axpy touches each element once: bit-identical
             assert_eq!(y0, y1, "axpy j={j}");
+            // the raw-pointer variant (multi-thread conflict-free
+            // scatter) is the same arithmetic again
+            let mut y2 = d.clone();
+            // SAFETY: single-threaded test, y2 live and long enough
+            unsafe { m.axpy_col_fast_ptr(j, 0.37, y2.as_mut_ptr()) };
+            assert_eq!(y0, y2, "axpy_ptr j={j}");
         }
         // degenerate columns: empty and shorter than the unroll width
         let tiny = small_fixture();

@@ -221,17 +221,17 @@ impl SyncF64Vec {
         )
     }
 
-    /// Mutable variant of [`Self::plain_slice`] for the unrolled scatter
+    /// Mutable variant of [`Self::plain_slice`] for slice-shaped
     /// kernels ([`CscMatrix::axpy_col_fast`]).
     ///
     /// # Safety
     ///
     /// The caller must be the array's **unique accessor** (no other
     /// read or write, plain or atomic, on any thread) for the slice's
-    /// lifetime. The engine only uses this on single-worker update
-    /// phases, scoped to one kernel call; handing overlapping mutable
-    /// slices to two threads would be instant UB even on disjoint
-    /// indices.
+    /// lifetime — handing overlapping mutable slices to two threads
+    /// would be instant UB even on disjoint indices, which is exactly
+    /// why the engine's conflict-free scatter uses [`Self::raw_ptr`]
+    /// instead (raw stores carry no aliasing claim).
     ///
     /// [`CscMatrix::axpy_col_fast`]: crate::sparse::CscMatrix::axpy_col_fast
     #[allow(clippy::mut_from_ref)]
@@ -241,6 +241,25 @@ impl SyncF64Vec {
             UnsafeCell::raw_get(self.cells.as_ptr().add(self.offset)),
             self.len,
         )
+    }
+
+    /// Raw pointer to element 0 — the escape hatch for kernels that are
+    /// *index-disjoint* across threads but cannot use
+    /// [`Self::plain_slice_mut`] (two threads holding overlapping
+    /// `&mut [f64]` is UB even when the indices they touch are
+    /// disjoint; raw-pointer stores are not). The pointer itself is
+    /// safe to obtain; every dereference carries the same
+    /// unique-writer-per-element phase contract as [`Self::set`]. Used
+    /// by the conflict-free fast scatter
+    /// ([`CscMatrix::axpy_col_fast_ptr`]), where COLORING's color
+    /// classes guarantee element-disjoint writers.
+    ///
+    /// [`CscMatrix::axpy_col_fast_ptr`]: crate::sparse::CscMatrix::axpy_col_fast_ptr
+    #[inline(always)]
+    pub fn raw_ptr(&self) -> *mut f64 {
+        // SAFETY of the pointer arithmetic: offset < cells.len() by
+        // construction; raw_get keeps whole-slab provenance
+        unsafe { UnsafeCell::raw_get(self.cells.as_ptr().add(self.offset)) }
     }
 
     /// Overwrite from a slice (lengths must match).
@@ -474,6 +493,20 @@ mod tests {
         }
         assert_eq!(v.get(4), 7.0);
         assert_eq!(v[4].load(Relaxed), 7.0);
+    }
+
+    #[test]
+    fn raw_ptr_aliases_element_views() {
+        let v = SyncF64Vec::zeros(5);
+        v.set(1, 2.0);
+        let p = v.raw_ptr();
+        // SAFETY: single-threaded test, no concurrent access
+        unsafe {
+            assert_eq!(*p.add(1), 2.0);
+            *p.add(3) += 4.0;
+        }
+        assert_eq!(v.get(3), 4.0);
+        assert_eq!(p as usize % 128, 0, "raw_ptr must start on the aligned base");
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod timer;
+pub mod topo;
 
 pub use atomic::{AtomicF64, SyncCell, SyncF64Vec};
 pub use par::{CachePadded, SpinBarrier};

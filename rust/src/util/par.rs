@@ -48,7 +48,7 @@
 //! grows, so comparing against the captured generation is sufficient —
 //! no ABA.
 
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
 /// Spin iterations before a waiter falls back to parking. At ~1-3 ns per
@@ -260,6 +260,83 @@ pub fn aligned_chunk(len: usize, tid: usize, threads: usize) -> std::ops::Range<
     lo.min(len)..hi.min(len)
 }
 
+/// Elements covered by one dirty bit: one [`aligned_chunk`] alignment
+/// unit (a 128-byte line of `f64`s), so dirty-chunk boundaries coincide
+/// with the reconcile fold's chunk boundaries by construction and no
+/// chunk ever straddles two shards' fold ranges.
+pub const DIRTY_CHUNK_ELEMS: usize = F64S_PER_LINE;
+
+/// A dirty-chunk bitmap over a dense `f64` array: one bit per
+/// [`DIRTY_CHUNK_ELEMS`]-element aligned chunk, set when any element of
+/// the chunk was written. This is what turns the shard layer's O(n·S)
+/// dense reconcile fold into an O(touched) sparse one
+/// ([`crate::shard::engine`] §Reconcile cadence): the engine's Update
+/// scatter marks the chunks it writes, and the fold visits only chunks
+/// some shard dirtied since the last reconcile.
+///
+/// Marking is write-write safe across threads (atomic `fetch_or`), and
+/// the hot path is a plain load: a chunk that is already dirty — the
+/// overwhelmingly common case inside a column scatter — costs one read
+/// and a predictable branch, no RMW.
+#[derive(Debug)]
+pub struct DirtyChunks {
+    words: Box<[AtomicU64]>,
+    chunks: usize,
+}
+
+impl DirtyChunks {
+    /// Bitmap for a dense array of `len` elements, all chunks clean.
+    pub fn new(len: usize) -> Self {
+        let chunks = len.div_ceil(DIRTY_CHUNK_ELEMS);
+        Self {
+            words: (0..chunks.div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
+            chunks,
+        }
+    }
+
+    /// Number of chunks tracked.
+    #[inline]
+    pub fn n_chunks(&self) -> usize {
+        self.chunks
+    }
+
+    /// Mark element `i`'s chunk dirty. Safe under concurrent markers.
+    #[inline(always)]
+    pub fn mark(&self, i: usize) {
+        let c = i / DIRTY_CHUNK_ELEMS;
+        let bit = 1u64 << (c % 64);
+        let word = &self.words[c / 64];
+        // check-first: repeated hits on a hot chunk stay read-only
+        if word.load(Ordering::Relaxed) & bit == 0 {
+            word.fetch_or(bit, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether chunk `c` has been marked since the last clear.
+    #[inline(always)]
+    pub fn is_dirty(&self, c: usize) -> bool {
+        debug_assert!(c < self.chunks);
+        self.words[c / 64].load(Ordering::Relaxed) & (1u64 << (c % 64)) != 0
+    }
+
+    /// Reset every chunk to clean. Caller must be the map's unique
+    /// accessor (the shard layer clears between reconcile barrier
+    /// crossings, with every writer parked).
+    pub fn clear(&self) {
+        for w in self.words.iter() {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Dirty chunks right now (popcount scan).
+    pub fn count(&self) -> usize {
+        self.words
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed).count_ones() as usize)
+            .sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -387,6 +464,46 @@ mod tests {
                 assert_eq!(covered, len);
             }
         }
+    }
+
+    #[test]
+    fn dirty_chunks_mark_clear_count() {
+        // 100 elements -> 7 chunks (16 elems each, last partial)
+        let d = DirtyChunks::new(100);
+        assert_eq!(d.n_chunks(), 7);
+        assert_eq!(d.count(), 0);
+        d.mark(0);
+        d.mark(15); // same chunk
+        d.mark(16); // next chunk
+        d.mark(99); // last, partial chunk
+        assert_eq!(d.count(), 3);
+        assert!(d.is_dirty(0) && d.is_dirty(1) && d.is_dirty(6));
+        assert!(!d.is_dirty(2));
+        d.clear();
+        assert_eq!(d.count(), 0);
+        assert!(!d.is_dirty(0));
+        // > 64 chunks exercises the multi-word path
+        let big = DirtyChunks::new(64 * DIRTY_CHUNK_ELEMS * 3);
+        big.mark(64 * DIRTY_CHUNK_ELEMS); // first chunk of word 1
+        assert!(big.is_dirty(64));
+        assert!(!big.is_dirty(63));
+        assert_eq!(big.count(), 1);
+    }
+
+    #[test]
+    fn dirty_chunks_concurrent_marks_lose_nothing() {
+        let d = std::sync::Arc::new(DirtyChunks::new(64 * DIRTY_CHUNK_ELEMS));
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let d = d.clone();
+                scope.spawn(move || {
+                    for c in (t..64).step_by(4) {
+                        d.mark(c * DIRTY_CHUNK_ELEMS);
+                    }
+                });
+            }
+        });
+        assert_eq!(d.count(), 64, "concurrent fetch_or marks must all land");
     }
 
     #[test]

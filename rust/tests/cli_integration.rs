@@ -23,6 +23,7 @@ fn help_lists_subcommands() {
     let out = run_ok(&["help"]);
     for cmd in [
         "train", "datagen", "color", "spectral", "table3", "fig1", "fig2", "shards",
+        "numa",
     ] {
         assert!(out.contains(cmd), "help missing {cmd}");
     }
@@ -69,6 +70,47 @@ fn train_sharded_runs() {
         .output()
         .expect("spawn gencd");
     assert!(!err.status.success(), "unknown shard strategy must fail");
+}
+
+#[test]
+fn train_numa_pinned_with_adaptive_cadence() {
+    // the PR-5 flags end-to-end: pinned (no-op on single-node CI),
+    // delta-reconciled, adaptive cadence — must run and report
+    let out = run_ok(&[
+        "train",
+        "--dataset",
+        "dorothea@0.03",
+        "--algorithm",
+        "shotgun",
+        "--seconds",
+        "1",
+        "--threads",
+        "2",
+        "--shards",
+        "2",
+        "--numa-pin",
+        "--reconcile-every",
+        "1",
+        "--reconcile-max-rounds",
+        "8",
+    ]);
+    assert!(out.contains("shotgun |"), "missing summary: {out}");
+    // an inverted cadence window is refused before any threads spawn
+    let err = gencd()
+        .args([
+            "train",
+            "--dataset",
+            "dorothea@0.03",
+            "--reconcile-every",
+            "8",
+            "--reconcile-max-rounds",
+            "2",
+            "--seconds",
+            "1",
+        ])
+        .output()
+        .expect("spawn gencd");
+    assert!(!err.status.success(), "inverted cadence window must fail");
 }
 
 #[test]

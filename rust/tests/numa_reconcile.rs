@@ -1,0 +1,313 @@
+//! Differential tests for the PR-5 shard-layer perf levers: NUMA
+//! pinning (must be a bit-exact no-op on the math), dirty-chunk delta
+//! reconcile (byte-identical to the dense fold), adaptive reconcile
+//! cadence (same optimum as every-round reconcile, across all presets),
+//! sharded observers, and the adaptive KKT sweep cadence.
+
+use std::ops::ControlFlow;
+
+use gencd::coordinator::algorithms::Algorithm;
+use gencd::coordinator::convergence::StopReason;
+use gencd::coordinator::observer::IterationInfo;
+use gencd::loss::Squared;
+use gencd::shard::ShardStrategy;
+use gencd::sparse::{CooBuilder, CscMatrix};
+use gencd::util::Pcg64;
+use gencd::{Solver, SolverBuilder};
+
+/// Random sparse design with a planted 3-coordinate signal (the same
+/// construction as `rust/tests/sharding.rs`): squared loss so every
+/// execution mode can reach the unique lasso optimum to machine
+/// precision.
+fn planted_xy(seed: u64, n: usize, k: usize) -> (CscMatrix, Vec<f64>) {
+    let mut rng = Pcg64::seeded(seed);
+    let mut b = CooBuilder::new(n, k);
+    for j in 0..k {
+        for i in 0..n {
+            if rng.next_f64() < 0.25 {
+                b.push(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    let mut x = b.build();
+    x.normalize_columns();
+    let wstar: Vec<f64> = (0..k).map(|j| if j < 3 { 1.5 } else { 0.0 }).collect();
+    let y = x.matvec(&wstar);
+    (x, y)
+}
+
+/// Two feature blocks over disjoint sample halves: a min-overlap
+/// partition makes the shards conflict-free, the low-conflict regime
+/// the adaptive cadence is built to exploit.
+fn block_xy() -> (CscMatrix, Vec<f64>) {
+    let (n_half, k_half) = (30usize, 10usize);
+    let mut rng = Pcg64::seeded(5);
+    let mut b = CooBuilder::new(2 * n_half, 2 * k_half);
+    for j in 0..2 * k_half {
+        let (base, jloc) = if j < k_half { (0, j) } else { (n_half, j - k_half) };
+        for t in 0..12 {
+            b.push(base + (3 * jloc + t) % n_half, j, rng.range_f64(0.2, 1.0));
+        }
+    }
+    let mut x = b.build();
+    x.normalize_columns();
+    let wstar: Vec<f64> = (0..2 * k_half)
+        .map(|j| if j % k_half < 2 { 1.0 } else { 0.0 })
+        .collect();
+    let y = x.matvec(&wstar);
+    (x, y)
+}
+
+fn builder(x: &CscMatrix, y: &[f64], alg: Algorithm) -> SolverBuilder {
+    Solver::builder()
+        .matrix(x.clone())
+        .labels(y.to_vec())
+        .loss(Squared)
+        .lambda(1e-2)
+        .algorithm(alg)
+        .seed(3)
+        .max_seconds(120.0)
+        .log_every(500)
+}
+
+#[test]
+fn numa_pin_is_bit_exact_whatever_the_host() {
+    // acceptance criterion: the pinned path must replay the unpinned
+    // (PR-3-shaped) sharded engine bit-exactly — pinning moves memory,
+    // never arithmetic. Holds on single-node hosts (graceful no-op)
+    // and on real multi-node boxes alike.
+    let (x, y) = planted_xy(1, 50, 20);
+    for alg in [Algorithm::Scd, Algorithm::Shotgun] {
+        let plain = builder(&x, &y, alg)
+            .shards(2)
+            .max_iters(400)
+            .build()
+            .unwrap()
+            .solve();
+        let pinned = builder(&x, &y, alg)
+            .shards(2)
+            .numa_pin(true)
+            .max_iters(400)
+            .build()
+            .unwrap()
+            .solve();
+        assert_eq!(plain.w, pinned.w, "{}: pinning changed the math", alg.name());
+        assert_eq!(plain.objective, pinned.objective, "{}", alg.name());
+        assert_eq!(plain.metrics.numa_nodes, 0);
+        assert!(pinned.metrics.numa_nodes >= 1, "{}", alg.name());
+    }
+}
+
+#[test]
+fn adaptive_cadence_all_presets_converge_to_every_round_objective() {
+    // acceptance criterion: R > 1 (adaptive up to 8 rounds between
+    // reconciles) converges within 1e-12 of the unsharded objective on
+    // every preset — the cadence can delay cross-shard information,
+    // never redirect the fixed point
+    let (x, y) = planted_xy(3, 60, 24);
+    let iters = 12_000usize;
+    for alg in Algorithm::ALL {
+        let plain = builder(&x, &y, alg)
+            .max_iters(iters)
+            .build()
+            .unwrap()
+            .solve();
+        let adaptive = builder(&x, &y, alg)
+            .shards(3)
+            .threads(3)
+            .shard_strategy(ShardStrategy::MinOverlap)
+            .reconcile_max_rounds(8)
+            .max_iters(iters)
+            .build()
+            .unwrap()
+            .solve();
+        assert_eq!(adaptive.metrics.shards, 3, "{}", alg.name());
+        let gap = (plain.objective - adaptive.objective).abs();
+        assert!(
+            gap <= 1e-12,
+            "{}: unsharded {} vs adaptive-cadence sharded {} (gap {gap:.3e})",
+            alg.name(),
+            plain.objective,
+            adaptive.objective
+        );
+    }
+}
+
+#[test]
+fn adaptive_cadence_skips_rounds_on_low_conflict_data() {
+    // block data + min-overlap shards never conflict, so the cadence
+    // must back off and actually skip reconciles — the metrics
+    // acceptance criterion
+    let (x, y) = block_xy();
+    let out = builder(&x, &y, Algorithm::Shotgun)
+        .shards(2)
+        .threads(2)
+        .shard_strategy(ShardStrategy::MinOverlap)
+        .reconcile_max_rounds(16)
+        .max_iters(600)
+        .build()
+        .unwrap()
+        .solve();
+    assert_eq!(
+        out.metrics.replica_divergence, 0.0,
+        "min-overlap shards must not conflict on block data"
+    );
+    assert!(
+        out.metrics.reconcile_rounds_skipped > 0,
+        "a conflict-free run must skip reconciles under the adaptive cadence"
+    );
+    assert!(out.objective.is_finite());
+    assert_eq!(out.metrics.iterations, 600, "the cap lands on a reconcile");
+}
+
+#[test]
+fn fixed_cadence_matches_every_round_at_convergence() {
+    // reconcile_every = 4 without adaptation: same optimum as R = 1
+    let (x, y) = planted_xy(4, 50, 20);
+    let every_round = builder(&x, &y, Algorithm::Ccd)
+        .shards(2)
+        .max_iters(10_000)
+        .build()
+        .unwrap()
+        .solve();
+    let every_fourth = builder(&x, &y, Algorithm::Ccd)
+        .shards(2)
+        .reconcile_every(4)
+        .max_iters(10_000)
+        .build()
+        .unwrap()
+        .solve();
+    let gap = (every_round.objective - every_fourth.objective).abs();
+    assert!(
+        gap <= 1e-12,
+        "R=1 {} vs R=4 {} (gap {gap:.3e})",
+        every_round.objective,
+        every_fourth.objective
+    );
+    assert!(every_fourth.metrics.reconcile_rounds_skipped > 0);
+}
+
+#[test]
+fn sharded_observer_streams_and_stops() {
+    // the lifted PR-3 restriction: observers run with shards > 1, on
+    // the reconciled global iterate, and can stop the solve
+    let (x, y) = planted_xy(6, 40, 16);
+    let k = x.n_cols();
+    let mut calls = 0usize;
+    let mut logged = 0usize;
+    let out = builder(&x, &y, Algorithm::Shotgun)
+        .shards(2)
+        .log_every(5)
+        .observer(move |info: &IterationInfo<'_>| {
+            calls += 1;
+            if let Some(obj) = info.objective {
+                logged += 1;
+                assert!(obj.is_finite());
+            }
+            assert_eq!(info.state.w_snapshot().len(), k);
+            if info.iter >= 20 {
+                assert!(calls >= 21 && logged >= 4);
+                ControlFlow::Break(())
+            } else {
+                ControlFlow::Continue(())
+            }
+        })
+        .max_iters(100_000)
+        .build()
+        .unwrap()
+        .solve();
+    assert_eq!(out.stop, StopReason::Observer);
+    assert_eq!(out.metrics.iterations, 20);
+}
+
+#[test]
+fn coloring_fast_conflict_free_scatter_agrees_with_scalar() {
+    // the fast_kernels extension to the multi-thread conflict-free
+    // scatter: COLORING at 4 workers, fast vs scalar — the scatter is
+    // bit-identical arithmetic, the gradient gathers re-associate, so
+    // the agreement bar is the solve-level one
+    let (x, y) = planted_xy(7, 50, 20);
+    let run = |fast: bool| {
+        builder(&x, &y, Algorithm::Coloring)
+            .threads(4)
+            .fast_kernels(fast)
+            .max_iters(4_000)
+            .build()
+            .unwrap()
+            .solve()
+    };
+    let scalar = run(false);
+    let fast = run(true);
+    assert!(
+        (scalar.objective - fast.objective).abs() < 1e-9,
+        "{} vs {}",
+        scalar.objective,
+        fast.objective
+    );
+    for (a, b) in scalar.w.iter().zip(&fast.w) {
+        assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn adaptive_kkt_through_builder_matches_fixed() {
+    // satellite acceptance: adaptive sweep cadence pins the objective
+    // within 1e-12 of the fixed cadence, through the public surface
+    let (x, y) = planted_xy(8, 50, 20);
+    let run = |adaptive: bool| {
+        builder(&x, &y, Algorithm::Scd)
+            .screening(true)
+            .kkt_every(8)
+            .kkt_adaptive(adaptive)
+            .tol(1e-10)
+            .log_every(10)
+            .max_iters(usize::MAX)
+            .build()
+            .unwrap()
+            .solve()
+    };
+    let fixed = run(false);
+    let adaptive = run(true);
+    assert_eq!(fixed.stop, StopReason::Converged);
+    assert_eq!(adaptive.stop, StopReason::Converged);
+    assert!(
+        (fixed.objective - adaptive.objective).abs() <= 1e-12,
+        "fixed {} vs adaptive {}",
+        fixed.objective,
+        adaptive.objective
+    );
+}
+
+#[test]
+fn numa_pin_with_screening_and_adaptive_cadence_composes() {
+    // the whole PR-5 stack at once on the planted problem: pinned,
+    // screened, delta-reconciled, adaptively cadenced — still lands on
+    // the unsharded optimum
+    let (x, y) = planted_xy(9, 60, 24);
+    let plain = builder(&x, &y, Algorithm::Shotgun)
+        .max_iters(12_000)
+        .build()
+        .unwrap()
+        .solve();
+    let full = builder(&x, &y, Algorithm::Shotgun)
+        .shards(2)
+        .threads(2)
+        .numa_pin(true)
+        .reconcile_max_rounds(8)
+        .screening(true)
+        .kkt_every(8)
+        .kkt_adaptive(true)
+        .max_iters(12_000)
+        .build()
+        .unwrap()
+        .solve();
+    let gap = (plain.objective - full.objective).abs();
+    assert!(
+        gap <= 1e-12,
+        "plain {} vs full-stack {} (gap {gap:.3e})",
+        plain.objective,
+        full.objective
+    );
+    assert!(full.metrics.numa_nodes >= 1);
+    assert!(full.metrics.active_cols > 0);
+}
