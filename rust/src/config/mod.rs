@@ -124,6 +124,13 @@ pub struct SolverConfig {
     /// Adaptive reconcile-cadence ceiling; 0 = fixed cadence. See
     /// `SolverBuilder::reconcile_max_rounds`.
     pub reconcile_max_rounds: usize,
+    /// Bounded replica staleness under the adaptive cadence; 0 =
+    /// unbounded. See `SolverBuilder::max_staleness_rounds`.
+    pub max_staleness_rounds: usize,
+    /// Reconcile-barrier timeout in seconds before a missing peer fails
+    /// the solve (`shard::engine` §Failure semantics); <= 0 disables.
+    /// See `SolverBuilder::barrier_timeout_secs`.
+    pub barrier_timeout_secs: f64,
     /// Active-set KKT screening (`screen` module; default off).
     /// Requires lam > 0; validated by the builder.
     pub screening: bool,
@@ -161,6 +168,8 @@ impl Default for SolverConfig {
             numa_pin: false,
             reconcile_every: 1,
             reconcile_max_rounds: 0,
+            max_staleness_rounds: 0,
+            barrier_timeout_secs: 30.0,
             screening: false,
             kkt_every: 16,
             kkt_adaptive: false,
@@ -270,6 +279,12 @@ impl RunConfig {
             }
             ("solver", "reconcile_max_rounds") => {
                 self.solver.reconcile_max_rounds = as_usize(value)?
+            }
+            ("solver", "max_staleness_rounds") => {
+                self.solver.max_staleness_rounds = as_usize(value)?
+            }
+            ("solver", "barrier_timeout_secs") => {
+                self.solver.barrier_timeout_secs = as_f64(value)?
             }
             ("solver", "screening") => {
                 self.solver.screening = value.as_bool().ok_or_else(bad_type)?
@@ -389,6 +404,20 @@ mod tests {
         assert_eq!(cfg.solver.reconcile_max_rounds, 8);
         assert!(cfg.solver.kkt_adaptive);
         assert!(RunConfig::from_toml("[solver]\nnuma_pin = 2\n").is_err());
+        // hardening knobs: defaults, TOML, and --set override
+        assert_eq!(cfg.solver.max_staleness_rounds, 0);
+        assert_eq!(cfg.solver.barrier_timeout_secs, 30.0);
+        let cfg7 = RunConfig::from_toml(
+            "[solver]\nmax_staleness_rounds = 6\nbarrier_timeout_secs = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg7.solver.max_staleness_rounds, 6);
+        assert_eq!(cfg7.solver.barrier_timeout_secs, 1.5);
+        cfg.set("solver.max_staleness_rounds", "12").unwrap();
+        cfg.set("solver.barrier_timeout_secs", "0.25").unwrap();
+        assert_eq!(cfg.solver.max_staleness_rounds, 12);
+        assert_eq!(cfg.solver.barrier_timeout_secs, 0.25);
+        assert!(RunConfig::from_toml("[solver]\nmax_staleness_rounds = -3\n").is_err());
     }
 
     #[test]

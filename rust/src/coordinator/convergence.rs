@@ -95,6 +95,14 @@ pub enum StopReason {
     /// ([`crate::screen`]); unscreened solves keep reporting
     /// [`Tolerance`](Self::Tolerance).
     Converged,
+    /// A shard pool died mid-solve — it panicked, timed out on a
+    /// reconcile barrier, or observed a poisoned peer — and the sharded
+    /// engine terminated the solve with the best-effort iterate instead
+    /// of hanging. The structured detail travels in
+    /// [`SolveOutput::failure`](super::engine::SolveOutput::failure)
+    /// (see [`crate::shard::engine`] §Failure semantics). Only emitted
+    /// by the shard layer.
+    ShardFailed,
 }
 
 impl std::fmt::Display for StopReason {
@@ -106,10 +114,37 @@ impl std::fmt::Display for StopReason {
             StopReason::Diverged => "diverged",
             StopReason::Observer => "observer",
             StopReason::Converged => "converged",
+            StopReason::ShardFailed => "shard-failed",
         };
         write!(f, "{s}")
     }
 }
+
+/// Structured description of a shard-pool failure: what the solve's
+/// [`StopReason::ShardFailed`] actually was. Carried in
+/// [`SolveOutput::failure`](super::engine::SolveOutput::failure) so
+/// callers can log/match on it without parsing panic payloads.
+#[derive(Clone, Debug)]
+pub struct SolveError {
+    /// Index of the shard whose pool failed, when attributable (a
+    /// barrier timeout observed by a *healthy* shard reports that
+    /// shard's own index — the dead peer is whichever never arrived).
+    pub shard: Option<usize>,
+    /// Human-readable cause: the panic payload, or the link fault
+    /// ("reconcile barrier timed out", "reconcile barrier poisoned").
+    pub message: String,
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.shard {
+            Some(s) => write!(f, "shard {s}: {}", self.message),
+            None => write!(f, "{}", self.message),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
 
 #[cfg(test)]
 mod tests {

@@ -127,6 +127,8 @@ pub fn run_on(
         .numa_pin(cfg.solver.numa_pin)
         .reconcile_every(cfg.solver.reconcile_every)
         .reconcile_max_rounds(cfg.solver.reconcile_max_rounds)
+        .max_staleness_rounds(cfg.solver.max_staleness_rounds)
+        .barrier_timeout_secs(cfg.solver.barrier_timeout_secs)
         .screening(cfg.solver.screening)
         .kkt_every(cfg.solver.kkt_every)
         .kkt_adaptive(cfg.solver.kkt_adaptive)

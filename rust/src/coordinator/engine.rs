@@ -362,6 +362,12 @@ pub struct SolveOutput {
     pub metrics: MetricsSnapshot,
     pub stop: StopReason,
     pub elapsed_secs: f64,
+    /// Structured failure detail when `stop` is
+    /// [`StopReason::ShardFailed`] — the first shard-pool death the
+    /// sharded engine observed (panic payload, barrier timeout, or
+    /// poisoned peer). Always `None` for single-engine solves and for
+    /// sharded solves that finished healthy.
+    pub failure: Option<crate::coordinator::convergence::SolveError>,
 }
 
 /// Resolved per-iteration update discipline (the `Auto` decision).
@@ -995,6 +1001,7 @@ pub fn solve_from(
         metrics: snapshot,
         stop,
         elapsed_secs: elapsed,
+        failure: None,
     }
 }
 

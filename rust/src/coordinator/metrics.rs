@@ -77,6 +77,9 @@ impl Metrics {
             numa_nodes: 0,
             dirty_chunk_frac: 0.0,
             reconcile_rounds_skipped: 0,
+            sim_events: 0,
+            staleness_forced_reconciles: 0,
+            shard_failures: 0,
         }
     }
 }
@@ -151,6 +154,18 @@ pub struct MetricsSnapshot {
     /// each skipped round is a full barrier protocol + fold the shards
     /// did not pay. 0 at the default every-round cadence.
     pub reconcile_rounds_skipped: u64,
+    /// Virtual-time events recorded by the fault-injection simulator
+    /// ([`crate::sim`]) when the solve ran under a `SimLink`; 0 on every
+    /// real (non-simulated) solve.
+    pub sim_events: u64,
+    /// Reconciles forced by the `max_staleness_rounds` bound clamping
+    /// the adaptive cadence (the gap the doubling wanted exceeded the
+    /// staleness budget). 0 when the knob is off or never bound.
+    pub staleness_forced_reconciles: u64,
+    /// Shard pools that died mid-solve (panic, barrier timeout, or
+    /// poisoned peer). Nonzero exactly when the stop reason is
+    /// [`ShardFailed`](super::convergence::StopReason::ShardFailed).
+    pub shard_failures: u64,
 }
 
 impl MetricsSnapshot {

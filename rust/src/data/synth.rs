@@ -98,6 +98,85 @@ pub fn binary_by_columns(
     b.build()
 }
 
+/// Power-law column sparsity: column `j`'s support size decays as
+/// `max_nnz / (j + 1)^alpha` (clamped to `[1, n_rows]`), rows drawn
+/// uniformly, values in ±1. The head columns are dense and
+/// high-leverage, the tail is a long fringe of near-singleton columns —
+/// the document-frequency shape of real text/click matrices, and the
+/// regime where shard load balance and KKT screening are stressed.
+/// Deterministic given the RNG ([`crate::sim`] workload `powerlaw`).
+pub fn power_law_by_columns(
+    n_rows: usize,
+    n_cols: usize,
+    alpha: f64,
+    max_nnz: usize,
+    rng: &mut Pcg64,
+) -> CscMatrix {
+    let mut b = CooBuilder::new(n_rows, n_cols);
+    for j in 0..n_cols {
+        let nnz = ((max_nnz as f64 / (j as f64 + 1.0).powf(alpha)) as usize).clamp(1, n_rows);
+        for i in rng.sample_distinct(n_rows, nnz) {
+            b.push(i, j, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    b.build()
+}
+
+/// Adversarial cross-shard conflict blocks: columns are split into
+/// `groups` contiguous groups (matching a contiguous
+/// [`ShardPlan`](crate::shard::ShardPlan) over `groups` shards), each
+/// column touching `hot_nnz` rows of a **shared hot row block** (rows
+/// `0..hot_rows`, hit by every group) plus `private_nnz` rows of its own
+/// group's private block. Every shard updates the hot rows every round,
+/// so reconcile conflicts are maximal by construction — the worst case
+/// for replica divergence, and the workload the simulator's reordering
+/// and staleness faults bite hardest ([`crate::sim`] workload
+/// `conflict`).
+pub fn conflict_blocks(
+    n_rows: usize,
+    n_cols: usize,
+    groups: usize,
+    hot_nnz: usize,
+    private_nnz: usize,
+    rng: &mut Pcg64,
+) -> CscMatrix {
+    let groups = groups.max(1);
+    let hot_rows = (n_rows / 4).max(1);
+    let priv_rows = n_rows - hot_rows;
+    let mut b = CooBuilder::new(n_rows, n_cols);
+    for j in 0..n_cols {
+        let g = j * groups / n_cols.max(1);
+        for i in rng.sample_distinct(hot_rows, hot_nnz.clamp(1, hot_rows)) {
+            b.push(i, j, rng.range_f64(-1.0, 1.0));
+        }
+        if priv_rows > 0 && groups > 0 {
+            // group g's private slice of the non-hot rows
+            let lo = hot_rows + priv_rows * g / groups;
+            let hi = hot_rows + priv_rows * (g + 1) / groups;
+            if hi > lo {
+                for i in rng.sample_distinct(hi - lo, private_nnz.clamp(1, hi - lo)) {
+                    b.push(lo + i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// Cartesian `(n, k, nnz)` grid for sweep-style scenario generation:
+/// every combination of the three axes, in row-major order (n slowest).
+pub fn grid(ns: &[usize], ks: &[usize], nnzs: &[usize]) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::with_capacity(ns.len() * ks.len() * nnzs.len());
+    for &n in ns {
+        for &k in ks {
+            for &nnz in nnzs {
+                out.push((n, k, nnz));
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +212,61 @@ mod tests {
         let mut v = s.draw_distinct(3, &mut rng);
         v.sort_unstable();
         assert_eq!(v, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn power_law_head_dominates_tail() {
+        let mut rng = Pcg64::seeded(5);
+        let m = power_law_by_columns(200, 50, 1.2, 120, &mut rng);
+        assert_eq!(m.n_rows(), 200);
+        assert_eq!(m.n_cols(), 50);
+        assert!(m.col_nnz(0) > 10 * m.col_nnz(49).max(1) / 2, "no decay");
+        for j in 0..50 {
+            assert!(m.col_nnz(j) >= 1);
+        }
+        // determinism: same seed, same matrix
+        let mut rng2 = Pcg64::seeded(5);
+        let m2 = power_law_by_columns(200, 50, 1.2, 120, &mut rng2);
+        for j in 0..50 {
+            assert_eq!(m.col(j), m2.col(j));
+        }
+    }
+
+    #[test]
+    fn conflict_blocks_share_hot_rows() {
+        let mut rng = Pcg64::seeded(6);
+        let (n, k, groups) = (80usize, 20usize, 2usize);
+        let m = conflict_blocks(n, k, groups, 5, 4, &mut rng);
+        let hot_rows = n / 4;
+        // every column hits the hot block; private rows stay in-group
+        for j in 0..k {
+            let g = j * groups / k;
+            let (rows, _) = m.col(j);
+            assert!(
+                rows.iter().any(|&i| (i as usize) < hot_rows),
+                "col {j} misses the hot block"
+            );
+            let priv_rows = n - hot_rows;
+            let (lo, hi) = (
+                hot_rows + priv_rows * g / groups,
+                hot_rows + priv_rows * (g + 1) / groups,
+            );
+            for &i in rows {
+                let i = i as usize;
+                assert!(
+                    i < hot_rows || (lo..hi).contains(&i),
+                    "col {j} leaked into another group's private block"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grid_is_full_cartesian() {
+        let g = grid(&[10, 20], &[3], &[5, 7, 9]);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g[0], (10, 3, 5));
+        assert_eq!(g[5], (20, 3, 9));
     }
 
     #[test]

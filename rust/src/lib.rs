@@ -62,6 +62,7 @@
 //! | [`screen`] (`SolverBuilder::screening(true)`) | — (shrinks the *work*, not the workers) | per-pool [`ActiveSet`](screen::ActiveSet) bitmask | rides the engine's barriers (one extra crossing per KKT sweep) |
 //! | [`coordinator::engine`] | worker threads in one pool | one `z`/`w` ([`SharedState`](coordinator::problem::SharedState)) | phase spin barriers |
 //! | [`shard`] (`SolverBuilder::shards(n)`) | one NUMA-pinnable engine pool per column shard | per-shard `z` *replica*, first-touched node-local | reconcile barrier, every R rounds (adaptive), dirty-chunk delta fold |
+//! | [`sim`] (`gencd sim`, [`sim::SimLink`]) | the shard layer, unmodified, under virtual time | a seeded [`sim::FaultPlan`] (pure data, consulted identically by every shard) | deterministic fault injection over the [`shard::ReconcileLink`] seam: delays, reorders, stragglers, kills, timeouts |
 //! | future: distributed backends | machines | replica per machine | same reconcile contract |
 //!
 //! The engine scales until every worker hammering the same residual
@@ -156,6 +157,7 @@ pub mod prelude;
 pub mod runtime;
 pub mod screen;
 pub mod shard;
+pub mod sim;
 pub mod simulate;
 pub mod solver;
 pub mod sparse;

@@ -55,6 +55,7 @@ fn run(args: &mut Args) -> anyhow::Result<()> {
         "shards" => cmd_shards(args),
         "screen" => cmd_screen(args),
         "numa" => cmd_numa(args),
+        "sim" => cmd_sim(args),
         "artifacts" => cmd_artifacts(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -75,6 +76,7 @@ SUBCOMMANDS
              [--update-path auto|atomic|buffered|conflict-free]
              [--shards N] [--shard-strategy contiguous|round-robin|min-overlap]
              [--numa-pin] [--reconcile-every N] [--reconcile-max-rounds N]
+             [--max-staleness-rounds N] [--barrier-timeout S]
              [--screening] [--kkt-every N] [--kkt-adaptive] [--fast-kernels]
              [--set table.key=value]...   (e.g. solver.buffer_budget_mb=512)
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
@@ -94,6 +96,9 @@ SUBCOMMANDS
   numa       [--scale F] [--seconds S] [--shards N] [--threads N]
              (NUMA A/B: pinned vs unpinned pools, fixed vs adaptive
               reconcile cadence, dirty-chunk fold fraction)
+  sim        [--dir PATH] [--filter SUBSTR] [--events]
+             (replay the deterministic fault-injection scenario corpus
+              [default scenarios/]; nonzero exit if any scenario fails)
   artifacts  [--dir PATH] [--smoke]
 
 Datasets: dorothea, reuters, optionally suffixed @scale (reuters@0.1),
@@ -151,6 +156,12 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(v) = args.value("reconcile-max-rounds") {
         cfg.solver.reconcile_max_rounds = v.parse()?;
+    }
+    if let Some(v) = args.value("max-staleness-rounds") {
+        cfg.solver.max_staleness_rounds = v.parse()?;
+    }
+    if let Some(v) = args.value("barrier-timeout") {
+        cfg.solver.barrier_timeout_secs = v.parse()?;
     }
     if args.flag("screening") {
         cfg.solver.screening = true;
@@ -526,6 +537,33 @@ fn cmd_numa(args: &mut Args) -> anyhow::Result<()> {
     let threads: usize = args.get("threads", 4)?;
     args.finish()?;
     gencd::bench_harness::experiments::print_numa_ab(shards, threads);
+    Ok(())
+}
+
+fn cmd_sim(args: &mut Args) -> anyhow::Result<()> {
+    let dir = args
+        .value("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("scenarios"));
+    let filter = args.value("filter");
+    let show_events = args.flag("events");
+    args.finish()?;
+    let runs = gencd::sim::run_corpus(&dir, filter.as_deref())?;
+    anyhow::ensure!(
+        !runs.is_empty(),
+        "no scenarios matched under {} (expected *.toml files)",
+        dir.display()
+    );
+    if show_events {
+        for run in &runs {
+            println!("=== {} ===", run.verdict.name);
+            print!("{}", run.event_log);
+        }
+    }
+    let verdicts: Vec<_> = runs.iter().map(|r| r.verdict.clone()).collect();
+    let (report, all_pass) = gencd::sim::render_verdicts(&verdicts);
+    print!("{report}");
+    anyhow::ensure!(all_pass, "scenario corpus has failures");
     Ok(())
 }
 

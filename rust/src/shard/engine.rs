@@ -137,13 +137,68 @@
 //! sharded solve replays the unsharded engine's floating-point sequence
 //! bit-exactly at T = 1 (pinned by `rust/tests/sharding.rs`).
 //!
+//! # The reconcile link
+//!
+//! The three barrier crossings of a reconcile round (plus the init
+//! crossing before round 0) are the *only* cross-shard synchronization
+//! in the layer, and they are abstracted behind [`ReconcileLink`] — a
+//! fallible transport seam. [`BarrierLink`], the default, is the
+//! original SpinBarrier protocol (identity fold order, so it is
+//! bit-exact with the pre-seam engine); `sim::SimLink`
+//! ([`crate::sim`]) drives the same pool code under deterministic
+//! virtual time with injected delay, reordering, stragglers, and
+//! panics; a future `gencd::net` backend speaks the same four-crossing
+//! contract over a wire. A link crossing can *fail* ([`LinkFault`]),
+//! which is what makes the failure semantics below expressible at all.
+//!
+//! # §Failure semantics
+//!
+//! A shard pool can die mid-solve (a panic in policy code, an injected
+//! fault, a wedged peer). The layer's contract is **degrade, never
+//! hang**:
+//!
+//! * **Barrier timeout** — every [`BarrierLink`] crossing waits at most
+//!   [`ShardedConfig::barrier_timeout_secs`] (default 30 s; `<= 0`
+//!   means effectively forever). A timed-out waiter poisons the barrier
+//!   on its way out, so *all* surviving shards unblock — the timed-out
+//!   ones with [`LinkFault::TimedOut`], the rest with
+//!   [`LinkFault::Poisoned`] — record their fault, and stop their pools
+//!   gracefully via `ControlFlow::Break`.
+//! * **Pool panic** — a panicking pool poisons the link from a drop
+//!   guard before unwinding (so its peers escape immediately rather
+//!   than after the timeout) and surfaces through the join as a
+//!   captured panic payload.
+//! * **`StopReason::ShardFailed` contract** — any of the above turns
+//!   the whole solve into a *structured* failure: the output carries
+//!   `stop == ShardFailed`, `failure == Some(SolveError)` (first cause:
+//!   panic payload or link fault, with the observing shard's index),
+//!   and [`MetricsSnapshot::shard_failures`] counts the dead pools. The
+//!   returned iterate is best-effort — the surviving shards' `w` as of
+//!   their last completed round, zeros for a shard that died before
+//!   publishing its replica. Healthy solves are completely unaffected:
+//!   the happy-path crossing is the same spin protocol with one extra
+//!   deadline check every 1024 spins.
+//! * **Bounded staleness** — [`ShardedConfig::max_staleness_rounds`]
+//!   (> 0) clamps the adaptive cadence: whenever the doubling wants a
+//!   reconcile gap above the bound, the gap is forced down to it (and
+//!   counted in [`MetricsSnapshot::staleness_forced_reconciles`]), so
+//!   no shard's replica is ever more than that many rounds stale — the
+//!   divergence bound of Bradley et al. 2011 stays finite by
+//!   construction.
+//! * **Objective tripwire** — an objective *increase* between
+//!   consecutive reconciled log records snaps the adaptive cadence back
+//!   to its floor (the EWMA conflict-spike tripwire already does this
+//!   for replica conflicts), so decoupled rounds cannot compound a
+//!   divergence trend.
+//!
 //! [`OnceLock`]: std::sync::OnceLock
 
 use std::ops::ControlFlow;
 use std::sync::OnceLock;
+use std::time::Duration;
 
 use crate::coordinator::accept::Accept;
-use crate::coordinator::convergence::{History, Record, StopReason};
+use crate::coordinator::convergence::{History, Record, SolveError, StopReason};
 use crate::coordinator::engine::{self, EngineConfig, EngineHooks, SolveOutput, UpdatePath};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::observer::{IterationInfo, Observer};
@@ -152,7 +207,8 @@ use crate::coordinator::select::Select;
 use crate::loss;
 use crate::util::atomic::{SyncCell, SyncF64Vec};
 use crate::util::par::{
-    aligned_chunk, CachePadded, DirtyChunks, SpinBarrier, DEFAULT_SPIN, DIRTY_CHUNK_ELEMS,
+    aligned_chunk, CachePadded, DirtyChunks, SpinBarrier, WaitOutcome, DEFAULT_SPIN,
+    DIRTY_CHUNK_ELEMS,
 };
 use crate::util::topo::Topology;
 use crate::util::Timer;
@@ -161,6 +217,125 @@ use crate::util::Timer;
 /// adaptive reconcile cadence back to its floor (module docs
 /// §Reconcile cadence).
 const CONFLICT_SPIKE: f64 = 4.0;
+
+/// Effectively-infinite barrier timeout (`barrier_timeout_secs <= 0`):
+/// one year, large enough to never fire, small enough that
+/// `Instant::now() + timeout` cannot overflow.
+const FOREVER: Duration = Duration::from_secs(365 * 24 * 3600);
+
+/// Why a [`ReconcileLink`] crossing failed (module docs §Failure
+/// semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkFault {
+    /// The link was poisoned — a peer died (panicked, or timed out and
+    /// poisoned on its way out).
+    Poisoned,
+    /// This shard's own wait exceeded the timeout with peers missing;
+    /// the waiter poisoned the link before returning so its peers
+    /// escape too.
+    TimedOut,
+}
+
+impl LinkFault {
+    /// The human-readable cause carried into [`SolveError::message`].
+    fn message(self) -> &'static str {
+        match self {
+            LinkFault::Poisoned => "reconcile link poisoned by a dying peer",
+            LinkFault::TimedOut => "reconcile barrier timed out (peer missing)",
+        }
+    }
+}
+
+/// The cross-shard transport seam (module docs §The reconcile link):
+/// the four crossings of the reconcile protocol, each fallible, plus
+/// the fold order the delta sum walks replicas in. All methods are
+/// called concurrently by every shard's pool leader; an implementation
+/// must be a *barrier* in each crossing (no shard proceeds until all
+/// arrived, or the crossing fails for everyone it can still reach).
+///
+/// [`BarrierLink`] is the production impl — the original SpinBarrier
+/// protocol, bit-exact with the pre-seam engine. `sim::SimLink`
+/// ([`crate::sim`]) layers deterministic virtual time and fault
+/// injection over it without the pool code knowing.
+pub trait ReconcileLink: Sync {
+    /// The init crossing: every shard has published its replica slot;
+    /// crossing it makes all replicas readable everywhere (round -1).
+    fn init(&self, s: usize) -> Result<(), LinkFault>;
+    /// Crossing 1 of reconcile `round`: every shard finished the round,
+    /// all replica updates are visible.
+    fn arrive(&self, s: usize, round: usize) -> Result<(), LinkFault>;
+    /// Crossing 2: every shard's fold finished — the reconciled
+    /// residual is published everywhere.
+    fn publish_fold(&self, s: usize, round: usize) -> Result<(), LinkFault>;
+    /// Crossing 3: the coordinator's stop decision and next gap are
+    /// published.
+    fn publish_decision(&self, s: usize, round: usize) -> Result<(), LinkFault>;
+    /// Order in which shard `s`'s fold sums the replica deltas at
+    /// `round`. The identity (the default) reproduces the pre-seam
+    /// arithmetic bit-exactly; a permutation models in-flight delta
+    /// reordering (FP summation order — the only thing reordering *can*
+    /// change in a BSP exchange, which is exactly what the simulator
+    /// measures).
+    fn fold_order(&self, s: usize, round: usize, shards: usize) -> Vec<usize> {
+        let _ = (s, round);
+        (0..shards).collect()
+    }
+    /// Mark the link dead and unblock every current and future waiter
+    /// (they fail with [`LinkFault::Poisoned`]). Called from the panic
+    /// drop guard and by shards that observed a fault, so one dead pool
+    /// never strands the rest.
+    fn poison(&self);
+}
+
+/// The default [`ReconcileLink`]: the original 3-crossing SpinBarrier
+/// protocol plus the init crossing, with a per-crossing timeout
+/// (module docs §Failure semantics). Identity fold order — bit-exact
+/// with the pre-seam engine, pinned by the differential tests.
+pub struct BarrierLink {
+    barrier: SpinBarrier,
+    timeout: Duration,
+}
+
+impl BarrierLink {
+    /// Link for `parties` shards with the given spin budget and
+    /// per-crossing timeout (`None` = effectively forever).
+    pub fn new(parties: usize, spin: u32, timeout: Option<Duration>) -> Self {
+        Self {
+            barrier: SpinBarrier::with_spin(parties, spin),
+            timeout: timeout.unwrap_or(FOREVER),
+        }
+    }
+
+    fn cross(&self) -> Result<(), LinkFault> {
+        match self.barrier.wait_timeout(self.timeout) {
+            WaitOutcome::Released(_) => Ok(()),
+            WaitOutcome::Poisoned => Err(LinkFault::Poisoned),
+            WaitOutcome::TimedOut => Err(LinkFault::TimedOut),
+        }
+    }
+}
+
+impl ReconcileLink for BarrierLink {
+    fn init(&self, _s: usize) -> Result<(), LinkFault> {
+        self.cross()
+    }
+
+    fn arrive(&self, _s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross()
+    }
+
+    fn publish_fold(&self, _s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross()
+    }
+
+    fn publish_decision(&self, _s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross()
+    }
+
+    fn poison(&self) {
+        self.barrier.poison();
+    }
+}
 
 /// Everything one shard's pool runs with: a sub-problem over the
 /// shard's columns (built on a zero-copy
@@ -243,6 +418,21 @@ pub struct ShardedConfig {
     /// `false` keeps the PR-3 dense full-scan fold as the reference —
     /// the differential tests and the hotpath bench A/B use it.
     pub delta_reconcile: bool,
+    /// Per-crossing reconcile barrier timeout in seconds (module docs
+    /// §Failure semantics): a shard waiting longer than this for its
+    /// peers concludes a pool died, poisons the link, and the solve
+    /// terminates with [`StopReason::ShardFailed`] instead of hanging.
+    /// `<= 0` disables the timeout (waits effectively forever — the
+    /// pre-hardening behavior, minus the hang-on-death). Default 30 s:
+    /// far above any healthy round, far below a stuck CI job.
+    pub barrier_timeout_secs: f64,
+    /// Bounded staleness (module docs §Failure semantics): with a value
+    /// > 0, the adaptive cadence may never schedule a reconcile gap
+    /// above this many rounds — the doubling is clamped and each
+    /// clamped reconcile is counted in
+    /// [`MetricsSnapshot::staleness_forced_reconciles`]. 0 (default)
+    /// leaves the cadence bounded only by `reconcile_max_rounds`.
+    pub max_staleness_rounds: usize,
 }
 
 impl Default for ShardedConfig {
@@ -264,16 +454,18 @@ impl Default for ShardedConfig {
             reconcile_every: 1,
             reconcile_max_rounds: 1,
             delta_reconcile: true,
+            barrier_timeout_secs: 30.0,
+            max_staleness_rounds: 0,
         }
     }
 }
 
-/// Cross-shard shared state: the reconcile barrier, the replica slots,
-/// the canonical residual, the stop/cadence decisions, and per-shard
-/// padded metric slots (unique writer per slot, read by the coordinator
-/// after a barrier).
+/// Cross-shard shared state: the replica slots, the canonical residual,
+/// the stop/cadence decisions, and per-shard padded metric slots
+/// (unique writer per slot, read by the coordinator after a barrier).
+/// The reconcile *transport* — the barrier itself — lives behind the
+/// [`ReconcileLink`] seam, not here.
 struct ReconcileShared {
-    barrier: SpinBarrier,
     /// Replica slots, filled by each shard's *own* thread (after NUMA
     /// pinning, so zero-fill first-touches node-local pages) and
     /// published to every shard by the init barrier crossing.
@@ -309,6 +501,12 @@ struct ReconcileShared {
     /// Per-shard rounds skipped between reconciles (equal across
     /// shards by construction; aggregated as the max).
     skipped: Vec<CachePadded<SyncCell<u64>>>,
+    /// Per-shard link-fault slots (unique writer: the shard itself,
+    /// just before it breaks out of its pool; read after the join).
+    failures: Vec<CachePadded<SyncCell<Option<LinkFault>>>>,
+    /// Reconciles the staleness bound forced (written only by the
+    /// shard-0 coordinator between crossings 2 and 3).
+    staleness_forced: CachePadded<SyncCell<u64>>,
     n: usize,
 }
 
@@ -414,6 +612,16 @@ impl Coordinator<'_, '_> {
             );
             objective = Some(obj);
             nnz_now = Some(loss::nnz(&self.scratch_w));
+            // objective-increase tripwire (module docs §Failure
+            // semantics): the objective rising between reconciled log
+            // records means the decoupled rounds overshot — snap the
+            // adaptive cadence to its floor before it compounds. The
+            // relative margin ignores ulp-level reassociation noise.
+            if let Some(prev) = self.history.last().map(|r| r.objective) {
+                if obj > prev + prev.abs().max(1e-300) * 1e-12 {
+                    self.r_cur = self.r_min;
+                }
+            }
             self.history.push(Record {
                 elapsed_secs: elapsed,
                 iter: round,
@@ -541,7 +749,16 @@ impl Coordinator<'_, '_> {
                 };
             }
         }
-        let gap = self.r_cur.max(1);
+        let mut gap = self.r_cur.max(1);
+        // bounded staleness (module docs §Failure semantics): the
+        // cadence may never schedule a gap above the budget — replica
+        // age stays provably bounded no matter what the doubling wants
+        let max_stale = self.cfg.max_staleness_rounds;
+        if max_stale > 0 && gap > max_stale {
+            gap = max_stale;
+            let sf = &sh.staleness_forced;
+            sf.set(sf.get() + 1);
+        }
         // stops only happen at reconciled rounds: never skip past the
         // round cap (time stops may overshoot by < gap rounds, bounded
         // by r_max — documented)
@@ -555,12 +772,14 @@ impl Coordinator<'_, '_> {
 
 /// The per-shard observer: runs on each pool's leader at every round
 /// boundary; at reconcile rounds it drives the three-crossing protocol
-/// (arrive → fold chunks → publish → decide → publish → read decision),
-/// at skipped rounds it returns immediately without touching the
-/// barrier.
+/// (arrive → fold chunks → publish → decide → publish → read decision)
+/// over the [`ReconcileLink`], at skipped rounds it returns immediately
+/// without touching the link.
 struct ShardObserver<'a, 'o> {
     s: usize,
     shared: &'a ReconcileShared,
+    /// The cross-shard transport (module docs §The reconcile link).
+    link: &'a dyn ReconcileLink,
     /// Replica refs hoisted once after the init barrier, so the fold's
     /// inner loop never pays the `OnceLock` re-check.
     replicas: Vec<&'a SharedState>,
@@ -575,7 +794,9 @@ impl ShardObserver<'_, '_> {
     /// disjoint chunks across shards, one writer per element, the
     /// buffered-reduce discipline of `util::par`. With dirty maps, only
     /// chunks some shard touched since the last reconcile are visited.
-    fn reconcile(&mut self) {
+    /// The delta sum walks replicas in the link's fold order (identity
+    /// on [`BarrierLink`] — bit-exact with the pre-seam fold).
+    fn reconcile(&mut self, round: usize) {
         let sh = self.shared;
         let shards = self.replicas.len();
         if shards == 1 {
@@ -584,11 +805,21 @@ impl ShardObserver<'_, '_> {
             return;
         }
         let t0 = std::time::Instant::now();
+        let order = self.link.fold_order(self.s, round, shards);
+        debug_assert_eq!(
+            {
+                let mut o = order.clone();
+                o.sort_unstable();
+                o
+            },
+            (0..shards).collect::<Vec<_>>(),
+            "fold order must be a permutation of the shards"
+        );
         let mut round_div = 0.0f64;
         let range = aligned_chunk(sh.n, self.s, shards);
         if sh.dirty.is_empty() {
             // dense reference fold: every element of my chunk
-            self.fold_elems(range.start, range.end, &mut round_div);
+            self.fold_elems(range.start, range.end, &order, &mut round_div);
         } else {
             // delta fold: aligned_chunk boundaries are multiples of
             // DIRTY_CHUNK_ELEMS, so chunk ownership never straddles
@@ -603,7 +834,7 @@ impl ShardObserver<'_, '_> {
                 folded += 1;
                 let lo = c * DIRTY_CHUNK_ELEMS;
                 let hi = ((c + 1) * DIRTY_CHUNK_ELEMS).min(range.end);
-                self.fold_elems(lo, hi, &mut round_div);
+                self.fold_elems(lo, hi, &order, &mut round_div);
             }
             let df = &sh.dirty_folded[self.s];
             df.set(df.get() + folded);
@@ -620,14 +851,17 @@ impl ShardObserver<'_, '_> {
 
     /// The per-element fold over `lo..hi` (shared by the dense and
     /// delta paths, so they are the same arithmetic by construction).
+    /// `order` is the link's replica walk order for the delta sum; the
+    /// refresh loop below it is order-insensitive (every replica gets
+    /// the same `acc`) and stays in natural order.
     #[inline]
-    fn fold_elems(&self, lo: usize, hi: usize, round_div: &mut f64) {
+    fn fold_elems(&self, lo: usize, hi: usize, order: &[usize], round_div: &mut f64) {
         let sh = self.shared;
         for i in lo..hi {
             let base = sh.z_canon.get(i);
             let mut acc = base;
-            for st in &self.replicas {
-                let d = st.z.get(i) - base;
+            for &r in order {
+                let d = self.replicas[r].z.get(i) - base;
                 if d != 0.0 {
                     acc += d;
                 }
@@ -657,27 +891,21 @@ impl ShardObserver<'_, '_> {
     }
 }
 
-impl Observer for ShardObserver<'_, '_> {
-    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ControlFlow<()> {
+impl ShardObserver<'_, '_> {
+    /// One reconcile round over the link; `Err` means a crossing failed
+    /// (peer dead or timed out) and the pool must stop.
+    fn reconcile_round(&mut self, info: &IterationInfo<'_>) -> Result<ControlFlow<()>, LinkFault> {
         let sh = self.shared;
-        if info.iter < self.next_reconcile_at {
-            // skipped round: no barrier, no fold — the pools run
-            // decoupled until the next reconcile round they all agreed
-            // on at the previous one
-            let sk = &sh.skipped[self.s];
-            sk.set(sk.get() + 1);
-            return ControlFlow::Continue(());
-        }
-        // own padded slot; published to the coordinator by the barrier
+        // own padded slot; published to the coordinator by the crossing
         // chain below
         sh.updates[self.s].set(info.updates);
         // crossing 1: every shard finished the round; all replica
         // updates are visible (each pool's end-of-update barrier chains
         // into this one)
-        sh.barrier.wait();
-        self.reconcile();
+        self.link.arrive(self.s, info.iter)?;
+        self.reconcile(info.iter);
         // crossing 2: the reconciled residual is published everywhere
-        sh.barrier.wait();
+        self.link.publish_fold(self.s, info.iter)?;
         // clear my dirty map while every pool's writers are parked (the
         // other shards' folds finished at crossing 2; scatters resume
         // only after crossing 3)
@@ -690,21 +918,46 @@ impl Observer for ShardObserver<'_, '_> {
             sh.stop.set(stop);
         }
         // crossing 3: the stop decision and the next gap are published
-        sh.barrier.wait();
+        self.link.publish_decision(self.s, info.iter)?;
         self.next_reconcile_at = info.iter.saturating_add(sh.next_gap.get());
-        if sh.stop.get().is_some() {
+        Ok(if sh.stop.get().is_some() {
             ControlFlow::Break(())
         } else {
             ControlFlow::Continue(())
+        })
+    }
+}
+
+impl Observer for ShardObserver<'_, '_> {
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ControlFlow<()> {
+        let sh = self.shared;
+        if info.iter < self.next_reconcile_at {
+            // skipped round: no barrier, no fold — the pools run
+            // decoupled until the next reconcile round they all agreed
+            // on at the previous one
+            let sk = &sh.skipped[self.s];
+            sk.set(sk.get() + 1);
+            return ControlFlow::Continue(());
+        }
+        match self.reconcile_round(info) {
+            Ok(flow) => flow,
+            Err(fault) => {
+                // degrade, never hang (module docs §Failure semantics):
+                // record the fault, make sure every peer escapes too,
+                // and stop this pool gracefully at the round boundary
+                sh.failures[self.s].set(Some(fault));
+                self.link.poison();
+                ControlFlow::Break(())
+            }
         }
     }
 }
 
-/// Poisons the reconcile barrier if a shard pool unwinds, so the other
-/// pools panic out of their crossings instead of deadlocking on a shard
-/// that will never arrive (the cross-shard analogue of the engine's
-/// internal poison guard).
-struct PoisonReconcileOnPanic<'a>(&'a SpinBarrier);
+/// Poisons the reconcile link if a shard pool unwinds, so the other
+/// pools fail out of their crossings with [`LinkFault::Poisoned`]
+/// instead of deadlocking on a shard that will never arrive (the
+/// cross-shard analogue of the engine's internal poison guard).
+struct PoisonReconcileOnPanic<'a>(&'a dyn ReconcileLink);
 
 impl Drop for PoisonReconcileOnPanic<'_> {
     fn drop(&mut self) {
@@ -758,7 +1011,24 @@ pub fn solve_sharded_with(
     specs: Vec<ShardSpec>,
     warm_start: Option<&[f64]>,
     cfg: &ShardedConfig,
+    observer: Option<&mut dyn Observer>,
+) -> SolveOutput {
+    let timeout = (cfg.barrier_timeout_secs > 0.0)
+        .then(|| Duration::from_secs_f64(cfg.barrier_timeout_secs));
+    let link = BarrierLink::new(specs.len().max(1), cfg.barrier_spin, timeout);
+    solve_sharded_linked(global, specs, warm_start, cfg, observer, &link)
+}
+
+/// [`solve_sharded_with`] over an explicit [`ReconcileLink`] — the seam
+/// the simulator ([`crate::sim`]) and any future distributed backend
+/// plug into. The link's party count must equal `specs.len()`.
+pub fn solve_sharded_linked(
+    global: &Problem,
+    specs: Vec<ShardSpec>,
+    warm_start: Option<&[f64]>,
+    cfg: &ShardedConfig,
     mut observer: Option<&mut dyn Observer>,
+    link: &dyn ReconcileLink,
 ) -> SolveOutput {
     let s_count = specs.len();
     assert!(s_count >= 1, "solve_sharded: need at least one shard");
@@ -835,7 +1105,6 @@ pub fn solve_sharded_with(
             .collect()
     };
     let shared = ReconcileShared {
-        barrier: SpinBarrier::with_spin(s_count, cfg.barrier_spin),
         states: (0..s_count).map(|_| OnceLock::new()).collect(),
         z_canon: SyncF64Vec::zeros(n),
         stop: SyncCell::new(None),
@@ -856,6 +1125,10 @@ pub fn solve_sharded_with(
         dirty_folded: pad_slots_u64(),
         chunks_seen: pad_slots_u64(),
         skipped: pad_slots_u64(),
+        failures: (0..s_count)
+            .map(|_| CachePadded::new(SyncCell::new(None)))
+            .collect(),
+        staleness_forced: CachePadded::new(SyncCell::new(0u64)),
         n,
     };
     if let Some(z0) = &z0 {
@@ -888,6 +1161,7 @@ pub fn solve_sharded_with(
 
     let mut outs: Vec<SolveOutput> = Vec::with_capacity(s_count);
     let mut coord_history: Option<History> = None;
+    let mut failures: Vec<SolveError> = Vec::new();
     std::thread::scope(|scope| {
         let shared = &shared;
         let cols_all = &cols_all;
@@ -904,7 +1178,7 @@ pub fn solve_sharded_with(
             let ecfg = engine_cfg(update_path, threads);
             let coordinator_obs = (s == 0).then(|| observer.take()).flatten();
             handles.push(scope.spawn(move || {
-                let _guard = PoisonReconcileOnPanic(&shared.barrier);
+                let _guard = PoisonReconcileOnPanic(link);
                 // §NUMA step 2: pin *before* any allocation, so the
                 // replica below and everything solve_from allocates
                 // (buffered-reduce accumulators, spill maps, pool
@@ -928,7 +1202,13 @@ pub fn solve_sharded_with(
                     unreachable!("replica slot {s} filled twice");
                 }
                 // init crossing: every replica published before round 0
-                shared.barrier.wait();
+                if let Err(fault) = link.init(s) {
+                    // a peer died before round 0: record, make sure the
+                    // rest escape, run nothing
+                    shared.failures[s].set(Some(fault));
+                    link.poison();
+                    return (None, None);
+                }
                 let replicas: Vec<&SharedState> =
                     (0..s_count).map(|i| shared.state(i)).collect();
                 let coordinator = (s == 0).then(|| Coordinator {
@@ -952,6 +1232,7 @@ pub fn solve_sharded_with(
                 let mut obs = ShardObserver {
                     s,
                     shared,
+                    link,
                     replicas,
                     coordinator,
                     next_reconcile_at: 0,
@@ -969,28 +1250,68 @@ pub fn solve_sharded_with(
                         dirty: shared.dirty.get(s),
                     },
                 );
-                (out, obs.coordinator.map(|c| c.history))
+                (Some(out), obs.coordinator.map(|c| c.history))
             }));
         }
-        for h in handles {
-            let (out, hist) = h.join().expect("shard pool panicked");
-            if let Some(hist) = hist {
-                coord_history = Some(hist);
+        // the join IS the catch_unwind: scoped-thread panics surface
+        // here as Err payloads, not re-raised — turn them into
+        // structured SolveErrors instead of aborting the caller
+        for (s, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok((out, hist)) => {
+                    if let Some(hist) = hist {
+                        coord_history = Some(hist);
+                    }
+                    if let Some(out) = out {
+                        outs.push(out);
+                    }
+                }
+                Err(payload) => {
+                    let message = payload
+                        .downcast_ref::<&str>()
+                        .map(|m| (*m).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "shard pool panicked".to_string());
+                    failures.push(SolveError {
+                        shard: Some(s),
+                        message: format!("pool panicked: {message}"),
+                    });
+                }
             }
-            outs.push(out);
         }
     });
+    // link faults recorded by shards that stopped gracefully (timeouts,
+    // poisoned peers). A pool that both panicked and poisoned shows up
+    // once, via its join error above.
+    for (s, slot) in shared.failures.iter().enumerate() {
+        if let Some(fault) = slot.get() {
+            failures.push(SolveError {
+                shard: Some(s),
+                message: fault.message().to_string(),
+            });
+        }
+    }
 
     // global iterate: shard-owned w entries mapped back through the
-    // column maps; the reconciled residual is already global
+    // column maps; the reconciled residual is already global. A pool
+    // that died before publishing its replica leaves its columns at
+    // zero (the best-effort iterate of §Failure semantics).
     let mut w = vec![0.0; k];
     for (s, cols) in cols_all.iter().enumerate() {
-        let st = shared.state(s);
+        let Some(st) = shared.states[s].get() else {
+            continue;
+        };
         for (local, &g) in cols.iter().enumerate() {
             w[g as usize] = st.w.get(local);
         }
     }
-    let z = canonical_z(&shared).snapshot();
+    let z = if shared.states.iter().all(|s| s.get().is_some()) {
+        canonical_z(&shared).snapshot()
+    } else {
+        // some replica never existed: recompute the residual that
+        // matches the partial w instead of reading half-built state
+        global.x.matvec(&w)
+    };
     let objective = global.objective(&w, &z);
 
     // numa_nodes: distinct nodes actually pinned; 1 = requested but
@@ -1014,7 +1335,7 @@ pub fn solve_sharded_with(
     // wall-clock share, iterations = completed rounds (identical on
     // every pool by lockstep)
     let mut agg = MetricsSnapshot {
-        iterations: outs[0].metrics.iterations,
+        iterations: outs.first().map(|o| o.metrics.iterations).unwrap_or(0),
         shards: s_count as u64,
         reconcile_secs: shared
             .reconcile_nanos
@@ -1040,6 +1361,8 @@ pub fn solve_sharded_with(
             .map(|c| c.get())
             .max()
             .unwrap_or(0),
+        staleness_forced_reconciles: shared.staleness_forced.get(),
+        shard_failures: failures.len() as u64,
         ..Default::default()
     };
     for o in &outs {
@@ -1061,14 +1384,20 @@ pub fn solve_sharded_with(
         agg.auto_switch_factor = agg.auto_switch_factor.max(o.metrics.auto_switch_factor);
     }
 
+    let stop = if failures.is_empty() {
+        shared.stop.get().unwrap_or(StopReason::MaxIters)
+    } else {
+        StopReason::ShardFailed
+    };
     SolveOutput {
         nnz: loss::nnz(&w),
         w,
         objective,
         history: coord_history.unwrap_or_default(),
         metrics: agg,
-        stop: shared.stop.get().unwrap_or(StopReason::MaxIters),
+        stop,
         elapsed_secs: timer.elapsed_secs(),
+        failure: failures.into_iter().next(),
     }
 }
 
@@ -1285,6 +1614,161 @@ mod tests {
         assert_eq!(out.metrics.iterations, 10);
         assert_eq!(calls, 11, "one call per reconciled round incl. round 0");
         assert!(saw_state, "observer must see the global-dims iterate");
+    }
+
+    /// Block-diagonal problem: contiguous shard `s` of `shards` touches
+    /// only its own row block, so reconciles are conflict-free by
+    /// construction (the adaptive cadence doubles every time).
+    fn make_block_problem(seed: u64, n: usize, k: usize, shards: usize) -> Problem {
+        let mut rng = Pcg64::seeded(seed);
+        let mut b = CooBuilder::new(n, k);
+        for j in 0..k {
+            let s = j * shards / k;
+            let (r_lo, r_hi) = (n * s / shards, n * (s + 1) / shards);
+            for i in r_lo..r_hi {
+                if rng.next_f64() < 0.5 {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let mut x = b.build();
+        x.normalize_columns();
+        let wstar: Vec<f64> = (0..k).map(|j| if j % 5 == 0 { 1.0 } else { 0.0 }).collect();
+        let y = x.matvec(&wstar);
+        Problem::new(
+            Dataset {
+                x,
+                y,
+                name: "shard-block".into(),
+            },
+            Box::new(Squared),
+            1e-3,
+        )
+    }
+
+    /// A Select that panics after `fuse` calls — a pool death injected
+    /// in policy code, the §Failure-semantics panic path.
+    struct PanicAfter {
+        inner: Cyclic,
+        fuse: usize,
+    }
+    impl crate::coordinator::select::Select for PanicAfter {
+        fn select(&mut self, out: &mut Vec<u32>) {
+            if self.fuse == 0 {
+                panic!("injected select panic");
+            }
+            self.fuse -= 1;
+            self.inner.select(out);
+        }
+        fn expected_size(&self) -> f64 {
+            1.0
+        }
+    }
+
+    /// A Select that sleeps long enough to trip the reconcile barrier
+    /// timeout on its peers.
+    struct SlowSelect {
+        inner: Cyclic,
+        sleep: std::time::Duration,
+    }
+    impl crate::coordinator::select::Select for SlowSelect {
+        fn select(&mut self, out: &mut Vec<u32>) {
+            std::thread::sleep(self.sleep);
+            self.inner.select(out);
+        }
+        fn expected_size(&self) -> f64 {
+            1.0
+        }
+    }
+
+    #[test]
+    fn pool_panic_becomes_shard_failed() {
+        // a pool that panics mid-solve must degrade the solve into
+        // StopReason::ShardFailed + a structured SolveError — never a
+        // hang, never an unwinding panic out of solve_sharded
+        let p = make_problem(11, 30, 12);
+        let mut specs = cyclic_specs(&p, 2);
+        let k_s = specs[1].cols.len();
+        specs[1].select = Box::new(PanicAfter {
+            inner: Cyclic { next: 0, k: k_s },
+            fuse: 5,
+        });
+        let out = solve_sharded(&p, specs, None, &sharded_cfg(1000));
+        assert_eq!(out.stop, StopReason::ShardFailed);
+        let failure = out.failure.expect("structured error must be carried");
+        assert!(
+            failure.message.contains("injected select panic"),
+            "panic payload should surface: {failure}"
+        );
+        assert_eq!(failure.shard, Some(1));
+        assert!(out.metrics.shard_failures >= 1);
+        // the survivor's iterate is still reported and finite
+        assert!(out.objective.is_finite());
+    }
+
+    #[test]
+    fn barrier_timeout_becomes_shard_failed() {
+        // one straggler pool sleeping far past the timeout: the healthy
+        // shard must give up with TimedOut (poisoning the link so the
+        // straggler escapes too) instead of waiting forever
+        let p = make_problem(12, 30, 12);
+        let mut specs = cyclic_specs(&p, 2);
+        let k_s = specs[1].cols.len();
+        specs[1].select = Box::new(SlowSelect {
+            inner: Cyclic { next: 0, k: k_s },
+            sleep: std::time::Duration::from_millis(800),
+        });
+        let mut cfg = sharded_cfg(1000);
+        cfg.barrier_timeout_secs = 0.15;
+        let t0 = std::time::Instant::now();
+        let out = solve_sharded(&p, specs, None, &cfg);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "timed-out solve must terminate promptly"
+        );
+        assert_eq!(out.stop, StopReason::ShardFailed);
+        let failure = out.failure.expect("structured error must be carried");
+        assert!(
+            failure.message.contains("timed out"),
+            "first failure should be the timeout: {failure}"
+        );
+        assert!(out.metrics.shard_failures >= 1);
+    }
+
+    #[test]
+    fn staleness_bound_clamps_adaptive_cadence() {
+        // conflict-free block-diagonal data: the adaptive cadence
+        // doubles unboundedly; max_staleness_rounds must clamp it and
+        // count the forced reconciles
+        let p = make_block_problem(13, 64, 16, 2);
+        let run = |max_stale: usize| {
+            let mut cfg = sharded_cfg(120);
+            cfg.reconcile_every = 1;
+            cfg.reconcile_max_rounds = 64;
+            cfg.max_staleness_rounds = max_stale;
+            solve_sharded(&p, cyclic_specs(&p, 2), None, &cfg)
+        };
+        let unbounded = run(0);
+        assert_eq!(unbounded.metrics.staleness_forced_reconciles, 0);
+        let bounded = run(4);
+        assert_eq!(bounded.stop, StopReason::MaxIters);
+        assert!(
+            bounded.metrics.staleness_forced_reconciles > 0,
+            "the doubling must have hit the staleness bound"
+        );
+        // replica age never exceeded the bound: with gap <= 4 at least
+        // a quarter of rounds reconcile (skipped <= 3/4)
+        assert!(
+            bounded.metrics.reconcile_rounds_skipped
+                <= 90,
+            "bounded cadence must reconcile at least every 4 rounds, skipped {}",
+            bounded.metrics.reconcile_rounds_skipped
+        );
+        assert!(
+            unbounded.metrics.reconcile_rounds_skipped
+                > bounded.metrics.reconcile_rounds_skipped,
+            "the bound must actually force more reconciles than the free cadence"
+        );
     }
 
     #[test]

@@ -33,5 +33,8 @@
 pub mod engine;
 pub mod partition;
 
-pub use engine::{solve_sharded, solve_sharded_with, ShardSpec, ShardedConfig};
+pub use engine::{
+    solve_sharded, solve_sharded_linked, solve_sharded_with, BarrierLink, LinkFault,
+    ReconcileLink, ShardSpec, ShardedConfig,
+};
 pub use partition::{partition, ShardPlan, ShardStrategy};

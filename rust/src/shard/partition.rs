@@ -381,6 +381,56 @@ mod tests {
     }
 
     #[test]
+    fn shard_plan_property_exact_cover() {
+        // 100 seeded adversarial shapes: p < shards, p == 1, entirely
+        // empty columns, empty matrices of columns, dense and
+        // near-empty densities — every strategy must hold the
+        // exact-cover invariant (validate()), keep shards ascending,
+        // and produce a permutation of 0..k
+        let mut rng = Pcg64::seeded(0x5AAD);
+        for case in 0..100 {
+            let n = 1 + rng.below(40);
+            let k = 1 + rng.below(50);
+            let density = [0.0, 0.02, 0.3, 0.9][rng.below(4)];
+            // a random subset of columns left entirely empty
+            let mut b = CooBuilder::new(n, k);
+            for j in 0..k {
+                if rng.next_f64() < 0.2 {
+                    continue; // empty column
+                }
+                for i in 0..n {
+                    if rng.next_f64() < density {
+                        b.push(i, j, rng.range_f64(-1.0, 1.0));
+                    }
+                }
+            }
+            let x = b.build();
+            // shard counts bracketing k: 1, below, equal, above
+            for shards in [1, (k / 2).max(1), k, k + 1 + rng.below(8)] {
+                for strategy in ShardStrategy::ALL {
+                    let plan = partition(&x, shards, strategy);
+                    assert_eq!(plan.n_shards(), shards);
+                    plan.validate().unwrap_or_else(|e| {
+                        panic!(
+                            "case {case} {} n={n} k={k} S={shards}: {e}",
+                            strategy.name()
+                        )
+                    });
+                    let mut perm = plan.permutation();
+                    perm.sort_unstable();
+                    assert_eq!(perm, (0..k as u32).collect::<Vec<_>>());
+                    for sh in &plan.shards {
+                        assert!(
+                            sh.windows(2).all(|w| w[0] < w[1]),
+                            "case {case}: shard not ascending"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn validate_rejects_broken_plans() {
         let mk = |shards: Vec<Vec<u32>>| ShardPlan {
             n_cols: 4,

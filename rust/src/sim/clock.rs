@@ -1,0 +1,159 @@
+//! Virtual time: a deterministic discrete-event queue.
+//!
+//! The simulator never reads a wall clock. Time is an integer tick
+//! counter advanced only by popping scheduled events, so the same
+//! schedule replays identically on any machine at any load — the
+//! property the byte-identical event logs of [`crate::sim`] rest on.
+//! Ties (same tick) break by insertion order, making the queue a stable
+//! FIFO within a tick.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Virtual time, in abstract integer ticks.
+pub type Tick = u64;
+
+/// What happened at a point in virtual time. The discriminant order is
+/// meaningless; events at the same tick replay in insertion order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A shard's delta reached the reconcile exchange.
+    Arrive,
+    /// The round's fold completed (all deltas merged).
+    Reconcile,
+    /// The round's virtual arrival spread exceeded the timeout budget —
+    /// every shard abandons the exchange.
+    Timeout,
+    /// The fault plan killed a shard's pool at this round.
+    Panic,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Arrive => "arrive",
+            EventKind::Reconcile => "reconcile",
+            EventKind::Timeout => "timeout",
+            EventKind::Panic => "panic",
+        }
+    }
+}
+
+/// One simulated occurrence: a kind, where (shard), when (round, tick).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Event {
+    pub tick: Tick,
+    pub round: usize,
+    pub shard: usize,
+    pub kind: EventKind,
+}
+
+/// Min-heap of events ordered by `(tick, insertion order)`.
+///
+/// `pop` advances [`now`](Self::now) to the popped event's tick; the
+/// queue never runs backwards (scheduling before `now` is a logic error,
+/// caught in debug builds).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<(Tick, u64, Event)>>,
+    seq: u64,
+    now: Tick,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time: the tick of the last popped event.
+    pub fn now(&self) -> Tick {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule an event at its `tick` (must be >= `now`).
+    pub fn schedule(&mut self, ev: Event) {
+        debug_assert!(ev.tick >= self.now, "scheduling into the past");
+        self.heap.push(Reverse((ev.tick, self.seq, ev)));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event (FIFO within a tick) and advance `now`.
+    pub fn pop(&mut self) -> Option<Event> {
+        let Reverse((tick, _, ev)) = self.heap.pop()?;
+        self.now = tick;
+        Some(ev)
+    }
+
+    /// Drain everything in virtual-time order.
+    pub fn drain_ordered(&mut self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(ev) = self.pop() {
+            out.push(ev);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(tick: Tick, shard: usize) -> Event {
+        Event { tick, round: 0, shard, kind: EventKind::Arrive }
+    }
+
+    #[test]
+    fn pops_in_tick_order() {
+        let mut q = EventQueue::new();
+        q.schedule(ev(30, 0));
+        q.schedule(ev(10, 1));
+        q.schedule(ev(20, 2));
+        let order: Vec<_> = q.drain_ordered().iter().map(|e| e.shard).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn same_tick_is_fifo() {
+        let mut q = EventQueue::new();
+        for s in 0..8 {
+            q.schedule(ev(5, s));
+        }
+        let order: Vec<_> = q.drain_ordered().iter().map(|e| e.shard).collect();
+        assert_eq!(order, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn now_tracks_pops() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.now(), 0);
+        q.schedule(ev(7, 0));
+        q.schedule(ev(3, 1));
+        q.pop();
+        assert_eq!(q.now(), 3);
+        q.pop();
+        assert_eq!(q.now(), 7);
+        assert!(q.pop().is_none());
+        assert_eq!(q.now(), 7, "now unchanged on empty pop");
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop() {
+        let mut q = EventQueue::new();
+        q.schedule(ev(2, 0));
+        q.schedule(ev(9, 1));
+        assert_eq!(q.pop().unwrap().shard, 0);
+        // schedule at the current frontier: legal, pops before tick 9
+        q.schedule(ev(2, 2));
+        assert_eq!(q.pop().unwrap().shard, 2);
+        assert_eq!(q.pop().unwrap().shard, 1);
+        assert!(q.is_empty());
+    }
+}

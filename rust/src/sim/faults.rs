@@ -1,0 +1,259 @@
+//! Seeded fault plans: everything a simulated run will inject,
+//! pregenerated as pure data.
+//!
+//! A [`FaultPlan`] is built once from a [`FaultSpec`] + seed, *before*
+//! any thread spawns, and never mutated. Every shard consults the same
+//! plan with pure lookups, so per-round decisions that must be agreed on
+//! by all shards (does this round time out? what fold order?) are
+//! computed independently-but-identically — no cross-thread
+//! communication, no races, no divergent views. That is what makes the
+//! injected faults replayable: same spec + seed ⇒ same plan ⇒ same
+//! failure, byte for byte.
+
+use crate::util::Pcg64;
+
+/// Declarative description of what to inject (the `[faults]` table of a
+/// scenario file; see [`crate::sim::scenario`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Per-round, per-shard delta delivery jitter: each shard's virtual
+    /// arrival at the reconcile exchange is delayed by a uniform draw
+    /// from `0..=delay_ticks_max`. 0 = no jitter.
+    pub delay_ticks_max: u64,
+    /// Shuffle the per-round delta fold order (a fresh seeded
+    /// permutation each round). Models deltas arriving out of shard
+    /// order: the fold result differs only by floating-point summation
+    /// order, which is exactly the perturbation a real network
+    /// introduces.
+    pub reorder: bool,
+    /// One shard that lags every round (a slow NUMA node, a noisy
+    /// neighbor): its virtual arrival delay becomes
+    /// `straggler_mult * max(delay_ticks_max, 1)` plus its jitter draw.
+    pub straggler_shard: Option<usize>,
+    /// Lag multiplier for `straggler_shard` (ignored without one).
+    pub straggler_mult: u64,
+    /// Kill one pool: `(shard, round)` panics inside the reconcile
+    /// arrival of that round, exercising the real poison/unwind path.
+    pub panic_at: Option<(usize, usize)>,
+    /// Virtual barrier timeout: a round whose arrival spread
+    /// (max - min virtual arrival tick) exceeds this budget times out —
+    /// every shard abandons the exchange and the solve fails with
+    /// `ShardFailed`. 0 = no virtual timeout.
+    pub virtual_timeout_ticks: u64,
+}
+
+impl Default for FaultSpec {
+    /// No faults at all: the plan this produces makes a simulated run
+    /// bit-exact with the real barrier protocol.
+    fn default() -> Self {
+        Self {
+            delay_ticks_max: 0,
+            reorder: false,
+            straggler_shard: None,
+            straggler_mult: 1,
+            panic_at: None,
+            virtual_timeout_ticks: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// True when the spec injects nothing (identity fold order, zero
+    /// delays, no kills, no timeout).
+    pub fn is_fault_free(&self) -> bool {
+        self.delay_ticks_max == 0
+            && !self.reorder
+            && self.straggler_shard.is_none()
+            && self.panic_at.is_none()
+            && self.virtual_timeout_ticks == 0
+    }
+}
+
+/// Pregenerated injection schedule: per-round per-shard arrival delays
+/// and per-round fold permutations for `rounds` rounds. Rounds past the
+/// pregenerated horizon are fault-free (zero delay, identity order) —
+/// a solve running longer than planned degrades to faithful execution,
+/// never to unseeded randomness.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub shards: usize,
+    pub rounds: usize,
+    /// `rounds * shards`, row-major by round.
+    delays: Vec<u64>,
+    /// `rounds * shards`, row-major by round; each row a permutation of
+    /// `0..shards`.
+    orders: Vec<usize>,
+    pub panic_at: Option<(usize, usize)>,
+    pub virtual_timeout_ticks: u64,
+}
+
+impl FaultPlan {
+    /// Materialize `spec` for `shards` shards over `rounds` rounds.
+    /// Deterministic: same `(spec, shards, rounds, seed)` ⇒ identical
+    /// plan.
+    pub fn generate(spec: &FaultSpec, shards: usize, rounds: usize, seed: u64) -> Self {
+        let shards = shards.max(1);
+        let mut rng = Pcg64::new(seed, 0x5117_FA17);
+        let straggler_lag = spec
+            .straggler_shard
+            .map(|_| spec.straggler_mult.max(1) * spec.delay_ticks_max.max(1))
+            .unwrap_or(0);
+        let mut delays = Vec::with_capacity(rounds * shards);
+        let mut orders = Vec::with_capacity(rounds * shards);
+        for _ in 0..rounds {
+            for s in 0..shards {
+                let jitter = if spec.delay_ticks_max > 0 {
+                    rng.below(spec.delay_ticks_max as usize + 1) as u64
+                } else {
+                    0
+                };
+                let lag = if spec.straggler_shard == Some(s) { straggler_lag } else { 0 };
+                delays.push(jitter + lag);
+            }
+            let base = orders.len();
+            orders.extend(0..shards);
+            if spec.reorder {
+                rng.shuffle(&mut orders[base..]);
+            }
+        }
+        Self {
+            shards,
+            rounds,
+            delays,
+            orders,
+            panic_at: spec.panic_at,
+            virtual_timeout_ticks: spec.virtual_timeout_ticks,
+        }
+    }
+
+    /// Virtual arrival delay of `shard` at `round` (0 past the horizon).
+    pub fn delay(&self, round: usize, shard: usize) -> u64 {
+        if round < self.rounds && shard < self.shards {
+            self.delays[round * self.shards + shard]
+        } else {
+            0
+        }
+    }
+
+    /// Arrival spread of a round: latest minus earliest virtual arrival.
+    pub fn arrival_spread(&self, round: usize) -> u64 {
+        if round >= self.rounds || self.shards == 0 {
+            return 0;
+        }
+        let row = &self.delays[round * self.shards..(round + 1) * self.shards];
+        let (mut lo, mut hi) = (u64::MAX, 0u64);
+        for &d in row {
+            lo = lo.min(d);
+            hi = hi.max(d);
+        }
+        hi - lo
+    }
+
+    /// Does `round`'s exchange exceed the virtual timeout budget?
+    /// A pure function of the plan: every shard computes the same
+    /// answer without communicating.
+    pub fn times_out(&self, round: usize) -> bool {
+        self.virtual_timeout_ticks > 0 && self.arrival_spread(round) > self.virtual_timeout_ticks
+    }
+
+    /// The round's delta fold order (identity past the horizon or on a
+    /// shard-count mismatch, so it is always a valid permutation of
+    /// `0..shards`).
+    pub fn fold_order(&self, round: usize, shards: usize) -> Vec<usize> {
+        if round < self.rounds && shards == self.shards {
+            self.orders[round * self.shards..(round + 1) * self.shards].to_vec()
+        } else {
+            (0..shards).collect()
+        }
+    }
+
+    /// Does the plan kill `shard`'s pool at `round`?
+    pub fn panics(&self, shard: usize, round: usize) -> bool {
+        self.panic_at == Some((shard, round))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jittery() -> FaultSpec {
+        FaultSpec {
+            delay_ticks_max: 10,
+            reorder: true,
+            straggler_shard: Some(2),
+            straggler_mult: 5,
+            panic_at: Some((1, 7)),
+            virtual_timeout_ticks: 40,
+            ..FaultSpec::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_same_plan() {
+        let a = FaultPlan::generate(&jittery(), 4, 20, 99);
+        let b = FaultPlan::generate(&jittery(), 4, 20, 99);
+        assert_eq!(a.delays, b.delays);
+        assert_eq!(a.orders, b.orders);
+        let c = FaultPlan::generate(&jittery(), 4, 20, 100);
+        assert_ne!(a.delays, c.delays, "different seed should differ");
+    }
+
+    #[test]
+    fn fault_free_plan_is_identity() {
+        let p = FaultPlan::generate(&FaultSpec::default(), 3, 5, 1);
+        assert!(FaultSpec::default().is_fault_free());
+        for r in 0..5 {
+            assert_eq!(p.fold_order(r, 3), vec![0, 1, 2]);
+            assert_eq!(p.arrival_spread(r), 0);
+            assert!(!p.times_out(r));
+            for s in 0..3 {
+                assert_eq!(p.delay(r, s), 0);
+                assert!(!p.panics(s, r));
+            }
+        }
+    }
+
+    #[test]
+    fn fold_orders_are_permutations() {
+        let p = FaultPlan::generate(&jittery(), 5, 30, 7);
+        for r in 0..30 {
+            let mut o = p.fold_order(r, 5);
+            o.sort_unstable();
+            assert_eq!(o, vec![0, 1, 2, 3, 4], "round {r} not a permutation");
+        }
+    }
+
+    #[test]
+    fn straggler_dominates_and_trips_timeout() {
+        let spec = FaultSpec {
+            delay_ticks_max: 3,
+            straggler_shard: Some(1),
+            straggler_mult: 50,
+            virtual_timeout_ticks: 20,
+            ..FaultSpec::default()
+        };
+        let p = FaultPlan::generate(&spec, 3, 10, 5);
+        for r in 0..10 {
+            assert!(p.delay(r, 1) >= 150, "straggler lag missing at round {r}");
+            assert!(p.times_out(r), "spread should exceed budget at round {r}");
+        }
+        // without the timeout budget, the same lag merely stretches time
+        let lag_only = FaultSpec { virtual_timeout_ticks: 0, ..spec };
+        let q = FaultPlan::generate(&lag_only, 3, 10, 5);
+        for r in 0..10 {
+            assert!(!q.times_out(r));
+        }
+    }
+
+    #[test]
+    fn beyond_horizon_is_fault_free() {
+        let p = FaultPlan::generate(&jittery(), 4, 6, 3);
+        assert_eq!(p.delay(6, 0), 0);
+        assert_eq!(p.fold_order(99, 4), vec![0, 1, 2, 3]);
+        assert_eq!(p.arrival_spread(100), 0);
+        assert!(!p.times_out(100));
+        // shard-count mismatch also degrades to identity
+        assert_eq!(p.fold_order(2, 7), (0..7).collect::<Vec<_>>());
+    }
+}

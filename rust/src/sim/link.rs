@@ -1,0 +1,275 @@
+//! [`SimLink`]: the reconcile transport under simulation.
+//!
+//! Runs the *unmodified* sharded pool code ([`solve_sharded_linked`])
+//! over the real [`SpinBarrier`], adding a deterministic virtual layer
+//! on top:
+//!
+//! * **Per-round predicates are pure plan lookups.** Whether a round
+//!   times out, which pool panics, and the delta fold order are all
+//!   functions of the pregenerated [`FaultPlan`] — every shard computes
+//!   them independently and identically, so a virtual timeout makes
+//!   *all* shards abandon the exchange *before* touching the real
+//!   barrier (nobody is left waiting), and a fold reorder perturbs only
+//!   floating-point summation order.
+//! * **Injected panics take the real failure path.** A planned kill is
+//!   a genuine `panic!` inside the pool leader: it unwinds through the
+//!   engine, poisons the link via the panic guard, and surfaces as
+//!   `StopReason::ShardFailed` exactly like an organic crash would.
+//! * **Only shard 0 records.** The event log is written by a single
+//!   shard simulating each round through the virtual
+//!   [`EventQueue`](crate::sim::clock::EventQueue) — one writer, no
+//!   wall-clock reads, so the log is byte-identical across runs of the
+//!   same plan.
+//!
+//! [`solve_sharded_linked`]: crate::shard::engine::solve_sharded_linked
+//! [`SpinBarrier`]: crate::util::par::SpinBarrier
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::shard::engine::{LinkFault, ReconcileLink};
+use crate::sim::clock::{Event, EventKind, EventQueue};
+use crate::sim::faults::FaultPlan;
+use crate::util::par::{SpinBarrier, WaitOutcome};
+
+/// Single-writer event recorder (locked only by shard 0).
+#[derive(Debug, Default)]
+struct Recorder {
+    queue: EventQueue,
+    log: Vec<Event>,
+}
+
+/// Deterministic fault-injecting [`ReconcileLink`]. Construct with a
+/// pregenerated [`FaultPlan`]; hand to
+/// [`solve_sharded_linked`](crate::shard::engine::solve_sharded_linked).
+pub struct SimLink {
+    plan: FaultPlan,
+    barrier: SpinBarrier,
+    /// Real-time backstop for the underlying barrier: generous (it only
+    /// fires if an *injected* kill left peers waiting and the poison
+    /// propagation itself wedged, which the tests never expect).
+    real_timeout: Duration,
+    recorder: Mutex<Recorder>,
+}
+
+impl SimLink {
+    pub fn new(plan: FaultPlan, spin: u32, real_timeout: Duration) -> Self {
+        let parties = plan.shards.max(1);
+        Self {
+            plan,
+            barrier: SpinBarrier::with_spin(parties, spin),
+            real_timeout,
+            recorder: Mutex::new(Recorder::default()),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The recorded event log so far (complete once the solve returned).
+    pub fn events(&self) -> Vec<Event> {
+        self.recorder
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .log
+            .clone()
+    }
+
+    pub fn event_count(&self) -> usize {
+        self.recorder
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .log
+            .len()
+    }
+
+    /// Shard 0 only: replay `round` through the virtual clock and append
+    /// to the log. Virtual time resumes from the previous round's
+    /// frontier, so ticks are globally monotone regardless of how large
+    /// the injected delays are.
+    fn record_round(&self, round: usize) {
+        let mut rec = self.recorder.lock().unwrap_or_else(|e| e.into_inner());
+        let base = rec.queue.now();
+        let mut latest = (base, 0usize);
+        for s in 0..self.plan.shards {
+            let tick = base + self.plan.delay(round, s);
+            if tick >= latest.0 {
+                latest = (tick, s);
+            }
+            rec.queue.schedule(Event { tick, round, shard: s, kind: EventKind::Arrive });
+        }
+        if let Some((ps, pr)) = self.plan.panic_at {
+            if pr == round && ps < self.plan.shards {
+                let tick = base + self.plan.delay(round, ps);
+                rec.queue.schedule(Event { tick, round, shard: ps, kind: EventKind::Panic });
+            }
+        }
+        if self.plan.times_out(round) {
+            // the exchange is abandoned while the latest shard is still
+            // in flight; the timeout is charged to the shard being
+            // waited for
+            let tick = base + self.plan.virtual_timeout_ticks;
+            rec.queue
+                .schedule(Event { tick, round, shard: latest.1, kind: EventKind::Timeout });
+        } else if !self.plan.panics_in_round(round) {
+            rec.queue
+                .schedule(Event { tick: latest.0, round, shard: 0, kind: EventKind::Reconcile });
+        }
+        let drained = rec.queue.drain_ordered();
+        rec.log.extend(drained);
+    }
+
+    fn cross(&self) -> Result<(), LinkFault> {
+        match self.barrier.wait_timeout(self.real_timeout) {
+            WaitOutcome::Released(_) => Ok(()),
+            WaitOutcome::Poisoned => Err(LinkFault::Poisoned),
+            WaitOutcome::TimedOut => Err(LinkFault::TimedOut),
+        }
+    }
+}
+
+impl ReconcileLink for SimLink {
+    fn init(&self, _shard: usize) -> Result<(), LinkFault> {
+        self.cross()
+    }
+
+    fn arrive(&self, shard: usize, round: usize) -> Result<(), LinkFault> {
+        if shard == 0 {
+            self.record_round(round);
+        }
+        if self.plan.panics(shard, round) {
+            panic!("injected fault: pool killed by plan (shard {shard}, round {round})");
+        }
+        if self.plan.times_out(round) {
+            // pure plan lookup: every shard bails identically, before
+            // the real barrier — a virtual timeout never strands a peer
+            return Err(LinkFault::TimedOut);
+        }
+        self.cross()
+    }
+
+    fn publish_fold(&self, _shard: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross()
+    }
+
+    fn publish_decision(&self, _shard: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross()
+    }
+
+    fn fold_order(&self, _shard: usize, round: usize, shards: usize) -> Vec<usize> {
+        self.plan.fold_order(round, shards)
+    }
+
+    fn poison(&self) {
+        self.barrier.poison();
+    }
+}
+
+impl FaultPlan {
+    /// Does any shard's pool die at `round`?
+    fn panics_in_round(&self, round: usize) -> bool {
+        matches!(self.panic_at, Some((_, r)) if r == round)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::faults::FaultSpec;
+
+    fn single_shard_link(spec: &FaultSpec, rounds: usize, seed: u64) -> SimLink {
+        SimLink::new(
+            FaultPlan::generate(spec, 1, rounds, seed),
+            64,
+            Duration::from_secs(5),
+        )
+    }
+
+    #[test]
+    fn event_log_is_deterministic() {
+        let spec = FaultSpec { delay_ticks_max: 9, reorder: true, ..FaultSpec::default() };
+        let drive = || {
+            let link = single_shard_link(&spec, 6, 42);
+            for r in 0..6 {
+                assert!(link.arrive(0, r).is_ok());
+                assert!(link.publish_fold(0, r).is_ok());
+                assert!(link.publish_decision(0, r).is_ok());
+            }
+            link.events()
+        };
+        let (a, b) = (drive(), drive());
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same plan must replay the identical log");
+    }
+
+    #[test]
+    fn virtual_ticks_are_monotone() {
+        let spec = FaultSpec {
+            delay_ticks_max: 1000,
+            straggler_shard: Some(0),
+            straggler_mult: 7,
+            ..FaultSpec::default()
+        };
+        let link = single_shard_link(&spec, 10, 3);
+        for r in 0..10 {
+            link.arrive(0, r).unwrap();
+        }
+        let events = link.events();
+        for w in events.windows(2) {
+            assert!(w[0].tick <= w[1].tick, "virtual time ran backwards: {w:?}");
+        }
+    }
+
+    #[test]
+    fn virtual_timeout_fails_before_the_barrier() {
+        // 2-party barrier, but only one caller: a real crossing would
+        // block — the virtual timeout must fail fast instead
+        let spec = FaultSpec {
+            straggler_shard: Some(1),
+            straggler_mult: 100,
+            virtual_timeout_ticks: 5,
+            ..FaultSpec::default()
+        };
+        let link = SimLink::new(
+            FaultPlan::generate(&spec, 2, 4, 9),
+            64,
+            Duration::from_secs(60),
+        );
+        let t0 = std::time::Instant::now();
+        assert_eq!(link.arrive(0, 0), Err(LinkFault::TimedOut));
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait in real time");
+        let events = link.events();
+        assert!(events.iter().any(|e| e.kind == EventKind::Timeout));
+        assert!(events.iter().all(|e| e.kind != EventKind::Reconcile));
+    }
+
+    #[test]
+    fn planned_panic_is_a_real_panic() {
+        let spec = FaultSpec { panic_at: Some((0, 2)), ..FaultSpec::default() };
+        let link = single_shard_link(&spec, 4, 11);
+        link.arrive(0, 0).unwrap();
+        link.arrive(0, 1).unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = link.arrive(0, 2);
+        }));
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("injected fault"), "unexpected message: {msg}");
+        assert!(link.events().iter().any(|e| e.kind == EventKind::Panic));
+    }
+
+    #[test]
+    fn fault_free_link_is_identity() {
+        let link = single_shard_link(&FaultSpec::default(), 3, 1);
+        assert_eq!(link.fold_order(0, 1, 4), vec![0, 1, 2, 3]);
+        link.init(0).unwrap();
+        for r in 0..3 {
+            link.arrive(0, r).unwrap();
+        }
+        // fault-free rounds: one arrive + one reconcile per round, all
+        // at tick 0
+        let events = link.events();
+        assert_eq!(events.len(), 6);
+        assert!(events.iter().all(|e| e.tick == 0));
+    }
+}

@@ -1,0 +1,47 @@
+//! Deterministic fault-injection simulation for the sharded execution
+//! layer.
+//!
+//! The sharded engine's failure semantics ([`crate::shard::engine`]
+//! §Failure semantics) promise *degrade, never hang*: a dead pool, a
+//! stuck peer, or an out-of-order reconcile must end in a clean
+//! [`StopReason::ShardFailed`] (or a correct solve), not a wedged
+//! process. Those promises are worthless untested, and the interesting
+//! failures are exactly the ones wall-clock tests can't reproduce on
+//! demand. This module makes them reproducible:
+//!
+//! * [`clock`] — virtual time: an integer-tick discrete-event queue
+//!   with no wall-clock reads, so a schedule replays identically on any
+//!   machine.
+//! * [`faults`] — seeded [`FaultPlan`](faults::FaultPlan)s pregenerated
+//!   as pure data: per-round delta delays, fold reorderings, straggler
+//!   lag, one-shot pool kills, virtual barrier timeouts. Same spec +
+//!   seed ⇒ same plan, bit for bit.
+//! * [`link`] — [`SimLink`](link::SimLink): a
+//!   [`ReconcileLink`](crate::shard::engine::ReconcileLink) that runs
+//!   the *unmodified* pool code under a plan. Fault-free plans are
+//!   bit-exact with the production
+//!   [`BarrierLink`](crate::shard::engine::BarrierLink); injected kills
+//!   take the real panic/poison path.
+//! * [`scenario`] — TOML scenario files (workload + shard plan + fault
+//!   plan + expected outcome) and the [`run_corpus`](scenario::run_corpus)
+//!   driver behind `gencd sim`; the committed corpus under `scenarios/`
+//!   is the regression gate.
+//! * [`report`] — byte-stable event-log and verdict rendering.
+//!
+//! Not to be confused with [`crate::simulate`], the paper's Figure-2
+//! *performance model*: that module predicts convergence trajectories;
+//! this one attacks the runtime's fault tolerance.
+//!
+//! [`StopReason::ShardFailed`]: crate::coordinator::convergence::StopReason::ShardFailed
+
+pub mod clock;
+pub mod faults;
+pub mod link;
+pub mod report;
+pub mod scenario;
+
+pub use clock::{Event, EventKind, EventQueue, Tick};
+pub use faults::{FaultPlan, FaultSpec};
+pub use link::SimLink;
+pub use report::{render_events, render_verdicts, Verdict};
+pub use scenario::{run_baseline, run_corpus, run_scenario, Scenario, ScenarioRun, WorkloadKind};

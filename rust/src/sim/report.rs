@@ -1,0 +1,92 @@
+//! Deterministic rendering of simulator results: the virtual event log
+//! (byte-identical across replays of the same plan — the format is part
+//! of that contract: fixed-width fields, no timestamps, no floats) and
+//! per-scenario verdict tables for `gencd sim`.
+
+use crate::sim::clock::Event;
+
+/// Outcome of grading one scenario against its `[expect]` table.
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    pub name: String,
+    pub pass: bool,
+    /// Grading detail: `stop=... objective=...` on PASS, the list of
+    /// violated expectations (or the load error) on FAIL.
+    pub detail: String,
+    /// Virtual events the run recorded.
+    pub sim_events: u64,
+}
+
+/// Render the event log, one fixed-width line per event in virtual-time
+/// order:
+///
+/// ```text
+/// t=00000012 round=0003 shard=01 arrive
+/// ```
+pub fn render_events(events: &[Event]) -> String {
+    let mut out = String::with_capacity(events.len() * 40);
+    for e in events {
+        out.push_str(&format!(
+            "t={:08} round={:04} shard={:02} {}\n",
+            e.tick,
+            e.round,
+            e.shard,
+            e.kind.name()
+        ));
+    }
+    out
+}
+
+/// Render the corpus verdict table plus a one-line summary; returns the
+/// text and whether every scenario passed.
+pub fn render_verdicts(verdicts: &[Verdict]) -> (String, bool) {
+    let mut out = String::new();
+    let mut passed = 0usize;
+    for v in verdicts {
+        let tag = if v.pass { "PASS" } else { "FAIL" };
+        passed += usize::from(v.pass);
+        out.push_str(&format!(
+            "{tag}  {:<28} events={:<6} {}\n",
+            v.name, v.sim_events, v.detail
+        ));
+    }
+    out.push_str(&format!("{passed}/{} scenarios passed\n", verdicts.len()));
+    (out, passed == verdicts.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::EventKind;
+
+    #[test]
+    fn event_lines_are_fixed_width_and_stable() {
+        let events = vec![
+            Event { tick: 12, round: 3, shard: 1, kind: EventKind::Arrive },
+            Event { tick: 999_999, round: 42, shard: 11, kind: EventKind::Timeout },
+        ];
+        let a = render_events(&events);
+        let b = render_events(&events);
+        assert_eq!(a, b);
+        assert_eq!(
+            a,
+            "t=00000012 round=0003 shard=01 arrive\n\
+             t=00999999 round=0042 shard=11 timeout\n"
+        );
+    }
+
+    #[test]
+    fn verdict_summary_counts() {
+        let vs = vec![
+            Verdict { name: "a".into(), pass: true, detail: "ok".into(), sim_events: 4 },
+            Verdict { name: "b".into(), pass: false, detail: "boom".into(), sim_events: 0 },
+        ];
+        let (text, all) = render_verdicts(&vs);
+        assert!(!all);
+        assert!(text.contains("PASS  a"));
+        assert!(text.contains("FAIL  b"));
+        assert!(text.contains("1/2 scenarios passed"));
+        let (_, all_ok) = render_verdicts(&vs[..1]);
+        assert!(all_ok);
+    }
+}

@@ -1,0 +1,525 @@
+//! Replayable scenario files: workload + shard plan + fault plan +
+//! expected outcome, one TOML file each (the committed corpus under
+//! `scenarios/`).
+//!
+//! Schema (all tables optional except `[workload]`; defaults in
+//! parentheses):
+//!
+//! ```toml
+//! name = "straggler-timeout"      # (file stem)
+//! seed = 7                        # (1) workload + fault RNG seed
+//!
+//! [workload]
+//! kind = "conflict"               # uniform | powerlaw | conflict
+//! n = 200                         # rows
+//! k = 64                          # columns
+//! nnz = 12                        # per-column support budget
+//! lam = 0.01                      # (1e-3) l1 strength
+//!
+//! [shards]
+//! count = 2                       # (2)
+//! strategy = "contiguous"         # (contiguous) ShardStrategy::by_name
+//!
+//! [solve]
+//! algorithm = "shotgun"           # (shotgun) Algorithm::by_name
+//! rounds = 60                     # (50) round cap
+//! reconcile_every = 1             # (1)
+//! reconcile_max_rounds = 0        # (0 = fixed cadence)
+//! max_staleness_rounds = 0        # (0 = unbounded)
+//!
+//! [faults]                        # (all off)
+//! delay_ticks_max = 8
+//! reorder = true
+//! straggler_shard = 1             # -1 = none
+//! straggler_mult = 4
+//! panic_shard = -1                # -1 = none
+//! panic_round = 0
+//! virtual_timeout_ticks = 0       # 0 = off
+//!
+//! [expect]
+//! stop = "max-iters"              # StopReason display string
+//! failure_contains = ""           # substring of SolveError::message
+//! min_forced_reconciles = 0
+//! ```
+//!
+//! [`run_scenario`] rebuilds everything from the seed (matrix, labels,
+//! shard specs, fault plan), solves through a [`SimLink`], and grades
+//! the outcome against `[expect]` — same file ⇒ same verdict and a
+//! byte-identical event log, which is what makes the corpus a
+//! regression gate rather than a demo.
+
+use std::path::Path;
+
+use crate::config::toml::{parse, Document, Value};
+use crate::coordinator::algorithms::Algorithm;
+use crate::coordinator::engine::{SolveOutput, UpdatePath};
+use crate::coordinator::problem::Problem;
+use crate::data::synth;
+use crate::loss::Logistic;
+use crate::shard::engine::{solve_sharded_linked, BarrierLink, ShardSpec};
+use crate::shard::{ShardStrategy, ShardedConfig};
+use crate::sim::faults::{FaultPlan, FaultSpec};
+use crate::sim::link::SimLink;
+use crate::sim::report::{render_events, Verdict};
+use crate::sparse::io::Dataset;
+use crate::sparse::CscMatrix;
+use crate::util::Pcg64;
+
+/// Synthetic workload families (see [`crate::data::synth`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Uniform column support (`power_law_by_columns` with alpha 0).
+    Uniform,
+    /// Power-law column sparsity (alpha 1.1): dense head, long tail.
+    PowerLaw,
+    /// Cross-shard conflict blocks: every shard fights over a shared
+    /// hot row block.
+    Conflict,
+}
+
+impl WorkloadKind {
+    pub fn by_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "uniform" => WorkloadKind::Uniform,
+            "powerlaw" | "power-law" => WorkloadKind::PowerLaw,
+            "conflict" => WorkloadKind::Conflict,
+            other => anyhow::bail!(
+                "unknown workload kind {other:?} (expected uniform | powerlaw | conflict)"
+            ),
+        })
+    }
+}
+
+/// Expected outcome, graded by [`run_scenario`].
+#[derive(Clone, Debug, Default)]
+pub struct Expectation {
+    /// Required [`StopReason`](crate::coordinator::convergence::StopReason)
+    /// display string (empty = any).
+    pub stop: String,
+    /// Required substring of the surfaced
+    /// [`SolveError`](crate::coordinator::convergence::SolveError)
+    /// message (empty = no failure required; a failure is then a FAIL
+    /// unless `stop` says otherwise).
+    pub failure_contains: String,
+    /// Minimum `staleness_forced_reconciles` metric.
+    pub min_forced_reconciles: u64,
+}
+
+/// One parsed scenario file.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    pub kind: WorkloadKind,
+    pub n: usize,
+    pub k: usize,
+    pub nnz: usize,
+    pub lam: f64,
+    pub shards: usize,
+    pub strategy: ShardStrategy,
+    pub algorithm: Algorithm,
+    pub rounds: usize,
+    pub reconcile_every: usize,
+    pub reconcile_max_rounds: usize,
+    pub max_staleness_rounds: usize,
+    pub faults: FaultSpec,
+    pub expect: Expectation,
+}
+
+fn opt_int(doc: &Document, table: &str, key: &str, default: i64) -> anyhow::Result<i64> {
+    match doc.get(table, key) {
+        None => Ok(default),
+        Some(v) => v.as_int().ok_or_else(|| {
+            anyhow::anyhow!("scenario: [{table}] {key} must be an integer, got {v:?}")
+        }),
+    }
+}
+
+fn opt_float(doc: &Document, table: &str, key: &str, default: f64) -> anyhow::Result<f64> {
+    match doc.get(table, key) {
+        None => Ok(default),
+        Some(v) => v.as_float().ok_or_else(|| {
+            anyhow::anyhow!("scenario: [{table}] {key} must be a number, got {v:?}")
+        }),
+    }
+}
+
+fn opt_bool(doc: &Document, table: &str, key: &str, default: bool) -> anyhow::Result<bool> {
+    match doc.get(table, key) {
+        None => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| {
+            anyhow::anyhow!("scenario: [{table}] {key} must be a boolean, got {v:?}")
+        }),
+    }
+}
+
+fn opt_str<'d>(
+    doc: &'d Document,
+    table: &str,
+    key: &str,
+    default: &'d str,
+) -> anyhow::Result<&'d str> {
+    match doc.get(table, key) {
+        None => Ok(default),
+        Some(v) => v.as_str().ok_or_else(|| {
+            anyhow::anyhow!("scenario: [{table}] {key} must be a string, got {v:?}")
+        }),
+    }
+}
+
+fn usize_knob(doc: &Document, table: &str, key: &str, default: i64) -> anyhow::Result<usize> {
+    let v = opt_int(doc, table, key, default)?;
+    anyhow::ensure!(v >= 0, "scenario: [{table}] {key} must be >= 0, got {v}");
+    Ok(v as usize)
+}
+
+/// Optional shard index encoded as `-1 = none`.
+fn shard_index(doc: &Document, table: &str, key: &str) -> anyhow::Result<Option<usize>> {
+    let v = opt_int(doc, table, key, -1)?;
+    Ok(if v < 0 { None } else { Some(v as usize) })
+}
+
+impl Scenario {
+    /// Parse a scenario from TOML source. `fallback_name` (usually the
+    /// file stem) names scenarios that omit `name`.
+    pub fn from_toml_str(src: &str, fallback_name: &str) -> anyhow::Result<Scenario> {
+        let doc = parse(src)?;
+        let name = opt_str(&doc, "", "name", fallback_name)?.to_string();
+        let seed = opt_int(&doc, "", "seed", 1)? as u64;
+
+        let kind = WorkloadKind::by_name(opt_str(&doc, "workload", "kind", "uniform")?)?;
+        let n = usize_knob(&doc, "workload", "n", 120)?.max(2);
+        let k = usize_knob(&doc, "workload", "k", 40)?.max(2);
+        let nnz = usize_knob(&doc, "workload", "nnz", 8)?.max(1);
+        let lam = opt_float(&doc, "workload", "lam", 1e-3)?;
+        anyhow::ensure!(
+            lam.is_finite() && lam >= 0.0,
+            "scenario {name}: lam must be finite and >= 0"
+        );
+
+        let shards = usize_knob(&doc, "shards", "count", 2)?.max(1);
+        let strategy = ShardStrategy::by_name(opt_str(&doc, "shards", "strategy", "contiguous")?)?;
+
+        let algorithm = Algorithm::by_name(opt_str(&doc, "solve", "algorithm", "shotgun")?)?;
+        let rounds = usize_knob(&doc, "solve", "rounds", 50)?.max(1);
+        let reconcile_every = usize_knob(&doc, "solve", "reconcile_every", 1)?.max(1);
+        let reconcile_max_rounds = usize_knob(&doc, "solve", "reconcile_max_rounds", 0)?;
+        let max_staleness_rounds = usize_knob(&doc, "solve", "max_staleness_rounds", 0)?;
+
+        let faults = FaultSpec {
+            delay_ticks_max: usize_knob(&doc, "faults", "delay_ticks_max", 0)? as u64,
+            reorder: opt_bool(&doc, "faults", "reorder", false)?,
+            straggler_shard: shard_index(&doc, "faults", "straggler_shard")?,
+            straggler_mult: usize_knob(&doc, "faults", "straggler_mult", 1)?.max(1) as u64,
+            panic_at: match shard_index(&doc, "faults", "panic_shard")? {
+                Some(s) => Some((s, usize_knob(&doc, "faults", "panic_round", 0)?)),
+                None => None,
+            },
+            virtual_timeout_ticks: usize_knob(&doc, "faults", "virtual_timeout_ticks", 0)? as u64,
+        };
+
+        let expect = Expectation {
+            stop: opt_str(&doc, "expect", "stop", "")?.to_string(),
+            failure_contains: opt_str(&doc, "expect", "failure_contains", "")?.to_string(),
+            min_forced_reconciles: usize_knob(&doc, "expect", "min_forced_reconciles", 0)? as u64,
+        };
+
+        Ok(Scenario {
+            name,
+            seed,
+            kind,
+            n,
+            k,
+            nnz,
+            lam,
+            shards,
+            strategy,
+            algorithm,
+            rounds,
+            reconcile_every,
+            reconcile_max_rounds,
+            max_staleness_rounds,
+            faults,
+            expect,
+        })
+    }
+
+    /// Load one `.toml` scenario file.
+    pub fn load(path: &Path) -> anyhow::Result<Scenario> {
+        let stem = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "scenario".to_string());
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml_str(&src, &stem)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+    }
+
+    /// Regenerate the scenario's workload from its seed: the design
+    /// matrix (column-normalized) and ±1 labels.
+    pub fn workload(&self) -> (CscMatrix, Vec<f64>) {
+        let mut rng = Pcg64::new(self.seed, 0x10AD);
+        let mut x = match self.kind {
+            WorkloadKind::Uniform => {
+                synth::power_law_by_columns(self.n, self.k, 0.0, self.nnz, &mut rng)
+            }
+            WorkloadKind::PowerLaw => {
+                synth::power_law_by_columns(self.n, self.k, 1.1, self.nnz, &mut rng)
+            }
+            WorkloadKind::Conflict => synth::conflict_blocks(
+                self.n,
+                self.k,
+                self.shards,
+                self.nnz.div_ceil(2).max(1),
+                self.nnz.div_ceil(2).max(1),
+                &mut rng,
+            ),
+        };
+        x.normalize_columns();
+        let y = (0..self.n)
+            .map(|_| if rng.next_f64() < 0.5 { 1.0 } else { -1.0 })
+            .collect();
+        (x, y)
+    }
+}
+
+/// Everything one scenario execution produced. `output` is `None` only
+/// when the scenario failed to parse or build (the verdict carries the
+/// error).
+pub struct ScenarioRun {
+    pub verdict: Verdict,
+    pub output: Option<SolveOutput>,
+    /// Rendered virtual event log (byte-identical across replays of the
+    /// same scenario).
+    pub event_log: String,
+}
+
+/// The shared solve setup both links run: shard specs (one worker per
+/// pool, for replay determinism), the sharded config, and the global
+/// problem, all regenerated from the scenario's seed.
+fn build_solve(sc: &Scenario) -> anyhow::Result<(Vec<ShardSpec>, ShardedConfig, Problem)> {
+    let (x, y) = sc.workload();
+    let loss = Logistic;
+    // one worker per shard pool: policy streams and pool schedules stay
+    // deterministic, which the byte-identical-replay contract needs
+    let specs = crate::solver::build_shard_specs(
+        &x,
+        &y,
+        &loss,
+        sc.lam,
+        sc.algorithm,
+        sc.shards,
+        sc.strategy,
+        sc.shards,
+        0,
+        0,
+        crate::coloring::Strategy::Greedy,
+        UpdatePath::Auto,
+        sc.seed,
+    )?;
+    let cfg = ShardedConfig {
+        max_rounds: sc.rounds,
+        max_seconds: 60.0,
+        reconcile_every: sc.reconcile_every,
+        reconcile_max_rounds: if sc.reconcile_max_rounds == 0 {
+            sc.reconcile_every
+        } else {
+            sc.reconcile_max_rounds
+        },
+        max_staleness_rounds: sc.max_staleness_rounds,
+        // the *virtual* timeout injects timeouts; the real one is only
+        // the anti-hang backstop behind an injected kill
+        barrier_timeout_secs: 20.0,
+        ..ShardedConfig::default()
+    };
+    let global = Problem::new(
+        Dataset { x, y, name: sc.name.clone() },
+        Box::new(loss),
+        sc.lam,
+    );
+    Ok((specs, cfg, global))
+}
+
+/// Solve `sc`'s workload through the production [`BarrierLink`] — no
+/// virtual time, no fault plan. The transparency baseline: a fault-free
+/// [`run_scenario`] must land within 1e-12 of this objective (pinned by
+/// `rust/tests/sim_faults.rs`).
+pub fn run_baseline(sc: &Scenario) -> anyhow::Result<SolveOutput> {
+    let (specs, cfg, global) = build_solve(sc)?;
+    let link = BarrierLink::new(
+        specs.len().max(1),
+        cfg.barrier_spin,
+        Some(std::time::Duration::from_secs(20)),
+    );
+    Ok(solve_sharded_linked(&global, specs, None, &cfg, None, &link))
+}
+
+/// Solve `sc` under its fault plan and grade the outcome.
+pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioRun> {
+    let (specs, cfg, global) = build_solve(sc)?;
+    let active = specs.len().max(1);
+    let plan = FaultPlan::generate(&sc.faults, active, sc.rounds, sc.seed);
+    let link = SimLink::new(plan, cfg.barrier_spin, std::time::Duration::from_secs(20));
+    let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, &link);
+    output.metrics.sim_events = link.event_count() as u64;
+    let event_log = render_events(&link.events());
+    let verdict = grade(sc, &output);
+    Ok(ScenarioRun { verdict, output: Some(output), event_log })
+}
+
+fn grade(sc: &Scenario, out: &SolveOutput) -> Verdict {
+    let stop = out.stop.to_string();
+    let mut problems = Vec::new();
+    if !sc.expect.stop.is_empty() && stop != sc.expect.stop {
+        problems.push(format!("stop {stop:?}, expected {:?}", sc.expect.stop));
+    }
+    match (&out.failure, sc.expect.failure_contains.as_str()) {
+        (None, "") => {}
+        (None, want) => problems.push(format!("no failure surfaced, expected one containing {want:?}")),
+        (Some(f), "") => {
+            // an unexpected failure is only acceptable if the expected
+            // stop reason explicitly says shard-failed
+            if sc.expect.stop != "shard-failed" {
+                problems.push(format!("unexpected failure: {f}"));
+            }
+        }
+        (Some(f), want) => {
+            if !f.message.contains(want) {
+                problems.push(format!("failure {:?} does not contain {want:?}", f.message));
+            }
+        }
+    }
+    if out.metrics.staleness_forced_reconciles < sc.expect.min_forced_reconciles {
+        problems.push(format!(
+            "forced reconciles {} < expected {}",
+            out.metrics.staleness_forced_reconciles, sc.expect.min_forced_reconciles
+        ));
+    }
+    if out.failure.is_none() && !out.objective.is_finite() {
+        problems.push(format!("non-finite objective {}", out.objective));
+    }
+    let pass = problems.is_empty();
+    let detail = if pass {
+        format!("stop={stop} objective={:.6e}", out.objective)
+    } else {
+        problems.join("; ")
+    };
+    Verdict { name: sc.name.clone(), pass, detail, sim_events: out.metrics.sim_events }
+}
+
+/// Load and run every `*.toml` under `dir` (sorted by file name),
+/// optionally keeping only names containing `filter`. Parse/run errors
+/// become failed verdicts rather than aborting the sweep.
+pub fn run_corpus(dir: &Path, filter: Option<&str>) -> anyhow::Result<Vec<ScenarioRun>> {
+    let mut files: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading scenario dir {}: {e}", dir.display()))?
+        .filter_map(|entry| {
+            let path = entry.ok()?.path();
+            (path.extension().and_then(|e| e.to_str()) == Some("toml")).then_some(path)
+        })
+        .collect();
+    files.sort();
+    let mut runs = Vec::new();
+    for path in files {
+        let stem = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        if let Some(f) = filter {
+            if !stem.contains(f) {
+                continue;
+            }
+        }
+        match Scenario::load(&path).and_then(|sc| run_scenario(&sc)) {
+            Ok(run) => runs.push(run),
+            Err(e) => runs.push(ScenarioRun {
+                verdict: Verdict {
+                    name: stem,
+                    pass: false,
+                    detail: format!("error: {e}"),
+                    sim_events: 0,
+                },
+                output: None,
+                event_log: String::new(),
+            }),
+        }
+    }
+    Ok(runs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::convergence::StopReason;
+
+    const BASE: &str = r#"
+        name = "unit-base"
+        seed = 3
+        [workload]
+        kind = "uniform"
+        n = 60
+        k = 24
+        nnz = 6
+        lam = 0.001
+        [shards]
+        count = 2
+        [solve]
+        rounds = 12
+    "#;
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let sc = Scenario::from_toml_str(BASE, "fallback").unwrap();
+        assert_eq!(sc.name, "unit-base");
+        assert_eq!(sc.seed, 3);
+        assert_eq!(sc.kind, WorkloadKind::Uniform);
+        assert_eq!((sc.n, sc.k, sc.nnz), (60, 24, 6));
+        assert_eq!(sc.shards, 2);
+        assert_eq!(sc.algorithm, Algorithm::Shotgun);
+        assert_eq!(sc.rounds, 12);
+        assert!(sc.faults.is_fault_free());
+        assert!(sc.expect.stop.is_empty());
+        // fallback name only when the file omits one
+        let unnamed = Scenario::from_toml_str("[workload]\nkind = \"uniform\"", "fb").unwrap();
+        assert_eq!(unnamed.name, "fb");
+    }
+
+    #[test]
+    fn rejects_bad_kinds_and_types() {
+        assert!(Scenario::from_toml_str("[workload]\nkind = \"nope\"", "x").is_err());
+        assert!(Scenario::from_toml_str("[workload]\nn = \"forty\"", "x").is_err());
+        assert!(Scenario::from_toml_str("[faults]\nreorder = 3", "x").is_err());
+    }
+
+    #[test]
+    fn workload_is_seed_deterministic() {
+        let sc = Scenario::from_toml_str(BASE, "x").unwrap();
+        let (xa, ya) = sc.workload();
+        let (xb, yb) = sc.workload();
+        assert_eq!(ya, yb);
+        for j in 0..xa.n_cols() {
+            assert_eq!(xa.col(j), xb.col(j));
+        }
+    }
+
+    #[test]
+    fn fault_free_scenario_passes() {
+        let sc = Scenario::from_toml_str(BASE, "x").unwrap();
+        let run = run_scenario(&sc).unwrap();
+        assert!(run.verdict.pass, "detail: {}", run.verdict.detail);
+        let out = run.output.as_ref().unwrap();
+        assert_eq!(out.stop, StopReason::MaxIters);
+        assert!(out.metrics.sim_events > 0);
+        assert!(!run.event_log.is_empty());
+    }
+
+    #[test]
+    fn expectation_mismatch_fails() {
+        let src = format!("{BASE}\n[expect]\nstop = \"shard-failed\"");
+        let sc = Scenario::from_toml_str(&src, "x").unwrap();
+        let run = run_scenario(&sc).unwrap();
+        assert!(!run.verdict.pass);
+        assert!(run.verdict.detail.contains("expected"));
+    }
+}

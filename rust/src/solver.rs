@@ -110,6 +110,8 @@ struct ShardedSetup {
     numa_pin: bool,
     reconcile_every: usize,
     reconcile_max_rounds: usize,
+    max_staleness_rounds: usize,
+    barrier_timeout_secs: f64,
 }
 
 impl Solver {
@@ -248,6 +250,8 @@ impl Solver {
             numa_pin: setup.numa_pin,
             reconcile_every: setup.reconcile_every,
             reconcile_max_rounds: setup.reconcile_max_rounds,
+            max_staleness_rounds: setup.max_staleness_rounds,
+            barrier_timeout_secs: setup.barrier_timeout_secs,
             delta_reconcile: true,
         };
         solve_sharded_with(
@@ -291,6 +295,8 @@ pub struct SolverBuilder {
     numa_pin: bool,
     reconcile_every: usize,
     reconcile_max_rounds: usize,
+    max_staleness_rounds: usize,
+    barrier_timeout_secs: f64,
     screening: bool,
     kkt_every: usize,
     kkt_adaptive: bool,
@@ -329,6 +335,8 @@ impl Default for SolverBuilder {
             numa_pin: false,
             reconcile_every: 1,
             reconcile_max_rounds: 0,
+            max_staleness_rounds: 0,
+            barrier_timeout_secs: 30.0,
             screening: ecfg.screening,
             kkt_every: ecfg.kkt_every,
             kkt_adaptive: ecfg.kkt_adaptive,
@@ -546,6 +554,31 @@ impl SolverBuilder {
         self
     }
 
+    /// Hard bound on replica staleness under the adaptive cadence: a
+    /// reconcile is forced whenever the next gap the doubling schedule
+    /// wants would leave replicas unreconciled for more than this many
+    /// rounds ([`crate::shard::engine`] §Failure semantics; default 0 =
+    /// unbounded). Must be 0 or >= [`reconcile_every`](Self::reconcile_every).
+    /// [`MetricsSnapshot::staleness_forced_reconciles`] counts how often
+    /// the bound bit.
+    ///
+    /// [`MetricsSnapshot::staleness_forced_reconciles`]:
+    ///     crate::coordinator::metrics::MetricsSnapshot::staleness_forced_reconciles
+    pub fn max_staleness_rounds(mut self, rounds: usize) -> Self {
+        self.max_staleness_rounds = rounds;
+        self
+    }
+
+    /// Seconds a shard waits at the reconcile barrier before declaring
+    /// its peers dead and failing the solve with
+    /// [`StopReason::ShardFailed`](crate::coordinator::convergence::StopReason::ShardFailed)
+    /// instead of hanging ([`crate::shard::engine`] §Failure semantics;
+    /// default 30.0; <= 0 disables the timeout).
+    pub fn barrier_timeout_secs(mut self, secs: f64) -> Self {
+        self.barrier_timeout_secs = secs;
+        self
+    }
+
     /// Active-set KKT screening ([`crate::screen`]; default off).
     /// Restricts selection to coordinates whose optimality conditions
     /// are not yet confidently satisfied; periodic full-set KKT sweeps
@@ -672,6 +705,21 @@ impl SolverBuilder {
             self.reconcile_max_rounds,
             self.reconcile_every
         );
+        anyhow::ensure!(
+            self.max_staleness_rounds == 0
+                || self.max_staleness_rounds >= self.reconcile_every,
+            "SolverBuilder: max_staleness_rounds ({}) must be 0 (unbounded) or \
+             >= reconcile_every ({}) — a staleness bound below the fixed cadence \
+             is unsatisfiable",
+            self.max_staleness_rounds,
+            self.reconcile_every
+        );
+        anyhow::ensure!(
+            self.barrier_timeout_secs == 0.0 || self.barrier_timeout_secs.is_finite(),
+            "SolverBuilder: barrier_timeout_secs must be finite (or <= 0 to \
+             disable the timeout), got {}",
+            self.barrier_timeout_secs
+        );
         if self.screening {
             anyhow::ensure!(
                 self.lambda > 0.0,
@@ -749,6 +797,8 @@ impl SolverBuilder {
                 } else {
                     self.reconcile_max_rounds
                 },
+                max_staleness_rounds: self.max_staleness_rounds,
+                barrier_timeout_secs: self.barrier_timeout_secs,
             })
         } else {
             None
@@ -864,7 +914,7 @@ impl SolverBuilder {
 /// first `threads % active` pools taking one extra so no requested
 /// worker is dropped.
 #[allow(clippy::too_many_arguments)]
-fn build_shard_specs(
+pub(crate) fn build_shard_specs(
     x: &CscMatrix,
     y: &[f64],
     loss: &dyn Loss,
@@ -1167,6 +1217,15 @@ mod tests {
         assert!(base().reconcile_every(4).build().is_ok());
         assert!(base().reconcile_every(2).reconcile_max_rounds(16).build().is_ok());
         assert!(base().shards(2).numa_pin(true).build().is_ok());
+        // staleness bound below the fixed cadence is unsatisfiable;
+        // 0 (unbounded) and >= cadence are fine. Barrier timeout must be
+        // finite, but 0 / negative (= disabled) are accepted.
+        assert!(base().reconcile_every(4).max_staleness_rounds(2).build().is_err());
+        assert!(base().reconcile_every(4).max_staleness_rounds(0).build().is_ok());
+        assert!(base().reconcile_every(4).max_staleness_rounds(8).build().is_ok());
+        assert!(base().barrier_timeout_secs(f64::NAN).build().is_err());
+        assert!(base().barrier_timeout_secs(0.0).build().is_ok());
+        assert!(base().barrier_timeout_secs(-1.0).build().is_ok());
         // screening: needs a real l1 penalty and a sweep cadence
         assert!(base().lambda(0.0).screening(true).build().is_err());
         assert!(base().screening(true).kkt_every(0).build().is_err());

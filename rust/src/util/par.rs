@@ -50,11 +50,34 @@
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Spin iterations before a waiter falls back to parking. At ~1-3 ns per
 /// `spin_loop` hint this is a handful of microseconds — longer than any
 /// healthy phase, shorter than a futex sleep/wake pair.
 pub const DEFAULT_SPIN: u32 = 1 << 12;
+
+/// What a [`SpinBarrier::wait_timeout`] crossing resolved to.
+///
+/// The engine's phase barriers keep using the infallible
+/// [`SpinBarrier::wait`] (a poisoned phase barrier is a programming
+/// error and panics); the *reconcile* barriers of the shard layer use
+/// the timeout variant so a dead or wedged peer pool degrades the solve
+/// into a structured error instead of hanging it (see
+/// [`crate::shard::engine`] §Failure semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WaitOutcome {
+    /// All parties arrived; the payload mirrors [`SpinBarrier::wait`]'s
+    /// return — `true` on exactly one thread per crossing.
+    Released(bool),
+    /// The barrier was [`SpinBarrier::poison`]ed by a dying peer.
+    Poisoned,
+    /// The timeout elapsed with peers still missing. The waiter poisons
+    /// the barrier on its way out, so every other party unblocks with
+    /// [`WaitOutcome::Poisoned`] (or a panic from plain `wait`) rather
+    /// than waiting for a crossing that can no longer complete.
+    TimedOut,
+}
 
 /// A reusable sense-reversing barrier with bounded spin and a parking
 /// fallback. All parties must call [`SpinBarrier::wait`] for any of them
@@ -139,6 +162,83 @@ impl SpinBarrier {
             }
         }
         false
+    }
+
+    /// Like [`SpinBarrier::wait`], but bounded: if the crossing does not
+    /// complete within `timeout`, the waiter gives up, **poisons the
+    /// barrier** (so its peers escape too instead of waiting for a
+    /// party that already left), and returns [`WaitOutcome::TimedOut`].
+    /// A barrier poisoned by someone else resolves to
+    /// [`WaitOutcome::Poisoned`] instead of panicking.
+    ///
+    /// The happy path is identical to `wait()` — same atomics, same
+    /// release protocol, one extra deadline check every 1024 spins — so
+    /// a fault-free crossing costs the same tens of nanoseconds.
+    pub fn wait_timeout(&self, timeout: Duration) -> WaitOutcome {
+        if self.parties == 1 {
+            return WaitOutcome::Released(true);
+        }
+        if self.poisoned.load(Ordering::Relaxed) {
+            return WaitOutcome::Poisoned;
+        }
+        let deadline = Instant::now() + timeout;
+        let gen = self.generation.load(Ordering::Acquire);
+        let arrived = self.count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.parties {
+            // Releaser path: identical to wait().
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::SeqCst);
+            if self.sleepers.load(Ordering::SeqCst) > 0 {
+                let _guard = self.lock.lock().unwrap();
+                self.cv.notify_all();
+            }
+            return WaitOutcome::Released(true);
+        }
+        let mut spins = 0u32;
+        while self.generation.load(Ordering::Acquire) == gen {
+            if self.poisoned.load(Ordering::Relaxed) {
+                return WaitOutcome::Poisoned;
+            }
+            if spins < self.spin_limit {
+                std::hint::spin_loop();
+                spins += 1;
+                if spins & 0x3FF == 0 && Instant::now() >= deadline {
+                    self.poison();
+                    return WaitOutcome::TimedOut;
+                }
+            } else {
+                return self.park_timeout(gen, deadline);
+            }
+        }
+        WaitOutcome::Released(false)
+    }
+
+    #[cold]
+    fn park_timeout(&self, gen: usize, deadline: Instant) -> WaitOutcome {
+        let mut guard = self.lock.lock().unwrap();
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        let outcome = loop {
+            if self.generation.load(Ordering::SeqCst) != gen {
+                break WaitOutcome::Released(false);
+            }
+            if self.poisoned.load(Ordering::SeqCst) {
+                break WaitOutcome::Poisoned;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                // Poison in place: we hold `self.lock`, so calling
+                // `poison()` (which takes it) would deadlock.
+                self.poisoned.store(true, Ordering::SeqCst);
+                self.cv.notify_all();
+                break WaitOutcome::TimedOut;
+            }
+            let (g, _timed_out) =
+                self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        };
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
+        outcome
     }
 
     /// Mark a party as dead and wake every waiter; all pending and
@@ -434,6 +534,138 @@ mod tests {
                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || b2.wait()))
                     .is_err()
             );
+        }
+    }
+
+    #[test]
+    fn wait_timeout_happy_path_matches_wait() {
+        // all parties arrive: exactly one Released(true) per crossing,
+        // in both the spinning and the parking regime
+        for spin in [DEFAULT_SPIN, 0] {
+            let threads = 4;
+            let barrier = SpinBarrier::with_spin(threads, spin);
+            let releasers = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|| {
+                        for _ in 0..50 {
+                            match barrier.wait_timeout(std::time::Duration::from_secs(5)) {
+                                WaitOutcome::Released(true) => {
+                                    releasers.fetch_add(1, Relaxed);
+                                }
+                                WaitOutcome::Released(false) => {}
+                                other => panic!("unexpected outcome {other:?}"),
+                            }
+                        }
+                    });
+                }
+            });
+            assert_eq!(releasers.load(Relaxed), 50);
+            assert!(!barrier.is_poisoned());
+        }
+    }
+
+    #[test]
+    fn wait_timeout_dead_peer_times_out_and_poisons() {
+        use std::time::Duration;
+        // a 2-party barrier where the peer never shows: the waiter must
+        // escape with TimedOut (not hang) and leave the barrier poisoned
+        // so the late peer fails fast instead of waiting forever
+        for spin in [DEFAULT_SPIN, 0] {
+            let b = SpinBarrier::with_spin(2, spin);
+            let start = std::time::Instant::now();
+            let out = b.wait_timeout(Duration::from_millis(50));
+            assert_eq!(out, WaitOutcome::TimedOut, "spin={spin}");
+            assert!(start.elapsed() < Duration::from_secs(10), "took too long");
+            assert!(b.is_poisoned(), "timeout must poison for the peers");
+            // the late peer now observes the poison instead of blocking
+            assert_eq!(
+                b.wait_timeout(Duration::from_secs(5)),
+                WaitOutcome::Poisoned
+            );
+        }
+    }
+
+    #[test]
+    fn wait_timeout_observes_peer_poison() {
+        use std::sync::Arc;
+        use std::time::Duration;
+        for spin in [DEFAULT_SPIN, 0] {
+            let b = Arc::new(SpinBarrier::with_spin(2, spin));
+            let waiter = {
+                let b = b.clone();
+                std::thread::spawn(move || b.wait_timeout(Duration::from_secs(30)))
+            };
+            std::thread::sleep(Duration::from_millis(20));
+            b.poison();
+            assert_eq!(waiter.join().unwrap(), WaitOutcome::Poisoned);
+        }
+    }
+
+    #[test]
+    fn wait_timeout_single_party_is_free() {
+        let b = SpinBarrier::new(1);
+        for _ in 0..10 {
+            assert_eq!(
+                b.wait_timeout(std::time::Duration::from_nanos(1)),
+                WaitOutcome::Released(true)
+            );
+        }
+    }
+
+    #[test]
+    fn dirty_chunks_property_vs_model() {
+        // 100 seeded random cases: DirtyChunks must agree with a naive
+        // model set under arbitrary mark/clear interleavings, and the
+        // union of two maps (fold-side view) must match set union.
+        // Sizes stay small so the Miri job can afford this test.
+        use crate::util::Pcg64;
+        let mut rng = Pcg64::seeded(0xD1127);
+        for case in 0..100 {
+            let len = 1 + rng.below(5 * 64 * DIRTY_CHUNK_ELEMS);
+            let d = DirtyChunks::new(len);
+            let mut model: std::collections::BTreeSet<usize> =
+                std::collections::BTreeSet::new();
+            let ops = 1 + rng.below(60);
+            for _ in 0..ops {
+                match rng.below(10) {
+                    0 => {
+                        d.clear();
+                        model.clear();
+                    }
+                    _ => {
+                        let i = rng.below(len);
+                        d.mark(i);
+                        model.insert(i / DIRTY_CHUNK_ELEMS);
+                    }
+                }
+            }
+            assert_eq!(d.count(), model.len(), "case {case} len {len}");
+            for c in 0..d.n_chunks() {
+                assert_eq!(
+                    d.is_dirty(c),
+                    model.contains(&c),
+                    "case {case} chunk {c}"
+                );
+            }
+            // idempotent re-mark never changes the count
+            if let Some(&c) = model.iter().next() {
+                d.mark(c * DIRTY_CHUNK_ELEMS);
+                assert_eq!(d.count(), model.len());
+            }
+            // union across two maps == set union (what the reconcile
+            // fold computes when it visits "dirty in any shard" chunks)
+            let d2 = DirtyChunks::new(len);
+            let mut model2 = model.clone();
+            for _ in 0..rng.below(20) {
+                let i = rng.below(len);
+                d2.mark(i);
+                model2.insert(i / DIRTY_CHUNK_ELEMS);
+            }
+            let union_count = (0..d.n_chunks())
+                .filter(|&c| d.is_dirty(c) || d2.is_dirty(c))
+                .count();
+            assert_eq!(union_count, model2.len(), "case {case} union");
         }
     }
 

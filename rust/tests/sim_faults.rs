@@ -1,0 +1,214 @@
+//! Acceptance tests for the fault-injection simulator (`gencd::sim`)
+//! and the hardened reconcile protocol behind it:
+//!
+//! * the committed `scenarios/` corpus (≥ 8 files) replays green — the
+//!   corpus is a regression gate, not a demo;
+//! * a fault-free [`SimLink`] is transparent: its objective lands
+//!   within 1e-12 of the production [`BarrierLink`] on **every**
+//!   `Algorithm` preset;
+//! * same seed + scenario ⇒ byte-identical event logs and bitwise
+//!   identical iterates across replays (and per-preset two-run
+//!   determinism, which also pins the seeded-RNG audit: no policy may
+//!   depend on hash order);
+//! * an injected pool kill and a virtual straggler timeout both
+//!   terminate promptly with `StopReason::ShardFailed` plus a
+//!   structured `SolveError` — degrade, never hang;
+//! * the bounded-staleness budget forcibly reconciles a doubling
+//!   adaptive cadence and counts doing so.
+//!
+//! [`SimLink`]: gencd::sim::SimLink
+//! [`BarrierLink`]: gencd::shard::BarrierLink
+
+use std::path::Path;
+use std::time::Instant;
+
+use gencd::coordinator::convergence::StopReason;
+use gencd::sim::{run_baseline, run_corpus, run_scenario, Scenario};
+
+/// All eight (Select, Accept) presets, by their registry names.
+const PRESETS: [&str; 8] = [
+    "ccd",
+    "scd",
+    "shotgun",
+    "thread-greedy",
+    "greedy",
+    "coloring",
+    "topk",
+    "block-shotgun",
+];
+
+/// A small fault-free scenario for `alg`, solved in well under a second
+/// so the per-preset sweeps stay cheap.
+fn preset_scenario(alg: &str, seed: u64) -> Scenario {
+    let src = format!(
+        r#"
+        name = "preset-{alg}"
+        seed = {seed}
+        [workload]
+        kind = "uniform"
+        n = 60
+        k = 24
+        nnz = 6
+        lam = 0.001
+        [shards]
+        count = 2
+        [solve]
+        algorithm = "{alg}"
+        rounds = 12
+        "#
+    );
+    Scenario::from_toml_str(&src, "preset").unwrap()
+}
+
+#[test]
+fn committed_corpus_replays_green() {
+    let runs = run_corpus(Path::new("scenarios"), None).expect("scenario dir must be readable");
+    assert!(
+        runs.len() >= 8,
+        "committed corpus must hold at least 8 scenarios, found {}",
+        runs.len()
+    );
+    for run in &runs {
+        assert!(
+            run.verdict.pass,
+            "scenario {} failed: {}",
+            run.verdict.name, run.verdict.detail
+        );
+    }
+}
+
+#[test]
+fn fault_free_sim_matches_barrier_link_on_every_preset() {
+    for alg in PRESETS {
+        let sc = preset_scenario(alg, 41);
+        assert!(sc.faults.is_fault_free());
+        let sim = run_scenario(&sc).unwrap();
+        let sim_out = sim.output.as_ref().unwrap();
+        let real = run_baseline(&sc).unwrap();
+        assert!(sim_out.failure.is_none(), "{alg}: {:?}", sim_out.failure);
+        assert!(real.failure.is_none(), "{alg}: {:?}", real.failure);
+        let (a, b) = (sim_out.objective, real.objective);
+        assert!(
+            (a - b).abs() <= 1e-12 * a.abs().max(1.0),
+            "{alg}: simulated objective {a} vs barrier objective {b}"
+        );
+    }
+}
+
+#[test]
+fn same_scenario_replays_byte_identical() {
+    // the nastiest completing scenario: jitter + reorder + straggler on
+    // the conflict workload — if anything leaks wall-clock or hash
+    // order into the schedule, this is where it shows
+    let src = r#"
+        name = "replay-torture"
+        seed = 77
+        [workload]
+        kind = "conflict"
+        n = 90
+        k = 30
+        nnz = 8
+        lam = 0.001
+        [shards]
+        count = 3
+        [solve]
+        rounds = 20
+        [faults]
+        delay_ticks_max = 9
+        reorder = true
+        straggler_shard = 2
+        straggler_mult = 4
+    "#;
+    let sc = Scenario::from_toml_str(src, "x").unwrap();
+    let a = run_scenario(&sc).unwrap();
+    let b = run_scenario(&sc).unwrap();
+    assert!(!a.event_log.is_empty());
+    assert_eq!(
+        a.event_log, b.event_log,
+        "event logs must replay byte-identically"
+    );
+    let (wa, wb) = (
+        &a.output.as_ref().unwrap().w,
+        &b.output.as_ref().unwrap().w,
+    );
+    assert_eq!(wa.len(), wb.len());
+    for (i, (x, y)) in wa.iter().zip(wb.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "w[{i}] differs across replays");
+    }
+}
+
+#[test]
+fn every_preset_is_two_run_deterministic() {
+    // the seeded-RNG audit's teeth: same seed, same scenario, bitwise
+    // identical iterate — for every preset, so no Select/Accept policy
+    // (MinOverlap partitioning included via its builder path) depends
+    // on hash order or wall clock
+    for alg in PRESETS {
+        let sc = preset_scenario(alg, 53);
+        let a = run_scenario(&sc).unwrap();
+        let b = run_scenario(&sc).unwrap();
+        assert_eq!(a.event_log, b.event_log, "{alg}: event logs differ");
+        let (wa, wb) = (
+            &a.output.as_ref().unwrap().w,
+            &b.output.as_ref().unwrap().w,
+        );
+        for (i, (x, y)) in wa.iter().zip(wb.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{alg}: w[{i}] differs");
+        }
+    }
+}
+
+#[test]
+fn injected_panic_terminates_structured() {
+    let sc = Scenario::load(Path::new("scenarios/07-panic-mid-solve.toml")).unwrap();
+    let t0 = Instant::now();
+    let run = run_scenario(&sc).unwrap();
+    assert!(
+        t0.elapsed().as_secs() < 30,
+        "killed solve must terminate promptly, took {:?}",
+        t0.elapsed()
+    );
+    let out = run.output.as_ref().unwrap();
+    assert_eq!(out.stop, StopReason::ShardFailed);
+    let failure = out.failure.as_ref().expect("structured error must surface");
+    assert!(
+        failure.message.contains("injected fault"),
+        "panic payload should surface: {failure}"
+    );
+    assert!(out.metrics.shard_failures >= 1);
+    assert!(run.verdict.pass, "{}", run.verdict.detail);
+}
+
+#[test]
+fn virtual_timeout_terminates_structured() {
+    let sc = Scenario::load(Path::new("scenarios/06-straggler-timeout.toml")).unwrap();
+    let t0 = Instant::now();
+    let run = run_scenario(&sc).unwrap();
+    assert!(
+        t0.elapsed().as_secs() < 30,
+        "timed-out solve must terminate promptly, took {:?}",
+        t0.elapsed()
+    );
+    let out = run.output.as_ref().unwrap();
+    assert_eq!(out.stop, StopReason::ShardFailed);
+    let failure = out.failure.as_ref().expect("structured error must surface");
+    assert!(
+        failure.message.contains("timed out"),
+        "timeout cause should surface: {failure}"
+    );
+    assert!(run.verdict.pass, "{}", run.verdict.detail);
+}
+
+#[test]
+fn staleness_budget_forces_reconciles() {
+    let sc = Scenario::load(Path::new("scenarios/08-staleness-clamp.toml")).unwrap();
+    let run = run_scenario(&sc).unwrap();
+    let out = run.output.as_ref().unwrap();
+    assert_eq!(out.stop, StopReason::MaxIters);
+    assert!(
+        out.metrics.staleness_forced_reconciles >= 1,
+        "doubling cadence must hit the staleness clamp, metrics: {}",
+        out.metrics.staleness_forced_reconciles
+    );
+    assert!(run.verdict.pass, "{}", run.verdict.detail);
+}
