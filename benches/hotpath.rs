@@ -612,6 +612,66 @@ fn main() {
     );
     report.push("barrier_spin_ns_per_crossing", s_spin.best * 1e9 / ROUNDS as f64);
 
+    // ---- wire codec: delta frames, exact vs f32 ------------------------------
+    {
+        use gencd::net::frame::{decode_frame, encode_delta, Frame, WirePrecision};
+        // 1-in-8 chunks dirty: the sparse-round shape the delta
+        // reconcile produces on the reference workload
+        let dirty_every = 8usize;
+        let replica: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let n_chunks = n.div_ceil(16);
+        let dirty_chunks = (0..n_chunks).filter(|c| c % dirty_every == 0).count().max(1);
+        let mut exact_len = 0usize;
+        for precision in [WirePrecision::Exact, WirePrecision::F32] {
+            let mut wire = Vec::with_capacity(n * 8 + 64);
+            let s_enc = bench_loop(0.3, 10, || {
+                wire.clear();
+                let len = encode_delta(
+                    &mut wire,
+                    0,
+                    1,
+                    precision,
+                    n,
+                    |c| c % dirty_every == 0,
+                    |i| replica[i],
+                );
+                std::hint::black_box(len);
+            });
+            println!(
+                "wire/encode {:<6} {:>9.1} ns/dirty-chunk     {s_enc}",
+                precision.name(),
+                s_enc.best * 1e9 / dirty_chunks as f64
+            );
+            report.push(
+                &format!("wire_encode_{}_ns_per_dirty_chunk", precision.name()),
+                s_enc.best * 1e9 / dirty_chunks as f64,
+            );
+            let mut sink = vec![0.0f64; n];
+            let s_dec = bench_loop(0.3, 10, || {
+                match decode_frame(&wire).expect("frame") {
+                    Frame::Delta(d) => d.apply(|i, v| sink[i] = v),
+                    other => panic!("unexpected frame: {other:?}"),
+                }
+                std::hint::black_box(&mut sink);
+            });
+            println!(
+                "wire/decode {:<6} {:>9.1} ns/dirty-chunk     {s_dec}",
+                precision.name(),
+                s_dec.best * 1e9 / dirty_chunks as f64
+            );
+            report.push(
+                &format!("wire_decode_{}_ns_per_dirty_chunk", precision.name()),
+                s_dec.best * 1e9 / dirty_chunks as f64,
+            );
+            match precision {
+                WirePrecision::Exact => exact_len = wire.len(),
+                WirePrecision::F32 => {
+                    report.push("wire_f32_volume_ratio", wire.len() as f64 / exact_len as f64)
+                }
+            }
+        }
+    }
+
     // ---- line search ---------------------------------------------------------
     for steps in [20usize, 500] {
         let s = bench_loop(0.5, 10, || {

@@ -355,6 +355,56 @@ pub fn print_numa_ab(shards: usize, threads: usize) {
     }
 }
 
+/// Wire-transport experiment (the `gencd net` subcommand): the same
+/// sharded solve over the in-memory barrier vs the loopback wire
+/// (every reconcile exchange through full encode→frame→decode), exact
+/// and f32 precision. Reported per run: the final objective (loopback
+/// exact must match barrier to ~1e-12 — it is the same float sequence),
+/// throughput, reconcile and codec time, and the wire volume the delta
+/// frames would have cost a real network.
+pub fn print_net_ab(shards: usize, threads: usize) {
+    let scale = bench_scale();
+    let budget = bench_budget();
+    println!(
+        "# Wire transport A/B (scale {scale}, {budget}s/run, {shards} shards x \
+         {threads} total threads, shotgun)\n"
+    );
+    for (ds, lam) in paper_datasets() {
+        println!("## {} (lambda = {lam:.0e})\n", ds.name);
+        let mut table = Table::new(&[
+            "transport",
+            "objective",
+            "updates/s",
+            "reconcile s",
+            "codec ms",
+            "wire MB tx",
+            "wire MB rx",
+        ]);
+        for (label, transport, precision) in [
+            ("barrier", "barrier", "exact"),
+            ("loopback exact", "loopback", "exact"),
+            ("loopback f32", "loopback", "f32"),
+        ] {
+            let mut cfg = bench_config(&ds.name, lam, Algorithm::Shotgun);
+            cfg.solver.threads = threads;
+            cfg.solver.shards = shards;
+            cfg.solver.transport = transport.into();
+            cfg.solver.wire_precision = precision.into();
+            let res = run_on(&cfg, ds.clone(), None).expect("solve");
+            table.row(vec![
+                label.into(),
+                format!("{:.6}", res.objective),
+                format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
+                format!("{:.3}", res.metrics.reconcile_secs),
+                format!("{:.2}", res.metrics.codec_secs * 1e3),
+                format!("{:.2}", res.metrics.wire_bytes_tx as f64 / 1e6),
+                format!("{:.2}", res.metrics.wire_bytes_rx as f64 / 1e6),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+}
+
 /// Screening experiment (the `gencd screen` subcommand): active-set
 /// KKT screening on vs off at an equal time budget, for a
 /// full-selection algorithm (GREEDY — where screened proposal work is

@@ -144,6 +144,20 @@ pub struct SolverConfig {
     /// (`CscMatrix::dot_col_fast`; off by default so the scalar path
     /// stays the bit-exactness reference).
     pub fast_kernels: bool,
+    /// Reconcile backend for `shards > 1`:
+    /// barrier | loopback | tcp. See `net::Transport` and
+    /// `SolverBuilder::transport`.
+    pub transport: String,
+    /// Listen address for `transport = "tcp"` (the coordinator relay
+    /// binds here; `:0` picks an ephemeral port).
+    pub listen: String,
+    /// Comma-separated relay addresses the shard peers dial for
+    /// `transport = "tcp"`; empty = everyone dials `listen`'s bound
+    /// address (single-process loop-TCP).
+    pub peers: String,
+    /// Wire value precision: exact (f64, bit-exact with the barrier) |
+    /// f32 (half the delta bytes). See `net::WirePrecision`.
+    pub wire_precision: String,
 }
 
 impl Default for SolverConfig {
@@ -174,6 +188,10 @@ impl Default for SolverConfig {
             kkt_every: 16,
             kkt_adaptive: false,
             fast_kernels: false,
+            transport: "barrier".into(),
+            listen: "127.0.0.1:0".into(),
+            peers: String::new(),
+            wire_precision: "exact".into(),
         }
     }
 }
@@ -295,6 +313,12 @@ impl RunConfig {
             }
             ("solver", "fast_kernels") => {
                 self.solver.fast_kernels = value.as_bool().ok_or_else(bad_type)?
+            }
+            ("solver", "transport") => self.solver.transport = as_str(value)?,
+            ("solver", "listen") => self.solver.listen = as_str(value)?,
+            ("solver", "peers") => self.solver.peers = as_str(value)?,
+            ("solver", "wire_precision") => {
+                self.solver.wire_precision = as_str(value)?
             }
             ("output", "csv") => self.csv = Some(as_str(value)?),
             ("", _) => anyhow::bail!("top-level key '{key}' not recognized"),
@@ -418,6 +442,25 @@ mod tests {
         assert_eq!(cfg.solver.max_staleness_rounds, 12);
         assert_eq!(cfg.solver.barrier_timeout_secs, 0.25);
         assert!(RunConfig::from_toml("[solver]\nmax_staleness_rounds = -3\n").is_err());
+        // wire-transport knobs: defaults, TOML, and --set override
+        assert_eq!(cfg.solver.transport, "barrier");
+        assert_eq!(cfg.solver.listen, "127.0.0.1:0");
+        assert_eq!(cfg.solver.peers, "");
+        assert_eq!(cfg.solver.wire_precision, "exact");
+        let cfg8 = RunConfig::from_toml(
+            "[solver]\ntransport = \"tcp\"\nlisten = \"0.0.0.0:7070\"\n\
+             peers = \"10.0.0.1:7070,10.0.0.2:7070\"\nwire_precision = \"f32\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg8.solver.transport, "tcp");
+        assert_eq!(cfg8.solver.listen, "0.0.0.0:7070");
+        assert_eq!(cfg8.solver.peers, "10.0.0.1:7070,10.0.0.2:7070");
+        assert_eq!(cfg8.solver.wire_precision, "f32");
+        cfg.set("solver.transport", "loopback").unwrap();
+        cfg.set("solver.wire_precision", "f32").unwrap();
+        assert_eq!(cfg.solver.transport, "loopback");
+        assert_eq!(cfg.solver.wire_precision, "f32");
+        assert!(RunConfig::from_toml("[solver]\ntransport = 5\n").is_err());
     }
 
     #[test]

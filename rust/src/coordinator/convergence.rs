@@ -120,6 +120,46 @@ impl std::fmt::Display for StopReason {
     }
 }
 
+/// Failure class of a [`SolveError`] — what *kind* of thing killed the
+/// shard pool, independent of the human-readable message. Embedders
+/// match on this instead of parsing strings: a `Timeout` may warrant a
+/// retry with a longer `barrier_timeout_secs`, a `Protocol` error means
+/// a wire/codec bug (or a corrupting network) and should page someone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveErrorKind {
+    /// The pool's worker thread panicked (bug in user callbacks, or an
+    /// injected kill in the fault simulator).
+    Panic,
+    /// A reconcile crossing exceeded its deadline
+    /// ([`LinkFault::TimedOut`](crate::shard::engine::LinkFault::TimedOut)):
+    /// a peer is slow, stuck, or gone, and never arrived.
+    Timeout,
+    /// The reconcile link itself failed
+    /// ([`LinkFault::Poisoned`](crate::shard::engine::LinkFault::Poisoned)):
+    /// a dying peer poisoned the exchange, or a transport connection
+    /// dropped.
+    Link,
+    /// The wire protocol was violated
+    /// ([`LinkFault::Protocol`](crate::shard::engine::LinkFault::Protocol)):
+    /// a frame failed to decode — truncated, bad magic, inconsistent
+    /// lengths. Only wire transports ([`crate::net`]) emit this.
+    Protocol,
+}
+
+impl std::fmt::Display for SolveErrorKind {
+    // Matched by scenario expectation files ([expect] kind = "...");
+    // keep these strings stable.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            SolveErrorKind::Panic => "panic",
+            SolveErrorKind::Timeout => "timeout",
+            SolveErrorKind::Link => "link",
+            SolveErrorKind::Protocol => "protocol",
+        };
+        write!(f, "{s}")
+    }
+}
+
 /// Structured description of a shard-pool failure: what the solve's
 /// [`StopReason::ShardFailed`] actually was. Carried in
 /// [`SolveOutput::failure`](super::engine::SolveOutput::failure) so
@@ -130,6 +170,8 @@ pub struct SolveError {
     /// barrier timeout observed by a *healthy* shard reports that
     /// shard's own index — the dead peer is whichever never arrived).
     pub shard: Option<usize>,
+    /// Failure class, for programmatic matching.
+    pub kind: SolveErrorKind,
     /// Human-readable cause: the panic payload, or the link fault
     /// ("reconcile barrier timed out", "reconcile barrier poisoned").
     pub message: String,
@@ -182,6 +224,23 @@ mod tests {
         assert_eq!(h.time_to_within(0.0), Some(2.0));
         assert_eq!(h.time_to_within(1.1), Some(1.0)); // within 0.5*(1+1.1)=1.05
         assert_eq!(h.time_to_within(10.0), Some(0.0));
+    }
+
+    #[test]
+    fn solve_error_kind_display_is_stable() {
+        assert_eq!(SolveErrorKind::Panic.to_string(), "panic");
+        assert_eq!(SolveErrorKind::Timeout.to_string(), "timeout");
+        assert_eq!(SolveErrorKind::Link.to_string(), "link");
+        assert_eq!(SolveErrorKind::Protocol.to_string(), "protocol");
+        let e = SolveError {
+            shard: Some(3),
+            kind: SolveErrorKind::Timeout,
+            message: "reconcile barrier timed out (peer missing)".into(),
+        };
+        // Display stays message-shaped (scenario grading substrings
+        // depend on it); the kind travels alongside.
+        assert_eq!(e.to_string(), "shard 3: reconcile barrier timed out (peer missing)");
+        let _: &dyn std::error::Error = &e;
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::coloring::Strategy;
 use crate::config::{Backend, RunConfig};
 use crate::data;
 use crate::loss;
+use crate::net::Transport;
 use crate::shard::ShardStrategy;
 use crate::solver::Solver;
 use crate::sparse::io::Dataset;
@@ -98,6 +99,20 @@ pub fn run_on(
     let shard_strategy = ShardStrategy::by_name(&cfg.solver.shard_strategy)?;
     let loss = loss::by_name(&cfg.problem.loss)?;
     let update_path = UpdatePath::by_name(&cfg.solver.update_path)?;
+    let transport = Transport::from_config(
+        &cfg.solver.transport,
+        &cfg.solver.listen,
+        &cfg.solver.peers,
+        &cfg.solver.wire_precision,
+    )
+    .ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown solver.transport '{}' / wire_precision '{}' \
+             (barrier|loopback|tcp, exact|f32)",
+            cfg.solver.transport,
+            cfg.solver.wire_precision
+        )
+    })?;
     let dataset_name = ds.name.clone();
 
     // build() runs the algorithm's preprocessing (spectral P*,
@@ -129,6 +144,7 @@ pub fn run_on(
         .reconcile_max_rounds(cfg.solver.reconcile_max_rounds)
         .max_staleness_rounds(cfg.solver.max_staleness_rounds)
         .barrier_timeout_secs(cfg.solver.barrier_timeout_secs)
+        .transport(transport)
         .screening(cfg.solver.screening)
         .kkt_every(cfg.solver.kkt_every)
         .kkt_adaptive(cfg.solver.kkt_adaptive)
@@ -299,6 +315,22 @@ mod tests {
         cfg.solver.reconcile_every = 8;
         cfg.solver.reconcile_max_rounds = 2;
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn loopback_transport_flows_through() {
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.shards = 2;
+        cfg.solver.transport = "loopback".into();
+        let res = run(&cfg).unwrap();
+        assert_eq!(res.metrics.shards, 2);
+        assert!(
+            res.metrics.wire_bytes_tx > 0,
+            "loopback must route reconciles through the codec"
+        );
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.transport = "udp".into();
+        assert!(run(&cfg).is_err(), "unknown transport must be rejected");
     }
 
     #[test]

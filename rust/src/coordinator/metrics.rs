@@ -80,6 +80,9 @@ impl Metrics {
             sim_events: 0,
             staleness_forced_reconciles: 0,
             shard_failures: 0,
+            wire_bytes_tx: 0,
+            wire_bytes_rx: 0,
+            codec_secs: 0.0,
         }
     }
 }
@@ -166,6 +169,18 @@ pub struct MetricsSnapshot {
     /// poisoned peer). Nonzero exactly when the stop reason is
     /// [`ShardFailed`](super::convergence::StopReason::ShardFailed).
     pub shard_failures: u64,
+    /// Bytes encoded and sent through a wire transport
+    /// ([`crate::net`]): delta frames + decision frames, summed across
+    /// shards. 0 on in-memory links (barrier, sim).
+    pub wire_bytes_tx: u64,
+    /// Bytes received and decoded from the wire (counts duplicate
+    /// deliveries, so it can exceed `wire_bytes_tx` under injected
+    /// faults). 0 on in-memory links.
+    pub wire_bytes_rx: u64,
+    /// Seconds spent in the wire codec — encoding and decoding frames,
+    /// not blocking waits (max across shard leaders, the
+    /// `reconcile_secs` convention). 0 on in-memory links.
+    pub codec_secs: f64,
 }
 
 impl MetricsSnapshot {

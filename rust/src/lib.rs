@@ -63,7 +63,7 @@
 //! | [`coordinator::engine`] | worker threads in one pool | one `z`/`w` ([`SharedState`](coordinator::problem::SharedState)) | phase spin barriers |
 //! | [`shard`] (`SolverBuilder::shards(n)`) | one NUMA-pinnable engine pool per column shard | per-shard `z` *replica*, first-touched node-local | reconcile barrier, every R rounds (adaptive), dirty-chunk delta fold |
 //! | [`sim`] (`gencd sim`, [`sim::SimLink`]) | the shard layer, unmodified, under virtual time | a seeded [`sim::FaultPlan`] (pure data, consulted identically by every shard) | deterministic fault injection over the [`shard::ReconcileLink`] seam: delays, reorders, stragglers, kills, timeouts |
-//! | future: distributed backends | machines | replica per machine | same reconcile contract |
+//! | [`net`] (`SolverBuilder::transport`, `gencd net`) | shard peers behind a wire ([`net::LoopbackLink`] in-process, [`net::TcpLink`] over sockets) | replicas refreshed from decoded frames (absolute dirty-chunk values, exact or f32) | the same four reconcile crossings, serialized per [`shard::engine`] §Wire format; deadlines map `barrier_timeout_secs` onto the socket |
 //!
 //! The engine scales until every worker hammering the same residual
 //! vector saturates one coherent memory domain; the shard layer
@@ -85,10 +85,15 @@
 //! while replicas agree, snap back on a conflict spike), with all
 //! stopping decisions taken at reconciled rounds so convergence
 //! semantics are unchanged ([`shard::engine`] §NUMA, §Reconcile
-//! cadence). A distributed backend plugs in at the same seam: it only
-//! has to speak the reconcile contract — the dirty-chunk delta
-//! exchange is already the only cross-shard traffic — not the engine's
-//! phase protocol.
+//! cadence). The distributed backends ([`net`]) plug in at exactly that
+//! seam: the dirty-chunk delta exchange is already the only cross-shard
+//! traffic, so a wire transport only has to speak the reconcile
+//! contract — four crossings plus the frame codec — not the engine's
+//! phase protocol. [`net::LoopbackLink`] runs the full wire protocol
+//! in-process (bit-exact with the barrier under
+//! `wire_precision = exact`); [`net::TcpLink`] ships the same frames
+//! over blocking sockets with every failure mode landing as a clean
+//! `ShardFailed`, never a hang.
 //!
 //! Orthogonal to both, the **screening layer** ([`screen`],
 //! `SolverBuilder::screening(true)`) attacks the *work per iteration*
@@ -153,6 +158,7 @@ pub mod data;
 pub mod eval;
 pub mod linalg;
 pub mod loss;
+pub mod net;
 pub mod prelude;
 pub mod runtime;
 pub mod screen;

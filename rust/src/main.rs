@@ -56,6 +56,7 @@ fn run(args: &mut Args) -> anyhow::Result<()> {
         "screen" => cmd_screen(args),
         "numa" => cmd_numa(args),
         "sim" => cmd_sim(args),
+        "net" => cmd_net(args),
         "artifacts" => cmd_artifacts(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -77,6 +78,8 @@ SUBCOMMANDS
              [--shards N] [--shard-strategy contiguous|round-robin|min-overlap]
              [--numa-pin] [--reconcile-every N] [--reconcile-max-rounds N]
              [--max-staleness-rounds N] [--barrier-timeout S]
+             [--transport barrier|loopback|tcp] [--listen ADDR]
+             [--peers ADDR,ADDR,...] [--wire-precision exact|f32]
              [--screening] [--kkt-every N] [--kkt-adaptive] [--fast-kernels]
              [--set table.key=value]...   (e.g. solver.buffer_budget_mb=512)
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
@@ -99,6 +102,14 @@ SUBCOMMANDS
   sim        [--dir PATH] [--filter SUBSTR] [--events]
              (replay the deterministic fault-injection scenario corpus
               [default scenarios/]; nonzero exit if any scenario fails)
+  net        [--shards N] [--threads N] [--scale F] [--seconds S]
+             (barrier vs loopback-wire A/B: objective parity, codec
+              time, wire bytes)
+             --corpus [--dir PATH] [--filter SUBSTR]
+             (replay the scenario corpus — including scenarios/net —
+              over the loopback wire transport; nonzero exit on FAIL)
+             --smoke   (2-shard localhost-TCP solve; asserts clean
+              convergence and shutdown)
   artifacts  [--dir PATH] [--smoke]
 
 Datasets: dorothea, reuters, optionally suffixed @scale (reuters@0.1),
@@ -162,6 +173,18 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(v) = args.value("barrier-timeout") {
         cfg.solver.barrier_timeout_secs = v.parse()?;
+    }
+    if let Some(v) = args.value("transport") {
+        cfg.solver.transport = v;
+    }
+    if let Some(v) = args.value("listen") {
+        cfg.solver.listen = v;
+    }
+    if let Some(v) = args.value("peers") {
+        cfg.solver.peers = v;
+    }
+    if let Some(v) = args.value("wire-precision") {
+        cfg.solver.wire_precision = v;
     }
     if args.flag("screening") {
         cfg.solver.screening = true;
@@ -537,6 +560,77 @@ fn cmd_numa(args: &mut Args) -> anyhow::Result<()> {
     let threads: usize = args.get("threads", 4)?;
     args.finish()?;
     gencd::bench_harness::experiments::print_numa_ab(shards, threads);
+    Ok(())
+}
+
+fn cmd_net(args: &mut Args) -> anyhow::Result<()> {
+    if args.flag("corpus") {
+        let dir = args
+            .value("dir")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("scenarios"));
+        let filter = args.value("filter");
+        let show_events = args.flag("events");
+        args.finish()?;
+        let runs = gencd::sim::run_corpus_loopback(&dir, filter.as_deref())?;
+        anyhow::ensure!(
+            !runs.is_empty(),
+            "no scenarios matched under {} (expected *.toml files)",
+            dir.display()
+        );
+        if show_events {
+            for run in &runs {
+                println!("=== {} ===", run.verdict.name);
+                print!("{}", run.event_log);
+            }
+        }
+        let verdicts: Vec<_> = runs.iter().map(|r| r.verdict.clone()).collect();
+        let (report, all_pass) = gencd::sim::render_verdicts(&verdicts);
+        print!("{report}");
+        anyhow::ensure!(all_pass, "scenario corpus has failures over the loopback wire");
+        return Ok(());
+    }
+    if args.flag("smoke") {
+        args.finish()?;
+        let ds = gencd::data::by_name("dorothea@0.02")?;
+        let out = gencd::Solver::builder()
+            .dataset(ds)
+            .normalize(true)
+            .lambda(1e-3)
+            .algorithm("shotgun".parse()?)
+            .threads(2)
+            .shards(2)
+            .max_seconds(5.0)
+            .transport(gencd::net::Transport::Tcp {
+                listen: "127.0.0.1:0".into(),
+                peers: vec![],
+                precision: gencd::net::WirePrecision::Exact,
+            })
+            .build()?
+            .solve();
+        println!(
+            "tcp smoke: stop {} | obj {:.6} | wire tx {} rx {} | codec {:.4}s",
+            out.stop,
+            out.objective,
+            out.metrics.wire_bytes_tx,
+            out.metrics.wire_bytes_rx,
+            out.metrics.codec_secs,
+        );
+        anyhow::ensure!(
+            out.failure.is_none(),
+            "tcp smoke failed: {}",
+            out.failure.map(|f| f.to_string()).unwrap_or_default()
+        );
+        anyhow::ensure!(out.objective.is_finite(), "tcp smoke: non-finite objective");
+        anyhow::ensure!(out.metrics.wire_bytes_tx > 0, "tcp smoke: no wire traffic");
+        println!("tcp smoke OK");
+        return Ok(());
+    }
+    bench_env(args, 2.0)?;
+    let shards: usize = args.get("shards", 2)?;
+    let threads: usize = args.get("threads", 4)?;
+    args.finish()?;
+    gencd::bench_harness::experiments::print_net_ab(shards, threads);
     Ok(())
 }
 

@@ -1,0 +1,274 @@
+//! Zero-copy encode/decode primitives for the reconcile wire protocol.
+//!
+//! Modeled on s2n-codec's `EncoderValue`/`DecoderValue` discipline:
+//! encoding appends into a caller-owned, reusable byte buffer (no
+//! intermediate allocation per value), decoding walks a **borrowed**
+//! input slice through a checked cursor and hands multi-byte regions
+//! back as sub-slices of the input (`DecoderBuffer::take`) — a decoded
+//! frame never copies its payload. Every read is bounds-checked and
+//! every failure is a typed [`DecodeError`]; malformed or truncated
+//! input can never panic (pinned by the adversarial property tests in
+//! `rust/tests/net_link.rs`).
+//!
+//! All integers and floats are little-endian, the native order of every
+//! target this crate ships on — `to_le_bytes`/`from_le_bytes` make the
+//! layout explicit without paying a swap anywhere it matters.
+
+/// Why a decode failed. Carried into
+/// [`LinkFault::Protocol`](crate::shard::engine::LinkFault::Protocol)
+/// via [`DecodeError::reason`] when a wire link hits malformed bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Input ended before a declared or implied field: `needed` more
+    /// bytes than the `have` remaining.
+    Truncated { needed: usize, have: usize },
+    /// The 4-byte frame magic was wrong — not a GenCD frame at all.
+    BadMagic(u32),
+    /// Unknown frame tag byte.
+    BadTag(u8),
+    /// A declared length or count is inconsistent with the payload
+    /// (e.g. the length prefix disagrees with the actual byte count, or
+    /// a dirty-chunk count exceeds the chunk total).
+    BadLength,
+    /// A field held an out-of-domain value (named by the codec site).
+    BadValue(&'static str),
+}
+
+impl DecodeError {
+    /// Static one-line cause, suitable for
+    /// [`LinkFault::Protocol`](crate::shard::engine::LinkFault::Protocol)
+    /// (which carries `&'static str` so [`LinkFault`] stays `Copy`).
+    ///
+    /// [`LinkFault`]: crate::shard::engine::LinkFault
+    pub fn reason(&self) -> &'static str {
+        match self {
+            DecodeError::Truncated { .. } => "wire frame truncated",
+            DecodeError::BadMagic(_) => "wire frame has bad magic",
+            DecodeError::BadTag(_) => "wire frame has unknown tag",
+            DecodeError::BadLength => "wire frame length mismatch",
+            DecodeError::BadValue(what) => what,
+        }
+    }
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated { needed, have } => {
+                write!(f, "truncated frame: needed {needed} more bytes, have {have}")
+            }
+            DecodeError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            DecodeError::BadTag(t) => write!(f, "unknown frame tag {t}"),
+            DecodeError::BadLength => write!(f, "frame length prefix disagrees with payload"),
+            DecodeError::BadValue(what) => write!(f, "{what}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Append-only encoder over a caller-owned `Vec<u8>`. The buffer is
+/// reused across rounds by the wire links (`clear()` + re-encode), so
+/// steady-state encoding allocates nothing.
+pub struct EncoderBuffer<'a> {
+    buf: &'a mut Vec<u8>,
+}
+
+impl<'a> EncoderBuffer<'a> {
+    pub fn new(buf: &'a mut Vec<u8>) -> Self {
+        Self { buf }
+    }
+
+    /// Bytes written so far (the underlying buffer's length).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Overwrite a previously written little-endian `u32` at `at` —
+    /// how length prefixes are backpatched after the payload is known.
+    pub fn patch_u32(&mut self, at: usize, v: u32) {
+        self.buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Checked cursor over a borrowed input slice. Multi-byte regions come
+/// back as sub-slices of the input (`take`), so decoding is zero-copy;
+/// scalar reads copy the handful of bytes they decode.
+#[derive(Clone, Copy, Debug)]
+pub struct DecoderBuffer<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> DecoderBuffer<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Consume `len` bytes, returning them as a sub-slice of the input.
+    pub fn take(&mut self, len: usize) -> Result<&'a [u8], DecodeError> {
+        if self.bytes.len() < len {
+            return Err(DecodeError::Truncated {
+                needed: len - self.bytes.len(),
+                have: self.bytes.len(),
+            });
+        }
+        let (head, tail) = self.bytes.split_at(len);
+        self.bytes = tail;
+        Ok(head)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// A value that knows how to append itself to an [`EncoderBuffer`]
+/// (s2n-codec's `EncoderValue` shape).
+pub trait EncoderValue {
+    fn encode(&self, buf: &mut EncoderBuffer<'_>);
+
+    /// Exact byte count `encode` will append — used to pre-size buffers
+    /// and to write length prefixes without backpatching where the size
+    /// is known up front.
+    fn encoded_len(&self) -> usize;
+}
+
+/// A value that decodes itself off a [`DecoderBuffer`], borrowing any
+/// bulk regions from the input (s2n-codec's `DecoderValue` shape).
+pub trait DecoderValue<'a>: Sized {
+    fn decode(buf: &mut DecoderBuffer<'a>) -> Result<Self, DecodeError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut bytes = Vec::new();
+        let mut e = EncoderBuffer::new(&mut bytes);
+        e.u8(7);
+        e.u16(0xBEEF);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX - 3);
+        e.f32(1.5);
+        e.f64(-std::f64::consts::PI);
+        e.bytes(&[1, 2, 3]);
+        assert_eq!(e.len(), 1 + 2 + 4 + 8 + 4 + 8 + 3);
+        let mut d = DecoderBuffer::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 0xBEEF);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.f32().unwrap(), 1.5);
+        assert_eq!(d.f64().unwrap().to_bits(), (-std::f64::consts::PI).to_bits());
+        assert_eq!(d.take(3).unwrap(), &[1, 2, 3]);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn take_is_zero_copy() {
+        let bytes = vec![9u8; 32];
+        let mut d = DecoderBuffer::new(&bytes);
+        let head = d.take(16).unwrap();
+        // same allocation: the decoded region is a sub-slice, not a copy
+        assert_eq!(head.as_ptr(), bytes.as_ptr());
+        assert_eq!(d.remaining(), 16);
+    }
+
+    #[test]
+    fn truncation_is_a_clean_error() {
+        let bytes = [1u8, 2, 3];
+        let mut d = DecoderBuffer::new(&bytes);
+        assert_eq!(
+            d.u64(),
+            Err(DecodeError::Truncated { needed: 5, have: 3 })
+        );
+        // a failed take consumes nothing
+        assert_eq!(d.remaining(), 3);
+        assert_eq!(d.u16().unwrap(), 0x0201);
+    }
+
+    #[test]
+    fn patch_u32_backpatches() {
+        let mut bytes = Vec::new();
+        let mut e = EncoderBuffer::new(&mut bytes);
+        e.u32(0); // placeholder
+        e.bytes(b"abc");
+        let len = (e.len() - 4) as u32;
+        e.patch_u32(0, len);
+        let mut d = DecoderBuffer::new(&bytes);
+        assert_eq!(d.u32().unwrap(), 3);
+    }
+
+    #[test]
+    fn reasons_are_static_and_stable() {
+        assert_eq!(
+            DecodeError::Truncated { needed: 1, have: 0 }.reason(),
+            "wire frame truncated"
+        );
+        assert_eq!(DecodeError::BadMagic(1).reason(), "wire frame has bad magic");
+        assert_eq!(DecodeError::BadTag(9).reason(), "wire frame has unknown tag");
+    }
+}

@@ -1,0 +1,84 @@
+//! Message-level fault plans for the wire transports.
+//!
+//! [`crate::sim`] injects *link-level* faults (delays, stragglers, pool
+//! kills, virtual timeouts) below the unmodified pool code. This module
+//! adds the faults that only exist once there are actual bytes: a
+//! truncated frame, a duplicated delivery, a peer whose connection
+//! drops mid-round. Like [`crate::sim::faults::FaultPlan`], a
+//! [`NetFaultPlan`] is pure data — the [`LoopbackLink`] consults it at
+//! each crossing with no RNG and no wall clock, so a faulted run
+//! replays identically everywhere.
+//!
+//! [`LoopbackLink`]: crate::net::loopback::LoopbackLink
+
+/// Deterministic message-fault schedule, consulted by
+/// [`LoopbackLink`](crate::net::loopback::LoopbackLink) as frames cross.
+/// `Default` is fault-free.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetFaultPlan {
+    /// Truncate the delta frame sent by `(shard, round)` to half its
+    /// length before decode — the receiver must surface a clean
+    /// [`DecodeError`](crate::net::codec::DecodeError), which the link
+    /// converts to `LinkFault::Protocol` → `StopReason::ShardFailed`.
+    pub truncate_at: Option<(usize, usize)>,
+    /// Deliver every delta frame of this round **twice**. Because delta
+    /// frames carry absolute chunk values (engine §Wire format), the
+    /// second apply must be a no-op: the solve stays bit-exact.
+    pub duplicate_round: Option<usize>,
+    /// Drop `(shard, round)`'s connection before its delta is sent —
+    /// the peer observes a dead link (`LinkFault::Poisoned`), and the
+    /// solve must end `ShardFailed`, never hang.
+    pub disconnect_at: Option<(usize, usize)>,
+}
+
+impl NetFaultPlan {
+    pub fn is_fault_free(&self) -> bool {
+        *self == NetFaultPlan::default()
+    }
+
+    /// Does `(shard, round)`'s outgoing delta frame get truncated?
+    pub fn truncates(&self, shard: usize, round: usize) -> bool {
+        self.truncate_at == Some((shard, round))
+    }
+
+    /// Are this round's delta frames delivered twice?
+    pub fn duplicates(&self, round: usize) -> bool {
+        self.duplicate_round == Some(round)
+    }
+
+    /// Does `(shard, round)` lose its connection at this crossing?
+    pub fn disconnects(&self, shard: usize, round: usize) -> bool {
+        self.disconnect_at == Some((shard, round))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_fault_free() {
+        let plan = NetFaultPlan::default();
+        assert!(plan.is_fault_free());
+        assert!(!plan.truncates(0, 0));
+        assert!(!plan.duplicates(0));
+        assert!(!plan.disconnects(0, 0));
+    }
+
+    #[test]
+    fn lookups_match_exact_coordinates() {
+        let plan = NetFaultPlan {
+            truncate_at: Some((1, 64)),
+            duplicate_round: Some(32),
+            disconnect_at: Some((0, 128)),
+        };
+        assert!(!plan.is_fault_free());
+        assert!(plan.truncates(1, 64));
+        assert!(!plan.truncates(1, 65));
+        assert!(!plan.truncates(0, 64));
+        assert!(plan.duplicates(32));
+        assert!(!plan.duplicates(33));
+        assert!(plan.disconnects(0, 128));
+        assert!(!plan.disconnects(1, 128));
+    }
+}

@@ -1,0 +1,642 @@
+//! Reconcile frame layout: the concrete bytes that cross the wire.
+//!
+//! The authoritative byte-by-byte specification lives in
+//! [`crate::shard::engine`] §Wire format — this module implements it
+//! and the round-trip property tests in `rust/tests/net_link.rs` cite
+//! it. Summary:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  = 0x47434431 ("GCD1", little-endian u32)
+//! 4       1     tag    (1 delta, 2 decision, 3 arrive, 4 release, 5 poison)
+//! 5       1     flags  (bit 0: 0 = exact f64 values, 1 = f32-quantized)
+//! 6       2     shard  (u16, sender's shard index)
+//! 8       8     round  (u64, reconcile round / crossing counter)
+//! 16      4     payload_len (u32, bytes after this field)
+//! 20      ...   payload
+//! ```
+//!
+//! A **delta** payload carries absolute dirty-chunk values (see
+//! §Wire format for why absolute, not incremental: redelivery is then
+//! idempotent). A **decision** payload carries the coordinator's fold
+//! verdict. The control tags (arrive/release/poison) have empty
+//! payloads and only exist on the TCP transport's control plane.
+
+use crate::coordinator::convergence::StopReason;
+use crate::net::codec::{DecodeError, DecoderBuffer, DecoderValue, EncoderBuffer, EncoderValue};
+use crate::util::par::DIRTY_CHUNK_ELEMS;
+
+/// Frame magic: `b"GCD1"` read as a little-endian u32. First bytes on
+/// the wire of every frame; anything else is not speaking our protocol.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"GCD1");
+
+/// Fixed header size: magic + tag + flags + shard + round + payload_len.
+pub const HEADER_LEN: usize = 20;
+
+/// Wire representation of the z-replica values inside delta frames.
+///
+/// `Exact` ships every f64 bit-for-bit, so a loopback solve is
+/// bit-identical to the in-memory `BarrierLink` protocol. `F32`
+/// quantizes each value through `f32` (half the delta bytes) at the
+/// cost of ~1e-7 relative error per crossing — an escape hatch from
+/// bit-exactness that trades reproducibility for bandwidth.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WirePrecision {
+    #[default]
+    Exact,
+    F32,
+}
+
+impl WirePrecision {
+    /// Config-file / CLI spelling (`wire_precision = "exact" | "f32"`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "exact" => Some(WirePrecision::Exact),
+            "f32" => Some(WirePrecision::F32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WirePrecision::Exact => "exact",
+            WirePrecision::F32 => "f32",
+        }
+    }
+
+    /// Bytes per encoded value.
+    pub fn elem_len(self) -> usize {
+        match self {
+            WirePrecision::Exact => 8,
+            WirePrecision::F32 => 4,
+        }
+    }
+
+    fn flags(self) -> u8 {
+        match self {
+            WirePrecision::Exact => 0,
+            WirePrecision::F32 => 1,
+        }
+    }
+}
+
+/// Frame discriminator (header byte 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameTag {
+    /// Dirty-chunk delta payload (shard → peers).
+    Delta = 1,
+    /// Coordinator fold decision (shard 0 → peers).
+    Decision = 2,
+    /// Control plane: "I reached crossing `round`" (TCP only).
+    Arrive = 3,
+    /// Control plane: "all parties arrived, proceed" (TCP only).
+    Release = 4,
+    /// Control plane: "a peer is dying, poison the exchange" (TCP only).
+    Poison = 5,
+}
+
+impl FrameTag {
+    fn from_u8(v: u8) -> Result<Self, DecodeError> {
+        match v {
+            1 => Ok(FrameTag::Delta),
+            2 => Ok(FrameTag::Decision),
+            3 => Ok(FrameTag::Arrive),
+            4 => Ok(FrameTag::Release),
+            5 => Ok(FrameTag::Poison),
+            other => Err(DecodeError::BadTag(other)),
+        }
+    }
+}
+
+/// Decoded frame header (bytes 0..20).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub tag: FrameTag,
+    pub precision: WirePrecision,
+    pub shard: u16,
+    pub round: u64,
+    pub payload_len: u32,
+}
+
+impl<'a> DecoderValue<'a> for FrameHeader {
+    fn decode(buf: &mut DecoderBuffer<'a>) -> Result<Self, DecodeError> {
+        let magic = buf.u32()?;
+        if magic != MAGIC {
+            return Err(DecodeError::BadMagic(magic));
+        }
+        let tag = FrameTag::from_u8(buf.u8()?)?;
+        let flags = buf.u8()?;
+        let precision = if flags & 1 == 0 {
+            WirePrecision::Exact
+        } else {
+            WirePrecision::F32
+        };
+        if flags & !1 != 0 {
+            return Err(DecodeError::BadValue("wire frame has unknown flag bits"));
+        }
+        let shard = buf.u16()?;
+        let round = buf.u64()?;
+        let payload_len = buf.u32()?;
+        Ok(FrameHeader {
+            tag,
+            precision,
+            shard,
+            round,
+            payload_len,
+        })
+    }
+}
+
+fn encode_header(
+    e: &mut EncoderBuffer<'_>,
+    tag: FrameTag,
+    precision: WirePrecision,
+    shard: usize,
+    round: u64,
+) -> usize {
+    assert!(shard <= u16::MAX as usize, "shard index exceeds wire u16");
+    e.u32(MAGIC);
+    e.u8(tag as u8);
+    e.u8(precision.flags());
+    e.u16(shard as u16);
+    e.u64(round);
+    let patch_at = e.len();
+    e.u32(0); // payload_len, backpatched by the caller
+    patch_at
+}
+
+/// Encode a control frame (empty payload) into `out`. Returns the
+/// frame's total byte length.
+pub fn encode_control(out: &mut Vec<u8>, tag: FrameTag, shard: usize, round: u64) -> usize {
+    debug_assert!(matches!(
+        tag,
+        FrameTag::Arrive | FrameTag::Release | FrameTag::Poison
+    ));
+    let start = out.len();
+    let mut e = EncoderBuffer::new(out);
+    let patch_at = encode_header(&mut e, tag, WirePrecision::Exact, shard, round);
+    e.patch_u32(patch_at, 0);
+    out.len() - start
+}
+
+/// Encode a delta frame: the dirty chunks of an `n`-element replica,
+/// absolute values, ascending chunk order.
+///
+/// `is_dirty(c)` answers for chunks `0..n_chunks` (chunk = 16
+/// consecutive f64s, [`DIRTY_CHUNK_ELEMS`]); `value(i)` reads element
+/// `i` of the replica. A dense exchange (no dirty tracking) passes
+/// `|_| true`. Returns the frame's total byte length.
+pub fn encode_delta(
+    out: &mut Vec<u8>,
+    shard: usize,
+    round: u64,
+    precision: WirePrecision,
+    n: usize,
+    is_dirty: impl Fn(usize) -> bool,
+    value: impl Fn(usize) -> f64,
+) -> usize {
+    let start = out.len();
+    let n_chunks = n.div_ceil(DIRTY_CHUNK_ELEMS);
+    assert!(n_chunks <= u32::MAX as usize, "replica exceeds wire chunk count");
+    let mut e = EncoderBuffer::new(out);
+    let patch_at = encode_header(&mut e, FrameTag::Delta, precision, shard, round);
+    let payload_start = e.len();
+    e.u64(n as u64);
+    e.u32(n_chunks as u32);
+    let n_dirty_at = e.len();
+    e.u32(0); // n_dirty, backpatched below
+    // bitmap: one bit per chunk, little-endian u64 words, trailing bits 0
+    let words = n_chunks.div_ceil(64);
+    let mut n_dirty = 0u32;
+    for w in 0..words {
+        let mut bits = 0u64;
+        for b in 0..64 {
+            let c = w * 64 + b;
+            if c < n_chunks && is_dirty(c) {
+                bits |= 1 << b;
+                n_dirty += 1;
+            }
+        }
+        e.u64(bits);
+    }
+    e.patch_u32(n_dirty_at, n_dirty);
+    // packed chunks, ascending; the last chunk truncates to n
+    for c in 0..n_chunks {
+        if !is_dirty(c) {
+            continue;
+        }
+        let base = c * DIRTY_CHUNK_ELEMS;
+        let end = (base + DIRTY_CHUNK_ELEMS).min(n);
+        for i in base..end {
+            match precision {
+                WirePrecision::Exact => e.f64(value(i)),
+                WirePrecision::F32 => e.f32(value(i) as f32),
+            }
+        }
+    }
+    let payload_len = e.len() - payload_start;
+    assert!(payload_len <= u32::MAX as usize, "delta payload exceeds wire u32");
+    e.patch_u32(patch_at, payload_len as u32);
+    out.len() - start
+}
+
+/// A decoded delta frame, borrowing its bitmap and chunk bytes from the
+/// input buffer (zero-copy; values are only materialized by [`apply`]).
+///
+/// [`apply`]: DeltaFrameRef::apply
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaFrameRef<'a> {
+    pub shard: u16,
+    pub round: u64,
+    pub precision: WirePrecision,
+    /// Replica length in elements.
+    pub n: usize,
+    /// Total chunks (`ceil(n / 16)`).
+    pub n_chunks: usize,
+    /// Dirty chunks actually carried.
+    pub n_dirty: usize,
+    bitmap: &'a [u8],
+    chunks: &'a [u8],
+}
+
+impl<'a> DeltaFrameRef<'a> {
+    /// Whether chunk `c` is present in this frame.
+    pub fn is_dirty(&self, c: usize) -> bool {
+        if c >= self.n_chunks {
+            return false;
+        }
+        let word = u64::from_le_bytes(self.bitmap[c / 64 * 8..c / 64 * 8 + 8].try_into().unwrap());
+        word >> (c % 64) & 1 == 1
+    }
+
+    /// Invoke `set(i, v)` for every element of every carried chunk, in
+    /// ascending element order. Values are absolute replica contents —
+    /// applying the same frame twice is a no-op the second time, which
+    /// is what makes duplicate delivery harmless.
+    pub fn apply(&self, mut set: impl FnMut(usize, f64)) {
+        let elem = self.precision.elem_len();
+        let mut off = 0usize;
+        for c in 0..self.n_chunks {
+            if !self.is_dirty(c) {
+                continue;
+            }
+            let base = c * DIRTY_CHUNK_ELEMS;
+            let end = (base + DIRTY_CHUNK_ELEMS).min(self.n);
+            for i in base..end {
+                let v = match self.precision {
+                    WirePrecision::Exact => {
+                        f64::from_le_bytes(self.chunks[off..off + 8].try_into().unwrap())
+                    }
+                    WirePrecision::F32 => {
+                        f32::from_le_bytes(self.chunks[off..off + 4].try_into().unwrap()) as f64
+                    }
+                };
+                set(i, v);
+                off += elem;
+            }
+        }
+        debug_assert_eq!(off, self.chunks.len());
+    }
+
+    fn decode_payload(
+        header: &FrameHeader,
+        buf: &mut DecoderBuffer<'a>,
+    ) -> Result<Self, DecodeError> {
+        let n64 = buf.u64()?;
+        let n: usize = n64
+            .try_into()
+            .map_err(|_| DecodeError::BadValue("delta replica length overflows usize"))?;
+        let n_chunks = buf.u32()? as usize;
+        if n_chunks != n.div_ceil(DIRTY_CHUNK_ELEMS) {
+            return Err(DecodeError::BadLength);
+        }
+        let n_dirty = buf.u32()? as usize;
+        if n_dirty > n_chunks {
+            return Err(DecodeError::BadLength);
+        }
+        let words = n_chunks.div_ceil(64);
+        let bitmap = buf.take(words * 8)?;
+        // validate: popcount matches n_dirty, no bits past n_chunks
+        let mut pop = 0usize;
+        for (w, word_bytes) in bitmap.chunks_exact(8).enumerate() {
+            let word = u64::from_le_bytes(word_bytes.try_into().unwrap());
+            let valid = n_chunks - (w * 64).min(n_chunks);
+            let mask = if valid >= 64 { u64::MAX } else { (1u64 << valid) - 1 };
+            if word & !mask != 0 {
+                return Err(DecodeError::BadValue("delta bitmap has bits past chunk count"));
+            }
+            pop += word.count_ones() as usize;
+        }
+        if pop != n_dirty {
+            return Err(DecodeError::BadLength);
+        }
+        // total carried elements: full chunks, except a possibly short tail
+        let frame = DeltaFrameRef {
+            shard: header.shard,
+            round: header.round,
+            precision: header.precision,
+            n,
+            n_chunks,
+            n_dirty,
+            bitmap,
+            chunks: &[],
+        };
+        let mut elems = 0usize;
+        for c in 0..n_chunks {
+            if frame.is_dirty(c) {
+                let base = c * DIRTY_CHUNK_ELEMS;
+                elems += (base + DIRTY_CHUNK_ELEMS).min(n) - base;
+            }
+        }
+        let chunks = buf.take(elems * header.precision.elem_len())?;
+        if !buf.is_empty() {
+            return Err(DecodeError::BadLength);
+        }
+        Ok(DeltaFrameRef { chunks, ..frame })
+    }
+}
+
+/// The coordinator's fold decision, mirrored onto the wire so every
+/// pool acts on exactly the bytes that crossed (not on shared memory
+/// the wire never saw).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecisionRecord {
+    /// Reconcile round the decision belongs to (echoes the header round).
+    pub round: u64,
+    /// Iterations until the next reconcile (adaptive cadence output).
+    pub next_gap: u64,
+    /// Stop verdict, if the coordinator called the solve.
+    pub stop: Option<StopReason>,
+}
+
+// StopReason wire codes (§Wire format): 0 reserved for "no stop".
+fn stop_to_code(stop: Option<StopReason>) -> u8 {
+    match stop {
+        None => 0,
+        Some(StopReason::MaxIters) => 1,
+        Some(StopReason::MaxSeconds) => 2,
+        Some(StopReason::Tolerance) => 3,
+        Some(StopReason::Diverged) => 4,
+        Some(StopReason::Observer) => 5,
+        Some(StopReason::Converged) => 6,
+        Some(StopReason::ShardFailed) => 7,
+    }
+}
+
+fn stop_from_code(code: u8) -> Result<Option<StopReason>, DecodeError> {
+    Ok(match code {
+        0 => None,
+        1 => Some(StopReason::MaxIters),
+        2 => Some(StopReason::MaxSeconds),
+        3 => Some(StopReason::Tolerance),
+        4 => Some(StopReason::Diverged),
+        5 => Some(StopReason::Observer),
+        6 => Some(StopReason::Converged),
+        7 => Some(StopReason::ShardFailed),
+        _ => return Err(DecodeError::BadValue("decision frame has unknown stop code")),
+    })
+}
+
+impl EncoderValue for DecisionRecord {
+    fn encode(&self, buf: &mut EncoderBuffer<'_>) {
+        buf.u64(self.round);
+        buf.u64(self.next_gap);
+        buf.u8(stop_to_code(self.stop));
+    }
+
+    fn encoded_len(&self) -> usize {
+        8 + 8 + 1
+    }
+}
+
+impl<'a> DecoderValue<'a> for DecisionRecord {
+    fn decode(buf: &mut DecoderBuffer<'a>) -> Result<Self, DecodeError> {
+        let round = buf.u64()?;
+        let next_gap = buf.u64()?;
+        let stop = stop_from_code(buf.u8()?)?;
+        Ok(DecisionRecord {
+            round,
+            next_gap,
+            stop,
+        })
+    }
+}
+
+/// Encode a decision frame. Returns the frame's total byte length.
+pub fn encode_decision(out: &mut Vec<u8>, shard: usize, rec: &DecisionRecord) -> usize {
+    let start = out.len();
+    let mut e = EncoderBuffer::new(out);
+    let patch_at = encode_header(&mut e, FrameTag::Decision, WirePrecision::Exact, shard, rec.round);
+    rec.encode(&mut e);
+    e.patch_u32(patch_at, rec.encoded_len() as u32);
+    out.len() - start
+}
+
+/// A fully decoded frame, payload borrowed from the input.
+#[derive(Clone, Copy, Debug)]
+pub enum Frame<'a> {
+    Delta(DeltaFrameRef<'a>),
+    Decision { shard: u16, record: DecisionRecord },
+    Control { tag: FrameTag, shard: u16, round: u64 },
+}
+
+/// Decode one complete frame from `bytes`. The slice must contain
+/// exactly one frame (header + declared payload, nothing after) — the
+/// transports read the 20-byte header first, then `payload_len` more
+/// bytes, and hand the whole region here. Any malformation is a clean
+/// [`DecodeError`]; this function never panics on untrusted input.
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame<'_>, DecodeError> {
+    let mut buf = DecoderBuffer::new(bytes);
+    let header = FrameHeader::decode(&mut buf)?;
+    if buf.remaining() != header.payload_len as usize {
+        return Err(DecodeError::BadLength);
+    }
+    match header.tag {
+        FrameTag::Delta => Ok(Frame::Delta(DeltaFrameRef::decode_payload(&header, &mut buf)?)),
+        FrameTag::Decision => {
+            let record = DecisionRecord::decode(&mut buf)?;
+            if !buf.is_empty() {
+                return Err(DecodeError::BadLength);
+            }
+            Ok(Frame::Decision {
+                shard: header.shard,
+                record,
+            })
+        }
+        tag @ (FrameTag::Arrive | FrameTag::Release | FrameTag::Poison) => {
+            if header.payload_len != 0 {
+                return Err(DecodeError::BadLength);
+            }
+            Ok(Frame::Control {
+                tag,
+                shard: header.shard,
+                round: header.round,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_delta(
+        n: usize,
+        dirty: &[usize],
+        precision: WirePrecision,
+    ) -> (Vec<u8>, Vec<(usize, f64)>) {
+        let mut out = Vec::new();
+        let len = encode_delta(
+            &mut out,
+            3,
+            41,
+            precision,
+            n,
+            |c| dirty.contains(&c),
+            |i| i as f64 * 0.5 - 7.0,
+        );
+        assert_eq!(len, out.len());
+        let frame = match decode_frame(&out).unwrap() {
+            Frame::Delta(d) => d,
+            other => panic!("expected delta, got {other:?}"),
+        };
+        assert_eq!(frame.shard, 3);
+        assert_eq!(frame.round, 41);
+        assert_eq!(frame.n, n);
+        assert_eq!(frame.n_dirty, dirty.len());
+        let mut got = Vec::new();
+        frame.apply(|i, v| got.push((i, v)));
+        (out, got)
+    }
+
+    #[test]
+    fn delta_round_trip_exact() {
+        let (_, got) = roundtrip_delta(40, &[0, 2], WirePrecision::Exact);
+        // chunk 0 = elems 0..16, chunk 2 = elems 32..40 (short tail)
+        assert_eq!(got.len(), 16 + 8);
+        assert_eq!(got[0], (0, -7.0));
+        assert_eq!(got[16], (32, 32.0 * 0.5 - 7.0));
+        assert_eq!(got.last().unwrap().0, 39);
+    }
+
+    #[test]
+    fn delta_round_trip_empty_and_dense() {
+        let (_, got) = roundtrip_delta(33, &[], WirePrecision::Exact);
+        assert!(got.is_empty());
+        let (_, got) = roundtrip_delta(33, &[0, 1, 2], WirePrecision::Exact);
+        assert_eq!(got.len(), 33);
+    }
+
+    #[test]
+    fn delta_f32_quantizes() {
+        let mut out = Vec::new();
+        encode_delta(&mut out, 0, 0, WirePrecision::F32, 4, |_| true, |_| {
+            std::f64::consts::PI
+        });
+        let frame = match decode_frame(&out).unwrap() {
+            Frame::Delta(d) => d,
+            _ => unreachable!(),
+        };
+        let mut v = 0.0;
+        frame.apply(|_, x| v = x);
+        assert_eq!(v, std::f64::consts::PI as f32 as f64);
+        assert_ne!(v, std::f64::consts::PI);
+    }
+
+    #[test]
+    fn decision_round_trip() {
+        for stop in [
+            None,
+            Some(StopReason::Converged),
+            Some(StopReason::ShardFailed),
+            Some(StopReason::MaxIters),
+        ] {
+            let rec = DecisionRecord {
+                round: 9,
+                next_gap: 128,
+                stop,
+            };
+            let mut out = Vec::new();
+            encode_decision(&mut out, 0, &rec);
+            match decode_frame(&out).unwrap() {
+                Frame::Decision { shard: 0, record } => assert_eq!(record, rec),
+                other => panic!("expected decision, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn control_round_trip() {
+        let mut out = Vec::new();
+        encode_control(&mut out, FrameTag::Arrive, 7, 1234);
+        assert_eq!(out.len(), HEADER_LEN);
+        match decode_frame(&out).unwrap() {
+            Frame::Control {
+                tag: FrameTag::Arrive,
+                shard: 7,
+                round: 1234,
+            } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_clean_error() {
+        let mut out = Vec::new();
+        encode_delta(&mut out, 1, 5, WirePrecision::Exact, 40, |c| c != 1, |i| i as f64);
+        for cut in 0..out.len() {
+            let err = decode_frame(&out[..cut]).unwrap_err();
+            // any prefix decodes to an error, never a panic
+            let _ = err.reason();
+        }
+    }
+
+    #[test]
+    fn corrupted_fields_are_rejected() {
+        let mut out = Vec::new();
+        encode_delta(&mut out, 0, 1, WirePrecision::Exact, 32, |_| true, |i| i as f64);
+
+        let mut bad = out.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_frame(&bad), Err(DecodeError::BadMagic(_))));
+
+        let mut bad = out.clone();
+        bad[4] = 99;
+        assert!(matches!(decode_frame(&bad), Err(DecodeError::BadTag(99))));
+
+        let mut bad = out.clone();
+        bad[5] = 0x80; // unknown flag bit
+        assert!(matches!(decode_frame(&bad), Err(DecodeError::BadValue(_))));
+
+        // declared n_dirty disagrees with the bitmap popcount
+        let mut bad = out.clone();
+        bad[HEADER_LEN + 12] ^= 1;
+        assert!(matches!(decode_frame(&bad), Err(DecodeError::BadLength)));
+
+        // trailing garbage after a complete frame
+        let mut bad = out.clone();
+        bad.push(0);
+        assert!(matches!(decode_frame(&bad), Err(DecodeError::BadLength)));
+    }
+
+    #[test]
+    fn bitmap_bits_past_chunk_count_rejected() {
+        let mut out = Vec::new();
+        encode_delta(&mut out, 0, 0, WirePrecision::Exact, 20, |_| false, |_| 0.0);
+        // n=20 → 2 chunks, 1 bitmap word at payload offset 16; set bit 2
+        let bm_at = HEADER_LEN + 16;
+        let mut bad = out.clone();
+        bad[bm_at] |= 0b100;
+        assert!(matches!(decode_frame(&bad), Err(DecodeError::BadValue(_))));
+    }
+
+    #[test]
+    fn precision_names() {
+        assert_eq!(WirePrecision::by_name("exact"), Some(WirePrecision::Exact));
+        assert_eq!(WirePrecision::by_name("f32"), Some(WirePrecision::F32));
+        assert_eq!(WirePrecision::by_name("f16"), None);
+        assert_eq!(WirePrecision::Exact.name(), "exact");
+        assert_eq!(WirePrecision::F32.name(), "f32");
+    }
+}

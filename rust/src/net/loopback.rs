@@ -1,0 +1,327 @@
+//! In-process wire transport: the full frame protocol with zero sockets.
+//!
+//! [`LoopbackLink`] layers the wire codec over any inner
+//! [`ReconcileLink`] (the production [`BarrierLink`] by default, or
+//! [`SimLink`](crate::sim::SimLink) to compose message-level faults
+//! with link-level ones). Every reconcile exchange is routed through a
+//! full **encode → frame → decode → apply** round trip on real bytes —
+//! exactly what [`TcpLink`](crate::net::tcp::TcpLink) ships over a
+//! socket — so `cargo test -q` exercises the complete protocol
+//! deterministically and with no network.
+//!
+//! Under `wire_precision = exact` the round trip writes back the same
+//! f64 bits it read, so a loopback solve is **bit-identical** to the
+//! same solve on the inner link (pinned by `rust/tests/net_link.rs`).
+//! Under `f32` the values every fold sees are quantized through the
+//! wire format, reproducing a bandwidth-saving lossy transport inside
+//! one process.
+//!
+//! A [`NetFaultPlan`] injects the failures only bytes can have —
+//! truncated frames, duplicate delivery, mid-round disconnects — at
+//! exact `(shard, round)` coordinates, with the same degrade-never-hang
+//! contract as every other link fault.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::net::fault::NetFaultPlan;
+use crate::net::frame::{self, DecisionRecord, Frame, WirePrecision};
+use crate::shard::engine::{
+    BarrierLink, DecisionPayload, DeltaPayload, LinkFault, ReconcileLink, WireCost,
+};
+use crate::util::par::CachePadded;
+
+/// A [`ReconcileLink`] that serializes every exchange through the wire
+/// codec while delegating the barrier crossings to an inner link. See
+/// the module docs.
+pub struct LoopbackLink<L: ReconcileLink = BarrierLink> {
+    inner: L,
+    precision: WirePrecision,
+    faults: NetFaultPlan,
+    /// Per-shard encode buffers (padded: each shard's leader reuses its
+    /// own lane every round, no cross-shard contention).
+    lanes: Vec<CachePadded<Mutex<Vec<u8>>>>,
+}
+
+impl LoopbackLink<BarrierLink> {
+    /// Loopback over the production barrier protocol: `parties` shards,
+    /// the given spin budget and per-crossing timeout (`None` =
+    /// effectively forever) — the same signature as
+    /// [`BarrierLink::new`].
+    pub fn new(
+        parties: usize,
+        spin: u32,
+        timeout: Option<Duration>,
+        precision: WirePrecision,
+    ) -> Self {
+        Self::over(BarrierLink::new(parties, spin, timeout), parties, precision)
+    }
+}
+
+impl<L: ReconcileLink> LoopbackLink<L> {
+    /// Loopback over an arbitrary inner link (e.g.
+    /// [`SimLink`](crate::sim::SimLink), composing the scenario corpus
+    /// with the wire protocol).
+    pub fn over(inner: L, parties: usize, precision: WirePrecision) -> Self {
+        Self {
+            inner,
+            precision,
+            faults: NetFaultPlan::default(),
+            lanes: (0..parties.max(1))
+                .map(|_| CachePadded::new(Mutex::new(Vec::new())))
+                .collect(),
+        }
+    }
+
+    /// Attach a message-fault schedule.
+    pub fn with_faults(mut self, faults: NetFaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// The inner link (e.g. to read a [`SimLink`](crate::sim::SimLink)
+    /// event log after the solve).
+    pub fn inner(&self) -> &L {
+        &self.inner
+    }
+
+    fn lane(&self, s: usize) -> std::sync::MutexGuard<'_, Vec<u8>> {
+        self.lanes[s].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn protocol_fault(&self, reason: &'static str) -> LinkFault {
+        // a malformed frame dooms the exchange for everyone: poison so
+        // peers escape their crossings instead of waiting on us
+        self.inner.poison();
+        LinkFault::Protocol(reason)
+    }
+}
+
+impl<L: ReconcileLink> ReconcileLink for LoopbackLink<L> {
+    fn init(&self, s: usize) -> Result<(), LinkFault> {
+        self.inner.init(s)
+    }
+
+    fn arrive(&self, s: usize, round: usize) -> Result<(), LinkFault> {
+        self.inner.arrive(s, round)
+    }
+
+    fn publish_fold(&self, s: usize, round: usize) -> Result<(), LinkFault> {
+        self.inner.publish_fold(s, round)
+    }
+
+    fn publish_decision(&self, s: usize, round: usize) -> Result<(), LinkFault> {
+        self.inner.publish_decision(s, round)
+    }
+
+    fn fold_order(&self, s: usize, round: usize, shards: usize) -> Vec<usize> {
+        self.inner.fold_order(s, round, shards)
+    }
+
+    fn poison(&self) {
+        self.inner.poison();
+    }
+
+    fn wire_delta(&self, s: usize, payload: &DeltaPayload<'_>) -> Result<WireCost, LinkFault> {
+        let t0 = Instant::now();
+        let z = payload.z;
+        let mut lane = self.lane(s);
+        lane.clear();
+        let tx = match payload.dirty {
+            Some(d) => frame::encode_delta(
+                &mut lane,
+                s,
+                payload.round as u64,
+                self.precision,
+                payload.n,
+                |c| d.is_dirty(c),
+                |i| z.get(i),
+            ),
+            // dense exchange: every chunk is implicitly dirty
+            None => frame::encode_delta(
+                &mut lane,
+                s,
+                payload.round as u64,
+                self.precision,
+                payload.n,
+                |_| true,
+                |i| z.get(i),
+            ),
+        };
+        if self.faults.disconnects(s, payload.round) {
+            // the connection died before the frame left: peers see a
+            // dead link, we report it as such
+            self.inner.poison();
+            return Err(LinkFault::Poisoned);
+        }
+        let wire: &[u8] = if self.faults.truncates(s, payload.round) {
+            &lane[..tx / 2]
+        } else {
+            &lane
+        };
+        let deliveries = if self.faults.duplicates(payload.round) {
+            2 // absolute chunk values make the second apply a no-op
+        } else {
+            1
+        };
+        let mut rx = 0u64;
+        for _ in 0..deliveries {
+            match frame::decode_frame(wire) {
+                Ok(Frame::Delta(d)) => {
+                    debug_assert_eq!(d.shard as usize, s);
+                    debug_assert_eq!(d.round, payload.round as u64);
+                    d.apply(|i, v| z.set(i, v));
+                    rx += wire.len() as u64;
+                }
+                Ok(_) => return Err(self.protocol_fault("delta exchange received a non-delta frame")),
+                Err(e) => return Err(self.protocol_fault(e.reason())),
+            }
+        }
+        Ok(WireCost {
+            bytes_tx: tx as u64,
+            bytes_rx: rx,
+            nanos: t0.elapsed().as_nanos() as u64,
+        })
+    }
+
+    fn wire_decision(&self, s: usize, payload: &mut DecisionPayload) -> Result<WireCost, LinkFault> {
+        let t0 = Instant::now();
+        let mut lane = self.lane(s);
+        lane.clear();
+        let rec = DecisionRecord {
+            round: payload.round as u64,
+            next_gap: payload.next_gap as u64,
+            stop: payload.stop,
+        };
+        let tx = frame::encode_decision(&mut lane, s, &rec);
+        match frame::decode_frame(&lane) {
+            Ok(Frame::Decision { record, .. }) => {
+                payload.next_gap = record.next_gap as usize;
+                payload.stop = record.stop;
+                Ok(WireCost {
+                    bytes_tx: tx as u64,
+                    bytes_rx: tx as u64,
+                    nanos: t0.elapsed().as_nanos() as u64,
+                })
+            }
+            Ok(_) => Err(self.protocol_fault("decision exchange received a non-decision frame")),
+            Err(e) => Err(self.protocol_fault(e.reason())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::atomic::SyncF64Vec;
+    use crate::util::par::{DirtyChunks, DEFAULT_SPIN};
+
+    fn payload_of<'a>(
+        z: &'a SyncF64Vec,
+        dirty: Option<&'a DirtyChunks>,
+        round: usize,
+    ) -> DeltaPayload<'a> {
+        DeltaPayload {
+            round,
+            dirty,
+            z,
+            n: z.len(),
+        }
+    }
+
+    #[test]
+    fn exact_round_trip_is_bit_identical() {
+        let link = LoopbackLink::new(1, DEFAULT_SPIN, None, WirePrecision::Exact);
+        let z = SyncF64Vec::zeros(40);
+        for i in 0..40 {
+            z.set(i, (i as f64).sin() * 1e-3);
+        }
+        let before: Vec<u64> = (0..40).map(|i| z.get(i).to_bits()).collect();
+        let cost = link.wire_delta(0, &payload_of(&z, None, 0)).unwrap();
+        let after: Vec<u64> = (0..40).map(|i| z.get(i).to_bits()).collect();
+        assert_eq!(before, after);
+        assert!(cost.bytes_tx > 0);
+        assert_eq!(cost.bytes_rx, cost.bytes_tx);
+    }
+
+    #[test]
+    fn dirty_map_limits_the_frame() {
+        let link = LoopbackLink::new(1, DEFAULT_SPIN, None, WirePrecision::Exact);
+        let z = SyncF64Vec::zeros(64);
+        let dirty = DirtyChunks::new(64);
+        dirty.mark(3); // element 3 → chunk 0 only
+        z.set(3, 2.5);
+        let sparse = link.wire_delta(0, &payload_of(&z, Some(&dirty), 0)).unwrap();
+        let dense = link.wire_delta(0, &payload_of(&z, None, 0)).unwrap();
+        assert!(sparse.bytes_tx < dense.bytes_tx);
+        assert_eq!(z.get(3), 2.5);
+    }
+
+    #[test]
+    fn f32_round_trip_quantizes() {
+        let link = LoopbackLink::new(1, DEFAULT_SPIN, None, WirePrecision::F32);
+        let z = SyncF64Vec::zeros(8);
+        z.set(0, std::f64::consts::PI);
+        link.wire_delta(0, &payload_of(&z, None, 0)).unwrap();
+        assert_eq!(z.get(0), std::f64::consts::PI as f32 as f64);
+    }
+
+    #[test]
+    fn truncation_fault_is_a_protocol_error() {
+        let link = LoopbackLink::new(1, DEFAULT_SPIN, None, WirePrecision::Exact)
+            .with_faults(NetFaultPlan {
+                truncate_at: Some((0, 4)),
+                ..Default::default()
+            });
+        let z = SyncF64Vec::zeros(8);
+        assert!(link.wire_delta(0, &payload_of(&z, None, 3)).is_ok());
+        match link.wire_delta(0, &payload_of(&z, None, 4)) {
+            Err(LinkFault::Protocol(_)) => {}
+            other => panic!("expected protocol fault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_delivery_is_idempotent() {
+        let link = LoopbackLink::new(1, DEFAULT_SPIN, None, WirePrecision::Exact)
+            .with_faults(NetFaultPlan {
+                duplicate_round: Some(0),
+                ..Default::default()
+            });
+        let z = SyncF64Vec::zeros(8);
+        z.set(1, -4.25);
+        let cost = link.wire_delta(0, &payload_of(&z, None, 0)).unwrap();
+        assert_eq!(cost.bytes_rx, 2 * cost.bytes_tx);
+        assert_eq!(z.get(1), -4.25);
+    }
+
+    #[test]
+    fn disconnect_fault_poisons() {
+        let link = LoopbackLink::new(2, DEFAULT_SPIN, None, WirePrecision::Exact)
+            .with_faults(NetFaultPlan {
+                disconnect_at: Some((1, 2)),
+                ..Default::default()
+            });
+        let z = SyncF64Vec::zeros(8);
+        assert!(matches!(
+            link.wire_delta(1, &payload_of(&z, None, 2)),
+            Err(LinkFault::Poisoned)
+        ));
+        // the inner barrier is now poisoned: the healthy peer escapes
+        assert_eq!(link.arrive(0, 2), Err(LinkFault::Poisoned));
+    }
+
+    #[test]
+    fn decision_round_trip() {
+        let link = LoopbackLink::new(1, DEFAULT_SPIN, None, WirePrecision::Exact);
+        let mut payload = DecisionPayload {
+            round: 7,
+            next_gap: 32,
+            stop: None,
+        };
+        let cost = link.wire_decision(0, &mut payload).unwrap();
+        assert_eq!(payload.next_gap, 32);
+        assert_eq!(payload.stop, None);
+        assert_eq!(cost.bytes_tx, cost.bytes_rx);
+    }
+}

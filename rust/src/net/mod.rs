@@ -1,0 +1,138 @@
+//! Distributed reconcile backends speaking the
+//! [`ReconcileLink`](crate::shard::engine::ReconcileLink) contract.
+//!
+//! PR 5 made the dirty-chunk delta exchange literally the wire payload;
+//! PR 6 put the exchange behind the `ReconcileLink` seam and gave it a
+//! fault-scenario corpus. This module is the wire itself:
+//!
+//! * [`codec`] — zero-copy encode/decode primitives in the style of
+//!   s2n-codec's `EncoderValue`/`DecoderValue`: borrowed buffers, typed
+//!   [`DecodeError`](codec::DecodeError)s, no panics on untrusted
+//!   bytes.
+//! * [`frame`] — the length-prefixed reconcile frames (delta with
+//!   dirty-chunk bitmap, fold-decision record, control plane), byte
+//!   layout specified in [`crate::shard::engine`] §Wire format, with
+//!   an f32-quantized mode behind the
+//!   [`WirePrecision`](frame::WirePrecision) bit-exactness escape
+//!   hatch.
+//! * [`fault`] — deterministic message-level fault plans (frame
+//!   truncation, duplicate delivery, mid-round disconnect).
+//! * [`loopback`] — [`LoopbackLink`]: the full encode→frame→decode
+//!   protocol in-process, so `cargo test -q` exercises every wire path
+//!   with zero sockets; composes over
+//!   [`SimLink`](crate::sim::SimLink) to run the scenario corpus
+//!   through the codec.
+//! * [`tcp`] — [`TcpLink`]: blocking `std::net` transport (coordinator
+//!   relay + N shard peers) with `barrier_timeout_secs` mapped onto
+//!   socket deadlines; every failure mode is a clean
+//!   [`LinkFault`](crate::shard::engine::LinkFault), never a hang.
+//!
+//! Select a backend with [`Transport`] —
+//! [`SolverBuilder::transport`](crate::solver::SolverBuilder::transport),
+//! `solver.transport` in TOML, or `--transport` on the CLI.
+
+pub mod codec;
+pub mod fault;
+pub mod frame;
+pub mod loopback;
+pub mod tcp;
+
+pub use codec::{DecodeError, DecoderBuffer, DecoderValue, EncoderBuffer, EncoderValue};
+pub use fault::NetFaultPlan;
+pub use frame::{decode_frame, DecisionRecord, DeltaFrameRef, Frame, FrameTag, WirePrecision};
+pub use loopback::LoopbackLink;
+pub use tcp::TcpLink;
+
+/// Which reconcile backend a sharded solve runs over. Configured via
+/// [`SolverBuilder::transport`](crate::solver::SolverBuilder::transport)
+/// (validated at `build()`), `solver.transport` in TOML, or
+/// `--transport` on the CLI.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum Transport {
+    /// The in-memory SpinBarrier protocol
+    /// ([`BarrierLink`](crate::shard::engine::BarrierLink)) — the
+    /// production default, bit-exact with the pre-seam engine.
+    #[default]
+    Barrier,
+    /// The in-process wire protocol ([`LoopbackLink`]): every exchange
+    /// through full encode→frame→decode, zero sockets. Bit-exact with
+    /// `Barrier` under [`WirePrecision::Exact`].
+    Loopback { precision: WirePrecision },
+    /// Localhost/LAN TCP ([`TcpLink`]): coordinator relay at `listen`,
+    /// shard `s` dialing `peers[min(s, len-1)]` (or `listen`'s bound
+    /// address when `peers` is empty).
+    Tcp {
+        listen: String,
+        peers: Vec<String>,
+        precision: WirePrecision,
+    },
+}
+
+impl Transport {
+    /// Canonical name, as accepted by `solver.transport`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Barrier => "barrier",
+            Transport::Loopback { .. } => "loopback",
+            Transport::Tcp { .. } => "tcp",
+        }
+    }
+
+    /// Build a transport from the config-file string knobs
+    /// (`solver.{transport, listen, peers, wire_precision}`). `peers`
+    /// is comma-separated; empty entries are dropped. Returns `None`
+    /// for an unknown transport or precision name.
+    pub fn from_config(
+        transport: &str,
+        listen: &str,
+        peers: &str,
+        wire_precision: &str,
+    ) -> Option<Self> {
+        let precision = WirePrecision::by_name(wire_precision)?;
+        match transport {
+            "barrier" => Some(Transport::Barrier),
+            "loopback" => Some(Transport::Loopback { precision }),
+            "tcp" => Some(Transport::Tcp {
+                listen: listen.to_string(),
+                peers: peers
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|p| !p.is_empty())
+                    .map(str::to_string)
+                    .collect(),
+                precision,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_from_config() {
+        assert_eq!(
+            Transport::from_config("barrier", "", "", "exact"),
+            Some(Transport::Barrier)
+        );
+        assert_eq!(
+            Transport::from_config("loopback", "", "", "f32"),
+            Some(Transport::Loopback {
+                precision: WirePrecision::F32
+            })
+        );
+        assert_eq!(
+            Transport::from_config("tcp", "127.0.0.1:0", " a:1, ,b:2 ", "exact"),
+            Some(Transport::Tcp {
+                listen: "127.0.0.1:0".into(),
+                peers: vec!["a:1".into(), "b:2".into()],
+                precision: WirePrecision::Exact
+            })
+        );
+        assert_eq!(Transport::from_config("udp", "", "", "exact"), None);
+        assert_eq!(Transport::from_config("barrier", "", "", "f16"), None);
+        assert_eq!(Transport::default().name(), "barrier");
+    }
+}

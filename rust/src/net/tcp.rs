@@ -1,0 +1,648 @@
+//! Blocking TCP transport for the reconcile protocol.
+//!
+//! Topology: one **coordinator relay** (a listener plus one handler
+//! thread per connection) and N shard peers, each holding one
+//! `std::net::TcpStream`. The relay is the barrier: shards announce a
+//! crossing with an `arrive` control frame, the relay counts arrivals
+//! per crossing id and broadcasts `release` when all parties are in;
+//! data frames (delta, decision) are routed through the relay and
+//! echoed back decoded-side. Read/write deadlines map the engine's
+//! `barrier_timeout_secs` onto socket timeouts, so **every** failure
+//! mode — peer gone, connection reset, deadline exceeded, malformed
+//! bytes — lands as a [`LinkFault`] (`TimedOut`, `Poisoned`, or
+//! `Protocol`) and from there as `StopReason::ShardFailed` + a
+//! structured `SolveError`. Never a hang: a faulted shard shuts its
+//! socket down on the way out, the relay sees the close and broadcasts
+//! `poison`, and every blocked peer unblocks.
+//!
+//! **v1 scope, stated honestly:** this link runs the shard pools in one
+//! process with TCP as the *message plane* — every crossing and every
+//! exchanged byte really traverses localhost sockets through the relay,
+//! which is what the protocol, deadline, and failure machinery need
+//! exercised — but the fold itself still reads replicas through shared
+//! memory after the decoded bytes are written back. Splitting the data
+//! plane across processes (replica state living only behind the wire)
+//! is the recorded follow-on, along with double-buffered
+//! compute/exchange overlap.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::net::frame::{
+    self, decode_frame, DecisionRecord, Frame, FrameTag, WirePrecision, HEADER_LEN,
+};
+use crate::shard::engine::{
+    DecisionPayload, DeltaPayload, LinkFault, ReconcileLink, WireCost,
+};
+
+/// Hello sentinel: the first frame on a new connection is an `arrive`
+/// control frame with this round value, identifying the sender's shard.
+const HELLO_ROUND: u64 = u64::MAX;
+
+/// Upper bound on a declared payload length. A garbage length prefix
+/// must not drive an allocation: anything above this decodes to a
+/// protocol fault instead. 2 GiB covers a dense f64 delta for ~268M
+/// coordinates — far past anything one box folds.
+const MAX_WIRE_PAYLOAD: usize = 1 << 31;
+
+/// Read one length-prefixed frame into `buf` (header + declared
+/// payload). `InvalidData` marks an implausible length prefix; other
+/// errors are genuine socket conditions (timeout, reset, EOF).
+fn read_exact_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> io::Result<()> {
+    buf.resize(HEADER_LEN, 0);
+    stream.read_exact(buf)?;
+    let payload_len = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
+    if payload_len > MAX_WIRE_PAYLOAD {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "wire frame length prefix implausible",
+        ));
+    }
+    buf.resize(HEADER_LEN + payload_len, 0);
+    stream.read_exact(&mut buf[HEADER_LEN..])?;
+    Ok(())
+}
+
+/// Relay-side shared state: registered writer halves and the arrival
+/// counts per crossing id.
+struct RelayShared {
+    parties: usize,
+    /// Set by the link on shutdown/poison: suppresses the poison
+    /// broadcast a handler would otherwise emit on EOF, so a clean
+    /// teardown doesn't read as a fault.
+    closed: Arc<AtomicBool>,
+    /// Writer half per shard, each behind its own lock so an echo only
+    /// serializes against broadcasts touching the same peer.
+    writers: Mutex<Vec<Option<Arc<Mutex<TcpStream>>>>>,
+    arrivals: Mutex<HashMap<u64, usize>>,
+    handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl RelayShared {
+    fn writer_arcs(&self) -> Vec<Arc<Mutex<TcpStream>>> {
+        self.writers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .flatten()
+            .cloned()
+            .collect()
+    }
+
+    /// Send a control frame to every registered peer; write errors are
+    /// ignored (a peer that can't be reached is already dying, and its
+    /// handler will notice).
+    fn broadcast(&self, tag: FrameTag, round: u64) {
+        let mut buf = Vec::with_capacity(HEADER_LEN);
+        frame::encode_control(&mut buf, tag, 0, round);
+        for w in self.writer_arcs() {
+            let mut stream = w.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = stream.write_all(&buf);
+        }
+    }
+
+    /// Count an arrival for crossing `c`; the Nth arrival releases all.
+    fn on_arrive(&self, c: u64) {
+        let release = {
+            let mut arrivals = self.arrivals.lock().unwrap_or_else(|e| e.into_inner());
+            let count = arrivals.entry(c).or_insert(0);
+            *count += 1;
+            let full = *count == self.parties;
+            if full {
+                arrivals.remove(&c);
+            }
+            full
+        };
+        if release {
+            self.broadcast(FrameTag::Release, c);
+        }
+    }
+
+    fn poison_all(&self) {
+        self.broadcast(FrameTag::Poison, 0);
+    }
+}
+
+/// Per-connection relay handler: counts arrivals, echoes data frames
+/// back to the sender, and broadcasts poison on any read failure or
+/// protocol violation.
+fn relay_handler(shared: Arc<RelayShared>, mut read: TcpStream, writer: Arc<Mutex<TcpStream>>) {
+    let mut buf = Vec::new();
+    loop {
+        match read_exact_frame(&mut read, &mut buf) {
+            Ok(()) => match decode_frame(&buf) {
+                Ok(Frame::Control {
+                    tag: FrameTag::Arrive,
+                    round,
+                    ..
+                }) => shared.on_arrive(round),
+                Ok(Frame::Delta(_) | Frame::Decision { .. }) => {
+                    let ok = {
+                        let mut stream = writer.lock().unwrap_or_else(|e| e.into_inner());
+                        stream.write_all(&buf).is_ok()
+                    };
+                    if !ok {
+                        shared.poison_all();
+                        return;
+                    }
+                }
+                // shards never send release/poison; anything else is a
+                // protocol violation and dooms the exchange
+                Ok(Frame::Control { .. }) | Err(_) => {
+                    shared.poison_all();
+                    return;
+                }
+            },
+            Err(_) => {
+                // EOF or reset: a peer is gone. On a clean link
+                // teardown that is expected; otherwise tell everyone.
+                if !shared.closed.load(Ordering::Acquire) {
+                    shared.poison_all();
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Shard-side endpoint: one connection to the relay, used only by that
+/// shard's pool leader (the locks exist for `Sync` soundness, not
+/// contention).
+struct Peer {
+    read: Mutex<TcpStream>,
+    write: Mutex<TcpStream>,
+    /// Reused encode/receive buffer.
+    scratch: Mutex<Vec<u8>>,
+    /// Local crossing counter; all shards cross in lockstep, so equal
+    /// counts name the same crossing — the relay's barrier key.
+    crossings: AtomicU64,
+}
+
+/// The TCP [`ReconcileLink`]. See the module docs for topology and the
+/// v1 scope statement; construction is [`TcpLink::connect`].
+pub struct TcpLink {
+    peers: Vec<Peer>,
+    precision: WirePrecision,
+    closed: Arc<AtomicBool>,
+    relay: Arc<RelayShared>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+impl TcpLink {
+    /// Bind the relay on `listen` (use port 0 for an ephemeral port),
+    /// dial one connection per shard, and wait until the relay has
+    /// registered all of them. `peers` optionally overrides the dial
+    /// address per shard (shard `s` dials `peers[min(s, len-1)]`; an
+    /// empty slice dials the relay's own bound address — the
+    /// single-box default). `timeout` (`None` = effectively forever)
+    /// becomes every socket's read/write deadline, mapping
+    /// `barrier_timeout_secs` onto the wire.
+    pub fn connect(
+        shards: usize,
+        listen: &str,
+        peers: &[String],
+        timeout: Option<Duration>,
+        precision: WirePrecision,
+    ) -> io::Result<Self> {
+        let parties = shards.max(1);
+        let listener = TcpListener::bind(listen)?;
+        let local_addr = listener.local_addr()?;
+        let closed = Arc::new(AtomicBool::new(false));
+        let relay = Arc::new(RelayShared {
+            parties,
+            closed: Arc::clone(&closed),
+            writers: Mutex::new(vec![None; parties]),
+            arrivals: Mutex::new(HashMap::new()),
+            handlers: Mutex::new(Vec::new()),
+        });
+
+        // accept thread: register exactly `parties` connections (hello
+        // frame identifies the shard), spawn a handler for each, then
+        // signal readiness and stop listening
+        let accept_relay = Arc::clone(&relay);
+        let (ready_tx, ready_rx) = mpsc::channel::<io::Result<()>>();
+        let accept_thread = std::thread::spawn(move || {
+            let result = (|| -> io::Result<()> {
+                for _ in 0..parties {
+                    let (mut conn, _) = listener.accept()?;
+                    conn.set_nodelay(true)?;
+                    let mut hello = Vec::new();
+                    read_exact_frame(&mut conn, &mut hello)?;
+                    let shard = match decode_frame(&hello) {
+                        Ok(Frame::Control {
+                            tag: FrameTag::Arrive,
+                            shard,
+                            round: HELLO_ROUND,
+                        }) if (shard as usize) < parties => shard as usize,
+                        _ => {
+                            return Err(io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                "connection did not open with a valid hello frame",
+                            ))
+                        }
+                    };
+                    let writer = Arc::new(Mutex::new(conn.try_clone()?));
+                    {
+                        let mut writers = accept_relay
+                            .writers
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner());
+                        if writers[shard].is_some() {
+                            return Err(io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                "duplicate shard hello",
+                            ));
+                        }
+                        writers[shard] = Some(Arc::clone(&writer));
+                    }
+                    let handler_relay = Arc::clone(&accept_relay);
+                    let handle =
+                        std::thread::spawn(move || relay_handler(handler_relay, conn, writer));
+                    accept_relay
+                        .handlers
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push(handle);
+                }
+                Ok(())
+            })();
+            let failed = result.is_err();
+            let _ = ready_tx.send(result);
+            if failed {
+                accept_relay.poison_all();
+            }
+        });
+
+        // dial one connection per shard and say hello
+        let connect_result = (|| -> io::Result<Vec<Peer>> {
+            let mut endpoints = Vec::with_capacity(parties);
+            for s in 0..parties {
+                let addr = peers
+                    .get(s.min(peers.len().wrapping_sub(1)))
+                    .map(String::as_str)
+                    .map(str::to_string)
+                    .unwrap_or_else(|| local_addr.to_string());
+                let stream = TcpStream::connect(addr.as_str())?;
+                stream.set_nodelay(true)?;
+                stream.set_read_timeout(timeout)?;
+                stream.set_write_timeout(timeout)?;
+                let mut hello = Vec::new();
+                frame::encode_control(&mut hello, FrameTag::Arrive, s, HELLO_ROUND);
+                let mut write = stream.try_clone()?;
+                write.write_all(&hello)?;
+                endpoints.push(Peer {
+                    read: Mutex::new(stream),
+                    write: Mutex::new(write),
+                    scratch: Mutex::new(Vec::new()),
+                    crossings: AtomicU64::new(0),
+                });
+            }
+            // all connections must be registered before any crossing,
+            // or an early arrive could release before a writer exists
+            match ready_rx.recv_timeout(timeout.unwrap_or(Duration::from_secs(30))) {
+                Ok(Ok(())) => Ok(endpoints),
+                Ok(Err(e)) => Err(e),
+                Err(_) => Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "relay did not register all shard connections in time",
+                )),
+            }
+        })();
+
+        match connect_result {
+            Ok(endpoints) => Ok(Self {
+                peers: endpoints,
+                precision,
+                closed,
+                relay,
+                accept_thread: Some(accept_thread),
+                local_addr,
+            }),
+            Err(e) => {
+                closed.store(true, Ordering::Release);
+                // unblock the accept thread if it is still waiting
+                let _ = TcpStream::connect(local_addr);
+                let _ = accept_thread.join();
+                for h in relay
+                    .handlers
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .drain(..)
+                {
+                    let _ = h.join();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// The relay's bound address (useful with `listen = "…:0"`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    fn check_open(&self) -> Result<(), LinkFault> {
+        if self.closed.load(Ordering::Acquire) {
+            Err(LinkFault::Poisoned)
+        } else {
+            Ok(())
+        }
+    }
+
+    fn io_fault(&self, e: &io::Error) -> LinkFault {
+        let fault = match e.kind() {
+            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => LinkFault::TimedOut,
+            io::ErrorKind::InvalidData => LinkFault::Protocol("wire frame length prefix implausible"),
+            _ => LinkFault::Poisoned,
+        };
+        // shut our socket down on the way out: the relay sees the close
+        // and poisons the peers, so nobody waits for us (§Failure
+        // semantics: the faulted waiter unblocks everyone else)
+        self.poison();
+        fault
+    }
+
+    fn protocol_fault(&self, reason: &'static str) -> LinkFault {
+        self.poison();
+        LinkFault::Protocol(reason)
+    }
+
+    fn send(&self, s: usize, bytes: &[u8]) -> Result<(), LinkFault> {
+        let mut stream = self.peers[s].write.lock().unwrap_or_else(|e| e.into_inner());
+        stream.write_all(bytes).map_err(|e| self.io_fault(&e))
+    }
+
+    /// One barrier crossing: announce arrival, block until the relay's
+    /// release (or fail cleanly on poison/timeout/disconnect).
+    fn cross(&self, s: usize) -> Result<(), LinkFault> {
+        self.check_open()?;
+        let peer = &self.peers[s];
+        let c = peer.crossings.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
+            buf.clear();
+            frame::encode_control(&mut buf, FrameTag::Arrive, s, c);
+            self.send(s, &buf)?;
+        }
+        let mut stream = peer.read.lock().unwrap_or_else(|e| e.into_inner());
+        let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            read_exact_frame(&mut stream, &mut buf).map_err(|e| self.io_fault(&e))?;
+            match decode_frame(&buf) {
+                Ok(Frame::Control {
+                    tag: FrameTag::Release,
+                    round,
+                    ..
+                }) if round == c => return Ok(()),
+                Ok(Frame::Control {
+                    tag: FrameTag::Poison,
+                    ..
+                }) => {
+                    self.poison();
+                    return Err(LinkFault::Poisoned);
+                }
+                Ok(_) => return Err(self.protocol_fault("unexpected frame at a crossing")),
+                Err(e) => return Err(self.protocol_fault(e.reason())),
+            }
+        }
+    }
+}
+
+impl ReconcileLink for TcpLink {
+    fn init(&self, s: usize) -> Result<(), LinkFault> {
+        self.cross(s)
+    }
+
+    fn arrive(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross(s)
+    }
+
+    fn publish_fold(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross(s)
+    }
+
+    fn publish_decision(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross(s)
+    }
+
+    fn poison(&self) {
+        self.closed.store(true, Ordering::Release);
+        for peer in &self.peers {
+            if let Ok(stream) = peer.read.try_lock() {
+                let _ = stream.shutdown(Shutdown::Both);
+            } else if let Ok(stream) = peer.write.try_lock() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    fn wire_delta(&self, s: usize, payload: &DeltaPayload<'_>) -> Result<WireCost, LinkFault> {
+        self.check_open()?;
+        let t0 = Instant::now();
+        let z = payload.z;
+        let peer = &self.peers[s];
+        let tx = {
+            let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
+            buf.clear();
+            let tx = match payload.dirty {
+                Some(d) => frame::encode_delta(
+                    &mut buf,
+                    s,
+                    payload.round as u64,
+                    self.precision,
+                    payload.n,
+                    |c| d.is_dirty(c),
+                    |i| z.get(i),
+                ),
+                None => frame::encode_delta(
+                    &mut buf,
+                    s,
+                    payload.round as u64,
+                    self.precision,
+                    payload.n,
+                    |_| true,
+                    |i| z.get(i),
+                ),
+            };
+            self.send(s, &buf)?;
+            tx
+        };
+        // the relay echoes the frame back; what we apply is what was on
+        // the wire
+        let mut stream = peer.read.lock().unwrap_or_else(|e| e.into_inner());
+        let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        read_exact_frame(&mut stream, &mut buf).map_err(|e| self.io_fault(&e))?;
+        match decode_frame(&buf) {
+            Ok(Frame::Delta(d)) if d.shard as usize == s && d.round == payload.round as u64 => {
+                d.apply(|i, v| z.set(i, v));
+                Ok(WireCost {
+                    bytes_tx: tx as u64,
+                    bytes_rx: buf.len() as u64,
+                    nanos: t0.elapsed().as_nanos() as u64,
+                })
+            }
+            Ok(Frame::Control {
+                tag: FrameTag::Poison,
+                ..
+            }) => {
+                self.poison();
+                Err(LinkFault::Poisoned)
+            }
+            Ok(_) => Err(self.protocol_fault("delta exchange received a non-delta frame")),
+            Err(e) => Err(self.protocol_fault(e.reason())),
+        }
+    }
+
+    fn wire_decision(&self, s: usize, payload: &mut DecisionPayload) -> Result<WireCost, LinkFault> {
+        self.check_open()?;
+        let t0 = Instant::now();
+        let peer = &self.peers[s];
+        let rec = DecisionRecord {
+            round: payload.round as u64,
+            next_gap: payload.next_gap as u64,
+            stop: payload.stop,
+        };
+        let tx = {
+            let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
+            buf.clear();
+            let tx = frame::encode_decision(&mut buf, s, &rec);
+            self.send(s, &buf)?;
+            tx
+        };
+        let mut stream = peer.read.lock().unwrap_or_else(|e| e.into_inner());
+        let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        read_exact_frame(&mut stream, &mut buf).map_err(|e| self.io_fault(&e))?;
+        match decode_frame(&buf) {
+            Ok(Frame::Decision { record, .. }) => {
+                payload.next_gap = record.next_gap as usize;
+                payload.stop = record.stop;
+                Ok(WireCost {
+                    bytes_tx: tx as u64,
+                    bytes_rx: buf.len() as u64,
+                    nanos: t0.elapsed().as_nanos() as u64,
+                })
+            }
+            Ok(Frame::Control {
+                tag: FrameTag::Poison,
+                ..
+            }) => {
+                self.poison();
+                Err(LinkFault::Poisoned)
+            }
+            Ok(_) => Err(self.protocol_fault("decision exchange received a non-decision frame")),
+            Err(e) => Err(self.protocol_fault(e.reason())),
+        }
+    }
+}
+
+impl Drop for TcpLink {
+    fn drop(&mut self) {
+        self.closed.store(true, Ordering::Release);
+        for peer in &self.peers {
+            let stream = peer.read.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        for h in self
+            .relay
+            .handlers
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .drain(..)
+        {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn link(shards: usize, timeout_ms: u64) -> TcpLink {
+        TcpLink::connect(
+            shards,
+            "127.0.0.1:0",
+            &[],
+            Some(Duration::from_millis(timeout_ms)),
+            WirePrecision::Exact,
+        )
+        .expect("localhost bind + connect")
+    }
+
+    #[test]
+    fn crossings_release_all_parties() {
+        let l = Arc::new(link(3, 5_000));
+        let released = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for s in 0..3 {
+                let l = Arc::clone(&l);
+                let released = Arc::clone(&released);
+                scope.spawn(move || {
+                    for round in 0..4 {
+                        l.arrive(s, round).expect("healthy crossing");
+                        released.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(released.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn missing_peer_times_out_not_hangs() {
+        let l = link(2, 200);
+        // only shard 0 ever arrives; its wait must deadline cleanly
+        let start = Instant::now();
+        assert_eq!(l.arrive(0, 0), Err(LinkFault::TimedOut));
+        assert!(start.elapsed() < Duration::from_secs(5));
+        // after the fault the link is poisoned for everyone
+        assert_eq!(l.arrive(1, 0), Err(LinkFault::Poisoned));
+    }
+
+    #[test]
+    fn delta_and_decision_echo_through_the_relay() {
+        use crate::util::atomic::SyncF64Vec;
+        let l = link(1, 5_000);
+        let z = SyncF64Vec::zeros(24);
+        z.set(5, 1.25);
+        z.set(17, -3.5);
+        let before = z.snapshot();
+        let cost = l
+            .wire_delta(
+                0,
+                &DeltaPayload {
+                    round: 0,
+                    dirty: None,
+                    z: &z,
+                    n: 24,
+                },
+            )
+            .expect("delta echo");
+        assert_eq!(z.snapshot(), before);
+        assert!(cost.bytes_tx > 0 && cost.bytes_rx == cost.bytes_tx);
+
+        let mut decision = DecisionPayload {
+            round: 0,
+            next_gap: 8,
+            stop: None,
+        };
+        l.wire_decision(0, &mut decision).expect("decision echo");
+        assert_eq!(decision.next_gap, 8);
+        assert_eq!(decision.stop, None);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let l = link(2, 1_000);
+        drop(l); // must not hang joining relay threads
+    }
+}

@@ -6,13 +6,17 @@
 //! preset catalogue ([`Algorithm`]), the engine knobs most callers
 //! touch ([`UpdatePath`], [`EngineConfig`]), the sharded execution
 //! layer's surface ([`ShardStrategy`], [`ShardPlan`], the NUMA
-//! [`Topology`]), the screening layer's surface ([`ActiveSet`],
-//! [`ScreenedSelect`]), the losses, and the result types — plus
+//! [`Topology`]), the reconcile transports ([`Transport`],
+//! [`WirePrecision`]), the screening layer's surface ([`ActiveSet`],
+//! [`ScreenedSelect`]), the losses, and the result types (including
+//! the structured failure [`SolveError`]/[`SolveErrorKind`]) — plus
 //! [`ControlFlow`], which observers return.
 
 pub use crate::coordinator::accept::{Accept, AcceptContext, ThreadBest};
 pub use crate::coordinator::algorithms::{Algorithm, Preprocessed};
-pub use crate::coordinator::convergence::{History, Record, StopReason};
+pub use crate::coordinator::convergence::{
+    History, Record, SolveError, SolveErrorKind, StopReason,
+};
 pub use crate::coordinator::engine::{
     EngineConfig, EngineHooks, SolveOutput, UpdatePath,
 };
@@ -21,6 +25,7 @@ pub use crate::coordinator::observer::{IterationInfo, Observer};
 pub use crate::coordinator::problem::{Problem, SharedState};
 pub use crate::coordinator::select::Select;
 pub use crate::loss::{Logistic, Loss, SmoothedHinge, Squared};
+pub use crate::net::{Transport, WirePrecision};
 pub use crate::screen::{ActiveSet, ScreenedSelect};
 pub use crate::shard::{ShardPlan, ShardStrategy};
 pub use crate::solver::{Solver, SolverBuilder};

@@ -147,9 +147,10 @@
 //! bit-exact with the pre-seam engine); `sim::SimLink`
 //! ([`crate::sim`]) drives the same pool code under deterministic
 //! virtual time with injected delay, reordering, stragglers, and
-//! panics; a future `gencd::net` backend speaks the same four-crossing
-//! contract over a wire. A link crossing can *fail* ([`LinkFault`]),
-//! which is what makes the failure semantics below expressible at all.
+//! panics; the [`crate::net`] transports (loopback, TCP) speak the same
+//! four-crossing contract over serialized frames (§Wire format below).
+//! A link crossing can *fail* ([`LinkFault`]), which is what makes the
+//! failure semantics below expressible at all.
 //!
 //! # §Failure semantics
 //!
@@ -190,6 +191,61 @@
 //!   to its floor (the EWMA conflict-spike tripwire already does this
 //!   for replica conflicts), so decoupled rounds cannot compound a
 //!   divergence trend.
+//!
+//! # §Wire format
+//!
+//! When the link is a wire transport ([`crate::net`]), the reconcile
+//! exchange is serialized into length-prefixed frames. This section is
+//! the authoritative byte-level specification; `net::frame` implements
+//! it and the codec round-trip tests in `rust/tests/net_link.rs` cite
+//! it. All multi-byte integers and floats are **little-endian**.
+//!
+//! Every frame opens with a fixed 20-byte header:
+//!
+//! | offset | size | field | meaning |
+//! |-------:|-----:|-------|---------|
+//! | 0 | 4 | magic | ASCII `GCD1` (`0x47 0x43 0x44 0x31`) |
+//! | 4 | 1 | tag | 1 delta · 2 decision · 3 arrive · 4 release · 5 poison |
+//! | 5 | 1 | flags | bit 0: 0 = exact f64 values, 1 = f32-quantized; bits 1–7 must be 0 |
+//! | 6 | 2 | shard | u16, sender's shard index |
+//! | 8 | 8 | round | u64, reconcile round (crossing counter for control frames) |
+//! | 16 | 4 | payload_len | u32, byte count following this field |
+//!
+//! **Delta payload** (tag 1) — one shard's touched replica state for
+//! the round:
+//!
+//! | offset | size | field |
+//! |-------:|-----:|-------|
+//! | 0 | 8 | `n` — replica length in f64 elements (u64) |
+//! | 8 | 4 | `n_chunks` — must equal `ceil(n / 16)` (u32) |
+//! | 12 | 4 | `n_dirty` — carried chunk count; must equal the bitmap popcount (u32) |
+//! | 16 | `ceil(n_chunks/64) * 8` | dirty bitmap: u64 words, chunk `c` = word `c/64` bit `c%64`; bits ≥ `n_chunks` must be 0 |
+//! | … | — | carried chunks in **ascending** chunk order: 16 values each (8 B exact / 4 B f32), the last chunk truncated to `n − 16·c` values |
+//!
+//! A chunk is [`DIRTY_CHUNK_ELEMS`](crate::util::par::DIRTY_CHUNK_ELEMS)
+//! = 16 consecutive f64s — one 128-byte cache-line pair, the same
+//! granularity the in-memory delta fold tracks. Chunk values are
+//! **absolute** replica contents, not increments: re-applying a frame
+//! is a no-op, so duplicate delivery is idempotent by construction
+//! (pinned by `scenarios/net/01-duplicate-delivery.toml`).
+//!
+//! **Decision payload** (tag 2) — the coordinator's fold verdict:
+//! round echo (u64), `next_gap` (u64), then one stop-code byte
+//! (0 none · 1 max-iters · 2 max-seconds · 3 tolerance · 4 diverged ·
+//! 5 observer · 6 converged · 7 shard-failed).
+//!
+//! **Control frames** (tags 3–5) have `payload_len = 0` and exist only
+//! on the TCP transport's control plane: `arrive` announces a shard at
+//! a crossing (`round` holds the crossing counter), `release` is the
+//! coordinator-relay's broadcast that all parties arrived, `poison`
+//! broadcasts a dying peer.
+//!
+//! Any malformed frame — short read, bad magic, unknown tag or flag,
+//! length or popcount mismatch, bitmap bits past `n_chunks`, trailing
+//! bytes — decodes to a clean `net::codec::DecodeError`, surfaces as
+//! [`LinkFault::Protocol`], and lands the solve in
+//! `StopReason::ShardFailed` like every other link fault. Never a
+//! panic, never a hang.
 //!
 //! [`OnceLock`]: std::sync::OnceLock
 
@@ -234,16 +290,100 @@ pub enum LinkFault {
     /// the waiter poisoned the link before returning so its peers
     /// escape too.
     TimedOut,
+    /// A wire transport received bytes that violate the frame protocol
+    /// (§Wire format) — truncated frame, bad magic, inconsistent
+    /// lengths. Carries the decoder's static reason
+    /// ([`DecodeError::reason`](crate::net::codec::DecodeError::reason)).
+    /// Only wire links ([`crate::net`]) produce this; the observing
+    /// shard poisons the link on its way out, so peers see
+    /// [`Poisoned`](Self::Poisoned).
+    Protocol(&'static str),
 }
 
 impl LinkFault {
     /// The human-readable cause carried into [`SolveError::message`].
-    fn message(self) -> &'static str {
+    pub(crate) fn message(self) -> &'static str {
         match self {
             LinkFault::Poisoned => "reconcile link poisoned by a dying peer",
             LinkFault::TimedOut => "reconcile barrier timed out (peer missing)",
+            LinkFault::Protocol(reason) => reason,
         }
     }
+
+    /// The failure class carried into [`SolveError::kind`].
+    pub(crate) fn kind(self) -> crate::coordinator::convergence::SolveErrorKind {
+        use crate::coordinator::convergence::SolveErrorKind;
+        match self {
+            LinkFault::Poisoned => SolveErrorKind::Link,
+            LinkFault::TimedOut => SolveErrorKind::Timeout,
+            LinkFault::Protocol(_) => SolveErrorKind::Protocol,
+        }
+    }
+}
+
+/// What a wire link ships at a delta exchange: a borrowed view of one
+/// shard's replica plus its dirty-chunk map, handed to
+/// [`ReconcileLink::wire_delta`] right before the `arrive` crossing.
+///
+/// A wire transport reads the dirty chunks out of `z`, encodes them
+/// (engine §Wire format), routes the bytes, decodes, and writes the
+/// decoded values *back into `z`* — identity under
+/// `wire_precision = exact`, an f32 round-trip under `f32`. Writing
+/// back before the crossing means every peer's fold then reads exactly
+/// the values that survived the wire, reproducing a real lossy
+/// transport inside one process. In-memory links never touch it.
+pub struct DeltaPayload<'a> {
+    /// Reconcile round (the engine's iteration counter at the exchange).
+    pub round: usize,
+    /// This shard's dirty-chunk map for the round; `None` means the
+    /// exchange is dense (delta tracking off) — every chunk is
+    /// implicitly dirty.
+    pub dirty: Option<&'a DirtyChunks>,
+    /// This shard's full-length replica (atomic view — the pool is
+    /// quiescent at the exchange, so plain-speed reads/writes are safe).
+    pub z: &'a SyncF64Vec,
+    /// Replica length in elements.
+    pub n: usize,
+}
+
+/// The coordinator's fold decision as it crosses the wire, handed to
+/// [`ReconcileLink::wire_decision`] between `plan_round` and the
+/// `publish_decision` crossing. A wire link encodes it, routes the
+/// bytes, decodes, and writes the decoded record back — so the gap and
+/// stop verdict every pool acts on are exactly the bytes that crossed.
+pub struct DecisionPayload {
+    /// Reconcile round the decision belongs to.
+    pub round: usize,
+    /// Iterations until the next reconcile (adaptive cadence output).
+    pub next_gap: usize,
+    /// Stop verdict, if the coordinator called the solve.
+    pub stop: Option<StopReason>,
+}
+
+/// Wire accounting for one [`ReconcileLink::wire_delta`] /
+/// [`ReconcileLink::wire_decision`] call, summed into
+/// [`MetricsSnapshot::wire_bytes_tx`]/[`wire_bytes_rx`]/[`codec_secs`].
+///
+/// [`wire_bytes_rx`]: MetricsSnapshot::wire_bytes_rx
+/// [`codec_secs`]: MetricsSnapshot::codec_secs
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireCost {
+    /// Bytes encoded and sent.
+    pub bytes_tx: u64,
+    /// Bytes received and decoded.
+    pub bytes_rx: u64,
+    /// Nanoseconds spent encoding + decoding (codec work only, not
+    /// blocking waits — those are reconcile time).
+    pub nanos: u64,
+}
+
+impl WireCost {
+    /// The in-memory links' answer: nothing crossed a wire.
+    pub const NONE: WireCost = WireCost {
+        bytes_tx: 0,
+        bytes_rx: 0,
+        nanos: 0,
+    };
 }
 
 /// The cross-shard transport seam (module docs §The reconcile link):
@@ -256,7 +396,9 @@ impl LinkFault {
 /// [`BarrierLink`] is the production impl — the original SpinBarrier
 /// protocol, bit-exact with the pre-seam engine. `sim::SimLink`
 /// ([`crate::sim`]) layers deterministic virtual time and fault
-/// injection over it without the pool code knowing.
+/// injection over it without the pool code knowing; the wire links
+/// ([`crate::net`]) additionally move the exchanged state through the
+/// frame codec via the two `wire_*` hooks below.
 pub trait ReconcileLink: Sync {
     /// The init crossing: every shard has published its replica slot;
     /// crossing it makes all replicas readable everywhere (round -1).
@@ -270,6 +412,26 @@ pub trait ReconcileLink: Sync {
     /// Crossing 3: the coordinator's stop decision and next gap are
     /// published.
     fn publish_decision(&self, s: usize, round: usize) -> Result<(), LinkFault>;
+    /// Wire hook, called by shard `s` immediately **before** the
+    /// `arrive` crossing of a reconcile round: ship this shard's dirty
+    /// replica chunks through the transport and write what survived
+    /// back into `payload.z` (see [`DeltaPayload`]). In-memory links
+    /// keep the default no-op — the replica is already shared memory.
+    /// A decode failure must surface as [`LinkFault::Protocol`] (and
+    /// poison the link), never a panic.
+    fn wire_delta(&self, s: usize, payload: &DeltaPayload<'_>) -> Result<WireCost, LinkFault> {
+        let _ = (s, payload);
+        Ok(WireCost::NONE)
+    }
+    /// Wire hook, called by the coordinator (shard 0) **after**
+    /// `plan_round` and before the `publish_decision` crossing: ship
+    /// the fold decision through the transport and overwrite `payload`
+    /// with the decoded record — the gap/stop every pool acts on are
+    /// then exactly the bytes that crossed. Default: no-op.
+    fn wire_decision(&self, s: usize, payload: &mut DecisionPayload) -> Result<WireCost, LinkFault> {
+        let _ = (s, payload);
+        Ok(WireCost::NONE)
+    }
     /// Order in which shard `s`'s fold sums the replica deltas at
     /// `round`. The identity (the default) reproduces the pre-seam
     /// arithmetic bit-exactly; a permutation models in-flight delta
@@ -504,6 +666,13 @@ struct ReconcileShared {
     /// Per-shard link-fault slots (unique writer: the shard itself,
     /// just before it breaks out of its pool; read after the join).
     failures: Vec<CachePadded<SyncCell<Option<LinkFault>>>>,
+    /// Per-shard wire accounting ([`ReconcileLink::wire_delta`] /
+    /// [`wire_decision`](ReconcileLink::wire_decision) costs): bytes
+    /// sent, bytes received, codec nanoseconds. All-zero on in-memory
+    /// links.
+    wire_tx: Vec<CachePadded<SyncCell<u64>>>,
+    wire_rx: Vec<CachePadded<SyncCell<u64>>>,
+    codec_nanos: Vec<CachePadded<SyncCell<u64>>>,
     /// Reconciles the staleness bound forced (written only by the
     /// shard-0 coordinator between crossings 2 and 3).
     staleness_forced: CachePadded<SyncCell<u64>>,
@@ -892,6 +1061,17 @@ impl ShardObserver<'_, '_> {
 }
 
 impl ShardObserver<'_, '_> {
+    /// Sum one wire hook's accounting into this shard's padded slots.
+    fn note_wire(&self, cost: WireCost) {
+        let sh = self.shared;
+        let tx = &sh.wire_tx[self.s];
+        tx.set(tx.get() + cost.bytes_tx);
+        let rx = &sh.wire_rx[self.s];
+        rx.set(rx.get() + cost.bytes_rx);
+        let cn = &sh.codec_nanos[self.s];
+        cn.set(cn.get() + cost.nanos);
+    }
+
     /// One reconcile round over the link; `Err` means a crossing failed
     /// (peer dead or timed out) and the pool must stop.
     fn reconcile_round(&mut self, info: &IterationInfo<'_>) -> Result<ControlFlow<()>, LinkFault> {
@@ -899,6 +1079,20 @@ impl ShardObserver<'_, '_> {
         // own padded slot; published to the coordinator by the crossing
         // chain below
         sh.updates[self.s].set(info.updates);
+        // wire hook: ship my dirty chunks through the transport and
+        // keep only what survived the codec (§Wire format). Runs
+        // *before* crossing 1 so every peer's fold reads post-wire
+        // values; my own workers are parked, so the writes are safe.
+        let cost = self.link.wire_delta(
+            self.s,
+            &DeltaPayload {
+                round: info.iter,
+                dirty: (!sh.dirty.is_empty()).then(|| &sh.dirty[self.s]),
+                z: &self.replicas[self.s].z,
+                n: sh.n,
+            },
+        )?;
+        self.note_wire(cost);
         // crossing 1: every shard finished the round; all replica
         // updates are visible (each pool's end-of-update barrier chains
         // into this one)
@@ -914,8 +1108,17 @@ impl ShardObserver<'_, '_> {
         }
         if let Some(c) = self.coordinator.as_mut() {
             let (stop, gap) = c.plan_round(sh, info.iter);
-            sh.next_gap.set(gap);
-            sh.stop.set(stop);
+            // wire hook: route the decision through the transport — the
+            // gap/stop every pool acts on are the decoded bytes
+            let mut decision = DecisionPayload {
+                round: info.iter,
+                next_gap: gap,
+                stop,
+            };
+            let cost = self.link.wire_decision(self.s, &mut decision)?;
+            self.note_wire(cost);
+            sh.next_gap.set(decision.next_gap);
+            sh.stop.set(decision.stop);
         }
         // crossing 3: the stop decision and the next gap are published
         self.link.publish_decision(self.s, info.iter)?;
@@ -1128,6 +1331,9 @@ pub fn solve_sharded_linked(
         failures: (0..s_count)
             .map(|_| CachePadded::new(SyncCell::new(None)))
             .collect(),
+        wire_tx: pad_slots_u64(),
+        wire_rx: pad_slots_u64(),
+        codec_nanos: pad_slots_u64(),
         staleness_forced: CachePadded::new(SyncCell::new(0u64)),
         n,
     };
@@ -1274,6 +1480,7 @@ pub fn solve_sharded_linked(
                         .unwrap_or_else(|| "shard pool panicked".to_string());
                     failures.push(SolveError {
                         shard: Some(s),
+                        kind: crate::coordinator::convergence::SolveErrorKind::Panic,
                         message: format!("pool panicked: {message}"),
                     });
                 }
@@ -1287,6 +1494,7 @@ pub fn solve_sharded_linked(
         if let Some(fault) = slot.get() {
             failures.push(SolveError {
                 shard: Some(s),
+                kind: fault.kind(),
                 message: fault.message().to_string(),
             });
         }
@@ -1363,6 +1571,17 @@ pub fn solve_sharded_linked(
             .unwrap_or(0),
         staleness_forced_reconciles: shared.staleness_forced.get(),
         shard_failures: failures.len() as u64,
+        wire_bytes_tx: shared.wire_tx.iter().map(|c| c.get()).sum(),
+        wire_bytes_rx: shared.wire_rx.iter().map(|c| c.get()).sum(),
+        // codec time is concurrent across pools; report the slowest
+        // leader's share (same convention as reconcile_secs)
+        codec_secs: shared
+            .codec_nanos
+            .iter()
+            .map(|c| c.get())
+            .max()
+            .unwrap_or(0) as f64
+            * 1e-9,
         ..Default::default()
     };
     for o in &outs {

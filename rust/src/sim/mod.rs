@@ -44,4 +44,7 @@ pub use clock::{Event, EventKind, EventQueue, Tick};
 pub use faults::{FaultPlan, FaultSpec};
 pub use link::SimLink;
 pub use report::{render_events, render_verdicts, Verdict};
-pub use scenario::{run_baseline, run_corpus, run_scenario, Scenario, ScenarioRun, WorkloadKind};
+pub use scenario::{
+    run_baseline, run_corpus, run_corpus_loopback, run_scenario, run_scenario_loopback,
+    Scenario, ScenarioRun, WorkloadKind,
+};

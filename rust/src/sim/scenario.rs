@@ -35,10 +35,19 @@
 //! panic_shard = -1                # -1 = none
 //! panic_round = 0
 //! virtual_timeout_ticks = 0       # 0 = off
+//! # message-level wire faults — only consulted by
+//! # [`run_scenario_loopback`] (the barrier path has no frames):
+//! net_truncate_shard = -1         # -1 = none; with net_truncate_round
+//! net_truncate_round = 0
+//! net_duplicate_round = -1        # -1 = none; delivers twice
+//! net_disconnect_shard = -1       # -1 = none; with net_disconnect_round
+//! net_disconnect_round = 0
 //!
 //! [expect]
 //! stop = "max-iters"              # StopReason display string
 //! failure_contains = ""           # substring of SolveError::message
+//! kind = ""                       # SolveErrorKind display (panic |
+//!                                 # timeout | link | protocol); "" = any
 //! min_forced_reconciles = 0
 //! ```
 //!
@@ -56,6 +65,7 @@ use crate::coordinator::engine::{SolveOutput, UpdatePath};
 use crate::coordinator::problem::Problem;
 use crate::data::synth;
 use crate::loss::Logistic;
+use crate::net::{LoopbackLink, NetFaultPlan, WirePrecision};
 use crate::shard::engine::{solve_sharded_linked, BarrierLink, ShardSpec};
 use crate::shard::{ShardStrategy, ShardedConfig};
 use crate::sim::faults::{FaultPlan, FaultSpec};
@@ -101,6 +111,10 @@ pub struct Expectation {
     /// message (empty = no failure required; a failure is then a FAIL
     /// unless `stop` says otherwise).
     pub failure_contains: String,
+    /// Required
+    /// [`SolveErrorKind`](crate::coordinator::convergence::SolveErrorKind)
+    /// display string of the surfaced failure (empty = any kind).
+    pub kind: String,
     /// Minimum `staleness_forced_reconciles` metric.
     pub min_forced_reconciles: u64,
 }
@@ -123,6 +137,10 @@ pub struct Scenario {
     pub reconcile_max_rounds: usize,
     pub max_staleness_rounds: usize,
     pub faults: FaultSpec,
+    /// Message-level wire faults, applied only when the scenario runs
+    /// over the loopback wire ([`run_scenario_loopback`]); the barrier
+    /// path has no frames to corrupt.
+    pub net: NetFaultPlan,
     pub expect: Expectation,
 }
 
@@ -218,9 +236,22 @@ impl Scenario {
             virtual_timeout_ticks: usize_knob(&doc, "faults", "virtual_timeout_ticks", 0)? as u64,
         };
 
+        let net = NetFaultPlan {
+            truncate_at: match shard_index(&doc, "faults", "net_truncate_shard")? {
+                Some(s) => Some((s, usize_knob(&doc, "faults", "net_truncate_round", 0)?)),
+                None => None,
+            },
+            duplicate_round: shard_index(&doc, "faults", "net_duplicate_round")?,
+            disconnect_at: match shard_index(&doc, "faults", "net_disconnect_shard")? {
+                Some(s) => Some((s, usize_knob(&doc, "faults", "net_disconnect_round", 0)?)),
+                None => None,
+            },
+        };
+
         let expect = Expectation {
             stop: opt_str(&doc, "expect", "stop", "")?.to_string(),
             failure_contains: opt_str(&doc, "expect", "failure_contains", "")?.to_string(),
+            kind: opt_str(&doc, "expect", "kind", "")?.to_string(),
             min_forced_reconciles: usize_knob(&doc, "expect", "min_forced_reconciles", 0)? as u64,
         };
 
@@ -240,6 +271,7 @@ impl Scenario {
             reconcile_max_rounds,
             max_staleness_rounds,
             faults,
+            net,
             expect,
         })
     }
@@ -390,6 +422,20 @@ fn grade(sc: &Scenario, out: &SolveOutput) -> Verdict {
             }
         }
     }
+    if !sc.expect.kind.is_empty() {
+        match &out.failure {
+            None => problems.push(format!(
+                "no failure surfaced, expected kind {:?}",
+                sc.expect.kind
+            )),
+            Some(f) => {
+                let kind = f.kind.to_string();
+                if kind != sc.expect.kind {
+                    problems.push(format!("failure kind {kind:?}, expected {:?}", sc.expect.kind));
+                }
+            }
+        }
+    }
     if out.metrics.staleness_forced_reconciles < sc.expect.min_forced_reconciles {
         problems.push(format!(
             "forced reconciles {} < expected {}",
@@ -408,10 +454,28 @@ fn grade(sc: &Scenario, out: &SolveOutput) -> Verdict {
     Verdict { name: sc.name.clone(), pass, detail, sim_events: out.metrics.sim_events }
 }
 
-/// Load and run every `*.toml` under `dir` (sorted by file name),
-/// optionally keeping only names containing `filter`. Parse/run errors
-/// become failed verdicts rather than aborting the sweep.
-pub fn run_corpus(dir: &Path, filter: Option<&str>) -> anyhow::Result<Vec<ScenarioRun>> {
+/// Solve `sc` under its fault plan with every reconcile exchange routed
+/// through the loopback wire transport ([`crate::net::LoopbackLink`]
+/// composed over the [`SimLink`]): virtual-time faults from `[faults]`
+/// *and* message-level wire faults from the `net_*` keys, full
+/// encode→frame→decode on every delta. The graded contract is the same
+/// as [`run_scenario`]'s — a wire fault must land as a clean
+/// `shard-failed`, never a hang.
+pub fn run_scenario_loopback(sc: &Scenario) -> anyhow::Result<ScenarioRun> {
+    let (specs, cfg, global) = build_solve(sc)?;
+    let active = specs.len().max(1);
+    let plan = FaultPlan::generate(&sc.faults, active, sc.rounds, sc.seed);
+    let sim = SimLink::new(plan, cfg.barrier_spin, std::time::Duration::from_secs(20));
+    let link = LoopbackLink::over(sim, active, WirePrecision::Exact).with_faults(sc.net);
+    let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, &link);
+    output.metrics.sim_events = link.inner().event_count() as u64;
+    let event_log = render_events(&link.inner().events());
+    let verdict = grade(sc, &output);
+    Ok(ScenarioRun { verdict, output: Some(output), event_log })
+}
+
+/// `*.toml` files directly under `dir`, sorted by file name.
+fn scenario_files(dir: &Path) -> anyhow::Result<Vec<std::path::PathBuf>> {
     let mut files: Vec<_> = std::fs::read_dir(dir)
         .map_err(|e| anyhow::anyhow!("reading scenario dir {}: {e}", dir.display()))?
         .filter_map(|entry| {
@@ -420,6 +484,14 @@ pub fn run_corpus(dir: &Path, filter: Option<&str>) -> anyhow::Result<Vec<Scenar
         })
         .collect();
     files.sort();
+    Ok(files)
+}
+
+fn run_files(
+    files: &[std::path::PathBuf],
+    filter: Option<&str>,
+    runner: fn(&Scenario) -> anyhow::Result<ScenarioRun>,
+) -> Vec<ScenarioRun> {
     let mut runs = Vec::new();
     for path in files {
         let stem = path
@@ -431,7 +503,7 @@ pub fn run_corpus(dir: &Path, filter: Option<&str>) -> anyhow::Result<Vec<Scenar
                 continue;
             }
         }
-        match Scenario::load(&path).and_then(|sc| run_scenario(&sc)) {
+        match Scenario::load(path).and_then(|sc| runner(&sc)) {
             Ok(run) => runs.push(run),
             Err(e) => runs.push(ScenarioRun {
                 verdict: Verdict {
@@ -445,7 +517,28 @@ pub fn run_corpus(dir: &Path, filter: Option<&str>) -> anyhow::Result<Vec<Scenar
             }),
         }
     }
-    Ok(runs)
+    runs
+}
+
+/// Load and run every `*.toml` under `dir` (sorted by file name),
+/// optionally keeping only names containing `filter`. Parse/run errors
+/// become failed verdicts rather than aborting the sweep.
+pub fn run_corpus(dir: &Path, filter: Option<&str>) -> anyhow::Result<Vec<ScenarioRun>> {
+    Ok(run_files(&scenario_files(dir)?, filter, run_scenario))
+}
+
+/// [`run_corpus`] over the loopback wire transport: every scenario
+/// directly under `dir` *plus* the message-fault scenarios under
+/// `dir/net` (when present — `run_corpus` itself never recurses, so the
+/// `net_*` scenarios stay invisible to the plain `gencd sim` sweep,
+/// whose barrier link has no frames to corrupt).
+pub fn run_corpus_loopback(dir: &Path, filter: Option<&str>) -> anyhow::Result<Vec<ScenarioRun>> {
+    let mut files = scenario_files(dir)?;
+    let net_dir = dir.join("net");
+    if net_dir.is_dir() {
+        files.extend(scenario_files(&net_dir)?);
+    }
+    Ok(run_files(&files, filter, run_scenario_loopback))
 }
 
 #[cfg(test)]
@@ -512,6 +605,31 @@ mod tests {
         assert_eq!(out.stop, StopReason::MaxIters);
         assert!(out.metrics.sim_events > 0);
         assert!(!run.event_log.is_empty());
+    }
+
+    #[test]
+    fn net_faults_parse_and_loopback_runner_grades() {
+        // shard 0 so the protocol fault is the first failure slot (the
+        // peer's poisoned-barrier escape is surfaced behind it)
+        let src = format!(
+            "{BASE}\n[faults]\nnet_truncate_shard = 0\nnet_truncate_round = 3\n\
+             [expect]\nstop = \"shard-failed\"\nkind = \"protocol\"\n"
+        );
+        let sc = Scenario::from_toml_str(&src, "x").unwrap();
+        assert_eq!(sc.net.truncate_at, Some((0, 3)));
+        let run = run_scenario_loopback(&sc).unwrap();
+        assert!(run.verdict.pass, "detail: {}", run.verdict.detail);
+        // a fault-free scenario passes over the wire too — and with
+        // exact precision the decoded frames reproduce the barrier
+        // path's objective bit-for-bit
+        let clean = Scenario::from_toml_str(BASE, "x").unwrap();
+        let wire = run_scenario_loopback(&clean).unwrap();
+        assert!(wire.verdict.pass, "detail: {}", wire.verdict.detail);
+        let base = run_scenario(&clean).unwrap();
+        assert_eq!(
+            wire.output.unwrap().objective.to_bits(),
+            base.output.unwrap().objective.to_bits()
+        );
     }
 
     #[test]

@@ -80,7 +80,10 @@ use crate::coordinator::observer::Observer;
 use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::select::Select;
 use crate::loss::{Logistic, Loss};
-use crate::shard::engine::{solve_sharded_with, ShardSpec, ShardedConfig};
+use crate::net::{LoopbackLink, TcpLink, Transport};
+use crate::shard::engine::{
+    solve_sharded_linked, solve_sharded_with, ShardSpec, ShardedConfig,
+};
 use crate::shard::{partition, ShardStrategy};
 use crate::sparse::io::Dataset;
 use crate::sparse::CscMatrix;
@@ -112,6 +115,7 @@ struct ShardedSetup {
     reconcile_max_rounds: usize,
     max_staleness_rounds: usize,
     barrier_timeout_secs: f64,
+    transport: Transport,
 }
 
 impl Solver {
@@ -254,13 +258,86 @@ impl Solver {
             barrier_timeout_secs: setup.barrier_timeout_secs,
             delta_reconcile: true,
         };
-        solve_sharded_with(
-            &self.problem,
-            setup.specs,
-            self.warm_start.as_deref(),
-            &scfg,
-            self.observer.as_deref_mut(),
-        )
+        let timeout = (scfg.barrier_timeout_secs > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(scfg.barrier_timeout_secs));
+        match setup.transport {
+            Transport::Barrier => solve_sharded_with(
+                &self.problem,
+                setup.specs,
+                self.warm_start.as_deref(),
+                &scfg,
+                self.observer.as_deref_mut(),
+            ),
+            Transport::Loopback { precision } => {
+                let link = LoopbackLink::new(
+                    setup.specs.len(),
+                    scfg.barrier_spin,
+                    timeout,
+                    precision,
+                );
+                solve_sharded_linked(
+                    &self.problem,
+                    setup.specs,
+                    self.warm_start.as_deref(),
+                    &scfg,
+                    self.observer.as_deref_mut(),
+                    &link,
+                )
+            }
+            Transport::Tcp {
+                ref listen,
+                ref peers,
+                precision,
+            } => {
+                let link = match TcpLink::connect(
+                    setup.specs.len(),
+                    listen,
+                    peers,
+                    timeout,
+                    precision,
+                ) {
+                    Ok(link) => link,
+                    // Connect failure is a link failure, not a panic:
+                    // report the same shape an in-flight socket death
+                    // would (degrade, never hang — §Failure semantics).
+                    Err(e) => return Self::transport_failed(&self.problem, setup.specs.len(), e),
+                };
+                solve_sharded_linked(
+                    &self.problem,
+                    setup.specs,
+                    self.warm_start.as_deref(),
+                    &scfg,
+                    self.observer.as_deref_mut(),
+                    &link,
+                )
+            }
+        }
+    }
+
+    /// Failed [`SolveOutput`] for a transport that never came up: no
+    /// pool ever ran, so the iterate is the zero vector and the failure
+    /// record carries the connect error.
+    fn transport_failed(problem: &Problem, shards: usize, e: std::io::Error) -> SolveOutput {
+        use crate::coordinator::convergence::{History, SolveError, SolveErrorKind, StopReason};
+        let metrics = crate::coordinator::metrics::MetricsSnapshot {
+            shards: shards as u64,
+            shard_failures: shards as u64,
+            ..Default::default()
+        };
+        SolveOutput {
+            w: vec![0.0; problem.n_features()],
+            objective: f64::INFINITY,
+            nnz: 0,
+            history: History::default(),
+            metrics,
+            stop: StopReason::ShardFailed,
+            elapsed_secs: 0.0,
+            failure: Some(SolveError {
+                shard: None,
+                kind: SolveErrorKind::Link,
+                message: format!("tcp transport failed to connect: {e}"),
+            }),
+        }
     }
 }
 
@@ -297,6 +374,7 @@ pub struct SolverBuilder {
     reconcile_max_rounds: usize,
     max_staleness_rounds: usize,
     barrier_timeout_secs: f64,
+    transport: Transport,
     screening: bool,
     kkt_every: usize,
     kkt_adaptive: bool,
@@ -337,6 +415,7 @@ impl Default for SolverBuilder {
             reconcile_max_rounds: 0,
             max_staleness_rounds: 0,
             barrier_timeout_secs: 30.0,
+            transport: Transport::Barrier,
             screening: ecfg.screening,
             kkt_every: ecfg.kkt_every,
             kkt_adaptive: ecfg.kkt_adaptive,
@@ -579,6 +658,21 @@ impl SolverBuilder {
         self
     }
 
+    /// Reconcile backend for `shards > 1` (default
+    /// [`Transport::Barrier`], the in-memory protocol).
+    /// [`Transport::Loopback`] routes every reconcile exchange through
+    /// the full encode→frame→decode wire protocol in-process
+    /// ([`crate::net::LoopbackLink`]); [`Transport::Tcp`] ships the
+    /// same frames over blocking sockets ([`crate::net::TcpLink`]),
+    /// with [`barrier_timeout_secs`](Self::barrier_timeout_secs)
+    /// mapped onto the socket deadlines. Non-barrier transports
+    /// require `shards >= 2` (validated at build time — a wire with
+    /// one peer is a configuration error, not a degenerate success).
+    pub fn transport(mut self, transport: Transport) -> Self {
+        self.transport = transport;
+        self
+    }
+
     /// Active-set KKT screening ([`crate::screen`]; default off).
     /// Restricts selection to coordinates whose optimality conditions
     /// are not yet confidently satisfied; periodic full-set KKT sweeps
@@ -720,6 +814,29 @@ impl SolverBuilder {
              disable the timeout), got {}",
             self.barrier_timeout_secs
         );
+        if self.transport != Transport::Barrier {
+            anyhow::ensure!(
+                self.shards >= 2,
+                "SolverBuilder: transport = {} requires shards >= 2 — the wire \
+                 transports carry cross-shard reconcile traffic, and a \
+                 single-pool solve has none",
+                self.transport.name()
+            );
+        }
+        if let Transport::Tcp { listen, peers, .. } = &self.transport {
+            anyhow::ensure!(
+                listen.parse::<std::net::SocketAddr>().is_ok(),
+                "SolverBuilder: transport = tcp needs a valid listen socket \
+                 address (host:port), got {listen:?}"
+            );
+            for peer in peers {
+                anyhow::ensure!(
+                    peer.parse::<std::net::SocketAddr>().is_ok(),
+                    "SolverBuilder: transport = tcp peer {peer:?} is not a \
+                     valid socket address (host:port)"
+                );
+            }
+        }
         if self.screening {
             anyhow::ensure!(
                 self.lambda > 0.0,
@@ -799,6 +916,7 @@ impl SolverBuilder {
                 },
                 max_staleness_rounds: self.max_staleness_rounds,
                 barrier_timeout_secs: self.barrier_timeout_secs,
+                transport: self.transport,
             })
         } else {
             None
@@ -1232,6 +1350,33 @@ mod tests {
         assert!(base().screening(true).build().is_ok());
         // kkt_every = 0 is only rejected when screening is on
         assert!(base().kkt_every(0).build().is_ok());
+        // wire transports: need >= 2 shards; tcp needs parseable socket
+        // addresses for listen and every peer
+        let loopback = || Transport::Loopback {
+            precision: crate::net::WirePrecision::Exact,
+        };
+        assert!(base().transport(loopback()).build().is_err());
+        assert!(base().shards(2).transport(loopback()).build().is_ok());
+        let tcp = |listen: &str, peers: &[&str]| Transport::Tcp {
+            listen: listen.into(),
+            peers: peers.iter().map(|p| p.to_string()).collect(),
+            precision: crate::net::WirePrecision::Exact,
+        };
+        assert!(base()
+            .shards(2)
+            .transport(tcp("127.0.0.1:0", &[]))
+            .build()
+            .is_ok());
+        assert!(base()
+            .shards(2)
+            .transport(tcp("not-an-address", &[]))
+            .build()
+            .is_err());
+        assert!(base()
+            .shards(2)
+            .transport(tcp("127.0.0.1:0", &["localhost"]))
+            .build()
+            .is_err());
     }
 
     #[test]
