@@ -7,7 +7,8 @@
 //! three z-update disciplines (atomic CAS, unsync store, plain scatter)
 //! single-threaded AND under real multi-thread contention (CAS vs the
 //! engine's buffered scatter+reduce), phase-barrier crossings (std mutex
-//! barrier vs the spin barrier), the screening layer (full vs screened
+//! barrier vs the spin barrier), the event stream (disabled-emit delta
+//! vs the bare loop, dyn-dispatch floor), the screening layer (full vs screened
 //! proposal sweep, the full-set KKT sweep kernel), the scalar vs
 //! 4-way-unrolled gather/scatter kernels, line-search refinement,
 //! objective evaluation, and — when artifacts are built — the HLO
@@ -670,6 +671,80 @@ fn main() {
                 }
             }
         }
+    }
+
+    // ---- event stream: disabled emit vs dyn-dispatched subscriber ------------
+    // The observability contract: a `NoopSink` emit site costs nothing
+    // (`enabled()` is a compile-time `false`, the event is never even
+    // constructed), so the first row reports the DELTA against the bare
+    // loop. The second row prices the enabled path: construct the event
+    // and match-dispatch it through `&mut dyn EventSink` to a no-op
+    // subscriber method — the floor any real subscriber pays per event.
+    {
+        use gencd::event::{
+            EventSink, Events, IterationCompleted, Meta, NoopSink, NoopSubscriber, SolveInfo,
+            Subscribed,
+        };
+        const EMITS: u64 = 100_000;
+        let iter_body = |i: u64| -> u64 { std::hint::black_box(i).wrapping_mul(0x9e3779b97f4a7c15) };
+        let s_bare = bench_loop(0.3, 10, || {
+            let mut acc = 0u64;
+            for i in 0..EMITS {
+                acc = acc.wrapping_add(iter_body(i));
+            }
+            std::hint::black_box(acc);
+        });
+        let mut noop = NoopSink;
+        let s_disabled = bench_loop(0.3, 10, || {
+            let mut acc = 0u64;
+            for i in 0..EMITS {
+                acc = acc.wrapping_add(iter_body(i));
+                if noop.enabled() {
+                    noop.emit(
+                        &Meta { timestamp_ticks: i, shard: 0, thread: 0 },
+                        &Events::from(IterationCompleted {
+                            iter: i,
+                            updates: 1,
+                            selected: 1,
+                            objective: None,
+                            nnz: None,
+                        }),
+                    );
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        let disabled_delta = (s_disabled.best - s_bare.best) * 1e9 / EMITS as f64;
+        println!(
+            "\nevent/disabled     {:>9.3} ns/iter (delta vs bare loop) {s_disabled}",
+            disabled_delta
+        );
+        report.push("event_emit_disabled_ns_per_iter", disabled_delta.max(0.0));
+
+        let mut subscribed = Subscribed::new(NoopSubscriber, &SolveInfo::default());
+        let sink: &mut dyn EventSink = &mut subscribed;
+        let s_dyn = bench_loop(0.3, 10, || {
+            let mut acc = 0u64;
+            for i in 0..EMITS {
+                acc = acc.wrapping_add(iter_body(i));
+                if sink.enabled() {
+                    sink.emit(
+                        &Meta { timestamp_ticks: i, shard: 0, thread: 0 },
+                        &Events::from(IterationCompleted {
+                            iter: i,
+                            updates: 1,
+                            selected: 1,
+                            objective: None,
+                            nnz: None,
+                        }),
+                    );
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        let dyn_cost = (s_dyn.best - s_bare.best) * 1e9 / EMITS as f64;
+        println!("event/dyn-noop     {:>9.2} ns/event           {s_dyn}", dyn_cost);
+        report.push("event_emit_dyn_ns_per_event", dyn_cost.max(0.0));
     }
 
     // ---- line search ---------------------------------------------------------

@@ -6,6 +6,7 @@ use super::{bench_budget, bench_config, bench_scale, paper_datasets, Table};
 use crate::coloring::{color_features, Strategy};
 use crate::coordinator::driver::{run_on, SolveResult};
 use crate::coordinator::Algorithm;
+use crate::event::phases::phase_secs;
 use crate::linalg::{shotgun_pstar, spectral_radius_xtx};
 use crate::simulate::{self, accepted, AcceptShape, CostModel, IterProfile};
 use crate::sparse::io::Dataset;
@@ -292,7 +293,7 @@ pub fn print_shard_scaling(shards_list: &[usize], threads: usize) {
                     format!("{:.6}", res.objective),
                     res.nnz.to_string(),
                     format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
-                    format!("{:.3}", res.metrics.reconcile_secs),
+                    format!("{:.3}", phase_secs(&res.metrics, "reconcile")),
                     format!("{:.3e}", res.metrics.replica_divergence),
                 ]);
             }
@@ -345,7 +346,7 @@ pub fn print_numa_ab(shards: usize, threads: usize) {
                 if adaptive { "adaptive<=8" } else { "every round" }.into(),
                 format!("{:.6}", res.objective),
                 format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
-                format!("{:.3}", res.metrics.reconcile_secs),
+                format!("{:.3}", phase_secs(&res.metrics, "reconcile")),
                 format!("{:.3}", res.metrics.dirty_chunk_frac),
                 res.metrics.reconcile_rounds_skipped.to_string(),
                 res.metrics.numa_nodes.to_string(),
@@ -395,8 +396,8 @@ pub fn print_net_ab(shards: usize, threads: usize) {
                 label.into(),
                 format!("{:.6}", res.objective),
                 format!("{:.2e}", res.metrics.updates_per_sec(res.elapsed_secs)),
-                format!("{:.3}", res.metrics.reconcile_secs),
-                format!("{:.2}", res.metrics.codec_secs * 1e3),
+                format!("{:.3}", phase_secs(&res.metrics, "reconcile")),
+                format!("{:.2}", phase_secs(&res.metrics, "codec") * 1e3),
                 format!("{:.2}", res.metrics.wire_bytes_tx as f64 / 1e6),
                 format!("{:.2}", res.metrics.wire_bytes_rx as f64 / 1e6),
             ]);

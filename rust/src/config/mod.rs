@@ -158,6 +158,10 @@ pub struct SolverConfig {
     /// Wire value precision: exact (f64, bit-exact with the barrier) |
     /// f32 (half the delta bytes). See `net::WirePrecision`.
     pub wire_precision: String,
+    /// Structured event log rendering: text | json (line-JSON, one
+    /// event per line — `gencd events --check` validates it). See
+    /// `event::LogFormat`.
+    pub log_format: String,
 }
 
 impl Default for SolverConfig {
@@ -192,6 +196,7 @@ impl Default for SolverConfig {
             listen: "127.0.0.1:0".into(),
             peers: String::new(),
             wire_precision: "exact".into(),
+            log_format: "text".into(),
         }
     }
 }
@@ -320,6 +325,7 @@ impl RunConfig {
             ("solver", "wire_precision") => {
                 self.solver.wire_precision = as_str(value)?
             }
+            ("solver", "log_format") => self.solver.log_format = as_str(value)?,
             ("output", "csv") => self.csv = Some(as_str(value)?),
             ("", _) => anyhow::bail!("top-level key '{key}' not recognized"),
             _ => anyhow::bail!("unknown config key {table}.{key}"),

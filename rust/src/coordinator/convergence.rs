@@ -146,17 +146,23 @@ pub enum SolveErrorKind {
     Protocol,
 }
 
-impl std::fmt::Display for SolveErrorKind {
-    // Matched by scenario expectation files ([expect] kind = "...");
-    // keep these strings stable.
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
+impl SolveErrorKind {
+    /// The stable string form — the `Display` rendering, the scenario
+    /// expectation files' `[expect] kind = "..."` values, and the
+    /// `shard_failed` event's `kind` field. Keep these strings stable.
+    pub fn name(&self) -> &'static str {
+        match self {
             SolveErrorKind::Panic => "panic",
             SolveErrorKind::Timeout => "timeout",
             SolveErrorKind::Link => "link",
             SolveErrorKind::Protocol => "protocol",
-        };
-        write!(f, "{s}")
+        }
+    }
+}
+
+impl std::fmt::Display for SolveErrorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
     }
 }
 

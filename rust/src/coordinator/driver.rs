@@ -14,6 +14,7 @@ use super::metrics::MetricsSnapshot;
 use crate::coloring::Strategy;
 use crate::config::{Backend, RunConfig};
 use crate::data;
+use crate::event::StructuredLog;
 use crate::loss;
 use crate::net::Transport;
 use crate::shard::ShardStrategy;
@@ -39,6 +40,10 @@ pub struct SolveResult {
     pub coloring_secs: Option<f64>,
     pub preprocess_secs: f64,
     pub dataset: String,
+    /// Structured event-log lines, collected when
+    /// `solver.log_format = "json"` attaches a [`StructuredLog`]
+    /// subscriber to the solve. Empty under the default text format.
+    pub event_log: Vec<String>,
 }
 
 /// Load (or generate) the dataset a config names.
@@ -114,12 +119,21 @@ pub fn run_on(
         )
     })?;
     let dataset_name = ds.name.clone();
+    anyhow::ensure!(
+        matches!(cfg.solver.log_format.as_str(), "text" | "json"),
+        "unknown solver.log_format '{}' (text|json)",
+        cfg.solver.log_format
+    );
+    // json attaches the structured-log subscriber; the default "text"
+    // keeps the solve on the statically-dispatched no-op sink (zero
+    // emit cost — the observability surface costs nothing unasked)
+    let event_log = (cfg.solver.log_format == "json").then(StructuredLog::json);
 
     // build() runs the algorithm's preprocessing (spectral P*,
     // coloring) and validates the full combination — e.g.
     // conflict-free updates without a coloring are rejected here.
     let pre_timer = Timer::start();
-    let solver = Solver::builder()
+    let mut builder = Solver::builder()
         .dataset(ds)
         .normalize(false) // applied above, per cfg.dataset.normalize
         .boxed_loss(loss)
@@ -148,8 +162,11 @@ pub fn run_on(
         .screening(cfg.solver.screening)
         .kkt_every(cfg.solver.kkt_every)
         .kkt_adaptive(cfg.solver.kkt_adaptive)
-        .fast_kernels(cfg.solver.fast_kernels)
-        .build()?;
+        .fast_kernels(cfg.solver.fast_kernels);
+    if let Some(log) = &event_log {
+        builder = builder.subscriber(log.clone());
+    }
+    let solver = builder.build()?;
     let preprocess_secs = pre_timer.elapsed_secs();
 
     let pre = solver.preprocessing();
@@ -181,6 +198,7 @@ pub fn run_on(
         coloring_secs,
         preprocess_secs,
         dataset: dataset_name,
+        event_log: event_log.map(|log| log.lines()).unwrap_or_default(),
     };
 
     if let Some(csv) = &cfg.csv {
@@ -331,6 +349,27 @@ mod tests {
         let mut cfg = base_cfg("shotgun");
         cfg.solver.transport = "udp".into();
         assert!(run(&cfg).is_err(), "unknown transport must be rejected");
+    }
+
+    #[test]
+    fn json_log_format_collects_event_lines() {
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.max_iters = 40;
+        cfg.solver.log_format = "json".into();
+        let res = run(&cfg).unwrap();
+        assert!(!res.event_log.is_empty(), "json log format must collect lines");
+        assert!(res.event_log.iter().all(|l| l.starts_with('{')));
+        let report = crate::event::check::check_lines(
+            res.event_log.iter().map(|s| s.as_str()),
+        )
+        .unwrap();
+        crate::event::check::verify_coverage(&report).unwrap();
+        // default text format stays silent; unknown formats are refused
+        let res = run(&base_cfg("shotgun")).unwrap();
+        assert!(res.event_log.is_empty());
+        let mut cfg = base_cfg("shotgun");
+        cfg.solver.log_format = "yaml".into();
+        assert!(run(&cfg).is_err());
     }
 
     #[test]

@@ -159,6 +159,10 @@ use super::observer::{IterationInfo, Observer};
 use super::problem::{Problem, SharedState};
 use super::propose::{self, Proposal};
 use super::select::Select;
+use crate::event::{
+    self, emit, EventSink, IterationCompleted, KktSweep, Meta, NoopSink, ProposalBatch,
+    ScreenGate, SpillDrained, UpdateApplied,
+};
 use crate::loss;
 use crate::screen::{self, ActiveSet, ScreenedSelect, SweepKind, SweepStats};
 use crate::util::atomic::{SyncCell, SyncF64Vec};
@@ -331,6 +335,11 @@ pub struct EngineHooks<'a> {
     /// reconcile boundaries to fold only touched chunks; unsharded
     /// solves leave this `None` and pay nothing.
     pub dirty: Option<&'a DirtyChunks>,
+    /// Typed event stream ([`crate::event`]). `None` instantiates the
+    /// engine with the static [`NoopSink`] — every emit site compiles
+    /// to nothing; `Some` pays one dynamic dispatch per event, on the
+    /// leader thread only.
+    pub events: Option<&'a mut dyn EventSink>,
 }
 
 impl<'a> EngineHooks<'a> {
@@ -379,6 +388,18 @@ enum UpdateMode {
     /// Buffered semantics under the memory budget: thread-local sparse
     /// accumulation, atomic drain.
     Spill,
+}
+
+impl UpdateMode {
+    /// Stable name carried by [`UpdateApplied`] events.
+    fn name(&self) -> &'static str {
+        match self {
+            UpdateMode::ConflictFree => "conflict-free",
+            UpdateMode::Atomic => "atomic",
+            UpdateMode::Buffered => "buffered",
+            UpdateMode::Spill => "spill",
+        }
+    }
 }
 
 /// Iteration plan: written by the leader, read by workers. The RwLock is
@@ -479,14 +500,35 @@ pub fn solve(
 
 /// Run GenCD from existing state (warm start), with arbitrary Select /
 /// Accept policies and optional leader-side hooks (observer, custom
-/// block-propose backend).
+/// block-propose backend, event sink).
+///
+/// The body is generic over the event sink: with no sink attached the
+/// engine monomorphizes against [`NoopSink`] (every emit site folds
+/// away — the zero-cost discipline of [`crate::event`]); with one
+/// attached it runs the `&mut dyn EventSink` instantiation, one virtual
+/// call per event on the leader thread.
 pub fn solve_from(
     problem: &Problem,
     state: &SharedState,
     select: Box<dyn Select>,
     accept: Box<dyn Accept>,
     cfg: &EngineConfig,
+    mut hooks: EngineHooks<'_>,
+) -> SolveOutput {
+    match hooks.events.take() {
+        Some(sink) => solve_from_impl(problem, state, select, accept, cfg, hooks, sink),
+        None => solve_from_impl(problem, state, select, accept, cfg, hooks, NoopSink),
+    }
+}
+
+fn solve_from_impl<E: EventSink>(
+    problem: &Problem,
+    state: &SharedState,
+    select: Box<dyn Select>,
+    accept: Box<dyn Accept>,
+    cfg: &EngineConfig,
     hooks: EngineHooks<'_>,
+    events: E,
 ) -> SolveOutput {
     let threads = cfg.threads.max(1);
     let n = problem.n_samples();
@@ -600,6 +642,7 @@ pub fn solve_from(
         acceptor: accept,
         history: History::default(),
         observer: hooks.observer,
+        events,
         timer: Timer::start(),
         last_log_at: -1.0,
         tol_hits: 0,
@@ -616,7 +659,7 @@ pub fn solve_from(
         },
     };
 
-    let run_worker = |tid: usize, leader: Option<&mut LeaderState>| {
+    let run_worker = |tid: usize, leader: Option<&mut LeaderState<'_, E>>| {
         let mut leader = leader;
         // a panicking worker (debug assert, proposer failure) must not
         // strand its peers at the next barrier
@@ -993,6 +1036,17 @@ pub fn solve_from(
         // since the last sweep)
         snapshot.active_cols = active.popcount() as u64;
     }
+    // end-of-solve phase timing — the canonical table, one code path for
+    // --profile, experiment columns and bench emitters
+    event::phases::emit_rows(
+        &mut leader_state.events,
+        Meta {
+            timestamp_ticks: snapshot.iterations,
+            shard: 0,
+            thread: 0,
+        },
+        &snapshot,
+    );
     SolveOutput {
         nnz: loss::nnz(&w),
         w,
@@ -1005,7 +1059,7 @@ pub fn solve_from(
     }
 }
 
-struct LeaderState<'a> {
+struct LeaderState<'a, E: EventSink> {
     selector: Box<dyn Select>,
     acceptor: Box<dyn Accept>,
     /// The default observer: records the convergence log that
@@ -1013,6 +1067,10 @@ struct LeaderState<'a> {
     history: History,
     /// User hook, run after the default observer each iteration.
     observer: Option<&'a mut dyn Observer>,
+    /// Event sink, statically `NoopSink` unless a subscriber is
+    /// attached (see [`solve_from`]); leader-only, like everything else
+    /// in here.
+    events: E,
     timer: Timer,
     last_log_at: f64,
     tol_hits: u32,
@@ -1103,11 +1161,11 @@ fn choose_update_mode(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn plan_iteration(
+fn plan_iteration<E: EventSink>(
     problem: &Problem,
     state: &SharedState,
     cfg: &EngineConfig,
-    ls: &mut LeaderState,
+    ls: &mut LeaderState<'_, E>,
     metrics: &Metrics,
     plan: &mut Plan,
     mean_col_nnz: f64,
@@ -1150,6 +1208,19 @@ fn plan_iteration(
             metrics.kkt_passes.fetch_add(1, Relaxed);
             metrics.reactivations.fetch_add(reactivated, Relaxed);
             metrics.active_cols.store(active_now, Relaxed);
+            emit!(
+                ls.events,
+                Meta {
+                    timestamp_ticks: ls.iter as u64,
+                    shard: 0,
+                    thread: 0,
+                },
+                KktSweep {
+                    violators,
+                    reactivations: reactivated,
+                    active: active_now,
+                }
+            );
             // adaptive cadence: let the measured reactivation rate set
             // the next interval — a clean sweep buys a longer one, any
             // repaired mistake snaps the net tighter. Gate sweeps are
@@ -1176,6 +1247,15 @@ fn plan_iteration(
                 // exactly, so the screened solution is the unscreened
                 // one, certified
                 plan.stop = Some(StopReason::Converged);
+                emit!(
+                    ls.events,
+                    Meta {
+                        timestamp_ticks: ls.iter as u64,
+                        shard: 0,
+                        thread: 0,
+                    },
+                    ScreenGate { active: active_now }
+                );
             }
             // a failed gate left every violator active (reactivating
             // frozen ones); the tolerance counter was reset when the
@@ -1206,6 +1286,21 @@ fn plan_iteration(
         metrics
             .log_nanos
             .fetch_add((t0.elapsed_secs() * 1e9) as u64, Relaxed);
+        emit!(
+            ls.events,
+            Meta {
+                timestamp_ticks: ls.iter as u64,
+                shard: 0,
+                thread: 0,
+            },
+            IterationCompleted {
+                iter: ls.iter as u64,
+                updates,
+                selected: plan.selected.len() as u64,
+                objective,
+                nnz: nnz_now.map(|v| v as u64),
+            }
+        );
     }
 
     // ---- observers ---------------------------------------------------
@@ -1282,6 +1377,7 @@ fn plan_iteration(
     // (Accept policies dedupe the accepted side again for the other
     // cases.) The built-in selectors never repeat, but a custom one
     // may; this costs one O(|J|) stamped scan, no hashing.
+    let proposed = plan.selected.len() as u64;
     if plan.selected.len() > 1 {
         if ls.seen_select.len() < problem.n_features() {
             ls.seen_select.resize(problem.n_features(), 0);
@@ -1299,6 +1395,18 @@ fn plan_iteration(
             }
         });
     }
+    emit!(
+        ls.events,
+        Meta {
+            timestamp_ticks: ls.iter as u64,
+            shard: 0,
+            thread: 0,
+        },
+        ProposalBatch {
+            proposed,
+            deduped: plan.selected.len() as u64,
+        }
+    );
 
     // ---- screening: sweep schedule + threshold publication ----------
     plan.screen_sweep = None;
@@ -1358,7 +1466,30 @@ fn plan_iteration(
     );
     if plan.update == UpdateMode::Spill {
         metrics.spill_iters.fetch_add(1, Relaxed);
+        emit!(
+            ls.events,
+            Meta {
+                timestamp_ticks: ls.iter as u64,
+                shard: 0,
+                thread: 0,
+            },
+            SpillDrained {
+                iter: ls.iter as u64,
+            }
+        );
     }
+    emit!(
+        ls.events,
+        Meta {
+            timestamp_ticks: ls.iter as u64,
+            shard: 0,
+            thread: 0,
+        },
+        UpdateApplied {
+            path: plan.update.name(),
+            cols: plan.selected.len() as u64,
+        }
+    );
 
     metrics.iterations.fetch_add(1, Relaxed);
     ls.iter += 1;

@@ -9,6 +9,7 @@ use std::sync::Arc;
 use super::algorithms::{Algorithm, Preprocessed};
 use super::engine::SolveOutput;
 use crate::coloring::Strategy;
+use crate::event::{emit, EventSink, Meta, PathStep};
 use crate::loss::{self, Loss};
 use crate::solver::Solver;
 use crate::sparse::io::Dataset;
@@ -75,6 +76,17 @@ pub fn solve_path(
     loss_name: &str,
     cfg: &PathConfig,
 ) -> anyhow::Result<Vec<PathPoint>> {
+    solve_path_with(ds, loss_name, cfg, None)
+}
+
+/// [`solve_path`] with an event sink: one [`PathStep`] per completed
+/// path point (`timestamp_ticks` = step index — logical, replayable).
+pub fn solve_path_with(
+    ds: &Dataset,
+    loss_name: &str,
+    cfg: &PathConfig,
+    mut events: Option<&mut dyn EventSink>,
+) -> anyhow::Result<Vec<PathPoint>> {
     let loss = loss::by_name(loss_name)?;
     let lmax = lambda_max(&ds.x, &ds.y, loss.as_ref());
     anyhow::ensure!(lmax > 0.0, "lambda_max = 0 (degenerate problem)");
@@ -113,6 +125,18 @@ pub fn solve_path(
             .build()?
             .solve();
         warm = out.w.clone();
+        if let Some(sink) = events.as_deref_mut() {
+            emit!(
+                sink,
+                Meta { timestamp_ticks: step as u64, shard: 0, thread: 0 },
+                PathStep {
+                    step: step as u64,
+                    lambda: lam,
+                    nnz: out.nnz as u64,
+                    objective: out.objective,
+                }
+            );
+        }
         points.push(PathPoint {
             lam,
             objective: out.objective,
@@ -187,6 +211,28 @@ mod tests {
         // warm starts: each point's weights are finite, objective finite
         for p in &path {
             assert!(p.objective.is_finite());
+        }
+    }
+
+    #[test]
+    fn path_steps_are_emitted_in_order() {
+        use crate::event::{SolveInfo, StructuredLog, Subscribed};
+        let ds = dataset();
+        let cfg = PathConfig {
+            n_points: 3,
+            min_ratio: 0.05,
+            threads: 1,
+            max_seconds: 1.0,
+            ..Default::default()
+        };
+        let log = StructuredLog::text();
+        let mut sub = Subscribed::new(log.clone(), &SolveInfo::default());
+        let path = solve_path_with(&ds, "squared", &cfg, Some(&mut sub)).unwrap();
+        let lines = log.lines();
+        assert_eq!(lines.len(), path.len());
+        for (i, line) in lines.iter().enumerate() {
+            assert!(line.contains(" path "), "{line}");
+            assert!(line.contains(&format!("step={}", i + 1)), "{line}");
         }
     }
 

@@ -1,0 +1,142 @@
+//! `gencd events --check`: validate a line-JSON event log. Every line
+//! must parse with the vendored JSON parser and carry the envelope keys
+//! (`ev`, `t`, `shard`); the stream as a whole must cover the kinds any
+//! real solve produces. CI runs this against a `--log-format json` solve
+//! and fails the `events` job on any malformed or missing-kind stream.
+
+use std::collections::BTreeMap;
+
+use crate::util::json;
+
+/// Event kinds every successful logged solve must produce.
+pub const EXPECTED_KINDS: &[&str] = &["iteration", "proposal", "update"];
+
+/// Summary of a validated log.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct CheckReport {
+    pub lines: usize,
+    /// kind -> occurrences
+    pub kinds: BTreeMap<String, usize>,
+}
+
+impl CheckReport {
+    /// Human summary, one kind per line.
+    pub fn render(&self) -> String {
+        let mut out = format!("{} lines ok\n", self.lines);
+        for (kind, count) in &self.kinds {
+            out.push_str(&format!("  {kind:<12} {count}\n"));
+        }
+        out
+    }
+}
+
+/// Validate every (non-empty) line: well-formed JSON object, envelope
+/// keys present and typed. Returns the kind census on success, or the
+/// first offending line's error.
+pub fn check_lines<'a, I: IntoIterator<Item = &'a str>>(lines: I) -> Result<CheckReport, String> {
+    let mut report = CheckReport::default();
+    for (idx, raw) in lines.into_iter().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| format!("line {}: not valid JSON: {e}", idx + 1))?;
+        let kind = v
+            .get("ev")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| format!("line {}: missing string key \"ev\"", idx + 1))?;
+        for key in ["t", "shard"] {
+            v.get(key)
+                .and_then(|j| j.as_f64())
+                .ok_or_else(|| format!("line {}: missing numeric key \"{key}\"", idx + 1))?;
+        }
+        report.lines += 1;
+        *report.kinds.entry(kind.to_string()).or_insert(0) += 1;
+    }
+    Ok(report)
+}
+
+/// Check that the stream covers the kinds a real solve must emit.
+pub fn verify_coverage(report: &CheckReport) -> Result<(), String> {
+    let missing: Vec<&str> = EXPECTED_KINDS
+        .iter()
+        .copied()
+        .filter(|k| !report.kinds.contains_key(*k))
+        .collect();
+    if report.lines == 0 {
+        return Err("event log is empty".to_string());
+    }
+    if missing.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("missing expected event kinds: {}", missing.join(", ")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::log::{event_fields, format_line, LogFormat};
+    use crate::event::{Events, IterationCompleted, Meta, ProposalBatch, UpdateApplied};
+
+    fn line(ev: Events) -> String {
+        format_line(
+            LogFormat::Json,
+            &Meta::default(),
+            ev.kind(),
+            &event_fields(&ev),
+        )
+    }
+
+    #[test]
+    fn real_lines_pass_and_cover() {
+        let lines = vec![
+            line(Events::from(IterationCompleted {
+                iter: 0,
+                updates: 4,
+                selected: 4,
+                objective: Some(0.5),
+                nnz: Some(2),
+            })),
+            line(Events::from(ProposalBatch {
+                proposed: 4,
+                deduped: 4,
+            })),
+            line(Events::from(UpdateApplied {
+                path: "buffered",
+                cols: 4,
+            })),
+        ];
+        let report = check_lines(lines.iter().map(|s| s.as_str())).unwrap();
+        assert_eq!(report.lines, 3);
+        verify_coverage(&report).unwrap();
+        assert!(report.render().contains("iteration"));
+    }
+
+    #[test]
+    fn malformed_line_is_rejected() {
+        let err = check_lines(["{\"ev\":\"iteration\",\"t\":}"]).unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn missing_envelope_is_rejected() {
+        let err = check_lines(["{\"t\":1,\"shard\":0}"]).unwrap_err();
+        assert!(err.contains("\"ev\""), "{err}");
+        let err = check_lines(["{\"ev\":\"iteration\",\"shard\":0}"]).unwrap_err();
+        assert!(err.contains("\"t\""), "{err}");
+    }
+
+    #[test]
+    fn coverage_requires_expected_kinds() {
+        let lines = vec![line(Events::from(UpdateApplied {
+            path: "atomic",
+            cols: 1,
+        }))];
+        let report = check_lines(lines.iter().map(|s| s.as_str())).unwrap();
+        let err = verify_coverage(&report).unwrap_err();
+        assert!(err.contains("iteration"), "{err}");
+        let err = verify_coverage(&CheckReport::default()).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+    }
+}

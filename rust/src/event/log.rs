@@ -1,0 +1,361 @@
+//! [`StructuredLog`]: line-oriented event log (text or line-JSON) behind a
+//! bounded per-solve ring buffer, plus the one shared line formatter
+//! ([`format_line`]) that the sim report renderer uses too — so sim
+//! verdict logs and production logs are byte-for-byte the same format.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use super::{Events, Meta, SolveInfo, Subscriber};
+
+/// Output syntax of the structured log (`--log-format json|text`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LogFormat {
+    #[default]
+    Text,
+    Json,
+}
+
+impl LogFormat {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "text" => Some(LogFormat::Text),
+            "json" => Some(LogFormat::Json),
+            _ => None,
+        }
+    }
+}
+
+/// One typed field of a log line. `None`-ish values are simply omitted
+/// by the caller; non-finite floats render as `null` / `nan`.
+#[derive(Debug, Clone, Copy)]
+pub enum Field {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+}
+
+/// Render one event line. This is THE log syntax — both the structured
+/// log and `gencd sim --events` go through here, so the two streams stay
+/// byte-compatible:
+///
+/// - text: `t=00000012 shard=01 kind key=value ...`
+/// - json: `{"ev":"kind","t":12,"shard":1,"thread":0,"key":value,...}`
+///
+/// Formatting is deterministic (logical timestamps, shortest-roundtrip
+/// floats), which the two-run byte-identity test in sim_faults.rs pins.
+pub fn format_line(format: LogFormat, meta: &Meta, kind: &str, fields: &[(&str, Field)]) -> String {
+    let mut s = String::with_capacity(64);
+    match format {
+        LogFormat::Text => {
+            let _ = write!(s, "t={:08} shard={:02} {}", meta.timestamp_ticks, meta.shard, kind);
+            for (key, value) in fields {
+                let _ = match value {
+                    Field::U64(v) => write!(s, " {key}={v}"),
+                    Field::F64(v) if v.is_finite() => write!(s, " {key}={v}"),
+                    Field::F64(_) => write!(s, " {key}=nan"),
+                    Field::Str(v) => write!(s, " {key}={v}"),
+                };
+            }
+        }
+        LogFormat::Json => {
+            let _ = write!(
+                s,
+                "{{\"ev\":\"{}\",\"t\":{},\"shard\":{},\"thread\":{}",
+                kind, meta.timestamp_ticks, meta.shard, meta.thread
+            );
+            for (key, value) in fields {
+                let _ = match value {
+                    Field::U64(v) => write!(s, ",\"{key}\":{v}"),
+                    Field::F64(v) if v.is_finite() => write!(s, ",\"{key}\":{v}"),
+                    Field::F64(_) => write!(s, ",\"{key}\":null"),
+                    Field::Str(v) => write!(s, ",\"{key}\":\"{v}\""),
+                };
+            }
+            s.push('}');
+        }
+    }
+    s
+}
+
+/// Decompose an event into its log fields (name/value pairs, in a fixed
+/// order). Shared by the structured log and anything else that needs a
+/// flat view of the vocabulary.
+pub fn event_fields(ev: &Events) -> Vec<(&'static str, Field)> {
+    match ev {
+        Events::IterationCompleted(e) => {
+            let mut f = vec![
+                ("iter", Field::U64(e.iter)),
+                ("updates", Field::U64(e.updates)),
+                ("selected", Field::U64(e.selected)),
+            ];
+            if let Some(obj) = e.objective {
+                f.push(("objective", Field::F64(obj)));
+            }
+            if let Some(nnz) = e.nnz {
+                f.push(("nnz", Field::U64(nnz)));
+            }
+            f
+        }
+        Events::ProposalBatch(e) => vec![
+            ("proposed", Field::U64(e.proposed)),
+            ("deduped", Field::U64(e.deduped)),
+        ],
+        Events::UpdateApplied(e) => vec![
+            ("path", Field::Str(e.path)),
+            ("cols", Field::U64(e.cols)),
+        ],
+        Events::SpillDrained(e) => vec![("iter", Field::U64(e.iter))],
+        Events::KktSweep(e) => vec![
+            ("violators", Field::U64(e.violators)),
+            ("reactivations", Field::U64(e.reactivations)),
+            ("active", Field::U64(e.active)),
+        ],
+        Events::ScreenGate(e) => vec![("active", Field::U64(e.active))],
+        Events::PhaseTimed(e) => vec![
+            ("key", Field::Str(e.key)),
+            ("label", Field::Str(e.label)),
+            ("secs", Field::F64(e.secs)),
+        ],
+        Events::ReconcileRound(e) => vec![
+            ("round", Field::U64(e.round)),
+            ("dirty_frac", Field::F64(e.dirty_frac)),
+            ("divergence", Field::F64(e.divergence)),
+            ("gap", Field::U64(e.gap)),
+        ],
+        Events::ShardFailed(e) => vec![("kind", Field::Str(e.kind))],
+        Events::WireFrameSent(e) => vec![
+            ("bytes", Field::U64(e.bytes)),
+            ("precision", Field::Str(e.precision)),
+        ],
+        Events::WireFrameReceived(e) => vec![
+            ("bytes", Field::U64(e.bytes)),
+            ("precision", Field::Str(e.precision)),
+        ],
+        Events::CodecError(e) => vec![("kind", Field::Str(e.kind))],
+        Events::PathStep(e) => vec![
+            ("step", Field::U64(e.step)),
+            ("lambda", Field::F64(e.lambda)),
+            ("nnz", Field::U64(e.nnz)),
+            ("objective", Field::F64(e.objective)),
+        ],
+    }
+}
+
+struct Inner {
+    format: LogFormat,
+    lines: VecDeque<String>,
+    cap: usize,
+    dropped: u64,
+    /// `PhaseTimed` carries wall-clock seconds — excluded by default so
+    /// identical runs log byte-identically; opt in for human profiling.
+    include_timing: bool,
+}
+
+/// Subscriber that renders every event into a bounded in-memory line
+/// ring. `Clone` shares the ring, so keep a handle to read lines after
+/// the builder consumed the other clone.
+#[derive(Clone)]
+pub struct StructuredLog {
+    inner: Arc<Mutex<Inner>>,
+}
+
+/// Default ring capacity: enough for any log-cadence stream while
+/// bounding memory on pathological per-iteration floods.
+const DEFAULT_CAP: usize = 4096;
+
+impl StructuredLog {
+    pub fn new(format: LogFormat) -> Self {
+        Self::with_capacity(format, DEFAULT_CAP)
+    }
+
+    pub fn with_capacity(format: LogFormat, cap: usize) -> Self {
+        StructuredLog {
+            inner: Arc::new(Mutex::new(Inner {
+                format,
+                lines: VecDeque::new(),
+                cap: cap.max(1),
+                dropped: 0,
+                include_timing: false,
+            })),
+        }
+    }
+
+    pub fn json() -> Self {
+        Self::new(LogFormat::Json)
+    }
+
+    pub fn text() -> Self {
+        Self::new(LogFormat::Text)
+    }
+
+    /// Also log `PhaseTimed` rows (wall-clock — breaks byte-identical
+    /// replay, fine for interactive use).
+    pub fn with_timing(self) -> Self {
+        self.inner.lock().unwrap().include_timing = true;
+        self
+    }
+
+    /// Lines currently in the ring, oldest first.
+    pub fn lines(&self) -> Vec<String> {
+        self.inner.lock().unwrap().lines.iter().cloned().collect()
+    }
+
+    /// Lines evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    fn push(&self, meta: &Meta, ev: &Events) {
+        let mut inner = self.inner.lock().unwrap();
+        if matches!(ev, Events::PhaseTimed(_)) && !inner.include_timing {
+            return;
+        }
+        let line = format_line(inner.format, meta, ev.kind(), &event_fields(ev));
+        if inner.lines.len() == inner.cap {
+            inner.lines.pop_front();
+            inner.dropped += 1;
+        }
+        inner.lines.push_back(line);
+    }
+}
+
+macro_rules! log_all {
+    ($(($method:ident, $variant:ident)),* $(,)?) => {
+        impl Subscriber for StructuredLog {
+            type SolveContext = ();
+            fn create_solve_context(&mut self, _info: &SolveInfo) -> Self::SolveContext {}
+            $(
+                fn $method(
+                    &mut self,
+                    _ctx: &mut (),
+                    meta: &Meta,
+                    event: &super::$variant,
+                ) {
+                    self.push(meta, &Events::from(*event));
+                }
+            )*
+        }
+    };
+}
+
+log_all!(
+    (on_iteration_completed, IterationCompleted),
+    (on_proposal_batch, ProposalBatch),
+    (on_update_applied, UpdateApplied),
+    (on_spill_drained, SpillDrained),
+    (on_kkt_sweep, KktSweep),
+    (on_screen_gate, ScreenGate),
+    (on_phase_timed, PhaseTimed),
+    (on_reconcile_round, ReconcileRound),
+    (on_shard_failed, ShardFailed),
+    (on_wire_frame_sent, WireFrameSent),
+    (on_wire_frame_received, WireFrameReceived),
+    (on_codec_error, CodecError),
+    (on_path_step, PathStep),
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::{EventSink, IterationCompleted, PhaseTimed, Subscribed, UpdateApplied};
+
+    fn meta(t: u64, shard: u32) -> Meta {
+        Meta {
+            timestamp_ticks: t,
+            shard,
+            thread: 0,
+        }
+    }
+
+    #[test]
+    fn text_lines_are_fixed_width_prefixed() {
+        let line = format_line(
+            LogFormat::Text,
+            &meta(12, 1),
+            "arrive",
+            &[("round", Field::U64(3))],
+        );
+        assert_eq!(line, "t=00000012 shard=01 arrive round=3");
+    }
+
+    #[test]
+    fn json_lines_parse_with_vendored_parser() {
+        let line = format_line(
+            LogFormat::Json,
+            &meta(5, 0),
+            "iteration",
+            &[
+                ("iter", Field::U64(5)),
+                ("objective", Field::F64(0.125)),
+                ("path", Field::Str("buffered")),
+            ],
+        );
+        let v = crate::util::json::parse(&line).expect("line must be valid JSON");
+        assert_eq!(v.get("ev").and_then(|j| j.as_str()), Some("iteration"));
+        assert_eq!(v.get("t").and_then(|j| j.as_f64()), Some(5.0));
+        assert_eq!(v.get("objective").and_then(|j| j.as_f64()), Some(0.125));
+        assert_eq!(v.get("path").and_then(|j| j.as_str()), Some("buffered"));
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let log = StructuredLog::with_capacity(LogFormat::Text, 2);
+        let mut sub = Subscribed::new(log.clone(), &SolveInfo::default());
+        for i in 0..5u64 {
+            sub.emit(
+                &meta(i, 0),
+                &Events::from(UpdateApplied {
+                    path: "atomic",
+                    cols: i,
+                }),
+            );
+        }
+        let lines = log.lines();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("cols=3"));
+        assert!(lines[1].contains("cols=4"));
+        assert_eq!(log.dropped(), 3);
+    }
+
+    #[test]
+    fn phase_timing_excluded_by_default() {
+        let log = StructuredLog::json();
+        let mut sub = Subscribed::new(log.clone(), &SolveInfo::default());
+        sub.emit(
+            &meta(0, 0),
+            &Events::from(PhaseTimed {
+                key: "update",
+                label: "update",
+                secs: 1.0,
+            }),
+        );
+        assert!(log.lines().is_empty());
+
+        let timed = StructuredLog::json().with_timing();
+        let mut sub = Subscribed::new(timed.clone(), &SolveInfo::default());
+        sub.emit(
+            &meta(0, 0),
+            &Events::from(PhaseTimed {
+                key: "update",
+                label: "update",
+                secs: 1.0,
+            }),
+        );
+        assert_eq!(timed.lines().len(), 1);
+    }
+
+    #[test]
+    fn optional_fields_omitted() {
+        let ev = Events::from(IterationCompleted {
+            iter: 1,
+            updates: 2,
+            selected: 3,
+            objective: None,
+            nnz: None,
+        });
+        let fields = event_fields(&ev);
+        assert!(fields.iter().all(|(k, _)| *k != "objective" && *k != "nnz"));
+    }
+}

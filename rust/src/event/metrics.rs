@@ -1,0 +1,219 @@
+//! [`MetricsAggregator`]: builds a [`MetricsSnapshot`] from the event
+//! stream, and owns the cross-pool merge semantics ([`absorb`]) that the
+//! sharded engine previously hand-maintained inline.
+//!
+//! The aggregator is `Clone` over shared state so the caller keeps a
+//! handle after `SolverBuilder::subscriber` consumes one clone:
+//!
+//! ```ignore
+//! let agg = MetricsAggregator::new();
+//! let out = builder.subscriber(agg.clone()).build()?.run()?;
+//! let m = agg.snapshot(); // same shape as out.metrics
+//! ```
+//!
+//! [`absorb`]: MetricsAggregator::absorb
+
+use std::sync::{Arc, Mutex};
+
+use super::{
+    IterationCompleted, KktSweep, Meta, PhaseTimed, ProposalBatch, ReconcileRound, ShardFailed,
+    SolveInfo, SpillDrained, Subscriber, WireFrameReceived, WireFrameSent,
+};
+use crate::coordinator::metrics::MetricsSnapshot;
+
+/// Event-fed metrics accumulator. Counts arrive per event; end-of-solve
+/// [`PhaseTimed`] rows fill in the phase seconds. The result mirrors the
+/// engine's own `MetricsSnapshot` (the public struct is unchanged —
+/// embedders that read `SolveOutput::metrics` see no difference).
+#[derive(Clone, Default)]
+pub struct MetricsAggregator {
+    inner: Arc<Mutex<MetricsSnapshot>>,
+}
+
+impl MetricsAggregator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current accumulated snapshot (complete once the solve returns).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        *self.inner.lock().unwrap()
+    }
+
+    /// Merge one pool's engine snapshot into a sharded aggregate: work
+    /// counts and leader-CPU phase seconds sum across pools; the `Auto`
+    /// update-path calibrations take the most-calibrated pool's value.
+    ///
+    /// This is the single home of the per-pool merge semantics — the
+    /// sharded engine calls it instead of open-coding the field list.
+    pub fn absorb(agg: &mut MetricsSnapshot, m: &MetricsSnapshot) {
+        agg.updates += m.updates;
+        agg.proposals += m.proposals;
+        agg.propose_nnz += m.propose_nnz;
+        agg.spill_iters += m.spill_iters;
+        // screening: per-shard active sets — totals sum across pools
+        agg.kkt_passes += m.kkt_passes;
+        agg.reactivations += m.reactivations;
+        agg.active_cols += m.active_cols;
+        agg.select_secs += m.select_secs;
+        agg.propose_secs += m.propose_secs;
+        agg.accept_secs += m.accept_secs;
+        agg.update_secs += m.update_secs;
+        agg.screen_secs += m.screen_secs;
+        agg.log_secs += m.log_secs;
+        agg.auto_cas_ratio = agg.auto_cas_ratio.max(m.auto_cas_ratio);
+        agg.auto_switch_factor = agg.auto_switch_factor.max(m.auto_switch_factor);
+    }
+}
+
+impl Subscriber for MetricsAggregator {
+    type SolveContext = ();
+
+    fn create_solve_context(&mut self, _info: &SolveInfo) -> Self::SolveContext {}
+
+    fn on_iteration_completed(&mut self, _ctx: &mut (), _meta: &Meta, ev: &IterationCompleted) {
+        let mut m = self.inner.lock().unwrap();
+        // IterationCompleted arrives at the log cadence; counts it
+        // carries are cumulative, so store-not-add.
+        m.iterations = m.iterations.max(ev.iter + 1);
+        m.updates = m.updates.max(ev.updates);
+    }
+
+    fn on_proposal_batch(&mut self, _ctx: &mut (), _meta: &Meta, ev: &ProposalBatch) {
+        let mut m = self.inner.lock().unwrap();
+        m.iterations += 1;
+        m.proposals += ev.deduped;
+    }
+
+    fn on_spill_drained(&mut self, _ctx: &mut (), _meta: &Meta, _ev: &SpillDrained) {
+        self.inner.lock().unwrap().spill_iters += 1;
+    }
+
+    fn on_kkt_sweep(&mut self, _ctx: &mut (), _meta: &Meta, ev: &KktSweep) {
+        let mut m = self.inner.lock().unwrap();
+        m.kkt_passes += 1;
+        m.reactivations += ev.reactivations;
+        m.active_cols = ev.active;
+    }
+
+    fn on_phase_timed(&mut self, _ctx: &mut (), _meta: &Meta, ev: &PhaseTimed) {
+        let mut m = self.inner.lock().unwrap();
+        match ev.key {
+            "select" => m.select_secs = ev.secs,
+            "propose" => m.propose_secs = ev.secs,
+            "accept" => m.accept_secs = ev.secs,
+            "update" => m.update_secs = ev.secs,
+            "screen" => m.screen_secs = ev.secs,
+            "log" => m.log_secs = ev.secs,
+            "reconcile" => m.reconcile_secs = ev.secs,
+            "codec" => m.codec_secs = ev.secs,
+            _ => {}
+        }
+    }
+
+    fn on_reconcile_round(&mut self, _ctx: &mut (), _meta: &Meta, ev: &ReconcileRound) {
+        let mut m = self.inner.lock().unwrap();
+        m.replica_divergence = m.replica_divergence.max(ev.divergence);
+        m.dirty_chunk_frac = ev.dirty_frac;
+    }
+
+    fn on_shard_failed(&mut self, _ctx: &mut (), _meta: &Meta, _ev: &ShardFailed) {
+        self.inner.lock().unwrap().shard_failures += 1;
+    }
+
+    fn on_wire_frame_sent(&mut self, _ctx: &mut (), _meta: &Meta, ev: &WireFrameSent) {
+        self.inner.lock().unwrap().wire_bytes_tx += ev.bytes;
+    }
+
+    fn on_wire_frame_received(&mut self, _ctx: &mut (), _meta: &Meta, ev: &WireFrameReceived) {
+        self.inner.lock().unwrap().wire_bytes_rx += ev.bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::{Events, EventSink, Subscribed};
+
+    #[test]
+    fn absorb_sums_counts_and_maxes_calibrations() {
+        let mut agg = MetricsSnapshot::default();
+        let a = MetricsSnapshot {
+            updates: 10,
+            proposals: 12,
+            propose_nnz: 100,
+            spill_iters: 1,
+            kkt_passes: 2,
+            reactivations: 3,
+            active_cols: 4,
+            select_secs: 0.5,
+            auto_cas_ratio: 2.0,
+            auto_switch_factor: 1.5,
+            ..Default::default()
+        };
+        MetricsAggregator::absorb(&mut agg, &a);
+        MetricsAggregator::absorb(&mut agg, &a);
+        assert_eq!(agg.updates, 20);
+        assert_eq!(agg.proposals, 24);
+        assert_eq!(agg.propose_nnz, 200);
+        assert_eq!(agg.spill_iters, 2);
+        assert_eq!(agg.kkt_passes, 4);
+        assert_eq!(agg.reactivations, 6);
+        assert_eq!(agg.active_cols, 8);
+        assert!((agg.select_secs - 1.0).abs() < 1e-12);
+        assert_eq!(agg.auto_cas_ratio, 2.0);
+        assert_eq!(agg.auto_switch_factor, 1.5);
+    }
+
+    #[test]
+    fn aggregates_from_events() {
+        let agg = MetricsAggregator::new();
+        let mut sub = Subscribed::new(agg.clone(), &SolveInfo::default());
+        let meta = Meta::default();
+        for i in 0..3u64 {
+            sub.emit(
+                &meta,
+                &Events::from(ProposalBatch {
+                    proposed: 5,
+                    deduped: 4,
+                }),
+            );
+            sub.emit(
+                &meta,
+                &Events::from(IterationCompleted {
+                    iter: i,
+                    updates: (i + 1) * 4,
+                    selected: 4,
+                    objective: Some(1.0),
+                    nnz: Some(2),
+                }),
+            );
+        }
+        sub.emit(
+            &meta,
+            &Events::from(KktSweep {
+                violators: 2,
+                reactivations: 1,
+                active: 7,
+            }),
+        );
+        sub.emit(
+            &meta,
+            &Events::from(PhaseTimed {
+                key: "update",
+                label: "update",
+                secs: 0.25,
+            }),
+        );
+        sub.emit(&meta, &Events::from(WireFrameSent { bytes: 64, precision: "f32" }));
+        let m = agg.snapshot();
+        assert_eq!(m.iterations, 3);
+        assert_eq!(m.proposals, 12);
+        assert_eq!(m.updates, 12);
+        assert_eq!(m.kkt_passes, 1);
+        assert_eq!(m.reactivations, 1);
+        assert_eq!(m.active_cols, 7);
+        assert!((m.update_secs - 0.25).abs() < 1e-12);
+        assert_eq!(m.wire_bytes_tx, 64);
+    }
+}

@@ -1,0 +1,352 @@
+//! Typed event stream for the GenCD engine — the s2n-quic "events" design.
+//!
+//! Every engine phase and subsystem announces what it did through one
+//! vocabulary of plain-data event structs, wrapped in the [`Events`] enum.
+//! Emission is guarded by [`EventSink::enabled`]: the static [`NoopSink`]
+//! returns `false` from an `#[inline]` method, so every emit site — the
+//! branch *and* the event construction inside it — monomorphizes to nothing
+//! when no subscriber is attached (pinned by the `event_emit_disabled`
+//! hot-path bench row). Attaching a subscriber costs one dynamic dispatch
+//! per event, and events are only emitted from leader/coordinator threads,
+//! never from pool workers.
+//!
+//! Consumers implement [`Subscriber`] (one default-no-op `on_*` method per
+//! event plus a per-solve context) and compose with tuples; the provided
+//! subscribers are [`MetricsAggregator`] (builds a `MetricsSnapshot`),
+//! [`StructuredLog`] (bounded line-JSON/text ring), and [`PhaseTable`]
+//! (collects end-of-solve `PhaseTimed` rows for `--profile`).
+//!
+//! ## Determinism contract
+//!
+//! [`Meta::timestamp_ticks`] is *logical* time — iteration index in the
+//! single-process engine, reconcile round in the sharded engine — never
+//! wall-clock. The only wall-clock-bearing event is [`PhaseTimed`], which
+//! [`StructuredLog`] excludes by default so two identical runs produce
+//! byte-identical logs (exercised under `SimLink` in rust/tests/sim_faults.rs).
+
+pub mod check;
+pub mod log;
+pub mod metrics;
+pub mod phases;
+pub mod subscriber;
+
+pub use log::{LogFormat, StructuredLog};
+pub use metrics::MetricsAggregator;
+pub use phases::PhaseTable;
+pub use subscriber::{NoopSubscriber, Subscribed, Subscriber};
+
+/// Where and when an event happened, in logical time.
+///
+/// `timestamp_ticks` is the engine's own clock (iteration index, or
+/// reconcile round in the sharded engine) so event streams replay
+/// deterministically; wall-clock never appears here.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Meta {
+    pub timestamp_ticks: u64,
+    pub shard: u32,
+    pub thread: u32,
+}
+
+/// Per-solve shape handed to [`Subscriber::create_solve_context`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SolveInfo {
+    /// rows (samples) in the design matrix
+    pub n: u64,
+    /// columns (features)
+    pub k: u64,
+    pub threads: u32,
+    pub shards: u32,
+}
+
+/// One engine iteration, emitted at the objective-log cadence (where the
+/// objective is actually computed — same contract as `Observer`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationCompleted {
+    pub iter: u64,
+    /// cumulative coordinate updates so far
+    pub updates: u64,
+    /// coordinates selected this iteration
+    pub selected: u64,
+    pub objective: Option<f64>,
+    pub nnz: Option<u64>,
+}
+
+/// A Select step produced a batch of candidate coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProposalBatch {
+    /// coordinates the selector yielded
+    pub proposed: u64,
+    /// survivors after the epoch-stamped duplicate filter
+    pub deduped: u64,
+}
+
+/// The Update phase committed a batch through one of the write paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UpdateApplied {
+    /// `UpdatePath::name()` of the mode actually chosen this iteration
+    pub path: &'static str,
+    pub cols: u64,
+}
+
+/// The buffered-update path drained its spill reservoir this iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpillDrained {
+    pub iter: u64,
+}
+
+/// A KKT sweep over screened-out coordinates finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KktSweep {
+    pub violators: u64,
+    pub reactivations: u64,
+    /// active-set size after the sweep
+    pub active: u64,
+}
+
+/// Convergence was gated pending a full KKT sweep of the screened set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScreenGate {
+    pub active: u64,
+}
+
+/// End-of-solve phase timing row — the only wall-clock-bearing event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseTimed {
+    pub key: &'static str,
+    pub label: &'static str,
+    pub secs: f64,
+}
+
+/// A sharded reconcile round completed (coordinator only).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconcileRound {
+    pub round: u64,
+    /// cumulative dirty-chunk fraction (folded / seen)
+    pub dirty_frac: f64,
+    /// max cross-replica divergence observed this round
+    pub divergence: f64,
+    /// reconcile gap chosen for the next round
+    pub gap: u64,
+}
+
+/// A shard pool died: panic, link fault, or timeout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardFailed {
+    pub kind: &'static str,
+}
+
+/// A wire frame shipped to peers during reconcile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireFrameSent {
+    pub bytes: u64,
+    pub precision: &'static str,
+}
+
+/// A wire frame arrived from peers during reconcile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireFrameReceived {
+    pub bytes: u64,
+    pub precision: &'static str,
+}
+
+/// The wire codec rejected a frame (protocol-level fault).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodecError {
+    pub kind: &'static str,
+}
+
+/// One step of a regularization path solve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PathStep {
+    pub step: u64,
+    pub lambda: f64,
+    pub nnz: u64,
+    pub objective: f64,
+}
+
+/// The full event vocabulary; one variant per event struct.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Events {
+    IterationCompleted(IterationCompleted),
+    ProposalBatch(ProposalBatch),
+    UpdateApplied(UpdateApplied),
+    SpillDrained(SpillDrained),
+    KktSweep(KktSweep),
+    ScreenGate(ScreenGate),
+    PhaseTimed(PhaseTimed),
+    ReconcileRound(ReconcileRound),
+    ShardFailed(ShardFailed),
+    WireFrameSent(WireFrameSent),
+    WireFrameReceived(WireFrameReceived),
+    CodecError(CodecError),
+    PathStep(PathStep),
+}
+
+macro_rules! impl_from {
+    ($($ty:ident),* $(,)?) => {
+        $(impl From<$ty> for Events {
+            #[inline]
+            fn from(ev: $ty) -> Events {
+                Events::$ty(ev)
+            }
+        })*
+    };
+}
+impl_from!(
+    IterationCompleted,
+    ProposalBatch,
+    UpdateApplied,
+    SpillDrained,
+    KktSweep,
+    ScreenGate,
+    PhaseTimed,
+    ReconcileRound,
+    ShardFailed,
+    WireFrameSent,
+    WireFrameReceived,
+    CodecError,
+    PathStep,
+);
+
+impl Events {
+    /// Stable short name used by the structured log and `events --check`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Events::IterationCompleted(_) => "iteration",
+            Events::ProposalBatch(_) => "proposal",
+            Events::UpdateApplied(_) => "update",
+            Events::SpillDrained(_) => "spill",
+            Events::KktSweep(_) => "kkt",
+            Events::ScreenGate(_) => "screen_gate",
+            Events::PhaseTimed(_) => "phase",
+            Events::ReconcileRound(_) => "reconcile",
+            Events::ShardFailed(_) => "shard_failed",
+            Events::WireFrameSent(_) => "wire_tx",
+            Events::WireFrameReceived(_) => "wire_rx",
+            Events::CodecError(_) => "codec_error",
+            Events::PathStep(_) => "path",
+        }
+    }
+}
+
+/// Receiver end of the stream, as seen by emit sites.
+///
+/// The engine is generic over `E: EventSink`; [`NoopSink`] (the default)
+/// returns `false` from `enabled()` so emit sites fold away entirely.
+/// An attached [`Subscribed`] subscriber is threaded as `&mut dyn EventSink`
+/// — one virtual call per event, only on the path that asked for it.
+pub trait EventSink: Send {
+    /// Emit sites check this before constructing the event.
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+    fn emit(&mut self, meta: &Meta, event: &Events);
+}
+
+/// The statically-dispatched "nobody listening" sink: `enabled()` is a
+/// constant `false`, so every `emit!` site monomorphizes to nothing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl EventSink for NoopSink {
+    #[inline]
+    fn enabled(&self) -> bool {
+        false
+    }
+    #[inline]
+    fn emit(&mut self, _meta: &Meta, _event: &Events) {}
+}
+
+impl<T: EventSink + ?Sized> EventSink for &mut T {
+    #[inline]
+    fn enabled(&self) -> bool {
+        (**self).enabled()
+    }
+    #[inline]
+    fn emit(&mut self, meta: &Meta, event: &Events) {
+        (**self).emit(meta, event)
+    }
+}
+
+/// Emit an event through a sink, constructing it only if somebody listens.
+///
+/// `$ev` is any event struct (converted via `Events::from`); the whole
+/// expression sits inside the `enabled()` branch so the disabled path pays
+/// nothing — not even the field loads.
+macro_rules! emit {
+    ($sink:expr, $meta:expr, $ev:expr) => {
+        if $sink.enabled() {
+            let __meta = $meta;
+            let __event = $crate::event::Events::from($ev);
+            $sink.emit(&__meta, &__event);
+        }
+    };
+}
+pub(crate) use emit;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter(usize);
+    impl EventSink for Counter {
+        fn emit(&mut self, _meta: &Meta, _event: &Events) {
+            self.0 += 1;
+        }
+    }
+
+    #[test]
+    fn noop_sink_is_disabled() {
+        let sink = NoopSink;
+        assert!(!sink.enabled());
+    }
+
+    #[test]
+    fn emit_macro_respects_enabled() {
+        let mut noop = NoopSink;
+        emit!(noop, Meta::default(), SpillDrained { iter: 1 });
+        let mut c = Counter(0);
+        emit!(c, Meta::default(), SpillDrained { iter: 1 });
+        emit!(
+            c,
+            Meta {
+                timestamp_ticks: 2,
+                shard: 0,
+                thread: 0
+            },
+            UpdateApplied {
+                path: "atomic",
+                cols: 8
+            }
+        );
+        assert_eq!(c.0, 2);
+    }
+
+    #[test]
+    fn mut_ref_sink_forwards() {
+        let mut c = Counter(0);
+        {
+            let mut r: &mut dyn EventSink = &mut c;
+            assert!(r.enabled());
+            emit!(r, Meta::default(), ScreenGate { active: 3 });
+        }
+        assert_eq!(c.0, 1);
+    }
+
+    #[test]
+    fn kinds_are_stable() {
+        assert_eq!(
+            Events::from(IterationCompleted {
+                iter: 0,
+                updates: 0,
+                selected: 0,
+                objective: None,
+                nnz: None
+            })
+            .kind(),
+            "iteration"
+        );
+        assert_eq!(Events::from(CodecError { kind: "protocol" }).kind(), "codec_error");
+    }
+}

@@ -1,0 +1,189 @@
+//! The canonical phase-timing table: one (key, label) list and one
+//! snapshot-to-rows projection shared by `--profile`, the `gencd
+//! screen/numa/net` experiment columns, and the BENCH emitters — phase
+//! naming can no longer drift between them.
+//!
+//! The engine emits one [`PhaseTimed`] event per row at end-of-solve
+//! (the only wall-clock-bearing events in the stream); [`PhaseTable`] is
+//! the subscriber that collects them back into a table.
+
+use std::sync::{Arc, Mutex};
+
+use super::{emit, EventSink, Meta, PhaseTimed, SolveInfo, Subscriber};
+use crate::coordinator::metrics::MetricsSnapshot;
+
+/// One timed phase of a solve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseRow {
+    /// stable machine key (`events --check`, bench emitter keys)
+    pub key: &'static str,
+    /// human label (`--profile` rows, experiment columns)
+    pub label: &'static str,
+    pub secs: f64,
+}
+
+/// Project a metrics snapshot onto the canonical phase table. Engine
+/// phases always appear; the sharded-only rows (`reconcile`, `codec`)
+/// appear when the snapshot came from a sharded solve.
+pub fn rows(m: &MetricsSnapshot) -> Vec<PhaseRow> {
+    let mut rows = vec![
+        PhaseRow {
+            key: "select",
+            label: "select+log",
+            secs: m.select_secs + m.log_secs,
+        },
+        PhaseRow {
+            key: "propose",
+            label: "propose",
+            secs: m.propose_secs,
+        },
+        PhaseRow {
+            key: "accept",
+            label: "accept",
+            secs: m.accept_secs,
+        },
+        PhaseRow {
+            key: "update",
+            label: "update",
+            secs: m.update_secs,
+        },
+        PhaseRow {
+            key: "screen",
+            label: "screen",
+            secs: m.screen_secs,
+        },
+    ];
+    if m.shards > 0 {
+        rows.push(PhaseRow {
+            key: "reconcile",
+            label: "reconcile",
+            secs: m.reconcile_secs,
+        });
+        rows.push(PhaseRow {
+            key: "codec",
+            label: "codec",
+            secs: m.codec_secs,
+        });
+    }
+    rows
+}
+
+/// Seconds for one phase key, 0.0 if the key is absent from this
+/// snapshot's table — the lookup the experiment columns use, so their
+/// numbers come from the same projection as `--profile`.
+pub fn phase_secs(m: &MetricsSnapshot, key: &str) -> f64 {
+    rows(m).iter().find(|r| r.key == key).map_or(0.0, |r| r.secs)
+}
+
+/// Emit the canonical table as [`PhaseTimed`] events (end-of-solve; both
+/// the single-process and sharded engines call this exactly once).
+pub fn emit_rows<E: EventSink>(sink: &mut E, meta: Meta, m: &MetricsSnapshot) {
+    for row in rows(m) {
+        emit!(
+            sink,
+            meta,
+            PhaseTimed {
+                key: row.key,
+                label: row.label,
+                secs: row.secs,
+            }
+        );
+    }
+}
+
+/// Subscriber that collects [`PhaseTimed`] rows — the consumer side of
+/// the `--profile` table. `Clone` shares the row store.
+#[derive(Clone, Default)]
+pub struct PhaseTable {
+    rows: Arc<Mutex<Vec<PhaseRow>>>,
+}
+
+impl PhaseTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn rows(&self) -> Vec<PhaseRow> {
+        self.rows.lock().unwrap().clone()
+    }
+
+    /// Sum of all collected phase seconds (for the `--profile` "other"
+    /// remainder row).
+    pub fn total_secs(&self) -> f64 {
+        self.rows.lock().unwrap().iter().map(|r| r.secs).sum()
+    }
+}
+
+impl Subscriber for PhaseTable {
+    type SolveContext = ();
+
+    fn create_solve_context(&mut self, _info: &SolveInfo) -> Self::SolveContext {}
+
+    fn on_phase_timed(&mut self, _ctx: &mut (), _meta: &Meta, ev: &PhaseTimed) {
+        self.rows.lock().unwrap().push(PhaseRow {
+            key: ev.key,
+            label: ev.label,
+            secs: ev.secs,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::Subscribed;
+
+    #[test]
+    fn unsharded_rows_have_engine_phases_only() {
+        let m = MetricsSnapshot {
+            select_secs: 0.1,
+            log_secs: 0.05,
+            propose_secs: 0.2,
+            ..Default::default()
+        };
+        let rows = rows(&m);
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].key, "select");
+        assert!((rows[0].secs - 0.15).abs() < 1e-12);
+        assert!(rows.iter().all(|r| r.key != "reconcile"));
+    }
+
+    #[test]
+    fn sharded_rows_add_reconcile_and_codec() {
+        let m = MetricsSnapshot {
+            shards: 4,
+            reconcile_secs: 0.3,
+            codec_secs: 0.01,
+            ..Default::default()
+        };
+        let keys: Vec<_> = rows(&m).iter().map(|r| r.key).collect();
+        assert!(keys.contains(&"reconcile"));
+        assert!(keys.contains(&"codec"));
+        assert_eq!(phase_secs(&m, "reconcile"), 0.3);
+        // unsharded snapshot has no codec row
+        assert_eq!(phase_secs(&MetricsSnapshot::default(), "codec"), 0.0);
+    }
+
+    #[test]
+    fn emitted_rows_round_trip_through_phase_table() {
+        let m = MetricsSnapshot {
+            shards: 2,
+            update_secs: 0.5,
+            reconcile_secs: 0.25,
+            ..Default::default()
+        };
+        let table = PhaseTable::new();
+        let mut sink = Subscribed::new(table.clone(), &SolveInfo::default());
+        emit_rows(&mut sink, Meta::default(), &m);
+        let collected = table.rows();
+        assert_eq!(collected, rows(&m));
+        assert!((table.total_secs() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noop_sink_collects_nothing() {
+        // compile-and-run proof that emit_rows is free when disabled
+        let mut sink = crate::event::NoopSink;
+        emit_rows(&mut sink, Meta::default(), &MetricsSnapshot::default());
+    }
+}

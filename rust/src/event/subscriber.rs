@@ -1,0 +1,237 @@
+//! The [`Subscriber`] trait: typed, composable event consumers.
+//!
+//! One default-no-op `on_*` method per event in the vocabulary, plus a
+//! per-solve context created at attach time (the s2n-quic
+//! `ConnectionContext` pattern): state that belongs to *this solve* lives
+//! in `SolveContext`, state that outlives solves lives in the subscriber.
+//!
+//! Composition is structural: `(A, B)` is a subscriber that fans every
+//! event out to both (nest tuples for more). [`NoopSubscriber`] is the
+//! do-nothing anchor. [`Subscribed`] pairs a subscriber with its context
+//! and adapts it to the erased [`EventSink`] the engine threads through —
+//! and, the other way, to the legacy [`Observer`] callback, so anything
+//! expecting an observer can be fed from the event stream.
+
+use std::ops::ControlFlow;
+
+use super::{
+    CodecError, Events, EventSink, IterationCompleted, KktSweep, Meta, PathStep, PhaseTimed,
+    ProposalBatch, ReconcileRound, ScreenGate, ShardFailed, SolveInfo, SpillDrained,
+    UpdateApplied, WireFrameReceived, WireFrameSent,
+};
+use crate::coordinator::observer::{IterationInfo, Observer};
+
+/// Generates the trait, the tuple composition, and the `Subscribed`
+/// dispatch from one list, so the three can never drift apart.
+macro_rules! subscriber_vocabulary {
+    ($(($method:ident, $variant:ident)),* $(,)?) => {
+        /// A typed event consumer. Every method defaults to a no-op, so
+        /// implementors name only the events they care about.
+        pub trait Subscriber: Send + 'static {
+            /// Per-solve state; created once per solve at attach time.
+            type SolveContext: Send;
+
+            fn create_solve_context(&mut self, info: &SolveInfo) -> Self::SolveContext;
+
+            $(
+                #[allow(unused_variables)]
+                #[inline]
+                fn $method(
+                    &mut self,
+                    ctx: &mut Self::SolveContext,
+                    meta: &Meta,
+                    event: &super::$variant,
+                ) {
+                }
+            )*
+        }
+
+        /// Subscribers compose structurally: `(A, B)` fans each event out
+        /// to `A` then `B`, each with its own solve context.
+        impl<A: Subscriber, B: Subscriber> Subscriber for (A, B) {
+            type SolveContext = (A::SolveContext, B::SolveContext);
+
+            fn create_solve_context(&mut self, info: &SolveInfo) -> Self::SolveContext {
+                (self.0.create_solve_context(info), self.1.create_solve_context(info))
+            }
+
+            $(
+                #[inline]
+                fn $method(
+                    &mut self,
+                    ctx: &mut Self::SolveContext,
+                    meta: &Meta,
+                    event: &super::$variant,
+                ) {
+                    self.0.$method(&mut ctx.0, meta, event);
+                    self.1.$method(&mut ctx.1, meta, event);
+                }
+            )*
+        }
+
+        impl<S: Subscriber> EventSink for Subscribed<S> {
+            fn emit(&mut self, meta: &Meta, event: &Events) {
+                match event {
+                    $(Events::$variant(ev) => {
+                        self.subscriber.$method(&mut self.ctx, meta, ev)
+                    })*
+                }
+            }
+        }
+    };
+}
+
+subscriber_vocabulary!(
+    (on_iteration_completed, IterationCompleted),
+    (on_proposal_batch, ProposalBatch),
+    (on_update_applied, UpdateApplied),
+    (on_spill_drained, SpillDrained),
+    (on_kkt_sweep, KktSweep),
+    (on_screen_gate, ScreenGate),
+    (on_phase_timed, PhaseTimed),
+    (on_reconcile_round, ReconcileRound),
+    (on_shard_failed, ShardFailed),
+    (on_wire_frame_sent, WireFrameSent),
+    (on_wire_frame_received, WireFrameReceived),
+    (on_codec_error, CodecError),
+    (on_path_step, PathStep),
+);
+
+/// The subscriber that hears nothing. With it (or with no subscriber at
+/// all) every emit site in the engine compiles to nothing — the
+/// transparency tests in rust/tests/events.rs pin bit-identical output
+/// across `NoopSubscriber` / no subscriber / `MetricsAggregator`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSubscriber;
+
+impl Subscriber for NoopSubscriber {
+    type SolveContext = ();
+    fn create_solve_context(&mut self, _info: &SolveInfo) -> Self::SolveContext {}
+}
+
+/// A subscriber bound to its per-solve context; this is what the engine
+/// actually drives (via its [`EventSink`] impl, generated above).
+pub struct Subscribed<S: Subscriber> {
+    subscriber: S,
+    ctx: S::SolveContext,
+}
+
+impl<S: Subscriber> Subscribed<S> {
+    pub fn new(mut subscriber: S, info: &SolveInfo) -> Self {
+        let ctx = subscriber.create_solve_context(info);
+        Subscribed { subscriber, ctx }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.subscriber
+    }
+}
+
+/// The legacy [`Observer`] hook is a view of the event stream: any
+/// subscribed subscriber can stand wherever an observer was expected,
+/// receiving each logged iteration as an [`IterationCompleted`].
+impl<S: Subscriber> Observer for Subscribed<S> {
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ControlFlow<()> {
+        let meta = Meta {
+            timestamp_ticks: info.iter as u64,
+            shard: 0,
+            thread: 0,
+        };
+        let ev = IterationCompleted {
+            iter: info.iter as u64,
+            updates: info.updates,
+            selected: info.selected as u64,
+            objective: info.objective,
+            nnz: info.nnz.map(|v| v as u64),
+        };
+        self.subscriber.on_iteration_completed(&mut self.ctx, &meta, &ev);
+        ControlFlow::Continue(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct CountingSub;
+    #[derive(Default)]
+    struct Counts {
+        iterations: usize,
+        spills: usize,
+    }
+    impl Subscriber for CountingSub {
+        type SolveContext = Counts;
+        fn create_solve_context(&mut self, _info: &SolveInfo) -> Counts {
+            Counts::default()
+        }
+        fn on_iteration_completed(
+            &mut self,
+            ctx: &mut Counts,
+            _meta: &Meta,
+            _ev: &IterationCompleted,
+        ) {
+            ctx.iterations += 1;
+        }
+        fn on_spill_drained(&mut self, ctx: &mut Counts, _meta: &Meta, _ev: &SpillDrained) {
+            ctx.spills += 1;
+        }
+    }
+
+    fn iteration(iter: u64) -> Events {
+        Events::from(IterationCompleted {
+            iter,
+            updates: 0,
+            selected: 0,
+            objective: None,
+            nnz: None,
+        })
+    }
+
+    #[test]
+    fn subscribed_dispatches_by_variant() {
+        let mut sub = Subscribed::new(CountingSub, &SolveInfo::default());
+        let meta = Meta::default();
+        sub.emit(&meta, &iteration(0));
+        sub.emit(&meta, &Events::from(SpillDrained { iter: 1 }));
+        sub.emit(&meta, &Events::from(ScreenGate { active: 2 }));
+        let counts = &sub.ctx;
+        assert_eq!(counts.iterations, 1);
+        assert_eq!(counts.spills, 1);
+    }
+
+    #[test]
+    fn tuples_fan_out_with_independent_contexts() {
+        let mut sub = Subscribed::new((CountingSub, CountingSub), &SolveInfo::default());
+        let meta = Meta::default();
+        sub.emit(&meta, &iteration(0));
+        sub.emit(&meta, &iteration(1));
+        assert_eq!(sub.ctx.0.iterations, 2);
+        assert_eq!(sub.ctx.1.iterations, 2);
+    }
+
+    #[test]
+    fn noop_composes() {
+        let mut sub = Subscribed::new((NoopSubscriber, CountingSub), &SolveInfo::default());
+        sub.emit(&Meta::default(), &iteration(0));
+        assert_eq!(sub.ctx.1.iterations, 1);
+    }
+
+    #[test]
+    fn subscribed_adapts_to_observer() {
+        use crate::coordinator::problem::SharedState;
+        let state = SharedState::new(2, 2);
+        let mut sub = Subscribed::new(CountingSub, &SolveInfo::default());
+        let flow = sub.on_iteration(&IterationInfo {
+            iter: 3,
+            elapsed_secs: 0.1,
+            updates: 9,
+            selected: 2,
+            objective: Some(1.0),
+            nnz: Some(1),
+            state: &state,
+        });
+        assert!(flow.is_continue());
+        assert_eq!(sub.ctx.iterations, 1);
+    }
+}

@@ -64,6 +64,7 @@
 //! | [`shard`] (`SolverBuilder::shards(n)`) | one NUMA-pinnable engine pool per column shard | per-shard `z` *replica*, first-touched node-local | reconcile barrier, every R rounds (adaptive), dirty-chunk delta fold |
 //! | [`sim`] (`gencd sim`, [`sim::SimLink`]) | the shard layer, unmodified, under virtual time | a seeded [`sim::FaultPlan`] (pure data, consulted identically by every shard) | deterministic fault injection over the [`shard::ReconcileLink`] seam: delays, reorders, stragglers, kills, timeouts |
 //! | [`net`] (`SolverBuilder::transport`, `gencd net`) | shard peers behind a wire ([`net::LoopbackLink`] in-process, [`net::TcpLink`] over sockets) | replicas refreshed from decoded frames (absolute dirty-chunk values, exact or f32) | the same four reconcile crossings, serialized per [`shard::engine`] §Wire format; deadlines map `barrier_timeout_secs` onto the socket |
+//! | [`event`] (`SolverBuilder::subscriber`) | — (observes every layer above, never synchronizes) | per-solve `SolveContext` per [`Subscriber`](event::Subscriber) | none — events are emitted from leader/coordinator threads only, and disabled emit sites compile to nothing |
 //!
 //! The engine scales until every worker hammering the same residual
 //! vector saturates one coherent memory domain; the shard layer
@@ -128,6 +129,43 @@
 //! # }
 //! ```
 //!
+//! ## Observability: the typed event stream
+//!
+//! Every layer reports what it did through one typed vocabulary
+//! ([`event::Events`]) instead of private plumbing — the [`Observer`]
+//! callback, the metrics aggregation, the structured log, the sim
+//! report, and the `--profile` table are all consumers of the same
+//! stream:
+//!
+//! | event | emitted by | carries |
+//! |-------|------------|---------|
+//! | [`IterationCompleted`](event::IterationCompleted) | engine leader / shard coordinator, at the log cadence | iter, cumulative updates, selected, objective, nnz |
+//! | [`ProposalBatch`](event::ProposalBatch) | engine leader, every iteration | proposed vs. deduplicated coordinates |
+//! | [`UpdateApplied`](event::UpdateApplied) / [`SpillDrained`](event::SpillDrained) | engine leader | chosen update path, batch size; buffer spills |
+//! | [`KktSweep`](event::KktSweep) / [`ScreenGate`](event::ScreenGate) | screening layer via the leader | violators, reactivations, active-set size; gated convergence |
+//! | [`ReconcileRound`](event::ReconcileRound) | shard coordinator, per reconciled round | dirty fraction, divergence, adaptive gap |
+//! | [`WireFrameSent`](event::WireFrameSent)/[`Received`](event::WireFrameReceived), [`CodecError`](event::CodecError) | wire transports via the coordinator | bytes, precision tag |
+//! | [`ShardFailed`](event::ShardFailed) | sharded engine, post-join | failure kind |
+//! | [`PhaseTimed`](event::PhaseTimed) | both engines, end-of-solve | canonical phase rows ([`event::phases`]) — the only wall-clock events |
+//! | [`PathStep`](event::PathStep) | regularization-path driver | lambda, nnz, objective per step |
+//!
+//! **Composition contract:** implement [`Subscriber`](event::Subscriber)
+//! (every `on_*` defaults to a no-op; per-solve state lives in an
+//! associated `SolveContext`), attach with `SolverBuilder::subscriber`,
+//! and compose structurally — `(A, B)` fans each event out to both.
+//! Provided subscribers: [`MetricsAggregator`](event::MetricsAggregator)
+//! (rebuilds a [`MetricsSnapshot`](coordinator::metrics::MetricsSnapshot)),
+//! [`StructuredLog`](event::StructuredLog) (bounded line-JSON/text ring,
+//! `--log-format json`), [`PhaseTable`](event::PhaseTable) (`--profile`).
+//!
+//! **Zero-cost emit discipline:** the engine is generic over
+//! [`event::EventSink`]; with nothing attached it is instantiated with
+//! [`event::NoopSink`], whose `enabled()` is a constant `false` — every
+//! emit site (branch *and* event construction) monomorphizes away, pinned
+//! by the `event_emit_disabled` bench row and the bit-exactness tests in
+//! rust/tests/events.rs. Events carry logical timestamps only
+//! ([`event::Meta`]), so attached subscribers never perturb determinism.
+//!
 //! ## Migration from the config-driven surface
 //!
 //! The TOML/CLI surface ([`coordinator::driver`], the `gencd` binary)
@@ -156,6 +194,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod event;
 pub mod linalg;
 pub mod loss;
 pub mod net;

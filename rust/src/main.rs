@@ -8,6 +8,7 @@
 //!   table3    regenerate the paper's Table 3
 //!   fig1      regenerate Figure 1 (convergence, 4 algorithms)
 //!   fig2      regenerate Figure 2 (scalability, measured + simulated)
+//!   events    validate a line-JSON event log (--log-format json)
 //!   artifacts inspect the AOT artifact manifest and smoke-run one
 //!
 //! Examples:
@@ -57,6 +58,7 @@ fn run(args: &mut Args) -> anyhow::Result<()> {
         "numa" => cmd_numa(args),
         "sim" => cmd_sim(args),
         "net" => cmd_net(args),
+        "events" => cmd_events(args),
         "artifacts" => cmd_artifacts(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -81,6 +83,7 @@ SUBCOMMANDS
              [--transport barrier|loopback|tcp] [--listen ADDR]
              [--peers ADDR,ADDR,...] [--wire-precision exact|f32]
              [--screening] [--kkt-every N] [--kkt-adaptive] [--fast-kernels]
+             [--log-format text|json]     (json: line-JSON event stream)
              [--set table.key=value]...   (e.g. solver.buffer_budget_mb=512)
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
              [--seconds S] [--threads N]     (warm-started lambda path)
@@ -110,6 +113,9 @@ SUBCOMMANDS
               over the loopback wire transport; nonzero exit on FAIL)
              --smoke   (2-shard localhost-TCP solve; asserts clean
               convergence and shutdown)
+  events     --check FILE   (validate a `--log-format json` event log:
+              well-formed line-JSON, required keys, kind coverage;
+              nonzero exit on any malformed line)
   artifacts  [--dir PATH] [--smoke]
 
 Datasets: dorothea, reuters, optionally suffixed @scale (reuters@0.1),
@@ -185,6 +191,9 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(v) = args.value("wire-precision") {
         cfg.solver.wire_precision = v;
+    }
+    if let Some(v) = args.value("log-format") {
+        cfg.solver.log_format = v;
     }
     if args.flag("screening") {
         cfg.solver.screening = true;
@@ -289,20 +298,22 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
         );
     }
     if profile {
+        // the same PhaseTimed rows every other consumer sees: the
+        // profile table, experiment columns, and BENCH emitters all
+        // read event::phases::rows, so they can never disagree
         let m = &res.metrics;
         let total = res.elapsed_secs.max(1e-12);
-        let phases = [
-            ("select+log", m.select_secs),
-            ("propose", m.propose_secs),
-            ("accept", m.accept_secs),
-            ("update", m.update_secs),
-            ("screen", m.screen_secs),
-        ];
+        let rows = gencd::event::phases::rows(m);
         println!("phase breakdown (leader wall-clock):");
-        for (name, secs) in phases {
-            println!("  {name:<11} {secs:>8.3}s  {:>5.1}%", 100.0 * secs / total);
+        for r in &rows {
+            println!(
+                "  {:<11} {:>8.3}s  {:>5.1}%",
+                r.label,
+                r.secs,
+                100.0 * r.secs / total
+            );
         }
-        let sum: f64 = phases.iter().map(|(_, s)| s).sum();
+        let sum: f64 = rows.iter().map(|r| r.secs).sum();
         println!(
             "  {:<11} {:>8.3}s  {:>5.1}%  (barriers + worker wait)",
             "other",
@@ -314,6 +325,9 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
             m.propose_nnz as f64 / 1e6,
             m.propose_secs * 1e9 / m.propose_nnz.max(1) as f64
         );
+    }
+    for line in &res.event_log {
+        println!("{line}");
     }
     Ok(())
 }
@@ -658,6 +672,21 @@ fn cmd_sim(args: &mut Args) -> anyhow::Result<()> {
     let (report, all_pass) = gencd::sim::render_verdicts(&verdicts);
     print!("{report}");
     anyhow::ensure!(all_pass, "scenario corpus has failures");
+    Ok(())
+}
+
+fn cmd_events(args: &mut Args) -> anyhow::Result<()> {
+    let path = args
+        .value("check")
+        .ok_or_else(|| anyhow::anyhow!("usage: gencd events --check FILE"))?;
+    args.finish()?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let report = gencd::event::check::check_lines(text.lines())
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    gencd::event::check::verify_coverage(&report)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    print!("{}", report.render());
     Ok(())
 }
 

@@ -118,6 +118,10 @@ impl<L: ReconcileLink> ReconcileLink for LoopbackLink<L> {
         self.inner.fold_order(s, round, shards)
     }
 
+    fn wire_precision(&self) -> Option<&'static str> {
+        Some(self.precision.name())
+    }
+
     fn poison(&self) {
         self.inner.poison();
     }

@@ -430,6 +430,10 @@ impl ReconcileLink for TcpLink {
         self.cross(s)
     }
 
+    fn wire_precision(&self) -> Option<&'static str> {
+        Some(self.precision.name())
+    }
+
     fn poison(&self) {
         self.closed.store(true, Ordering::Release);
         for peer in &self.peers {

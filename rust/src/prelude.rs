@@ -9,7 +9,9 @@
 //! [`Topology`]), the reconcile transports ([`Transport`],
 //! [`WirePrecision`]), the screening layer's surface ([`ActiveSet`],
 //! [`ScreenedSelect`]), the losses, and the result types (including
-//! the structured failure [`SolveError`]/[`SolveErrorKind`]) — plus
+//! the structured failure [`SolveError`]/[`SolveErrorKind`]), and the
+//! observability surface ([`Subscriber`], [`Events`], the provided
+//! [`MetricsAggregator`]/[`StructuredLog`] subscribers) — plus
 //! [`ControlFlow`], which observers return.
 
 pub use crate::coordinator::accept::{Accept, AcceptContext, ThreadBest};
@@ -24,6 +26,9 @@ pub use crate::coordinator::metrics::MetricsSnapshot;
 pub use crate::coordinator::observer::{IterationInfo, Observer};
 pub use crate::coordinator::problem::{Problem, SharedState};
 pub use crate::coordinator::select::Select;
+pub use crate::event::{
+    Events, Meta, MetricsAggregator, NoopSubscriber, StructuredLog, Subscriber,
+};
 pub use crate::loss::{Logistic, Loss, SmoothedHinge, Squared};
 pub use crate::net::{Transport, WirePrecision};
 pub use crate::screen::{ActiveSet, ScreenedSelect};

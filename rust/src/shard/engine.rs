@@ -260,6 +260,10 @@ use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::observer::{IterationInfo, Observer};
 use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::select::Select;
+use crate::event::{
+    self, emit, CodecError, EventSink, IterationCompleted, Meta, MetricsAggregator,
+    ReconcileRound, ShardFailed, WireFrameReceived, WireFrameSent,
+};
 use crate::loss;
 use crate::util::atomic::{SyncCell, SyncF64Vec};
 use crate::util::par::{
@@ -441,6 +445,13 @@ pub trait ReconcileLink: Sync {
     fn fold_order(&self, s: usize, round: usize, shards: usize) -> Vec<usize> {
         let _ = (s, round);
         (0..shards).collect()
+    }
+    /// Precision tag carried by `WireFrameSent`/`WireFrameReceived`
+    /// events ([`crate::event`]): `Some("exact")`/`Some("f32")` for
+    /// transports that serialize frames, `None` (the default) for
+    /// in-memory links — which then emit no wire events at all.
+    fn wire_precision(&self) -> Option<&'static str> {
+        None
     }
     /// Mark the link dead and unblock every current and future waiter
     /// (they fail with [`LinkFault::Poisoned`]). Called from the panic
@@ -731,6 +742,10 @@ struct Coordinator<'a, 'o> {
     /// [`IterationInfo::state`] (only allocated when an observer is
     /// attached).
     obs_state: Option<SharedState>,
+    /// Caller-supplied event sink: [`IterationCompleted`] at the log
+    /// cadence, [`ReconcileRound`] (plus wire-frame events when the
+    /// link reports a wire precision) at every reconciled round.
+    events: Option<&'o mut (dyn EventSink + 'o)>,
 }
 
 impl Coordinator<'_, '_> {
@@ -799,6 +814,25 @@ impl Coordinator<'_, '_> {
                 nnz: nnz_now.unwrap(),
             });
             self.last_log_at = elapsed;
+            if let Some(events) = self.events.as_deref_mut() {
+                emit!(
+                    events,
+                    Meta {
+                        timestamp_ticks: round as u64,
+                        shard: 0,
+                        thread: 0,
+                    },
+                    IterationCompleted {
+                        iter: round as u64,
+                        updates,
+                        // per-pool selection sizes are not published
+                        // cross-shard (same convention as the observer)
+                        selected: 0,
+                        objective,
+                        nnz: nnz_now.map(|n| n as u64),
+                    }
+                );
+            }
             if !obj.is_finite() || obj > 1e12 {
                 stop = Some(StopReason::Diverged);
             }
@@ -894,6 +928,30 @@ impl Coordinator<'_, '_> {
         } else {
             self.next_reconcile_gap(sh, round)
         };
+        if let Some(events) = self.events.as_deref_mut() {
+            let folded: u64 = sh.dirty_folded.iter().map(|c| c.get()).sum();
+            let seen: u64 = sh.chunks_seen.iter().map(|c| c.get()).sum();
+            emit!(
+                events,
+                Meta {
+                    timestamp_ticks: round as u64,
+                    shard: 0,
+                    thread: 0,
+                },
+                ReconcileRound {
+                    round: round as u64,
+                    // cumulative, same ratio MetricsSnapshot reports;
+                    // 1.0 = dense fold (no dirty maps)
+                    dirty_frac: if seen > 0 {
+                        folded as f64 / seen as f64
+                    } else {
+                        1.0
+                    },
+                    divergence: sh.round_div.iter().map(|c| c.get()).fold(0.0, f64::max),
+                    gap: gap as u64,
+                }
+            );
+        }
         (stop, gap)
     }
 
@@ -1093,6 +1151,38 @@ impl ShardObserver<'_, '_> {
             },
         )?;
         self.note_wire(cost);
+        // wire-frame events: only when the link actually crosses a wire
+        // (wire_precision() is Some) — in-memory links stay silent, so
+        // loopback and barrier streams are byte-identical
+        if let Some(prec) = self.link.wire_precision() {
+            if let Some(events) = self
+                .coordinator
+                .as_mut()
+                .and_then(|c| c.events.as_deref_mut())
+            {
+                let meta = Meta {
+                    timestamp_ticks: info.iter as u64,
+                    shard: self.s as u32,
+                    thread: 0,
+                };
+                emit!(
+                    events,
+                    meta,
+                    WireFrameSent {
+                        bytes: cost.bytes_tx,
+                        precision: prec,
+                    }
+                );
+                emit!(
+                    events,
+                    meta,
+                    WireFrameReceived {
+                        bytes: cost.bytes_rx,
+                        precision: prec,
+                    }
+                );
+            }
+        }
         // crossing 1: every shard finished the round; all replica
         // updates are visible (each pool's end-of-update barrier chains
         // into this one)
@@ -1179,7 +1269,7 @@ pub fn solve_sharded(
     warm_start: Option<&[f64]>,
     cfg: &ShardedConfig,
 ) -> SolveOutput {
-    solve_sharded_with(global, specs, warm_start, cfg, None)
+    solve_sharded_with(global, specs, warm_start, cfg, None, None)
 }
 
 /// [`solve_sharded`] with a caller observer: invoked on the shard-0
@@ -1215,11 +1305,12 @@ pub fn solve_sharded_with(
     warm_start: Option<&[f64]>,
     cfg: &ShardedConfig,
     observer: Option<&mut dyn Observer>,
+    events: Option<&mut dyn EventSink>,
 ) -> SolveOutput {
     let timeout = (cfg.barrier_timeout_secs > 0.0)
         .then(|| Duration::from_secs_f64(cfg.barrier_timeout_secs));
     let link = BarrierLink::new(specs.len().max(1), cfg.barrier_spin, timeout);
-    solve_sharded_linked(global, specs, warm_start, cfg, observer, &link)
+    solve_sharded_linked(global, specs, warm_start, cfg, observer, events, &link)
 }
 
 /// [`solve_sharded_with`] over an explicit [`ReconcileLink`] — the seam
@@ -1231,6 +1322,7 @@ pub fn solve_sharded_linked(
     warm_start: Option<&[f64]>,
     cfg: &ShardedConfig,
     mut observer: Option<&mut dyn Observer>,
+    mut events: Option<&mut dyn EventSink>,
     link: &dyn ReconcileLink,
 ) -> SolveOutput {
     let s_count = specs.len();
@@ -1368,6 +1460,10 @@ pub fn solve_sharded_linked(
     let mut outs: Vec<SolveOutput> = Vec::with_capacity(s_count);
     let mut coord_history: Option<History> = None;
     let mut failures: Vec<SolveError> = Vec::new();
+    // reborrow so the sink comes back after the scope for the post-join
+    // ShardFailed/phase emission (the coordinator thread only holds it
+    // for the solve)
+    let mut coord_events = events.as_deref_mut();
     std::thread::scope(|scope| {
         let shared = &shared;
         let cols_all = &cols_all;
@@ -1383,6 +1479,7 @@ pub fn solve_sharded_linked(
         {
             let ecfg = engine_cfg(update_path, threads);
             let coordinator_obs = (s == 0).then(|| observer.take()).flatten();
+            let coordinator_events = (s == 0).then(|| coord_events.take()).flatten();
             handles.push(scope.spawn(move || {
                 let _guard = PoisonReconcileOnPanic(link);
                 // §NUMA step 2: pin *before* any allocation, so the
@@ -1434,6 +1531,7 @@ pub fn solve_sharded_linked(
                     div_ewma: 0.0,
                     observer: coordinator_obs,
                     obs_state: None,
+                    events: coordinator_events,
                 });
                 let mut obs = ShardObserver {
                     s,
@@ -1454,6 +1552,9 @@ pub fn solve_sharded_linked(
                         observer: Some(&mut obs),
                         block_proposer: None,
                         dirty: shared.dirty.get(s),
+                        // pool engines stay silent: sharded emission is
+                        // coordinator-only, so the stream has one writer
+                        events: None,
                     },
                 );
                 (Some(out), obs.coordinator.map(|c| c.history))
@@ -1585,22 +1686,31 @@ pub fn solve_sharded_linked(
         ..Default::default()
     };
     for o in &outs {
-        agg.updates += o.metrics.updates;
-        agg.proposals += o.metrics.proposals;
-        agg.propose_nnz += o.metrics.propose_nnz;
-        agg.spill_iters += o.metrics.spill_iters;
-        // screening: per-shard active sets — totals sum across pools
-        agg.kkt_passes += o.metrics.kkt_passes;
-        agg.reactivations += o.metrics.reactivations;
-        agg.active_cols += o.metrics.active_cols;
-        agg.select_secs += o.metrics.select_secs;
-        agg.propose_secs += o.metrics.propose_secs;
-        agg.accept_secs += o.metrics.accept_secs;
-        agg.update_secs += o.metrics.update_secs;
-        agg.screen_secs += o.metrics.screen_secs;
-        agg.log_secs += o.metrics.log_secs;
-        agg.auto_cas_ratio = agg.auto_cas_ratio.max(o.metrics.auto_cas_ratio);
-        agg.auto_switch_factor = agg.auto_switch_factor.max(o.metrics.auto_switch_factor);
+        // per-pool counts and phase seconds fold with the one canonical
+        // merge rule (event::metrics) — no second hand-maintained copy
+        MetricsAggregator::absorb(&mut agg, &o.metrics);
+    }
+
+    // post-join event tail: structured failures, then the canonical
+    // phase table — the same end-of-solve rows the single-process
+    // engine emits, projected from the aggregated snapshot
+    if let Some(mut sink) = events.as_deref_mut() {
+        let meta = Meta {
+            timestamp_ticks: agg.iterations,
+            shard: 0,
+            thread: 0,
+        };
+        for f in &failures {
+            let fmeta = Meta {
+                shard: f.shard.unwrap_or(0) as u32,
+                ..meta
+            };
+            emit!(sink, fmeta, ShardFailed { kind: f.kind.name() });
+            if f.kind == crate::coordinator::convergence::SolveErrorKind::Protocol {
+                emit!(sink, fmeta, CodecError { kind: "protocol" });
+            }
+        }
+        event::phases::emit_rows(&mut sink, meta, &agg);
     }
 
     let stop = if failures.is_empty() {
@@ -1828,6 +1938,7 @@ mod tests {
             None,
             &sharded_cfg(1000),
             Some(&mut obs),
+            None,
         );
         assert_eq!(out.stop, StopReason::Observer);
         assert_eq!(out.metrics.iterations, 10);

@@ -45,6 +45,6 @@ pub use faults::{FaultPlan, FaultSpec};
 pub use link::SimLink;
 pub use report::{render_events, render_verdicts, Verdict};
 pub use scenario::{
-    run_baseline, run_corpus, run_corpus_loopback, run_scenario, run_scenario_loopback,
-    Scenario, ScenarioRun, WorkloadKind,
+    run_baseline, run_corpus, run_corpus_loopback, run_scenario, run_scenario_logged,
+    run_scenario_loopback, Scenario, ScenarioRun, WorkloadKind,
 };

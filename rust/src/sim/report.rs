@@ -1,8 +1,15 @@
 //! Deterministic rendering of simulator results: the virtual event log
 //! (byte-identical across replays of the same plan — the format is part
-//! of that contract: fixed-width fields, no timestamps, no floats) and
+//! of that contract: fixed-width envelope, no wall-clock, no floats) and
 //! per-scenario verdict tables for `gencd sim`.
+//!
+//! Event lines are rendered through the one shared formatter
+//! ([`format_line`](crate::event::log::format_line)), so `gencd sim
+//! --events` output and a production `StructuredLog` text stream are
+//! byte-for-byte the same syntax.
 
+use crate::event::log::{format_line, Field, LogFormat};
+use crate::event::Meta;
 use crate::sim::clock::Event;
 
 /// Outcome of grading one scenario against its `[expect]` table.
@@ -17,22 +24,27 @@ pub struct Verdict {
     pub sim_events: u64,
 }
 
-/// Render the event log, one fixed-width line per event in virtual-time
-/// order:
+/// Render the event log, one line per event in virtual-time order, in
+/// the shared [`format_line`] text syntax:
 ///
 /// ```text
-/// t=00000012 round=0003 shard=01 arrive
+/// t=00000012 shard=01 arrive round=3
 /// ```
 pub fn render_events(events: &[Event]) -> String {
     let mut out = String::with_capacity(events.len() * 40);
     for e in events {
-        out.push_str(&format!(
-            "t={:08} round={:04} shard={:02} {}\n",
-            e.tick,
-            e.round,
-            e.shard,
-            e.kind.name()
+        let meta = Meta {
+            timestamp_ticks: e.tick,
+            shard: e.shard as u32,
+            thread: 0,
+        };
+        out.push_str(&format_line(
+            LogFormat::Text,
+            &meta,
+            e.kind.name(),
+            &[("round", Field::U64(e.round as u64))],
         ));
+        out.push('\n');
     }
     out
 }
@@ -70,8 +82,8 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(
             a,
-            "t=00000012 round=0003 shard=01 arrive\n\
-             t=00999999 round=0042 shard=11 timeout\n"
+            "t=00000012 shard=01 arrive round=3\n\
+             t=00999999 shard=11 timeout round=42\n"
         );
     }
 

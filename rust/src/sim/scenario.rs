@@ -62,6 +62,7 @@ use std::path::Path;
 use crate::config::toml::{parse, Document, Value};
 use crate::coordinator::algorithms::Algorithm;
 use crate::coordinator::engine::{SolveOutput, UpdatePath};
+use crate::event::{SolveInfo, StructuredLog, Subscribed};
 use crate::coordinator::problem::Problem;
 use crate::data::synth;
 use crate::loss::Logistic;
@@ -384,7 +385,7 @@ pub fn run_baseline(sc: &Scenario) -> anyhow::Result<SolveOutput> {
         cfg.barrier_spin,
         Some(std::time::Duration::from_secs(20)),
     );
-    Ok(solve_sharded_linked(&global, specs, None, &cfg, None, &link))
+    Ok(solve_sharded_linked(&global, specs, None, &cfg, None, None, &link))
 }
 
 /// Solve `sc` under its fault plan and grade the outcome.
@@ -393,7 +394,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioRun> {
     let active = specs.len().max(1);
     let plan = FaultPlan::generate(&sc.faults, active, sc.rounds, sc.seed);
     let link = SimLink::new(plan, cfg.barrier_spin, std::time::Duration::from_secs(20));
-    let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, &link);
+    let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, None, &link);
     output.metrics.sim_events = link.event_count() as u64;
     let event_log = render_events(&link.events());
     let verdict = grade(sc, &output);
@@ -454,6 +455,35 @@ fn grade(sc: &Scenario, out: &SolveOutput) -> Verdict {
     Verdict { name: sc.name.clone(), pass, detail, sim_events: out.metrics.sim_events }
 }
 
+/// [`run_scenario`] with a [`StructuredLog`] text subscriber attached
+/// and a deterministic per-round log cadence (`log_every = 1` — the
+/// default wall-clock cadence would break byte-identity). Returns the
+/// run plus the structured event lines; two runs of the same scenario
+/// yield byte-identical lines (pinned by `rust/tests/sim_faults.rs`).
+pub fn run_scenario_logged(sc: &Scenario) -> anyhow::Result<(ScenarioRun, Vec<String>)> {
+    let (specs, mut cfg, global) = build_solve(sc)?;
+    cfg.log_every = 1;
+    let active = specs.len().max(1);
+    let plan = FaultPlan::generate(&sc.faults, active, sc.rounds, sc.seed);
+    let link = SimLink::new(plan, cfg.barrier_spin, std::time::Duration::from_secs(20));
+    let log = StructuredLog::text();
+    let info = SolveInfo {
+        n: global.n_samples() as u64,
+        k: global.n_features() as u64,
+        threads: specs.iter().map(|s| s.threads.max(1) as u32).sum(),
+        shards: active as u32,
+    };
+    let mut sub = Subscribed::new(log.clone(), &info);
+    let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, Some(&mut sub), &link);
+    output.metrics.sim_events = link.event_count() as u64;
+    let event_log = render_events(&link.events());
+    let verdict = grade(sc, &output);
+    Ok((
+        ScenarioRun { verdict, output: Some(output), event_log },
+        log.lines(),
+    ))
+}
+
 /// Solve `sc` under its fault plan with every reconcile exchange routed
 /// through the loopback wire transport ([`crate::net::LoopbackLink`]
 /// composed over the [`SimLink`]): virtual-time faults from `[faults]`
@@ -467,7 +497,7 @@ pub fn run_scenario_loopback(sc: &Scenario) -> anyhow::Result<ScenarioRun> {
     let plan = FaultPlan::generate(&sc.faults, active, sc.rounds, sc.seed);
     let sim = SimLink::new(plan, cfg.barrier_spin, std::time::Duration::from_secs(20));
     let link = LoopbackLink::over(sim, active, WirePrecision::Exact).with_faults(sc.net);
-    let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, &link);
+    let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, None, &link);
     output.metrics.sim_events = link.inner().event_count() as u64;
     let event_log = render_events(&link.inner().events());
     let verdict = grade(sc, &output);

@@ -79,6 +79,7 @@ use crate::coordinator::engine::{
 use crate::coordinator::observer::Observer;
 use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::select::Select;
+use crate::event::{EventSink, SolveInfo, Subscribed, Subscriber};
 use crate::loss::{Logistic, Loss};
 use crate::net::{LoopbackLink, TcpLink, Transport};
 use crate::shard::engine::{
@@ -96,6 +97,11 @@ pub struct Solver {
     accept: Box<dyn Accept>,
     cfg: EngineConfig,
     observer: Option<Box<dyn Observer>>,
+    /// Deferred event-sink constructor: the subscriber is wrapped in a
+    /// [`Subscribed`] at solve time, when the [`SolveInfo`] dimensions
+    /// are known. `None` (the default) runs the engine on the
+    /// statically-dispatched no-op sink — zero emit cost.
+    events: Option<SinkFactory>,
     pre: Arc<Preprocessed>,
     algorithm: Option<Algorithm>,
     warm_start: Option<Vec<f64>>,
@@ -104,6 +110,10 @@ pub struct Solver {
     /// engine pool.
     sharded: Option<ShardedSetup>,
 }
+
+/// How the builder stores a [`Subscriber`] without naming its concrete
+/// type: a one-shot constructor invoked with the per-solve shape.
+type SinkFactory = Box<dyn FnOnce(&SolveInfo) -> Box<dyn EventSink> + Send>;
 
 /// Build-time output of the shard partitioning: everything
 /// [`crate::shard::engine::solve_sharded`] needs, plus the cross-shard
@@ -226,10 +236,19 @@ impl Solver {
         if let Some(w0) = &self.warm_start {
             state.apply_warm_start(&self.problem, w0);
         }
+        let mut sink = self.events.take().map(|make| {
+            make(&SolveInfo {
+                n: self.problem.n_samples() as u64,
+                k: self.problem.n_features() as u64,
+                threads: self.cfg.threads as u32,
+                shards: 0,
+            })
+        });
         let hooks = EngineHooks {
             observer: self.observer.as_deref_mut(),
             block_proposer,
             dirty: None,
+            events: sink.as_deref_mut(),
         };
         engine::solve_from(&self.problem, state, self.select, self.accept, &self.cfg, hooks)
     }
@@ -260,6 +279,14 @@ impl Solver {
         };
         let timeout = (scfg.barrier_timeout_secs > 0.0)
             .then(|| std::time::Duration::from_secs_f64(scfg.barrier_timeout_secs));
+        let mut sink = self.events.take().map(|make| {
+            make(&SolveInfo {
+                n: self.problem.n_samples() as u64,
+                k: self.problem.n_features() as u64,
+                threads: setup.specs.iter().map(|s| s.threads.max(1) as u32).sum(),
+                shards: setup.specs.len() as u32,
+            })
+        });
         match setup.transport {
             Transport::Barrier => solve_sharded_with(
                 &self.problem,
@@ -267,6 +294,7 @@ impl Solver {
                 self.warm_start.as_deref(),
                 &scfg,
                 self.observer.as_deref_mut(),
+                sink.as_deref_mut(),
             ),
             Transport::Loopback { precision } => {
                 let link = LoopbackLink::new(
@@ -281,6 +309,7 @@ impl Solver {
                     self.warm_start.as_deref(),
                     &scfg,
                     self.observer.as_deref_mut(),
+                    sink.as_deref_mut(),
                     &link,
                 )
             }
@@ -308,6 +337,7 @@ impl Solver {
                     self.warm_start.as_deref(),
                     &scfg,
                     self.observer.as_deref_mut(),
+                    sink.as_deref_mut(),
                     &link,
                 )
             }
@@ -352,6 +382,7 @@ pub struct SolverBuilder {
     select: Option<Box<dyn Select>>,
     accept: Option<Box<dyn Accept>>,
     observer: Option<Box<dyn Observer>>,
+    events: Option<SinkFactory>,
     preprocessed: Option<Arc<Preprocessed>>,
     threads: usize,
     seed: u64,
@@ -393,6 +424,7 @@ impl Default for SolverBuilder {
             select: None,
             accept: None,
             observer: None,
+            events: None,
             preprocessed: None,
             threads: 1,
             seed: 1,
@@ -489,6 +521,18 @@ impl SolverBuilder {
     /// `.observer(|info: &IterationInfo<'_>| ControlFlow::Continue(()))`.
     pub fn observer(mut self, observer: impl Observer + 'static) -> Self {
         self.observer = Some(Box::new(observer));
+        self
+    }
+
+    /// Attach a typed-event [`Subscriber`] (metrics aggregation,
+    /// structured logging, phase profiling — see [`crate::event`]).
+    /// Compose several with tuples: `.subscriber((log, agg))`. Without
+    /// one, the engine runs on the statically-dispatched no-op sink and
+    /// every emit site compiles to nothing.
+    pub fn subscriber<S: Subscriber + 'static>(mut self, subscriber: S) -> Self {
+        self.events = Some(Box::new(move |info: &SolveInfo| {
+            Box::new(Subscribed::new(subscriber, info)) as Box<dyn EventSink>
+        }));
         self
     }
 
@@ -1011,6 +1055,7 @@ impl SolverBuilder {
             accept,
             cfg,
             observer: self.observer,
+            events: self.events,
             pre,
             algorithm: self.algorithm,
             warm_start: self.warm_start,

@@ -1,0 +1,160 @@
+//! Acceptance tests for the typed event stream (`gencd::event`): the
+//! observability layer must be **semantically transparent** — attaching
+//! a subscriber cannot change what the solver computes. For every
+//! `Algorithm` preset, single- and multi-threaded, pooled and sharded,
+//! the same solve run three ways — no subscriber, the statically-free
+//! `NoopSubscriber`, and a live `MetricsAggregator` — must land on the
+//! bitwise-identical iterate. (The companion contract, byte-identical
+//! `StructuredLog` replay under fault injection, lives in
+//! `rust/tests/sim_faults.rs`.)
+
+use gencd::coordinator::engine::UpdatePath;
+use gencd::data::{reuters_like, GenOptions};
+use gencd::event::{MetricsAggregator, NoopSubscriber, StructuredLog};
+use gencd::sparse::io::Dataset;
+use gencd::Solver;
+
+/// All eight (Select, Accept) presets, by their registry names.
+const PRESETS: [&str; 8] = [
+    "ccd",
+    "scd",
+    "shotgun",
+    "thread-greedy",
+    "greedy",
+    "coloring",
+    "topk",
+    "block-shotgun",
+];
+
+fn dataset() -> Dataset {
+    let mut ds = reuters_like(&GenOptions::with_scale(0.01));
+    ds.x.normalize_columns();
+    ds
+}
+
+enum Sub {
+    None,
+    Noop,
+    Metrics(MetricsAggregator),
+}
+
+/// One deterministic solve: fixed iteration budget, per-iteration log
+/// cadence (wall-clock cadence would make the tol/log schedule — and
+/// with it nothing else, which is the point — nondeterministic), pinned
+/// update path so no runtime auto-switching consults the clock.
+fn solve_w(ds: &Dataset, alg: &str, threads: usize, shards: usize, sub: Sub) -> Vec<f64> {
+    let b = Solver::builder()
+        .matrix(ds.x.clone())
+        .labels(ds.y.clone())
+        .boxed_loss(gencd::loss::by_name("squared").unwrap())
+        .lambda(1e-3)
+        .algorithm(alg.parse().unwrap())
+        .threads(threads)
+        .shards(shards)
+        .seed(11)
+        .max_iters(12)
+        .max_seconds(60.0)
+        .log_every(1)
+        .tol(0.0)
+        .update_path(UpdatePath::Buffered);
+    let b = match sub {
+        Sub::None => b,
+        Sub::Noop => b.subscriber(NoopSubscriber),
+        Sub::Metrics(agg) => b.subscriber(agg),
+    };
+    let out = b.build().unwrap().solve();
+    assert!(
+        out.failure.is_none(),
+        "{alg} T={threads} S={shards}: {:?}",
+        out.failure
+    );
+    out.w
+}
+
+fn assert_bit_identical(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: w[{i}] differs");
+    }
+}
+
+#[test]
+fn subscribers_are_semantically_transparent_on_every_preset() {
+    let ds = dataset();
+    for alg in PRESETS {
+        for (threads, shards) in [(1, 1), (4, 1), (1, 2), (4, 2)] {
+            let tag = format!("{alg} T={threads} S={shards}");
+            let base = solve_w(&ds, alg, threads, shards, Sub::None);
+            let noop = solve_w(&ds, alg, threads, shards, Sub::Noop);
+            assert_bit_identical(&base, &noop, &format!("{tag} (noop subscriber)"));
+            let agg = MetricsAggregator::new();
+            let metered = solve_w(&ds, alg, threads, shards, Sub::Metrics(agg.clone()));
+            assert_bit_identical(&base, &metered, &format!("{tag} (metrics aggregator)"));
+            let m = agg.snapshot();
+            assert!(m.iterations > 0, "{tag}: aggregator saw no iterations");
+        }
+    }
+}
+
+#[test]
+fn structured_log_covers_required_kinds_pooled() {
+    // a pooled solve's json stream passes the same validation the CI
+    // `events` job runs via `gencd events --check`
+    let ds = dataset();
+    let log = StructuredLog::json();
+    let out = Solver::builder()
+        .matrix(ds.x.clone())
+        .labels(ds.y.clone())
+        .boxed_loss(gencd::loss::by_name("squared").unwrap())
+        .lambda(1e-3)
+        .algorithm("shotgun".parse().unwrap())
+        .threads(2)
+        .seed(5)
+        .max_iters(10)
+        .max_seconds(60.0)
+        .log_every(1)
+        .tol(0.0)
+        .subscriber(log.clone())
+        .build()
+        .unwrap()
+        .solve();
+    assert!(out.failure.is_none());
+    let lines = log.lines();
+    assert!(!lines.is_empty());
+    let report =
+        gencd::event::check::check_lines(lines.iter().map(|s| s.as_str())).expect("valid json");
+    gencd::event::check::verify_coverage(&report).expect("expected kinds present");
+}
+
+#[test]
+fn sharded_structured_log_sees_the_reconcile_layer() {
+    let ds = dataset();
+    let log = StructuredLog::text();
+    let out = Solver::builder()
+        .matrix(ds.x.clone())
+        .labels(ds.y.clone())
+        .boxed_loss(gencd::loss::by_name("squared").unwrap())
+        .lambda(1e-3)
+        .algorithm("shotgun".parse().unwrap())
+        .threads(2)
+        .shards(2)
+        .seed(5)
+        .max_iters(10)
+        .max_seconds(60.0)
+        .log_every(1)
+        .tol(0.0)
+        .subscriber(log.clone())
+        .build()
+        .unwrap()
+        .solve();
+    assert!(out.failure.is_none());
+    let lines = log.lines();
+    assert!(
+        lines.iter().any(|l| l.contains(" iteration ")),
+        "sharded stream must carry iteration events: {lines:?}"
+    );
+    assert!(
+        lines.iter().any(|l| l.contains(" reconcile ")),
+        "sharded stream must carry reconcile events: {lines:?}"
+    );
+}

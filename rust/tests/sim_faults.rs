@@ -23,7 +23,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use gencd::coordinator::convergence::StopReason;
-use gencd::sim::{run_baseline, run_corpus, run_scenario, Scenario};
+use gencd::sim::{run_baseline, run_corpus, run_scenario, run_scenario_logged, Scenario};
 
 /// All eight (Select, Accept) presets, by their registry names.
 const PRESETS: [&str; 8] = [
@@ -135,6 +135,43 @@ fn same_scenario_replays_byte_identical() {
     for (i, (x, y)) in wa.iter().zip(wb.iter()).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "w[{i}] differs across replays");
     }
+}
+
+#[test]
+fn structured_log_replays_byte_identical_under_faults() {
+    // the typed event stream inherits the replay contract: same seed +
+    // scenario => the StructuredLog text lines (logical timestamps,
+    // shortest-roundtrip floats) are byte-identical across runs, even
+    // with jitter + reorder + straggler faults in play
+    let src = r#"
+        name = "logged-replay"
+        seed = 19
+        [workload]
+        kind = "conflict"
+        n = 90
+        k = 30
+        nnz = 8
+        lam = 0.001
+        [shards]
+        count = 3
+        [solve]
+        rounds = 15
+        [faults]
+        delay_ticks_max = 7
+        reorder = true
+        straggler_shard = 1
+        straggler_mult = 3
+    "#;
+    let sc = Scenario::from_toml_str(src, "x").unwrap();
+    let (ra, la) = run_scenario_logged(&sc).unwrap();
+    let (rb, lb) = run_scenario_logged(&sc).unwrap();
+    assert!(ra.verdict.pass, "{}", ra.verdict.detail);
+    assert!(!la.is_empty(), "structured log must capture events");
+    assert_eq!(la, lb, "structured event lines must replay byte-identically");
+    assert_eq!(ra.event_log, rb.event_log, "sim event logs must also match");
+    // the stream covers both the iteration layer and the reconcile layer
+    assert!(la.iter().any(|l| l.contains(" iteration ")), "{la:?}");
+    assert!(la.iter().any(|l| l.contains(" reconcile ")), "{la:?}");
 }
 
 #[test]
