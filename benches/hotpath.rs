@@ -6,11 +6,13 @@
 //! Covers: sparse propose (dloss vs on-the-fly), dloss refresh, the
 //! three z-update disciplines (atomic CAS, unsync store, plain scatter)
 //! single-threaded AND under real multi-thread contention (CAS vs the
-//! engine's buffered scatter+reduce), phase-barrier crossings (std mutex
+//! engine's buffered scatter+reduce vs the cache-blocked slab+drain),
+//! phase-barrier crossings (std mutex
 //! barrier vs the spin barrier), the event stream (disabled-emit delta
 //! vs the bare loop, dyn-dispatch floor), the screening layer (full vs screened
-//! proposal sweep, the full-set KKT sweep kernel), the scalar vs
-//! 4-way-unrolled gather/scatter kernels, line-search refinement,
+//! proposal sweep, the full-set KKT sweep kernel — reference and SIMD),
+//! the scalar vs 4-way-unrolled vs runtime-dispatched SIMD
+//! gather/scatter kernels, line-search refinement,
 //! objective evaluation, and — when artifacts are built — the HLO
 //! dense-block propose for comparison.
 //!
@@ -237,6 +239,45 @@ fn main() {
     let speedup = s_cas.best / s_buf.best;
     println!("update/buffered-mt speedup vs CAS: {speedup:.2}x");
     report.push("update_buffered_vs_cas_speedup", speedup);
+
+    // ---- update under contention: cache-blocked scatter+drain ---------------
+    // `UpdatePath::Blocked`: same buffered semantics, but one
+    // stride-padded slab (strip starts on 128-byte lines, a guard line
+    // between strips) and a block-at-a-time drain instead of the
+    // per-element strided fold — the false-sharing and the strided
+    // walk are what this row prices against update/buffered-mt.
+    let blk = gencd::kernel::BlockedScatter::new(n, mt_threads);
+    let blk_barrier = SpinBarrier::new(mt_threads);
+    let s_blk = bench_loop(0.5, 5, || {
+        std::thread::scope(|scope| {
+            let problem = &problem;
+            let state = &state;
+            let blk = &blk;
+            let blk_barrier = &blk_barrier;
+            for (t, cols) in mt_cols.iter().enumerate() {
+                scope.spawn(move || {
+                    // phase 1: scatter into this thread's strip
+                    for &j in cols {
+                        let (rows, vals) = problem.x.col(j);
+                        for (&i, &v) in rows.iter().zip(vals) {
+                            blk.add(t, i as usize, 1e-12 * v);
+                        }
+                    }
+                    blk_barrier.wait();
+                    // phase 2: line-aligned block drain over my chunk
+                    blk.drain_range(&state.z, aligned_chunk(n, t, mt_threads));
+                });
+            }
+        });
+    });
+    println!(
+        "update/blocked-mt  {:>9.2} ns/nnz             {s_blk}",
+        s_blk.best * 1e9 / mt_nnz as f64
+    );
+    report.push("update_blocked_mt_ns_per_nnz", s_blk.best * 1e9 / mt_nnz as f64);
+    let blk_speedup = s_buf.best / s_blk.best;
+    println!("update/blocked-mt speedup vs buffered-mt: {blk_speedup:.2}x");
+    report.push("update_blocked_vs_buffered_speedup", blk_speedup);
 
     // ---- sharded replicas: private-z scatter + round reconcile --------------
     // The shards dimension: each of `shards` pools scatters its column
@@ -513,7 +554,7 @@ fn main() {
             &sweep_set,
             1e-7,
             0..sweep_set.n_words(),
-            false,
+            gencd::kernel::KernelMode::Reference,
         ));
     });
     println!(
@@ -521,6 +562,25 @@ fn main() {
         s_kkt.best * 1e9 / nnz as f64
     );
     report.push("kkt_sweep_ns_per_nnz", s_kkt.best * 1e9 / nnz as f64);
+
+    // same sweep under the dispatched SIMD tier (the --kernel auto path)
+    let simd_tier = gencd::kernel::dispatch(gencd::kernel::KernelChoice::Auto);
+    let s_kkt_simd = bench_loop(0.5, 10, || {
+        std::hint::black_box(gencd::screen::sweep_range(
+            &problem,
+            &state,
+            &sweep_set,
+            1e-7,
+            0..sweep_set.n_words(),
+            gencd::kernel::KernelMode::Fast(simd_tier),
+        ));
+    });
+    println!(
+        "screen/kkt-simd    {:>9.2} ns/nnz ({})     {s_kkt_simd}",
+        s_kkt_simd.best * 1e9 / nnz as f64,
+        simd_tier.name()
+    );
+    report.push("kkt_sweep_simd_ns_per_nnz", s_kkt_simd.best * 1e9 / nnz as f64);
 
     // ---- fast kernels: scalar vs 4-way unrolled gather/scatter --------------
     let dvec: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 * 1e-3).collect();
@@ -572,6 +632,37 @@ fn main() {
         "axpy_col_unrolled_ns_per_nnz",
         s_axpyf.best * 1e9 / col_nnz as f64,
     );
+
+    // ---- fast kernels: the runtime-dispatched SIMD tier ----------------------
+    // Whatever `--kernel auto` would pick on this host; on a machine
+    // without AVX2 the tier clamps to scalar and these rows converge to
+    // the unrolled ones (the tier name in the row says which reading
+    // you got).
+    let fast_mode = gencd::kernel::KernelMode::Fast(simd_tier);
+    let s_dots = bench_loop(0.5, 20, || {
+        let mut acc = 0.0;
+        for &j in &cols {
+            acc += problem.x.dot_col_tier(j, &dvec, simd_tier);
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "dot_col/simd       {:>9.2} ns/nnz ({})     {s_dots}",
+        s_dots.best * 1e9 / col_nnz as f64,
+        simd_tier.name()
+    );
+    report.push("dot_col_simd_ns_per_nnz", s_dots.best * 1e9 / col_nnz as f64);
+    let s_axpys = bench_loop(0.5, 20, || {
+        for &j in &cols {
+            problem.x.axpy_col_mode(j, 1e-12, &mut yvec, fast_mode);
+        }
+    });
+    println!(
+        "axpy_col/simd      {:>9.2} ns/nnz ({})     {s_axpys}",
+        s_axpys.best * 1e9 / col_nnz as f64,
+        simd_tier.name()
+    );
+    report.push("axpy_col_simd_ns_per_nnz", s_axpys.best * 1e9 / col_nnz as f64);
 
     // ---- phase barrier crossings: std::sync::Barrier vs SpinBarrier ---------
     const ROUNDS: usize = 2000;

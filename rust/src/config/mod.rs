@@ -144,6 +144,11 @@ pub struct SolverConfig {
     /// (`CscMatrix::dot_col_fast`; off by default so the scalar path
     /// stays the bit-exactness reference).
     pub fast_kernels: bool,
+    /// SIMD tier ceiling for the fast kernels:
+    /// auto | scalar | avx2 | avx512 (`kernel::KernelChoice`; requested
+    /// tiers clamp to what the CPU supports, inert unless
+    /// `fast_kernels` is on).
+    pub kernel: String,
     /// Reconcile backend for `shards > 1`:
     /// barrier | loopback | tcp. See `net::Transport` and
     /// `SolverBuilder::transport`.
@@ -192,6 +197,7 @@ impl Default for SolverConfig {
             kkt_every: 16,
             kkt_adaptive: false,
             fast_kernels: false,
+            kernel: "auto".into(),
             transport: "barrier".into(),
             listen: "127.0.0.1:0".into(),
             peers: String::new(),
@@ -319,6 +325,7 @@ impl RunConfig {
             ("solver", "fast_kernels") => {
                 self.solver.fast_kernels = value.as_bool().ok_or_else(bad_type)?
             }
+            ("solver", "kernel") => self.solver.kernel = as_str(value)?,
             ("solver", "transport") => self.solver.transport = as_str(value)?,
             ("solver", "listen") => self.solver.listen = as_str(value)?,
             ("solver", "peers") => self.solver.peers = as_str(value)?,
@@ -405,6 +412,12 @@ mod tests {
         assert!(cfg5.solver.screening);
         assert_eq!(cfg5.solver.kkt_every, 8);
         assert!(cfg5.solver.fast_kernels);
+        // kernel tier: default, TOML, and --set override
+        assert_eq!(cfg.solver.kernel, "auto");
+        let cfg5b = RunConfig::from_toml("[solver]\nkernel = \"avx2\"\n").unwrap();
+        assert_eq!(cfg5b.solver.kernel, "avx2");
+        cfg.set("solver.kernel", "scalar").unwrap();
+        assert_eq!(cfg.solver.kernel, "scalar");
         cfg.set("solver.screening", "true").unwrap();
         cfg.set("solver.kkt_every", "32").unwrap();
         assert!(cfg.solver.screening);

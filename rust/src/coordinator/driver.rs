@@ -104,6 +104,7 @@ pub fn run_on(
     let shard_strategy = ShardStrategy::by_name(&cfg.solver.shard_strategy)?;
     let loss = loss::by_name(&cfg.problem.loss)?;
     let update_path = UpdatePath::by_name(&cfg.solver.update_path)?;
+    let kernel = crate::kernel::KernelChoice::by_name(&cfg.solver.kernel)?;
     let transport = Transport::from_config(
         &cfg.solver.transport,
         &cfg.solver.listen,
@@ -162,7 +163,8 @@ pub fn run_on(
         .screening(cfg.solver.screening)
         .kkt_every(cfg.solver.kkt_every)
         .kkt_adaptive(cfg.solver.kkt_adaptive)
-        .fast_kernels(cfg.solver.fast_kernels);
+        .fast_kernels(cfg.solver.fast_kernels)
+        .kernel(kernel);
     if let Some(log) = &event_log {
         builder = builder.subscriber(log.clone());
     }

@@ -73,6 +73,15 @@
 //!   startup* from the measured CAS-vs-plain-store cost ratio
 //!   ([`crate::util::atomic::cas_plain_ratio`]; the seed hardwired 1.0)
 //!   and reported as [`MetricsSnapshot::auto_switch_factor`].
+//! * **blocked** — buffered semantics with the per-thread accumulators
+//!   laid out as one stride-padded slab ([`crate::kernel::BlockedScatter`]):
+//!   each thread's strip starts on its own 128-byte line with a guard
+//!   line between strips, so adjacent threads never false-share even at
+//!   the strip edges, and the reduce drains in line-aligned 16-element
+//!   blocks that stream every accumulator through once. Same arithmetic
+//!   as the buffered fold (bit-identical result); `Auto` prefers it over
+//!   plain buffered whenever the SIMD kernel tier is active, and
+//!   `update_path = "blocked"` forces it.
 //!
 //! The dense accumulators cost `n * threads` doubles. Past the
 //! configured memory budget ([`EngineConfig::buffer_budget_mb`]) the
@@ -140,6 +149,10 @@
 //! | proposal sweep, screened 5%    | O(p) cols       | O(active) cols (~20x fewer gathers) |
 //! | KKT sweep (screen phase)       |      —          | ~2 ns/nnz, every `kkt_every` iters |
 //! | `dot_col`, 4-way + prefetch    | ~1.5 ns/nnz     | ~0.9 ns/nnz (`fast_kernels`, off by default) |
+//! | `dot_col`, AVX2 gather+FMA     |      —          | ~0.5 ns/nnz (`--kernel auto`, runtime-dispatched, scalar fallback) |
+//! | `axpy_col`, AVX2/AVX-512       |      —          | ~0.6 ns/nnz, bit-identical to the scalar scatter |
+//! | KKT sweep, SIMD dot            |      —          | ~1.0 ns/nnz under a fast tier |
+//! | z-update, 4T, blocked scatter  |      —          | ~4 ns/nnz (stride-padded strips, line-aligned drain) |
 //!
 //! Independent of the numbers, correctness is pinned by the
 //! differential tests (`rust/tests/update_paths.rs`): all update paths
@@ -163,6 +176,7 @@ use crate::event::{
     self, emit, EventSink, IterationCompleted, KktSweep, Meta, NoopSink, ProposalBatch,
     ScreenGate, SpillDrained, UpdateApplied,
 };
+use crate::kernel::{self, BlockedScatter, KernelChoice, KernelMode};
 use crate::loss;
 use crate::screen::{self, ActiveSet, ScreenedSelect, SweepKind, SweepStats};
 use crate::util::atomic::{SyncCell, SyncF64Vec};
@@ -186,6 +200,11 @@ pub enum UpdatePath {
     /// Plain load+store. Caller asserts every `z[i]` has a unique writer
     /// per Update phase (T=1, or COLORING's color classes).
     ConflictFree,
+    /// Buffered semantics through the stride-padded
+    /// [`crate::kernel::BlockedScatter`] slab: per-thread strips with
+    /// guard lines, drained in cache-line-aligned blocks (module docs
+    /// §Update paths). Spills like `Buffered` past the memory budget.
+    Blocked,
 }
 
 impl UpdatePath {
@@ -195,8 +214,9 @@ impl UpdatePath {
             "atomic" => UpdatePath::Atomic,
             "buffered" => UpdatePath::Buffered,
             "conflict-free" | "conflict_free" | "unsync" => UpdatePath::ConflictFree,
+            "blocked" => UpdatePath::Blocked,
             other => anyhow::bail!(
-                "unknown update path '{other}' (auto|atomic|buffered|conflict-free)"
+                "unknown update path '{other}' (auto|atomic|buffered|conflict-free|blocked)"
             ),
         })
     }
@@ -207,6 +227,7 @@ impl UpdatePath {
             UpdatePath::Atomic => "atomic",
             UpdatePath::Buffered => "buffered",
             UpdatePath::ConflictFree => "conflict-free",
+            UpdatePath::Blocked => "blocked",
         }
     }
 }
@@ -273,6 +294,12 @@ pub struct EngineConfig {
     /// point, and the T = 1 bit-exact differential tests pin the scalar
     /// kernels.
     pub fast_kernels: bool,
+    /// SIMD tier ceiling for the fast kernels ([`crate::kernel`]):
+    /// `Auto` probes the CPU once and takes the best supported tier,
+    /// the named tiers clamp to it. Inert unless `fast_kernels` is on
+    /// ([`kernel::resolve`]); the resolved tier is reported in
+    /// [`MetricsSnapshot::kernel_tier`].
+    pub kernel: KernelChoice,
 }
 
 impl Default for EngineConfig {
@@ -292,6 +319,7 @@ impl Default for EngineConfig {
             kkt_every: 16,
             kkt_adaptive: false,
             fast_kernels: false,
+            kernel: KernelChoice::Auto,
         }
     }
 }
@@ -385,6 +413,9 @@ enum UpdateMode {
     ConflictFree,
     Atomic,
     Buffered,
+    /// Buffered semantics through the stride-padded
+    /// [`BlockedScatter`] slab, drained in line-aligned blocks.
+    Blocked,
     /// Buffered semantics under the memory budget: thread-local sparse
     /// accumulation, atomic drain.
     Spill,
@@ -397,6 +428,7 @@ impl UpdateMode {
             UpdateMode::ConflictFree => "conflict-free",
             UpdateMode::Atomic => "atomic",
             UpdateMode::Buffered => "buffered",
+            UpdateMode::Blocked => "blocked",
             UpdateMode::Spill => "spill",
         }
     }
@@ -533,6 +565,12 @@ fn solve_from_impl<E: EventSink>(
     let threads = cfg.threads.max(1);
     let n = problem.n_samples();
     let mean_col_nnz = problem.x.mean_col_nnz();
+    // Kernel mode, resolved once per solve: Reference replays the
+    // scalar seed bit-for-bit; Fast(tier) routes the column gathers and
+    // scatters through the dispatched SIMD kernels (crate::kernel). The
+    // tier is probed here (and clamped again inside every kernel), so a
+    // solve never changes tier mid-flight.
+    let kmode = kernel::resolve(cfg.fast_kernels, cfg.kernel);
     // Screening: one ActiveSet shared between the Select wrapper (reads
     // on the leader), the fused Propose-phase deactivation (atomic bit
     // clears by workers) and the sweep phase (word-chunked rewrites).
@@ -583,15 +621,31 @@ fn solve_from_impl<E: EventSink>(
     // selection/accept volume that can reach the switch threshold.
     // Greedy-style acceptors update at most `threads` coordinates per
     // iteration and never buffer.
+    let auto_wants_dense = {
+        let est = accept.accept_bound(select.expected_size().ceil() as usize, threads);
+        threads > 1 && est as f64 * mean_col_nnz >= auto_switch_factor * n as f64
+    };
+    // Under a fast kernel mode Auto prefers the stride-padded blocked
+    // slab over the plain per-thread buffers (same arithmetic, better
+    // locality in the drain); the two are mutually exclusive, so at
+    // most one n·T-sized allocation exists.
+    let wants_blocked = match cfg.update_path {
+        UpdatePath::Blocked => true,
+        UpdatePath::Auto => auto_wants_dense && kmode.is_fast(),
+        _ => false,
+    };
     let wants_buffer = match cfg.update_path {
         UpdatePath::Buffered => true,
-        UpdatePath::Auto => {
-            let est = accept.accept_bound(select.expected_size().ceil() as usize, threads);
-            threads > 1 && est as f64 * mean_col_nnz >= auto_switch_factor * n as f64
-        }
-        UpdatePath::Atomic | UpdatePath::ConflictFree => false,
+        UpdatePath::Auto => auto_wants_dense && !kmode.is_fast(),
+        UpdatePath::Atomic | UpdatePath::ConflictFree | UpdatePath::Blocked => false,
     };
     let may_buffer = wants_buffer && dense_fits;
+    // The blocked slab pads each strip to a whole number of cache lines
+    // (plus a guard line), so its footprint check is its own.
+    let blocked_fits =
+        BlockedScatter::bytes(n, threads) <= cfg.buffer_budget_mb.saturating_mul(1024 * 1024);
+    let may_block = wants_blocked && blocked_fits;
+    let blocked: Option<BlockedScatter> = may_block.then(|| BlockedScatter::new(n, threads));
     // Spill-mode maps cost ~32 bytes per distinct entry (key + value +
     // HashMap overhead); cap each thread's map so the spill fallback
     // cannot itself blow the budget it exists to honor — past the cap a
@@ -696,6 +750,7 @@ fn solve_from_impl<E: EventSink>(
                     mean_col_nnz,
                     &stats,
                     may_buffer,
+                    may_block,
                     dense_fits,
                     auto_switch_factor,
                     screen.as_deref(),
@@ -737,12 +792,7 @@ fn solve_from_impl<E: EventSink>(
                 if let Some(active) = screen.as_deref() {
                     let words = chunk(active.n_words(), tid, threads);
                     sweep_stats[tid].set(screen::sweep_range(
-                        problem,
-                        state,
-                        active,
-                        thresh,
-                        words,
-                        cfg.fast_kernels,
+                        problem, state, active, thresh, words, kmode,
                     ));
                 }
                 barrier.wait();
@@ -763,11 +813,8 @@ fn solve_from_impl<E: EventSink>(
                     let mut best = ThreadBest::NONE;
                     let mut nnz_work = 0u64;
                     for &j in &p.selected[my] {
-                        let pr = if cfg.fast_kernels {
-                            propose::propose_fast(problem, state, j as usize, use_dloss)
-                        } else {
-                            propose::propose(problem, state, j as usize, use_dloss)
-                        };
+                        let pr =
+                            propose::propose_mode(problem, state, j as usize, use_dloss, kmode);
                         store_proposal(state, &pr);
                         // fused screen: the gradient is already in hand,
                         // so the KKT slack test costs two flops. Atomic
@@ -907,20 +954,21 @@ fn solve_from_impl<E: EventSink>(
                     }
                     match update_mode {
                         UpdateMode::ConflictFree => {
-                            if cfg.fast_kernels {
+                            if let KernelMode::Fast(tier) = kmode {
                                 // unique writer per z[i] (T=1 or
                                 // coloring's color classes), so the
-                                // unrolled prefetching scatter is legal
-                                // through the raw-pointer kernel —
+                                // dispatched scatter is legal through
+                                // the raw-pointer kernel —
                                 // index-disjoint raw stores are sound
                                 // where two threads holding overlapping
-                                // &mut slices would be UB. Bit-identical
-                                // to the scalar loop (each element
-                                // touched once, no re-association).
+                                // &mut slices would be UB. Every tier is
+                                // bit-identical to the scalar loop (each
+                                // element touched once, mul+add — no
+                                // FMA, no re-association).
                                 // SAFETY: the conflict-free discipline
                                 // is exactly the kernel's contract.
                                 unsafe {
-                                    problem.x.axpy_col_fast_ptr(j, d, state.z.raw_ptr())
+                                    problem.x.axpy_col_ptr_tier(j, d, state.z.raw_ptr(), tier)
                                 };
                             } else {
                                 // unique writer per z[i] too (T=1 or
@@ -944,6 +992,15 @@ fn solve_from_impl<E: EventSink>(
                             let buf = &buffers[tid];
                             for (&i, &v) in rows.iter().zip(vals) {
                                 buf.add(i as usize, d * v);
+                            }
+                        }
+                        UpdateMode::Blocked => {
+                            // scatter into this thread's stride-padded
+                            // strip of the shared slab; same frozen-z
+                            // semantics as Buffered, drained below
+                            let blk = blocked.as_ref().expect("blocked slab allocated");
+                            for (&i, &v) in rows.iter().zip(vals) {
+                                blk.add(tid, i as usize, d * v);
                             }
                         }
                         UpdateMode::Spill => {
@@ -1005,6 +1062,19 @@ fn solve_from_impl<E: EventSink>(
                     }
                 }
             }
+            if update_mode == UpdateMode::Blocked {
+                // scatters done and published by this barrier ...
+                barrier.wait();
+                // ... then every thread drains ALL strips over its own
+                // cache-aligned chunk of z in line-sized blocks,
+                // re-zeroing the slab for the next iteration. The fold
+                // order and skip-zeros arithmetic match the buffered
+                // reduce exactly, so the two disciplines are
+                // bit-identical.
+                if let Some(blk) = blocked.as_ref() {
+                    blk.drain_range(&state.z, aligned_chunk(n, tid, threads));
+                }
+            }
             barrier.wait();
             lap!(update_nanos);
             // loop; leader re-plans at the top
@@ -1031,6 +1101,7 @@ fn solve_from_impl<E: EventSink>(
     let mut snapshot = metrics.snapshot();
     snapshot.auto_cas_ratio = auto_cas_ratio;
     snapshot.auto_switch_factor = auto_switch_factor;
+    snapshot.kernel_tier = kmode.name();
     if let Some(active) = &screen {
         // exact final count (the stored value lags fused deactivations
         // since the last sweep)
@@ -1110,12 +1181,15 @@ struct ScreenLeader {
 
 /// Resolve the configured [`UpdatePath`] into this iteration's
 /// [`UpdateMode`]. `may_buffer` says whether the engine allocated the
-/// dense per-thread accumulators; `dense_fits` whether the memory
-/// budget would even allow them (when not, buffered work spills to
-/// sparse per-thread maps). `switch_factor` is the fitted Auto-switch
-/// constant: buffered-style updates engage when
+/// dense per-thread accumulators, `may_block` whether it allocated the
+/// stride-padded [`BlockedScatter`] slab (at most one of the two
+/// exists); `dense_fits` whether the memory budget would even allow
+/// them (when not, buffered-style work spills to sparse per-thread
+/// maps). `switch_factor` is the fitted Auto-switch constant:
+/// buffered-style updates engage when
 /// `est_accept · mean_col_nnz >= switch_factor · n` (1.0 reproduces the
 /// seed's fixed rule).
+#[allow(clippy::too_many_arguments)]
 fn choose_update_mode(
     path: UpdatePath,
     threads: usize,
@@ -1123,6 +1197,7 @@ fn choose_update_mode(
     mean_col_nnz: f64,
     n: usize,
     may_buffer: bool,
+    may_block: bool,
     dense_fits: bool,
     switch_factor: f64,
 ) -> UpdateMode {
@@ -1137,6 +1212,14 @@ fn choose_update_mode(
                 UpdateMode::Spill
             }
         }
+        UpdatePath::Blocked => {
+            if may_block {
+                UpdateMode::Blocked
+            } else {
+                // forced blocked semantics under the memory budget
+                UpdateMode::Spill
+            }
+        }
         UpdatePath::Auto => {
             if threads <= 1 {
                 // every element trivially has a unique writer
@@ -1144,7 +1227,9 @@ fn choose_update_mode(
             } else if est_accept as f64 * mean_col_nnz >= switch_factor * n as f64 {
                 // scatter volume reaches the sample count: the O(n)
                 // reduce sweep amortizes, CAS contention does not
-                if may_buffer {
+                if may_block {
+                    UpdateMode::Blocked
+                } else if may_buffer {
                     UpdateMode::Buffered
                 } else if !dense_fits {
                     UpdateMode::Spill
@@ -1171,6 +1256,7 @@ fn plan_iteration<E: EventSink>(
     mean_col_nnz: f64,
     stats: &[CachePadded<SyncCell<WorkerStats>>],
     may_buffer: bool,
+    may_block: bool,
     dense_fits: bool,
     switch_factor: f64,
     screen: Option<&ActiveSet>,
@@ -1461,6 +1547,7 @@ fn plan_iteration<E: EventSink>(
         mean_col_nnz,
         problem.n_samples(),
         may_buffer,
+        may_block,
         dense_fits,
         switch_factor,
     );
@@ -1886,56 +1973,68 @@ mod tests {
         use super::UpdatePath as P;
         // forced paths are forced
         assert_eq!(
-            choose_update_mode(P::Atomic, 8, 1000, 50.0, 100, true, true, 1.0),
+            choose_update_mode(P::Atomic, 8, 1000, 50.0, 100, true, false, true, 1.0),
             M::Atomic
         );
         assert_eq!(
-            choose_update_mode(P::ConflictFree, 8, 1000, 50.0, 100, false, true, 1.0),
+            choose_update_mode(P::ConflictFree, 8, 1000, 50.0, 100, false, false, true, 1.0),
             M::ConflictFree
         );
         assert_eq!(
-            choose_update_mode(P::Buffered, 1, 1, 1.0, 100, true, true, 1.0),
+            choose_update_mode(P::Buffered, 1, 1, 1.0, 100, true, false, true, 1.0),
             M::Buffered
         );
-        // forced buffered past the budget spills
         assert_eq!(
-            choose_update_mode(P::Buffered, 4, 200, 10.0, 1000, false, false, 1.0),
+            choose_update_mode(P::Blocked, 1, 1, 1.0, 100, false, true, true, 1.0),
+            M::Blocked
+        );
+        // forced buffered/blocked past the budget spill
+        assert_eq!(
+            choose_update_mode(P::Buffered, 4, 200, 10.0, 1000, false, false, false, 1.0),
+            M::Spill
+        );
+        assert_eq!(
+            choose_update_mode(P::Blocked, 4, 200, 10.0, 1000, false, false, false, 1.0),
             M::Spill
         );
         // auto: single thread is conflict-free
         assert_eq!(
-            choose_update_mode(P::Auto, 1, 1000, 50.0, 100, true, true, 1.0),
+            choose_update_mode(P::Auto, 1, 1000, 50.0, 100, true, false, true, 1.0),
             M::ConflictFree
         );
         // auto: small scatter volume stays atomic
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 2, 10.0, 1000, true, true, 1.0),
+            choose_update_mode(P::Auto, 4, 2, 10.0, 1000, true, false, true, 1.0),
             M::Atomic
         );
         // auto: scatter volume >= factor·n flips to buffered (when
-        // allocated)
+        // allocated), preferring the blocked slab when it exists
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true, true, 1.0),
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true, false, true, 1.0),
             M::Buffered
         );
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, true, 1.0),
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, true, true, 1.0),
+            M::Blocked
+        );
+        assert_eq!(
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, false, true, 1.0),
             M::Atomic
         );
         // auto over the budget: spill rather than CAS-per-nnz
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, false, 1.0),
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, false, false, false, 1.0),
             M::Spill
         );
         // the fitted factor moves the switch point: the same scatter
         // volume stays atomic under a high factor and buffers under a
         // low one
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true, true, 4.0),
+            choose_update_mode(P::Auto, 4, 200, 10.0, 1000, true, false, true, 4.0),
             M::Atomic
         );
         assert_eq!(
-            choose_update_mode(P::Auto, 4, 40, 10.0, 1000, true, true, 0.25),
+            choose_update_mode(P::Auto, 4, 40, 10.0, 1000, true, false, true, 0.25),
             M::Buffered
         );
     }
@@ -2226,9 +2325,119 @@ mod tests {
             UpdatePath::Atomic,
             UpdatePath::Buffered,
             UpdatePath::ConflictFree,
+            UpdatePath::Blocked,
         ] {
             assert_eq!(UpdatePath::by_name(p.name()).unwrap(), p);
         }
         assert!(UpdatePath::by_name("magic").is_err());
+    }
+
+    #[test]
+    fn blocked_path_matches_buffered_bitwise() {
+        // the blocked drain replays the buffered fold arithmetic over a
+        // stride-padded slab: same seed, same selection stream, the two
+        // disciplines must produce bit-identical iterates — and both
+        // must keep z consistent under real multi-thread contention
+        let p = make_problem(60, 48, 24, true);
+        let run = |path: UpdatePath| {
+            let sel = RandomSubset {
+                rng: Pcg64::seeded(61),
+                k: p.n_features(),
+                size: 8,
+            };
+            let state = SharedState::new(p.n_samples(), p.n_features());
+            let mut c = cfg(4, 200);
+            c.update_path = path;
+            let out = solve_from(
+                &p,
+                &state,
+                Box::new(sel),
+                accept::all(),
+                &c,
+                EngineHooks::none(),
+            );
+            assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+            out
+        };
+        let buffered = run(UpdatePath::Buffered);
+        let blocked = run(UpdatePath::Blocked);
+        assert_eq!(buffered.w, blocked.w, "blocked must replay buffered exactly");
+        assert_eq!(buffered.objective, blocked.objective);
+        assert_eq!(blocked.metrics.spill_iters, 0, "the slab fits the budget");
+        let first = blocked.history.records.first().unwrap().objective;
+        assert!(blocked.objective < first, "{first} -> {}", blocked.objective);
+    }
+
+    #[test]
+    fn blocked_over_budget_spills_and_stays_consistent() {
+        let p = make_problem(62, 48, 24, true);
+        let sel = RandomSubset {
+            rng: Pcg64::seeded(63),
+            k: p.n_features(),
+            size: 8,
+        };
+        let state = SharedState::new(p.n_samples(), p.n_features());
+        let mut c = cfg(4, 200);
+        c.update_path = UpdatePath::Blocked;
+        c.buffer_budget_mb = 0;
+        let out = solve_from(
+            &p,
+            &state,
+            Box::new(sel),
+            accept::all(),
+            &c,
+            EngineHooks::none(),
+        );
+        let first = out.history.records.first().unwrap().objective;
+        assert!(out.objective < first, "{first} -> {}", out.objective);
+        assert!(state.z_drift(&p) < 1e-8, "drift {}", state.z_drift(&p));
+        assert_eq!(
+            out.metrics.spill_iters, out.metrics.iterations,
+            "every iteration should have spilled"
+        );
+    }
+
+    #[test]
+    fn kernel_tiers_agree_with_reference_engine() {
+        // the engine-level discipline: every dispatched tier must land
+        // within 1e-12 of the scalar-reference solve on the same stream
+        use crate::kernel::{KernelChoice, KernelTier};
+        let p = make_problem(64, 40, 16, false);
+        let run = |fast: bool, choice: KernelChoice| {
+            let sel = Cyclic {
+                next: 0,
+                k: p.n_features(),
+            };
+            let mut c = cfg(1, 800);
+            c.fast_kernels = fast;
+            c.kernel = choice;
+            solve(&p, sel, AcceptAll, &c)
+        };
+        let reference = run(false, KernelChoice::Auto);
+        assert_eq!(reference.metrics.kernel_tier, "reference");
+        for choice in [KernelChoice::Scalar, KernelChoice::Avx2, KernelChoice::Avx512] {
+            let fast = run(true, choice);
+            // the requested tier is clamped to what the host supports,
+            // so the report is the *resolved* tier
+            let want_at_most = match choice {
+                KernelChoice::Scalar => KernelTier::Scalar,
+                KernelChoice::Avx2 => KernelTier::Avx2,
+                _ => KernelTier::Avx512,
+            };
+            assert!(
+                crate::kernel::dispatch(choice) <= want_at_most,
+                "{choice:?} resolved above its ceiling"
+            );
+            assert_eq!(fast.metrics.kernel_tier, crate::kernel::dispatch(choice).name());
+            assert!(
+                (reference.objective - fast.objective).abs() < 1e-9,
+                "{choice:?}: {} vs {}",
+                reference.objective,
+                fast.objective
+            );
+            for (a, b) in reference.w.iter().zip(&fast.w) {
+                assert!((a - b).abs() < 1e-7, "{choice:?}: {a} vs {b}");
+            }
+        }
     }
 }

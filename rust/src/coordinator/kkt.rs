@@ -12,6 +12,7 @@
 //! used by tests to certify solver output.
 
 use super::problem::Problem;
+use crate::kernel::KernelMode;
 use crate::loss;
 
 /// Per-run KKT summary.
@@ -42,9 +43,36 @@ pub fn violation(w: f64, g: f64, lam: f64) -> f64 {
 }
 
 /// Full KKT check at `w` (computes the exact gradient; O(nnz)).
+/// Bit-identical to [`check_mode`] at [`KernelMode::Reference`].
 pub fn check(problem: &Problem, w: &[f64], tol: f64) -> KktReport {
+    check_mode(problem, w, tol, KernelMode::Reference)
+}
+
+/// [`check`] under a per-solve [`KernelMode`]: the full-gradient sweep
+/// is one `<X_j, ell'(y, z)>` gather per column — exactly the kernel
+/// shape the dispatched SIMD dot accelerates. Fast tiers re-associate
+/// each column reduction (1e-12 vs the reference); the violation fold
+/// itself is identical in every mode.
+pub fn check_mode(problem: &Problem, w: &[f64], tol: f64, mode: KernelMode) -> KktReport {
     let z = problem.x.matvec(w);
-    let g = loss::full_gradient(problem.loss.as_ref(), &problem.x, &problem.y, &z);
+    let g = match mode {
+        KernelMode::Reference => {
+            loss::full_gradient(problem.loss.as_ref(), &problem.x, &problem.y, &z)
+        }
+        KernelMode::Fast(tier) => {
+            let loss = problem.loss.as_ref();
+            let n = problem.n_samples() as f64;
+            let d: Vec<f64> = problem
+                .y
+                .iter()
+                .zip(&z)
+                .map(|(&yi, &zi)| loss.deriv(yi, zi))
+                .collect();
+            (0..w.len())
+                .map(|j| problem.x.dot_col_tier(j, &d, tier) / n)
+                .collect()
+        }
+    };
     let mut max_v = 0.0;
     let mut sum = 0.0;
     let mut argmax = 0;
@@ -117,6 +145,44 @@ mod tests {
         let r = check(&p, &w, 1e-9);
         assert!(r.max_violation < 1e-12, "{r:?}");
         assert_eq!(r.n_violating, 0);
+    }
+
+    #[test]
+    fn check_mode_tiers_agree() {
+        use crate::kernel::KernelTier;
+        let mut rng = crate::util::Pcg64::seeded(21);
+        let n = 120usize;
+        let k = 10usize;
+        let mut b = CooBuilder::new(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                if rng.next_f64() < 0.3 {
+                    b.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        let p = crate::coordinator::Problem::new(
+            Dataset {
+                x: b.build(),
+                y: (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+                name: "t".into(),
+            },
+            crate::loss::by_name("logistic").unwrap(),
+            1e-3,
+        );
+        let w: Vec<f64> = (0..k).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+        let reference = check(&p, &w, 1e-6);
+        for tier in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+            let fast = check_mode(&p, &w, 1e-6, KernelMode::Fast(tier));
+            assert!(
+                (reference.max_violation - fast.max_violation).abs() <= 1e-12,
+                "{tier:?}: {} vs {}",
+                reference.max_violation,
+                fast.max_violation
+            );
+            assert!((reference.mean_violation - fast.mean_violation).abs() <= 1e-12);
+            assert_eq!(reference.argmax, fast.argmax, "{tier:?}");
+        }
     }
 
     #[test]

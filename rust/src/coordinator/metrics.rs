@@ -83,6 +83,7 @@ impl Metrics {
             wire_bytes_tx: 0,
             wire_bytes_rx: 0,
             codec_secs: 0.0,
+            kernel_tier: "",
         }
     }
 }
@@ -181,6 +182,12 @@ pub struct MetricsSnapshot {
     /// not blocking waits (max across shard leaders, the
     /// `reconcile_secs` convention). 0 on in-memory links.
     pub codec_secs: f64,
+    /// Kernel mode the solve resolved once at startup
+    /// ([`crate::kernel::KernelMode::name`]): `"reference"` for the
+    /// bit-exact scalar seed, else the dispatched SIMD tier
+    /// (`"scalar"`/`"avx2"`/`"avx512"`). Empty for snapshots that never
+    /// ran the engine (e.g. [`Default`]).
+    pub kernel_tier: &'static str,
 }
 
 impl MetricsSnapshot {

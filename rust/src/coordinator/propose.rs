@@ -20,6 +20,7 @@
 //! [`crate::util::atomic::SyncF64Vec`]).
 
 use super::problem::{Problem, SharedState};
+use crate::kernel::KernelMode;
 use crate::util::clip_psi;
 
 /// A computed proposal for one coordinate.
@@ -70,6 +71,30 @@ pub fn gradient_from_dloss_fast(problem: &Problem, state: &SharedState, j: usize
     problem.x.dot_col_fast(j, d) / problem.n_samples() as f64
 }
 
+/// [`gradient_from_dloss`] under the per-solve [`KernelMode`]: the
+/// plain scalar reference, or the dispatched gather kernel (unrolled
+/// scalar / AVX2 / AVX-512) via
+/// [`dot_col_mode`](crate::sparse::CscMatrix::dot_col_mode). Every fast
+/// tier re-associates the reduction — 1e-12 engine discipline.
+#[inline]
+pub fn gradient_from_dloss_mode(
+    problem: &Problem,
+    state: &SharedState,
+    j: usize,
+    mode: KernelMode,
+) -> f64 {
+    match mode {
+        KernelMode::Reference => gradient_from_dloss(problem, state, j),
+        KernelMode::Fast(tier) => {
+            // SAFETY: Propose and screen phases have no dloss writer
+            // (the engine's unique-writer-per-phase protocol); the
+            // slice is scoped to this one kernel call.
+            let d = unsafe { state.dloss.plain_slice() };
+            problem.x.dot_col_tier(j, d, tier) / problem.n_samples() as f64
+        }
+    }
+}
+
 /// Gradient along j computed directly from `z` (on-the-fly `ell'`).
 #[inline]
 pub fn gradient_from_z(problem: &Problem, state: &SharedState, j: usize) -> f64 {
@@ -95,7 +120,7 @@ pub fn gradient_from_z(problem: &Problem, state: &SharedState, j: usize) -> f64 
 /// [`CscMatrix::dot_col_fast`]: crate::sparse::CscMatrix::dot_col_fast
 #[inline]
 pub fn gradient_from_z_fast(problem: &Problem, state: &SharedState, j: usize) -> f64 {
-    use crate::sparse::csc::{prefetch_read, PREFETCH_DIST};
+    use crate::kernel::{prefetch_read, PREFETCH_DIST};
     let (rows, vals) = problem.x.col(j);
     let loss = problem.loss.as_ref();
     let y = &problem.y;
@@ -157,6 +182,45 @@ pub fn propose_fast(
         gradient_from_dloss_fast(problem, state, j)
     } else {
         gradient_from_z_fast(problem, state, j)
+    };
+    let wj = state.w.get(j);
+    proposal_from_gradient(problem, j, wj, g)
+}
+
+/// [`gradient_from_z`] under the per-solve [`KernelMode`]. The
+/// on-the-fly path evaluates `ell'` per element through a virtual call,
+/// which no SIMD tier can vectorize — every `Fast` tier therefore runs
+/// the unrolled+prefetching [`gradient_from_z_fast`] arm (the gather
+/// latency, not the arithmetic, is what that kernel attacks).
+#[inline]
+pub fn gradient_from_z_mode(
+    problem: &Problem,
+    state: &SharedState,
+    j: usize,
+    mode: KernelMode,
+) -> f64 {
+    match mode {
+        KernelMode::Reference => gradient_from_z(problem, state, j),
+        KernelMode::Fast(_) => gradient_from_z_fast(problem, state, j),
+    }
+}
+
+/// [`propose`] under the per-solve [`KernelMode`]: dispatches both
+/// gradient paths ([`gradient_from_dloss_mode`],
+/// [`gradient_from_z_mode`]). `KernelMode::Reference` is exactly
+/// [`propose`]; `Fast(KernelTier::Scalar)` is exactly [`propose_fast`].
+#[inline]
+pub fn propose_mode(
+    problem: &Problem,
+    state: &SharedState,
+    j: usize,
+    use_dloss: bool,
+    mode: KernelMode,
+) -> Proposal {
+    let g = if use_dloss {
+        gradient_from_dloss_mode(problem, state, j, mode)
+    } else {
+        gradient_from_z_mode(problem, state, j, mode)
     };
     let wj = state.w.get(j);
     proposal_from_gradient(problem, j, wj, g)
@@ -230,6 +294,32 @@ mod tests {
             let b = propose_fast(&p, &s, j, false);
             assert!((a.delta - b.delta).abs() < 1e-12);
             assert!((a.phi - b.phi).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mode_dispatch_matches_named_paths() {
+        use crate::kernel::KernelTier;
+        let p = problem(0.01);
+        let s = SharedState::from_warm_start(&p, &[0.2, -0.1, 0.4]);
+        refresh_dloss(&p, &s, 0, p.n_samples());
+        for j in 0..3 {
+            for use_dloss in [true, false] {
+                // Reference mode is bit-identical to the scalar path
+                let a = propose(&p, &s, j, use_dloss);
+                let r = propose_mode(&p, &s, j, use_dloss, KernelMode::Reference);
+                assert_eq!(a, r, "reference j={j}");
+                // Fast(Scalar) is bit-identical to the unrolled path
+                let f = propose_fast(&p, &s, j, use_dloss);
+                let m = propose_mode(&p, &s, j, use_dloss, KernelMode::Fast(KernelTier::Scalar));
+                assert_eq!(f, m, "fast-scalar j={j}");
+                // SIMD tiers agree within the 1e-12 discipline
+                for tier in [KernelTier::Avx2, KernelTier::Avx512] {
+                    let t = propose_mode(&p, &s, j, use_dloss, KernelMode::Fast(tier));
+                    assert!((a.g - t.g).abs() <= 1e-12 * a.g.abs().max(1.0), "{tier:?} j={j}");
+                    assert!((a.delta - t.delta).abs() <= 1e-12, "{tier:?} j={j}");
+                }
+            }
         }
     }
 

@@ -63,13 +63,22 @@ impl MetricsAggregator {
         agg.log_secs += m.log_secs;
         agg.auto_cas_ratio = agg.auto_cas_ratio.max(m.auto_cas_ratio);
         agg.auto_switch_factor = agg.auto_switch_factor.max(m.auto_switch_factor);
+        // every pool resolves the same kernel mode (one config), so
+        // keep the first non-empty report rather than inventing a merge
+        if agg.kernel_tier.is_empty() {
+            agg.kernel_tier = m.kernel_tier;
+        }
     }
 }
 
 impl Subscriber for MetricsAggregator {
     type SolveContext = ();
 
-    fn create_solve_context(&mut self, _info: &SolveInfo) -> Self::SolveContext {}
+    fn create_solve_context(&mut self, info: &SolveInfo) -> Self::SolveContext {
+        if !info.kernel.is_empty() {
+            self.inner.lock().unwrap().kernel_tier = info.kernel;
+        }
+    }
 
     fn on_iteration_completed(&mut self, _ctx: &mut (), _meta: &Meta, ev: &IterationCompleted) {
         let mut m = self.inner.lock().unwrap();

@@ -56,6 +56,11 @@ pub struct SolveInfo {
     pub k: u64,
     pub threads: u32,
     pub shards: u32,
+    /// Kernel mode the solver will resolve
+    /// ([`crate::kernel::KernelMode::name`]): `"reference"` or a
+    /// dispatched SIMD tier name. Empty when the caller predates the
+    /// kernel layer (e.g. [`Default`]).
+    pub kernel: &'static str,
 }
 
 /// One engine iteration, emitted at the objective-log cadence (where the

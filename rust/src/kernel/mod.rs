@@ -1,0 +1,727 @@
+//! Runtime-dispatched SIMD kernels — the instruction-level execution
+//! layer under every GenCD hot loop.
+//!
+//! Everything above this module (the engine's phases, screening,
+//! sharding, the wire) bottoms out in four kernel shapes: the
+//! gather-based column dot (`Propose`'s gradient numerator and the
+//! fused KKT sweep inner product), the column axpy scatter (`Update`'s
+//! `z += delta X_j`), dense reductions (dloss/objective sums), and the
+//! buffered Update drain. This module owns all of them, in three tiers:
+//!
+//! * [`KernelTier::Scalar`] — the existing 4-way unrolled, prefetching
+//!   scalar kernels (moved here from `sparse/csc.rs`; the csc methods
+//!   now delegate). Runs everywhere, and is the arm the
+//!   `GENCD_FORCE_SCALAR` escape hatch pins for differential testing.
+//! * [`KernelTier::Avx2`] — 4-lane `core::arch` AVX2+FMA: hardware
+//!   `vgatherdpd` for the dots, vectorized multiplies with scalar
+//!   read-modify-write stores for the axpy (AVX2 has no scatter).
+//! * [`KernelTier::Avx512`] — 8-lane AVX-512F with native
+//!   `vscatterdpd` on the axpy path (sound because CSC rows are
+//!   strictly sorted within a column — the gathered/scattered lanes of
+//!   one step are always unique).
+//!
+//! ## Dispatch
+//!
+//! [`dispatch`] resolves a [`KernelChoice`] (config/CLI `--kernel
+//! auto|scalar|avx2|avx512`) to the best *available* tier: hardware
+//! capability is probed once with `is_x86_feature_detected!` and cached
+//! in a `OnceLock`; a requested tier the host lacks clamps down, and
+//! non-x86 hosts always resolve to `Scalar`. The `GENCD_FORCE_SCALAR`
+//! environment variable is re-read on every call (deliberately not
+//! cached) so tests can pin and unpin the scalar arm at will. The
+//! engine resolves the tier once per solve ([`resolve`]) and reports it
+//! in `MetricsSnapshot::kernel_tier` and `SolveInfo::kernel`.
+//!
+//! ## Bit-exactness discipline
+//!
+//! The same A/B contract the unrolled kernels established: the plain
+//! scalar path ([`KernelMode::Reference`], `fast_kernels = false`)
+//! stays the bit-exactness reference. Every **axpy** arm is
+//! bit-identical to it (each element is touched exactly once —
+//! elementwise multiply-then-add, no re-association, no FMA
+//! contraction). The **dot**/reduction arms re-associate the sum
+//! (4 scalar accumulators, 4 or 8 SIMD lanes), so engine-level
+//! agreement is pinned at 1e-12, exactly like the unrolled kernels
+//! today (`rust/tests/kernels.rs`).
+//!
+//! This module is also the one documented home of the software-prefetch
+//! constants ([`PREFETCH_DIST`], [`prefetch_read`]) that were
+//! previously split between `sparse/csc.rs` and `coordinator/propose.rs`,
+//! and of [`BlockedScatter`], the stride-padded cache-blocked
+//! accumulator slab behind `UpdatePath::Blocked`.
+
+use std::sync::OnceLock;
+
+use crate::util::atomic::SyncF64Vec;
+use crate::util::par::{padded_stride, F64S_PER_LINE};
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// How many gather targets ahead the unrolled/SIMD kernels prefetch —
+/// deep enough to cover a memory round-trip at ~1 gather per cycle
+/// group, shallow enough that the prefetched line is still resident
+/// when the loop arrives. Shared by every gather/scatter kernel in the
+/// crate (this module, `sparse/csc.rs`, the on-the-fly gradient in
+/// `coordinator/propose.rs`).
+pub const PREFETCH_DIST: usize = 16;
+
+/// Best-effort read-prefetch hint for the gather/scatter kernels;
+/// compiles to `prefetcht0` on x86-64 and to nothing elsewhere.
+#[inline(always)]
+pub fn prefetch_read(p: *const f64) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint — it never faults and has no
+    // observable effect on memory, for any address
+    unsafe {
+        std::arch::x86_64::_mm_prefetch::<{ std::arch::x86_64::_MM_HINT_T0 }>(p as *const i8)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = p;
+    }
+}
+
+/// What the user *asked for* (`--kernel`, `solver.kernel`,
+/// `SolverBuilder::kernel`). [`dispatch`] resolves it against what the
+/// host can actually run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Best tier the host supports (the default).
+    #[default]
+    Auto,
+    /// Pin the 4-way unrolled scalar kernels.
+    Scalar,
+    /// Request AVX2+FMA; clamps to scalar where unavailable.
+    Avx2,
+    /// Request AVX-512F; clamps to the best available tier below it.
+    Avx512,
+}
+
+impl KernelChoice {
+    pub fn by_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "auto" => KernelChoice::Auto,
+            "scalar" => KernelChoice::Scalar,
+            "avx2" => KernelChoice::Avx2,
+            "avx512" => KernelChoice::Avx512,
+            other => anyhow::bail!("unknown kernel '{other}' (auto|scalar|avx2|avx512)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Avx2 => "avx2",
+            KernelChoice::Avx512 => "avx512",
+        }
+    }
+}
+
+/// A kernel implementation the host can actually execute, ordered by
+/// width (`Scalar < Avx2 < Avx512`) so requested tiers clamp with
+/// `min`. `Scalar` here means the 4-way *unrolled* kernels — the plain
+/// reference path is [`KernelMode::Reference`], not a tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KernelTier {
+    Scalar,
+    Avx2,
+    Avx512,
+}
+
+impl KernelTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Avx512 => "avx512",
+        }
+    }
+}
+
+/// The per-solve kernel decision the engine threads through Propose,
+/// the KKT sweep and the Update scatter: the plain scalar reference
+/// (`fast_kernels = false` — bit-exact, the default) or a dispatched
+/// fast tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Plain scalar loops — the bit-exactness reference.
+    Reference,
+    /// The dispatched fast arm (unrolled scalar, AVX2 or AVX-512).
+    Fast(KernelTier),
+}
+
+impl KernelMode {
+    #[inline]
+    pub fn is_fast(self) -> bool {
+        matches!(self, KernelMode::Fast(_))
+    }
+
+    /// Reported tier string (`MetricsSnapshot::kernel_tier`,
+    /// `SolveInfo::kernel`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::Reference => "reference",
+            KernelMode::Fast(tier) => tier.name(),
+        }
+    }
+}
+
+/// `GENCD_FORCE_SCALAR` escape hatch: set (to anything but `0`) it pins
+/// [`dispatch`] to [`KernelTier::Scalar`], regardless of hardware or
+/// the requested [`KernelChoice`] — the differential-testing lever the
+/// CI kernel matrix exercises. Read per call, never cached.
+pub const FORCE_SCALAR_ENV: &str = "GENCD_FORCE_SCALAR";
+
+fn force_scalar() -> bool {
+    matches!(std::env::var(FORCE_SCALAR_ENV), Ok(v) if v != "0")
+}
+
+/// Hardware capability, probed once per process and cached.
+fn hw_tier() -> KernelTier {
+    static BEST: OnceLock<KernelTier> = OnceLock::new();
+    *BEST.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            // AVX-512F without AVX2+FMA does not exist on real silicon;
+            // requiring the lower tiers keeps the clamp order total.
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                if is_x86_feature_detected!("avx512f") {
+                    return KernelTier::Avx512;
+                }
+                return KernelTier::Avx2;
+            }
+        }
+        KernelTier::Scalar
+    })
+}
+
+/// Resolve a requested [`KernelChoice`] to the tier that will actually
+/// run: the escape hatch wins, then the request clamps to the probed
+/// hardware capability. Cheap enough to call per solve.
+pub fn dispatch(choice: KernelChoice) -> KernelTier {
+    if force_scalar() {
+        return KernelTier::Scalar;
+    }
+    match choice {
+        KernelChoice::Auto => hw_tier(),
+        KernelChoice::Scalar => KernelTier::Scalar,
+        KernelChoice::Avx2 => KernelTier::Avx2.min(hw_tier()),
+        KernelChoice::Avx512 => KernelTier::Avx512.min(hw_tier()),
+    }
+}
+
+/// The engine's once-per-solve resolution: `fast_kernels = false` is
+/// the bit-exact reference, otherwise the dispatched tier.
+pub fn resolve(fast_kernels: bool, choice: KernelChoice) -> KernelMode {
+    if fast_kernels {
+        KernelMode::Fast(dispatch(choice))
+    } else {
+        KernelMode::Reference
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar tier: the 4-way unrolled kernels (the former csc fast arms)
+// ---------------------------------------------------------------------
+
+/// `sum_i vals[i] * d[rows[i]]` unrolled 4-way with independent
+/// accumulators and a software-prefetch hint [`PREFETCH_DIST`] gathers
+/// ahead — the gather is latency-bound on the random `d[rows[i]]`
+/// loads, so splitting the dependency chain and prefetching the
+/// upcoming lines is worth ~2x on wide columns. **Not bit-identical**
+/// to a plain scalar loop: the 4 partial sums re-associate the
+/// reduction (1e-12 discipline).
+pub fn dot_unrolled(rows: &[u32], vals: &[f64], d: &[f64]) -> f64 {
+    let len = rows.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i + 4 <= len {
+        if i + PREFETCH_DIST < len {
+            prefetch_read(&d[rows[i + PREFETCH_DIST] as usize]);
+        }
+        a0 += vals[i] * d[rows[i] as usize];
+        a1 += vals[i + 1] * d[rows[i + 1] as usize];
+        a2 += vals[i + 2] * d[rows[i + 2] as usize];
+        a3 += vals[i + 3] * d[rows[i + 3] as usize];
+        i += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    while i < len {
+        acc += vals[i] * d[rows[i] as usize];
+        i += 1;
+    }
+    acc
+}
+
+/// `y[rows[i]] += alpha * vals[i]` unrolled 4-way with a prefetch
+/// hint. Bit-identical to the plain scalar scatter: each element is
+/// touched once, no re-association.
+pub fn axpy_unrolled(rows: &[u32], vals: &[f64], alpha: f64, y: &mut [f64]) {
+    let len = rows.len();
+    let mut i = 0;
+    while i + 4 <= len {
+        if i + PREFETCH_DIST < len {
+            prefetch_read(&y[rows[i + PREFETCH_DIST] as usize]);
+        }
+        y[rows[i] as usize] += alpha * vals[i];
+        y[rows[i + 1] as usize] += alpha * vals[i + 1];
+        y[rows[i + 2] as usize] += alpha * vals[i + 2];
+        y[rows[i + 3] as usize] += alpha * vals[i + 3];
+        i += 4;
+    }
+    while i < len {
+        y[rows[i] as usize] += alpha * vals[i];
+        i += 1;
+    }
+}
+
+/// [`axpy_unrolled`] writing through a raw base pointer — the
+/// multi-thread conflict-free scatter's kernel. Same unroll, same
+/// prefetch, bit-identical arithmetic.
+///
+/// # Safety
+///
+/// `y` must point to a live `f64` array indexable by every entry of
+/// `rows`, and for the duration of the call no other thread may read or
+/// write the elements those rows touch.
+pub unsafe fn axpy_unrolled_ptr(rows: &[u32], vals: &[f64], alpha: f64, y: *mut f64) {
+    let len = rows.len();
+    let mut i = 0;
+    while i + 4 <= len {
+        if i + PREFETCH_DIST < len {
+            prefetch_read(y.add(rows[i + PREFETCH_DIST] as usize) as *const f64);
+        }
+        *y.add(rows[i] as usize) += alpha * vals[i];
+        *y.add(rows[i + 1] as usize) += alpha * vals[i + 1];
+        *y.add(rows[i + 2] as usize) += alpha * vals[i + 2];
+        *y.add(rows[i + 3] as usize) += alpha * vals[i + 3];
+        i += 4;
+    }
+    while i < len {
+        *y.add(rows[i] as usize) += alpha * vals[i];
+        i += 1;
+    }
+}
+
+/// Plain dense dot product — the reference arm of [`dot_dense`].
+pub fn dot_dense_scalar(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Dense dot unrolled 4-way (contiguous loads need no prefetch; the
+/// split accumulators feed the FP pipes). Re-associates.
+pub fn dot_dense_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    let len = a.len().min(b.len());
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i + 4 <= len {
+        a0 += a[i] * b[i];
+        a1 += a[i + 1] * b[i + 1];
+        a2 += a[i + 2] * b[i + 2];
+        a3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    while i < len {
+        acc += a[i] * b[i];
+        i += 1;
+    }
+    acc
+}
+
+/// Plain `sum |a_i|` — the reference arm of [`sum_abs`].
+pub fn sum_abs_scalar(a: &[f64]) -> f64 {
+    a.iter().map(|x| x.abs()).sum()
+}
+
+/// `sum |a_i|` unrolled 4-way. Re-associates.
+pub fn sum_abs_unrolled(a: &[f64]) -> f64 {
+    let len = a.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i + 4 <= len {
+        a0 += a[i].abs();
+        a1 += a[i + 1].abs();
+        a2 += a[i + 2].abs();
+        a3 += a[i + 3].abs();
+        i += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    while i < len {
+        acc += a[i].abs();
+        i += 1;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// Tier-dispatched entry points
+// ---------------------------------------------------------------------
+
+/// AVX2/AVX-512 gathers index with *signed* 32-bit offsets; arrays past
+/// `i32::MAX` elements fall back to the unrolled kernels (no dataset in
+/// this crate's scale comes near 2^31 samples).
+#[cfg(target_arch = "x86_64")]
+const MAX_GATHER_LEN: usize = i32::MAX as usize;
+
+/// Gather-based column dot at the given tier: `sum_i vals[i] *
+/// d[rows[i]]`. The tier is clamped to the probed hardware capability,
+/// so a stale or hostile tier value can never select an unsupported
+/// instruction set.
+///
+/// # Safety
+///
+/// Every `rows[i]` must be `< d.len()` (the CSC row-bound invariant;
+/// validated by `CscMatrix::from_parts`). `rows` and `vals` must be the
+/// same length.
+#[inline]
+pub unsafe fn dot_gather(tier: KernelTier, rows: &[u32], vals: &[f64], d: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    match tier.min(hw_tier()) {
+        KernelTier::Avx512 if d.len() <= MAX_GATHER_LEN => x86::dot_avx512(rows, vals, d),
+        KernelTier::Avx2 if d.len() <= MAX_GATHER_LEN => x86::dot_avx2(rows, vals, d),
+        _ => dot_unrolled(rows, vals, d),
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = tier;
+        dot_unrolled(rows, vals, d)
+    }
+}
+
+/// Scatter-based column axpy at the given tier, through a raw base
+/// pointer: `y[rows[i]] += alpha * vals[i]`. Bit-identical to the
+/// scalar scatter at every tier (elementwise multiply-then-add; the
+/// AVX-512 arm's gather/scatter lanes are unique because CSC rows are
+/// strictly sorted). The tier is clamped to the probed hardware
+/// capability.
+///
+/// # Safety
+///
+/// `y` must point to a live `f64` array indexable by every entry of
+/// `rows`; `rows` must be strictly increasing (the CSC
+/// sorted-and-unique invariant — required for the AVX-512
+/// gather-modify-scatter step to be collision-free); and no other
+/// thread may access the touched elements during the call. The caller
+/// must also ensure `y`'s length fits in `i32` when a SIMD tier is
+/// requested (`CscMatrix` guards on `n_rows`).
+#[inline]
+pub unsafe fn axpy_scatter_ptr(
+    tier: KernelTier,
+    rows: &[u32],
+    vals: &[f64],
+    alpha: f64,
+    y: *mut f64,
+) {
+    #[cfg(target_arch = "x86_64")]
+    match tier.min(hw_tier()) {
+        KernelTier::Avx512 => x86::axpy_avx512(rows, vals, alpha, y),
+        KernelTier::Avx2 => x86::axpy_avx2(rows, vals, alpha, y),
+        KernelTier::Scalar => axpy_unrolled_ptr(rows, vals, alpha, y),
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = tier;
+        axpy_unrolled_ptr(rows, vals, alpha, y)
+    }
+}
+
+/// Dense dot at the given tier — the dloss/objective reduction kernel.
+/// Safe: contiguous loads over the common prefix of `a` and `b`, tier
+/// clamped to hardware capability. Re-associates at every fast tier.
+#[inline]
+pub fn dot_dense(tier: KernelTier, a: &[f64], b: &[f64]) -> f64 {
+    let len = a.len().min(b.len());
+    let (a, b) = (&a[..len], &b[..len]);
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: tier is clamped to the probed capability of this host
+    unsafe {
+        match tier.min(hw_tier()) {
+            KernelTier::Avx512 => x86::dot_dense_avx512(a, b),
+            KernelTier::Avx2 => x86::dot_dense_avx2(a, b),
+            KernelTier::Scalar => dot_dense_unrolled(a, b),
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = tier;
+        dot_dense_unrolled(a, b)
+    }
+}
+
+/// Dense `sum |a_i|` at the given tier — the l1-term reduction kernel.
+/// Safe; re-associates at every fast tier.
+#[inline]
+pub fn sum_abs(tier: KernelTier, a: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: tier is clamped to the probed capability of this host
+    unsafe {
+        match tier.min(hw_tier()) {
+            KernelTier::Avx512 => x86::sum_abs_avx512(a),
+            KernelTier::Avx2 => x86::sum_abs_avx2(a),
+            KernelTier::Scalar => sum_abs_unrolled(a),
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = tier;
+        sum_abs_unrolled(a)
+    }
+}
+
+// ---------------------------------------------------------------------
+// BlockedScatter: the cache-blocked buffered-Update accumulator slab
+// ---------------------------------------------------------------------
+
+/// Stride-padded per-thread accumulator slab for the buffered Update
+/// discipline — `UpdatePath::Blocked`.
+///
+/// The classic buffered path allocates one dense accumulator per thread
+/// as separate vectors and reduces them element-by-element with a
+/// branchy per-buffer fold. This variant packs all `threads` strips
+/// into **one** slab, each strip [`padded_stride`]-spaced: strip starts
+/// land on 128-byte boundaries (the slab's element 0 is line-aligned
+/// and the stride is a whole number of lines) and a full guard line
+/// separates consecutive strips, so two threads scattering near their
+/// strip edges never false-share a cache line — the parlaylib-lasso
+/// stride-padding trick.
+///
+/// [`drain_range`](Self::drain_range) then folds in 128-byte-aligned
+/// blocks: for each 16-element block it accumulates every strip into a
+/// stack-local block buffer, zeroes the strips, and commits the block
+/// to `z` — one sequential pass per strip per block instead of a
+/// per-element strided walk, with arithmetic identical to the classic
+/// per-element fold (same strip order, same skip-zeros semantics).
+pub struct BlockedScatter {
+    slab: SyncF64Vec,
+    stride: usize,
+    threads: usize,
+    n: usize,
+}
+
+impl BlockedScatter {
+    /// Bytes a slab for `threads` accumulators over `n` elements would
+    /// occupy — the same budget accounting the classic buffered path
+    /// applies against `EngineConfig::buffer_budget_mb`.
+    pub fn bytes(n: usize, threads: usize) -> usize {
+        padded_stride(n) * threads * std::mem::size_of::<f64>()
+    }
+
+    /// Zeroed slab of `threads` stride-padded strips over `n` elements.
+    pub fn new(n: usize, threads: usize) -> Self {
+        let stride = padded_stride(n);
+        Self {
+            slab: SyncF64Vec::zeros(stride * threads.max(1)),
+            stride,
+            threads: threads.max(1),
+            n,
+        }
+    }
+
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Plain accumulate `v` into thread `t`'s strip at element `i`.
+    /// Sound under the engine's phase protocol: thread `t` is the
+    /// strip's unique accessor during the scatter phase.
+    #[inline(always)]
+    pub fn add(&self, t: usize, i: usize, v: f64) {
+        debug_assert!(t < self.threads && i < self.n);
+        self.slab.add(t * self.stride + i, v);
+    }
+
+    /// Fold all strips over `range` into `z` and zero them, in
+    /// 128-byte-aligned blocks. Callers partition `0..n` with
+    /// [`crate::util::par::aligned_chunk`], so `range.start` is
+    /// line-aligned and concurrent drainers never share a block.
+    pub fn drain_range(&self, z: &SyncF64Vec, range: std::ops::Range<usize>) {
+        debug_assert!(range.end <= self.n);
+        debug_assert!(range.start % F64S_PER_LINE == 0 || range.start >= range.end);
+        let mut block = [0.0f64; F64S_PER_LINE];
+        let mut lo = range.start;
+        while lo < range.end {
+            let hi = (lo + F64S_PER_LINE).min(range.end);
+            let w = hi - lo;
+            block[..w].fill(0.0);
+            let mut any = false;
+            for t in 0..self.threads {
+                let base = t * self.stride + lo;
+                for (o, acc) in block[..w].iter_mut().enumerate() {
+                    let v = self.slab.get(base + o);
+                    if v != 0.0 {
+                        *acc += v;
+                        self.slab.set(base + o, 0.0);
+                        any = true;
+                    }
+                }
+            }
+            if any {
+                for (o, &acc) in block[..w].iter().enumerate() {
+                    if acc != 0.0 {
+                        z.add(lo + o, acc);
+                    }
+                }
+            }
+            lo = hi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ragged_column(rng: &mut crate::util::Pcg64, n: usize, len: usize) -> (Vec<u32>, Vec<f64>) {
+        let mut rows: Vec<u32> = rng
+            .sample_distinct(n, len.min(n))
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        rows.sort_unstable();
+        let vals: Vec<f64> = rows.iter().map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        (rows, vals)
+    }
+
+    #[test]
+    fn choice_names_roundtrip() {
+        for name in ["auto", "scalar", "avx2", "avx512"] {
+            assert_eq!(KernelChoice::by_name(name).unwrap().name(), name);
+        }
+        assert!(KernelChoice::by_name("sse9").is_err());
+    }
+
+    #[test]
+    fn tier_order_clamps() {
+        assert!(KernelTier::Scalar < KernelTier::Avx2);
+        assert!(KernelTier::Avx2 < KernelTier::Avx512);
+        // an explicit scalar request never widens
+        assert_eq!(dispatch(KernelChoice::Scalar), KernelTier::Scalar);
+        // whatever the host is, a request clamps to at most itself
+        assert!(dispatch(KernelChoice::Avx2) <= KernelTier::Avx2);
+        assert!(dispatch(KernelChoice::Auto) <= KernelTier::Avx512);
+    }
+
+    #[test]
+    fn mode_resolution_and_names() {
+        assert_eq!(resolve(false, KernelChoice::Auto), KernelMode::Reference);
+        assert!(!KernelMode::Reference.is_fast());
+        assert_eq!(KernelMode::Reference.name(), "reference");
+        let fast = resolve(true, KernelChoice::Scalar);
+        assert_eq!(fast, KernelMode::Fast(KernelTier::Scalar));
+        assert!(fast.is_fast());
+        assert_eq!(fast.name(), "scalar");
+        assert_eq!(KernelMode::Fast(KernelTier::Avx512).name(), "avx512");
+    }
+
+    #[test]
+    fn gather_tiers_agree_with_scalar() {
+        let mut rng = crate::util::Pcg64::seeded(11);
+        let n = 400usize;
+        let d: Vec<f64> = (0..n).map(|i| ((i * 7919) % 83) as f64 - 41.0).collect();
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 15, 16, 17, 64, 65, 200] {
+            let (rows, vals) = ragged_column(&mut rng, n, len);
+            let scalar: f64 = rows
+                .iter()
+                .zip(&vals)
+                .map(|(&i, &v)| v * d[i as usize])
+                .sum();
+            for tier in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+                // SAFETY: rows sampled < n = d.len()
+                let got = unsafe { dot_gather(tier, &rows, &vals, &d) };
+                let tol = 1e-12 * scalar.abs().max(1.0);
+                assert!(
+                    (scalar - got).abs() <= tol,
+                    "{tier:?} len={len}: {scalar} vs {got}"
+                );
+            }
+            // the unrolled arm is exactly dot_unrolled
+            let via_tier = unsafe { dot_gather(KernelTier::Scalar, &rows, &vals, &d) };
+            assert_eq!(via_tier.to_bits(), dot_unrolled(&rows, &vals, &d).to_bits());
+        }
+    }
+
+    #[test]
+    fn axpy_tiers_are_bit_identical() {
+        let mut rng = crate::util::Pcg64::seeded(12);
+        let n = 300usize;
+        let base: Vec<f64> = (0..n).map(|i| (i as f64 * 0.73).sin()).collect();
+        for len in [0usize, 1, 4, 7, 8, 9, 16, 31, 64, 150] {
+            let (rows, vals) = ragged_column(&mut rng, n, len);
+            let mut want = base.clone();
+            for (&i, &v) in rows.iter().zip(&vals) {
+                want[i as usize] += 0.37 * v;
+            }
+            for tier in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+                let mut y = base.clone();
+                // SAFETY: rows < n, strictly sorted, single thread
+                unsafe { axpy_scatter_ptr(tier, &rows, &vals, 0.37, y.as_mut_ptr()) };
+                assert_eq!(y, want, "{tier:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_reductions_agree() {
+        let mut rng = crate::util::Pcg64::seeded(13);
+        for len in [0usize, 1, 3, 4, 7, 8, 15, 16, 17, 100, 1000] {
+            let a: Vec<f64> = (0..len).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+            let dot_ref = dot_dense_scalar(&a, &b);
+            let abs_ref = sum_abs_scalar(&a);
+            for tier in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+                let dt = dot_dense(tier, &a, &b);
+                let st = sum_abs(tier, &a);
+                assert!((dot_ref - dt).abs() <= 1e-12 * dot_ref.abs().max(1.0), "{tier:?} len={len}");
+                assert!((abs_ref - st).abs() <= 1e-12 * abs_ref.max(1.0), "{tier:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_scatter_matches_per_element_fold() {
+        let mut rng = crate::util::Pcg64::seeded(14);
+        for n in [1usize, 15, 16, 17, 100, 333] {
+            for threads in [1usize, 2, 4] {
+                let blocked = BlockedScatter::new(n, threads);
+                let mut want = vec![0.0f64; n];
+                for t in 0..threads {
+                    for _ in 0..(n * 2) {
+                        let i = rng.below(n);
+                        let v = rng.range_f64(-1.0, 1.0);
+                        blocked.add(t, i, v);
+                        want[i] += v;
+                    }
+                }
+                let z = SyncF64Vec::zeros(n);
+                // drain in two chunks like the engine's workers do
+                let mid = crate::util::par::aligned_chunk(n, 0, 2).end;
+                blocked.drain_range(&z, 0..mid);
+                blocked.drain_range(&z, mid..n);
+                for i in 0..n {
+                    assert!(
+                        (z.get(i) - want[i]).abs() <= 1e-12 * want[i].abs().max(1.0),
+                        "n={n} t={threads} i={i}"
+                    );
+                }
+                // strips are zeroed: a second drain is a no-op
+                blocked.drain_range(&z, 0..n);
+                for i in 0..n {
+                    assert!((z.get(i) - want[i]).abs() <= 1e-12 * want[i].abs().max(1.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_scatter_budget_accounting() {
+        // stride padding costs at most two extra lines per thread
+        let b = BlockedScatter::bytes(1000, 4);
+        assert!(b >= 1000 * 4 * 8);
+        assert!(b <= (1000 + 32) * 4 * 8);
+        assert_eq!(BlockedScatter::new(0, 2).threads(), 2);
+    }
+}

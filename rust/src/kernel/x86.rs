@@ -1,0 +1,255 @@
+//! AVX2 / AVX-512F arms of the kernel layer (x86-64 only).
+//!
+//! Every function here carries a `#[target_feature]` attribute and is
+//! only reachable through the tier-dispatched entry points in the
+//! parent module, which clamp the requested tier to what
+//! `is_x86_feature_detected!` actually probed — these bodies never run
+//! on silicon that lacks their instructions.
+//!
+//! Arithmetic contract (see the parent module docs): the **dot** and
+//! dense-reduction arms use FMA and multi-lane accumulators, so they
+//! re-associate the sum (1e-12 engine discipline). The **axpy** arms
+//! deliberately avoid FMA — elementwise `mul` then `add`, each element
+//! touched exactly once — so they are bit-identical to the scalar
+//! scatter at every tier.
+
+#![allow(clippy::missing_safety_doc)] // SAFETY contracts live on the pub dispatchers
+
+use core::arch::x86_64::*;
+
+use super::{prefetch_read, PREFETCH_DIST};
+
+/// Horizontal sum of a 4-lane double register.
+#[inline(always)]
+unsafe fn hsum256(v: __m256d) -> f64 {
+    let lo = _mm256_castpd256_pd128(v);
+    let hi = _mm256_extractf128_pd::<1>(v);
+    let s = _mm_add_pd(lo, hi);
+    _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+}
+
+/// Gather-based column dot, 8 elements per step (2 × 4-lane gathers
+/// feeding 2 FMA accumulator chains), 4-lane cleanup, scalar tail.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn dot_avx2(rows: &[u32], vals: &[f64], d: &[f64]) -> f64 {
+    let len = rows.len();
+    let dp = d.as_ptr();
+    let rp = rows.as_ptr();
+    let vp = vals.as_ptr();
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut i = 0usize;
+    while i + 8 <= len {
+        if i + PREFETCH_DIST < len {
+            prefetch_read(dp.add(*rp.add(i + PREFETCH_DIST) as usize));
+        }
+        let idx0 = _mm_loadu_si128(rp.add(i) as *const __m128i);
+        let idx1 = _mm_loadu_si128(rp.add(i + 4) as *const __m128i);
+        let g0 = _mm256_i32gather_pd::<8>(dp, idx0);
+        let g1 = _mm256_i32gather_pd::<8>(dp, idx1);
+        acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(vp.add(i)), g0, acc0);
+        acc1 = _mm256_fmadd_pd(_mm256_loadu_pd(vp.add(i + 4)), g1, acc1);
+        i += 8;
+    }
+    if i + 4 <= len {
+        let idx = _mm_loadu_si128(rp.add(i) as *const __m128i);
+        let g = _mm256_i32gather_pd::<8>(dp, idx);
+        acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(vp.add(i)), g, acc0);
+        i += 4;
+    }
+    let mut acc = hsum256(_mm256_add_pd(acc0, acc1));
+    while i < len {
+        acc += *vp.add(i) * *dp.add(*rp.add(i) as usize);
+        i += 1;
+    }
+    acc
+}
+
+/// Column axpy: vectorized `alpha * vals`, scalar read-modify-write
+/// stores (AVX2 has no scatter). `mul` not FMA — bit-identical to the
+/// scalar `y[r] += alpha * v`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy_avx2(rows: &[u32], vals: &[f64], alpha: f64, y: *mut f64) {
+    let len = rows.len();
+    let rp = rows.as_ptr();
+    let vp = vals.as_ptr();
+    let a = _mm256_set1_pd(alpha);
+    let mut p = [0.0f64; 4];
+    let mut i = 0usize;
+    while i + 4 <= len {
+        if i + PREFETCH_DIST < len {
+            prefetch_read(y.add(*rp.add(i + PREFETCH_DIST) as usize) as *const f64);
+        }
+        _mm256_storeu_pd(p.as_mut_ptr(), _mm256_mul_pd(a, _mm256_loadu_pd(vp.add(i))));
+        *y.add(*rp.add(i) as usize) += p[0];
+        *y.add(*rp.add(i + 1) as usize) += p[1];
+        *y.add(*rp.add(i + 2) as usize) += p[2];
+        *y.add(*rp.add(i + 3) as usize) += p[3];
+        i += 4;
+    }
+    while i < len {
+        *y.add(*rp.add(i) as usize) += alpha * *vp.add(i);
+        i += 1;
+    }
+}
+
+/// Gather-based column dot, 16 elements per step (2 × 8-lane gathers,
+/// 2 FMA chains), 8-lane cleanup, scalar tail. Note the AVX-512 gather
+/// signature: `(offsets, base as *const u8)` — reversed from AVX2.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn dot_avx512(rows: &[u32], vals: &[f64], d: &[f64]) -> f64 {
+    let len = rows.len();
+    let dp = d.as_ptr();
+    let rp = rows.as_ptr();
+    let vp = vals.as_ptr();
+    let mut acc0 = _mm512_setzero_pd();
+    let mut acc1 = _mm512_setzero_pd();
+    let mut i = 0usize;
+    while i + 16 <= len {
+        if i + PREFETCH_DIST < len {
+            prefetch_read(dp.add(*rp.add(i + PREFETCH_DIST) as usize));
+        }
+        let idx0 = _mm256_loadu_si256(rp.add(i) as *const __m256i);
+        let idx1 = _mm256_loadu_si256(rp.add(i + 8) as *const __m256i);
+        let g0 = _mm512_i32gather_pd::<8>(idx0, dp as *const u8);
+        let g1 = _mm512_i32gather_pd::<8>(idx1, dp as *const u8);
+        acc0 = _mm512_fmadd_pd(_mm512_loadu_pd(vp.add(i)), g0, acc0);
+        acc1 = _mm512_fmadd_pd(_mm512_loadu_pd(vp.add(i + 8)), g1, acc1);
+        i += 16;
+    }
+    if i + 8 <= len {
+        let idx = _mm256_loadu_si256(rp.add(i) as *const __m256i);
+        let g = _mm512_i32gather_pd::<8>(idx, dp as *const u8);
+        acc0 = _mm512_fmadd_pd(_mm512_loadu_pd(vp.add(i)), g, acc0);
+        i += 8;
+    }
+    let mut acc = _mm512_reduce_add_pd(_mm512_add_pd(acc0, acc1));
+    while i < len {
+        acc += *vp.add(i) * *dp.add(*rp.add(i) as usize);
+        i += 1;
+    }
+    acc
+}
+
+/// Column axpy with native gather-modify-scatter, 8 lanes per step.
+/// Collision-free because CSC rows are strictly increasing within a
+/// column (unique lanes — the dispatcher's safety contract). `add(g,
+/// mul(a, v))` matches the scalar `y[r] + alpha * v` rounding exactly:
+/// bit-identical, like every axpy tier.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn axpy_avx512(rows: &[u32], vals: &[f64], alpha: f64, y: *mut f64) {
+    let len = rows.len();
+    let rp = rows.as_ptr();
+    let vp = vals.as_ptr();
+    let a = _mm512_set1_pd(alpha);
+    let mut i = 0usize;
+    while i + 8 <= len {
+        if i + PREFETCH_DIST < len {
+            prefetch_read(y.add(*rp.add(i + PREFETCH_DIST) as usize) as *const f64);
+        }
+        let idx = _mm256_loadu_si256(rp.add(i) as *const __m256i);
+        let g = _mm512_i32gather_pd::<8>(idx, y as *const u8);
+        let r = _mm512_add_pd(g, _mm512_mul_pd(a, _mm512_loadu_pd(vp.add(i))));
+        _mm512_i32scatter_pd::<8>(y as *mut u8, idx, r);
+        i += 8;
+    }
+    while i < len {
+        *y.add(*rp.add(i) as usize) += alpha * *vp.add(i);
+        i += 1;
+    }
+}
+
+/// Dense dot, 8 per step, 2 FMA chains.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn dot_dense_avx2(a: &[f64], b: &[f64]) -> f64 {
+    let len = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut i = 0usize;
+    while i + 8 <= len {
+        acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(ap.add(i)), _mm256_loadu_pd(bp.add(i)), acc0);
+        acc1 = _mm256_fmadd_pd(
+            _mm256_loadu_pd(ap.add(i + 4)),
+            _mm256_loadu_pd(bp.add(i + 4)),
+            acc1,
+        );
+        i += 8;
+    }
+    let mut acc = hsum256(_mm256_add_pd(acc0, acc1));
+    while i < len {
+        acc += *ap.add(i) * *bp.add(i);
+        i += 1;
+    }
+    acc
+}
+
+/// Dense dot, 16 per step, 2 FMA chains.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn dot_dense_avx512(a: &[f64], b: &[f64]) -> f64 {
+    let len = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm512_setzero_pd();
+    let mut acc1 = _mm512_setzero_pd();
+    let mut i = 0usize;
+    while i + 16 <= len {
+        acc0 = _mm512_fmadd_pd(_mm512_loadu_pd(ap.add(i)), _mm512_loadu_pd(bp.add(i)), acc0);
+        acc1 = _mm512_fmadd_pd(
+            _mm512_loadu_pd(ap.add(i + 8)),
+            _mm512_loadu_pd(bp.add(i + 8)),
+            acc1,
+        );
+        i += 16;
+    }
+    let mut acc = _mm512_reduce_add_pd(_mm512_add_pd(acc0, acc1));
+    while i < len {
+        acc += *ap.add(i) * *bp.add(i);
+        i += 1;
+    }
+    acc
+}
+
+/// Dense `sum |a_i|`: abs via andnot with the sign-bit mask.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sum_abs_avx2(a: &[f64]) -> f64 {
+    let len = a.len();
+    let ap = a.as_ptr();
+    let sign = _mm256_set1_pd(-0.0);
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut i = 0usize;
+    while i + 8 <= len {
+        acc0 = _mm256_add_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(ap.add(i))));
+        acc1 = _mm256_add_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(ap.add(i + 4))));
+        i += 8;
+    }
+    let mut acc = hsum256(_mm256_add_pd(acc0, acc1));
+    while i < len {
+        acc += (*ap.add(i)).abs();
+        i += 1;
+    }
+    acc
+}
+
+/// Dense `sum |a_i|` with the native AVX-512 abs.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn sum_abs_avx512(a: &[f64]) -> f64 {
+    let len = a.len();
+    let ap = a.as_ptr();
+    let mut acc0 = _mm512_setzero_pd();
+    let mut acc1 = _mm512_setzero_pd();
+    let mut i = 0usize;
+    while i + 16 <= len {
+        acc0 = _mm512_add_pd(acc0, _mm512_abs_pd(_mm512_loadu_pd(ap.add(i))));
+        acc1 = _mm512_add_pd(acc1, _mm512_abs_pd(_mm512_loadu_pd(ap.add(i + 8))));
+        i += 16;
+    }
+    let mut acc = _mm512_reduce_add_pd(_mm512_add_pd(acc0, acc1));
+    while i < len {
+        acc += (*ap.add(i)).abs();
+        i += 1;
+    }
+    acc
+}

@@ -59,6 +59,7 @@
 //!
 //! | layer | unit of parallelism | shared state | synchronization |
 //! |-------|---------------------|--------------|-----------------|
+//! | [`kernel`] (`SolverBuilder::kernel`, `--kernel`) | SIMD lanes inside one column dot/axpy (AVX2/AVX-512, runtime-dispatched, scalar fallback) | — (pure compute; per-thread [`kernel::BlockedScatter`] strips under `UpdatePath::Blocked`) | none — tier resolved once per solve, reported in `SolveInfo::kernel` |
 //! | [`screen`] (`SolverBuilder::screening(true)`) | — (shrinks the *work*, not the workers) | per-pool [`ActiveSet`](screen::ActiveSet) bitmask | rides the engine's barriers (one extra crossing per KKT sweep) |
 //! | [`coordinator::engine`] | worker threads in one pool | one `z`/`w` ([`SharedState`](coordinator::problem::SharedState)) | phase spin barriers |
 //! | [`shard`] (`SolverBuilder::shards(n)`) | one NUMA-pinnable engine pool per column shard | per-shard `z` *replica*, first-touched node-local | reconcile barrier, every R rounds (adaptive), dirty-chunk delta fold |
@@ -195,6 +196,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod event;
+pub mod kernel;
 pub mod linalg;
 pub mod loss;
 pub mod net;

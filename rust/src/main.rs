@@ -76,13 +76,14 @@ USAGE: gencd <subcommand> [flags]
 SUBCOMMANDS
   train      --config FILE | --dataset NAME --algorithm ALG [--lam X]
              [--threads N] [--seconds S] [--line-search N] [--csv FILE]
-             [--update-path auto|atomic|buffered|conflict-free]
+             [--update-path auto|atomic|buffered|conflict-free|blocked]
              [--shards N] [--shard-strategy contiguous|round-robin|min-overlap]
              [--numa-pin] [--reconcile-every N] [--reconcile-max-rounds N]
              [--max-staleness-rounds N] [--barrier-timeout S]
              [--transport barrier|loopback|tcp] [--listen ADDR]
              [--peers ADDR,ADDR,...] [--wire-precision exact|f32]
              [--screening] [--kkt-every N] [--kkt-adaptive] [--fast-kernels]
+             [--kernel auto|scalar|avx2|avx512]  (SIMD tier ceiling)
              [--log-format text|json]     (json: line-JSON event stream)
              [--set table.key=value]...   (e.g. solver.buffer_budget_mb=512)
   path       --dataset NAME [--algorithm ALG] [--points N] [--min-ratio F]
@@ -206,6 +207,9 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     }
     if args.flag("fast-kernels") {
         cfg.solver.fast_kernels = true;
+    }
+    if let Some(v) = args.value("kernel") {
+        cfg.solver.kernel = v;
     }
     if let Some(v) = args.value("csv") {
         cfg.csv = Some(v);

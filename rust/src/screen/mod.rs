@@ -70,6 +70,7 @@ use std::sync::{Arc, RwLock};
 use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::propose;
 use crate::coordinator::select::Select;
+use crate::kernel::KernelMode;
 use crate::util::atomic::SyncCell;
 use crate::util::par::CachePadded;
 
@@ -317,16 +318,18 @@ impl ActiveSet {
 /// below `thresh`. The gradient dot (`dot_col` over the cached dloss)
 /// and the violation test run fused in one pass per column, and the
 /// dot is skipped entirely for coordinates with `w_j != 0` (they stay
-/// active unconditionally). Caller must have refreshed `state.dloss` at
-/// the current iterate; the engine forces the dloss-refresh phase on
-/// sweep iterations.
+/// active unconditionally). The dot runs at the solve's [`KernelMode`]
+/// — under a dispatched SIMD tier the sweep inner product is the
+/// hardware-gather kernel ([`crate::kernel`]). Caller must have
+/// refreshed `state.dloss` at the current iterate; the engine forces
+/// the dloss-refresh phase on sweep iterations.
 pub fn sweep_range(
     problem: &Problem,
     state: &SharedState,
     active: &ActiveSet,
     thresh: f64,
     words: Range<usize>,
-    fast_kernels: bool,
+    kmode: KernelMode,
 ) -> SweepStats {
     let lam = problem.lam;
     let k = active.k();
@@ -343,11 +346,7 @@ pub fn sweep_range(
                 new |= 1 << b;
                 continue;
             }
-            let g = if fast_kernels {
-                propose::gradient_from_dloss_fast(problem, state, j)
-            } else {
-                propose::gradient_from_dloss(problem, state, j)
-            };
+            let g = propose::gradient_from_dloss_mode(problem, state, j, kmode);
             if lam - g.abs() < thresh {
                 new |= 1 << b;
                 if violates_at_zero(g, lam) {
@@ -585,7 +584,14 @@ mod tests {
         for j in 0..p.n_features() {
             active.deactivate(j);
         }
-        let stats = sweep_range(&p, &state, &active, 1e-6, 0..active.n_words(), false);
+        let stats = sweep_range(
+            &p,
+            &state,
+            &active,
+            1e-6,
+            0..active.n_words(),
+            KernelMode::Reference,
+        );
         assert!(
             stats.reactivated >= 2,
             "the planted support must be reactivated, got {}",
@@ -600,7 +606,14 @@ mod tests {
         // a second sweep re-measures the same violators, but none are
         // reactivations any more (they are already active) — the gate
         // counts `violators`, not `reactivated`, for exactly this case
-        let again = sweep_range(&p, &state, &active, 1e-6, 0..active.n_words(), false);
+        let again = sweep_range(
+            &p,
+            &state,
+            &active,
+            1e-6,
+            0..active.n_words(),
+            KernelMode::Reference,
+        );
         assert_eq!(again.reactivated, 0);
         assert!(again.violators >= 2, "active violators still counted");
     }
@@ -624,7 +637,7 @@ mod tests {
             &active,
             p.lam, // deactivate iff slack lam - |g| >= lam, i.e. g == 0
             0..active.n_words(),
-            false,
+            KernelMode::Reference,
         );
         assert!(active.is_active(0) && active.is_active(1), "support stays");
         assert!(
@@ -635,10 +648,24 @@ mod tests {
         );
         // scalar and unrolled sweeps agree on the resulting set
         let scalar: Vec<bool> = (0..p.n_features()).map(|j| active.is_active(j)).collect();
-        let active2 = ActiveSet::new_full(p.n_features(), 1);
-        sweep_range(&p, &state, &active2, p.lam, 0..active2.n_words(), true);
-        let fast: Vec<bool> = (0..p.n_features()).map(|j| active2.is_active(j)).collect();
-        assert_eq!(scalar, fast, "fast_kernels sweep must match scalar");
+        for tier in [
+            crate::kernel::KernelTier::Scalar,
+            crate::kernel::KernelTier::Avx2,
+            crate::kernel::KernelTier::Avx512,
+        ] {
+            let active2 = ActiveSet::new_full(p.n_features(), 1);
+            sweep_range(
+                &p,
+                &state,
+                &active2,
+                p.lam,
+                0..active2.n_words(),
+                KernelMode::Fast(tier),
+            );
+            let fast: Vec<bool> =
+                (0..p.n_features()).map(|j| active2.is_active(j)).collect();
+            assert_eq!(scalar, fast, "{tier:?} sweep must match scalar");
+        }
     }
 
     #[test]

@@ -574,6 +574,10 @@ pub struct ShardedConfig {
     /// Unrolled gather kernels in every pool (see
     /// `EngineConfig::fast_kernels`).
     pub fast_kernels: bool,
+    /// SIMD tier ceiling for the fast kernels in every pool (see
+    /// `EngineConfig::kernel`; all pools run the same process, so they
+    /// resolve the same tier).
+    pub kernel: crate::kernel::KernelChoice,
     /// Pin each shard pool to a NUMA node and first-touch its replica
     /// there (module docs §NUMA). Graceful no-op on single-node or
     /// non-Linux hosts; default off.
@@ -623,6 +627,7 @@ impl Default for ShardedConfig {
             kkt_every: ecfg.kkt_every,
             kkt_adaptive: ecfg.kkt_adaptive,
             fast_kernels: ecfg.fast_kernels,
+            kernel: ecfg.kernel,
             numa_pin: false,
             reconcile_every: 1,
             reconcile_max_rounds: 1,
@@ -1455,6 +1460,7 @@ pub fn solve_sharded_linked(
         kkt_every: cfg.kkt_every,
         kkt_adaptive: cfg.kkt_adaptive,
         fast_kernels: cfg.fast_kernels,
+        kernel: cfg.kernel,
     };
 
     let mut outs: Vec<SolveOutput> = Vec::with_capacity(s_count);

@@ -472,6 +472,7 @@ pub fn run_scenario_logged(sc: &Scenario) -> anyhow::Result<(ScenarioRun, Vec<St
         k: global.n_features() as u64,
         threads: specs.iter().map(|s| s.threads.max(1) as u32).sum(),
         shards: active as u32,
+        kernel: crate::kernel::resolve(cfg.fast_kernels, cfg.kernel).name(),
     };
     let mut sub = Subscribed::new(log.clone(), &info);
     let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, Some(&mut sub), &link);

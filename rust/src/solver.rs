@@ -80,6 +80,7 @@ use crate::coordinator::observer::Observer;
 use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::select::Select;
 use crate::event::{EventSink, SolveInfo, Subscribed, Subscriber};
+use crate::kernel::{self, KernelChoice};
 use crate::loss::{Logistic, Loss};
 use crate::net::{LoopbackLink, TcpLink, Transport};
 use crate::shard::engine::{
@@ -242,6 +243,7 @@ impl Solver {
                 k: self.problem.n_features() as u64,
                 threads: self.cfg.threads as u32,
                 shards: 0,
+                kernel: kernel::resolve(self.cfg.fast_kernels, self.cfg.kernel).name(),
             })
         });
         let hooks = EngineHooks {
@@ -270,6 +272,7 @@ impl Solver {
             kkt_every: self.cfg.kkt_every,
             kkt_adaptive: self.cfg.kkt_adaptive,
             fast_kernels: self.cfg.fast_kernels,
+            kernel: self.cfg.kernel,
             numa_pin: setup.numa_pin,
             reconcile_every: setup.reconcile_every,
             reconcile_max_rounds: setup.reconcile_max_rounds,
@@ -285,6 +288,7 @@ impl Solver {
                 k: self.problem.n_features() as u64,
                 threads: setup.specs.iter().map(|s| s.threads.max(1) as u32).sum(),
                 shards: setup.specs.len() as u32,
+                kernel: kernel::resolve(self.cfg.fast_kernels, self.cfg.kernel).name(),
             })
         });
         match setup.transport {
@@ -410,6 +414,7 @@ pub struct SolverBuilder {
     kkt_every: usize,
     kkt_adaptive: bool,
     fast_kernels: bool,
+    kernel: KernelChoice,
 }
 
 impl Default for SolverBuilder {
@@ -452,6 +457,7 @@ impl Default for SolverBuilder {
             kkt_every: ecfg.kkt_every,
             kkt_adaptive: ecfg.kkt_adaptive,
             fast_kernels: ecfg.fast_kernels,
+            kernel: ecfg.kernel,
         }
     }
 }
@@ -760,6 +766,17 @@ impl SolverBuilder {
         self
     }
 
+    /// SIMD tier ceiling for the fast kernels ([`crate::kernel`]):
+    /// `Auto` (the default) probes the CPU once and takes the best
+    /// supported tier, a named tier clamps to what the host actually
+    /// has. Inert unless [`fast_kernels`](Self::fast_kernels) is on.
+    /// The resolved tier is reported in
+    /// [`MetricsSnapshot::kernel_tier`](crate::coordinator::metrics::MetricsSnapshot::kernel_tier).
+    pub fn kernel(mut self, choice: KernelChoice) -> Self {
+        self.kernel = choice;
+        self
+    }
+
     /// Column-normalize the matrix at build time (the paper's setting;
     /// default `false` — the matrix is used exactly as given).
     pub fn normalize(mut self, normalize: bool) -> Self {
@@ -1036,6 +1053,7 @@ impl SolverBuilder {
             kkt_every: self.kkt_every,
             kkt_adaptive: self.kkt_adaptive,
             fast_kernels: self.fast_kernels,
+            kernel: self.kernel,
             ..Default::default()
         };
 
@@ -1436,6 +1454,7 @@ mod tests {
             .kkt_every(7)
             .kkt_adaptive(true)
             .fast_kernels(true)
+            .kernel(KernelChoice::Avx2)
             .build()
             .unwrap();
         let cfg = solver.engine_config();
@@ -1443,6 +1462,7 @@ mod tests {
         assert_eq!(cfg.kkt_every, 7);
         assert!(cfg.kkt_adaptive);
         assert!(cfg.fast_kernels);
+        assert_eq!(cfg.kernel, KernelChoice::Avx2);
     }
 
     #[test]

@@ -16,29 +16,7 @@
 
 use std::sync::Arc;
 
-/// How many gather targets ahead the unrolled kernels prefetch — deep
-/// enough to cover a memory round-trip at ~1 gather per cycle group,
-/// shallow enough that the prefetched line is still resident when the
-/// loop arrives.
-pub(crate) const PREFETCH_DIST: usize = 16;
-
-/// Best-effort read-prefetch hint for the unrolled gather/scatter
-/// kernels; compiles to `prefetcht0` on x86-64 and to nothing elsewhere.
-/// Crate-visible so the on-the-fly gradient kernel
-/// ([`crate::coordinator::propose::gradient_from_z_fast`]) shares it.
-#[inline(always)]
-pub(crate) fn prefetch_read(p: *const f64) {
-    #[cfg(target_arch = "x86_64")]
-    // SAFETY: prefetch is a hint — it never faults and has no
-    // observable effect on memory, for any address
-    unsafe {
-        std::arch::x86_64::_mm_prefetch::<{ std::arch::x86_64::_MM_HINT_T0 }>(p as *const i8)
-    }
-    #[cfg(not(target_arch = "x86_64"))]
-    {
-        let _ = p;
-    }
-}
+use crate::kernel::{self, KernelMode, KernelTier};
 
 /// CSC sparse matrix. Columns are the *features* of the learning problem.
 #[derive(Clone, Debug)]
@@ -255,32 +233,17 @@ impl CscMatrix {
         }
     }
 
-    /// [`axpy_col`](Self::axpy_col) unrolled 4-way with a
-    /// software-prefetch hint. The scattered `y[rows[i]] +=` RMWs hit
-    /// distinct elements (rows are strictly sorted within a column), so
-    /// the four unrolled updates are independent; prefetching pulls the
-    /// target lines before the RMW stalls on them. Bit-identical to the
-    /// scalar kernel (each element is touched once, no re-association)
-    /// but gated behind `EngineConfig::fast_kernels` all the same, so
-    /// the default engine binary path is byte-for-byte the seed's.
+    /// [`axpy_col`](Self::axpy_col) through the unrolled scalar kernel
+    /// ([`kernel::axpy_unrolled`]): 4-way unroll + software prefetch.
+    /// The scattered `y[rows[i]] +=` RMWs hit distinct elements (rows
+    /// are strictly sorted within a column), so the four unrolled
+    /// updates are independent. Bit-identical to the scalar kernel
+    /// (each element is touched once, no re-association) but gated
+    /// behind `EngineConfig::fast_kernels` all the same, so the default
+    /// engine binary path is byte-for-byte the seed's.
     pub fn axpy_col_fast(&self, j: usize, alpha: f64, y: &mut [f64]) {
         let (rows, vals) = self.col(j);
-        let len = rows.len();
-        let mut i = 0;
-        while i + 4 <= len {
-            if i + PREFETCH_DIST < len {
-                prefetch_read(&y[rows[i + PREFETCH_DIST] as usize]);
-            }
-            y[rows[i] as usize] += alpha * vals[i];
-            y[rows[i + 1] as usize] += alpha * vals[i + 1];
-            y[rows[i + 2] as usize] += alpha * vals[i + 2];
-            y[rows[i + 3] as usize] += alpha * vals[i + 3];
-            i += 4;
-        }
-        while i < len {
-            y[rows[i] as usize] += alpha * vals[i];
-            i += 1;
-        }
+        kernel::axpy_unrolled(rows, vals, alpha, y);
     }
 
     /// [`axpy_col_fast`](Self::axpy_col_fast) writing through a raw
@@ -300,21 +263,42 @@ impl CscMatrix {
     /// overlapping `&mut [f64]` slices would not be.
     pub unsafe fn axpy_col_fast_ptr(&self, j: usize, alpha: f64, y: *mut f64) {
         let (rows, vals) = self.col(j);
-        let len = rows.len();
-        let mut i = 0;
-        while i + 4 <= len {
-            if i + PREFETCH_DIST < len {
-                prefetch_read(y.add(rows[i + PREFETCH_DIST] as usize) as *const f64);
+        kernel::axpy_unrolled_ptr(rows, vals, alpha, y);
+    }
+
+    /// [`axpy_col_fast_ptr`](Self::axpy_col_fast_ptr) at an explicit
+    /// [`KernelTier`] — the engine's conflict-free scatter under a
+    /// dispatched SIMD tier. Every tier's axpy is bit-identical to the
+    /// scalar scatter (see [`crate::kernel`]); SIMD gathers index with
+    /// `i32`, so absurdly tall matrices clamp back to the unrolled arm.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`Self::axpy_col_fast_ptr`].
+    pub unsafe fn axpy_col_ptr_tier(&self, j: usize, alpha: f64, y: *mut f64, tier: KernelTier) {
+        let (rows, vals) = self.col(j);
+        let tier = if self.n_rows > i32::MAX as usize {
+            KernelTier::Scalar
+        } else {
+            tier
+        };
+        // SAFETY: rows are strictly sorted and unique within a column
+        // (from_parts invariant) and the caller guarantees y covers
+        // them exclusively
+        kernel::axpy_scatter_ptr(tier, rows, vals, alpha, y);
+    }
+
+    /// [`axpy_col`](Self::axpy_col) under a per-solve [`KernelMode`]:
+    /// the plain scalar reference or the dispatched fast tier. All arms
+    /// are bit-identical.
+    pub fn axpy_col_mode(&self, j: usize, alpha: f64, y: &mut [f64], mode: KernelMode) {
+        match mode {
+            KernelMode::Reference => self.axpy_col(j, alpha, y),
+            KernelMode::Fast(tier) => {
+                assert!(y.len() >= self.n_rows, "axpy target shorter than n_rows");
+                // SAFETY: y is exclusively borrowed and covers all rows
+                unsafe { self.axpy_col_ptr_tier(j, alpha, y.as_mut_ptr(), tier) }
             }
-            *y.add(rows[i] as usize) += alpha * vals[i];
-            *y.add(rows[i + 1] as usize) += alpha * vals[i + 1];
-            *y.add(rows[i + 2] as usize) += alpha * vals[i + 2];
-            *y.add(rows[i + 3] as usize) += alpha * vals[i + 3];
-            i += 4;
-        }
-        while i < len {
-            *y.add(rows[i] as usize) += alpha * vals[i];
-            i += 1;
         }
     }
 
@@ -330,12 +314,13 @@ impl CscMatrix {
         acc
     }
 
-    /// [`dot_col`](Self::dot_col) unrolled 4-way with independent
-    /// accumulators and a software-prefetch hint [`PREFETCH_DIST`]
-    /// gathers ahead — the gather is latency-bound on the random
-    /// `d[rows[i]]` loads, so splitting the dependency chain and
-    /// prefetching the upcoming lines is worth ~2x on wide columns
-    /// (hotpath bench: `dot_col_unrolled_ns_per_nnz`).
+    /// [`dot_col`](Self::dot_col) through the unrolled scalar kernel
+    /// ([`kernel::dot_unrolled`]): 4 independent accumulators and a
+    /// software-prefetch hint [`kernel::PREFETCH_DIST`] gathers ahead —
+    /// the gather is latency-bound on the random `d[rows[i]]` loads, so
+    /// splitting the dependency chain and prefetching the upcoming
+    /// lines is worth ~2x on wide columns (hotpath bench:
+    /// `dot_col_unrolled_ns_per_nnz`).
     ///
     /// **Not bit-identical** to the scalar kernel: the 4 partial sums
     /// re-associate the floating-point reduction. The engine keeps the
@@ -344,25 +329,28 @@ impl CscMatrix {
     /// tests pin the scalar kernel.
     pub fn dot_col_fast(&self, j: usize, d: &[f64]) -> f64 {
         let (rows, vals) = self.col(j);
-        let len = rows.len();
-        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-        let mut i = 0;
-        while i + 4 <= len {
-            if i + PREFETCH_DIST < len {
-                prefetch_read(&d[rows[i + PREFETCH_DIST] as usize]);
-            }
-            a0 += vals[i] * d[rows[i] as usize];
-            a1 += vals[i + 1] * d[rows[i + 1] as usize];
-            a2 += vals[i + 2] * d[rows[i + 2] as usize];
-            a3 += vals[i + 3] * d[rows[i + 3] as usize];
-            i += 4;
+        kernel::dot_unrolled(rows, vals, d)
+    }
+
+    /// [`dot_col_fast`](Self::dot_col_fast) at an explicit
+    /// [`KernelTier`]: the hardware-gather SIMD arms where dispatched,
+    /// the unrolled kernel at `Scalar` (and as the automatic fallback
+    /// for matrices too tall for `i32` gather offsets). Re-associates
+    /// at every tier — 1e-12 discipline, like the unrolled kernel.
+    pub fn dot_col_tier(&self, j: usize, d: &[f64], tier: KernelTier) -> f64 {
+        assert!(d.len() >= self.n_rows, "dot operand shorter than n_rows");
+        let (rows, vals) = self.col(j);
+        // SAFETY: from_parts guarantees every row < n_rows <= d.len()
+        unsafe { kernel::dot_gather(tier, rows, vals, d) }
+    }
+
+    /// [`dot_col`](Self::dot_col) under a per-solve [`KernelMode`].
+    #[inline]
+    pub fn dot_col_mode(&self, j: usize, d: &[f64], mode: KernelMode) -> f64 {
+        match mode {
+            KernelMode::Reference => self.dot_col(j, d),
+            KernelMode::Fast(tier) => self.dot_col_tier(j, d, tier),
         }
-        let mut acc = (a0 + a1) + (a2 + a3);
-        while i < len {
-            acc += vals[i] * d[rows[i] as usize];
-            i += 1;
-        }
-        acc
     }
 
     /// Dense matvec `X w` (used by power iteration and tests).
@@ -526,6 +514,41 @@ mod tests {
             assert_eq!(
                 tiny.dot_col(j, &[1.0, 2.0, 3.0, 4.0]),
                 tiny.dot_col_fast(j, &[1.0, 2.0, 3.0, 4.0])
+            );
+        }
+    }
+
+    #[test]
+    fn tier_kernels_match_scalar() {
+        let n = 200usize;
+        let mut rng = crate::util::Pcg64::seeded(10);
+        let mut b = crate::sparse::CooBuilder::new(n, 8);
+        for j in 0..8 {
+            for i in 0..n {
+                if rng.next_f64() < 0.4 {
+                    b.push(i, j, rng.range_f64(-2.0, 2.0));
+                }
+            }
+        }
+        let m = b.build();
+        let d: Vec<f64> = (0..n).map(|i| ((i * 6007) % 97) as f64 - 48.0).collect();
+        for j in 0..8 {
+            let scalar = m.dot_col(j, &d);
+            let mut want = d.clone();
+            m.axpy_col(j, 0.37, &mut want);
+            for tier in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+                let got = m.dot_col_tier(j, &d, tier);
+                let tol = 1e-12 * scalar.abs().max(1.0);
+                assert!((scalar - got).abs() <= tol, "dot {tier:?} j={j}");
+                // every axpy tier is bit-identical to the scalar scatter
+                let mut y = d.clone();
+                m.axpy_col_mode(j, 0.37, &mut y, KernelMode::Fast(tier));
+                assert_eq!(y, want, "axpy {tier:?} j={j}");
+            }
+            // Reference mode is exactly the plain scalar path
+            assert_eq!(
+                m.dot_col_mode(j, &d, KernelMode::Reference).to_bits(),
+                scalar.to_bits()
             );
         }
     }

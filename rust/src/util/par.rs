@@ -360,6 +360,19 @@ pub fn aligned_chunk(len: usize, tid: usize, threads: usize) -> std::ops::Range<
     lo.min(len)..hi.min(len)
 }
 
+/// Per-strip stride (in `f64`s) for a slab holding `threads` dense
+/// accumulators of `n` elements each: `n` rounded up to a whole number
+/// of 128-byte lines, plus one full guard line. With the slab's element
+/// 0 line-aligned ([`crate::util::atomic::SyncF64Vec`]), every strip
+/// start is line-aligned and the guard line guarantees the last line
+/// one thread writes is never the first line its neighbor writes — the
+/// parlaylib-style stride padding [`crate::kernel::BlockedScatter`]
+/// uses to kill false sharing between per-thread accumulators.
+#[inline]
+pub fn padded_stride(n: usize) -> usize {
+    (n.div_ceil(F64S_PER_LINE) + 1) * F64S_PER_LINE
+}
+
 /// Elements covered by one dirty bit: one [`aligned_chunk`] alignment
 /// unit (a 128-byte line of `f64`s), so dirty-chunk boundaries coincide
 /// with the reconcile fold's chunk boundaries by construction and no
@@ -756,6 +769,17 @@ mod tests {
                 assert_eq!(prev_hi, len);
                 assert_eq!(covered, len);
             }
+        }
+    }
+
+    #[test]
+    fn padded_stride_is_line_aligned_with_guard() {
+        for n in [0usize, 1, 15, 16, 17, 100, 1000, 1024] {
+            let s = padded_stride(n);
+            assert_eq!(s % F64S_PER_LINE, 0, "n={n}");
+            // room for the data plus at least one full guard line
+            assert!(s >= n + F64S_PER_LINE, "n={n} stride={s}");
+            assert!(s < n + 2 * F64S_PER_LINE + 1, "n={n} stride={s}");
         }
     }
 }

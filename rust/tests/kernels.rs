@@ -1,0 +1,346 @@
+//! Differential tests for the runtime-dispatched SIMD kernel tiers
+//! (`gencd::kernel`): every dispatched arm against the plain scalar
+//! reference at the kernel level (100 seeded ragged column shapes), and
+//! the tiers against the reference engine across all eight presets at
+//! T = 1 and T = 4 — plus the screened, sharded and forced-scalar
+//! surfaces.
+//!
+//! The agreement bars mirror the module's bit-exactness discipline:
+//! **axpy** arms must match the scalar scatter *bit for bit* (each
+//! element touched once, multiply-then-add, no FMA contraction), while
+//! **dot**/reduction arms re-associate the sum (lanes, split
+//! accumulators), so they get 1e-12 at the kernel level and the
+//! established solve-level bounds (1e-9 objective / 1e-7 weights) at
+//! the engine level.
+//!
+//! One test mutates `GENCD_FORCE_SCALAR`; process environment is shared
+//! across the binary's test threads, so every test here serializes on a
+//! file-local lock instead of racing the dispatcher.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use gencd::coordinator::algorithms::Algorithm;
+use gencd::kernel::{
+    self, axpy_scatter_ptr, dot_dense, dot_gather, sum_abs, KernelChoice, KernelTier,
+    FORCE_SCALAR_ENV,
+};
+use gencd::loss::Squared;
+use gencd::sparse::{CooBuilder, CscMatrix};
+use gencd::util::Pcg64;
+use gencd::{Solver, SolverBuilder};
+
+/// Serializes every test in this binary: `force_scalar_env_pins_dispatch`
+/// flips `GENCD_FORCE_SCALAR`, which [`kernel::dispatch`] re-reads on
+/// every call, and the engine-level tests assert on the dispatched tier.
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+const TIERS: [KernelTier; 3] = [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512];
+
+/// One seeded ragged column: strictly increasing rows over `0..n`
+/// (the CSC invariant the AVX-512 scatter relies on), values and a
+/// dense operand drawn from the same stream.
+struct Shape {
+    rows: Vec<u32>,
+    vals: Vec<f64>,
+    d: Vec<f64>,
+    alpha: f64,
+}
+
+/// 100 shapes: every lane/unroll boundary (empty, sub-lane, 4/8/16 ±1,
+/// 64 ±1) over a few dense lengths, topped up with random ragged
+/// columns — the gather/scatter remainder loops see every phase.
+fn shapes() -> Vec<Shape> {
+    let mut rng = Pcg64::seeded(0xC0DE);
+    let mut out = Vec::new();
+    let boundary_lens = [
+        0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65,
+    ];
+    for &n in &[70usize, 128, 300] {
+        for &len in &boundary_lens {
+            out.push(make_shape(&mut rng, n, len.min(n)));
+        }
+    }
+    while out.len() < 100 {
+        let n = 1 + (rng.next_f64() * 600.0) as usize;
+        let len = (rng.next_f64() * n as f64) as usize;
+        out.push(make_shape(&mut rng, n, len));
+    }
+    out
+}
+
+fn make_shape(rng: &mut Pcg64, n: usize, len: usize) -> Shape {
+    let mut rows: Vec<u32> = rng
+        .sample_distinct(n, len)
+        .into_iter()
+        .map(|i| i as u32)
+        .collect();
+    rows.sort_unstable();
+    let vals: Vec<f64> = rows.iter().map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let d: Vec<f64> = (0..n).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+    let alpha = rng.range_f64(-1.5, 1.5);
+    Shape { rows, vals, d, alpha }
+}
+
+/// Every dispatched gather-dot and dense-reduction arm agrees with a
+/// plain scalar loop to 1e-12 relative on 100 ragged shapes. (The arms
+/// re-associate, so bitwise equality is *not* the contract here.)
+#[test]
+fn dispatched_dots_match_scalar_reference_on_ragged_shapes() {
+    let _g = env_lock();
+    for (si, s) in shapes().iter().enumerate() {
+        let reference: f64 = s
+            .rows
+            .iter()
+            .zip(&s.vals)
+            .map(|(&i, &v)| v * s.d[i as usize])
+            .sum();
+        let dense_ref: f64 = s.d.iter().map(|&x| x * x).sum();
+        let abs_ref: f64 = s.d.iter().map(|x| x.abs()).sum();
+        for tier in TIERS {
+            // SAFETY: rows index into d (sample_distinct draws from
+            // 0..d.len()) and rows/vals are the same length
+            let got = unsafe { dot_gather(tier, &s.rows, &s.vals, &s.d) };
+            let tol = 1e-12 * reference.abs().max(1.0);
+            assert!(
+                (got - reference).abs() <= tol,
+                "shape {si} ({} nnz) {tier:?}: dot {got} vs scalar {reference}",
+                s.rows.len()
+            );
+            let got = dot_dense(tier, &s.d, &s.d);
+            assert!(
+                (got - dense_ref).abs() <= 1e-12 * dense_ref.max(1.0),
+                "shape {si} {tier:?}: dot_dense {got} vs {dense_ref}"
+            );
+            let got = sum_abs(tier, &s.d);
+            assert!(
+                (got - abs_ref).abs() <= 1e-12 * abs_ref.max(1.0),
+                "shape {si} {tier:?}: sum_abs {got} vs {abs_ref}"
+            );
+        }
+    }
+}
+
+/// Every dispatched axpy-scatter arm is **bit-identical** to the plain
+/// scalar scatter on the same 100 shapes — the invariant that lets the
+/// engine swap tiers mid-catalogue without moving the Update math.
+#[test]
+fn dispatched_axpy_is_bit_identical_on_ragged_shapes() {
+    let _g = env_lock();
+    for (si, s) in shapes().iter().enumerate() {
+        let mut reference = s.d.clone();
+        for (&i, &v) in s.rows.iter().zip(&s.vals) {
+            reference[i as usize] += s.alpha * v;
+        }
+        for tier in TIERS {
+            let mut y = s.d.clone();
+            // SAFETY: y outlives the call, rows index into it and are
+            // strictly increasing (sorted distinct samples), and no
+            // other thread touches it
+            unsafe { axpy_scatter_ptr(tier, &s.rows, &s.vals, s.alpha, y.as_mut_ptr()) };
+            for (j, (a, b)) in reference.iter().zip(&y).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "shape {si} ({} nnz) {tier:?}: axpy differs at {j}: {a} vs {b}",
+                    s.rows.len()
+                );
+            }
+        }
+    }
+}
+
+/// Random sparse design with a planted 3-coordinate signal (the
+/// construction shared with `rust/tests/sharding.rs`).
+fn planted_xy(seed: u64, n: usize, k: usize) -> (CscMatrix, Vec<f64>) {
+    let mut rng = Pcg64::seeded(seed);
+    let mut b = CooBuilder::new(n, k);
+    for j in 0..k {
+        for i in 0..n {
+            if rng.next_f64() < 0.25 {
+                b.push(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    let mut x = b.build();
+    x.normalize_columns();
+    let wstar: Vec<f64> = (0..k).map(|j| if j < 3 { 1.5 } else { 0.0 }).collect();
+    let y = x.matvec(&wstar);
+    (x, y)
+}
+
+fn builder(x: &CscMatrix, y: &[f64], alg: Algorithm) -> SolverBuilder {
+    Solver::builder()
+        .matrix(x.clone())
+        .labels(y.to_vec())
+        .loss(Squared)
+        .lambda(1e-2)
+        .algorithm(alg)
+        .seed(17)
+        .max_seconds(120.0)
+        .log_every(200)
+}
+
+const CHOICES: [KernelChoice; 3] =
+    [KernelChoice::Scalar, KernelChoice::Avx2, KernelChoice::Avx512];
+
+/// Engine-level differential across the whole catalogue: every preset,
+/// at T = 1 and T = 4, solved with each requested tier, agrees with the
+/// plain-scalar reference engine to the solve-level bounds — and the
+/// metrics report the tier that actually ran (the requested one clamped
+/// to this host), never the requested name.
+#[test]
+fn all_presets_agree_across_kernel_tiers() {
+    let _g = env_lock();
+    let (x, y) = planted_xy(21, 50, 20);
+    for alg in Algorithm::ALL {
+        for threads in [1usize, 4] {
+            let reference = builder(&x, &y, alg)
+                .threads(threads)
+                .fast_kernels(false)
+                .max_iters(300)
+                .build()
+                .unwrap()
+                .solve();
+            assert_eq!(reference.metrics.kernel_tier, "reference", "{}", alg.name());
+            for choice in CHOICES {
+                let fast = builder(&x, &y, alg)
+                    .threads(threads)
+                    .fast_kernels(true)
+                    .kernel(choice)
+                    .max_iters(300)
+                    .build()
+                    .unwrap()
+                    .solve();
+                // the requested tier is a ceiling, never a floor
+                let ran = kernel::dispatch(choice);
+                let ceiling = match choice {
+                    KernelChoice::Scalar => KernelTier::Scalar,
+                    KernelChoice::Avx2 => KernelTier::Avx2,
+                    KernelChoice::Auto | KernelChoice::Avx512 => KernelTier::Avx512,
+                };
+                assert!(ran <= ceiling, "{choice:?} dispatched above its ceiling");
+                assert_eq!(
+                    fast.metrics.kernel_tier,
+                    ran.name(),
+                    "{} T={threads} {choice:?}",
+                    alg.name()
+                );
+                let gap = (reference.objective - fast.objective).abs();
+                assert!(
+                    gap <= 1e-9,
+                    "{} T={threads} {choice:?}: objective {} vs {} (gap {gap:.3e})",
+                    alg.name(),
+                    reference.objective,
+                    fast.objective
+                );
+                for (j, (a, b)) in reference.w.iter().zip(&fast.w).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-7,
+                        "{} T={threads} {choice:?}: w[{j}] {a} vs {b}",
+                        alg.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The fast tiers compose with the other execution modes: a screened
+/// solve and a 2-shard solve both track their scalar-reference twins,
+/// and the dispatched tier surfaces through the aggregated sharded
+/// metrics (first non-empty pool snapshot wins — all pools share one
+/// config).
+#[test]
+fn screened_and_sharded_solves_agree_and_report_tier() {
+    let _g = env_lock();
+    let (x, y) = planted_xy(22, 60, 24);
+    let auto_tier = kernel::dispatch(KernelChoice::Auto).name();
+
+    let run_screened = |fast: bool| {
+        builder(&x, &y, Algorithm::Scd)
+            .screening(true)
+            .fast_kernels(fast)
+            .max_iters(2_000)
+            .build()
+            .unwrap()
+            .solve()
+    };
+    let reference = run_screened(false);
+    let fast = run_screened(true);
+    assert_eq!(fast.metrics.kernel_tier, auto_tier);
+    let gap = (reference.objective - fast.objective).abs();
+    assert!(gap <= 1e-9, "screened: gap {gap:.3e}");
+
+    let run_sharded = |fast: bool| {
+        builder(&x, &y, Algorithm::Shotgun)
+            .shards(2)
+            .threads(2)
+            .fast_kernels(fast)
+            .max_iters(2_000)
+            .build()
+            .unwrap()
+            .solve()
+    };
+    let reference = run_sharded(false);
+    let fast = run_sharded(true);
+    assert_eq!(reference.metrics.shards, 2);
+    assert_eq!(reference.metrics.kernel_tier, "reference");
+    assert_eq!(fast.metrics.kernel_tier, auto_tier);
+    let gap = (reference.objective - fast.objective).abs();
+    assert!(gap <= 1e-9, "sharded: gap {gap:.3e}");
+}
+
+/// `GENCD_FORCE_SCALAR` pins [`kernel::dispatch`] to the scalar tier
+/// for every request (the CI kernel-matrix lever), is re-read per call
+/// (unset restores hardware dispatch within one process), and `0` means
+/// off. The only test in the suite that mutates the environment — it
+/// holds the same lock as every other test here.
+#[test]
+fn force_scalar_env_pins_dispatch() {
+    let _g = env_lock();
+    // the CI scalar lane exports the hatch for the whole process; put
+    // whatever was there back when done
+    let prior = std::env::var(FORCE_SCALAR_ENV).ok();
+    std::env::set_var(FORCE_SCALAR_ENV, "1");
+    for choice in [
+        KernelChoice::Auto,
+        KernelChoice::Scalar,
+        KernelChoice::Avx2,
+        KernelChoice::Avx512,
+    ] {
+        assert_eq!(
+            kernel::dispatch(choice),
+            KernelTier::Scalar,
+            "{choice:?} must pin to scalar under {FORCE_SCALAR_ENV}"
+        );
+    }
+
+    // a whole solve under the hatch reports the pinned tier
+    let (x, y) = planted_xy(23, 40, 16);
+    let out = builder(&x, &y, Algorithm::Shotgun)
+        .threads(2)
+        .fast_kernels(true)
+        .kernel(KernelChoice::Avx512)
+        .max_iters(200)
+        .build()
+        .unwrap()
+        .solve();
+    assert_eq!(out.metrics.kernel_tier, "scalar");
+    assert!(out.objective.is_finite());
+
+    // "0" disarms the hatch; unsetting restores hardware dispatch
+    std::env::set_var(FORCE_SCALAR_ENV, "0");
+    assert_eq!(kernel::dispatch(KernelChoice::Scalar), KernelTier::Scalar);
+    assert!(kernel::dispatch(KernelChoice::Avx512) >= kernel::dispatch(KernelChoice::Avx2));
+    std::env::remove_var(FORCE_SCALAR_ENV);
+    assert!(kernel::dispatch(KernelChoice::Auto) >= KernelTier::Scalar);
+
+    if let Some(v) = prior {
+        std::env::set_var(FORCE_SCALAR_ENV, v);
+    }
+}
