@@ -167,6 +167,19 @@ pub struct SolverConfig {
     /// event per line — `gencd events --check` validates it). See
     /// `event::LogFormat`.
     pub log_format: String,
+    /// Crash-recovery checkpoint path for sharded solves (empty = no
+    /// checkpointing). See `SolverBuilder::checkpoint_path` and
+    /// `recover::checkpoint`.
+    pub checkpoint_path: String,
+    /// Reconciled rounds between checkpoint writes. See
+    /// `SolverBuilder::checkpoint_every_rounds`.
+    pub checkpoint_every_rounds: usize,
+    /// Checkpoint to resume from (empty = fresh solve). See
+    /// `SolverBuilder::resume_from`.
+    pub resume_from: String,
+    /// Per-peer TCP redial budget after a disconnect (0 = reconnection
+    /// disabled). See `SolverBuilder::reconnect_max_attempts`.
+    pub reconnect_max_attempts: usize,
 }
 
 impl Default for SolverConfig {
@@ -203,6 +216,10 @@ impl Default for SolverConfig {
             peers: String::new(),
             wire_precision: "exact".into(),
             log_format: "text".into(),
+            checkpoint_path: String::new(),
+            checkpoint_every_rounds: 16,
+            resume_from: String::new(),
+            reconnect_max_attempts: 0,
         }
     }
 }
@@ -331,6 +348,14 @@ impl RunConfig {
             ("solver", "peers") => self.solver.peers = as_str(value)?,
             ("solver", "wire_precision") => {
                 self.solver.wire_precision = as_str(value)?
+            }
+            ("solver", "checkpoint_path") => self.solver.checkpoint_path = as_str(value)?,
+            ("solver", "checkpoint_every_rounds") => {
+                self.solver.checkpoint_every_rounds = as_usize(value)?
+            }
+            ("solver", "resume_from") => self.solver.resume_from = as_str(value)?,
+            ("solver", "reconnect_max_attempts") => {
+                self.solver.reconnect_max_attempts = as_usize(value)?
             }
             ("solver", "log_format") => self.solver.log_format = as_str(value)?,
             ("output", "csv") => self.csv = Some(as_str(value)?),
@@ -480,6 +505,23 @@ mod tests {
         assert_eq!(cfg.solver.transport, "loopback");
         assert_eq!(cfg.solver.wire_precision, "f32");
         assert!(RunConfig::from_toml("[solver]\ntransport = 5\n").is_err());
+        // recovery knobs: defaults, TOML, and --set override
+        assert_eq!(cfg.solver.checkpoint_path, "");
+        assert_eq!(cfg.solver.checkpoint_every_rounds, 16);
+        assert_eq!(cfg.solver.resume_from, "");
+        assert_eq!(cfg.solver.reconnect_max_attempts, 0);
+        let cfg9 = RunConfig::from_toml(
+            "[solver]\ncheckpoint_path = \"/tmp/ck.bin\"\ncheckpoint_every_rounds = 8\n\
+             resume_from = \"/tmp/ck.bin\"\nreconnect_max_attempts = 5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg9.solver.checkpoint_path, "/tmp/ck.bin");
+        assert_eq!(cfg9.solver.checkpoint_every_rounds, 8);
+        assert_eq!(cfg9.solver.resume_from, "/tmp/ck.bin");
+        assert_eq!(cfg9.solver.reconnect_max_attempts, 5);
+        cfg.set("solver.reconnect_max_attempts", "3").unwrap();
+        assert_eq!(cfg.solver.reconnect_max_attempts, 3);
+        assert!(RunConfig::from_toml("[solver]\nreconnect_max_attempts = -1\n").is_err());
     }
 
     #[test]

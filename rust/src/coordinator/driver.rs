@@ -164,7 +164,16 @@ pub fn run_on(
         .kkt_every(cfg.solver.kkt_every)
         .kkt_adaptive(cfg.solver.kkt_adaptive)
         .fast_kernels(cfg.solver.fast_kernels)
-        .kernel(kernel);
+        .kernel(kernel)
+        .reconnect_max_attempts(cfg.solver.reconnect_max_attempts);
+    if !cfg.solver.checkpoint_path.is_empty() {
+        builder = builder
+            .checkpoint_path(cfg.solver.checkpoint_path.clone())
+            .checkpoint_every_rounds(cfg.solver.checkpoint_every_rounds);
+    }
+    if !cfg.solver.resume_from.is_empty() {
+        builder = builder.resume_from(cfg.solver.resume_from.clone());
+    }
     if let Some(log) = &event_log {
         builder = builder.subscriber(log.clone());
     }

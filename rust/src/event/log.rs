@@ -140,6 +140,15 @@ pub fn event_fields(ev: &Events) -> Vec<(&'static str, Field)> {
             ("nnz", Field::U64(e.nnz)),
             ("objective", Field::F64(e.objective)),
         ],
+        Events::CheckpointWritten(e) => vec![
+            ("round", Field::U64(e.round)),
+            ("bytes", Field::U64(e.bytes)),
+        ],
+        Events::PeerReconnected(e) => vec![("attempts", Field::U64(e.attempts))],
+        Events::ResumeLoaded(e) => vec![
+            ("round", Field::U64(e.round)),
+            ("n", Field::U64(e.n)),
+        ],
     }
 }
 
@@ -254,6 +263,9 @@ log_all!(
     (on_wire_frame_received, WireFrameReceived),
     (on_codec_error, CodecError),
     (on_path_step, PathStep),
+    (on_checkpoint_written, CheckpointWritten),
+    (on_peer_reconnected, PeerReconnected),
+    (on_resume_loaded, ResumeLoaded),
 );
 
 #[cfg(test)]

@@ -16,10 +16,25 @@
 use std::sync::{Arc, Mutex};
 
 use super::{
-    IterationCompleted, KktSweep, Meta, PhaseTimed, ProposalBatch, ReconcileRound, ShardFailed,
-    SolveInfo, SpillDrained, Subscriber, WireFrameReceived, WireFrameSent,
+    CheckpointWritten, IterationCompleted, KktSweep, Meta, PeerReconnected, PhaseTimed,
+    ProposalBatch, ReconcileRound, ResumeLoaded, ShardFailed, SolveInfo, SpillDrained,
+    Subscriber, WireFrameReceived, WireFrameSent,
 };
 use crate::coordinator::metrics::MetricsSnapshot;
+
+/// Recovery columns ([`crate::recover`]) accumulated from the event
+/// stream. Kept beside — not inside — [`MetricsSnapshot`], per the
+/// metrics-migration rule: new observability lands as events plus
+/// aggregator columns, never as new hand-maintained snapshot fields.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoverColumns {
+    /// Total redial attempts reported by `PeerReconnected` events.
+    pub reconnect_attempts: u64,
+    /// Checkpoint files written this solve.
+    pub checkpoints_written: u64,
+    /// Round the solve resumed from (0 = fresh solve).
+    pub resume_round: u64,
+}
 
 /// Event-fed metrics accumulator. Counts arrive per event; end-of-solve
 /// [`PhaseTimed`] rows fill in the phase seconds. The result mirrors the
@@ -28,6 +43,7 @@ use crate::coordinator::metrics::MetricsSnapshot;
 #[derive(Clone, Default)]
 pub struct MetricsAggregator {
     inner: Arc<Mutex<MetricsSnapshot>>,
+    recover: Arc<Mutex<RecoverColumns>>,
 }
 
 impl MetricsAggregator {
@@ -38,6 +54,12 @@ impl MetricsAggregator {
     /// Current accumulated snapshot (complete once the solve returns).
     pub fn snapshot(&self) -> MetricsSnapshot {
         *self.inner.lock().unwrap()
+    }
+
+    /// Recovery columns accumulated so far (reconnects, checkpoints,
+    /// resume round) — the event-era siblings of the snapshot.
+    pub fn recover_columns(&self) -> RecoverColumns {
+        *self.recover.lock().unwrap()
     }
 
     /// Merge one pool's engine snapshot into a sharded aggregate: work
@@ -137,6 +159,18 @@ impl Subscriber for MetricsAggregator {
     fn on_wire_frame_received(&mut self, _ctx: &mut (), _meta: &Meta, ev: &WireFrameReceived) {
         self.inner.lock().unwrap().wire_bytes_rx += ev.bytes;
     }
+
+    fn on_checkpoint_written(&mut self, _ctx: &mut (), _meta: &Meta, _ev: &CheckpointWritten) {
+        self.recover.lock().unwrap().checkpoints_written += 1;
+    }
+
+    fn on_peer_reconnected(&mut self, _ctx: &mut (), _meta: &Meta, ev: &PeerReconnected) {
+        self.recover.lock().unwrap().reconnect_attempts += ev.attempts;
+    }
+
+    fn on_resume_loaded(&mut self, _ctx: &mut (), _meta: &Meta, ev: &ResumeLoaded) {
+        self.recover.lock().unwrap().resume_round = ev.round;
+    }
 }
 
 #[cfg(test)]
@@ -224,5 +258,27 @@ mod tests {
         assert_eq!(m.active_cols, 7);
         assert!((m.update_secs - 0.25).abs() < 1e-12);
         assert_eq!(m.wire_bytes_tx, 64);
+    }
+
+    #[test]
+    fn recover_columns_accumulate_from_events() {
+        use crate::event::{CheckpointWritten, PeerReconnected, ResumeLoaded};
+        let agg = MetricsAggregator::new();
+        let mut sub = Subscribed::new(agg.clone(), &SolveInfo::default());
+        let meta = Meta::default();
+        sub.emit(&meta, &Events::from(ResumeLoaded { round: 12, n: 40 }));
+        sub.emit(&meta, &Events::from(CheckpointWritten { round: 16, bytes: 512 }));
+        sub.emit(&meta, &Events::from(CheckpointWritten { round: 32, bytes: 512 }));
+        sub.emit(&meta, &Events::from(PeerReconnected { attempts: 2 }));
+        sub.emit(&meta, &Events::from(PeerReconnected { attempts: 1 }));
+        let r = agg.recover_columns();
+        assert_eq!(r.resume_round, 12);
+        assert_eq!(r.checkpoints_written, 2);
+        assert_eq!(r.reconnect_attempts, 3);
+        // no MetricsSnapshot field involved — the snapshot is untouched
+        let m = agg.snapshot();
+        assert_eq!(m.iterations, 0);
+        assert_eq!(m.updates, 0);
+        assert_eq!(m.shard_failures, 0);
     }
 }

@@ -31,7 +31,7 @@ pub mod phases;
 pub mod subscriber;
 
 pub use log::{LogFormat, StructuredLog};
-pub use metrics::MetricsAggregator;
+pub use metrics::{MetricsAggregator, RecoverColumns};
 pub use phases::PhaseTable;
 pub use subscriber::{NoopSubscriber, Subscribed, Subscriber};
 
@@ -169,6 +169,33 @@ pub struct PathStep {
     pub objective: f64,
 }
 
+/// The coordinator wrote a recovery checkpoint ([`crate::recover`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointWritten {
+    /// completed global rounds captured by the file
+    pub round: u64,
+    /// encoded file size, CRC included
+    pub bytes: u64,
+}
+
+/// A wire link healed a dead peer connection (`Meta::shard` is the
+/// peer); emitted by the coordinator at the first reconciled round
+/// after the heal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerReconnected {
+    /// redial attempts spent since the last reconciled round
+    pub attempts: u64,
+}
+
+/// A solve started from a recovery checkpoint instead of from zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResumeLoaded {
+    /// completed global rounds restored from the file
+    pub round: u64,
+    /// feature count of the restored iterate
+    pub n: u64,
+}
+
 /// The full event vocabulary; one variant per event struct.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Events {
@@ -185,6 +212,9 @@ pub enum Events {
     WireFrameReceived(WireFrameReceived),
     CodecError(CodecError),
     PathStep(PathStep),
+    CheckpointWritten(CheckpointWritten),
+    PeerReconnected(PeerReconnected),
+    ResumeLoaded(ResumeLoaded),
 }
 
 macro_rules! impl_from {
@@ -211,6 +241,9 @@ impl_from!(
     WireFrameReceived,
     CodecError,
     PathStep,
+    CheckpointWritten,
+    PeerReconnected,
+    ResumeLoaded,
 );
 
 impl Events {
@@ -230,6 +263,9 @@ impl Events {
             Events::WireFrameReceived(_) => "wire_rx",
             Events::CodecError(_) => "codec_error",
             Events::PathStep(_) => "path",
+            Events::CheckpointWritten(_) => "checkpoint_written",
+            Events::PeerReconnected(_) => "peer_reconnected",
+            Events::ResumeLoaded(_) => "resume_loaded",
         }
     }
 }

@@ -15,9 +15,10 @@
 use std::ops::ControlFlow;
 
 use super::{
-    CodecError, Events, EventSink, IterationCompleted, KktSweep, Meta, PathStep, PhaseTimed,
-    ProposalBatch, ReconcileRound, ScreenGate, ShardFailed, SolveInfo, SpillDrained,
-    UpdateApplied, WireFrameReceived, WireFrameSent,
+    CheckpointWritten, CodecError, Events, EventSink, IterationCompleted, KktSweep, Meta,
+    PathStep, PeerReconnected, PhaseTimed, ProposalBatch, ReconcileRound, ResumeLoaded,
+    ScreenGate, ShardFailed, SolveInfo, SpillDrained, UpdateApplied, WireFrameReceived,
+    WireFrameSent,
 };
 use crate::coordinator::observer::{IterationInfo, Observer};
 
@@ -95,6 +96,9 @@ subscriber_vocabulary!(
     (on_wire_frame_received, WireFrameReceived),
     (on_codec_error, CodecError),
     (on_path_step, PathStep),
+    (on_checkpoint_written, CheckpointWritten),
+    (on_peer_reconnected, PeerReconnected),
+    (on_resume_loaded, ResumeLoaded),
 );
 
 /// The subscriber that hears nothing. With it (or with no subscriber at

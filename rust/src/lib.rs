@@ -65,6 +65,7 @@
 //! | [`shard`] (`SolverBuilder::shards(n)`) | one NUMA-pinnable engine pool per column shard | per-shard `z` *replica*, first-touched node-local | reconcile barrier, every R rounds (adaptive), dirty-chunk delta fold |
 //! | [`sim`] (`gencd sim`, [`sim::SimLink`]) | the shard layer, unmodified, under virtual time | a seeded [`sim::FaultPlan`] (pure data, consulted identically by every shard) | deterministic fault injection over the [`shard::ReconcileLink`] seam: delays, reorders, stragglers, kills, timeouts |
 //! | [`net`] (`SolverBuilder::transport`, `gencd net`) | shard peers behind a wire ([`net::LoopbackLink`] in-process, [`net::TcpLink`] over sockets) | replicas refreshed from decoded frames (absolute dirty-chunk values, exact or f32) | the same four reconcile crossings, serialized per [`shard::engine`] §Wire format; deadlines map `barrier_timeout_secs` onto the socket |
+//! | [`recover`] (`SolverBuilder::{checkpoint_path, resume_from, reconnect_max_attempts}`, `gencd harness`) | — (survives the layers above across crashes, never adds workers) | the CRC-guarded [`recover::Checkpoint`] file (reconciled `w`/`z` + round/λ/RNG state, atomic rename) | checkpoint writes at reconciled rounds by the shard-0 coordinator; [`net::TcpLink`] redials with bounded exponential backoff ([`recover::ReconnectPolicy`]), exhausted retries degrade to `ShardFailed` |
 //! | [`event`] (`SolverBuilder::subscriber`) | — (observes every layer above, never synchronizes) | per-solve `SolveContext` per [`Subscriber`](event::Subscriber) | none — events are emitted from leader/coordinator threads only, and disabled emit sites compile to nothing |
 //!
 //! The engine scales until every worker hammering the same residual
@@ -201,6 +202,7 @@ pub mod linalg;
 pub mod loss;
 pub mod net;
 pub mod prelude;
+pub mod recover;
 pub mod runtime;
 pub mod screen;
 pub mod shard;

@@ -58,6 +58,7 @@ fn run(args: &mut Args) -> anyhow::Result<()> {
         "numa" => cmd_numa(args),
         "sim" => cmd_sim(args),
         "net" => cmd_net(args),
+        "harness" => cmd_harness(args),
         "events" => cmd_events(args),
         "artifacts" => cmd_artifacts(args),
         "" | "help" => {
@@ -82,6 +83,8 @@ SUBCOMMANDS
              [--max-staleness-rounds N] [--barrier-timeout S]
              [--transport barrier|loopback|tcp] [--listen ADDR]
              [--peers ADDR,ADDR,...] [--wire-precision exact|f32]
+             [--checkpoint PATH] [--checkpoint-every N] [--resume PATH]
+             [--reconnect-attempts N]   (crash recovery; sharded solves)
              [--screening] [--kkt-every N] [--kkt-adaptive] [--fast-kernels]
              [--kernel auto|scalar|avx2|avx512]  (SIMD tier ceiling)
              [--log-format text|json]     (json: line-JSON event stream)
@@ -114,6 +117,17 @@ SUBCOMMANDS
               over the loopback wire transport; nonzero exit on FAIL)
              --smoke   (2-shard localhost-TCP solve; asserts clean
               convergence and shutdown)
+  harness    --smoke | --plan DIR [--filter SUBSTR]
+             (multi-process crash drills over real localhost TCP:
+              kill -9 mid-solve + --resume bit-parity, proxy-severed
+              connections + reconnect; nonzero exit on any FAIL)
+             --worker --out FILE [--seed N] [--rounds N] [--shards N]
+             [--pace-ms N] [--listen ADDR] [--peers A,B]
+             [--checkpoint PATH] [--checkpoint-every N] [--resume PATH]
+             [--reconnect-attempts N]   (one drill worker; spawned by
+              the parent, usable standalone for debugging)
+             --proxy --listen ADDR --target ADDR
+             [--sever-after-bytes N] [--heal-after-ms N]
   events     --check FILE   (validate a `--log-format json` event log:
               well-formed line-JSON, required keys, kind coverage;
               nonzero exit on any malformed line)
@@ -192,6 +206,18 @@ fn config_from_args(args: &mut Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(v) = args.value("wire-precision") {
         cfg.solver.wire_precision = v;
+    }
+    if let Some(v) = args.value("checkpoint") {
+        cfg.solver.checkpoint_path = v;
+    }
+    if let Some(v) = args.value("checkpoint-every") {
+        cfg.solver.checkpoint_every_rounds = v.parse()?;
+    }
+    if let Some(v) = args.value("resume") {
+        cfg.solver.resume_from = v;
+    }
+    if let Some(v) = args.value("reconnect-attempts") {
+        cfg.solver.reconnect_max_attempts = v.parse()?;
     }
     if let Some(v) = args.value("log-format") {
         cfg.solver.log_format = v;
@@ -649,6 +675,70 @@ fn cmd_net(args: &mut Args) -> anyhow::Result<()> {
     let threads: usize = args.get("threads", 4)?;
     args.finish()?;
     gencd::bench_harness::experiments::print_net_ab(shards, threads);
+    Ok(())
+}
+
+fn cmd_harness(args: &mut Args) -> anyhow::Result<()> {
+    use gencd::recover::harness;
+    if args.flag("worker") {
+        let out = args
+            .value("out")
+            .ok_or_else(|| anyhow::anyhow!("harness --worker needs --out FILE"))?;
+        let opts = harness::WorkerOpts {
+            seed: args.get("seed", 7u64)?,
+            rounds: args.get("rounds", 40usize)?,
+            shards: args.get("shards", 2usize)?.max(2),
+            pace_ms: args.get("pace-ms", 0u64)?,
+            listen: args.value("listen").unwrap_or_else(|| "127.0.0.1:0".into()),
+            peers: args
+                .value("peers")
+                .map(|p| {
+                    p.split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default(),
+            checkpoint: args.value("checkpoint").map(Into::into),
+            checkpoint_every: args.get("checkpoint-every", 4usize)?.max(1),
+            resume: args.value("resume").map(Into::into),
+            reconnect_attempts: args.get("reconnect-attempts", 0usize)?,
+            out: out.into(),
+        };
+        args.finish()?;
+        return harness::run_worker(&opts);
+    }
+    if args.flag("proxy") {
+        let opts = harness::ProxyOpts {
+            listen: args
+                .value("listen")
+                .ok_or_else(|| anyhow::anyhow!("harness --proxy needs --listen ADDR"))?,
+            target: args
+                .value("target")
+                .ok_or_else(|| anyhow::anyhow!("harness --proxy needs --target ADDR"))?,
+            sever_after_bytes: args.get("sever-after-bytes", 0u64)?,
+            heal_after_ms: args.get("heal-after-ms", 0u64)?,
+        };
+        args.finish()?;
+        return harness::run_proxy(&opts);
+    }
+    let exe = std::env::current_exe()?;
+    let verdicts = if args.flag("smoke") {
+        args.finish()?;
+        harness::run_smoke(&exe)
+    } else {
+        let dir = args
+            .value("plan")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("scenarios/harness"));
+        let filter = args.value("filter");
+        args.finish()?;
+        harness::run_plan_dir(&exe, &dir, filter.as_deref())?
+    };
+    anyhow::ensure!(!verdicts.is_empty(), "no harness drills matched");
+    let (report, all_pass) = gencd::sim::render_verdicts(&verdicts);
+    print!("{report}");
+    anyhow::ensure!(all_pass, "harness drills have failures");
     Ok(())
 }
 

@@ -29,6 +29,16 @@ pub struct NetFaultPlan {
     /// the peer observes a dead link (`LinkFault::Poisoned`), and the
     /// solve must end `ShardFailed`, never hang.
     pub disconnect_at: Option<(usize, usize)>,
+    /// Recovery twist on `disconnect_at`: `0` keeps the drop permanent
+    /// (the pre-recover behavior above). `N > 0` means the dropped
+    /// party re-dials and the drop **heals after N redial attempts** —
+    /// provided the link grants it a reconnect budget of at least `N`
+    /// ([`LoopbackLink::with_reconnect_budget`]). With a smaller budget
+    /// the retries exhaust and the drop degrades to the permanent case.
+    ///
+    /// [`LoopbackLink::with_reconnect_budget`]:
+    ///     crate::net::loopback::LoopbackLink::with_reconnect_budget
+    pub heal_after_attempts: u32,
 }
 
 impl NetFaultPlan {
@@ -71,6 +81,7 @@ mod tests {
             truncate_at: Some((1, 64)),
             duplicate_round: Some(32),
             disconnect_at: Some((0, 128)),
+            heal_after_attempts: 0,
         };
         assert!(!plan.is_fault_free());
         assert!(plan.truncates(1, 64));
@@ -80,5 +91,16 @@ mod tests {
         assert!(!plan.duplicates(33));
         assert!(plan.disconnects(0, 128));
         assert!(!plan.disconnects(1, 128));
+    }
+
+    #[test]
+    fn healable_plan_is_not_fault_free() {
+        let plan = NetFaultPlan {
+            disconnect_at: Some((0, 4)),
+            heal_after_attempts: 2,
+            ..Default::default()
+        };
+        assert!(!plan.is_fault_free());
+        assert!(plan.disconnects(0, 4));
     }
 }

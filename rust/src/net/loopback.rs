@@ -19,8 +19,18 @@
 //! A [`NetFaultPlan`] injects the failures only bytes can have —
 //! truncated frames, duplicate delivery, mid-round disconnects — at
 //! exact `(shard, round)` coordinates, with the same degrade-never-hang
-//! contract as every other link fault.
+//! contract as every other link fault. Setting the plan's
+//! `heal_after_attempts` plus a link [`reconnect budget`] models the
+//! recovery path deterministically: the dropped party "re-dials"
+//! (burning budget attempts), and either heals — the frame is delivered
+//! after all, exactly like [`TcpLink`]'s idempotent replay — or
+//! exhausts its budget and poisons, reproducing retries-exhausted
+//! without a socket or a clock.
+//!
+//! [`reconnect budget`]: LoopbackLink::with_reconnect_budget
+//! [`TcpLink`]: crate::net::tcp::TcpLink
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -38,6 +48,12 @@ pub struct LoopbackLink<L: ReconcileLink = BarrierLink> {
     inner: L,
     precision: WirePrecision,
     faults: NetFaultPlan,
+    /// Redial attempts each disconnected party may burn before the
+    /// link gives up (0 = no reconnection, the pre-recover default).
+    reconnect_budget: u32,
+    /// Per-shard `(reconnects, attempts)` counters backing
+    /// [`ReconcileLink::reconnect_stats`].
+    reconnects: Vec<CachePadded<(AtomicU64, AtomicU64)>>,
     /// Per-shard encode buffers (padded: each shard's leader reuses its
     /// own lane every round, no cross-shard contention).
     lanes: Vec<CachePadded<Mutex<Vec<u8>>>>,
@@ -67,6 +83,10 @@ impl<L: ReconcileLink> LoopbackLink<L> {
             inner,
             precision,
             faults: NetFaultPlan::default(),
+            reconnect_budget: 0,
+            reconnects: (0..parties.max(1))
+                .map(|_| CachePadded::new((AtomicU64::new(0), AtomicU64::new(0))))
+                .collect(),
             lanes: (0..parties.max(1))
                 .map(|_| CachePadded::new(Mutex::new(Vec::new())))
                 .collect(),
@@ -76,6 +96,17 @@ impl<L: ReconcileLink> LoopbackLink<L> {
     /// Attach a message-fault schedule.
     pub fn with_faults(mut self, faults: NetFaultPlan) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Grant each party up to `budget` redial attempts after a
+    /// scheduled disconnect. A drop with `heal_after_attempts <= budget`
+    /// heals (the frame is delivered after the simulated re-handshake);
+    /// a drop needing more attempts than the budget burns the whole
+    /// budget and poisons — the deterministic twin of
+    /// [`TcpLink`](crate::net::tcp::TcpLink)'s retries-exhausted path.
+    pub fn with_reconnect_budget(mut self, budget: u32) -> Self {
+        self.reconnect_budget = budget;
         self
     }
 
@@ -122,6 +153,13 @@ impl<L: ReconcileLink> ReconcileLink for LoopbackLink<L> {
         Some(self.precision.name())
     }
 
+    fn reconnect_stats(&self, s: usize) -> (u64, u64) {
+        match self.reconnects.get(s) {
+            Some(cell) => (cell.0.load(Ordering::Relaxed), cell.1.load(Ordering::Relaxed)),
+            None => (0, 0),
+        }
+    }
+
     fn poison(&self) {
         self.inner.poison();
     }
@@ -153,10 +191,25 @@ impl<L: ReconcileLink> ReconcileLink for LoopbackLink<L> {
             ),
         };
         if self.faults.disconnects(s, payload.round) {
-            // the connection died before the frame left: peers see a
-            // dead link, we report it as such
-            self.inner.poison();
-            return Err(LinkFault::Poisoned);
+            let need = self.faults.heal_after_attempts;
+            if need > 0 && need <= self.reconnect_budget {
+                // the drop heals within budget: burn the redial
+                // attempts, count one successful reconnect, and fall
+                // through — the frame is (re)delivered below, which is
+                // safe because delta frames carry absolute values
+                let cell = &self.reconnects[s];
+                cell.1.fetch_add(need as u64, Ordering::Relaxed);
+                cell.0.fetch_add(1, Ordering::Relaxed);
+            } else {
+                // permanent drop, or a heal point beyond the budget:
+                // burn whatever budget existed, then peers see a dead
+                // link — we report it as such
+                self.reconnects[s]
+                    .1
+                    .fetch_add(self.reconnect_budget as u64, Ordering::Relaxed);
+                self.inner.poison();
+                return Err(LinkFault::Poisoned);
+            }
         }
         let wire: &[u8] = if self.faults.truncates(s, payload.round) {
             &lane[..tx / 2]
@@ -312,6 +365,45 @@ mod tests {
             Err(LinkFault::Poisoned)
         ));
         // the inner barrier is now poisoned: the healthy peer escapes
+        assert_eq!(link.arrive(0, 2), Err(LinkFault::Poisoned));
+    }
+
+    #[test]
+    fn disconnect_heals_within_reconnect_budget() {
+        let link = LoopbackLink::new(2, DEFAULT_SPIN, None, WirePrecision::Exact)
+            .with_faults(NetFaultPlan {
+                disconnect_at: Some((1, 2)),
+                heal_after_attempts: 3,
+                ..Default::default()
+            })
+            .with_reconnect_budget(4);
+        let z = SyncF64Vec::zeros(8);
+        z.set(2, 1.5);
+        // the drop heals: the frame is delivered and the solve goes on
+        assert!(link.wire_delta(1, &payload_of(&z, None, 2)).is_ok());
+        assert_eq!(z.get(2), 1.5);
+        assert_eq!(link.reconnect_stats(1), (1, 3));
+        assert_eq!(link.reconnect_stats(0), (0, 0));
+        // the healthy peer never saw a poisoned link
+        assert!(link.arrive(0, 2).is_ok());
+    }
+
+    #[test]
+    fn heal_beyond_budget_burns_attempts_and_poisons() {
+        let link = LoopbackLink::new(2, DEFAULT_SPIN, None, WirePrecision::Exact)
+            .with_faults(NetFaultPlan {
+                disconnect_at: Some((1, 2)),
+                heal_after_attempts: 9,
+                ..Default::default()
+            })
+            .with_reconnect_budget(4);
+        let z = SyncF64Vec::zeros(8);
+        assert!(matches!(
+            link.wire_delta(1, &payload_of(&z, None, 2)),
+            Err(LinkFault::Poisoned)
+        ));
+        // all four budgeted attempts were burned, no reconnect succeeded
+        assert_eq!(link.reconnect_stats(1), (0, 4));
         assert_eq!(link.arrive(0, 2), Err(LinkFault::Poisoned));
     }
 

@@ -7,13 +7,40 @@
 //! per crossing id and broadcasts `release` when all parties are in;
 //! data frames (delta, decision) are routed through the relay and
 //! echoed back decoded-side. Read/write deadlines map the engine's
-//! `barrier_timeout_secs` onto socket timeouts, so **every** failure
-//! mode — peer gone, connection reset, deadline exceeded, malformed
-//! bytes — lands as a [`LinkFault`] (`TimedOut`, `Poisoned`, or
-//! `Protocol`) and from there as `StopReason::ShardFailed` + a
-//! structured `SolveError`. Never a hang: a faulted shard shuts its
-//! socket down on the way out, the relay sees the close and broadcasts
-//! `poison`, and every blocked peer unblocks.
+//! `barrier_timeout_secs` onto socket timeouts — including the relay's
+//! own accept loop and hello-handshake reads, so a half-open or silent
+//! dialer cannot stall coordinator startup. **Every** failure mode —
+//! peer gone, connection reset, deadline exceeded, malformed bytes —
+//! lands as a [`LinkFault`] (`TimedOut`, `Poisoned`, or `Protocol`)
+//! and from there as `StopReason::ShardFailed` + a structured
+//! `SolveError`. Never a hang: a faulted shard shuts its socket down
+//! on the way out, the relay sees the close and broadcasts `poison`,
+//! and every blocked peer unblocks.
+//!
+//! # Reconnect (recover layer)
+//!
+//! With a [`ReconnectPolicy`] (`TcpLink::connect_with`), a transient
+//! disconnect no longer dooms the solve. The peer side redials its
+//! original address under bounded exponential backoff and re-handshakes
+//! with a hello that **carries its crossing number**; the relay side
+//! keeps accepting for the life of the link and re-registers the
+//! rejoining writer. Two races the re-handshake heals:
+//!
+//! * **Lost release** — the relay released crossing `c` but the frame
+//!   died with the connection. The relay tracks its released frontier
+//!   and replays `release(c)` to a rejoiner whose hello crossing is
+//!   already released. Peers skip stale (lower-numbered) releases, so a
+//!   double delivery is harmless.
+//! * **Lost arrive** — the peer's `arrive(c)` died in flight. The
+//!   rejoin hello doubles as the arrival; a per-shard last-arrive
+//!   watermark dedupes the retransmit, so the barrier never
+//!   double-counts.
+//!
+//! Data frames are retransmitted whole after a reconnect: delta frames
+//! carry **absolute** chunk values, so replaying one is idempotent by
+//! construction. Retries exhausted degrades exactly like the
+//! no-reconnect link: poison, `LinkFault::Poisoned`,
+//! `StopReason::ShardFailed` + `SolveErrorKind::Link` — never a hang.
 //!
 //! **v1 scope, stated honestly:** this link runs the shard pools in one
 //! process with TCP as the *message plane* — every crossing and every
@@ -22,8 +49,8 @@
 //! exercised — but the fold itself still reads replicas through shared
 //! memory after the decoded bytes are written back. Splitting the data
 //! plane across processes (replica state living only behind the wire)
-//! is the recorded follow-on, along with double-buffered
-//! compute/exchange overlap.
+//! is the recorded follow-on; `gencd harness` covers the multi-process
+//! axis by spawning whole solves as child processes and killing them.
 
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -35,6 +62,7 @@ use std::time::{Duration, Instant};
 use crate::net::frame::{
     self, decode_frame, DecisionRecord, Frame, FrameTag, WirePrecision, HEADER_LEN,
 };
+use crate::recover::backoff::ReconnectPolicy;
 use crate::shard::engine::{
     DecisionPayload, DeltaPayload, LinkFault, ReconcileLink, WireCost,
 };
@@ -43,11 +71,19 @@ use crate::shard::engine::{
 /// control frame with this round value, identifying the sender's shard.
 const HELLO_ROUND: u64 = u64::MAX;
 
+/// Rejoin sentinel: a reconnect hello that is *not* parked at any
+/// crossing (the failure hit a data exchange, not a barrier wait).
+/// Registers the writer without touching arrival accounting.
+const REJOIN_NONE: u64 = u64::MAX - 1;
+
 /// Upper bound on a declared payload length. A garbage length prefix
 /// must not drive an allocation: anything above this decodes to a
 /// protocol fault instead. 2 GiB covers a dense f64 delta for ~268M
 /// coordinates — far past anything one box folds.
 const MAX_WIRE_PAYLOAD: usize = 1 << 31;
+
+/// Poll interval for the non-blocking accept loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
 
 /// Read one length-prefixed frame into `buf` (header + declared
 /// payload). `InvalidData` marks an implausible length prefix; other
@@ -67,10 +103,31 @@ fn read_exact_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> io::Result<()>
     Ok(())
 }
 
-/// Relay-side shared state: registered writer halves and the arrival
-/// counts per crossing id.
+/// Socket errors that mean "the connection is gone" — the only class a
+/// [`ReconnectPolicy`] applies to. Timeouts are *not* here on purpose:
+/// a deadline at a barrier means a peer is slow or dead, and redialing
+/// our own healthy socket cannot fix that.
+fn is_disconnect(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::BrokenPipe
+            | io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::NotConnected
+    )
+}
+
+/// Relay-side shared state: registered writer halves, the arrival
+/// counts per crossing id, and the rejoin bookkeeping (released
+/// frontier + per-shard arrive watermarks).
 struct RelayShared {
     parties: usize,
+    /// Whether peers may rejoin after a disconnect. When false, a
+    /// handler seeing EOF poisons the link (the pre-recover behavior);
+    /// when true it only clears its writer slot and lets the accept
+    /// loop re-register the peer.
+    reconnectable: bool,
     /// Set by the link on shutdown/poison: suppresses the poison
     /// broadcast a handler would otherwise emit on EOF, so a clean
     /// teardown doesn't read as a fault.
@@ -79,6 +136,15 @@ struct RelayShared {
     /// serializes against broadcasts touching the same peer.
     writers: Mutex<Vec<Option<Arc<Mutex<TcpStream>>>>>,
     arrivals: Mutex<HashMap<u64, usize>>,
+    /// Released frontier, stored as `last released crossing + 1`
+    /// (0 = nothing released). A rejoiner whose hello crossing sits
+    /// below the frontier gets its release replayed — the lost-release
+    /// race.
+    released: AtomicU64,
+    /// Per-shard watermark of the last crossing counted as arrived
+    /// (`u64::MAX` = none yet). Dedupes the arrive a rejoining peer
+    /// retransmits — the lost-arrive race.
+    last_arrive: Vec<AtomicU64>,
     handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -105,8 +171,15 @@ impl RelayShared {
         }
     }
 
-    /// Count an arrival for crossing `c`; the Nth arrival releases all.
-    fn on_arrive(&self, c: u64) {
+    /// Count an arrival of shard `s` for crossing `c`; the Nth arrival
+    /// releases all. Re-sent arrives (reconnect retransmits) are
+    /// deduped against the shard's watermark.
+    fn on_arrive(&self, s: usize, c: u64) {
+        let last = self.last_arrive[s].load(Ordering::Relaxed);
+        if last != u64::MAX && last >= c {
+            return; // already counted before the reconnect
+        }
+        self.last_arrive[s].store(c, Ordering::Relaxed);
         let release = {
             let mut arrivals = self.arrivals.lock().unwrap_or_else(|e| e.into_inner());
             let count = arrivals.entry(c).or_insert(0);
@@ -118,8 +191,17 @@ impl RelayShared {
             full
         };
         if release {
+            // frontier before broadcast: a rejoiner must never observe
+            // the release gone from `arrivals` without the frontier
+            // covering it, or the lost-release replay misses
+            self.released.fetch_max(c + 1, Ordering::AcqRel);
             self.broadcast(FrameTag::Release, c);
         }
+    }
+
+    /// Whether crossing `c` has already been released.
+    fn already_released(&self, c: u64) -> bool {
+        self.released.load(Ordering::Acquire) > c
     }
 
     fn poison_all(&self) {
@@ -129,23 +211,37 @@ impl RelayShared {
 
 /// Per-connection relay handler: counts arrivals, echoes data frames
 /// back to the sender, and broadcasts poison on any read failure or
-/// protocol violation.
-fn relay_handler(shared: Arc<RelayShared>, mut read: TcpStream, writer: Arc<Mutex<TcpStream>>) {
+/// protocol violation. Under a reconnectable link, a plain disconnect
+/// instead clears this connection's writer slot (guarded by pointer
+/// identity so a rejoiner's fresh writer is never wiped) and lets the
+/// peer rejoin.
+fn relay_handler(
+    shared: Arc<RelayShared>,
+    shard: usize,
+    mut read: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+) {
     let mut buf = Vec::new();
     loop {
         match read_exact_frame(&mut read, &mut buf) {
             Ok(()) => match decode_frame(&buf) {
                 Ok(Frame::Control {
                     tag: FrameTag::Arrive,
+                    shard: s,
                     round,
-                    ..
-                }) => shared.on_arrive(round),
+                }) if (s as usize) < shared.parties => shared.on_arrive(s as usize, round),
                 Ok(Frame::Delta(_) | Frame::Decision { .. }) => {
                     let ok = {
                         let mut stream = writer.lock().unwrap_or_else(|e| e.into_inner());
                         stream.write_all(&buf).is_ok()
                     };
                     if !ok {
+                        // our peer is unreachable; under reconnect it
+                        // will retransmit the exchange on a fresh
+                        // connection, so only a frozen link poisons
+                        if shared.reconnectable {
+                            continue;
+                        }
                         shared.poison_all();
                         return;
                     }
@@ -157,11 +253,22 @@ fn relay_handler(shared: Arc<RelayShared>, mut read: TcpStream, writer: Arc<Mute
                     return;
                 }
             },
-            Err(_) => {
+            Err(e) => {
                 // EOF or reset: a peer is gone. On a clean link
-                // teardown that is expected; otherwise tell everyone.
+                // teardown that is expected; under reconnect the peer
+                // may come back, so step aside; otherwise tell everyone.
                 if !shared.closed.load(Ordering::Acquire) {
-                    shared.poison_all();
+                    if shared.reconnectable && is_disconnect(&e) {
+                        let mut writers =
+                            shared.writers.lock().unwrap_or_else(|p| p.into_inner());
+                        if let Some(w) = &writers[shard] {
+                            if Arc::ptr_eq(w, &writer) {
+                                writers[shard] = None;
+                            }
+                        }
+                    } else {
+                        shared.poison_all();
+                    }
                 }
                 return;
             }
@@ -169,10 +276,90 @@ fn relay_handler(shared: Arc<RelayShared>, mut read: TcpStream, writer: Arc<Mute
     }
 }
 
+/// Register one accepted connection: handshake-read its hello (under
+/// the caller's deadline — a silent dialer cannot stall the relay),
+/// install the writer, spawn the handler. Returns `Ok(true)` when the
+/// hello was an *initial* registration (counts toward startup).
+fn register_conn(
+    shared: &Arc<RelayShared>,
+    mut conn: TcpStream,
+    hello_timeout: Option<Duration>,
+    startup: bool,
+) -> io::Result<bool> {
+    conn.set_nodelay(true)?;
+    // the listener is non-blocking; the handshake must not be
+    conn.set_nonblocking(false)?;
+    conn.set_read_timeout(hello_timeout)?;
+    conn.set_write_timeout(hello_timeout)?;
+    let mut hello = Vec::new();
+    read_exact_frame(&mut conn, &mut hello)?;
+    let (shard, round) = match decode_frame(&hello) {
+        Ok(Frame::Control {
+            tag: FrameTag::Arrive,
+            shard,
+            round,
+        }) if (shard as usize) < shared.parties => (shard as usize, round),
+        _ => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "connection did not open with a valid hello frame",
+            ))
+        }
+    };
+    if shared.closed.load(Ordering::Acquire) {
+        // stale rejoin against a dead link: tell the dialer, don't hang it
+        let mut poison = Vec::with_capacity(HEADER_LEN);
+        frame::encode_control(&mut poison, FrameTag::Poison, 0, 0);
+        let _ = conn.write_all(&poison);
+        return Ok(false);
+    }
+    // established-stream reads are bounded by the peer side's socket
+    // deadlines; the relay side blocks until data or close
+    conn.set_read_timeout(None)?;
+    conn.set_write_timeout(None)?;
+    let initial = round == HELLO_ROUND;
+    if initial && startup {
+        let occupied = shared.writers.lock().unwrap_or_else(|e| e.into_inner())[shard].is_some();
+        if occupied {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "duplicate shard hello"));
+        }
+    } else if !shared.reconnectable {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "rejoin hello on a link without a reconnect policy",
+        ));
+    }
+    let writer = Arc::new(Mutex::new(conn.try_clone()?));
+    shared.writers.lock().unwrap_or_else(|e| e.into_inner())[shard] = Some(Arc::clone(&writer));
+    if !initial && round != REJOIN_NONE {
+        // the rejoiner is parked at crossing `round`: either its
+        // release died with the old connection (replay it) or its
+        // arrive did (the hello doubles as the arrive, deduped)
+        if shared.already_released(round) {
+            let mut rel = Vec::with_capacity(HEADER_LEN);
+            frame::encode_control(&mut rel, FrameTag::Release, 0, round);
+            let mut stream = writer.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = stream.write_all(&rel);
+        } else {
+            shared.on_arrive(shard, round);
+        }
+    }
+    let handler_shared = Arc::clone(shared);
+    let handle = std::thread::spawn(move || relay_handler(handler_shared, shard, conn, writer));
+    shared
+        .handlers
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .push(handle);
+    Ok(initial)
+}
+
 /// Shard-side endpoint: one connection to the relay, used only by that
 /// shard's pool leader (the locks exist for `Sync` soundness, not
 /// contention).
 struct Peer {
+    /// The address this peer dialed — redialed on reconnect.
+    addr: String,
     read: Mutex<TcpStream>,
     write: Mutex<TcpStream>,
     /// Reused encode/receive buffer.
@@ -180,13 +367,27 @@ struct Peer {
     /// Local crossing counter; all shards cross in lockstep, so equal
     /// counts name the same crossing — the relay's barrier key.
     crossings: AtomicU64,
+    /// Successful reconnects (for `reconnect_stats`).
+    reconnects: AtomicU64,
+    /// Cumulative redial attempts, successful or not.
+    attempts: AtomicU64,
 }
 
-/// The TCP [`ReconcileLink`]. See the module docs for topology and the
-/// v1 scope statement; construction is [`TcpLink::connect`].
+/// An op failure the retry layer can classify: a socket-level error
+/// (maybe healable by reconnect) or an already-classified link fault.
+enum OpError {
+    Io(io::Error),
+    Fault(LinkFault),
+}
+
+/// The TCP [`ReconcileLink`]. See the module docs for topology, the
+/// reconnect protocol, and the v1 scope statement; construction is
+/// [`TcpLink::connect`] / [`TcpLink::connect_with`].
 pub struct TcpLink {
     peers: Vec<Peer>,
     precision: WirePrecision,
+    policy: ReconnectPolicy,
+    timeout: Option<Duration>,
     closed: Arc<AtomicBool>,
     relay: Arc<RelayShared>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
@@ -194,14 +395,8 @@ pub struct TcpLink {
 }
 
 impl TcpLink {
-    /// Bind the relay on `listen` (use port 0 for an ephemeral port),
-    /// dial one connection per shard, and wait until the relay has
-    /// registered all of them. `peers` optionally overrides the dial
-    /// address per shard (shard `s` dials `peers[min(s, len-1)]`; an
-    /// empty slice dials the relay's own bound address — the
-    /// single-box default). `timeout` (`None` = effectively forever)
-    /// becomes every socket's read/write deadline, mapping
-    /// `barrier_timeout_secs` onto the wire.
+    /// [`connect_with`](TcpLink::connect_with) under a disabled
+    /// reconnect policy — the first socket error poisons the link.
     pub fn connect(
         shards: usize,
         listen: &str,
@@ -209,72 +404,110 @@ impl TcpLink {
         timeout: Option<Duration>,
         precision: WirePrecision,
     ) -> io::Result<Self> {
+        Self::connect_with(shards, listen, peers, timeout, precision, ReconnectPolicy::default())
+    }
+
+    /// Bind the relay on `listen` (use port 0 for an ephemeral port),
+    /// dial one connection per shard, and wait until the relay has
+    /// registered all of them. `peers` optionally overrides the dial
+    /// address per shard (shard `s` dials `peers[min(s, len-1)]`; an
+    /// empty slice dials the relay's own bound address — the
+    /// single-box default). `timeout` (`None` = effectively forever)
+    /// becomes every socket's read/write deadline — including the
+    /// relay's accept loop and hello reads, mapping
+    /// `barrier_timeout_secs` onto the wire end to end. `policy`
+    /// governs peer redials after a disconnect; see the module docs.
+    pub fn connect_with(
+        shards: usize,
+        listen: &str,
+        peers: &[String],
+        timeout: Option<Duration>,
+        precision: WirePrecision,
+        policy: ReconnectPolicy,
+    ) -> io::Result<Self> {
         let parties = shards.max(1);
         let listener = TcpListener::bind(listen)?;
         let local_addr = listener.local_addr()?;
         let closed = Arc::new(AtomicBool::new(false));
         let relay = Arc::new(RelayShared {
             parties,
+            reconnectable: policy.enabled(),
             closed: Arc::clone(&closed),
             writers: Mutex::new(vec![None; parties]),
             arrivals: Mutex::new(HashMap::new()),
+            released: AtomicU64::new(0),
+            last_arrive: (0..parties).map(|_| AtomicU64::new(u64::MAX)).collect(),
             handlers: Mutex::new(Vec::new()),
         });
 
-        // accept thread: register exactly `parties` connections (hello
-        // frame identifies the shard), spawn a handler for each, then
-        // signal readiness and stop listening
+        // accept thread: register `parties` initial connections (hello
+        // frame identifies the shard) under the startup deadline, then
+        // signal readiness. A reconnectable relay keeps accepting
+        // rejoin dials for the life of the link; otherwise the loop
+        // ends with startup, as before the recover layer.
         let accept_relay = Arc::clone(&relay);
         let (ready_tx, ready_rx) = mpsc::channel::<io::Result<()>>();
+        let accept_timeout = timeout;
         let accept_thread = std::thread::spawn(move || {
-            let result = (|| -> io::Result<()> {
-                for _ in 0..parties {
-                    let (mut conn, _) = listener.accept()?;
-                    conn.set_nodelay(true)?;
-                    let mut hello = Vec::new();
-                    read_exact_frame(&mut conn, &mut hello)?;
-                    let shard = match decode_frame(&hello) {
-                        Ok(Frame::Control {
-                            tag: FrameTag::Arrive,
-                            shard,
-                            round: HELLO_ROUND,
-                        }) if (shard as usize) < parties => shard as usize,
-                        _ => {
-                            return Err(io::Error::new(
-                                io::ErrorKind::InvalidData,
-                                "connection did not open with a valid hello frame",
-                            ))
-                        }
-                    };
-                    let writer = Arc::new(Mutex::new(conn.try_clone()?));
-                    {
-                        let mut writers = accept_relay
-                            .writers
-                            .lock()
-                            .unwrap_or_else(|e| e.into_inner());
-                        if writers[shard].is_some() {
-                            return Err(io::Error::new(
-                                io::ErrorKind::InvalidData,
-                                "duplicate shard hello",
-                            ));
-                        }
-                        writers[shard] = Some(Arc::clone(&writer));
-                    }
-                    let handler_relay = Arc::clone(&accept_relay);
-                    let handle =
-                        std::thread::spawn(move || relay_handler(handler_relay, conn, writer));
-                    accept_relay
-                        .handlers
-                        .lock()
-                        .unwrap_or_else(|e| e.into_inner())
-                        .push(handle);
+            if listener.set_nonblocking(true).is_err() {
+                let _ = ready_tx.send(Err(io::Error::new(
+                    io::ErrorKind::Other,
+                    "relay listener could not enter non-blocking mode",
+                )));
+                return;
+            }
+            let deadline = Instant::now() + accept_timeout.unwrap_or(Duration::from_secs(30));
+            let mut registered = 0usize;
+            let mut ready = false;
+            loop {
+                if accept_relay.closed.load(Ordering::Acquire) {
+                    return;
                 }
-                Ok(())
-            })();
-            let failed = result.is_err();
-            let _ = ready_tx.send(result);
-            if failed {
-                accept_relay.poison_all();
+                match listener.accept() {
+                    Ok((conn, _)) => {
+                        match register_conn(&accept_relay, conn, accept_timeout, !ready) {
+                            Ok(true) if !ready => {
+                                registered += 1;
+                                if registered == accept_relay.parties {
+                                    ready = true;
+                                    let _ = ready_tx.send(Ok(()));
+                                    if !accept_relay.reconnectable {
+                                        return;
+                                    }
+                                }
+                            }
+                            Ok(_) => {}
+                            Err(e) => {
+                                if !ready {
+                                    let _ = ready_tx.send(Err(e));
+                                    accept_relay.poison_all();
+                                    return;
+                                }
+                                // post-startup: a garbage or stale dial
+                                // must not take down a healthy link
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        if !ready && Instant::now() >= deadline {
+                            let _ = ready_tx.send(Err(io::Error::new(
+                                io::ErrorKind::TimedOut,
+                                "relay accept loop deadline before all shards registered",
+                            )));
+                            accept_relay.poison_all();
+                            return;
+                        }
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) => {
+                        if !ready {
+                            let _ = ready_tx.send(Err(e));
+                            accept_relay.poison_all();
+                            return;
+                        }
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                }
             }
         });
 
@@ -296,10 +529,13 @@ impl TcpLink {
                 let mut write = stream.try_clone()?;
                 write.write_all(&hello)?;
                 endpoints.push(Peer {
+                    addr,
                     read: Mutex::new(stream),
                     write: Mutex::new(write),
                     scratch: Mutex::new(Vec::new()),
                     crossings: AtomicU64::new(0),
+                    reconnects: AtomicU64::new(0),
+                    attempts: AtomicU64::new(0),
                 });
             }
             // all connections must be registered before any crossing,
@@ -318,6 +554,8 @@ impl TcpLink {
             Ok(endpoints) => Ok(Self {
                 peers: endpoints,
                 precision,
+                policy,
+                timeout,
                 closed,
                 relay,
                 accept_thread: Some(accept_thread),
@@ -325,8 +563,6 @@ impl TcpLink {
             }),
             Err(e) => {
                 closed.store(true, Ordering::Release);
-                // unblock the accept thread if it is still waiting
-                let _ = TcpStream::connect(local_addr);
                 let _ = accept_thread.join();
                 for h in relay
                     .handlers
@@ -372,17 +608,74 @@ impl TcpLink {
         LinkFault::Protocol(reason)
     }
 
-    fn send(&self, s: usize, bytes: &[u8]) -> Result<(), LinkFault> {
+    fn send(&self, s: usize, bytes: &[u8]) -> Result<(), OpError> {
         let mut stream = self.peers[s].write.lock().unwrap_or_else(|e| e.into_inner());
-        stream.write_all(bytes).map_err(|e| self.io_fault(&e))
+        stream.write_all(bytes).map_err(OpError::Io)
     }
 
-    /// One barrier crossing: announce arrival, block until the relay's
-    /// release (or fail cleanly on poison/timeout/disconnect).
-    fn cross(&self, s: usize) -> Result<(), LinkFault> {
-        self.check_open()?;
+    /// Classify an op failure: disconnects under an enabled policy go
+    /// to the redial loop (`Ok(())` = healed, retry the op); everything
+    /// else degrades through [`io_fault`](TcpLink::io_fault). `retried`
+    /// caps each op at one heal so a flapping connection cannot loop.
+    fn heal_or_fault(
+        &self,
+        s: usize,
+        hello_round: u64,
+        retried: &mut bool,
+        e: &io::Error,
+    ) -> Result<(), LinkFault> {
+        if *retried || !self.policy.enabled() || !is_disconnect(e) {
+            return Err(self.io_fault(e));
+        }
+        *retried = true;
+        self.reconnect(s, hello_round)
+    }
+
+    /// Redial the peer's original address under the backoff policy and
+    /// re-handshake with a hello carrying `hello_round` (the parked
+    /// crossing, or [`REJOIN_NONE`] from a data exchange). Exhausted
+    /// attempts poison the link — degrade, never hang.
+    fn reconnect(&self, s: usize, hello_round: u64) -> Result<(), LinkFault> {
         let peer = &self.peers[s];
-        let c = peer.crossings.fetch_add(1, Ordering::Relaxed);
+        for attempt in 0..self.policy.max_attempts {
+            if self.closed.load(Ordering::Acquire) {
+                return Err(LinkFault::Poisoned);
+            }
+            std::thread::sleep(Duration::from_millis(self.policy.delay_ms(attempt)));
+            peer.attempts.fetch_add(1, Ordering::Relaxed);
+            let stream = match TcpStream::connect(peer.addr.as_str()) {
+                Ok(st) => st,
+                Err(_) => continue,
+            };
+            let healthy = stream.set_nodelay(true).is_ok()
+                && stream.set_read_timeout(self.timeout).is_ok()
+                && stream.set_write_timeout(self.timeout).is_ok();
+            if !healthy {
+                continue;
+            }
+            let mut hello = Vec::with_capacity(HEADER_LEN);
+            frame::encode_control(&mut hello, FrameTag::Arrive, s, hello_round);
+            let mut write = match stream.try_clone() {
+                Ok(w) => w,
+                Err(_) => continue,
+            };
+            if write.write_all(&hello).is_err() {
+                continue;
+            }
+            *peer.write.lock().unwrap_or_else(|e| e.into_inner()) = write;
+            *peer.read.lock().unwrap_or_else(|e| e.into_inner()) = stream;
+            peer.reconnects.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        self.poison();
+        Err(LinkFault::Poisoned)
+    }
+
+    /// One crossing attempt: announce arrival, wait for the release.
+    /// Stale releases (replays for already-passed crossings after a
+    /// rejoin) are skipped, not faulted.
+    fn try_cross(&self, s: usize, c: u64) -> Result<(), OpError> {
+        let peer = &self.peers[s];
         {
             let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
             buf.clear();
@@ -392,7 +685,7 @@ impl TcpLink {
         let mut stream = peer.read.lock().unwrap_or_else(|e| e.into_inner());
         let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
         loop {
-            read_exact_frame(&mut stream, &mut buf).map_err(|e| self.io_fault(&e))?;
+            read_exact_frame(&mut stream, &mut buf).map_err(OpError::Io)?;
             match decode_frame(&buf) {
                 Ok(Frame::Control {
                     tag: FrameTag::Release,
@@ -400,53 +693,47 @@ impl TcpLink {
                     ..
                 }) if round == c => return Ok(()),
                 Ok(Frame::Control {
+                    tag: FrameTag::Release,
+                    round,
+                    ..
+                }) if round < c => continue,
+                Ok(Frame::Control {
                     tag: FrameTag::Poison,
                     ..
                 }) => {
                     self.poison();
-                    return Err(LinkFault::Poisoned);
+                    return Err(OpError::Fault(LinkFault::Poisoned));
                 }
-                Ok(_) => return Err(self.protocol_fault("unexpected frame at a crossing")),
-                Err(e) => return Err(self.protocol_fault(e.reason())),
-            }
-        }
-    }
-}
-
-impl ReconcileLink for TcpLink {
-    fn init(&self, s: usize) -> Result<(), LinkFault> {
-        self.cross(s)
-    }
-
-    fn arrive(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
-        self.cross(s)
-    }
-
-    fn publish_fold(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
-        self.cross(s)
-    }
-
-    fn publish_decision(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
-        self.cross(s)
-    }
-
-    fn wire_precision(&self) -> Option<&'static str> {
-        Some(self.precision.name())
-    }
-
-    fn poison(&self) {
-        self.closed.store(true, Ordering::Release);
-        for peer in &self.peers {
-            if let Ok(stream) = peer.read.try_lock() {
-                let _ = stream.shutdown(Shutdown::Both);
-            } else if let Ok(stream) = peer.write.try_lock() {
-                let _ = stream.shutdown(Shutdown::Both);
+                Ok(_) => {
+                    return Err(OpError::Fault(
+                        self.protocol_fault("unexpected frame at a crossing"),
+                    ))
+                }
+                Err(e) => return Err(OpError::Fault(self.protocol_fault(e.reason()))),
             }
         }
     }
 
-    fn wire_delta(&self, s: usize, payload: &DeltaPayload<'_>) -> Result<WireCost, LinkFault> {
+    /// One barrier crossing: announce arrival, block until the relay's
+    /// release (or fail cleanly on poison/timeout/disconnect). A
+    /// disconnect mid-crossing parks here, redials under the policy,
+    /// and replays the arrive — the relay's watermark and released
+    /// frontier make both directions idempotent.
+    fn cross(&self, s: usize) -> Result<(), LinkFault> {
         self.check_open()?;
+        let peer = &self.peers[s];
+        let c = peer.crossings.fetch_add(1, Ordering::Relaxed);
+        let mut retried = false;
+        loop {
+            match self.try_cross(s, c) {
+                Ok(()) => return Ok(()),
+                Err(OpError::Io(e)) => self.heal_or_fault(s, c, &mut retried, &e)?,
+                Err(OpError::Fault(f)) => return Err(f),
+            }
+        }
+    }
+
+    fn try_wire_delta(&self, s: usize, payload: &DeltaPayload<'_>) -> Result<WireCost, OpError> {
         let t0 = Instant::now();
         let z = payload.z;
         let peer = &self.peers[s];
@@ -480,30 +767,41 @@ impl ReconcileLink for TcpLink {
         // the wire
         let mut stream = peer.read.lock().unwrap_or_else(|e| e.into_inner());
         let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
-        read_exact_frame(&mut stream, &mut buf).map_err(|e| self.io_fault(&e))?;
-        match decode_frame(&buf) {
-            Ok(Frame::Delta(d)) if d.shard as usize == s && d.round == payload.round as u64 => {
-                d.apply(|i, v| z.set(i, v));
-                Ok(WireCost {
-                    bytes_tx: tx as u64,
-                    bytes_rx: buf.len() as u64,
-                    nanos: t0.elapsed().as_nanos() as u64,
-                })
+        loop {
+            read_exact_frame(&mut stream, &mut buf).map_err(OpError::Io)?;
+            match decode_frame(&buf) {
+                Ok(Frame::Delta(d)) if d.shard as usize == s && d.round == payload.round as u64 => {
+                    d.apply(|i, v| z.set(i, v));
+                    return Ok(WireCost {
+                        bytes_tx: tx as u64,
+                        bytes_rx: buf.len() as u64,
+                        nanos: t0.elapsed().as_nanos() as u64,
+                    });
+                }
+                // a stale release replayed after a rejoin is not part
+                // of this exchange; skip it
+                Ok(Frame::Control {
+                    tag: FrameTag::Release,
+                    ..
+                }) => continue,
+                Ok(Frame::Control {
+                    tag: FrameTag::Poison,
+                    ..
+                }) => {
+                    self.poison();
+                    return Err(OpError::Fault(LinkFault::Poisoned));
+                }
+                Ok(_) => {
+                    return Err(OpError::Fault(
+                        self.protocol_fault("delta exchange received a non-delta frame"),
+                    ))
+                }
+                Err(e) => return Err(OpError::Fault(self.protocol_fault(e.reason()))),
             }
-            Ok(Frame::Control {
-                tag: FrameTag::Poison,
-                ..
-            }) => {
-                self.poison();
-                Err(LinkFault::Poisoned)
-            }
-            Ok(_) => Err(self.protocol_fault("delta exchange received a non-delta frame")),
-            Err(e) => Err(self.protocol_fault(e.reason())),
         }
     }
 
-    fn wire_decision(&self, s: usize, payload: &mut DecisionPayload) -> Result<WireCost, LinkFault> {
-        self.check_open()?;
+    fn try_wire_decision(&self, s: usize, payload: &mut DecisionPayload) -> Result<WireCost, OpError> {
         let t0 = Instant::now();
         let peer = &self.peers[s];
         let rec = DecisionRecord {
@@ -520,26 +818,103 @@ impl ReconcileLink for TcpLink {
         };
         let mut stream = peer.read.lock().unwrap_or_else(|e| e.into_inner());
         let mut buf = peer.scratch.lock().unwrap_or_else(|e| e.into_inner());
-        read_exact_frame(&mut stream, &mut buf).map_err(|e| self.io_fault(&e))?;
-        match decode_frame(&buf) {
-            Ok(Frame::Decision { record, .. }) => {
-                payload.next_gap = record.next_gap as usize;
-                payload.stop = record.stop;
-                Ok(WireCost {
-                    bytes_tx: tx as u64,
-                    bytes_rx: buf.len() as u64,
-                    nanos: t0.elapsed().as_nanos() as u64,
-                })
+        loop {
+            read_exact_frame(&mut stream, &mut buf).map_err(OpError::Io)?;
+            match decode_frame(&buf) {
+                Ok(Frame::Decision { record, .. }) => {
+                    payload.next_gap = record.next_gap as usize;
+                    payload.stop = record.stop;
+                    return Ok(WireCost {
+                        bytes_tx: tx as u64,
+                        bytes_rx: buf.len() as u64,
+                        nanos: t0.elapsed().as_nanos() as u64,
+                    });
+                }
+                Ok(Frame::Control {
+                    tag: FrameTag::Release,
+                    ..
+                }) => continue,
+                Ok(Frame::Control {
+                    tag: FrameTag::Poison,
+                    ..
+                }) => {
+                    self.poison();
+                    return Err(OpError::Fault(LinkFault::Poisoned));
+                }
+                Ok(_) => {
+                    return Err(OpError::Fault(
+                        self.protocol_fault("decision exchange received a non-decision frame"),
+                    ))
+                }
+                Err(e) => return Err(OpError::Fault(self.protocol_fault(e.reason()))),
             }
-            Ok(Frame::Control {
-                tag: FrameTag::Poison,
-                ..
-            }) => {
-                self.poison();
-                Err(LinkFault::Poisoned)
+        }
+    }
+}
+
+impl ReconcileLink for TcpLink {
+    fn init(&self, s: usize) -> Result<(), LinkFault> {
+        self.cross(s)
+    }
+
+    fn arrive(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross(s)
+    }
+
+    fn publish_fold(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross(s)
+    }
+
+    fn publish_decision(&self, s: usize, _round: usize) -> Result<(), LinkFault> {
+        self.cross(s)
+    }
+
+    fn wire_precision(&self) -> Option<&'static str> {
+        Some(self.precision.name())
+    }
+
+    fn reconnect_stats(&self, s: usize) -> (u64, u64) {
+        let peer = &self.peers[s];
+        (
+            peer.reconnects.load(Ordering::Relaxed),
+            peer.attempts.load(Ordering::Relaxed),
+        )
+    }
+
+    fn poison(&self) {
+        self.closed.store(true, Ordering::Release);
+        for peer in &self.peers {
+            if let Ok(stream) = peer.read.try_lock() {
+                let _ = stream.shutdown(Shutdown::Both);
+            } else if let Ok(stream) = peer.write.try_lock() {
+                let _ = stream.shutdown(Shutdown::Both);
             }
-            Ok(_) => Err(self.protocol_fault("decision exchange received a non-decision frame")),
-            Err(e) => Err(self.protocol_fault(e.reason())),
+        }
+    }
+
+    fn wire_delta(&self, s: usize, payload: &DeltaPayload<'_>) -> Result<WireCost, LinkFault> {
+        self.check_open()?;
+        let mut retried = false;
+        loop {
+            match self.try_wire_delta(s, payload) {
+                Ok(cost) => return Ok(cost),
+                // delta frames carry absolute chunk values, so the
+                // post-reconnect retransmit is idempotent
+                Err(OpError::Io(e)) => self.heal_or_fault(s, REJOIN_NONE, &mut retried, &e)?,
+                Err(OpError::Fault(f)) => return Err(f),
+            }
+        }
+    }
+
+    fn wire_decision(&self, s: usize, payload: &mut DecisionPayload) -> Result<WireCost, LinkFault> {
+        self.check_open()?;
+        let mut retried = false;
+        loop {
+            match self.try_wire_decision(s, payload) {
+                Ok(cost) => return Ok(cost),
+                Err(OpError::Io(e)) => self.heal_or_fault(s, REJOIN_NONE, &mut retried, &e)?,
+                Err(OpError::Fault(f)) => return Err(f),
+            }
         }
     }
 }
@@ -578,6 +953,23 @@ mod tests {
             &[],
             Some(Duration::from_millis(timeout_ms)),
             WirePrecision::Exact,
+        )
+        .expect("localhost bind + connect")
+    }
+
+    fn link_with_reconnect(shards: usize, timeout_ms: u64, attempts: u32) -> TcpLink {
+        TcpLink::connect_with(
+            shards,
+            "127.0.0.1:0",
+            &[],
+            Some(Duration::from_millis(timeout_ms)),
+            WirePrecision::Exact,
+            ReconnectPolicy {
+                max_attempts: attempts,
+                base_ms: 5,
+                cap_ms: 40,
+                seed: 9,
+            },
         )
         .expect("localhost bind + connect")
     }
@@ -645,8 +1037,73 @@ mod tests {
     }
 
     #[test]
+    fn severed_peer_reconnects_and_completes() {
+        let l = Arc::new(link_with_reconnect(2, 5_000, 4));
+        // sever shard 1's connection out from under it: the next op
+        // sees a dead socket and must heal through the redial path
+        {
+            let stream = l.peers[1].read.lock().unwrap();
+            stream.shutdown(Shutdown::Both).expect("sever");
+        }
+        let released = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for s in 0..2 {
+                let l = Arc::clone(&l);
+                let released = Arc::clone(&released);
+                scope.spawn(move || {
+                    for round in 0..4 {
+                        l.arrive(s, round).expect("crossing heals through reconnect");
+                        released.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(released.load(Ordering::Relaxed), 8);
+        let (reconnects, attempts) = l.reconnect_stats(1);
+        assert!(reconnects >= 1, "severed peer must have reconnected");
+        assert!(attempts >= reconnects);
+        assert_eq!(l.reconnect_stats(0), (0, 0));
+    }
+
+    #[test]
+    fn reconnect_stats_are_zero_on_a_healthy_link() {
+        let l = link_with_reconnect(2, 2_000, 3);
+        std::thread::scope(|scope| {
+            for s in 0..2 {
+                let l = &l;
+                scope.spawn(move || l.arrive(s, 0).expect("healthy crossing"));
+            }
+        });
+        assert_eq!(l.reconnect_stats(0), (0, 0));
+        assert_eq!(l.reconnect_stats(1), (0, 0));
+    }
+
+    #[test]
+    fn garbage_dialer_after_startup_is_ignored() {
+        let l = Arc::new(link_with_reconnect(2, 2_000, 3));
+        // a stranger connects and sends bytes that are not a hello;
+        // the relay must drop it without disturbing the healthy link
+        let mut stranger = TcpStream::connect(l.local_addr()).expect("dial relay");
+        stranger.write_all(b"not a gencd frame at all....").expect("write garbage");
+        drop(stranger);
+        std::thread::sleep(Duration::from_millis(50));
+        std::thread::scope(|scope| {
+            for s in 0..2 {
+                let l = Arc::clone(&l);
+                scope.spawn(move || l.arrive(s, 0).expect("crossing survives stranger"));
+            }
+        });
+    }
+
+    #[test]
     fn drop_shuts_down_cleanly() {
         let l = link(2, 1_000);
         drop(l); // must not hang joining relay threads
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly_with_reconnect() {
+        let l = link_with_reconnect(2, 1_000, 3);
+        drop(l); // the lifetime accept loop must exit on the closed flag
     }
 }

@@ -1,0 +1,117 @@
+//! Bounded exponential backoff for peer reconnects.
+//!
+//! The policy is deliberately tiny and fully deterministic: delay for
+//! attempt `a` is `min(cap, base << a)` plus seeded jitter in
+//! `[0, base/2]`. Determinism matters twice — tests can pin the exact
+//! schedule, and the worst-case total (`worst_case_ms`) is a closed
+//! form the "never a hang" acceptance bound leans on: with the default
+//! policy a peer that never comes back costs well under a second of
+//! dialing before the link degrades to `ShardFailed`.
+
+use crate::util::rng::Pcg64;
+
+/// RNG stream tag for backoff jitter — distinct from every solver
+/// stream so reconnect timing can never perturb policy randomness.
+const JITTER_STREAM: u64 = 0xB0FF;
+
+/// Per-peer reconnect policy for [`TcpLink`](crate::net::tcp::TcpLink).
+/// `max_attempts == 0` disables reconnection entirely (the pre-recover
+/// behavior: first socket error poisons the link).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReconnectPolicy {
+    /// Redial attempts before the peer is declared dead. 0 = disabled.
+    pub max_attempts: u32,
+    /// Base delay before the first redial, in milliseconds.
+    pub base_ms: u64,
+    /// Ceiling on any single delay, in milliseconds.
+    pub cap_ms: u64,
+    /// Jitter seed (deterministic per `(seed, attempt)` pair).
+    pub seed: u64,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy { max_attempts: 0, base_ms: 50, cap_ms: 1000, seed: 1 }
+    }
+}
+
+impl ReconnectPolicy {
+    /// A policy with `attempts` redials and the default delay shape.
+    pub fn with_attempts(attempts: u32, seed: u64) -> ReconnectPolicy {
+        ReconnectPolicy { max_attempts: attempts, seed, ..ReconnectPolicy::default() }
+    }
+
+    /// Whether reconnection is enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 0
+    }
+
+    /// Delay before redial `attempt` (0-based):
+    /// `min(cap, base << attempt) + jitter`, jitter in `[0, base/2]`.
+    pub fn delay_ms(&self, attempt: u32) -> u64 {
+        let base = self.base_ms.max(1);
+        let exp = base.checked_shl(attempt).unwrap_or(u64::MAX).min(self.cap_ms.max(base));
+        let jitter_span = base / 2;
+        let jitter = if jitter_span == 0 {
+            0
+        } else {
+            // one draw per (seed, attempt): reproducible without state
+            Pcg64::new(self.seed ^ attempt as u64, JITTER_STREAM).below(jitter_span + 1)
+        };
+        exp + jitter
+    }
+
+    /// Upper bound on the total time spent sleeping between redials if
+    /// every attempt fails — the budget the <30 s degrade bound is
+    /// checked against.
+    pub fn worst_case_ms(&self) -> u64 {
+        (0..self.max_attempts)
+            .map(|a| self.delay_ms(a))
+            .fold(0u64, |acc, d| acc.saturating_add(d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default() {
+        assert!(!ReconnectPolicy::default().enabled());
+        assert!(ReconnectPolicy::with_attempts(3, 1).enabled());
+    }
+
+    #[test]
+    fn delays_grow_then_cap() {
+        let p = ReconnectPolicy { max_attempts: 8, base_ms: 50, cap_ms: 400, seed: 9 };
+        for a in 0..8 {
+            let d = p.delay_ms(a);
+            let exp = (50u64 << a).min(400);
+            assert!(d >= exp, "attempt {a}: {d} < {exp}");
+            assert!(d <= exp + 25, "attempt {a}: {d} > {exp} + jitter span");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let p = ReconnectPolicy { max_attempts: 5, base_ms: 50, cap_ms: 1000, seed: 42 };
+        let a: Vec<u64> = (0..5).map(|i| p.delay_ms(i)).collect();
+        let b: Vec<u64> = (0..5).map(|i| p.delay_ms(i)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worst_case_fits_the_degrade_bound() {
+        // the default shape at 5 attempts must sit far inside the 30 s
+        // acceptance ceiling even before socket timeouts are added
+        let p = ReconnectPolicy::with_attempts(5, 7);
+        assert!(p.worst_case_ms() < 5_000, "worst case {} ms", p.worst_case_ms());
+    }
+
+    #[test]
+    fn huge_attempt_does_not_overflow() {
+        let p = ReconnectPolicy { max_attempts: u32::MAX, base_ms: 50, cap_ms: 1000, seed: 1 };
+        assert!(p.delay_ms(63) <= 1000 + 25);
+        assert!(p.delay_ms(200) <= 1000 + 25);
+    }
+}

@@ -1,0 +1,499 @@
+//! Versioned, CRC-guarded solve checkpoints.
+//!
+//! A checkpoint is the coordinator's reconciled view of a sharded solve
+//! frozen at a round boundary: the iterate `w`, the canonical residual
+//! replica `z`, and the handful of scalars the adaptive machinery needs
+//! to pick up where it left off (round count, published reconcile gap,
+//! reconcile cadence state, tolerance streak, last logged objective).
+//! The codec reuses [`net::codec`](crate::net::codec)'s
+//! `EncoderValue`/`DecoderValue` discipline — every read of untrusted
+//! bytes goes through the checked [`DecoderBuffer`] cursor, every
+//! failure is a typed [`CheckpointError`], and malformed, truncated, or
+//! bit-flipped files can never panic (pinned by the 100-seed fuzz in
+//! `rust/tests/recover.rs`).
+//!
+//! # File layout (version 1, all little-endian)
+//!
+//! ```text
+//! magic      u32   "GCKP"
+//! version    u16   1
+//! flags      u16   0 (reserved)
+//! round      u64   completed global iterations at the snapshot
+//! next_gap   u64   reconcile gap published with the snapshot round
+//! seed       u64   builder seed (resume validates against it)
+//! shards     u32   shard count (resume validates against it)
+//! n_features u64   len(w)
+//! n_samples  u64   len(z)
+//! lambda     f64   the λ the snapshot was taken at
+//! updates    u64   cumulative coordinate updates
+//! r_cur      u64   adaptive reconcile cadence state
+//! div_ewma   f64   divergence EWMA (objective tripwire state)
+//! tol_hits   u32   consecutive tolerance hits
+//! last_obj   f64   last logged objective (NaN encodes "none")
+//! w          f64 × n_features
+//! z          f64 × n_samples
+//! crc        u32   CRC-32 (IEEE) over every preceding byte
+//! ```
+//!
+//! Writes are atomic: the file is staged to `<path>.tmp` and renamed
+//! into place, so a crash mid-write (the exact fault the harness's
+//! `kill -9` drill injects) leaves either the previous checkpoint or a
+//! complete new one — never a torn file. A torn *read* is still safe:
+//! the trailing CRC rejects it as [`CheckpointError::Crc`].
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::net::codec::{DecodeError, DecoderBuffer, EncoderBuffer};
+
+/// File magic: `"GCKP"` as a little-endian `u32`.
+pub const CHECKPOINT_MAGIC: u32 = u32::from_le_bytes(*b"GCKP");
+
+/// Current (and only) checkpoint format version.
+pub const CHECKPOINT_VERSION: u16 = 1;
+
+/// Fixed-size header byte count: everything before `w` in the layout.
+const HEADER_LEN: usize = 4 + 2 + 2 + 8 + 8 + 8 + 4 + 8 + 8 + 8 + 8 + 8 + 8 + 4 + 8;
+
+/// Why loading a checkpoint failed. Mirrors the wire codec's rule:
+/// untrusted bytes produce typed errors, never panics.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// The file could not be read or written.
+    Io(std::io::Error),
+    /// The byte stream was structurally malformed (truncated field,
+    /// wrong magic, inconsistent lengths) — the underlying codec error
+    /// says which.
+    Malformed(DecodeError),
+    /// The file declares a format version this build does not speak.
+    Version(u16),
+    /// The trailing CRC-32 disagrees with the bytes — a torn write or
+    /// bit rot.
+    Crc { stored: u32, computed: u32 },
+    /// The checkpoint is well-formed but does not match the solve it
+    /// was offered to (wrong shape, seed, shard count, or λ).
+    Mismatch(String),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CheckpointError::Malformed(e) => write!(f, "checkpoint malformed: {e}"),
+            CheckpointError::Version(v) => {
+                write!(f, "checkpoint version {v} unsupported (expected {CHECKPOINT_VERSION})")
+            }
+            CheckpointError::Crc { stored, computed } => write!(
+                f,
+                "checkpoint crc mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            CheckpointError::Mismatch(what) => write!(f, "checkpoint mismatch: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            CheckpointError::Malformed(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+impl From<DecodeError> for CheckpointError {
+    fn from(e: DecodeError) -> Self {
+        CheckpointError::Malformed(e)
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) with a
+/// compile-time table — no external crate, matches the checksum every
+/// standard tool (`cksum -a crc32`, zlib) computes.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// A decoded checkpoint: the reconciled solve state at a round
+/// boundary. See the module docs for the byte layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Completed global iterations when the snapshot was taken.
+    pub round: u64,
+    /// The reconcile gap the coordinator published with this round —
+    /// resume seeds its schedule from it so the reconcile cadence of a
+    /// resumed run lines up with the uninterrupted one.
+    pub next_gap: u64,
+    /// The builder seed of the originating solve. Select policies are
+    /// deterministic streams of this seed, so matching it is what makes
+    /// bit-exact resume possible.
+    pub seed: u64,
+    /// Shard count of the originating solve.
+    pub shards: u32,
+    /// λ at the snapshot.
+    pub lambda: f64,
+    /// Cumulative coordinate updates at the snapshot.
+    pub updates: u64,
+    /// Adaptive reconcile cadence state (`r_cur`).
+    pub r_cur: u64,
+    /// Objective-tripwire divergence EWMA.
+    pub div_ewma: f64,
+    /// Consecutive tolerance hits toward `StopReason::Tolerance`.
+    pub tol_hits: u32,
+    /// Last logged objective, if any round had been logged.
+    pub last_objective: Option<f64>,
+    /// The reconciled iterate (length = features).
+    pub w: Vec<f64>,
+    /// The canonical residual replica (length = samples).
+    pub z: Vec<f64>,
+}
+
+impl Checkpoint {
+    /// Exact encoded size in bytes (header + payload + CRC).
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN + 8 * self.w.len() + 8 * self.z.len() + 4
+    }
+
+    /// Serialize to the version-1 layout, CRC appended.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(self.encoded_len());
+        let mut e = EncoderBuffer::new(&mut bytes);
+        e.u32(CHECKPOINT_MAGIC);
+        e.u16(CHECKPOINT_VERSION);
+        e.u16(0); // flags, reserved
+        e.u64(self.round);
+        e.u64(self.next_gap);
+        e.u64(self.seed);
+        e.u32(self.shards);
+        e.u64(self.w.len() as u64);
+        e.u64(self.z.len() as u64);
+        e.f64(self.lambda);
+        e.u64(self.updates);
+        e.u64(self.r_cur);
+        e.f64(self.div_ewma);
+        e.u32(self.tol_hits);
+        e.f64(self.last_objective.unwrap_or(f64::NAN));
+        for &v in &self.w {
+            e.f64(v);
+        }
+        for &v in &self.z {
+            e.f64(v);
+        }
+        let crc = crc32(&bytes);
+        EncoderBuffer::new(&mut bytes).u32(crc);
+        bytes
+    }
+
+    /// Decode a checkpoint from raw bytes. Every failure mode of a
+    /// hostile input — truncation anywhere, wrong magic, a version this
+    /// build does not speak, declared lengths that overrun the file,
+    /// any flipped bit — is a typed [`CheckpointError`]; this function
+    /// never panics and never allocates proportionally to a *declared*
+    /// (as opposed to actually present) length.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        // CRC first: it guards every later field, so a torn tail can't
+        // masquerade as a short-but-valid checkpoint.
+        if bytes.len() < HEADER_LEN + 4 {
+            return Err(DecodeError::Truncated {
+                needed: HEADER_LEN + 4 - bytes.len(),
+                have: bytes.len(),
+            }
+            .into());
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let computed = crc32(body);
+
+        let mut d = DecoderBuffer::new(body);
+        let magic = d.u32()?;
+        if magic != CHECKPOINT_MAGIC {
+            return Err(DecodeError::BadMagic(magic).into());
+        }
+        let version = d.u16()?;
+        if version != CHECKPOINT_VERSION {
+            return Err(CheckpointError::Version(version));
+        }
+        // The CRC verdict comes after magic/version so a different file
+        // type or a future format reads as what it is, but before any
+        // field is trusted.
+        if stored != computed {
+            return Err(CheckpointError::Crc { stored, computed });
+        }
+        let _flags = d.u16()?;
+        let round = d.u64()?;
+        let next_gap = d.u64()?;
+        let seed = d.u64()?;
+        let shards = d.u32()?;
+        let n_features = d.u64()?;
+        let n_samples = d.u64()?;
+        let lambda = d.f64()?;
+        let updates = d.u64()?;
+        let r_cur = d.u64()?;
+        let div_ewma = d.f64()?;
+        let tol_hits = d.u32()?;
+        let last_obj = d.f64()?;
+
+        // Bound the declared lengths against the bytes actually present
+        // *before* allocating: `take` is the allocation guard — a bogus
+        // header can only produce a Truncated error, never an
+        // attacker-sized Vec.
+        let w_len = usize::try_from(n_features)
+            .ok()
+            .and_then(|n| n.checked_mul(8))
+            .ok_or(DecodeError::BadLength)?;
+        let w_bytes = d.take(w_len)?;
+        let z_len = usize::try_from(n_samples)
+            .ok()
+            .and_then(|n| n.checked_mul(8))
+            .ok_or(DecodeError::BadLength)?;
+        let z_bytes = d.take(z_len)?;
+        if !d.is_empty() {
+            return Err(DecodeError::BadLength.into());
+        }
+
+        let decode_f64s = |raw: &[u8]| {
+            raw.chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect::<Vec<f64>>()
+        };
+        Ok(Checkpoint {
+            round,
+            next_gap,
+            seed,
+            shards,
+            lambda,
+            updates,
+            r_cur,
+            div_ewma,
+            tol_hits,
+            last_objective: if last_obj.is_nan() { None } else { Some(last_obj) },
+            w: decode_f64s(w_bytes),
+            z: decode_f64s(z_bytes),
+        })
+    }
+
+    /// Read and decode a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let bytes = std::fs::read(path)?;
+        Checkpoint::decode(&bytes)
+    }
+
+    /// Write atomically: stage to `<path>.tmp`, fsync, rename into
+    /// place. Returns the byte count written (for the
+    /// `CheckpointWritten` event).
+    pub fn write_atomic(&self, path: &Path) -> Result<u64, CheckpointError> {
+        let bytes = self.encode();
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(bytes.len() as u64)
+    }
+}
+
+/// Where and how often the coordinator writes checkpoints. Carried in
+/// [`ShardedConfig`](crate::shard::engine::ShardedConfig).
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    /// Destination file. Written atomically (`<path>.tmp` + rename).
+    pub path: PathBuf,
+    /// Write every N reconciled rounds (a terminal checkpoint is always
+    /// written when the solve stops, whatever the cadence).
+    pub every_rounds: usize,
+    /// The builder seed, stamped into the header so resume can refuse a
+    /// checkpoint from a differently-seeded run (Select policies are
+    /// seed-deterministic — mixing seeds would silently break parity).
+    pub seed: u64,
+}
+
+/// A validated checkpoint turned into engine-resume form. Built by
+/// `SolverBuilder::resume_from` after shape/seed/λ validation; consumed
+/// by `solve_sharded_linked`, which continues the schedule exactly
+/// where the checkpoint left it.
+#[derive(Clone, Debug)]
+pub struct ResumeState {
+    /// Completed global iterations — the resumed round counter starts
+    /// here.
+    pub round: usize,
+    /// Reconcile gap published at the snapshot; the first resumed
+    /// reconcile lands `next_gap` global rounds after the snapshot.
+    pub next_gap: usize,
+    /// Adaptive cadence state to restore.
+    pub r_cur: usize,
+    /// Objective-tripwire EWMA to restore.
+    pub div_ewma: f64,
+    /// Tolerance streak to restore.
+    pub tol_hits: u32,
+    /// Last logged objective (seeds the tripwire/history baseline).
+    pub last_objective: Option<f64>,
+    /// Cumulative updates before the resume (offsets this run's count).
+    pub updates: u64,
+    /// The reconciled iterate to restart from.
+    pub w: Vec<f64>,
+    /// The canonical residual replica. Restored directly instead of
+    /// recomputing `X·w`: the checkpointed `z` is the reconciled fold
+    /// state, and a fresh matvec would differ from it in last-bit
+    /// rounding — breaking bit-exact resume.
+    pub z: Vec<f64>,
+}
+
+impl ResumeState {
+    /// Convert a decoded checkpoint (already validated against the
+    /// solve by the builder) into resume form.
+    pub fn from_checkpoint(ckpt: Checkpoint) -> ResumeState {
+        ResumeState {
+            round: ckpt.round as usize,
+            next_gap: (ckpt.next_gap as usize).max(1),
+            r_cur: ckpt.r_cur as usize,
+            div_ewma: ckpt.div_ewma,
+            tol_hits: ckpt.tol_hits,
+            last_objective: ckpt.last_objective,
+            updates: ckpt.updates,
+            w: ckpt.w,
+            z: ckpt.z,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            round: 40,
+            next_gap: 2,
+            seed: 7,
+            shards: 2,
+            lambda: 0.125,
+            updates: 640,
+            r_cur: 4,
+            div_ewma: 0.5,
+            tol_hits: 1,
+            last_objective: Some(3.25),
+            w: vec![0.0, -1.5, 2.25, 0.0],
+            z: vec![0.5; 6],
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The canonical IEEE check value: crc32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn round_trips_bit_exact() {
+        let ckpt = sample();
+        let bytes = ckpt.encode();
+        assert_eq!(bytes.len(), ckpt.encoded_len());
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back, ckpt);
+        // NaN objective encodes "none"
+        let mut none = sample();
+        none.last_objective = None;
+        assert_eq!(Checkpoint::decode(&none.encode()).unwrap().last_objective, None);
+    }
+
+    #[test]
+    fn version_bump_is_rejected() {
+        let mut bytes = sample().encode();
+        bytes[4] = CHECKPOINT_VERSION as u8 + 1; // version lives after the 4-byte magic
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        match Checkpoint::decode(&bytes) {
+            Err(CheckpointError::Version(v)) => assert_eq!(v, CHECKPOINT_VERSION + 1),
+            other => panic!("expected Version error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_reads_as_not_a_checkpoint() {
+        let mut bytes = sample().encode();
+        bytes[0] ^= 0xFF;
+        assert!(matches!(
+            Checkpoint::decode(&bytes),
+            Err(CheckpointError::Malformed(DecodeError::BadMagic(_)))
+        ));
+    }
+
+    #[test]
+    fn flipped_bit_is_a_crc_error() {
+        let bytes = sample().encode();
+        // flip one bit somewhere in the payload (past magic+version so
+        // the failure is attributed to the CRC, not structure)
+        let mut bad = bytes.clone();
+        let at = HEADER_LEN + 3;
+        bad[at] ^= 0x10;
+        assert!(matches!(Checkpoint::decode(&bad), Err(CheckpointError::Crc { .. })));
+    }
+
+    #[test]
+    fn trailing_garbage_is_bad_length() {
+        let mut bytes = sample().encode();
+        // splice extra bytes before the CRC and restamp it: structure
+        // check (not CRC) must catch the length drift
+        let body_len = bytes.len() - 4;
+        bytes.splice(body_len..body_len, [0u8; 8]);
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            Checkpoint::decode(&bytes),
+            Err(CheckpointError::Malformed(DecodeError::BadLength))
+        ));
+    }
+
+    #[test]
+    fn write_atomic_then_load() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("gencd-ckpt-test-{}.ckpt", std::process::id()));
+        let ckpt = sample();
+        let bytes = ckpt.write_atomic(&path).unwrap();
+        assert_eq!(bytes, ckpt.encoded_len() as u64);
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ckpt);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let err = Checkpoint::load(Path::new("/nonexistent/gencd.ckpt")).unwrap_err();
+        assert!(matches!(err, CheckpointError::Io(_)));
+    }
+}

@@ -1,0 +1,970 @@
+//! Multi-process crash drills: the `gencd harness` subcommand.
+//!
+//! Everything else in the test surface runs faults *in process* (the
+//! virtual-time simulator, the loopback wire, the in-process TCP
+//! tests). This module is the missing rung: real processes, real
+//! sockets, real `SIGKILL`. Three roles, all dispatched from the same
+//! binary (`std::env::current_exe`):
+//!
+//! * **worker** (`--worker`) — one complete sharded solve over the
+//!   localhost TCP transport, with optional checkpointing, resume, and
+//!   per-round pacing (so a parent can reliably interrupt it
+//!   mid-solve). The outcome is written to `--out` as a `key=value`
+//!   file whose `w_bits` line carries the full iterate as hex `f64`
+//!   bits — the parent grades on bit patterns, not formatted floats.
+//! * **proxy** (`--proxy`) — a byte-counting TCP forwarder placed
+//!   between a shard's dial address and the relay. After
+//!   `--sever-after-bytes` forwarded bytes it hard-closes the active
+//!   connection mid-stream (a real half-transferred frame, which no
+//!   in-process fault injector can produce), then keeps serving new
+//!   dials; with `--heal-after-ms` it additionally drops its listener
+//!   for that window, so redials see connection-refused — a partition,
+//!   then a heal.
+//! * **parent** (`--smoke` / `--plan DIR`) — spawns the other two,
+//!   kills workers with `SIGKILL` at checkpoint boundaries, restarts
+//!   them with `--resume`, and grades the outcome (bit-parity against
+//!   a fault-free reference run, reconnects observed, clean degraded
+//!   stops) into the same verdict table `gencd sim` renders.
+//!
+//! The drills assert the two recovery invariants end to end:
+//! kill-9-then-resume reproduces the fault-free iterate bit for bit
+//! (exact wire precision), and a severed peer either rejoins under its
+//! backoff budget or the solve degrades to `shard-failed` — never a
+//! hang (every child is waited on under a deadline).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::ControlFlow;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::toml::parse;
+use crate::coordinator::algorithms::Algorithm;
+use crate::coordinator::engine::SolveOutput;
+use crate::coordinator::observer::IterationInfo;
+use crate::event::MetricsAggregator;
+use crate::net::{Transport, WirePrecision};
+use crate::sim::report::Verdict;
+use crate::solver::Solver;
+use crate::util::Pcg64;
+
+/// Fixed drill workload size: small enough that a full solve is
+/// sub-second unpaced, large enough that every round moves real delta
+/// frames across the wire.
+const WORKLOAD_N: usize = 120;
+const WORKLOAD_K: usize = 48;
+const WORKLOAD_NNZ: usize = 8;
+const WORKLOAD_LAM: f64 = 1e-3;
+
+/// Deadline for any spawned child to finish; a child that outlives it
+/// is killed and the drill fails. This is the harness-level "degrade,
+/// never hang" backstop.
+const CHILD_DEADLINE: Duration = Duration::from_secs(60);
+
+/// How long the parent polls for a checkpoint file to appear before
+/// declaring the victim worker stuck.
+const CHECKPOINT_WAIT: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------------
+// worker
+// ---------------------------------------------------------------------------
+
+/// One worker invocation: a full sharded TCP solve in this process.
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    pub seed: u64,
+    /// Round cap (`max_iters`); with `tol = 0` every run stops here,
+    /// which is what makes reference and resumed runs comparable.
+    pub rounds: usize,
+    pub shards: usize,
+    /// Sleep per reconciled round. Zero = run flat out; the kill-9
+    /// victim paces so the parent can interrupt mid-solve.
+    pub pace_ms: u64,
+    pub listen: String,
+    /// Per-shard dial override (see [`crate::net::TcpLink`]); empty =
+    /// every shard dials the relay directly.
+    pub peers: Vec<String>,
+    pub checkpoint: Option<PathBuf>,
+    pub checkpoint_every: usize,
+    pub resume: Option<PathBuf>,
+    pub reconnect_attempts: usize,
+    /// Where the `key=value` outcome report is written.
+    pub out: PathBuf,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            seed: 7,
+            rounds: 40,
+            shards: 2,
+            pace_ms: 0,
+            listen: "127.0.0.1:0".to_string(),
+            peers: Vec::new(),
+            checkpoint: None,
+            checkpoint_every: 4,
+            resume: None,
+            reconnect_attempts: 0,
+            out: PathBuf::from("harness-worker.kv"),
+        }
+    }
+}
+
+/// Regenerate the drill workload from the seed — same construction on
+/// every process, so a worker never needs a dataset shipped to it.
+pub fn workload(seed: u64) -> (crate::sparse::CscMatrix, Vec<f64>) {
+    let mut rng = Pcg64::new(seed, 0x4A55);
+    let mut x =
+        crate::data::synth::power_law_by_columns(WORKLOAD_N, WORKLOAD_K, 1.1, WORKLOAD_NNZ, &mut rng);
+    x.normalize_columns();
+    let y = (0..WORKLOAD_N)
+        .map(|_| if rng.next_f64() < 0.5 { 1.0 } else { -1.0 })
+        .collect();
+    (x, y)
+}
+
+/// Run one worker solve and write its report. The solve itself never
+/// bails: a degraded outcome (`shard-failed`) is a *reportable* result
+/// the parent grades, not a worker error.
+pub fn run_worker(opts: &WorkerOpts) -> anyhow::Result<()> {
+    let (x, y) = workload(opts.seed);
+    let agg = MetricsAggregator::new();
+    let mut b = Solver::builder()
+        .matrix(x)
+        .labels(y)
+        .lambda(WORKLOAD_LAM)
+        .algorithm(Algorithm::Shotgun)
+        .shards(opts.shards)
+        // one thread per pool: within-pool update order stays
+        // deterministic, which the bit-parity grade depends on
+        .threads(opts.shards)
+        .seed(opts.seed)
+        .tol(0.0)
+        .max_iters(opts.rounds)
+        .max_seconds(CHILD_DEADLINE.as_secs_f64())
+        .barrier_timeout_secs(20.0)
+        .reconnect_max_attempts(opts.reconnect_attempts)
+        .transport(Transport::Tcp {
+            listen: opts.listen.clone(),
+            peers: opts.peers.clone(),
+            precision: WirePrecision::Exact,
+        })
+        .subscriber(agg.clone());
+    if let Some(path) = &opts.checkpoint {
+        b = b
+            .checkpoint_path(path.clone())
+            .checkpoint_every_rounds(opts.checkpoint_every);
+    }
+    if let Some(path) = &opts.resume {
+        b = b.resume_from(path.clone());
+    }
+    if opts.pace_ms > 0 {
+        let pace = Duration::from_millis(opts.pace_ms);
+        b = b.observer(move |_info: &IterationInfo<'_>| -> ControlFlow<()> {
+            std::thread::sleep(pace);
+            ControlFlow::Continue(())
+        });
+    }
+    let out = b.build()?.solve();
+    std::fs::write(&opts.out, render_report(&out, &agg))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", opts.out.display()))?;
+    Ok(())
+}
+
+/// Serialize a worker outcome as sorted-stable `key=value` lines.
+fn render_report(out: &SolveOutput, agg: &MetricsAggregator) -> String {
+    let rec = agg.recover_columns();
+    let bits: Vec<String> = out.w.iter().map(|v| format!("{:016x}", v.to_bits())).collect();
+    format!(
+        "stop={}\nfailed={}\nfailure_kind={}\nobjective={:.17e}\nnnz={}\nrounds={}\n\
+         reconnect_attempts={}\ncheckpoints_written={}\nresume_round={}\nw_bits={}\n",
+        out.stop,
+        u8::from(out.failure.is_some()),
+        out.failure
+            .as_ref()
+            .map(|f| f.kind.to_string())
+            .unwrap_or_else(|| "-".to_string()),
+        out.objective,
+        out.nnz,
+        out.metrics.iterations,
+        rec.reconnect_attempts,
+        rec.checkpoints_written,
+        rec.resume_round,
+        bits.join(","),
+    )
+}
+
+/// A parsed worker report.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerReport {
+    fields: BTreeMap<String, String>,
+    pub w: Vec<f64>,
+}
+
+impl WorkerReport {
+    pub fn parse(text: &str) -> anyhow::Result<WorkerReport> {
+        let mut fields = BTreeMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("worker report line without '=': {line:?}"))?;
+            fields.insert(k.to_string(), v.to_string());
+        }
+        let w = match fields.get("w_bits").map(String::as_str) {
+            None | Some("") => Vec::new(),
+            Some(bits) => bits
+                .split(',')
+                .map(|h| {
+                    u64::from_str_radix(h, 16)
+                        .map(f64::from_bits)
+                        .map_err(|e| anyhow::anyhow!("bad w_bits entry {h:?}: {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+        };
+        Ok(WorkerReport { fields, w })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<WorkerReport> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading worker report {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn str_field(&self, key: &str) -> &str {
+        self.fields.get(key).map(String::as_str).unwrap_or("")
+    }
+
+    pub fn u64_field(&self, key: &str) -> u64 {
+        self.str_field(key).parse().unwrap_or(0)
+    }
+
+    pub fn objective(&self) -> f64 {
+        self.str_field("objective").parse().unwrap_or(f64::NAN)
+    }
+
+    pub fn failed(&self) -> bool {
+        self.str_field("failed") == "1"
+    }
+}
+
+/// Largest absolute component difference between two iterates (infinite
+/// if the lengths disagree).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    if a.len() != b.len() {
+        return f64::INFINITY;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+// ---------------------------------------------------------------------------
+// proxy
+// ---------------------------------------------------------------------------
+
+/// One forwarding proxy: listen, forward to target, sever once.
+#[derive(Clone, Debug)]
+pub struct ProxyOpts {
+    pub listen: String,
+    pub target: String,
+    /// Hard-close the connection that crosses this cumulative forwarded
+    /// byte count (0 = never sever).
+    pub sever_after_bytes: u64,
+    /// After the sever, drop the listener for this long so redials get
+    /// connection-refused (0 = stay accepting — a transient drop, not a
+    /// partition).
+    pub heal_after_ms: u64,
+}
+
+/// Shared sever state across pump threads: the remaining byte budget
+/// and whether the one sever already fired.
+struct SeverState {
+    budget: AtomicU64,
+    armed: bool,
+    fired: AtomicBool,
+}
+
+impl SeverState {
+    fn new(budget: u64) -> Self {
+        SeverState {
+            budget: AtomicU64::new(budget),
+            armed: budget > 0,
+            fired: AtomicBool::new(false),
+        }
+    }
+
+    /// Consume `n` forwarded bytes; returns true when this consumption
+    /// crossed the budget and this caller should sever its connection.
+    fn consume(&self, n: u64) -> bool {
+        if !self.armed || self.fired.load(Ordering::Acquire) {
+            return false;
+        }
+        let before = self
+            .budget
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                Some(v.saturating_sub(n))
+            })
+            .unwrap_or(0);
+        before > 0 && before <= n && !self.fired.swap(true, Ordering::AcqRel)
+    }
+}
+
+/// Copy bytes one way, charging the sever budget; on crossing it, shut
+/// both sockets down mid-stream (the peer sees a half-delivered frame).
+fn pump(mut from: TcpStream, mut to: TcpStream, sever: Arc<SeverState>) {
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        if sever.consume(n as u64) {
+            let _ = from.shutdown(std::net::Shutdown::Both);
+            let _ = to.shutdown(std::net::Shutdown::Both);
+            break;
+        }
+        if to.write_all(&buf[..n]).is_err() {
+            break;
+        }
+    }
+    // a closed direction closes the pair: the other pump's read fails
+    let _ = from.shutdown(std::net::Shutdown::Both);
+    let _ = to.shutdown(std::net::Shutdown::Both);
+}
+
+/// Run the proxy until the process is killed (the parent owns its
+/// lifetime). Target-connect failures drop the client and continue —
+/// the relay may simply not be up yet.
+pub fn run_proxy(opts: &ProxyOpts) -> anyhow::Result<()> {
+    let mut listener = TcpListener::bind(&opts.listen)
+        .map_err(|e| anyhow::anyhow!("proxy bind {}: {e}", opts.listen))?;
+    let bound = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let sever = Arc::new(SeverState::new(opts.sever_after_bytes));
+    let mut partitioned = false;
+    loop {
+        // partition window: once the sever fired, optionally go dark so
+        // redials fail at dial time (each refused dial burns one
+        // backoff attempt), then resurface on the same port
+        if !partitioned && opts.heal_after_ms > 0 && sever.fired.load(Ordering::Acquire) {
+            partitioned = true;
+            drop(listener);
+            std::thread::sleep(Duration::from_millis(opts.heal_after_ms));
+            listener = TcpListener::bind(bound)
+                .map_err(|e| anyhow::anyhow!("proxy re-bind {bound}: {e}"))?;
+            listener.set_nonblocking(true)?;
+        }
+        match listener.accept() {
+            Ok((client, _)) => {
+                let server = match TcpStream::connect(&opts.target) {
+                    Ok(s) => s,
+                    Err(_) => continue, // drops `client`
+                };
+                let _ = client.set_nodelay(true);
+                let _ = server.set_nodelay(true);
+                let (c2, s2) = match (client.try_clone(), server.try_clone()) {
+                    (Ok(c), Ok(s)) => (c, s),
+                    _ => continue,
+                };
+                let up = Arc::clone(&sever);
+                let down = Arc::clone(&sever);
+                std::thread::spawn(move || pump(client, s2, up));
+                std::thread::spawn(move || pump(server, c2, down));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => anyhow::bail!("proxy accept: {e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parent: drills
+// ---------------------------------------------------------------------------
+
+/// What a drill does to the worker(s) it spawns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrillMode {
+    /// Reference run, then `SIGKILL` a paced worker after its first
+    /// checkpoint, restart with `--resume`, grade bit-parity.
+    Kill9Resume,
+    /// Route one shard through the proxy and sever its connection
+    /// mid-stream once; the worker must rejoin and finish clean.
+    TransientDrop,
+    /// Like `TransientDrop`, but the proxy also goes dark after the
+    /// sever, so early redials are refused before the heal.
+    PartitionHeal,
+}
+
+impl DrillMode {
+    pub fn by_name(s: &str) -> anyhow::Result<DrillMode> {
+        Ok(match s {
+            "kill9-resume" => DrillMode::Kill9Resume,
+            "transient-drop" => DrillMode::TransientDrop,
+            "partition-heal" => DrillMode::PartitionHeal,
+            other => anyhow::bail!(
+                "unknown harness mode {other:?} (expected kill9-resume | transient-drop | partition-heal)"
+            ),
+        })
+    }
+}
+
+/// One graded drill, parameterized by a plan file or the smoke
+/// defaults.
+#[derive(Clone, Debug)]
+pub struct DrillSpec {
+    pub name: String,
+    pub mode: DrillMode,
+    pub seed: u64,
+    pub rounds: usize,
+    pub shards: usize,
+    pub pace_ms: u64,
+    pub checkpoint_every: usize,
+    pub sever_after_bytes: u64,
+    pub heal_after_ms: u64,
+    pub reconnect_attempts: usize,
+    /// Max allowed |Δw| / |Δobjective| against the fault-free
+    /// reference.
+    pub tolerance: f64,
+    /// Minimum redial attempts the drill must observe (drop drills).
+    pub min_reconnect_attempts: u64,
+}
+
+impl DrillSpec {
+    pub fn defaults(name: &str, mode: DrillMode) -> DrillSpec {
+        DrillSpec {
+            name: name.to_string(),
+            mode,
+            seed: 7,
+            rounds: 40,
+            shards: 2,
+            pace_ms: 25,
+            checkpoint_every: 4,
+            sever_after_bytes: 6000,
+            heal_after_ms: if mode == DrillMode::PartitionHeal { 250 } else { 0 },
+            reconnect_attempts: 8,
+            tolerance: 1e-12,
+            min_reconnect_attempts: 1,
+        }
+    }
+
+    /// Parse one `scenarios/harness/*.toml` plan file:
+    ///
+    /// ```toml
+    /// name = "kill9-resume"          # (file stem)
+    /// [harness]
+    /// mode = "kill9-resume"          # kill9-resume | transient-drop | partition-heal
+    /// seed = 7                       # (7)
+    /// rounds = 40                    # (40)
+    /// shards = 2                     # (2)
+    /// pace_ms = 25                   # (25)
+    /// checkpoint_every = 4           # (4)
+    /// sever_after_bytes = 6000       # (6000)
+    /// heal_after_ms = 250            # (mode default)
+    /// reconnect_attempts = 8         # (8)
+    /// [expect]
+    /// tolerance = 1e-12              # (1e-12) vs the fault-free reference
+    /// min_reconnect_attempts = 1     # (1; drop drills only)
+    /// ```
+    pub fn from_toml_str(src: &str, fallback_name: &str) -> anyhow::Result<DrillSpec> {
+        let doc = parse(src)?;
+        let str_of = |table: &str, key: &str, default: &str| -> anyhow::Result<String> {
+            match doc.get(table, key) {
+                None => Ok(default.to_string()),
+                Some(v) => v
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("harness plan: [{table}] {key} must be a string")),
+            }
+        };
+        let int_of = |table: &str, key: &str, default: i64| -> anyhow::Result<i64> {
+            match doc.get(table, key) {
+                None => Ok(default),
+                Some(v) => v.as_int().ok_or_else(|| {
+                    anyhow::anyhow!("harness plan: [{table}] {key} must be an integer")
+                }),
+            }
+        };
+        let name = str_of("", "name", fallback_name)?;
+        let mode = DrillMode::by_name(&str_of("harness", "mode", "kill9-resume")?)?;
+        let d = DrillSpec::defaults(&name, mode);
+        let tolerance = match doc.get("expect", "tolerance") {
+            None => d.tolerance,
+            Some(v) => v
+                .as_float()
+                .ok_or_else(|| anyhow::anyhow!("harness plan: [expect] tolerance must be a number"))?,
+        };
+        let nonneg = |v: i64, what: &str| -> anyhow::Result<u64> {
+            anyhow::ensure!(v >= 0, "harness plan: {what} must be >= 0, got {v}");
+            Ok(v as u64)
+        };
+        Ok(DrillSpec {
+            name,
+            mode,
+            seed: nonneg(int_of("harness", "seed", d.seed as i64)?, "seed")?,
+            rounds: nonneg(int_of("harness", "rounds", d.rounds as i64)?, "rounds")?.max(1) as usize,
+            shards: nonneg(int_of("harness", "shards", d.shards as i64)?, "shards")?.max(2) as usize,
+            pace_ms: nonneg(int_of("harness", "pace_ms", d.pace_ms as i64)?, "pace_ms")?,
+            checkpoint_every: nonneg(
+                int_of("harness", "checkpoint_every", d.checkpoint_every as i64)?,
+                "checkpoint_every",
+            )?
+            .max(1) as usize,
+            sever_after_bytes: nonneg(
+                int_of("harness", "sever_after_bytes", d.sever_after_bytes as i64)?,
+                "sever_after_bytes",
+            )?,
+            heal_after_ms: nonneg(
+                int_of("harness", "heal_after_ms", d.heal_after_ms as i64)?,
+                "heal_after_ms",
+            )?,
+            reconnect_attempts: nonneg(
+                int_of("harness", "reconnect_attempts", d.reconnect_attempts as i64)?,
+                "reconnect_attempts",
+            )? as usize,
+            tolerance,
+            min_reconnect_attempts: nonneg(
+                int_of("expect", "min_reconnect_attempts", d.min_reconnect_attempts as i64)?,
+                "min_reconnect_attempts",
+            )?,
+        })
+    }
+}
+
+/// A scratch directory per drill, removed on drop (best effort).
+struct ScratchDir(PathBuf);
+
+impl ScratchDir {
+    fn new(tag: &str) -> anyhow::Result<ScratchDir> {
+        let dir = std::env::temp_dir().join(format!(
+            "gencd-harness-{}-{tag}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+        Ok(ScratchDir(dir))
+    }
+
+    fn path(&self, file: &str) -> PathBuf {
+        self.0.join(file)
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// A child that is SIGKILLed if still alive when the guard drops, so a
+/// failed drill never leaks worker or proxy processes.
+struct Reaped(Child);
+
+impl Drop for Reaped {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Poll-wait a child under [`CHILD_DEADLINE`].
+fn wait_deadline(child: &mut Child, what: &str) -> anyhow::Result<ExitStatus> {
+    let deadline = Instant::now() + CHILD_DEADLINE;
+    loop {
+        if let Some(status) = child.try_wait()? {
+            return Ok(status);
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "{what} still running after {}s — killed",
+            CHILD_DEADLINE.as_secs()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Bind an ephemeral port, remember it, release it. Racy in principle;
+/// on a CI loopback the window is negligible, and a collision fails the
+/// drill loudly rather than corrupting it.
+fn free_port() -> anyhow::Result<u16> {
+    Ok(TcpListener::bind("127.0.0.1:0")?.local_addr()?.port())
+}
+
+fn spawn_worker(exe: &Path, opts: &WorkerOpts) -> anyhow::Result<Reaped> {
+    let mut cmd = Command::new(exe);
+    cmd.arg("harness")
+        .arg("--worker")
+        .args(["--out", &opts.out.display().to_string()])
+        .args(["--seed", &opts.seed.to_string()])
+        .args(["--rounds", &opts.rounds.to_string()])
+        .args(["--shards", &opts.shards.to_string()])
+        .args(["--pace-ms", &opts.pace_ms.to_string()])
+        .args(["--listen", &opts.listen])
+        .stdout(Stdio::null());
+    if !opts.peers.is_empty() {
+        cmd.args(["--peers", &opts.peers.join(",")]);
+    }
+    if let Some(ck) = &opts.checkpoint {
+        cmd.args(["--checkpoint", &ck.display().to_string()])
+            .args(["--checkpoint-every", &opts.checkpoint_every.to_string()]);
+    }
+    if let Some(r) = &opts.resume {
+        cmd.args(["--resume", &r.display().to_string()]);
+    }
+    if opts.reconnect_attempts > 0 {
+        cmd.args(["--reconnect-attempts", &opts.reconnect_attempts.to_string()]);
+    }
+    Ok(Reaped(cmd.spawn().map_err(|e| {
+        anyhow::anyhow!("spawning worker {}: {e}", exe.display())
+    })?))
+}
+
+fn spawn_proxy(exe: &Path, opts: &ProxyOpts) -> anyhow::Result<Reaped> {
+    let child = Command::new(exe)
+        .arg("harness")
+        .arg("--proxy")
+        .args(["--listen", &opts.listen])
+        .args(["--target", &opts.target])
+        .args(["--sever-after-bytes", &opts.sever_after_bytes.to_string()])
+        .args(["--heal-after-ms", &opts.heal_after_ms.to_string()])
+        .stdout(Stdio::null())
+        .spawn()
+        .map_err(|e| anyhow::anyhow!("spawning proxy {}: {e}", exe.display()))?;
+    Ok(Reaped(child))
+}
+
+/// Wait until `addr` accepts a TCP connection (proxy readiness).
+fn wait_listening(addr: &str) -> anyhow::Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if TcpStream::connect(addr).is_ok() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "nothing listening on {addr} after 10s"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Spawn a worker, wait it out, load its report.
+fn run_worker_to_report(exe: &Path, opts: &WorkerOpts) -> anyhow::Result<WorkerReport> {
+    let mut child = spawn_worker(exe, opts)?;
+    let status = wait_deadline(&mut child.0, "worker")?;
+    anyhow::ensure!(status.success(), "worker exited with {status}");
+    WorkerReport::load(&opts.out)
+}
+
+/// The kill-9 drill: reference solve, victim killed after its first
+/// checkpoint, resume, bit-parity grade.
+fn drill_kill9(exe: &Path, spec: &DrillSpec) -> anyhow::Result<String> {
+    let scratch = ScratchDir::new(&spec.name)?;
+    let ck = scratch.path("checkpoint.bin");
+
+    let reference = run_worker_to_report(
+        exe,
+        &WorkerOpts {
+            seed: spec.seed,
+            rounds: spec.rounds,
+            shards: spec.shards,
+            out: scratch.path("reference.kv"),
+            ..WorkerOpts::default()
+        },
+    )?;
+    anyhow::ensure!(!reference.failed(), "reference run failed: stop={}", reference.str_field("stop"));
+
+    // victim: paced so SIGKILL lands mid-solve, checkpointing as it goes
+    let victim_opts = WorkerOpts {
+        seed: spec.seed,
+        rounds: spec.rounds,
+        shards: spec.shards,
+        pace_ms: spec.pace_ms.max(1),
+        checkpoint: Some(ck.clone()),
+        checkpoint_every: spec.checkpoint_every,
+        out: scratch.path("victim.kv"),
+        ..WorkerOpts::default()
+    };
+    let mut victim = spawn_worker(exe, &victim_opts)?;
+    let deadline = Instant::now() + CHECKPOINT_WAIT;
+    while !ck.exists() {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "victim wrote no checkpoint within {}s",
+            CHECKPOINT_WAIT.as_secs()
+        );
+        if victim.0.try_wait()?.is_some() {
+            anyhow::bail!("victim exited before the parent could kill it (pace too fast?)");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    victim.0.kill().map_err(|e| anyhow::anyhow!("SIGKILL victim: {e}"))?;
+    let _ = victim.0.wait();
+
+    let resumed = run_worker_to_report(
+        exe,
+        &WorkerOpts {
+            seed: spec.seed,
+            rounds: spec.rounds,
+            shards: spec.shards,
+            checkpoint: Some(ck.clone()),
+            checkpoint_every: spec.checkpoint_every,
+            resume: Some(ck),
+            out: scratch.path("resumed.kv"),
+            ..WorkerOpts::default()
+        },
+    )?;
+    anyhow::ensure!(!resumed.failed(), "resumed run failed: stop={}", resumed.str_field("stop"));
+    anyhow::ensure!(
+        resumed.u64_field("resume_round") > 0,
+        "resumed run reports resume_round=0 — it did not actually resume"
+    );
+    let dw = max_abs_diff(&reference.w, &resumed.w);
+    anyhow::ensure!(
+        dw <= spec.tolerance,
+        "resumed iterate diverged: max|dw|={dw:.3e} > {:.1e}",
+        spec.tolerance
+    );
+    let dobj = (reference.objective() - resumed.objective()).abs();
+    anyhow::ensure!(
+        dobj <= spec.tolerance,
+        "resumed objective diverged: |dobj|={dobj:.3e} > {:.1e}",
+        spec.tolerance
+    );
+    let exact = reference
+        .w
+        .iter()
+        .zip(&resumed.w)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    Ok(format!(
+        "resume_round={} max|dw|={dw:.1e} bit_exact={exact} objective={:.6e}",
+        resumed.u64_field("resume_round"),
+        resumed.objective()
+    ))
+}
+
+/// The drop drills: one shard dials through the severing proxy; the
+/// worker must reconnect under its budget and finish clean.
+fn drill_drop(exe: &Path, spec: &DrillSpec) -> anyhow::Result<String> {
+    let scratch = ScratchDir::new(&spec.name)?;
+    let relay_port = free_port()?;
+    let proxy_port = free_port()?;
+    let relay_addr = format!("127.0.0.1:{relay_port}");
+    let proxy_addr = format!("127.0.0.1:{proxy_port}");
+    let heal_after_ms = match spec.mode {
+        DrillMode::PartitionHeal => spec.heal_after_ms.max(1),
+        _ => 0,
+    };
+    let _proxy = spawn_proxy(
+        exe,
+        &ProxyOpts {
+            listen: proxy_addr.clone(),
+            target: relay_addr.clone(),
+            sever_after_bytes: spec.sever_after_bytes,
+            heal_after_ms,
+        },
+    )?;
+    wait_listening(&proxy_addr)?;
+
+    let report = run_worker_to_report(
+        exe,
+        &WorkerOpts {
+            seed: spec.seed,
+            rounds: spec.rounds,
+            shards: spec.shards,
+            // modest pacing spreads the wire traffic so the sever lands
+            // mid-solve instead of inside the startup burst
+            pace_ms: spec.pace_ms.min(10),
+            listen: relay_addr.clone(),
+            // shard 0 dials through the proxy; everyone else goes direct
+            peers: vec![proxy_addr, relay_addr],
+            reconnect_attempts: spec.reconnect_attempts,
+            out: scratch.path("drop.kv"),
+            ..WorkerOpts::default()
+        },
+    )?;
+    anyhow::ensure!(
+        !report.failed(),
+        "worker degraded instead of reconnecting: stop={} kind={}",
+        report.str_field("stop"),
+        report.str_field("failure_kind")
+    );
+    let attempts = report.u64_field("reconnect_attempts");
+    anyhow::ensure!(
+        attempts >= spec.min_reconnect_attempts,
+        "observed {attempts} reconnect attempts, expected >= {}",
+        spec.min_reconnect_attempts
+    );
+    Ok(format!(
+        "reconnect_attempts={attempts} objective={:.6e} stop={}",
+        report.objective(),
+        report.str_field("stop")
+    ))
+}
+
+/// Run one drill to a verdict (errors become FAIL verdicts, matching
+/// the `run_corpus` contract: a broken drill fails the sweep, it does
+/// not abort it).
+pub fn run_drill(exe: &Path, spec: &DrillSpec) -> Verdict {
+    let graded = match spec.mode {
+        DrillMode::Kill9Resume => drill_kill9(exe, spec),
+        DrillMode::TransientDrop | DrillMode::PartitionHeal => drill_drop(exe, spec),
+    };
+    match graded {
+        Ok(detail) => Verdict { name: spec.name.clone(), pass: true, detail, sim_events: 0 },
+        Err(e) => Verdict {
+            name: spec.name.clone(),
+            pass: false,
+            detail: format!("error: {e}"),
+            sim_events: 0,
+        },
+    }
+}
+
+/// The smoke sweep: the kill-9 and transient-drop drills with default
+/// parameters — the CI front door (`gencd harness --smoke`).
+pub fn run_smoke(exe: &Path) -> Vec<Verdict> {
+    [
+        DrillSpec::defaults("smoke-kill9-resume", DrillMode::Kill9Resume),
+        DrillSpec::defaults("smoke-transient-drop", DrillMode::TransientDrop),
+    ]
+    .iter()
+    .map(|spec| run_drill(exe, spec))
+    .collect()
+}
+
+/// Run every `*.toml` plan under `dir` (sorted), optionally filtered by
+/// file-stem substring.
+pub fn run_plan_dir(exe: &Path, dir: &Path, filter: Option<&str>) -> anyhow::Result<Vec<Verdict>> {
+    let mut files: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading harness plan dir {}: {e}", dir.display()))?
+        .filter_map(|entry| {
+            let path = entry.ok()?.path();
+            (path.extension().and_then(|e| e.to_str()) == Some("toml")).then_some(path)
+        })
+        .collect();
+    files.sort();
+    let mut verdicts = Vec::new();
+    for path in files {
+        let stem = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        if let Some(f) = filter {
+            if !stem.contains(f) {
+                continue;
+            }
+        }
+        match std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))
+            .and_then(|src| DrillSpec::from_toml_str(&src, &stem))
+        {
+            Ok(spec) => verdicts.push(run_drill(exe, &spec)),
+            Err(e) => verdicts.push(Verdict {
+                name: stem,
+                pass: false,
+                detail: format!("error: {e}"),
+                sim_events: 0,
+            }),
+        }
+    }
+    Ok(verdicts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_round_trips_bit_exact() {
+        let w = vec![0.1, -2.5e-9, f64::MIN_POSITIVE, 0.0, -0.0];
+        let bits: Vec<String> = w.iter().map(|v| format!("{:016x}", v.to_bits())).collect();
+        let text = format!(
+            "stop=max-iters\nfailed=0\nfailure_kind=-\nobjective=1.25000000000000000e0\n\
+             nnz=3\nrounds=40\nreconnect_attempts=2\ncheckpoints_written=5\n\
+             resume_round=8\nw_bits={}\n",
+            bits.join(",")
+        );
+        let rep = WorkerReport::parse(&text).unwrap();
+        assert_eq!(rep.str_field("stop"), "max-iters");
+        assert!(!rep.failed());
+        assert_eq!(rep.u64_field("reconnect_attempts"), 2);
+        assert_eq!(rep.u64_field("resume_round"), 8);
+        assert_eq!(rep.w.len(), w.len());
+        for (a, b) in rep.w.iter().zip(&w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!((rep.objective() - 1.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn report_rejects_malformed_lines() {
+        assert!(WorkerReport::parse("no equals sign").is_err());
+        assert!(WorkerReport::parse("w_bits=zz").is_err());
+        // empty w_bits is a valid (failed-early) report
+        let rep = WorkerReport::parse("failed=1\nw_bits=\n").unwrap();
+        assert!(rep.failed());
+        assert!(rep.w.is_empty());
+    }
+
+    #[test]
+    fn max_abs_diff_flags_length_mismatch() {
+        assert_eq!(max_abs_diff(&[1.0], &[1.0, 2.0]), f64::INFINITY);
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn workload_is_deterministic_per_seed() {
+        let (xa, ya) = workload(9);
+        let (xb, yb) = workload(9);
+        let (xc, _) = workload(10);
+        assert_eq!(ya, yb);
+        assert_eq!(xa.n_cols(), xb.n_cols());
+        assert_eq!(xa.nnz(), xb.nnz());
+        // different seed, different support
+        assert!(xa.nnz() != xc.nnz() || ya != workload(10).1);
+    }
+
+    #[test]
+    fn sever_budget_fires_exactly_once() {
+        let s = SeverState::new(100);
+        assert!(!s.consume(40));
+        assert!(!s.consume(40));
+        assert!(s.consume(40)); // crosses the budget
+        assert!(!s.consume(40)); // already fired
+        let off = SeverState::new(0);
+        assert!(!off.consume(1_000_000)); // disarmed
+    }
+
+    #[test]
+    fn drill_plan_parses_defaults_and_overrides() {
+        let spec = DrillSpec::from_toml_str(
+            "name = \"p\"\n[harness]\nmode = \"partition-heal\"\nrounds = 12\n\
+             heal_after_ms = 99\n[expect]\ntolerance = 1e-9\nmin_reconnect_attempts = 3\n",
+            "fb",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "p");
+        assert_eq!(spec.mode, DrillMode::PartitionHeal);
+        assert_eq!(spec.rounds, 12);
+        assert_eq!(spec.heal_after_ms, 99);
+        assert_eq!(spec.tolerance, 1e-9);
+        assert_eq!(spec.min_reconnect_attempts, 3);
+        // defaults fill the rest
+        assert_eq!(spec.shards, 2);
+        assert_eq!(spec.checkpoint_every, 4);
+        // fallback name + default mode
+        let d = DrillSpec::from_toml_str("", "stem").unwrap();
+        assert_eq!(d.name, "stem");
+        assert_eq!(d.mode, DrillMode::Kill9Resume);
+        // bad mode is a typed parse error
+        assert!(DrillSpec::from_toml_str("[harness]\nmode = \"nope\"", "x").is_err());
+    }
+}

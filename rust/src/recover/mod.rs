@@ -1,0 +1,45 @@
+//! # gencd::recover — crash-recoverable distributed solves
+//!
+//! PR 6 ([`crate::sim`]) and PR 7 ([`crate::net`]) made shard failure
+//! *clean*: any dead peer, timeout, or malformed frame lands as a
+//! structured `SolveError` instead of a hang. This layer makes failure
+//! *survivable*, in three rungs:
+//!
+//! 1. **Checkpointing** ([`checkpoint`]) — a versioned, CRC-guarded
+//!    codec for the coordinator's reconciled state (`w`, `z`, completed
+//!    rounds, cadence state, policy-stream seed), written atomically at
+//!    reconciled rounds on a configurable cadence and consumed by
+//!    `SolverBuilder::resume_from`. Every decode of a truncated or
+//!    corrupted file is a typed [`CheckpointError`] — never a panic.
+//!    Under exact wire precision a resumed solve is bit-identical to
+//!    the uninterrupted one (see `shard/engine.rs` §Failure semantics
+//!    for why: policies are feedback-free call streams, the residual is
+//!    restored verbatim, and the reconcile schedule re-aligns to the
+//!    stored gap).
+//! 2. **Reconnect with bounded backoff** ([`backoff`]) — the retry
+//!    policy [`crate::net::tcp::TcpLink`] runs per peer when a socket
+//!    dies mid-round: bounded exponential delays with seeded jitter, a
+//!    closed-form worst case, and the pre-recover degrade path
+//!    (`StopReason::ShardFailed` + `SolveErrorKind::Link`) when
+//!    attempts are exhausted.
+//! 3. **Multi-process harness** ([`harness`]) — the `gencd harness`
+//!    subcommand spawns real shard *processes* over `TcpLink` on
+//!    localhost, injects `kill -9`, transient disconnects, and
+//!    partition-then-heal (through a byte-forwarding proxy process),
+//!    restarts victims with `--resume`, and grades outcomes like the
+//!    loopback corpus — closing the loopback-vs-real-socket fidelity
+//!    gap.
+//!
+//! The module is deliberately dependency-free: checkpoint files reuse
+//! the [`crate::net::codec`] encode/decode discipline, the harness uses
+//! only `std::process`, and all randomness flows through the repo's own
+//! [`Pcg64`](crate::util::rng::Pcg64) streams.
+//!
+//! [`CheckpointError`]: checkpoint::CheckpointError
+
+pub mod backoff;
+pub mod checkpoint;
+pub mod harness;
+
+pub use backoff::ReconnectPolicy;
+pub use checkpoint::{Checkpoint, CheckpointError, CheckpointSpec, ResumeState};

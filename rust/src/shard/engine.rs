@@ -191,6 +191,46 @@
 //!   to its floor (the EWMA conflict-spike tripwire already does this
 //!   for replica conflicts), so decoupled rounds cannot compound a
 //!   divergence trend.
+//! * **Reconnect** ([`crate::recover`]) — a wire link may *heal* a
+//!   transient socket fault before it becomes a [`LinkFault`]. Per
+//!   peer, the TCP transport runs this state machine:
+//!
+//!   ```text
+//!              disconnect-class socket error
+//!   Connected ────────────────────────────────► Degraded(backoff)
+//!       ▲                                          │          │
+//!       │  re-handshake (HELLO carries the         │          │ attempts
+//!       │  parked round) + idempotent replay       │          │ exhausted
+//!       └──────────────────── Rejoined ◄───────────┘          ▼
+//!                                                           Failed
+//!                                                 (poison → ShardFailed)
+//!   ```
+//!
+//!   *Degraded* sleeps the bounded-exponential schedule
+//!   ([`ReconnectPolicy`](crate::recover::backoff::ReconnectPolicy)),
+//!   redials, and re-handshakes with a HELLO that carries the parked
+//!   round, so the relay can replay a lost release or dedupe a re-sent
+//!   arrival; the delta frame carries absolute values, so replaying it
+//!   is a no-op (§Wire format). *Rejoined* resumes the round exactly
+//!   where it parked. *Failed* is precisely the pre-recover contract:
+//!   [`LinkFault::Poisoned`] → `StopReason::ShardFailed` +
+//!   `SolveErrorKind::Link` — bounded time, never a hang.
+//! * **Checkpoint / resume** ([`crate::recover::checkpoint`]) — with
+//!   [`ShardedConfig::checkpoint`] set, the shard-0 coordinator
+//!   serializes the reconciled iterate (`w`, `z`, completed rounds,
+//!   cadence state, policy-stream seed) through the CRC-guarded
+//!   checkpoint codec every `every_rounds` reconciles and at the
+//!   stopping round, via write-to-temp + atomic rename — a crash never
+//!   leaves a torn file where a resume would read it.
+//!   [`ShardedConfig::resume`] seeds a fresh solve from such a
+//!   checkpoint: replicas start from the checkpointed `w`/`z` (no
+//!   warm-start matvec — the reconciled residual is restored verbatim),
+//!   every shard's selection policy is fast-forwarded by the completed
+//!   round count (policies are feedback-free streams — state is a pure
+//!   function of the call count), and the reconcile schedule re-aligns
+//!   to the stored gap. Under exact wire precision the resumed
+//!   trajectory is bit-identical to the uninterrupted solve (pinned by
+//!   `rust/tests/recover.rs`).
 //!
 //! # §Wire format
 //!
@@ -261,10 +301,12 @@ use crate::coordinator::observer::{IterationInfo, Observer};
 use crate::coordinator::problem::{Problem, SharedState};
 use crate::coordinator::select::Select;
 use crate::event::{
-    self, emit, CodecError, EventSink, IterationCompleted, Meta, MetricsAggregator,
-    ReconcileRound, ShardFailed, WireFrameReceived, WireFrameSent,
+    self, emit, CheckpointWritten, CodecError, EventSink, IterationCompleted, Meta,
+    MetricsAggregator, PeerReconnected, ReconcileRound, ResumeLoaded, ShardFailed,
+    WireFrameReceived, WireFrameSent,
 };
 use crate::loss;
+use crate::recover::checkpoint::{Checkpoint, CheckpointSpec, ResumeState};
 use crate::util::atomic::{SyncCell, SyncF64Vec};
 use crate::util::par::{
     aligned_chunk, CachePadded, DirtyChunks, SpinBarrier, WaitOutcome, DEFAULT_SPIN,
@@ -453,6 +495,17 @@ pub trait ReconcileLink: Sync {
     fn wire_precision(&self) -> Option<&'static str> {
         None
     }
+    /// Cumulative `(reconnects, attempts)` this link has performed for
+    /// peer `s` — successful re-handshakes and redial attempts (module
+    /// docs §Failure semantics, *Reconnect*). The coordinator diffs
+    /// these per reconciled round to emit
+    /// [`PeerReconnected`](crate::event::PeerReconnected) events.
+    /// In-memory links and transports without reconnection keep the
+    /// all-zero default.
+    fn reconnect_stats(&self, s: usize) -> (u64, u64) {
+        let _ = s;
+        (0, 0)
+    }
     /// Mark the link dead and unblock every current and future waiter
     /// (they fail with [`LinkFault::Poisoned`]). Called from the panic
     /// drop guard and by shards that observed a fault, so one dead pool
@@ -610,6 +663,20 @@ pub struct ShardedConfig {
     /// [`MetricsSnapshot::staleness_forced_reconciles`]. 0 (default)
     /// leaves the cadence bounded only by `reconcile_max_rounds`.
     pub max_staleness_rounds: usize,
+    /// Checkpoint the reconciled iterate (module docs §Failure
+    /// semantics, *Checkpoint / resume*): the shard-0 coordinator
+    /// writes the CRC-guarded [`Checkpoint`] file on the spec's
+    /// `every_rounds` cadence and at the stopping round, with atomic
+    /// rename. `None` (default) disables checkpointing entirely.
+    pub checkpoint: Option<CheckpointSpec>,
+    /// Resume from a previously written checkpoint: replicas start from
+    /// the checkpointed `w`/`z`, selection policies fast-forward by the
+    /// completed round count, and the reconcile schedule re-aligns to
+    /// the stored gap. The caller (the [`Solver`](crate::solver)
+    /// builder) is responsible for validating the checkpoint against
+    /// the problem before handing it over. `None` (default): fresh
+    /// solve.
+    pub resume: Option<ResumeState>,
 }
 
 impl Default for ShardedConfig {
@@ -634,6 +701,8 @@ impl Default for ShardedConfig {
             delta_reconcile: true,
             barrier_timeout_secs: 30.0,
             max_staleness_rounds: 0,
+            checkpoint: None,
+            resume: None,
         }
     }
 }
@@ -740,6 +809,23 @@ struct Coordinator<'a, 'o> {
     r_min: usize,
     r_max: usize,
     div_ewma: f64,
+    /// Completed global rounds carried in from a resumed checkpoint
+    /// (0 on fresh solves). Local round r of this process is global
+    /// round `r + round_base` — the round every log record, event, stop
+    /// check, and checkpoint speaks in.
+    round_base: usize,
+    /// Cumulative update count at the resume point (0 on fresh solves),
+    /// added to the pools' published counts so resumed history lines up
+    /// with the uninterrupted run's.
+    updates_base: u64,
+    /// Reconciled rounds planned by *this process* — the checkpoint
+    /// cadence counter.
+    reconciles_done: u64,
+    /// Per-peer reconnect counters as of the previous reconciled round
+    /// ([`ReconcileLink::reconnect_stats`]), diffed to emit each heal
+    /// exactly once.
+    last_reconnects: Vec<u64>,
+    last_attempts: Vec<u64>,
     /// Caller-supplied observer, invoked at every reconciled round on
     /// the reconciled global iterate.
     observer: Option<&'o mut (dyn Observer + 'o)>,
@@ -765,17 +851,25 @@ impl Coordinator<'_, '_> {
         round: usize,
     ) -> (Option<StopReason>, usize) {
         let elapsed = self.timer.elapsed_secs();
+        // the global round this local round corresponds to — resumed
+        // solves carry the completed rounds of the interrupted run in
+        // round_base, so logs/events/stops/checkpoints line up with the
+        // uninterrupted trajectory
+        let ground = round + self.round_base;
         let mut stop = None;
         let should_log = match self.cfg.log_every {
             0 => elapsed - self.last_log_at >= 0.05 || round == 0,
-            _ => round >= self.next_log_round,
+            _ => ground >= self.next_log_round,
         };
         if should_log && self.cfg.log_every > 0 {
-            self.next_log_round = round + self.cfg.log_every;
+            self.next_log_round = ground + self.cfg.log_every;
         }
         // the observer contract needs the global iterate at every
-        // reconciled round; the log only at its cadence
-        let gather = should_log || self.observer.is_some();
+        // reconciled round; the log only at its cadence. Checkpointing
+        // gathers unconditionally so the stopping-round checkpoint
+        // always has the iterate in hand.
+        let gather =
+            should_log || self.observer.is_some() || self.cfg.checkpoint.is_some();
         let mut z_snap: Option<Vec<f64>> = None;
         let mut updates = 0u64;
         if gather {
@@ -786,7 +880,7 @@ impl Coordinator<'_, '_> {
                 }
             }
             z_snap = Some(canonical_z(sh).snapshot());
-            updates = sh.updates.iter().map(|u| u.get()).sum();
+            updates = self.updates_base + sh.updates.iter().map(|u| u.get()).sum::<u64>();
         }
         let mut objective = None;
         let mut nnz_now = None;
@@ -813,7 +907,7 @@ impl Coordinator<'_, '_> {
             }
             self.history.push(Record {
                 elapsed_secs: elapsed,
-                iter: round,
+                iter: ground,
                 updates,
                 objective: obj,
                 nnz: nnz_now.unwrap(),
@@ -823,12 +917,12 @@ impl Coordinator<'_, '_> {
                 emit!(
                     events,
                     Meta {
-                        timestamp_ticks: round as u64,
+                        timestamp_ticks: ground as u64,
                         shard: 0,
                         thread: 0,
                     },
                     IterationCompleted {
-                        iter: round as u64,
+                        iter: ground as u64,
                         updates,
                         // per-pool selection sizes are not published
                         // cross-shard (same convention as the observer)
@@ -907,7 +1001,7 @@ impl Coordinator<'_, '_> {
             st.w.copy_from(&self.scratch_w);
             st.z.copy_from(z_snap.as_deref().expect("gathered above"));
             let info = IterationInfo {
-                iter: round,
+                iter: ground,
                 elapsed_secs: elapsed,
                 updates,
                 // per-pool selection sizes are not published
@@ -922,7 +1016,7 @@ impl Coordinator<'_, '_> {
             }
         }
         if stop.is_none() {
-            if round >= self.cfg.max_rounds {
+            if ground >= self.cfg.max_rounds {
                 stop = Some(StopReason::MaxIters);
             } else if elapsed >= self.cfg.max_seconds {
                 stop = Some(StopReason::MaxSeconds);
@@ -931,20 +1025,63 @@ impl Coordinator<'_, '_> {
         let gap = if stop.is_some() {
             1
         } else {
-            self.next_reconcile_gap(sh, round)
+            self.next_reconcile_gap(sh, ground)
         };
+        // checkpoint (module docs §Failure semantics): on the cadence
+        // and at the stopping round, after the gap is known — the file
+        // stores the *next* gap so a resume re-aligns the reconcile
+        // schedule. A write failure is logged into the void (the solve
+        // is healthier than the disk; keep going).
+        if let Some(spec) = self.cfg.checkpoint.as_ref() {
+            self.reconciles_done += 1;
+            let due = spec.every_rounds > 0
+                && self.reconciles_done % spec.every_rounds as u64 == 0;
+            if due || stop.is_some() {
+                let ckpt = Checkpoint {
+                    // completed global rounds: this one counts
+                    round: (ground + 1) as u64,
+                    next_gap: gap as u64,
+                    seed: spec.seed,
+                    shards: self.cols.len() as u32,
+                    lambda: self.global.lam,
+                    updates,
+                    r_cur: self.r_cur as u64,
+                    div_ewma: self.div_ewma,
+                    tol_hits: self.tol_hits,
+                    last_objective: self.history.last().map(|r| r.objective),
+                    w: self.scratch_w.clone(),
+                    z: z_snap.clone().expect("checkpointing forces the gather"),
+                };
+                if let Ok(bytes) = ckpt.write_atomic(&spec.path) {
+                    if let Some(events) = self.events.as_deref_mut() {
+                        emit!(
+                            events,
+                            Meta {
+                                timestamp_ticks: ground as u64,
+                                shard: 0,
+                                thread: 0,
+                            },
+                            CheckpointWritten {
+                                round: (ground + 1) as u64,
+                                bytes,
+                            }
+                        );
+                    }
+                }
+            }
+        }
         if let Some(events) = self.events.as_deref_mut() {
             let folded: u64 = sh.dirty_folded.iter().map(|c| c.get()).sum();
             let seen: u64 = sh.chunks_seen.iter().map(|c| c.get()).sum();
             emit!(
                 events,
                 Meta {
-                    timestamp_ticks: round as u64,
+                    timestamp_ticks: ground as u64,
                     shard: 0,
                     thread: 0,
                 },
                 ReconcileRound {
-                    round: round as u64,
+                    round: ground as u64,
                     // cumulative, same ratio MetricsSnapshot reports;
                     // 1.0 = dense fold (no dirty maps)
                     dirty_frac: if seen > 0 {
@@ -1203,6 +1340,31 @@ impl ShardObserver<'_, '_> {
         }
         if let Some(c) = self.coordinator.as_mut() {
             let (stop, gap) = c.plan_round(sh, info.iter);
+            // reconnect accounting: diff the link's cumulative per-peer
+            // counters so each heal is emitted exactly once, at the
+            // first reconciled round after it happened
+            for s in 0..self.replicas.len() {
+                let (reconnects, attempts) = self.link.reconnect_stats(s);
+                let new_reconnects = reconnects.saturating_sub(c.last_reconnects[s]);
+                let new_attempts = attempts.saturating_sub(c.last_attempts[s]);
+                if new_reconnects > 0 {
+                    if let Some(events) = c.events.as_deref_mut() {
+                        emit!(
+                            events,
+                            Meta {
+                                timestamp_ticks: (info.iter + c.round_base) as u64,
+                                shard: s as u32,
+                                thread: 0,
+                            },
+                            PeerReconnected {
+                                attempts: new_attempts,
+                            }
+                        );
+                    }
+                }
+                c.last_reconnects[s] = reconnects;
+                c.last_attempts[s] = attempts;
+            }
             // wire hook: route the decision through the transport — the
             // gap/stop every pool acts on are the decoded bytes
             let mut decision = DecisionPayload {
@@ -1347,12 +1509,63 @@ pub fn solve_sharded_linked(
     let n = global.n_samples();
     let k = global.n_features();
 
+    // resume bookkeeping (module docs §Failure semantics, *Checkpoint /
+    // resume*): validate the restored iterate against the problem, and
+    // short-circuit a checkpoint that already satisfies the round
+    // budget — a job killed at its final checkpoint must not run extra
+    // rounds on restart
+    if let Some(res) = cfg.resume.as_ref() {
+        assert_eq!(
+            res.w.len(),
+            k,
+            "resume checkpoint has {} weights for a {k}-feature problem",
+            res.w.len()
+        );
+        assert_eq!(
+            res.z.len(),
+            n,
+            "resume checkpoint has {} residuals for {n} samples",
+            res.z.len()
+        );
+        if let Some(sink) = events.as_deref_mut() {
+            emit!(
+                sink,
+                Meta {
+                    timestamp_ticks: res.round as u64,
+                    shard: 0,
+                    thread: 0,
+                },
+                ResumeLoaded {
+                    round: res.round as u64,
+                    n: k as u64,
+                }
+            );
+        }
+        if res.round >= cfg.max_rounds {
+            let objective = global.objective(&res.w, &res.z);
+            return SolveOutput {
+                nnz: loss::nnz(&res.w),
+                w: res.w.clone(),
+                objective,
+                history: History::default(),
+                metrics: MetricsSnapshot {
+                    iterations: res.round as u64,
+                    shards: s_count as u64,
+                    ..Default::default()
+                },
+                stop: StopReason::MaxIters,
+                elapsed_secs: 0.0,
+                failure: None,
+            };
+        }
+    }
+
     // split the specs: column maps stay with the coordinator, the
     // (problem, policies) move into the shard threads
     let mut owned = vec![false; k];
     let mut cols_all = Vec::with_capacity(s_count);
     let mut runs = Vec::with_capacity(s_count);
-    for spec in specs {
+    for mut spec in specs {
         assert_eq!(
             spec.problem.n_features(),
             spec.cols.len(),
@@ -1369,6 +1582,17 @@ pub fn solve_sharded_linked(
             );
             owned[g] = true;
         }
+        // resume: fast-forward the selection stream. Policies are
+        // feedback-free call streams (state is a pure function of the
+        // call count, one call per pool-leader round), so replaying the
+        // completed rounds reproduces the interrupted run's remaining
+        // stream exactly.
+        if let Some(res) = cfg.resume.as_ref() {
+            let mut scratch = Vec::new();
+            for _ in 0..res.round {
+                spec.select.select(&mut scratch);
+            }
+        }
         cols_all.push(spec.cols);
         runs.push((
             spec.problem,
@@ -1380,11 +1604,17 @@ pub fn solve_sharded_linked(
     }
 
     // warm-start residual, computed once; each shard copies it into its
-    // own replica on its own (pinned) thread
-    let z0: Option<Vec<f64>> = warm_start.map(|w0| {
-        assert_eq!(w0.len(), k, "warm start has {} weights for {k}", w0.len());
-        global.x.matvec(w0)
-    });
+    // own replica on its own (pinned) thread. Resumed solves restore
+    // the reconciled residual verbatim — recomputing matvec(w) would
+    // bitwise-diverge from the folded z the checkpoint captured.
+    let warm_w: Option<&[f64]> = cfg.resume.as_ref().map(|r| r.w.as_slice()).or(warm_start);
+    let z0: Option<Vec<f64>> = match cfg.resume.as_ref() {
+        Some(res) => Some(res.z.clone()),
+        None => warm_start.map(|w0| {
+            assert_eq!(w0.len(), k, "warm start has {} weights for {k}", w0.len());
+            global.x.matvec(w0)
+        }),
+    };
 
     // NUMA plan: shard s -> topology node index (s mod nodes), skipped
     // entirely when pinning is off or the host has one node (no-op)
@@ -1501,7 +1731,7 @@ pub fn solve_sharded_linked(
                 let cols = &cols_all[s];
                 let st = SharedState::new(n, cols.len());
                 if let Some(z0) = z0 {
-                    let w0 = warm_start.expect("z0 implies warm start");
+                    let w0 = warm_w.expect("z0 implies warm start");
                     for (local, &g) in cols.iter().enumerate() {
                         st.w.set(local, w0[g as usize]);
                     }
@@ -1520,24 +1750,46 @@ pub fn solve_sharded_linked(
                 }
                 let replicas: Vec<&SharedState> =
                     (0..s_count).map(|i| shared.state(i)).collect();
-                let coordinator = (s == 0).then(|| Coordinator {
-                    global,
-                    cols: cols_all,
-                    owned,
-                    timer,
-                    cfg,
-                    history: History::default(),
-                    scratch_w: vec![0.0; k],
-                    last_log_at: -1.0,
-                    next_log_round: 0,
-                    tol_hits: 0,
-                    r_cur: r_min,
-                    r_min,
-                    r_max,
-                    div_ewma: 0.0,
-                    observer: coordinator_obs,
-                    obs_state: None,
-                    events: coordinator_events,
+                let coordinator = (s == 0).then(|| {
+                    let res = cfg.resume.as_ref();
+                    let mut history = History::default();
+                    if let Some(res) = res {
+                        if let Some(obj) = res.last_objective {
+                            // seed the tripwire / tolerance baselines
+                            // with the interrupted run's last log record
+                            history.push(Record {
+                                elapsed_secs: 0.0,
+                                iter: res.round.saturating_sub(1),
+                                updates: res.updates,
+                                objective: obj,
+                                nnz: loss::nnz(&res.w),
+                            });
+                        }
+                    }
+                    Coordinator {
+                        global,
+                        cols: cols_all,
+                        owned,
+                        timer,
+                        cfg,
+                        history,
+                        scratch_w: vec![0.0; k],
+                        last_log_at: -1.0,
+                        next_log_round: 0,
+                        tol_hits: res.map_or(0, |r| r.tol_hits),
+                        r_cur: res.map_or(r_min, |r| r.r_cur.clamp(r_min, r_max)),
+                        r_min,
+                        r_max,
+                        div_ewma: res.map_or(0.0, |r| r.div_ewma),
+                        round_base: res.map_or(0, |r| r.round),
+                        updates_base: res.map_or(0, |r| r.updates),
+                        reconciles_done: 0,
+                        last_reconnects: vec![0; s_count],
+                        last_attempts: vec![0; s_count],
+                        observer: coordinator_obs,
+                        obs_state: None,
+                        events: coordinator_events,
+                    }
                 });
                 let mut obs = ShardObserver {
                     s,
@@ -1545,7 +1797,13 @@ pub fn solve_sharded_linked(
                     link,
                     replicas,
                     coordinator,
-                    next_reconcile_at: 0,
+                    // resumed solves re-align to the checkpoint's stored
+                    // gap: the next reconcile falls next_gap rounds after
+                    // the checkpointed one, i.e. local round next_gap - 1
+                    next_reconcile_at: cfg
+                        .resume
+                        .as_ref()
+                        .map_or(0, |r| r.next_gap.saturating_sub(1)),
                 };
                 let st = shared.state(s);
                 let out = engine::solve_from(
@@ -1650,7 +1908,10 @@ pub fn solve_sharded_linked(
     // wall-clock share, iterations = completed rounds (identical on
     // every pool by lockstep)
     let mut agg = MetricsSnapshot {
-        iterations: outs.first().map(|o| o.metrics.iterations).unwrap_or(0),
+        // resumed solves report global rounds: the pools' local count
+        // plus the rounds the interrupted run already completed
+        iterations: outs.first().map(|o| o.metrics.iterations).unwrap_or(0)
+            + cfg.resume.as_ref().map_or(0, |r| r.round as u64),
         shards: s_count as u64,
         reconcile_secs: shared
             .reconcile_nanos

@@ -26,6 +26,12 @@
 //! reconcile_every = 1             # (1)
 //! reconcile_max_rounds = 0        # (0 = fixed cadence)
 //! max_staleness_rounds = 0        # (0 = unbounded)
+//! resume_at_round = 0             # (0 = off) checkpoint/resume drill:
+//!                                 # [`run_scenario_loopback`] solves to
+//!                                 # this round with a checkpoint, then
+//!                                 # resumes to `rounds`; the resumed
+//!                                 # objective must land within 1e-12 of
+//!                                 # the uninterrupted reference
 //!
 //! [faults]                        # (all off)
 //! delay_ticks_max = 8
@@ -42,6 +48,10 @@
 //! net_duplicate_round = -1        # -1 = none; delivers twice
 //! net_disconnect_shard = -1       # -1 = none; with net_disconnect_round
 //! net_disconnect_round = 0
+//! net_heal_after_attempts = 0     # 0 = the drop is permanent; N = it
+//!                                 # heals after N redial attempts
+//! net_reconnect_attempts = 0      # loopback redial budget granted to a
+//!                                 # dropped party (0 = no reconnection)
 //!
 //! [expect]
 //! stop = "max-iters"              # StopReason display string
@@ -67,6 +77,7 @@ use crate::coordinator::problem::Problem;
 use crate::data::synth;
 use crate::loss::Logistic;
 use crate::net::{LoopbackLink, NetFaultPlan, WirePrecision};
+use crate::recover::{Checkpoint, CheckpointSpec, ResumeState};
 use crate::shard::engine::{solve_sharded_linked, BarrierLink, ShardSpec};
 use crate::shard::{ShardStrategy, ShardedConfig};
 use crate::sim::faults::{FaultPlan, FaultSpec};
@@ -142,6 +153,12 @@ pub struct Scenario {
     /// over the loopback wire ([`run_scenario_loopback`]); the barrier
     /// path has no frames to corrupt.
     pub net: NetFaultPlan,
+    /// Redial budget the loopback link grants a disconnected party
+    /// (`net_reconnect_attempts`; 0 = no reconnection).
+    pub net_reconnect_attempts: u32,
+    /// When > 0, [`run_scenario_loopback`] runs the checkpoint/resume
+    /// drill (schema docs, `resume_at_round`).
+    pub resume_at_round: usize,
     pub expect: Expectation,
 }
 
@@ -224,6 +241,11 @@ impl Scenario {
         let reconcile_every = usize_knob(&doc, "solve", "reconcile_every", 1)?.max(1);
         let reconcile_max_rounds = usize_knob(&doc, "solve", "reconcile_max_rounds", 0)?;
         let max_staleness_rounds = usize_knob(&doc, "solve", "max_staleness_rounds", 0)?;
+        let resume_at_round = usize_knob(&doc, "solve", "resume_at_round", 0)?;
+        anyhow::ensure!(
+            resume_at_round == 0 || resume_at_round < rounds,
+            "scenario {name}: resume_at_round ({resume_at_round}) must be < rounds ({rounds})"
+        );
 
         let faults = FaultSpec {
             delay_ticks_max: usize_knob(&doc, "faults", "delay_ticks_max", 0)? as u64,
@@ -247,7 +269,10 @@ impl Scenario {
                 Some(s) => Some((s, usize_knob(&doc, "faults", "net_disconnect_round", 0)?)),
                 None => None,
             },
+            heal_after_attempts: usize_knob(&doc, "faults", "net_heal_after_attempts", 0)? as u32,
         };
+        let net_reconnect_attempts =
+            usize_knob(&doc, "faults", "net_reconnect_attempts", 0)? as u32;
 
         let expect = Expectation {
             stop: opt_str(&doc, "expect", "stop", "")?.to_string(),
@@ -273,6 +298,8 @@ impl Scenario {
             max_staleness_rounds,
             faults,
             net,
+            net_reconnect_attempts,
+            resume_at_round,
             expect,
         })
     }
@@ -493,15 +520,89 @@ pub fn run_scenario_logged(sc: &Scenario) -> anyhow::Result<(ScenarioRun, Vec<St
 /// as [`run_scenario`]'s — a wire fault must land as a clean
 /// `shard-failed`, never a hang.
 pub fn run_scenario_loopback(sc: &Scenario) -> anyhow::Result<ScenarioRun> {
-    let (specs, cfg, global) = build_solve(sc)?;
+    if sc.resume_at_round > 0 {
+        return run_resume_drill(sc);
+    }
+    let (output, event_log) = loopback_solve(sc, None)?;
+    let verdict = grade(sc, &output);
+    Ok(ScenarioRun { verdict, output: Some(output), event_log })
+}
+
+/// One loopback solve of `sc`'s workload. `reshape` edits the sharded
+/// config after the scenario defaults are applied (the resume drill's
+/// hook for the cut/continue phases).
+fn loopback_solve(
+    sc: &Scenario,
+    reshape: Option<&dyn Fn(&mut ShardedConfig)>,
+) -> anyhow::Result<(SolveOutput, String)> {
+    let (specs, mut cfg, global) = build_solve(sc)?;
+    if let Some(f) = reshape {
+        f(&mut cfg);
+    }
     let active = specs.len().max(1);
     let plan = FaultPlan::generate(&sc.faults, active, sc.rounds, sc.seed);
     let sim = SimLink::new(plan, cfg.barrier_spin, std::time::Duration::from_secs(20));
-    let link = LoopbackLink::over(sim, active, WirePrecision::Exact).with_faults(sc.net);
+    let link = LoopbackLink::over(sim, active, WirePrecision::Exact)
+        .with_faults(sc.net)
+        .with_reconnect_budget(sc.net_reconnect_attempts);
     let mut output = solve_sharded_linked(&global, specs, None, &cfg, None, None, &link);
     output.metrics.sim_events = link.inner().event_count() as u64;
     let event_log = render_events(&link.inner().events());
-    let verdict = grade(sc, &output);
+    Ok((output, event_log))
+}
+
+/// The checkpoint/resume drill behind `resume_at_round` (schema docs):
+/// three loopback solves of the same seed-regenerated workload —
+///
+/// 1. **reference**: uninterrupted, to the scenario's round cap;
+/// 2. **interrupted**: stopped at `resume_at_round`, checkpointing every
+///    reconciled round to a scratch file;
+/// 3. **resumed**: a fresh solve continuing from the written checkpoint
+///    to the full cap.
+///
+/// The resumed run is graded against `[expect]` like any scenario, and
+/// additionally its objective must land within 1e-12 of the reference —
+/// the crash-window equivalent of the fault-transparency contract.
+fn run_resume_drill(sc: &Scenario) -> anyhow::Result<ScenarioRun> {
+    let (reference, _) = loopback_solve(sc, None)?;
+    let ckpt_path = std::env::temp_dir().join(format!(
+        "gencd-scenario-{}-{}.ckpt",
+        std::process::id(),
+        sc.name
+    ));
+    let cut = sc.resume_at_round;
+    let spec = CheckpointSpec { path: ckpt_path.clone(), every_rounds: 1, seed: sc.seed };
+    let interrupted = loopback_solve(
+        sc,
+        Some(&|cfg: &mut ShardedConfig| {
+            cfg.max_rounds = cut;
+            cfg.checkpoint = Some(spec.clone());
+        }),
+    );
+    let resumed = interrupted.and_then(|_| {
+        let ckpt = Checkpoint::load(&ckpt_path)
+            .map_err(|e| anyhow::anyhow!("loading the drill checkpoint: {e}"))?;
+        let resume = ResumeState::from_checkpoint(ckpt);
+        loopback_solve(
+            sc,
+            Some(&move |cfg: &mut ShardedConfig| {
+                cfg.resume = Some(resume.clone());
+            }),
+        )
+    });
+    let _ = std::fs::remove_file(&ckpt_path);
+    let (output, event_log) = resumed?;
+    let mut verdict = grade(sc, &output);
+    let gap = (output.objective - reference.objective).abs();
+    if verdict.pass && !(gap <= 1e-12) {
+        verdict.pass = false;
+        verdict.detail = format!(
+            "resumed objective {:.17e} vs reference {:.17e}: gap {gap:.3e} > 1e-12",
+            output.objective, reference.objective
+        );
+    } else if verdict.pass {
+        verdict.detail.push_str(&format!(" resume_gap={gap:.1e}"));
+    }
     Ok(ScenarioRun { verdict, output: Some(output), event_log })
 }
 
@@ -661,6 +762,55 @@ mod tests {
             wire.output.unwrap().objective.to_bits(),
             base.output.unwrap().objective.to_bits()
         );
+    }
+
+    #[test]
+    fn heal_and_resume_keys_parse() {
+        let src = format!(
+            "{BASE}\n[faults]\nnet_disconnect_shard = 1\nnet_disconnect_round = 4\n\
+             net_heal_after_attempts = 2\nnet_reconnect_attempts = 5\n"
+        );
+        let sc = Scenario::from_toml_str(&src, "x").unwrap();
+        assert_eq!(sc.net.disconnect_at, Some((1, 4)));
+        assert_eq!(sc.net.heal_after_attempts, 2);
+        assert_eq!(sc.net_reconnect_attempts, 5);
+        // resume_at_round must sit inside the round budget
+        let bad = format!("{BASE}\n[solve]\nresume_at_round = 12\n");
+        assert!(Scenario::from_toml_str(&bad, "x").is_err());
+    }
+
+    #[test]
+    fn healed_disconnect_scenario_passes_and_stays_transparent() {
+        // the drop heals within budget: the solve finishes cleanly and
+        // the delivered-after-heal frame (absolute values) keeps it
+        // bit-identical to the fault-free wire run
+        let src = format!(
+            "{BASE}\n[faults]\nnet_disconnect_shard = 1\nnet_disconnect_round = 4\n\
+             net_heal_after_attempts = 2\nnet_reconnect_attempts = 4\n\
+             [expect]\nstop = \"max-iters\"\n"
+        );
+        let sc = Scenario::from_toml_str(&src, "x").unwrap();
+        let run = run_scenario_loopback(&sc).unwrap();
+        assert!(run.verdict.pass, "detail: {}", run.verdict.detail);
+        let clean = Scenario::from_toml_str(BASE, "x").unwrap();
+        let base = run_scenario_loopback(&clean).unwrap();
+        assert_eq!(
+            run.output.unwrap().objective.to_bits(),
+            base.output.unwrap().objective.to_bits()
+        );
+    }
+
+    #[test]
+    fn resume_drill_matches_reference_objective() {
+        let src = format!(
+            "{BASE}\n[solve]\nrounds = 12\nresume_at_round = 5\n\
+             [expect]\nstop = \"max-iters\"\n"
+        );
+        let sc = Scenario::from_toml_str(&src, "x").unwrap();
+        assert_eq!(sc.resume_at_round, 5);
+        let run = run_scenario_loopback(&sc).unwrap();
+        assert!(run.verdict.pass, "detail: {}", run.verdict.detail);
+        assert!(run.verdict.detail.contains("resume_gap"));
     }
 
     #[test]

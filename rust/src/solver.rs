@@ -83,6 +83,7 @@ use crate::event::{EventSink, SolveInfo, Subscribed, Subscriber};
 use crate::kernel::{self, KernelChoice};
 use crate::loss::{Logistic, Loss};
 use crate::net::{LoopbackLink, TcpLink, Transport};
+use crate::recover::{Checkpoint, CheckpointSpec, ReconnectPolicy, ResumeState};
 use crate::shard::engine::{
     solve_sharded_linked, solve_sharded_with, ShardSpec, ShardedConfig,
 };
@@ -127,6 +128,14 @@ struct ShardedSetup {
     max_staleness_rounds: usize,
     barrier_timeout_secs: f64,
     transport: Transport,
+    /// Coordinator checkpoint cadence + path ([`crate::recover`]).
+    checkpoint: Option<CheckpointSpec>,
+    /// Validated resume state loaded by `resume_from` at build time.
+    resume: Option<ResumeState>,
+    /// Per-peer TCP redial budget (0 = reconnection disabled).
+    reconnect_max_attempts: u32,
+    /// Builder seed, reused for deterministic reconnect jitter.
+    seed: u64,
 }
 
 impl Solver {
@@ -279,6 +288,8 @@ impl Solver {
             max_staleness_rounds: setup.max_staleness_rounds,
             barrier_timeout_secs: setup.barrier_timeout_secs,
             delta_reconcile: true,
+            checkpoint: setup.checkpoint.clone(),
+            resume: setup.resume.clone(),
         };
         let timeout = (scfg.barrier_timeout_secs > 0.0)
             .then(|| std::time::Duration::from_secs_f64(scfg.barrier_timeout_secs));
@@ -322,12 +333,17 @@ impl Solver {
                 ref peers,
                 precision,
             } => {
-                let link = match TcpLink::connect(
+                let link = match TcpLink::connect_with(
                     setup.specs.len(),
                     listen,
                     peers,
                     timeout,
                     precision,
+                    ReconnectPolicy {
+                        max_attempts: setup.reconnect_max_attempts,
+                        seed: setup.seed,
+                        ..Default::default()
+                    },
                 ) {
                     Ok(link) => link,
                     // Connect failure is a link failure, not a panic:
@@ -415,6 +431,10 @@ pub struct SolverBuilder {
     kkt_adaptive: bool,
     fast_kernels: bool,
     kernel: KernelChoice,
+    checkpoint_path: Option<std::path::PathBuf>,
+    checkpoint_every_rounds: usize,
+    resume_from: Option<std::path::PathBuf>,
+    reconnect_max_attempts: usize,
 }
 
 impl Default for SolverBuilder {
@@ -458,6 +478,10 @@ impl Default for SolverBuilder {
             kkt_adaptive: ecfg.kkt_adaptive,
             fast_kernels: ecfg.fast_kernels,
             kernel: ecfg.kernel,
+            checkpoint_path: None,
+            checkpoint_every_rounds: 16,
+            resume_from: None,
+            reconnect_max_attempts: 0,
         }
     }
 }
@@ -790,6 +814,48 @@ impl SolverBuilder {
         self
     }
 
+    /// Write a CRC-guarded recovery checkpoint to this path
+    /// ([`crate::recover::checkpoint`]; sharded solves only — the
+    /// shard-0 coordinator writes it at reconciled rounds on the
+    /// [`checkpoint_every_rounds`](Self::checkpoint_every_rounds)
+    /// cadence and at the stopping round, with atomic rename).
+    pub fn checkpoint_path(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.checkpoint_path = Some(path.into());
+        self
+    }
+
+    /// Reconciled rounds between checkpoint writes (default 16; 0
+    /// writes only the final, stopping-round checkpoint). Inert without
+    /// [`checkpoint_path`](Self::checkpoint_path).
+    pub fn checkpoint_every_rounds(mut self, rounds: usize) -> Self {
+        self.checkpoint_every_rounds = rounds;
+        self
+    }
+
+    /// Resume a sharded solve from a checkpoint written by
+    /// [`checkpoint_path`](Self::checkpoint_path). `build()` loads and
+    /// validates the file against the problem (dimensions, shard count,
+    /// seed, lambda) — under exact wire precision the resumed solve
+    /// continues bit-exactly where the checkpoint was taken
+    /// ([`crate::shard::engine`] §Failure semantics).
+    pub fn resume_from(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Per-peer TCP redial budget for mid-solve disconnects (default 0
+    /// = reconnection disabled, the pre-recover behavior: the first
+    /// socket error degrades the solve). Attempts follow the bounded
+    /// exponential backoff of
+    /// [`ReconnectPolicy`](crate::recover::ReconnectPolicy), seeded
+    /// from [`seed`](Self::seed); exhausting them degrades to
+    /// `StopReason::ShardFailed` + `SolveErrorKind::Link` — never a
+    /// hang. Only meaningful with [`Transport::Tcp`].
+    pub fn reconnect_max_attempts(mut self, attempts: usize) -> Self {
+        self.reconnect_max_attempts = attempts;
+        self
+    }
+
     /// Validate the full combination and assemble a runnable [`Solver`].
     pub fn build(self) -> anyhow::Result<Solver> {
         let mut x = self.matrix.ok_or_else(|| {
@@ -948,6 +1014,63 @@ impl SolverBuilder {
             x.normalize_columns();
         }
 
+        // Crash recovery (recover::checkpoint): both ends of the seam
+        // live on the shard-0 coordinator, so they only exist sharded.
+        if self.checkpoint_path.is_some() || self.resume_from.is_some() {
+            anyhow::ensure!(
+                shards >= 2,
+                "SolverBuilder: checkpoint_path/resume_from require shards >= 2 \
+                 — checkpoints are written (and consumed) by the shard-0 \
+                 reconcile coordinator, which a single-pool solve never runs"
+            );
+        }
+        anyhow::ensure!(
+            !(self.resume_from.is_some() && self.warm_start.is_some()),
+            "SolverBuilder: .resume_from(..) and .warm_start(..) are mutually \
+             exclusive — a checkpoint already carries the full iterate"
+        );
+        let resume = match &self.resume_from {
+            None => None,
+            Some(path) => {
+                let ckpt = Checkpoint::load(path).map_err(|e| {
+                    anyhow::anyhow!("SolverBuilder: resume_from {path:?}: {e}")
+                })?;
+                anyhow::ensure!(
+                    ckpt.w.len() == x.n_cols() && ckpt.z.len() == x.n_rows(),
+                    "SolverBuilder: checkpoint {path:?} is for a {}x{} problem, \
+                     not this {}x{} one",
+                    ckpt.z.len(),
+                    ckpt.w.len(),
+                    x.n_rows(),
+                    x.n_cols()
+                );
+                anyhow::ensure!(
+                    ckpt.shards as usize == shards,
+                    "SolverBuilder: checkpoint {path:?} was taken with {} shards, \
+                     this solve has {} — the shard partition (and thus the \
+                     selection streams) would not line up",
+                    ckpt.shards,
+                    shards
+                );
+                anyhow::ensure!(
+                    ckpt.seed == self.seed,
+                    "SolverBuilder: checkpoint {path:?} was taken with seed {}, \
+                     this solve uses {} — bit-exact resume replays the selection \
+                     streams, which the seed determines",
+                    ckpt.seed,
+                    self.seed
+                );
+                anyhow::ensure!(
+                    ckpt.lambda == self.lambda,
+                    "SolverBuilder: checkpoint {path:?} was taken at lambda {}, \
+                     this solve uses {}",
+                    ckpt.lambda,
+                    self.lambda
+                );
+                Some(ResumeState::from_checkpoint(ckpt))
+            }
+        };
+
         // shards > 1: partition the (now-final) matrix and build each
         // shard's zero-copy sub-problem + local policy pair
         let sharded = if shards > 1 {
@@ -978,6 +1101,14 @@ impl SolverBuilder {
                 max_staleness_rounds: self.max_staleness_rounds,
                 barrier_timeout_secs: self.barrier_timeout_secs,
                 transport: self.transport,
+                checkpoint: self.checkpoint_path.clone().map(|path| CheckpointSpec {
+                    path,
+                    every_rounds: self.checkpoint_every_rounds,
+                    seed: self.seed,
+                }),
+                resume,
+                reconnect_max_attempts: self.reconnect_max_attempts as u32,
+                seed: self.seed,
             })
         } else {
             None
@@ -1438,6 +1569,27 @@ mod tests {
         assert!(base()
             .shards(2)
             .transport(tcp("127.0.0.1:0", &["localhost"]))
+            .build()
+            .is_err());
+        // recover: checkpoint/resume are coordinator seams (shards >= 2);
+        // resume replaces — never composes with — a warm start
+        assert!(base().checkpoint_path("/tmp/gencd-ck.bin").build().is_err());
+        assert!(base().resume_from("/tmp/no-such-checkpoint.bin").build().is_err());
+        assert!(base()
+            .shards(2)
+            .checkpoint_path("/tmp/gencd-ck.bin")
+            .build()
+            .is_ok());
+        assert!(base()
+            .shards(2)
+            .warm_start(vec![0.0; 5])
+            .resume_from("/tmp/no-such-checkpoint.bin")
+            .build()
+            .is_err());
+        // a missing checkpoint file is a typed load error, not a panic
+        assert!(base()
+            .shards(2)
+            .resume_from("/tmp/no-such-checkpoint.bin")
             .build()
             .is_err());
     }

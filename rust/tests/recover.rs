@@ -1,0 +1,384 @@
+//! Acceptance tests for crash recovery (`gencd::recover`):
+//!
+//! * checkpoint codec robustness — 100 seeded checkpoints round-trip
+//!   bitwise; every truncation prefix and every seeded byte corruption
+//!   of a valid file decodes to a typed `CheckpointError`, never a
+//!   panic;
+//! * bit-exact resume — on **every** `Algorithm` preset, a solve cut at
+//!   round 5 and resumed from its checkpoint reproduces the
+//!   uninterrupted solve's final iterate bit-for-bit (exact wire
+//!   precision, fixed cadence, one worker per pool);
+//! * builder validation — a checkpoint offered to the wrong solve
+//!   (seed, λ, shard count, shapes) is refused with a typed error;
+//! * reconnect backoff — the schedule is bounded and its worst case
+//!   sits far inside the 30 s degrade ceiling;
+//! * the recovery corpus (`scenarios/net/03..05`) terminates promptly
+//!   with the expected verdicts: transient drops heal transparently,
+//!   exhausted retries degrade to a link-kind `ShardFailed`, and the
+//!   checkpoint/resume drill lands within 1e-12 of its reference.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use gencd::coordinator::convergence::{SolveErrorKind, StopReason};
+use gencd::coordinator::engine::SolveOutput;
+use gencd::event::MetricsAggregator;
+use gencd::net::{Transport, WirePrecision};
+use gencd::recover::harness::{DrillMode, DrillSpec};
+use gencd::recover::{Checkpoint, CheckpointError, ReconnectPolicy};
+use gencd::sim::{run_scenario_loopback, Scenario};
+use gencd::sparse::CscMatrix;
+use gencd::util::Pcg64;
+use gencd::Solver;
+
+/// All eight (Select, Accept) presets, by their registry names.
+const PRESETS: [&str; 8] = [
+    "ccd",
+    "scd",
+    "shotgun",
+    "thread-greedy",
+    "greedy",
+    "coloring",
+    "topk",
+    "block-shotgun",
+];
+
+const BASE: &str = r#"
+    name = "recover-unit-base"
+    seed = 9
+    [workload]
+    kind = "uniform"
+    n = 60
+    k = 24
+    nnz = 6
+    lam = 0.001
+    [shards]
+    count = 2
+    [solve]
+    rounds = 12
+"#;
+
+fn workload() -> (CscMatrix, Vec<f64>) {
+    Scenario::from_toml_str(BASE, "x").unwrap().workload()
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gencd-recover-test-{}-{tag}.ckpt", std::process::id()))
+}
+
+/// One 2-shard loopback solve of the shared workload under the
+/// bit-parity scope: exact precision, tol 0, one worker per pool.
+fn solve_with(
+    alg: &str,
+    iters: usize,
+    checkpoint: Option<&Path>,
+    resume: Option<&Path>,
+) -> SolveOutput {
+    let (x, y) = workload();
+    let mut b = Solver::builder()
+        .matrix(x)
+        .labels(y)
+        .lambda(1e-3)
+        .algorithm(alg.parse().unwrap())
+        .threads(2)
+        .shards(2)
+        .max_iters(iters)
+        .tol(0.0)
+        .seed(7)
+        .transport(Transport::Loopback { precision: WirePrecision::Exact });
+    if let Some(path) = checkpoint {
+        b = b
+            .checkpoint_path(path.to_path_buf())
+            .checkpoint_every_rounds(1);
+    }
+    if let Some(path) = resume {
+        b = b.resume_from(path.to_path_buf());
+    }
+    b.build().unwrap().solve()
+}
+
+/// A structurally valid checkpoint with seeded contents.
+fn seeded_checkpoint(rng: &mut Pcg64) -> Checkpoint {
+    let n_w = 1 + (rng.next_u64() % 40) as usize;
+    let n_z = 1 + (rng.next_u64() % 80) as usize;
+    Checkpoint {
+        round: rng.next_u64() % 10_000,
+        next_gap: 1 + rng.next_u64() % 16,
+        seed: rng.next_u64(),
+        shards: 1 + (rng.next_u64() % 8) as u32,
+        lambda: rng.range_f64(1e-6, 1.0),
+        updates: rng.next_u64() % 1_000_000,
+        r_cur: 1 + rng.next_u64() % 32,
+        div_ewma: rng.range_f64(0.0, 2.0),
+        tol_hits: (rng.next_u64() % 3) as u32,
+        last_objective: if rng.next_f64() < 0.5 {
+            None
+        } else {
+            Some(rng.range_f64(-1e3, 1e3))
+        },
+        w: (0..n_w).map(|_| rng.range_f64(-1e3, 1e3)).collect(),
+        z: (0..n_z).map(|_| rng.range_f64(-1e3, 1e3)).collect(),
+    }
+}
+
+#[test]
+fn checkpoint_fuzz_100_seeds_round_trips_and_survives_corruption() {
+    let mut rng = Pcg64::new(0xC4EC, 0x9E37);
+    for case in 0..100u32 {
+        let ckpt = seeded_checkpoint(&mut rng);
+        let bytes = ckpt.encode();
+        assert_eq!(bytes.len(), ckpt.encoded_len(), "case {case}");
+        let back = Checkpoint::decode(&bytes).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(back, ckpt, "case {case}");
+        // every truncation prefix is a typed error, never a panic
+        for cut in 0..bytes.len() {
+            assert!(
+                Checkpoint::decode(&bytes[..cut]).is_err(),
+                "case {case}: truncation at {cut} must be rejected"
+            );
+        }
+        // a seeded single-bit flip anywhere is a typed error: the body
+        // is CRC-guarded and the trailing CRC guards itself
+        let pos = (rng.next_u64() as usize) % bytes.len();
+        let mut bad = bytes.clone();
+        bad[pos] ^= 1 << (rng.next_u64() % 8);
+        match Checkpoint::decode(&bad) {
+            Err(_) => {}
+            Ok(_) => panic!("case {case}: corrupted byte {pos} must not decode"),
+        }
+    }
+}
+
+#[test]
+fn version_bump_is_refused() {
+    let mut rng = Pcg64::new(5, 6);
+    let mut bytes = seeded_checkpoint(&mut rng).encode();
+    bytes[4] = bytes[4].wrapping_add(1); // version lives after the magic
+    let body = bytes.len() - 4;
+    let crc = gencd::recover::checkpoint::crc32(&bytes[..body]);
+    bytes[body..].copy_from_slice(&crc.to_le_bytes());
+    assert!(matches!(
+        Checkpoint::decode(&bytes),
+        Err(CheckpointError::Version(_))
+    ));
+}
+
+#[test]
+fn resume_is_bit_exact_on_every_preset() {
+    for alg in PRESETS {
+        let ckpt_path = scratch(alg);
+        // the uninterrupted reference
+        let full = solve_with(alg, 12, None, None);
+        assert!(full.failure.is_none(), "{alg}: {:?}", full.failure);
+        // the interrupted run: stops at round 5, checkpointing each round
+        let cut = solve_with(alg, 5, Some(&ckpt_path), None);
+        assert!(cut.failure.is_none(), "{alg}: {:?}", cut.failure);
+        assert!(ckpt_path.exists(), "{alg}: no checkpoint written");
+        // the resumed run continues to the same cap
+        let resumed = solve_with(alg, 12, None, Some(&ckpt_path));
+        std::fs::remove_file(&ckpt_path).ok();
+        assert!(resumed.failure.is_none(), "{alg}: {:?}", resumed.failure);
+        assert_eq!(full.w.len(), resumed.w.len(), "{alg}");
+        for (i, (a, b)) in full.w.iter().zip(resumed.w.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{alg}: w[{i}] differs — resume must be bit-exact ({a:e} vs {b:e})"
+            );
+        }
+        assert_eq!(
+            full.objective.to_bits(),
+            resumed.objective.to_bits(),
+            "{alg}: objective must match bitwise"
+        );
+    }
+}
+
+#[test]
+fn resume_round_reaches_the_aggregator() {
+    let ckpt_path = scratch("agg");
+    let cut_agg = MetricsAggregator::new();
+    {
+        let (x, y) = workload();
+        Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .lambda(1e-3)
+            .algorithm("shotgun".parse().unwrap())
+            .threads(2)
+            .shards(2)
+            .max_iters(5)
+            .tol(0.0)
+            .seed(7)
+            .checkpoint_path(ckpt_path.clone())
+            .checkpoint_every_rounds(1)
+            .subscriber(cut_agg.clone())
+            .build()
+            .unwrap()
+            .solve();
+    }
+    let cut_cols = cut_agg.recover_columns();
+    assert!(
+        cut_cols.checkpoints_written >= 1,
+        "checkpoint writes must be counted, got {cut_cols:?}"
+    );
+    assert_eq!(cut_cols.resume_round, 0, "fresh solve resumes from nothing");
+
+    let resume_agg = MetricsAggregator::new();
+    let (x, y) = workload();
+    let out = Solver::builder()
+        .matrix(x)
+        .labels(y)
+        .lambda(1e-3)
+        .algorithm("shotgun".parse().unwrap())
+        .threads(2)
+        .shards(2)
+        .max_iters(12)
+        .tol(0.0)
+        .seed(7)
+        .resume_from(ckpt_path.clone())
+        .subscriber(resume_agg.clone())
+        .build()
+        .unwrap()
+        .solve();
+    std::fs::remove_file(&ckpt_path).ok();
+    assert!(out.failure.is_none(), "{:?}", out.failure);
+    let cols = resume_agg.recover_columns();
+    assert!(
+        cols.resume_round >= 5,
+        "ResumeLoaded must carry the checkpointed round, got {cols:?}"
+    );
+}
+
+#[test]
+fn builder_refuses_a_mismatched_checkpoint() {
+    let ckpt_path = scratch("mismatch");
+    let cut = solve_with("shotgun", 5, Some(&ckpt_path), None);
+    assert!(cut.failure.is_none(), "{:?}", cut.failure);
+
+    let build_resume = |seed: u64, lambda: f64, shards: usize| {
+        let (x, y) = workload();
+        Solver::builder()
+            .matrix(x)
+            .labels(y)
+            .lambda(lambda)
+            .algorithm("shotgun".parse().unwrap())
+            .threads(shards)
+            .shards(shards)
+            .max_iters(12)
+            .tol(0.0)
+            .seed(seed)
+            .resume_from(ckpt_path.clone())
+            .build()
+    };
+    // the matching configuration is accepted…
+    assert!(build_resume(7, 1e-3, 2).is_ok());
+    // …and every mismatch is a typed refusal
+    for (why, result) in [
+        ("seed", build_resume(8, 1e-3, 2)),
+        ("lambda", build_resume(7, 1e-2, 2)),
+        ("shards", build_resume(7, 1e-3, 3)),
+    ] {
+        let err = match result {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("{why} mismatch must be refused"),
+        };
+        assert!(
+            err.contains("checkpoint"),
+            "{why}: error should name the checkpoint, got {err}"
+        );
+    }
+    std::fs::remove_file(&ckpt_path).ok();
+}
+
+#[test]
+fn backoff_schedule_is_bounded_and_fast_to_exhaust() {
+    let p = ReconnectPolicy::with_attempts(8, 7);
+    for a in 0..8 {
+        let d = p.delay_ms(a);
+        assert!(
+            d <= p.cap_ms + p.base_ms / 2,
+            "attempt {a}: delay {d} exceeds cap + jitter"
+        );
+    }
+    // exhausting every retry must sit far inside the 30 s degrade
+    // ceiling the acceptance bound checks
+    assert!(
+        p.worst_case_ms() < 30_000,
+        "worst case {} ms",
+        p.worst_case_ms()
+    );
+    assert!(!ReconnectPolicy::default().enabled());
+}
+
+#[test]
+fn transient_disconnect_heals_transparently() {
+    let sc = Scenario::load(Path::new("scenarios/net/03-transient-disconnect-heals.toml")).unwrap();
+    let run = run_scenario_loopback(&sc).unwrap();
+    assert!(run.verdict.pass, "{}", run.verdict.detail);
+    let out = run.output.as_ref().unwrap();
+    assert!(out.failure.is_none(), "{:?}", out.failure);
+    assert_eq!(out.stop, StopReason::MaxIters);
+    // the healed run is bit-identical to the fault-free one: the
+    // replayed frame carries absolute values
+    let mut clean = sc.clone();
+    clean.net = Default::default();
+    clean.net_reconnect_attempts = 0;
+    let base = run_scenario_loopback(&clean).unwrap();
+    let (wa, wb) = (
+        &base.output.as_ref().unwrap().w,
+        &run.output.as_ref().unwrap().w,
+    );
+    for (i, (a, b)) in wa.iter().zip(wb.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "w[{i}]: heal must be transparent");
+    }
+}
+
+#[test]
+fn reconnect_exhaustion_degrades_promptly_with_link_kind() {
+    let sc = Scenario::load(Path::new("scenarios/net/04-reconnect-exhausted.toml")).unwrap();
+    let t0 = Instant::now();
+    let run = run_scenario_loopback(&sc).unwrap();
+    assert!(
+        t0.elapsed().as_secs() < 30,
+        "exhausted retries must terminate promptly, took {:?}",
+        t0.elapsed()
+    );
+    let out = run.output.as_ref().unwrap();
+    assert_eq!(out.stop, StopReason::ShardFailed);
+    let failure = out.failure.as_ref().expect("structured error must surface");
+    assert_eq!(failure.kind, SolveErrorKind::Link, "{failure}");
+    assert!(run.verdict.pass, "{}", run.verdict.detail);
+}
+
+#[test]
+fn checkpoint_resume_scenario_matches_reference() {
+    let sc = Scenario::load(Path::new("scenarios/net/05-checkpoint-resume.toml")).unwrap();
+    assert_eq!(sc.resume_at_round, 10);
+    let run = run_scenario_loopback(&sc).unwrap();
+    assert!(run.verdict.pass, "{}", run.verdict.detail);
+    assert!(
+        run.verdict.detail.contains("resume_gap"),
+        "drill detail should report the gap: {}",
+        run.verdict.detail
+    );
+}
+
+#[test]
+fn committed_harness_plans_parse() {
+    let expected = [
+        ("00-kill9-resume.toml", DrillMode::Kill9Resume),
+        ("01-transient-drop.toml", DrillMode::TransientDrop),
+        ("02-partition-heal.toml", DrillMode::PartitionHeal),
+    ];
+    for (file, mode) in expected {
+        let path = Path::new("scenarios/harness").join(file);
+        let src = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let spec = DrillSpec::from_toml_str(&src, file)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(spec.mode, mode, "{file}");
+        assert!(spec.shards >= 2, "{file}");
+        assert!(spec.tolerance > 0.0, "{file}");
+    }
+}
